@@ -1,0 +1,96 @@
+//! END-TO-END DRIVER — proves all layers compose on a real small workload.
+//!
+//! The pipeline exercised (the paper's headline metrics on a live system):
+//!
+//!   L2/L1 (build time): JAX + Pallas worker task, AOT-lowered to
+//!       `artifacts/worker_gr_m3_128x256x128.hlo.txt`  (`make artifacts`)
+//!   runtime: rust PJRT client loads + compiles the artifact
+//!   L3: 8-worker coordinator, EP codes over GR(2^64, 3), u=v=2, w=1, R=4,
+//!       with straggler injection — workers execute their share products
+//!       **through XLA**, the master encodes/decodes natively.
+//!
+//! Reports per-phase latency, throughput, and the paper's Fig-2/4 metrics,
+//! for both the XLA backend and the native backend (same job), and verifies
+//! bit-exact agreement with a local product. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_driver
+//! ```
+
+use gr_cdmm::codes::ep::PlainEp;
+use gr_cdmm::codes::scheme::CodedScheme;
+use gr_cdmm::coordinator::runner::{run_single, NativeSingleCompute};
+use gr_cdmm::coordinator::{Coordinator, StragglerModel};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::traits::Ring;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::runtime::gr_backend::XlaShareCompute;
+use gr_cdmm::runtime::XlaRuntime;
+use gr_cdmm::util::rng::Rng64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let runtime = XlaRuntime::open(&artifacts)?;
+    println!("PJRT platform: {}", runtime.platform());
+    println!("artifacts:");
+    for s in runtime.specs() {
+        println!("  {} (m={}, {}x{}x{})", s.name, s.m, s.t, s.r, s.s);
+    }
+
+    // Job: 256×256 over Z_2^64 → shares 128×256 · 256×128 (matches the m=3
+    // artifact). 8 workers, one slow straggler to show R-of-N collection.
+    let base = Zq::z2e(64);
+    let size = 256usize;
+    let scheme = Arc::new(PlainEp::with_m(base.clone(), 3, 8, 2, 1, 2)?);
+    let ext = scheme.share_ring().clone();
+    let straggler = StragglerModel::fixed_slow([3], Duration::from_millis(100));
+
+    let mut rng = Rng64::seeded(42);
+    let a = Matrix::random(&base, size, size, &mut rng);
+    let b = Matrix::random(&base, size, size, &mut rng);
+    let expected = Matrix::matmul(&base, &a, &b);
+
+    // --- XLA worker backend (AOT Pallas kernel through PJRT) --------------
+    println!("\n== coded job, workers on the AOT XLA backend ==");
+    let xla_backend = Arc::new(XlaShareCompute::for_shapes(&artifacts, ext, 128, 256, 128)?);
+    let mut coord = Coordinator::new(8, xla_backend, straggler.clone(), 5);
+    // Warm-up job: each worker thread compiles its artifact once (PJRT
+    // executables are per-thread; deployment = long-lived worker processes).
+    let (warm, warm_m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+    assert_eq!(warm, expected);
+    println!("(warm-up job incl. per-worker PJRT compile: {:?})", warm_m.total);
+    let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+    coord.shutdown();
+    assert_eq!(c, expected, "XLA path must be bit-exact");
+    println!("verified bit-exact: C = A·B");
+    println!("encode {:?} | wait-for-R {:?} | decode {:?}", m.encode, m.wait_for_r, m.decode);
+    println!(
+        "upload {:.2} MB | download {:.2} MB | mean worker {:?} (straggler 3 bypassed: {})",
+        m.upload_bytes as f64 / 1e6,
+        m.download_bytes as f64 / 1e6,
+        m.mean_worker_compute(),
+        !m.used_workers.contains(&3)
+    );
+    let xla_total = m.total;
+
+    // --- Native backend on the same job ------------------------------------
+    println!("\n== same job, native rust worker kernels ==");
+    let native_backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let mut coord = Coordinator::new(8, native_backend, straggler, 5);
+    let (c2, m2) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+    coord.shutdown();
+    assert_eq!(c2, expected);
+    println!("encode {:?} | wait-for-R {:?} | decode {:?}", m2.encode, m2.wait_for_r, m2.decode);
+    println!("mean worker {:?}", m2.mean_worker_compute());
+
+    // --- summary -----------------------------------------------------------
+    let gflop = 2.0 * (size as f64).powi(3) / 1e9;
+    println!("\n== summary ==");
+    println!("problem: {0}×{0} · {0}×{0} over Z_2^64 ({gflop:.3} G-mulacc)", size);
+    println!("xla end-to-end:    {xla_total:?}");
+    println!("native end-to-end: {:?}", m2.total);
+    println!("all layers compose: JAX/Pallas → HLO text → PJRT → coded L3 ✓");
+    Ok(())
+}

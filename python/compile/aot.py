@@ -1,0 +1,109 @@
+"""AOT compile path: lower the L2 worker tasks to HLO **text** artifacts.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` —
+is the interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Run once via ``make artifacts``; the rust binary is self-contained after
+that — Python never executes on the request path.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+
+Artifacts (shapes chosen to match the default experiment/example configs):
+    matmul_u64_<t>x<r>x<s>.hlo.txt        plain Z_{2^64} block product
+    worker_gr_m<m>_<t>x<r>x<s>.hlo.txt    GR(2^64, m) share product
+    manifest.json                          shapes + moduli for the rust loader
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import gr_worker_task, lower_task, spec, u64_matmul_task  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+# (m, t, r, s) worker-share configurations:
+#   m=1       → plain u64 matmul (also the L1 kernel smoke artifact)
+#   m=3 cfg   → N=8 workers, u=v=2, w=1, matrices 256² → shares (128×256)(256×128)
+#   m=4 cfg   → N=16 workers, u=v=w=2, matrices 256² → shares (128×128)(128×128)
+DEFAULT_CONFIGS = [
+    (1, 128, 128, 128),
+    (3, 128, 256, 128),
+    (4, 128, 128, 128),
+]
+QUICK_CONFIGS = [
+    (1, 16, 16, 16),
+    (3, 16, 32, 16),
+    (4, 16, 16, 16),
+]
+
+
+def build_all(out_dir: str, configs) -> dict:
+    manifest = {"artifacts": []}
+    for m, t, r, s in configs:
+        if m == 1:
+            task = u64_matmul_task(use_pallas=True)
+            name = f"matmul_u64_{t}x{r}x{s}"
+            lowered = lower_task(task, (spec((t, r)), spec((r, s))))
+            modulus = [0, 1]
+        else:
+            task, modulus = gr_worker_task(m, use_pallas=True)
+            name = f"worker_gr_m{m}_{t}x{r}x{s}"
+            lowered = lower_task(task, (spec((m, t, r)), spec((m, r, s))))
+            modulus = list(modulus)
+        emit(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "m": m,
+                "t": t,
+                "r": r,
+                "s": s,
+                "modulus": modulus,
+                "dtype": "uint64",
+            }
+        )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny shapes (CI smoke)")
+    ap.add_argument("--out", default=None, help="legacy single-file mode (ignored)")
+    args = ap.parse_args()
+    build_all(args.out_dir, QUICK_CONFIGS if args.quick else DEFAULT_CONFIGS)
+
+
+if __name__ == "__main__":
+    main()

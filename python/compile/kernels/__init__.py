@@ -1,0 +1,15 @@
+"""L1 Pallas kernels + L2 GR plane-decomposition for the worker task."""
+
+from .matmul_zq import matmul_zq, vmem_bytes
+from .gr_matmul import find_irreducible_gf2, gr_matmul, is_irreducible_gf2, make_worker_task
+from . import ref
+
+__all__ = [
+    "matmul_zq",
+    "vmem_bytes",
+    "gr_matmul",
+    "make_worker_task",
+    "find_irreducible_gf2",
+    "is_irreducible_gf2",
+    "ref",
+]

@@ -1,0 +1,188 @@
+"""Layer-2 compute graph: matrix multiplication over the Galois ring
+GR(2^e, m) = Z_{2^e}[y]/(h(y)) as coefficient-plane integer matmuls.
+
+An extension-ring matrix is stored as `m` coefficient planes of shape
+`(rows, cols)` (plane k holds the y^k coefficients). The product is
+
+    C_poly[k] = Σ_{i+j=k} A_i @ B_j            (k < 2m−1, plane matmuls)
+    reduce by h:  for k from 2m−2 down to m:
+        C_poly[k−m+i] −= h_i · C_poly[k]       (h monic)
+
+All plane products go through the Pallas L1 kernel, so the whole worker task
+lowers into a single HLO module (`aot.py`), executed from rust via PJRT.
+
+The modulus h must match the rust side exactly: `find_irreducible_gf2` below
+replicates `ring::irreducible::find_irreducible` (lexicographically-first
+monic irreducible over GF(2), little-endian digit enumeration) and is
+cross-checked against the rust constants in tests on both sides.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .matmul_zq import matmul_zq
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic modulus search (mirror of rust ring/irreducible.rs over GF(2))
+# ---------------------------------------------------------------------------
+
+
+def _gf2_poly_mulmod_x(a: int, m_poly: int, deg: int) -> int:
+    """(a * x) mod m_poly over GF(2), bitmask representation."""
+    a <<= 1
+    if a >> deg & 1:
+        a ^= m_poly
+    return a & ((1 << deg) - 1) | (a & ~((1 << deg) - 1) and 0)
+
+
+def _gf2_polymul(a: int, b: int) -> int:
+    out = 0
+    while b:
+        if b & 1:
+            out ^= a
+        a <<= 1
+        b >>= 1
+    return out
+
+
+def _gf2_polymod(a: int, m_poly: int) -> int:
+    dm = m_poly.bit_length() - 1
+    while a.bit_length() - 1 >= dm and a:
+        a ^= m_poly << (a.bit_length() - 1 - dm)
+    return a
+
+
+def _gf2_powmod(a: int, n: int, m_poly: int) -> int:
+    acc = 1
+    a = _gf2_polymod(a, m_poly)
+    while n:
+        if n & 1:
+            acc = _gf2_polymod(_gf2_polymul(acc, a), m_poly)
+        n >>= 1
+        if n:
+            a = _gf2_polymod(_gf2_polymul(a, a), m_poly)
+    return acc
+
+
+def _gf2_gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, _gf2_polymod(a, b)
+    return a
+
+
+def _prime_factors(n: int) -> list[int]:
+    out, d = [], 2
+    while d * d <= n:
+        if n % d == 0:
+            out.append(d)
+            while n % d == 0:
+                n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+def is_irreducible_gf2(poly: int) -> bool:
+    """Rabin's test for a GF(2) polynomial in bitmask form (bit i = coeff x^i)."""
+    m = poly.bit_length() - 1
+    if m <= 0:
+        return False
+    if m == 1:
+        return True
+    x = 0b10
+    # x^(2^m) ≡ x (mod poly)
+    t = x
+    for _ in range(m):
+        t = _gf2_powmod(t, 2, poly)
+    if t != _gf2_polymod(x, poly):
+        return False
+    for r in _prime_factors(m):
+        k = m // r
+        t = x
+        for _ in range(k):
+            t = _gf2_powmod(t, 2, poly)
+        if _gf2_gcd(t ^ x, poly) != 1:
+            return False
+    return True
+
+
+def find_irreducible_gf2(m: int) -> list[int]:
+    """Little-endian coefficient list (length m+1) of the lexicographically-
+    first monic irreducible of degree m over GF(2) — identical enumeration to
+    rust `find_irreducible` (low coefficients as base-2 digits of a counter;
+    candidates with zero constant term are skipped there via the quick
+    screen, and they are never irreducible for m ≥ 2 anyway)."""
+    idx = 0
+    while True:
+        coeffs = [(idx >> i) & 1 for i in range(m)] + [1]
+        if coeffs[0] != 0:
+            mask = sum(c << i for i, c in enumerate(coeffs))
+            if is_irreducible_gf2(mask):
+                return coeffs
+        idx += 1
+        assert idx < (1 << m) + 1, "no irreducible found (impossible)"
+
+
+# ---------------------------------------------------------------------------
+# GR matmul (plane decomposition + reduction)
+# ---------------------------------------------------------------------------
+
+
+def gr_matmul(
+    a_planes: jax.Array,
+    b_planes: jax.Array,
+    modulus: tuple[int, ...],
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multiply two GR(2^e, m) matrices given as coefficient planes.
+
+    a_planes: (m, t, r) uint64/uint32; b_planes: (m, r, s); returns (m, t, s).
+    `modulus` is the little-endian coefficient list of the monic degree-m
+    defining polynomial (length m+1; only the low m entries are used).
+    """
+    m = a_planes.shape[0]
+    assert b_planes.shape[0] == m
+    assert len(modulus) == m + 1 and modulus[m] == 1, "modulus must be monic, len m+1"
+    dtype = a_planes.dtype
+
+    mm = (
+        partial(matmul_zq, interpret=interpret)
+        if use_pallas
+        else lambda x, y: jnp.matmul(x, y)
+    )
+
+    # plane products: C_poly[k] = Σ_{i+j=k} A_i @ B_j  (k < 2m−1)
+    t, s = a_planes.shape[1], b_planes.shape[2]
+    planes = [jnp.zeros((t, s), dtype) for _ in range(2 * m - 1)]
+    for i in range(m):
+        for j in range(m):
+            planes[i + j] = planes[i + j] + mm(a_planes[i], b_planes[j])
+
+    # reduce modulo the monic modulus: y^k ≡ −Σ_i h_i y^{k−m+i}
+    for k in range(2 * m - 2, m - 1, -1):
+        c = planes[k]
+        for i in range(m):
+            if modulus[i]:
+                # over Z_{2^e}: subtraction wraps; modulus coeffs are 0/1
+                planes[k - m + i] = planes[k - m + i] - jnp.asarray(
+                    modulus[i], dtype
+                ) * c
+    return jnp.stack(planes[:m])
+
+
+def make_worker_task(m: int, modulus: tuple[int, ...], *, use_pallas: bool = True):
+    """The worker-node computation as a jittable function of the two share
+    plane-stacks — this is what `aot.py` lowers to the HLO artifact."""
+
+    def task(a_planes, b_planes):
+        return (gr_matmul(a_planes, b_planes, modulus, use_pallas=use_pallas),)
+
+    return task

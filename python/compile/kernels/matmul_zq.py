@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: tiled matrix multiplication over Z_{2^64} / Z_{2^32}.
+
+The worker node's compute hot-spot (Section V: worker computation time) is an
+integer matrix product with wrap-around modular semantics — `Z_{2^e}` is
+"directly compatible with computation in real-life programming and computer
+architectures" (§I), i.e. plain unsigned machine arithmetic.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the kernel tiles the product
+over a `(M/bm, N/bn, K/bk)` grid; the output tile is revisited along the
+contraction axis and accumulates in place (it stays resident in VMEM across
+the `k` steps — the Pallas analogue of a scratch accumulator). Block defaults
+128×128×128 give a VMEM footprint of 3·128²·8 B = 384 KiB, comfortably inside
+a TensorCore's ~16 MiB VMEM. On this image Pallas MUST run `interpret=True`
+(the CPU PJRT plugin cannot execute Mosaic custom-calls), so the kernel's
+*structure* is the TPU artifact; numerics are bit-exact either way.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps):
+    """One (bm × bn) output tile; grid axis 2 walks the contraction.
+
+    The output block index map ignores the k axis, so `o_ref` addresses the
+    same VMEM tile at every k step — zero it first, then accumulate partial
+    products (wrap-around unsigned arithmetic = Z_{2^e} semantics).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del k_steps  # structure kept for symmetry with scratch-based variants
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is ≤ pref (tiles must divide evenly)."""
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul_zq(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """`x @ y` over Z_{2^e} (dtype uint32/uint64), Pallas-tiled.
+
+    Shapes `(M, K) @ (K, N) -> (M, N)`. Block sizes are clamped to divisors
+    of the dims so any shape works (the hypothesis suite sweeps odd shapes).
+    """
+    assert x.dtype == y.dtype, (x.dtype, y.dtype)
+    assert x.dtype in (jnp.uint32, jnp.uint64), x.dtype
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    k_steps = k // bk
+
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_bytes(bm: int = 128, bn: int = 128, bk: int = 128, itemsize: int = 8) -> int:
+    """Estimated VMEM footprint of one grid step (x, y tiles + output tile).
+
+    Used by the perf notes in DESIGN.md / EXPERIMENTS.md §Perf:
+    128³ blocks at u64 → 384 KiB « 16 MiB VMEM.
+    """
+    return (bm * bk + bk * bn + bm * bn) * itemsize

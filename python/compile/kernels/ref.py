@@ -1,0 +1,37 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the GR matmul.
+
+The pytest suite asserts bit-exact equality (integer arithmetic — no
+tolerance) between the L1/L2 implementations and these references; the rust
+integration tests close the loop by checking the AOT artifacts against the
+rust-native ring kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def matmul_zq_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Wrap-around unsigned matmul — XLA's native integer dot IS the Z_{2^e}
+    semantics, so the reference is a plain jnp.matmul."""
+    assert x.dtype in (jnp.uint32, jnp.uint64)
+    return jnp.matmul(x, y)
+
+
+def gr_matmul_ref(a_planes, b_planes, modulus):
+    """Schoolbook polynomial matmul + reduction, all in jnp (no Pallas)."""
+    m = a_planes.shape[0]
+    dtype = a_planes.dtype
+    t, s = a_planes.shape[1], b_planes.shape[2]
+    planes = [jnp.zeros((t, s), dtype) for _ in range(2 * m - 1)]
+    for i in range(m):
+        for j in range(m):
+            planes[i + j] = planes[i + j] + jnp.matmul(a_planes[i], b_planes[j])
+    for k in range(2 * m - 2, m - 1, -1):
+        for i in range(m):
+            if modulus[i]:
+                planes[k - m + i] = planes[k - m + i] - jnp.asarray(
+                    modulus[i], dtype
+                ) * planes[k]
+    return jnp.stack(planes[:m])

@@ -1,0 +1,48 @@
+"""Layer-2 model: the worker-node compute graphs that get AOT-lowered.
+
+Two task families, matching what the rust coordinator dispatches:
+
+* ``u64 matmul`` — the `Z_{2^64}` product of two share blocks (the `d=1`,
+  `m=1` degenerate case, and the building block of everything else);
+* ``GR(2^64, m) matmul`` — the extension-ring share product as `m²`
+  coefficient-plane Pallas matmuls + modulus reduction (`kernels.gr_matmul`).
+
+Each task is a pure function of its two inputs with every shape static, so
+`aot.py` can lower it once per configuration and the rust runtime can load
+the resulting HLO text and execute it via PJRT with zero Python at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gr_matmul import find_irreducible_gf2, make_worker_task
+from .kernels.matmul_zq import matmul_zq
+
+jax.config.update("jax_enable_x64", True)
+
+
+def u64_matmul_task(use_pallas: bool = True):
+    """(t, r) @ (r, s) over Z_{2^64}."""
+
+    def task(x, y):
+        if use_pallas:
+            return (matmul_zq(x, y),)
+        return (jnp.matmul(x, y),)
+
+    return task
+
+
+def gr_worker_task(m: int, use_pallas: bool = True):
+    """GR(2^64, m) share product, modulus = the canonical (rust-matching)
+    lexicographically-first irreducible of degree m over GF(2)."""
+    modulus = tuple(find_irreducible_gf2(m))
+    return make_worker_task(m, modulus, use_pallas=use_pallas), modulus
+
+
+def lower_task(task, arg_specs):
+    """jit + lower with static shapes; returns the Lowered object."""
+    return jax.jit(task).lower(*arg_specs)
+
+
+def spec(shape, dtype=jnp.uint64):
+    return jax.ShapeDtypeStruct(shape, dtype)

@@ -1,0 +1,117 @@
+"""L2 correctness: GR(2^e, m) plane matmul vs the jnp oracle, and the
+cross-language modulus contract with the rust ring layer."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gr_matmul import (
+    find_irreducible_gf2,
+    gr_matmul,
+    is_irreducible_gf2,
+)
+from compile.kernels.ref import gr_matmul_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand_planes(rng, m, rows, cols):
+    return jnp.asarray(
+        rng.integers(0, np.iinfo(np.uint64).max, size=(m, rows, cols), dtype=np.uint64)
+    )
+
+
+# --- modulus contract -------------------------------------------------------
+
+
+def test_irreducibility_oracle():
+    # x^2+x+1 = 0b111, x^2+1 = 0b101 = (x+1)^2, x^3+x+1 = 0b1011
+    assert is_irreducible_gf2(0b111)
+    assert not is_irreducible_gf2(0b101)
+    assert is_irreducible_gf2(0b1011)
+    assert not is_irreducible_gf2(0b1111)  # x^3+x^2+x+1 = (x+1)(x^2+1)
+
+
+def test_canonical_moduli_match_rust():
+    """These constants are asserted on the rust side too
+    (rust/tests/integration_runtime.rs) — the AOT artifact and the rust
+    Extension MUST agree on h(y) or plane reduction diverges."""
+    assert find_irreducible_gf2(1) == [1, 1]  # y + 1
+    assert find_irreducible_gf2(2) == [1, 1, 1]  # y² + y + 1
+    assert find_irreducible_gf2(3) == [1, 1, 0, 1]  # y³ + y + 1
+    assert find_irreducible_gf2(4) == [1, 1, 0, 0, 1]  # y⁴ + y + 1
+    assert find_irreducible_gf2(5) == [1, 0, 1, 0, 0, 1]  # y⁵ + y² + 1
+
+
+# --- GR matmul vs oracle ----------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [2, 3, 4])
+def test_gr_matmul_matches_ref(m):
+    modulus = tuple(find_irreducible_gf2(m))
+    rng = np.random.default_rng(m)
+    a = rand_planes(rng, m, 8, 12)
+    b = rand_planes(rng, m, 12, 8)
+    got = gr_matmul(a, b, modulus)
+    want = gr_matmul_ref(a, b, modulus)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gr_matmul_identity():
+    m = 3
+    modulus = tuple(find_irreducible_gf2(m))
+    rng = np.random.default_rng(9)
+    a = rand_planes(rng, m, 6, 6)
+    # identity in GR: plane 0 = I, higher planes = 0
+    ident = jnp.stack(
+        [jnp.eye(6, dtype=jnp.uint64)] + [jnp.zeros((6, 6), jnp.uint64)] * (m - 1)
+    )
+    got = gr_matmul(a, ident, modulus)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a))
+
+
+def test_gr_matmul_scalar_case_reduces_to_u64():
+    # m=1 with modulus y+1: single plane, plain u64 matmul.
+    rng = np.random.default_rng(11)
+    a = rand_planes(rng, 1, 5, 7)
+    b = rand_planes(rng, 1, 7, 5)
+    got = gr_matmul(a, b, (1, 1))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(a[0] @ b[0]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 4),
+    t=st.integers(1, 8),
+    r=st.integers(1, 8),
+    s=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_gr_matmul_hypothesis(m, t, r, s, seed):
+    modulus = tuple(find_irreducible_gf2(m))
+    rng = np.random.default_rng(seed)
+    a = rand_planes(rng, m, t, r)
+    b = rand_planes(rng, m, r, s)
+    np.testing.assert_array_equal(
+        np.asarray(gr_matmul(a, b, modulus)),
+        np.asarray(gr_matmul_ref(a, b, modulus)),
+    )
+
+
+def test_gr_matmul_associativity():
+    m = 3
+    modulus = tuple(find_irreducible_gf2(m))
+    rng = np.random.default_rng(13)
+    a = rand_planes(rng, m, 4, 4)
+    b = rand_planes(rng, m, 4, 4)
+    c = rand_planes(rng, m, 4, 4)
+    left = gr_matmul(gr_matmul(a, b, modulus), c, modulus)
+    right = gr_matmul(a, gr_matmul(b, c, modulus), modulus)
+    np.testing.assert_array_equal(np.asarray(left), np.asarray(right))

@@ -1,0 +1,96 @@
+"""L1 correctness: the Pallas matmul kernel vs the pure-jnp oracle.
+
+Integer arithmetic ⇒ assertions are bit-exact (`array_equal`), not allclose.
+Hypothesis sweeps shapes (including non-multiples of the block size) and both
+supported dtypes.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul_zq import matmul_zq, vmem_bytes
+from compile.kernels.ref import matmul_zq_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand_u(rng, shape, dtype):
+    hi = np.iinfo(np.uint64).max if dtype == jnp.uint64 else np.iinfo(np.uint32).max
+    return jnp.asarray(
+        rng.integers(0, hi, size=shape, dtype=np.uint64).astype(
+            np.uint64 if dtype == jnp.uint64 else np.uint32
+        )
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.uint64, jnp.uint32])
+@pytest.mark.parametrize("shape", [(8, 8, 8), (16, 32, 8), (128, 128, 128), (64, 256, 32)])
+def test_matmul_matches_ref(dtype, shape):
+    t, r, s = shape
+    rng = np.random.default_rng(42)
+    x = rand_u(rng, (t, r), dtype)
+    y = rand_u(rng, (r, s), dtype)
+    got = matmul_zq(x, y)
+    want = matmul_zq_ref(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_wraparound_semantics():
+    # (2^63)·2 ≡ 0 mod 2^64 — overflow must wrap, not saturate.
+    x = jnp.array([[1 << 63]], dtype=jnp.uint64)
+    y = jnp.array([[2]], dtype=jnp.uint64)
+    assert int(matmul_zq(x, y)[0, 0]) == 0
+    xm = jnp.array([[np.uint64(0xFFFFFFFFFFFFFFFF)]], dtype=jnp.uint64)
+    assert int(matmul_zq(xm, y)[0, 0]) == 0xFFFFFFFFFFFFFFFE
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 24),
+    r=st.integers(1, 24),
+    s=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+    dtype=st.sampled_from([jnp.uint64, jnp.uint32]),
+)
+def test_matmul_hypothesis_shapes(t, r, s, seed, dtype):
+    rng = np.random.default_rng(seed)
+    x = rand_u(rng, (t, r), dtype)
+    y = rand_u(rng, (r, s), dtype)
+    np.testing.assert_array_equal(
+        np.asarray(matmul_zq(x, y)), np.asarray(matmul_zq_ref(x, y))
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 64, 128]),
+    bn=st.sampled_from([8, 16, 64, 128]),
+    bk=st.sampled_from([8, 16, 64, 128]),
+)
+def test_block_size_invariance(bm, bn, bk):
+    # The tiling schedule must not change the numbers.
+    rng = np.random.default_rng(7)
+    x = rand_u(rng, (32, 48), jnp.uint64)
+    y = rand_u(rng, (48, 16), jnp.uint64)
+    got = matmul_zq(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(matmul_zq_ref(x, y)))
+
+
+def test_vmem_budget_default_blocks():
+    # DESIGN.md §Perf: default tiling must stay far below 16 MiB VMEM.
+    assert vmem_bytes(128, 128, 128, 8) == 3 * 128 * 128 * 8
+    assert vmem_bytes() < 16 * 1024 * 1024
+
+
+def test_rejects_bad_dtypes():
+    x = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul_zq(x, x)

@@ -1,0 +1,41 @@
+//! Ablation bench (DESIGN.md §4.4): naive vs subproduct-tree multipoint
+//! evaluation/interpolation over GR(2^64, 4) — Lemma II.1's asymptotics vs
+//! the small-N constants the experiments actually live in. Prints the
+//! crossover.
+
+use gr_cdmm::ring::eval::{
+    eval_many_fast, eval_many_naive, interpolate_fast, interpolate_naive,
+};
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::traits::Ring;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::bench::{black_box, Bencher};
+use gr_cdmm::util::rng::Rng64;
+
+fn main() {
+    let ring = Extension::new(Zq::z2e(64), 4);
+    let b = Bencher::from_env();
+    let mut rng = Rng64::seeded(47);
+    println!("# eval/interp crossover over {}\n", ring.name());
+    for n in [4usize, 8, 16, 32, 64, 128, 256] {
+        // need n exceptional points: 16^k >= n ⇒ widen the tower if needed
+        let m_needed = (n as f64).log(16.0).ceil().max(1.0) as usize;
+        let ring = Extension::new(Zq::z2e(64), 4.max(m_needed * 4));
+        let pts = ring.exceptional_points(n).unwrap();
+        let f: Vec<_> = (0..n).map(|_| ring.random(&mut rng)).collect();
+        let ys = eval_many_naive(&ring, &f, &pts);
+        b.bench(&format!("eval_naive   n={n}"), || {
+            black_box(eval_many_naive(&ring, &f, &pts));
+        });
+        b.bench(&format!("eval_fast    n={n}"), || {
+            black_box(eval_many_fast(&ring, &f, &pts));
+        });
+        b.bench(&format!("interp_naive n={n}"), || {
+            black_box(interpolate_naive(&ring, &pts, &ys));
+        });
+        b.bench(&format!("interp_fast  n={n}"), || {
+            black_box(interpolate_fast(&ring, &pts, &ys));
+        });
+        println!();
+    }
+}

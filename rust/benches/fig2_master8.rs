@@ -1,0 +1,21 @@
+//! Bench: Figure 2 — master node computation time + communication volume,
+//! 8 workers over GR(2^64, 3), u=v=2, w=1, n=2.
+//! `GR_CDMM_BENCH_SIZES=2000,4000,...` and `GR_CDMM_BENCH_REPS` override.
+
+use gr_cdmm::experiments::figs::{render_master_view, sweep, FigConfig};
+
+fn sizes_from_env(default: &[usize]) -> Vec<usize> {
+    std::env::var("GR_CDMM_BENCH_SIZES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let sizes = sizes_from_env(&[128, 256]);
+    let reps = std::env::var("GR_CDMM_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let cfg = FigConfig::for_workers(8).unwrap();
+    let recs = sweep(&cfg, &sizes, reps, 42).unwrap();
+    println!("# Figure 2 — master view, 8 workers, GR(2^64,3)\n");
+    println!("{}", render_master_view(&recs));
+}

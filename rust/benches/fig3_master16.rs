@@ -1,0 +1,16 @@
+//! Bench: Figure 3 — master node computation time + communication volume,
+//! 16 workers over GR(2^64, 4), u=v=w=2, n=2.
+
+use gr_cdmm::experiments::figs::{render_master_view, sweep, FigConfig};
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("GR_CDMM_BENCH_SIZES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![128, 256]);
+    let reps = std::env::var("GR_CDMM_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let cfg = FigConfig::for_workers(16).unwrap();
+    let recs = sweep(&cfg, &sizes, reps, 43).unwrap();
+    println!("# Figure 3 — master view, 16 workers, GR(2^64,4)\n");
+    println!("{}", render_master_view(&recs));
+}

@@ -1,0 +1,16 @@
+//! Bench: Figure 4 — per-worker computation time + communication volume,
+//! 8 workers over GR(2^64, 3).
+
+use gr_cdmm::experiments::figs::{render_worker_view, sweep, FigConfig};
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("GR_CDMM_BENCH_SIZES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![128, 256]);
+    let reps = std::env::var("GR_CDMM_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let cfg = FigConfig::for_workers(8).unwrap();
+    let recs = sweep(&cfg, &sizes, reps, 44).unwrap();
+    println!("# Figure 4 — worker view, 8 workers, GR(2^64,3)\n");
+    println!("{}", render_worker_view(&recs));
+}

@@ -1,0 +1,69 @@
+//! Perf bench: the worker-node hot path — u64 matmul and GR(2^64, m) matmul,
+//! native rust kernels vs (optionally) the AOT XLA artifact. This is the
+//! §Perf L3 measurement target in EXPERIMENTS.md.
+
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::runtime::gr_backend::ext_matrix_to_planes;
+use gr_cdmm::runtime::XlaRuntime;
+use gr_cdmm::util::bench::{black_box, throughput, Bencher};
+use gr_cdmm::util::rng::Rng64;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rng = Rng64::seeded(48);
+    let zq = Zq::z2e(64);
+
+    println!("# worker hot-path kernels\n## native u64 matmul");
+    for n in [64usize, 128, 256, 512] {
+        let a = Matrix::random(&zq, n, n, &mut rng);
+        let bm = Matrix::random(&zq, n, n, &mut rng);
+        let s = b.bench(&format!("u64 matmul {n}³"), || {
+            black_box(Matrix::matmul(&zq, &a, &bm));
+        });
+        let ops = 2.0 * (n as f64).powi(3);
+        println!("    → {:.2} Gop/s", throughput(ops, s.median) / 1e9);
+    }
+
+    println!("\n## native GR(2^64, m) matmul (worker share product)");
+    for m in [3usize, 4] {
+        let ext = Extension::new(zq.clone(), m);
+        let n = 128;
+        let a = Matrix::random(&ext, n, n, &mut rng);
+        let bm = Matrix::random(&ext, n, n, &mut rng);
+        let s = b.bench(&format!("GR m={m} matmul {n}³"), || {
+            black_box(Matrix::matmul(&ext, &a, &bm));
+        });
+        // each ext mul ≈ m² u64 mul-adds + reduction
+        let ops = 2.0 * (n as f64).powi(3) * (m * m) as f64;
+        println!("    → {:.2} effective u64 Gop/s", throughput(ops, s.median) / 1e9);
+    }
+
+    println!("\n## AOT XLA artifact (same task through PJRT)");
+    match XlaRuntime::open_default() {
+        Err(e) => println!("  skipped: {e}"),
+        Ok(rt) => {
+            if let Some(spec) = rt.find_spec(3, 128, 256, 128) {
+                let artifact = rt.load(&spec.name.clone()).unwrap();
+                let ext = Extension::new(zq.clone(), 3);
+                let a = Matrix::random(&ext, 128, 256, &mut rng);
+                let bm = Matrix::random(&ext, 256, 128, &mut rng);
+                let ap = ext_matrix_to_planes(3, &a);
+                let bp = ext_matrix_to_planes(3, &bm);
+                b.bench("xla GR m=3 128x256x128", || {
+                    black_box(
+                        artifact
+                            .run_u64(&[
+                                (ap.clone(), vec![3, 128, 256]),
+                                (bp.clone(), vec![3, 256, 128]),
+                            ])
+                            .unwrap(),
+                    );
+                });
+            } else {
+                println!("  m=3 artifact missing (make artifacts)");
+            }
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! **Batch-EP_RMFE** — the paper's coded distributed *batch* matrix
+//! multiplication (Section III, Theorem III.2).
+//!
+//! Given batches `{A_k}` (`t×r`) and `{B_k}` (`r×s`) over `GR(p^e, d)`:
+//!
+//! 1. pack elementwise with the RMFE map `φ` into `𝒜, ℬ` over
+//!    `GR_m = GR(p^e, d·m)` (`m ≥ max(2n−1, ⌈log_{p^d} N⌉)`);
+//! 2. run EP codes over `GR_m` (partition `u, w, v`; `R = uvw + w − 1`,
+//!    *independent of n* — the headline improvement over GCSA, whose
+//!    threshold scales with the batch);
+//! 3. unpack `𝒞 = 𝒜ℬ` elementwise with `ψ` — by `GR`-linearity of `ψ` and
+//!    the RMFE product property, slot `k` of `ψ(𝒞[i,ℓ])` is
+//!    `Σ_j A_k[i,j]·B_k[j,ℓ] = C_k[i,ℓ]` (the derivation in §III-A).
+//!
+//! Cost: one extension-ring CDMM serves `n` products — upload, download and
+//! worker compute are amortized by `n` exactly as Theorem III.2 states.
+
+use super::ep::EpCode;
+use super::scheme::{BatchCodedScheme, CodedScheme, Response, Share};
+use crate::ring::extension::Extension;
+use crate::ring::galois::ExtensibleRing;
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+use crate::rmfe::poly_rmfe::PolyRmfe;
+use crate::rmfe::RmfeScheme;
+
+/// The paper's CDBMM scheme.
+#[derive(Clone)]
+pub struct BatchEpRmfe<R: ExtensibleRing> {
+    rmfe: PolyRmfe<R>,
+    ep: EpCode<Extension<R>>,
+}
+
+impl<R: ExtensibleRing> BatchEpRmfe<R> {
+    /// Build for `N` workers, batch size `n`, EP partition `(u, w, v)`.
+    ///
+    /// The extension degree is `m = max(⌈log_{p^d} N⌉, 2n−1)`: large enough
+    /// both for `N` exceptional points and for the RMFE product property.
+    pub fn new(
+        base: R,
+        n_workers: usize,
+        n_batch: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+    ) -> anyhow::Result<Self> {
+        // capacity for N points …
+        let cap_ext = Extension::with_capacity(base.clone(), n_workers);
+        let m = cap_ext.m().max(2 * n_batch - 1);
+        let ext = if m == cap_ext.m() { cap_ext } else { Extension::new(base, m) };
+        let rmfe = PolyRmfe::with_ext(ext.clone(), n_batch)?;
+        let ep = EpCode::new(ext, n_workers, u, w, v)?;
+        Ok(BatchEpRmfe { rmfe, ep })
+    }
+
+    /// Build over an explicit extension degree `m` (the paper fixes `m` by
+    /// the worker count: 3 for N=8, 4 for N=16, 5 for N=32).
+    pub fn with_m(
+        base: R,
+        m: usize,
+        n_workers: usize,
+        n_batch: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+    ) -> anyhow::Result<Self> {
+        let ext = Extension::new(base, m);
+        let rmfe = PolyRmfe::with_ext(ext.clone(), n_batch)?;
+        let ep = EpCode::new(ext, n_workers, u, w, v)?;
+        Ok(BatchEpRmfe { rmfe, ep })
+    }
+
+    pub fn rmfe(&self) -> &PolyRmfe<R> {
+        &self.rmfe
+    }
+    pub fn ep(&self) -> &EpCode<Extension<R>> {
+        &self.ep
+    }
+    pub fn m(&self) -> usize {
+        self.rmfe.m()
+    }
+}
+
+impl<R: ExtensibleRing> BatchCodedScheme<R> for BatchEpRmfe<R> {
+    type ShareRing = Extension<R>;
+
+    fn name(&self) -> String {
+        let p = self.ep.partition();
+        format!(
+            "Batch-EP_RMFE(n={},m={},u={},w={},v={}) over {}",
+            self.rmfe.n(),
+            self.m(),
+            p.u,
+            p.w,
+            p.v,
+            self.rmfe.base().name()
+        )
+    }
+    fn share_ring(&self) -> &Extension<R> {
+        self.rmfe.ext()
+    }
+    fn input_ring(&self) -> &R {
+        self.rmfe.base()
+    }
+    fn n_workers(&self) -> usize {
+        self.ep.n_workers()
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.ep.recovery_threshold()
+    }
+    fn batch_size(&self) -> usize {
+        self.rmfe.n()
+    }
+
+    fn encode_batch(
+        &self,
+        a: &[Matrix<R::Elem>],
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+        anyhow::ensure!(
+            a.len() == self.batch_size() && b.len() == self.batch_size(),
+            "batch size must be exactly n = {}",
+            self.batch_size()
+        );
+        let packed_a = self.rmfe.pack_matrices(a);
+        let packed_b = self.rmfe.pack_matrices(b);
+        self.ep.encode_ext(&packed_a, &packed_b)
+    }
+
+    fn decode_batch(
+        &self,
+        responses: &[Response<<Extension<R> as Ring>::Elem>],
+    ) -> anyhow::Result<Vec<Matrix<R::Elem>>> {
+        anyhow::ensure!(!responses.is_empty(), "no responses");
+        let p = self.ep.partition();
+        let (bh, bw) = (responses[0].1.rows, responses[0].1.cols);
+        let packed_c = self.ep.decode_ext(responses, bh * p.u, bw * p.v)?;
+        Ok(self.rmfe.unpack_matrix(&packed_c))
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.ep.upload_bytes(t, r, s)
+    }
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.ep.download_bytes(t, r, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::galois::GaloisRing;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn roundtrip<R: ExtensibleRing>(
+        scheme: &BatchEpRmfe<R>,
+        t: usize,
+        r: usize,
+        s: usize,
+        seed: u64,
+    ) {
+        let base = scheme.input_ring().clone();
+        let n = scheme.batch_size();
+        let mut rng = Rng64::seeded(seed);
+        let a: Vec<_> = (0..n).map(|_| Matrix::random(&base, t, r, &mut rng)).collect();
+        let b: Vec<_> = (0..n).map(|_| Matrix::random(&base, r, s, &mut rng)).collect();
+        let shares = scheme.encode_batch(&a, &b).unwrap();
+        assert_eq!(shares.len(), scheme.n_workers());
+        let rt = scheme.recovery_threshold();
+        // use the *last* R workers to exercise subset independence
+        let responses: Vec<_> = (scheme.n_workers() - rt..scheme.n_workers())
+            .map(|i| (i, scheme.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        let c = scheme.decode_batch(&responses).unwrap();
+        assert_eq!(c.len(), n);
+        for k in 0..n {
+            assert_eq!(c[k], Matrix::matmul(&base, &a[k], &b[k]), "slot {k}");
+        }
+    }
+
+    #[test]
+    fn batch2_8_workers_z2e64() {
+        // n=2 over Z_2^64, N=8, u=v=2, w=1 (Fig. 2 config as a batch).
+        let s = BatchEpRmfe::new(Zq::z2e(64), 8, 2, 2, 1, 2).unwrap();
+        assert_eq!(s.m(), 3);
+        assert_eq!(s.recovery_threshold(), 4);
+        roundtrip(&s, 4, 2, 4, 131);
+    }
+
+    #[test]
+    fn batch2_16_workers_z2e64() {
+        let s = BatchEpRmfe::new(Zq::z2e(64), 16, 2, 2, 2, 2).unwrap();
+        assert_eq!(s.m(), 4);
+        assert_eq!(s.recovery_threshold(), 9);
+        roundtrip(&s, 4, 4, 4, 132);
+    }
+
+    #[test]
+    fn batch3_32_workers_z2e64_infinity_rmfe() {
+        // §V.C: N=32 ⇒ m=5, n=3 via the (3,5)-RMFE with the ∞ point.
+        let s = BatchEpRmfe::new(Zq::z2e(64), 32, 3, 2, 1, 2).unwrap();
+        assert_eq!(s.m(), 5);
+        assert!(s.rmfe().uses_infinity());
+        roundtrip(&s, 2, 2, 2, 133);
+    }
+
+    #[test]
+    fn batch_over_small_galois_field() {
+        // GR(p, d) = GF(4): the "small Galois field" case — CDMM over GF(4)
+        // with N=16 workers (needs m=2: 4^2 = 16).
+        let base = GaloisRing::new(2, 1, 2);
+        let s = BatchEpRmfe::new(base, 16, 2, 2, 2, 2).unwrap();
+        roundtrip(&s, 2, 2, 2, 134);
+    }
+
+    #[test]
+    fn batch_over_galois_ring_base() {
+        // GR(2^16, 2) base, n=4 batch (residue field GF(4) ⇒ 4 finite pts
+        // + m = max(cap, 7)).
+        let base = GaloisRing::new(2, 16, 2);
+        let s = BatchEpRmfe::new(base, 8, 4, 2, 1, 2).unwrap();
+        roundtrip(&s, 2, 2, 2, 135);
+    }
+
+    #[test]
+    fn recovery_threshold_independent_of_batch() {
+        // The Table-1 headline: R does not grow with n.
+        let r2 = BatchEpRmfe::new(Zq::z2e(64), 8, 2, 2, 1, 2).unwrap().recovery_threshold();
+        let r3 = BatchEpRmfe::new(Zq::z2e(64), 32, 3, 2, 1, 2).unwrap().recovery_threshold();
+        assert_eq!(r2, 4);
+        assert_eq!(r3, 4);
+    }
+
+    #[test]
+    fn wrong_batch_size_rejected() {
+        let s = BatchEpRmfe::new(Zq::z2e(64), 8, 2, 2, 1, 2).unwrap();
+        let base = Zq::z2e(64);
+        let mut rng = Rng64::seeded(136);
+        let a: Vec<_> = (0..3).map(|_| Matrix::random(&base, 2, 2, &mut rng)).collect();
+        let b: Vec<_> = (0..3).map(|_| Matrix::random(&base, 2, 2, &mut rng)).collect();
+        assert!(s.encode_batch(&a, &b).is_err());
+    }
+
+    #[test]
+    fn amortized_upload_is_1_over_n_of_plain() {
+        // n=2: the packed upload equals what plain EP pays for ONE product,
+        // but serves TWO products ⇒ amortized halving (Theorem III.2).
+        use super::super::ep::PlainEp;
+        use crate::codes::scheme::CodedScheme;
+        let base = Zq::z2e(64);
+        let batch = BatchEpRmfe::new(base.clone(), 8, 2, 2, 1, 2).unwrap();
+        let plain = PlainEp::new(base, 8, 2, 1, 2).unwrap();
+        let (t, r, s) = (8usize, 8, 8);
+        assert_eq!(
+            BatchCodedScheme::upload_bytes(&batch, t, r, s),
+            CodedScheme::upload_bytes(&plain, t, r, s),
+            "same wire cost ..."
+        );
+        assert_eq!(batch.batch_size(), 2, "... but serving n=2 products");
+    }
+}

@@ -1,0 +1,264 @@
+//! CSA (Cross-Subspace Alignment) batch codes ([4]) — the runnable baseline
+//! for Table 1. This is the `uvw = 1, κ = n` point of the GCSA family, with
+//! recovery threshold `R = 2n − 1` (`= uvw(n + κ − 1) + w − 1` at that
+//! point); the remaining (analytic) GCSA rows of Table 1 are produced by
+//! `experiments::table1`.
+//!
+//! Construction. Pick `n + N` exceptional points: poles `f_1, …, f_n` and
+//! evaluation points `α_1, …, α_N`. With `Δ(α) = Π_l (f_l − α)`:
+//!
+//! ```text
+//! Ã_i = Σ_l ν_l(α_i)·A_l          where ν_l(α) = Δ(α)/(f_l − α) = Π_{k≠l}(f_k − α)
+//! B̃_i = Σ_l (f_l − α_i)^{-1}·B_l
+//! ```
+//!
+//! Worker `i` returns `Z_i = Ã_i·B̃_i`. Partial fractions give
+//!
+//! ```text
+//! Z_i = Σ_l c_l·A_l B_l / (f_l − α_i)  +  P(α_i),   c_l = ν_l(f_l) = Π_{k≠l}(f_k − f_l)
+//! ```
+//!
+//! with `deg P ≤ n − 2`: the diagonal terms contribute the Cauchy part (and
+//! a polynomial of degree `n−2`), the cross terms (`l ≠ l'`) only
+//! polynomials of degree `n−2` — the "cross-subspace alignment". That is
+//! `2n − 1` unknown matrices; the master inverts the Cauchy–Vandermonde
+//! system on any `R = 2n − 1` responding workers (all pivots are units by
+//! exceptionality) and recovers `A_l B_l = c_l^{-1} X_l`.
+
+use super::scheme::{BatchCodedScheme, Response, Share};
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+
+/// CSA batch code over a ring `E` with at least `n + N` exceptional points.
+#[derive(Clone)]
+pub struct CsaCode<E: Ring> {
+    ring: E,
+    n_batch: usize,
+    n_workers: usize,
+    /// Poles `f_1..f_n`.
+    poles: Vec<E::Elem>,
+    /// Evaluation points `α_1..α_N`.
+    alphas: Vec<E::Elem>,
+    /// `c_l = Π_{k≠l} (f_k − f_l)` (units).
+    c: Vec<E::Elem>,
+}
+
+impl<E: Ring> CsaCode<E> {
+    pub fn new(ring: E, n_workers: usize, n_batch: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(n_batch >= 1);
+        let r = 2 * n_batch - 1;
+        anyhow::ensure!(
+            r <= n_workers,
+            "recovery threshold R = {r} exceeds worker count N = {n_workers}"
+        );
+        let pts = ring.exceptional_points(n_batch + n_workers)?;
+        let poles = pts[..n_batch].to_vec();
+        let alphas = pts[n_batch..].to_vec();
+        let mut c = Vec::with_capacity(n_batch);
+        for l in 0..n_batch {
+            let mut prod = ring.one();
+            for k in 0..n_batch {
+                if k != l {
+                    prod = ring.mul(&prod, &ring.sub(&poles[k], &poles[l]));
+                }
+            }
+            c.push(prod);
+        }
+        Ok(CsaCode { ring, n_batch, n_workers, poles, alphas, c })
+    }
+
+    /// Row of the decode system for evaluation point `α`:
+    /// `[(f_1−α)^{-1}, …, (f_n−α)^{-1}, 1, α, …, α^{n−2}]`.
+    fn system_row(&self, alpha: &E::Elem) -> Vec<E::Elem> {
+        let ring = &self.ring;
+        let n = self.n_batch;
+        let mut row = Vec::with_capacity(2 * n - 1);
+        for f in &self.poles {
+            let d = ring.sub(f, alpha);
+            row.push(ring.inv(&d).expect("poles and alphas are exceptional"));
+        }
+        let mut pow = ring.one();
+        for _ in 0..n.saturating_sub(1) {
+            row.push(pow.clone());
+            pow = ring.mul(&pow, alpha);
+        }
+        row
+    }
+}
+
+impl<E: Ring> BatchCodedScheme<E> for CsaCode<E> {
+    type ShareRing = E;
+
+    fn name(&self) -> String {
+        format!("CSA(n={}) over {}", self.n_batch, self.ring.name())
+    }
+    fn share_ring(&self) -> &E {
+        &self.ring
+    }
+    fn input_ring(&self) -> &E {
+        &self.ring
+    }
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+    fn recovery_threshold(&self) -> usize {
+        2 * self.n_batch - 1
+    }
+    fn batch_size(&self) -> usize {
+        self.n_batch
+    }
+
+    fn encode_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<Share<E::Elem>>> {
+        let ring = &self.ring;
+        let n = self.n_batch;
+        anyhow::ensure!(a.len() == n && b.len() == n, "batch size must be n = {n}");
+        let (t, r) = (a[0].rows, a[0].cols);
+        let s = b[0].cols;
+        for (ak, bk) in a.iter().zip(b) {
+            anyhow::ensure!(
+                ak.rows == t && ak.cols == r && bk.rows == r && bk.cols == s,
+                "all batch members must share shapes"
+            );
+        }
+        let mut shares = Vec::with_capacity(self.n_workers);
+        for alpha in &self.alphas {
+            // ν_l(α) = Π_{k≠l}(f_k − α); (f_l − α)^{-1}
+            let diffs: Vec<E::Elem> = self.poles.iter().map(|f| ring.sub(f, alpha)).collect();
+            let mut sa = Matrix::zeros(ring, t, r);
+            let mut sb = Matrix::zeros(ring, r, s);
+            for l in 0..n {
+                let mut nu = ring.one();
+                for (k, d) in diffs.iter().enumerate() {
+                    if k != l {
+                        nu = ring.mul(&nu, d);
+                    }
+                }
+                sa.axpy(ring, &nu, &a[l]);
+                let inv = ring.inv(&diffs[l]).expect("exceptional points");
+                sb.axpy(ring, &inv, &b[l]);
+            }
+            shares.push(Share { a: sa, b: sb });
+        }
+        Ok(shares)
+    }
+
+    fn decode_batch(
+        &self,
+        responses: &[Response<E::Elem>],
+    ) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
+        let ring = &self.ring;
+        let n = self.n_batch;
+        let rt = self.recovery_threshold();
+        anyhow::ensure!(responses.len() >= rt, "{} responses < R = {rt}", responses.len());
+        let used = &responses[..rt];
+        // Cauchy–Vandermonde system on the responding alphas.
+        let mut sys = Matrix::zeros(ring, rt, rt);
+        for (row_i, (widx, _)) in used.iter().enumerate() {
+            anyhow::ensure!(*widx < self.n_workers, "worker index out of range");
+            let row = self.system_row(&self.alphas[*widx]);
+            for (col, v) in row.into_iter().enumerate() {
+                sys.set(row_i, col, v);
+            }
+        }
+        let inv = sys
+            .invert(ring)
+            .ok_or_else(|| anyhow::anyhow!("Cauchy–Vandermonde system not invertible"))?;
+        // unknown_l = Σ_i inv[l][i] · Z_i ; A_lB_l = c_l^{-1} · unknown_l
+        let (zr, zc) = (used[0].1.rows, used[0].1.cols);
+        let mut out = Vec::with_capacity(n);
+        for l in 0..n {
+            let mut acc = Matrix::zeros(ring, zr, zc);
+            for (i, (_, z)) in used.iter().enumerate() {
+                acc.axpy(ring, inv.at(l, i), z);
+            }
+            let cinv = ring.inv(&self.c[l]).expect("c_l is a unit");
+            acc.scale_assign(ring, &cinv);
+            out.push(acc);
+        }
+        Ok(out)
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        let eb = self.ring.elem_bytes();
+        self.n_workers * ((16 + t * r * eb) + (16 + r * s * eb))
+    }
+
+    fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
+        self.recovery_threshold() * (16 + t * s * self.ring.elem_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::extension::Extension;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn roundtrip(n_batch: usize, n_workers: usize, m: usize, seed: u64, offset: usize) {
+        let ring = Extension::new(Zq::z2e(64), m);
+        let csa = CsaCode::new(ring.clone(), n_workers, n_batch).unwrap();
+        let mut rng = Rng64::seeded(seed);
+        let a: Vec<_> = (0..n_batch).map(|_| Matrix::random(&ring, 3, 2, &mut rng)).collect();
+        let b: Vec<_> = (0..n_batch).map(|_| Matrix::random(&ring, 2, 3, &mut rng)).collect();
+        let shares = csa.encode_batch(&a, &b).unwrap();
+        let rt = csa.recovery_threshold();
+        let responses: Vec<_> = (offset..offset + rt)
+            .map(|i| (i, csa.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        let c = csa.decode_batch(&responses).unwrap();
+        for l in 0..n_batch {
+            assert_eq!(c[l], Matrix::matmul(&ring, &a[l], &b[l]), "slot {l}");
+        }
+    }
+
+    #[test]
+    fn csa_n2() {
+        roundtrip(2, 5, 3, 141, 0);
+    }
+
+    #[test]
+    fn csa_n3_last_workers() {
+        roundtrip(3, 8, 4, 142, 3); // uses workers 3..8
+    }
+
+    #[test]
+    fn csa_n4() {
+        roundtrip(4, 9, 4, 143, 1);
+    }
+
+    #[test]
+    fn csa_threshold_grows_with_batch() {
+        // Table 1: CSA/GCSA threshold scales with n; Batch-EP_RMFE's doesn't.
+        let ring = Extension::new(Zq::z2e(64), 4);
+        for n in 1..=4usize {
+            let csa = CsaCode::new(ring.clone(), 9, n).unwrap();
+            assert_eq!(csa.recovery_threshold(), 2 * n - 1);
+        }
+    }
+
+    #[test]
+    fn csa_needs_enough_points() {
+        // n + N must fit in the exceptional set: 3 + 6 = 9 > 8 = 2^3.
+        let ring = Extension::new(Zq::z2e(64), 3);
+        assert!(CsaCode::new(ring, 6, 3).is_err());
+    }
+
+    #[test]
+    fn csa_single_instance_degenerates() {
+        // n = 1: R = 1, share = (ν·A, (f−α)^{-1}B) recovers A·B from one node.
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let csa = CsaCode::new(ring.clone(), 4, 1).unwrap();
+        let mut rng = Rng64::seeded(144);
+        let a = vec![Matrix::random(&ring, 2, 2, &mut rng)];
+        let b = vec![Matrix::random(&ring, 2, 2, &mut rng)];
+        let shares = csa.encode_batch(&a, &b).unwrap();
+        let resp = vec![(2usize, csa.worker_compute(&shares[2]).unwrap())];
+        let c = csa.decode_batch(&resp).unwrap();
+        assert_eq!(c[0], Matrix::matmul(&ring, &a[0], &b[0]));
+    }
+}

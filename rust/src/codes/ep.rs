@@ -1,0 +1,489 @@
+//! Entangled Polynomial codes over a Galois ring ([20]; Lemma III.1).
+//!
+//! The master partitions `A` into a `u × w` grid and `B` into `w × v`, forms
+//!
+//! ```text
+//! f(x) = Σ_{i,j} A_{ij} x^{i·w + j}                 (0-based; deg = uw−1)
+//! g(x) = Σ_{k,ℓ} B_{kℓ} x^{(w−1−k) + ℓ·uw}          (deg = (v−1)uw + w−1)
+//! ```
+//!
+//! and sends `(f(α_i), g(α_i))` to worker `i`, where `α_1, …, α_N` are
+//! exceptional points of the ring. Worker `i` returns `h(α_i) =
+//! f(α_i)·g(α_i)`. From any `R = uvw + w − 1` responses the master
+//! interpolates `h` (degree `R−1`) and reads the product blocks `C_{iℓ}` off
+//! the coefficients of `x^{i·w + (w−1) + ℓ·uw}`.
+//!
+//! Implementation notes:
+//! * encoding evaluates the (sparse) matrix polynomials with precomputed
+//!   scalar power tables and matrix-axpy — `O(#blocks · block_size)` ring
+//!   ops per worker;
+//! * decoding computes the Lagrange basis coefficients on the responding
+//!   subset once (`O(R²)` scalar ops) and then takes `uv` weighted sums of
+//!   the response matrices — the interpolation never materializes `h` as a
+//!   polynomial;
+//! * [`PlainEp`] is the Lemma III.1 baseline for inputs in a *small* ring:
+//!   every input element is constant-embedded into the extension
+//!   `GR(p^e, d·m)` with `p^{dm} ≥ N`, paying the `O(m)` blowup in every
+//!   metric — the overhead RMFE amortizes away.
+
+use super::scheme::{CodedScheme, Partition, Response, Share};
+use crate::ring::eval::lagrange_basis_coeffs;
+use crate::ring::extension::Extension;
+use crate::ring::galois::ExtensibleRing;
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+
+/// EP code operating directly over a ring `E` with at least `N` exceptional
+/// points (typically an extension ring).
+#[derive(Clone)]
+pub struct EpCode<E: Ring> {
+    ring: E,
+    part: Partition,
+    n_workers: usize,
+    points: Vec<E::Elem>,
+}
+
+impl<E: Ring> EpCode<E> {
+    pub fn new(ring: E, n_workers: usize, u: usize, w: usize, v: usize) -> anyhow::Result<Self> {
+        let part = Partition::new(u, w, v);
+        let r = part.recovery_threshold();
+        anyhow::ensure!(
+            r <= n_workers,
+            "recovery threshold R = {r} exceeds worker count N = {n_workers}"
+        );
+        let points = ring.exceptional_points(n_workers)?;
+        Ok(EpCode { ring, part, n_workers, points })
+    }
+
+    pub fn partition(&self) -> Partition {
+        self.part
+    }
+
+    pub fn points(&self) -> &[E::Elem] {
+        &self.points
+    }
+
+    /// The sparse exponent layout of `f` for `A`-blocks: block `(i, j)` (row
+    /// `i` of `u`, col `j` of `w`) sits at exponent `i·w + j`.
+    fn a_exponents(&self) -> Vec<usize> {
+        let Partition { u, w, .. } = self.part;
+        (0..u).flat_map(|i| (0..w).map(move |j| i * w + j)).collect()
+    }
+
+    /// Exponents of `g` for `B`-blocks: block `(k, ℓ)` at `(w−1−k) + ℓ·uw`.
+    fn b_exponents(&self) -> Vec<usize> {
+        let Partition { u, w, v } = self.part;
+        (0..w)
+            .flat_map(|k| (0..v).map(move |l| (w - 1 - k) + l * u * w))
+            .collect()
+    }
+
+    /// Exponents of `h = f·g` that carry the product blocks `C_{iℓ}`.
+    fn c_exponents(&self) -> Vec<usize> {
+        let Partition { u, w, v } = self.part;
+        (0..u)
+            .flat_map(|i| (0..v).map(move |l| i * w + (w - 1) + l * u * w))
+            .collect()
+    }
+
+    /// Evaluate a sparse matrix polynomial `Σ blocks[b] x^{exps[b]}` at `x`.
+    fn eval_sparse(
+        &self,
+        blocks: &[Matrix<E::Elem>],
+        exps: &[usize],
+        x: &E::Elem,
+    ) -> Matrix<E::Elem> {
+        let ring = &self.ring;
+        let max_exp = *exps.iter().max().unwrap();
+        // power table x^0 .. x^max_exp
+        let mut powers = Vec::with_capacity(max_exp + 1);
+        let mut acc = ring.one();
+        for _ in 0..=max_exp {
+            powers.push(acc.clone());
+            acc = ring.mul(&acc, x);
+        }
+        let mut out = Matrix::zeros(ring, blocks[0].rows, blocks[0].cols);
+        for (blk, &e) in blocks.iter().zip(exps) {
+            out.axpy(ring, &powers[e], blk);
+        }
+        out
+    }
+
+    /// Encode share-ring matrices directly (used by the RMFE schemes, which
+    /// pack into the extension first).
+    pub fn encode_ext(
+        &self,
+        a: &Matrix<E::Elem>,
+        b: &Matrix<E::Elem>,
+    ) -> anyhow::Result<Vec<Share<E::Elem>>> {
+        let Partition { u, w, v } = self.part;
+        anyhow::ensure!(a.cols == b.rows, "inner dimensions must agree");
+        self.part.check_shapes(a.rows, a.cols, b.cols)?;
+        let a_blocks = a.partition_grid(u, w);
+        let b_blocks = b.partition_grid(w, v);
+        let a_exps = self.a_exponents();
+        let b_exps = self.b_exponents();
+        Ok(self
+            .points
+            .iter()
+            .map(|alpha| Share {
+                a: self.eval_sparse(&a_blocks, &a_exps, alpha),
+                b: self.eval_sparse(&b_blocks, &b_exps, alpha),
+            })
+            .collect())
+    }
+
+    /// Decode a share-ring product from any `R` responses.
+    pub fn decode_ext(
+        &self,
+        responses: &[Response<E::Elem>],
+        t: usize,
+        s: usize,
+    ) -> anyhow::Result<Matrix<E::Elem>> {
+        let ring = &self.ring;
+        let r_needed = self.part.recovery_threshold();
+        anyhow::ensure!(
+            responses.len() >= r_needed,
+            "{} responses < recovery threshold {r_needed}",
+            responses.len()
+        );
+        let used = &responses[..r_needed];
+        for (idx, _) in used {
+            anyhow::ensure!(*idx < self.n_workers, "worker index {idx} out of range");
+        }
+        let pts: Vec<E::Elem> = used.iter().map(|(i, _)| self.points[*i].clone()).collect();
+        // Lagrange basis on the responding subset: L_j has R coefficients;
+        // coefficient k of h equals Σ_j L_j[k] · Y_j.
+        let basis = lagrange_basis_coeffs(ring, &pts);
+        let Partition { u, v, .. } = self.part;
+        let (bh, bw) = (t / u, s / self.part.v);
+        let mut c_blocks = Vec::with_capacity(u * v);
+        for &k in &self.c_exponents() {
+            let mut acc = Matrix::zeros(ring, bh, bw);
+            for (j, (_, y)) in used.iter().enumerate() {
+                let weight = basis[j].get(k).cloned().unwrap_or_else(|| ring.zero());
+                acc.axpy(ring, &weight, y);
+            }
+            c_blocks.push(acc);
+        }
+        Ok(Matrix::stitch_grid(&c_blocks, u, v))
+    }
+
+    /// Per-worker share byte size for `A: t×r`, `B: r×s`.
+    pub fn share_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        let Partition { u, w, v } = self.part;
+        let eb = self.ring.elem_bytes();
+        (16 + (t / u) * (r / w) * eb) + (16 + (r / w) * (s / v) * eb)
+    }
+
+    /// Per-worker response byte size.
+    pub fn response_bytes(&self, t: usize, s: usize) -> usize {
+        let Partition { u, v, .. } = self.part;
+        16 + (t / u) * (s / v) * self.ring.elem_bytes()
+    }
+}
+
+impl<E: Ring> CodedScheme<E> for EpCode<E> {
+    type ShareRing = E;
+
+    fn name(&self) -> String {
+        format!(
+            "EP(u={},w={},v={}) over {}",
+            self.part.u,
+            self.part.w,
+            self.part.v,
+            self.ring.name()
+        )
+    }
+    fn share_ring(&self) -> &E {
+        &self.ring
+    }
+    fn input_ring(&self) -> &E {
+        &self.ring
+    }
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.part.recovery_threshold()
+    }
+
+    fn encode(&self, a: &Matrix<E::Elem>, b: &Matrix<E::Elem>) -> anyhow::Result<Vec<Share<E::Elem>>> {
+        self.encode_ext(a, b)
+    }
+
+    fn decode(&self, responses: &[Response<E::Elem>]) -> anyhow::Result<Matrix<E::Elem>> {
+        anyhow::ensure!(!responses.is_empty(), "no responses");
+        let Partition { u, v, .. } = self.part;
+        let (bh, bw) = (responses[0].1.rows, responses[0].1.cols);
+        self.decode_ext(responses, bh * u, bw * v)
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.n_workers * self.share_bytes(t, r, s)
+    }
+
+    fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
+        self.recovery_threshold() * self.response_bytes(t, s)
+    }
+}
+
+/// The **plain CDMM baseline** of Lemma III.1 ("EP" in Figures 2–5): inputs
+/// in a small ring `R` are constant-embedded into `GR_m = Extension<R>` with
+/// `p^{dm} ≥ N`, and EP codes run over `GR_m`. Every uploaded/downloaded
+/// element costs `m` base elements and every worker multiplication costs
+/// `O(m²)` base ops — the overhead the RMFE schemes amortize.
+#[derive(Clone)]
+pub struct PlainEp<R: ExtensibleRing> {
+    base: R,
+    ep: EpCode<Extension<R>>,
+}
+
+impl<R: ExtensibleRing> PlainEp<R> {
+    /// `m` is chosen minimal with `p^{dm} ≥ N` (the paper's
+    /// `m = ⌈(log_p N)/d⌉`).
+    pub fn new(base: R, n_workers: usize, u: usize, w: usize, v: usize) -> anyhow::Result<Self> {
+        let ext = Extension::with_capacity(base.clone(), n_workers);
+        let ep = EpCode::new(ext, n_workers, u, w, v)?;
+        Ok(PlainEp { base, ep })
+    }
+
+    /// Override the extension degree (e.g. to match another scheme's ring
+    /// for an apples-to-apples comparison).
+    pub fn with_m(base: R, m: usize, n_workers: usize, u: usize, w: usize, v: usize) -> anyhow::Result<Self> {
+        let ext = Extension::new(base.clone(), m);
+        let ep = EpCode::new(ext, n_workers, u, w, v)?;
+        Ok(PlainEp { base, ep })
+    }
+
+    pub fn ep(&self) -> &EpCode<Extension<R>> {
+        &self.ep
+    }
+
+    pub fn m(&self) -> usize {
+        self.ep.ring.m()
+    }
+}
+
+impl<R: ExtensibleRing> CodedScheme<R> for PlainEp<R> {
+    type ShareRing = Extension<R>;
+
+    fn name(&self) -> String {
+        format!("PlainEP(m={}) [{}]", self.m(), self.ep.name())
+    }
+    fn share_ring(&self) -> &Extension<R> {
+        &self.ep.ring
+    }
+    fn input_ring(&self) -> &R {
+        &self.base
+    }
+    fn n_workers(&self) -> usize {
+        self.ep.n_workers
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.ep.part.recovery_threshold()
+    }
+
+    fn encode(
+        &self,
+        a: &Matrix<R::Elem>,
+        b: &Matrix<R::Elem>,
+    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+        let ext = &self.ep.ring;
+        let ae = a.map(|x| ext.from_base(x));
+        let be = b.map(|x| ext.from_base(x));
+        self.ep.encode_ext(&ae, &be)
+    }
+
+    fn decode(
+        &self,
+        responses: &[Response<<Extension<R> as Ring>::Elem>],
+    ) -> anyhow::Result<Matrix<R::Elem>> {
+        let ce = self.ep.decode(responses)?;
+        // Constant-embedded inputs have constant products: read coefficient 0.
+        Ok(ce.map(|x| x[0].clone()))
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.ep.n_workers * self.ep.share_bytes(t, r, s)
+    }
+
+    fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
+        self.recovery_threshold() * self.ep.response_bytes(t, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn ext_ring(m: usize) -> Extension<Zq> {
+        Extension::new(Zq::z2e(64), m)
+    }
+
+    /// Run an EP code end-to-end over the extension ring and check the
+    /// product, using the *last* R workers (not the first) to exercise
+    /// subset-independence.
+    fn roundtrip(ep: &EpCode<Extension<Zq>>, t: usize, r: usize, s: usize, seed: u64) {
+        let ring = ep.share_ring().clone();
+        let mut rng = Rng64::seeded(seed);
+        let a = Matrix::random(&ring, t, r, &mut rng);
+        let b = Matrix::random(&ring, r, s, &mut rng);
+        let shares = ep.encode_ext(&a, &b).unwrap();
+        assert_eq!(shares.len(), ep.n_workers());
+        let rt = ep.recovery_threshold();
+        let responses: Vec<_> = (ep.n_workers() - rt..ep.n_workers())
+            .map(|i| (i, ep.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        let c = ep.decode_ext(&responses, t, s).unwrap();
+        assert_eq!(c, Matrix::matmul(&ring, &a, &b));
+    }
+
+    #[test]
+    fn ep_paper_8_worker_config() {
+        // u=v=2, w=1, N=8 over GR(2^64,3): R=4 (§V.A).
+        let ep = EpCode::new(ext_ring(3), 8, 2, 1, 2).unwrap();
+        assert_eq!(ep.recovery_threshold(), 4);
+        roundtrip(&ep, 4, 2, 4, 101);
+    }
+
+    #[test]
+    fn ep_paper_16_worker_config() {
+        // u=v=w=2, N=16 over GR(2^64,4): R=9 (§V.A).
+        let ep = EpCode::new(ext_ring(4), 16, 2, 2, 2).unwrap();
+        assert_eq!(ep.recovery_threshold(), 9);
+        roundtrip(&ep, 4, 4, 4, 102);
+    }
+
+    #[test]
+    fn ep_rectangular_shapes() {
+        // u=3, w=2, v=2 ⇒ R = 13; N = 14 workers over GR(2^64, 4).
+        let ep = EpCode::new(ext_ring(4), 14, 3, 2, 2).unwrap();
+        assert_eq!(ep.recovery_threshold(), 13);
+        roundtrip(&ep, 6, 4, 2, 108);
+    }
+
+    #[test]
+    fn ep_rejects_r_above_n() {
+        assert!(EpCode::new(ext_ring(4), 12, 3, 2, 2).is_err()); // R=13 > N=12
+    }
+
+    #[test]
+    fn ep_various_partitions() {
+        for (u, w, v, n) in [(1, 1, 1, 1), (2, 1, 1, 3), (1, 3, 1, 8), (2, 2, 1, 6), (1, 1, 4, 4), (2, 2, 2, 11)] {
+            let ep = EpCode::new(ext_ring(4), n, u, w, v).unwrap();
+            roundtrip(&ep, u * 2, w * 3, v * 2, 200 + (u * 100 + w * 10 + v) as u64);
+        }
+    }
+
+    #[test]
+    fn ep_exponent_layout_no_collisions() {
+        let ep = EpCode::new(ext_ring(4), 16, 2, 2, 2).unwrap();
+        // a and b exponent sets must each be collision-free
+        let mut ae = ep.a_exponents();
+        ae.sort_unstable();
+        ae.dedup();
+        assert_eq!(ae.len(), 4);
+        let mut be = ep.b_exponents();
+        be.sort_unstable();
+        be.dedup();
+        assert_eq!(be.len(), 4);
+        // c exponents must be within h's degree bound
+        let rt = ep.recovery_threshold();
+        for &k in &ep.c_exponents() {
+            assert!(k < rt, "c exponent {k} >= R {rt}");
+        }
+    }
+
+    #[test]
+    fn ep_decode_uses_any_subset() {
+        let ep = EpCode::new(ext_ring(3), 8, 2, 1, 2).unwrap();
+        let ring = ep.share_ring().clone();
+        let mut rng = Rng64::seeded(103);
+        let a = Matrix::random(&ring, 2, 2, &mut rng);
+        let b = Matrix::random(&ring, 2, 2, &mut rng);
+        let expected = Matrix::matmul(&ring, &a, &b);
+        let shares = ep.encode_ext(&a, &b).unwrap();
+        let all: Vec<_> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, ep.worker_compute(s).unwrap()))
+            .collect();
+        // every contiguous window of R workers decodes correctly
+        for start in 0..=(8 - 4) {
+            let c = ep.decode_ext(&all[start..start + 4], 2, 2).unwrap();
+            assert_eq!(c, expected, "window at {start}");
+        }
+        // a scattered subset too
+        let scattered: Vec<_> = [0usize, 2, 5, 7].iter().map(|&i| all[i].clone()).collect();
+        assert_eq!(ep.decode_ext(&scattered, 2, 2).unwrap(), expected);
+    }
+
+    #[test]
+    fn ep_insufficient_responses_fails() {
+        let ep = EpCode::new(ext_ring(3), 8, 2, 1, 2).unwrap();
+        let ring = ep.share_ring().clone();
+        let mut rng = Rng64::seeded(104);
+        let a = Matrix::random(&ring, 2, 2, &mut rng);
+        let b = Matrix::random(&ring, 2, 2, &mut rng);
+        let shares = ep.encode_ext(&a, &b).unwrap();
+        let responses: Vec<_> = (0..3)
+            .map(|i| (i, ep.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        assert!(ep.decode_ext(&responses, 2, 2).is_err());
+    }
+
+    #[test]
+    fn plain_ep_over_z2e64() {
+        // Inputs in Z_2^64, N=8 ⇒ m=3 extension chosen automatically.
+        let base = Zq::z2e(64);
+        let plain = PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap();
+        assert_eq!(plain.m(), 3);
+        let mut rng = Rng64::seeded(105);
+        let a = Matrix::random(&base, 4, 4, &mut rng);
+        let b = Matrix::random(&base, 4, 4, &mut rng);
+        let shares = plain.encode(&a, &b).unwrap();
+        let responses: Vec<_> = shares
+            .iter()
+            .enumerate()
+            .take(plain.recovery_threshold())
+            .map(|(i, s)| (i, plain.worker_compute(s).unwrap()))
+            .collect();
+        let c = plain.decode(&responses).unwrap();
+        assert_eq!(c, Matrix::matmul(&base, &a, &b));
+    }
+
+    #[test]
+    fn plain_ep_comm_accounting_matches_wire() {
+        let base = Zq::z2e(64);
+        let plain = PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap();
+        let (t, r, s) = (4usize, 4, 4);
+        let mut rng = Rng64::seeded(106);
+        let a = Matrix::random(&base, t, r, &mut rng);
+        let b = Matrix::random(&base, r, s, &mut rng);
+        let shares = plain.encode(&a, &b).unwrap();
+        let ring = plain.share_ring();
+        let wire: usize = shares.iter().map(|s| s.byte_len(ring)).sum();
+        assert_eq!(wire, plain.upload_bytes(t, r, s));
+        let resp = plain.worker_compute(&shares[0]).unwrap();
+        assert_eq!(
+            resp.byte_len(ring) * plain.recovery_threshold(),
+            plain.download_bytes(t, r, s)
+        );
+    }
+
+    #[test]
+    fn share_serialization_roundtrip() {
+        let ring = ext_ring(3);
+        let mut rng = Rng64::seeded(107);
+        let share = Share {
+            a: Matrix::random(&ring, 2, 3, &mut rng),
+            b: Matrix::random(&ring, 3, 2, &mut rng),
+        };
+        let bytes = share.to_bytes(&ring);
+        assert_eq!(bytes.len(), share.byte_len(&ring));
+        assert_eq!(Share::from_bytes(&ring, &bytes), share);
+    }
+}

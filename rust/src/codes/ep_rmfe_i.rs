@@ -1,0 +1,195 @@
+//! **EP_RMFE-I** (Section IV, Corollary IV.1) — single-product CDMM with
+//! MatDot-style batch preprocessing.
+//!
+//! `A` is split into `n` column blocks and `B` into `n` row blocks, so that
+//! `A·B = Σ_i A_i B_i` — a "manufactured" batch of `n` products of
+//! `(t × r/n)·(r/n × s)` matrices, computed with one Batch-EP_RMFE call and
+//! summed.
+//!
+//! Compared to the plain EP baseline (Lemma III.1) this saves a factor `m`
+//! in *encoding time, upload volume and per-worker compute* (Remark IV.3)
+//! while download/decoding match plain EP — the profile visible in
+//! Figures 2–5 as "EP_RMFE-I": half the encode time and upload at `n = 2`.
+
+use super::batch_ep_rmfe::BatchEpRmfe;
+use super::scheme::{BatchCodedScheme, CodedScheme, Response, Share};
+use crate::ring::extension::Extension;
+use crate::ring::galois::ExtensibleRing;
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+
+/// Single-DMM scheme: MatDot-split → Batch-EP_RMFE → sum.
+#[derive(Clone)]
+pub struct EpRmfeI<R: ExtensibleRing> {
+    batch: BatchEpRmfe<R>,
+    n_split: usize,
+}
+
+impl<R: ExtensibleRing> EpRmfeI<R> {
+    /// `n_workers` workers, EP partition `(u, w, v)` (of the *split* shapes:
+    /// `u | t`, `w | r/n`, `v | s`), split factor `n_split`.
+    pub fn new(
+        base: R,
+        n_workers: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+        n_split: usize,
+    ) -> anyhow::Result<Self> {
+        let batch = BatchEpRmfe::new(base, n_workers, n_split, u, w, v)?;
+        Ok(EpRmfeI { batch, n_split })
+    }
+
+    /// Fixed extension degree `m` (paper: m=3 for N=8, m=4 for N=16).
+    pub fn with_m(
+        base: R,
+        m: usize,
+        n_workers: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+        n_split: usize,
+    ) -> anyhow::Result<Self> {
+        let batch = BatchEpRmfe::with_m(base, m, n_workers, n_split, u, w, v)?;
+        Ok(EpRmfeI { batch, n_split })
+    }
+
+    pub fn n_split(&self) -> usize {
+        self.n_split
+    }
+    pub fn m(&self) -> usize {
+        self.batch.m()
+    }
+    pub fn batch(&self) -> &BatchEpRmfe<R> {
+        &self.batch
+    }
+}
+
+impl<R: ExtensibleRing> CodedScheme<R> for EpRmfeI<R> {
+    type ShareRing = Extension<R>;
+
+    fn name(&self) -> String {
+        format!("EP_RMFE-I(n={}) [{}]", self.n_split, self.batch.name())
+    }
+    fn share_ring(&self) -> &Extension<R> {
+        self.batch.share_ring()
+    }
+    fn input_ring(&self) -> &R {
+        self.batch.input_ring()
+    }
+    fn n_workers(&self) -> usize {
+        self.batch.n_workers()
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.batch.recovery_threshold()
+    }
+
+    fn encode(
+        &self,
+        a: &Matrix<R::Elem>,
+        b: &Matrix<R::Elem>,
+    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+        let n = self.n_split;
+        anyhow::ensure!(a.cols == b.rows, "inner dimensions must agree");
+        anyhow::ensure!(a.cols % n == 0, "split n = {n} must divide r = {}", a.cols);
+        let a_parts = a.partition_grid(1, n); // A = (A_1 … A_n)
+        let b_parts = b.partition_grid(n, 1); // B = (B_1; …; B_n)
+        self.batch.encode_batch(&a_parts, &b_parts)
+    }
+
+    fn decode(
+        &self,
+        responses: &[Response<<Extension<R> as Ring>::Elem>],
+    ) -> anyhow::Result<Matrix<R::Elem>> {
+        let parts = self.batch.decode_batch(responses)?;
+        let ring = self.input_ring();
+        let mut acc = parts[0].clone();
+        for p in &parts[1..] {
+            acc.add_assign(ring, p);
+        }
+        Ok(acc)
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.batch.upload_bytes(t, r / self.n_split, s)
+    }
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.batch.download_bytes(t, r / self.n_split, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::ep::PlainEp;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn roundtrip(scheme: &EpRmfeI<Zq>, t: usize, r: usize, s: usize, seed: u64) {
+        let base = scheme.input_ring().clone();
+        let mut rng = Rng64::seeded(seed);
+        let a = Matrix::random(&base, t, r, &mut rng);
+        let b = Matrix::random(&base, r, s, &mut rng);
+        let shares = scheme.encode(&a, &b).unwrap();
+        let rt = scheme.recovery_threshold();
+        let responses: Vec<_> = (scheme.n_workers() - rt..scheme.n_workers())
+            .map(|i| (i, scheme.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        assert_eq!(scheme.decode(&responses).unwrap(), Matrix::matmul(&base, &a, &b));
+    }
+
+    #[test]
+    fn paper_8_worker_config() {
+        // N=8, GR(2^64,3), u=v=2, w=1, n=2 (§V.A): R=4.
+        let s = EpRmfeI::new(Zq::z2e(64), 8, 2, 1, 2, 2).unwrap();
+        assert_eq!(s.m(), 3);
+        assert_eq!(s.recovery_threshold(), 4);
+        roundtrip(&s, 4, 4, 4, 151);
+    }
+
+    #[test]
+    fn paper_16_worker_config() {
+        // N=16, GR(2^64,4), u=v=w=2, n=2: R=9.
+        let s = EpRmfeI::new(Zq::z2e(64), 16, 2, 2, 2, 2).unwrap();
+        assert_eq!(s.m(), 4);
+        assert_eq!(s.recovery_threshold(), 9);
+        roundtrip(&s, 4, 8, 4, 152);
+    }
+
+    #[test]
+    fn n3_split_32_workers() {
+        // §V.C extension: N=32, m=5, (3,5)-RMFE, n=3.
+        let s = EpRmfeI::new(Zq::z2e(64), 32, 2, 1, 2, 3).unwrap();
+        assert_eq!(s.m(), 5);
+        roundtrip(&s, 2, 6, 2, 153);
+    }
+
+    #[test]
+    fn upload_is_half_of_plain_ep_at_n2() {
+        // Remark IV.3 / Fig 2b: EP_RMFE-I halves upload at n=2.
+        let base = Zq::z2e(64);
+        let rmfe1 = EpRmfeI::with_m(base.clone(), 3, 8, 2, 1, 2, 2).unwrap();
+        let plain = PlainEp::with_m(base, 3, 8, 2, 1, 2).unwrap();
+        let (t, r, s) = (64usize, 64, 64);
+        let up_rmfe = CodedScheme::upload_bytes(&rmfe1, t, r, s);
+        let up_plain = CodedScheme::upload_bytes(&plain, t, r, s);
+        // ratio ≈ 1/2 up to the 16-byte headers
+        let ratio = up_rmfe as f64 / up_plain as f64;
+        assert!((ratio - 0.5).abs() < 0.01, "ratio {ratio}");
+        // download unchanged
+        assert_eq!(
+            CodedScheme::download_bytes(&rmfe1, t, r, s),
+            CodedScheme::download_bytes(&plain, t, r, s)
+        );
+    }
+
+    #[test]
+    fn rejects_bad_split() {
+        let s = EpRmfeI::new(Zq::z2e(64), 8, 2, 1, 2, 2).unwrap();
+        let base = Zq::z2e(64);
+        let mut rng = Rng64::seeded(154);
+        let a = Matrix::random(&base, 4, 5, &mut rng); // r=5 not divisible by 2
+        let b = Matrix::random(&base, 5, 4, &mut rng);
+        assert!(s.encode(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! **EP_RMFE-II** (Section IV, Corollary IV.2) — single-product CDMM with
+//! Polynomial-style batch preprocessing.
+//!
+//! The variant implemented here is exactly the one the paper benchmarks in
+//! §V ("Since we only tested small Galois rings with m = 3 or m = 4, we did
+//! not split matrix A in EP_RMFE-II and applied only φ1"):
+//!
+//! * `B` is split into `n` *column* blocks `B_1 … B_n` (`r × s/n`) and packed
+//!   elementwise: `ℬ = φ(B_1, …, B_n)` over `GR_m`;
+//! * `A` is kept whole and constant-embedded into `GR_m`;
+//! * EP codes over `GR_m` compute `𝒞 = 𝒜·ℬ` (`t × s/n`);
+//! * since `ψ(const_a · φ(x)) = a ⋆ x` (the embedded factor scales every
+//!   slot), unpacking `𝒞` elementwise yields `(A·B_1, …, A·B_n)`, which are
+//!   stitched side-by-side into `C`.
+//!
+//! Effect (Remark IV.3 / Figures 2–5): download volume and decoding time
+//! drop by `1/n` (the response matrix is `t × s/n` but carries all `n`
+//! column stripes), upload sits between plain EP (for the `A` part) and
+//! EP_RMFE-I. The general two-level (φ1 + φ2) construction of Corollary IV.2
+//! additionally splits `A` and packs with a second RMFE over `GR_{√m}`; it
+//! kicks in only when `m` has a square structure (`m ≥ (2n−1)²`) — far
+//! beyond the `m ∈ {3,4,5}` of every experimental configuration, so the
+//! φ1-only path is the faithful reproduction.
+//!
+//! Restriction: the constant-embedding trick requires the finite-point RMFE
+//! (`n ≤ p^d`) — with the ∞ variant, `ψ`'s last slot reads the coefficient
+//! of `t^{2n−2}`, which a degree-`(n−1)` product `const·φ(x)` never reaches.
+
+use super::ep::EpCode;
+use super::scheme::{CodedScheme, Response, Share};
+use crate::ring::extension::Extension;
+use crate::ring::galois::ExtensibleRing;
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+use crate::rmfe::poly_rmfe::PolyRmfe;
+use crate::rmfe::RmfeScheme;
+
+/// Single-DMM scheme: Polynomial-split of `B` → φ-pack → EP → ψ-unpack.
+#[derive(Clone)]
+pub struct EpRmfeII<R: ExtensibleRing> {
+    rmfe: PolyRmfe<R>,
+    ep: EpCode<Extension<R>>,
+    n_split: usize,
+}
+
+impl<R: ExtensibleRing> EpRmfeII<R> {
+    /// `n_workers` workers, EP partition `(u, w, v)` of the *packed* shapes
+    /// (`u | t`, `w | r`, `v | s/n`), split factor `n_split`.
+    pub fn new(
+        base: R,
+        n_workers: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+        n_split: usize,
+    ) -> anyhow::Result<Self> {
+        let cap_ext = Extension::with_capacity(base.clone(), n_workers);
+        let m = cap_ext.m().max(2 * n_split - 1);
+        let ext = if m == cap_ext.m() { cap_ext } else { Extension::new(base, m) };
+        Self::with_ext(ext, n_workers, u, w, v, n_split)
+    }
+
+    /// Fixed extension degree.
+    pub fn with_m(
+        base: R,
+        m: usize,
+        n_workers: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+        n_split: usize,
+    ) -> anyhow::Result<Self> {
+        Self::with_ext(Extension::new(base, m), n_workers, u, w, v, n_split)
+    }
+
+    fn with_ext(
+        ext: Extension<R>,
+        n_workers: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+        n_split: usize,
+    ) -> anyhow::Result<Self> {
+        let rmfe = PolyRmfe::with_ext(ext.clone(), n_split)?;
+        anyhow::ensure!(
+            !rmfe.uses_infinity(),
+            "EP_RMFE-II's constant-embedding needs the finite-point RMFE \
+             (n ≤ p^d); n = {n_split} requires the ∞ point over {}",
+            rmfe.base().name()
+        );
+        let ep = EpCode::new(ext, n_workers, u, w, v)?;
+        Ok(EpRmfeII { rmfe, ep, n_split })
+    }
+
+    pub fn n_split(&self) -> usize {
+        self.n_split
+    }
+    pub fn m(&self) -> usize {
+        self.rmfe.m()
+    }
+    pub fn ep(&self) -> &EpCode<Extension<R>> {
+        &self.ep
+    }
+}
+
+impl<R: ExtensibleRing> CodedScheme<R> for EpRmfeII<R> {
+    type ShareRing = Extension<R>;
+
+    fn name(&self) -> String {
+        let p = self.ep.partition();
+        format!(
+            "EP_RMFE-II(n={},m={},u={},w={},v={}) over {}",
+            self.n_split,
+            self.m(),
+            p.u,
+            p.w,
+            p.v,
+            self.rmfe.base().name()
+        )
+    }
+    fn share_ring(&self) -> &Extension<R> {
+        self.rmfe.ext()
+    }
+    fn input_ring(&self) -> &R {
+        self.rmfe.base()
+    }
+    fn n_workers(&self) -> usize {
+        self.ep.n_workers()
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.ep.recovery_threshold()
+    }
+
+    fn encode(
+        &self,
+        a: &Matrix<R::Elem>,
+        b: &Matrix<R::Elem>,
+    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+        let n = self.n_split;
+        let ext = self.rmfe.ext();
+        anyhow::ensure!(a.cols == b.rows, "inner dimensions must agree");
+        anyhow::ensure!(b.cols % n == 0, "split n = {n} must divide s = {}", b.cols);
+        // 𝒜 = constant-embedded A; ℬ = φ(B_1 … B_n) columnwise.
+        let packed_a = a.map(|x| ext.from_base(x));
+        let b_parts = b.partition_grid(1, n);
+        let packed_b = self.rmfe.pack_matrices(&b_parts);
+        self.ep.encode_ext(&packed_a, &packed_b)
+    }
+
+    fn decode(
+        &self,
+        responses: &[Response<<Extension<R> as Ring>::Elem>],
+    ) -> anyhow::Result<Matrix<R::Elem>> {
+        anyhow::ensure!(!responses.is_empty(), "no responses");
+        let p = self.ep.partition();
+        let (bh, bw) = (responses[0].1.rows, responses[0].1.cols);
+        let packed_c = self.ep.decode_ext(responses, bh * p.u, bw * p.v)?;
+        // ψ unpacks each entry into the n column stripes A·B_j.
+        let stripes = self.rmfe.unpack_matrix(&packed_c);
+        Ok(Matrix::stitch_grid(&stripes, 1, self.n_split))
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.ep.upload_bytes(t, r, s / self.n_split)
+    }
+    fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
+        self.recovery_threshold() * self.ep.response_bytes(t, s / self.n_split)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::ep::PlainEp;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn roundtrip(scheme: &EpRmfeII<Zq>, t: usize, r: usize, s: usize, seed: u64) {
+        let base = scheme.input_ring().clone();
+        let mut rng = Rng64::seeded(seed);
+        let a = Matrix::random(&base, t, r, &mut rng);
+        let b = Matrix::random(&base, r, s, &mut rng);
+        let shares = scheme.encode(&a, &b).unwrap();
+        let rt = scheme.recovery_threshold();
+        let responses: Vec<_> = (scheme.n_workers() - rt..scheme.n_workers())
+            .map(|i| (i, scheme.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        assert_eq!(scheme.decode(&responses).unwrap(), Matrix::matmul(&base, &a, &b));
+    }
+
+    #[test]
+    fn paper_8_worker_config() {
+        // N=8, GR(2^64,3), u=v=2, w=1, n=2 (§V.A): v must divide s/2.
+        let s = EpRmfeII::new(Zq::z2e(64), 8, 2, 1, 2, 2).unwrap();
+        assert_eq!(s.m(), 3);
+        assert_eq!(s.recovery_threshold(), 4);
+        roundtrip(&s, 4, 4, 8, 161);
+    }
+
+    #[test]
+    fn paper_16_worker_config() {
+        let s = EpRmfeII::new(Zq::z2e(64), 16, 2, 2, 2, 2).unwrap();
+        assert_eq!(s.m(), 4);
+        assert_eq!(s.recovery_threshold(), 9);
+        roundtrip(&s, 4, 4, 8, 162);
+    }
+
+    #[test]
+    fn download_is_half_of_plain_ep_at_n2() {
+        // Remark IV.3 / Fig 3d: EP_RMFE-II halves download at n=2.
+        let base = Zq::z2e(64);
+        let rmfe2 = EpRmfeII::with_m(base.clone(), 3, 8, 2, 1, 2, 2).unwrap();
+        let plain = PlainEp::with_m(base, 3, 8, 2, 1, 2).unwrap();
+        let (t, r, s) = (64usize, 64, 64);
+        let down_rmfe = CodedScheme::download_bytes(&rmfe2, t, r, s);
+        let down_plain = CodedScheme::download_bytes(&plain, t, r, s);
+        let ratio = down_rmfe as f64 / down_plain as f64;
+        assert!((ratio - 0.5).abs() < 0.01, "ratio {ratio}");
+        // upload strictly between EP_RMFE-I (half) and plain EP (full):
+        let up_rmfe2 = CodedScheme::upload_bytes(&rmfe2, t, r, s);
+        let up_plain = CodedScheme::upload_bytes(&plain, t, r, s);
+        assert!(up_rmfe2 < up_plain && up_rmfe2 > up_plain / 2, "upload in between");
+    }
+
+    #[test]
+    fn rejects_infinity_rmfe() {
+        // n=3 over Z_2^e needs the ∞ point — invalid for EP_RMFE-II.
+        assert!(EpRmfeII::new(Zq::z2e(64), 32, 2, 1, 2, 3).is_err());
+    }
+
+    #[test]
+    fn galois_field_base_n4() {
+        // over GF(2^2): 4 finite points allow n=4 without ∞.
+        use crate::ring::galois::GaloisRing;
+        let base = GaloisRing::new(2, 1, 2);
+        let s = EpRmfeII::new(base.clone(), 16, 2, 1, 1, 4).unwrap();
+        let mut rng = Rng64::seeded(163);
+        let a = Matrix::random(&base, 2, 2, &mut rng);
+        let b = Matrix::random(&base, 2, 8, &mut rng);
+        let shares = s.encode(&a, &b).unwrap();
+        let rt = s.recovery_threshold();
+        let responses: Vec<_> = (0..rt)
+            .map(|i| (i, s.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        assert_eq!(s.decode(&responses).unwrap(), Matrix::matmul(&base, &a, &b));
+    }
+}

@@ -1,0 +1,108 @@
+//! MatDot codes ([2]; Remark III.3) — the `u = v = 1` point of the EP
+//! family: `A` split into `w` column-blocks, `B` into `w` row-blocks,
+//! `C = Σ_k A_k B_k`, `R = 2w − 1`. Optimal recovery threshold for
+//! inner-product partitions; every response is a full `t × s` matrix (the
+//! download-heavy end of the trade-off).
+//!
+//! The batch preprocessing of EP_RMFE-I (Corollary IV.1) is exactly the
+//! MatDot partition applied *before* packing.
+
+use super::ep::EpCode;
+use super::scheme::{CodedScheme, Response, Share};
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+
+/// MatDot code over a ring with ≥ N exceptional points.
+#[derive(Clone)]
+pub struct MatDotCode<E: Ring> {
+    inner: EpCode<E>,
+}
+
+impl<E: Ring> MatDotCode<E> {
+    pub fn new(ring: E, n_workers: usize, w: usize) -> anyhow::Result<Self> {
+        Ok(MatDotCode { inner: EpCode::new(ring, n_workers, 1, w, 1)? })
+    }
+
+    pub fn inner(&self) -> &EpCode<E> {
+        &self.inner
+    }
+}
+
+impl<E: Ring> CodedScheme<E> for MatDotCode<E> {
+    type ShareRing = E;
+
+    fn name(&self) -> String {
+        let p = self.inner.partition();
+        format!("MatDot(w={}) over {}", p.w, self.share_ring().name())
+    }
+    fn share_ring(&self) -> &E {
+        self.inner.share_ring()
+    }
+    fn input_ring(&self) -> &E {
+        self.inner.input_ring()
+    }
+    fn n_workers(&self) -> usize {
+        self.inner.n_workers()
+    }
+    fn recovery_threshold(&self) -> usize {
+        // 1·1·w + w − 1 = 2w − 1
+        self.inner.recovery_threshold()
+    }
+    fn encode(&self, a: &Matrix<E::Elem>, b: &Matrix<E::Elem>) -> anyhow::Result<Vec<Share<E::Elem>>> {
+        self.inner.encode(a, b)
+    }
+    fn decode(&self, responses: &[Response<E::Elem>]) -> anyhow::Result<Matrix<E::Elem>> {
+        self.inner.decode(responses)
+    }
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.inner.upload_bytes(t, r, s)
+    }
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.inner.download_bytes(t, r, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::extension::Extension;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    #[test]
+    fn recovery_threshold_is_2w_minus_1() {
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let md = MatDotCode::new(ring, 8, 4).unwrap();
+        assert_eq!(md.recovery_threshold(), 7);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let md = MatDotCode::new(ring.clone(), 8, 3).unwrap();
+        let mut rng = Rng64::seeded(121);
+        let a = Matrix::random(&ring, 3, 6, &mut rng);
+        let b = Matrix::random(&ring, 6, 3, &mut rng);
+        let shares = md.encode(&a, &b).unwrap();
+        let rt = md.recovery_threshold();
+        let responses: Vec<_> = (0..rt)
+            .map(|i| (i, md.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        assert_eq!(md.decode(&responses).unwrap(), Matrix::matmul(&ring, &a, &b));
+    }
+
+    #[test]
+    fn responses_are_full_size() {
+        // u = v = 1: every response is t × s.
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let md = MatDotCode::new(ring.clone(), 5, 2).unwrap();
+        let mut rng = Rng64::seeded(122);
+        let a = Matrix::random(&ring, 3, 4, &mut rng);
+        let b = Matrix::random(&ring, 4, 3, &mut rng);
+        let shares = md.encode(&a, &b).unwrap();
+        let resp = md.worker_compute(&shares[0]).unwrap();
+        assert_eq!((resp.rows, resp.cols), (3, 3));
+        // but shares carry only r/w of the inner dimension
+        assert_eq!(shares[0].a.cols, 2);
+    }
+}

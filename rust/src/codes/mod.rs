@@ -1,0 +1,27 @@
+//! The coding schemes of the paper and its baselines.
+//!
+//! | Module | Scheme | Paper reference |
+//! |---|---|---|
+//! | [`ep`] | Entangled Polynomial codes over any Galois ring (+ the *plain* embedded baseline of Lemma III.1) | [20], Lemma III.1 |
+//! | [`polynomial`] | Polynomial codes (`w = 1`) | [1], Remark III.3 |
+//! | [`matdot`] | MatDot codes (`u = v = 1`) | [2], Remark III.3 |
+//! | [`csa`] | CSA batch codes — the runnable GCSA point (`uvw = 1, κ = n`, `R = 2n−1`) | [4], Table 1 baseline |
+//! | [`batch_ep_rmfe`] | **Batch-EP_RMFE** — the paper's CDBMM | Theorem III.2 |
+//! | [`ep_rmfe_i`] | **EP_RMFE-I** — single DMM, MatDot-style batch preprocessing | Corollary IV.1 |
+//! | [`ep_rmfe_ii`] | **EP_RMFE-II** — single DMM, Polynomial-style batch preprocessing (incl. the φ1-only variant benchmarked in §V) | Corollary IV.2 |
+//! | [`secure_matdot`] | T-private MatDot over a Galois ring — the paper's stated future work (§I) | extension |
+//!
+//! All schemes implement [`scheme::CodedScheme`] (single product) or
+//! [`scheme::BatchCodedScheme`] (batch) and are generic over the input ring.
+
+pub mod scheme;
+pub mod ep;
+pub mod polynomial;
+pub mod matdot;
+pub mod csa;
+pub mod batch_ep_rmfe;
+pub mod ep_rmfe_i;
+pub mod ep_rmfe_ii;
+pub mod secure_matdot;
+
+pub use scheme::{BatchCodedScheme, CodedScheme, Share};

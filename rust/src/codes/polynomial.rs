@@ -1,0 +1,109 @@
+//! Polynomial codes ([1]; Remark III.3) — the `w = 1` point of the EP
+//! family: `A` split into `u` row-blocks, `B` into `v` column-blocks,
+//! `R = uv`. Optimal download among one-shot partitions (each response is a
+//! distinct product block combination), at the cost of the full `r`-length
+//! inner dimension at every worker.
+//!
+//! Provided as a named scheme because the paper calls it out explicitly
+//! ("When using Polynomial codes, w = 1"): construction, docs and tests are
+//! its own, arithmetic is shared with [`super::ep::EpCode`].
+
+use super::ep::EpCode;
+use super::scheme::{CodedScheme, Response, Share};
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+
+/// Polynomial code over a ring with ≥ N exceptional points.
+#[derive(Clone)]
+pub struct PolynomialCode<E: Ring> {
+    inner: EpCode<E>,
+}
+
+impl<E: Ring> PolynomialCode<E> {
+    pub fn new(ring: E, n_workers: usize, u: usize, v: usize) -> anyhow::Result<Self> {
+        Ok(PolynomialCode { inner: EpCode::new(ring, n_workers, u, 1, v)? })
+    }
+
+    pub fn inner(&self) -> &EpCode<E> {
+        &self.inner
+    }
+}
+
+impl<E: Ring> CodedScheme<E> for PolynomialCode<E> {
+    type ShareRing = E;
+
+    fn name(&self) -> String {
+        let p = self.inner.partition();
+        format!("Polynomial(u={},v={}) over {}", p.u, p.v, self.share_ring().name())
+    }
+    fn share_ring(&self) -> &E {
+        self.inner.share_ring()
+    }
+    fn input_ring(&self) -> &E {
+        self.inner.input_ring()
+    }
+    fn n_workers(&self) -> usize {
+        self.inner.n_workers()
+    }
+    fn recovery_threshold(&self) -> usize {
+        // uv·1 + 1 − 1 = uv
+        self.inner.recovery_threshold()
+    }
+    fn encode(&self, a: &Matrix<E::Elem>, b: &Matrix<E::Elem>) -> anyhow::Result<Vec<Share<E::Elem>>> {
+        self.inner.encode(a, b)
+    }
+    fn decode(&self, responses: &[Response<E::Elem>]) -> anyhow::Result<Matrix<E::Elem>> {
+        self.inner.decode(responses)
+    }
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.inner.upload_bytes(t, r, s)
+    }
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.inner.download_bytes(t, r, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::extension::Extension;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    #[test]
+    fn recovery_threshold_is_uv() {
+        let ring = Extension::new(Zq::z2e(64), 4);
+        let pc = PolynomialCode::new(ring, 9, 3, 3).unwrap();
+        assert_eq!(pc.recovery_threshold(), 9);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let pc = PolynomialCode::new(ring.clone(), 8, 2, 2).unwrap();
+        let mut rng = Rng64::seeded(111);
+        let a = Matrix::random(&ring, 4, 3, &mut rng);
+        let b = Matrix::random(&ring, 3, 4, &mut rng);
+        let shares = pc.encode(&a, &b).unwrap();
+        let rt = pc.recovery_threshold();
+        let responses: Vec<_> = (8 - rt..8)
+            .map(|i| (i, pc.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        assert_eq!(pc.decode(&responses).unwrap(), Matrix::matmul(&ring, &a, &b));
+    }
+
+    #[test]
+    fn workers_see_full_inner_dimension() {
+        // w = 1: shares keep the whole r dimension.
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let pc = PolynomialCode::new(ring.clone(), 8, 2, 2).unwrap();
+        let mut rng = Rng64::seeded(112);
+        let a = Matrix::random(&ring, 4, 6, &mut rng);
+        let b = Matrix::random(&ring, 6, 4, &mut rng);
+        let shares = pc.encode(&a, &b).unwrap();
+        assert_eq!(shares[0].a.cols, 6);
+        assert_eq!(shares[0].b.rows, 6);
+        assert_eq!(shares[0].a.rows, 2); // t/u
+        assert_eq!(shares[0].b.cols, 2); // s/v
+    }
+}

@@ -1,0 +1,153 @@
+//! The common interfaces of all coded DMM / DBMM schemes, plus the exact
+//! communication accounting the evaluation section reports.
+//!
+//! A scheme is parameterized by the *input ring* `R` (where the user's
+//! matrices live, e.g. `Z_{2^64}`) and internally works over a *share ring*
+//! (usually an extension `GR(p^e, d·m)` with enough exceptional points for
+//! the worker count). Workers only ever see share-ring matrices.
+
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+
+/// The pair of encoded matrices sent to one worker: the evaluations
+/// `f(α_i)`, `g(α_i)` of the master's encoding polynomials.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Share<E> {
+    pub a: Matrix<E>,
+    pub b: Matrix<E>,
+}
+
+impl<E: Clone + PartialEq> Share<E> {
+    /// Exact wire size of this share under the share ring's encoding.
+    pub fn byte_len<R: Ring<Elem = E>>(&self, ring: &R) -> usize {
+        self.a.byte_len(ring) + self.b.byte_len(ring)
+    }
+
+    pub fn to_bytes<R: Ring<Elem = E>>(&self, ring: &R) -> Vec<u8> {
+        let mut out = self.a.to_bytes(ring);
+        out.extend(self.b.to_bytes(ring));
+        out
+    }
+
+    pub fn from_bytes<R: Ring<Elem = E>>(ring: &R, buf: &[u8]) -> Self {
+        let a = Matrix::from_bytes(ring, buf);
+        let b = Matrix::from_bytes(ring, &buf[a.byte_len(ring)..]);
+        Share { a, b }
+    }
+}
+
+/// A worker's response, tagged with its worker index.
+pub type Response<E> = (usize, Matrix<E>);
+
+/// Single coded distributed matrix multiplication: `C = A·B` from any
+/// `recovery_threshold()` of `n_workers()` responses.
+pub trait CodedScheme<R: Ring>: Send + Sync {
+    /// The ring shares and responses live in.
+    type ShareRing: Ring;
+
+    fn name(&self) -> String;
+    fn share_ring(&self) -> &Self::ShareRing;
+    fn input_ring(&self) -> &R;
+
+    /// Total number of worker nodes `N`.
+    fn n_workers(&self) -> usize;
+
+    /// Recovery threshold `R ≤ N`.
+    fn recovery_threshold(&self) -> usize;
+
+    /// Master-side encoding: one share per worker.
+    fn encode(
+        &self,
+        a: &Matrix<R::Elem>,
+        b: &Matrix<R::Elem>,
+    ) -> anyhow::Result<Vec<Share<<Self::ShareRing as Ring>::Elem>>>;
+
+    /// The worker-node computation (a small share-ring matrix product).
+    fn worker_compute(
+        &self,
+        share: &Share<<Self::ShareRing as Ring>::Elem>,
+    ) -> anyhow::Result<Matrix<<Self::ShareRing as Ring>::Elem>> {
+        Ok(Matrix::matmul(self.share_ring(), &share.a, &share.b))
+    }
+
+    /// Master-side decoding from at least `recovery_threshold()` responses
+    /// (any subset of workers; extra responses are ignored).
+    fn decode(
+        &self,
+        responses: &[Response<<Self::ShareRing as Ring>::Elem>],
+    ) -> anyhow::Result<Matrix<R::Elem>>;
+
+    /// Exact total upload volume in bytes (master → all N workers) for the
+    /// given input shapes — computed from the share shapes, matching what the
+    /// byte-accounted transport measures on the wire.
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+
+    /// Exact download volume in bytes (first `recovery_threshold()` workers →
+    /// master).
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+}
+
+/// Batch coded distributed matrix multiplication: `C_k = A_k·B_k` for a batch
+/// of `batch_size()` pairs.
+pub trait BatchCodedScheme<R: Ring>: Send + Sync {
+    type ShareRing: Ring;
+
+    fn name(&self) -> String;
+    fn share_ring(&self) -> &Self::ShareRing;
+    fn input_ring(&self) -> &R;
+    fn n_workers(&self) -> usize;
+    fn recovery_threshold(&self) -> usize;
+
+    /// Number of matrix pairs multiplied per invocation.
+    fn batch_size(&self) -> usize;
+
+    fn encode_batch(
+        &self,
+        a: &[Matrix<R::Elem>],
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<Share<<Self::ShareRing as Ring>::Elem>>>;
+
+    fn worker_compute(
+        &self,
+        share: &Share<<Self::ShareRing as Ring>::Elem>,
+    ) -> anyhow::Result<Matrix<<Self::ShareRing as Ring>::Elem>> {
+        Ok(Matrix::matmul(self.share_ring(), &share.a, &share.b))
+    }
+
+    fn decode_batch(
+        &self,
+        responses: &[Response<<Self::ShareRing as Ring>::Elem>],
+    ) -> anyhow::Result<Vec<Matrix<R::Elem>>>;
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+}
+
+/// Partition parameters `(u, w, v)` of EP-style codes with their divisibility
+/// checks, shared by several schemes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub u: usize,
+    pub w: usize,
+    pub v: usize,
+}
+
+impl Partition {
+    pub fn new(u: usize, w: usize, v: usize) -> Self {
+        assert!(u >= 1 && w >= 1 && v >= 1);
+        Partition { u, w, v }
+    }
+
+    /// EP recovery threshold `R = uvw + w − 1`.
+    pub fn recovery_threshold(&self) -> usize {
+        self.u * self.v * self.w + self.w - 1
+    }
+
+    /// Validate against input shapes `A: t×r`, `B: r×s`.
+    pub fn check_shapes(&self, t: usize, r: usize, s: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(t % self.u == 0, "u = {} must divide t = {t}", self.u);
+        anyhow::ensure!(r % self.w == 0, "w = {} must divide r = {r}", self.w);
+        anyhow::ensure!(s % self.v == 0, "v = {} must divide s = {s}", self.v);
+        Ok(())
+    }
+}

@@ -1,0 +1,238 @@
+//! The master node / coordinator: owns the worker pool, dispatches encoded
+//! shares, and collects the first `R` responses per job.
+
+use super::straggler::StragglerModel;
+use super::transport::{ByteCounters, FromWorker, ToWorker};
+use super::worker::{spawn_worker, ShareCompute};
+use crate::util::rng::Rng64;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One collected response.
+#[derive(Debug)]
+pub struct Collected {
+    pub worker_id: usize,
+    pub payload: Vec<u8>,
+    pub compute: Duration,
+    pub injected_delay: Duration,
+}
+
+/// The coordinator: a persistent pool of `N` worker threads plus the
+/// master-side dispatch/collect logic.
+pub struct Coordinator {
+    n_workers: usize,
+    senders: Vec<Sender<ToWorker>>,
+    receiver: Receiver<FromWorker>,
+    handles: Vec<JoinHandle<()>>,
+    counters: ByteCounters,
+    next_job: u64,
+    /// Max wall time to wait for the recovery threshold per job.
+    pub timeout: Duration,
+}
+
+impl Coordinator {
+    /// Spawn `n_workers` workers applying `compute`, with straggler
+    /// injection. `seed` derives the per-worker RNG streams.
+    pub fn new(
+        n_workers: usize,
+        compute: Arc<dyn ShareCompute>,
+        straggler: StragglerModel,
+        seed: u64,
+    ) -> Self {
+        let (resp_tx, resp_rx) = channel::<FromWorker>();
+        let mut senders = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        let mut seeder = Rng64::seeded(seed);
+        for wid in 0..n_workers {
+            let (tx, rx) = channel::<ToWorker>();
+            let handle = spawn_worker(
+                wid,
+                rx,
+                resp_tx.clone(),
+                Arc::clone(&compute),
+                straggler.clone(),
+                seeder.fork(),
+            );
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Coordinator {
+            n_workers,
+            senders,
+            receiver: resp_rx,
+            handles,
+            counters: ByteCounters::new(),
+            next_job: 0,
+            timeout: Duration::from_secs(120),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn counters(&self) -> &ByteCounters {
+        &self.counters
+    }
+
+    /// Dispatch one payload per worker and collect the first `need`
+    /// successful responses (arrival order). Late/extra responses for this
+    /// job are drained non-blockingly and counted as discarded download.
+    ///
+    /// Returns the responses and the dispatch→threshold wall time.
+    pub fn submit_and_collect(
+        &mut self,
+        payloads: Vec<Vec<u8>>,
+        need: usize,
+    ) -> anyhow::Result<(Vec<Collected>, Duration)> {
+        anyhow::ensure!(
+            payloads.len() == self.n_workers,
+            "need exactly one payload per worker ({} != {})",
+            payloads.len(),
+            self.n_workers
+        );
+        anyhow::ensure!(need <= self.n_workers, "need > n_workers");
+        let job_id = self.next_job;
+        self.next_job += 1;
+
+        let t0 = Instant::now();
+        for (tx, payload) in self.senders.iter().zip(payloads) {
+            self.counters.add_upload(payload.len());
+            tx.send(ToWorker::Job { job_id, payload })
+                .map_err(|_| anyhow::anyhow!("worker hung up"))?;
+        }
+
+        let mut collected = Vec::with_capacity(need);
+        while collected.len() < need {
+            let remaining = self
+                .timeout
+                .checked_sub(t0.elapsed())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "timed out with {}/{need} responses (too many stragglers/failures?)",
+                        collected.len()
+                    )
+                })?;
+            match self.receiver.recv_timeout(remaining) {
+                Ok(msg) => {
+                    if msg.job_id != job_id {
+                        // stale response from a previous job
+                        if let Some(p) = msg.payload {
+                            self.counters.add_download_discarded(p.len());
+                        }
+                        continue;
+                    }
+                    let Some(payload) = msg.payload else {
+                        continue; // worker-side compute error: treat as straggler
+                    };
+                    self.counters.add_download_used(payload.len());
+                    collected.push(Collected {
+                        worker_id: msg.worker_id,
+                        payload,
+                        compute: msg.compute,
+                        injected_delay: msg.injected_delay,
+                    });
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    anyhow::bail!(
+                        "timed out with {}/{need} responses (too many stragglers/failures?)",
+                        collected.len()
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all workers disconnected");
+                }
+            }
+        }
+        let wait = t0.elapsed();
+
+        // Drain any stragglers that already responded, without blocking.
+        while let Ok(msg) = self.receiver.try_recv() {
+            if let Some(p) = msg.payload {
+                self.counters.add_download_discarded(p.len());
+            }
+        }
+        Ok((collected, wait))
+    }
+
+    /// Graceful shutdown: signal and join every worker.
+    pub fn shutdown(self) {
+        for tx in &self.senders {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo backend: replies with the payload itself.
+    struct Echo;
+    impl ShareCompute for Echo {
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+            Ok(payload.to_vec())
+        }
+    }
+
+    #[test]
+    fn collects_first_r() {
+        let mut c = Coordinator::new(4, Arc::new(Echo), StragglerModel::None, 1);
+        let payloads: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8; 10]).collect();
+        let (got, _) = c.submit_and_collect(payloads, 3).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(c.counters().upload_total(), 40);
+        assert_eq!(c.counters().download_used_total(), 30);
+        c.shutdown();
+    }
+
+    #[test]
+    fn tolerates_fail_stop_up_to_n_minus_r() {
+        let straggler = StragglerModel::fail_stop([0, 2]);
+        let mut c = Coordinator::new(5, Arc::new(Echo), straggler, 2);
+        let payloads: Vec<Vec<u8>> = (0..5).map(|_| vec![7u8; 4]).collect();
+        let (got, _) = c.submit_and_collect(payloads, 3).unwrap();
+        let ids: Vec<usize> = got.iter().map(|g| g.worker_id).collect();
+        assert!(!ids.contains(&0) && !ids.contains(&2));
+        c.shutdown();
+    }
+
+    #[test]
+    fn times_out_when_too_many_fail() {
+        let straggler = StragglerModel::fail_stop([0, 1, 2]);
+        let mut c = Coordinator::new(4, Arc::new(Echo), straggler, 3);
+        c.timeout = Duration::from_millis(200);
+        let payloads: Vec<Vec<u8>> = (0..4).map(|_| vec![1u8]).collect();
+        let err = c.submit_and_collect(payloads, 2).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn slow_workers_not_in_first_r() {
+        let straggler = StragglerModel::fixed_slow([0], Duration::from_millis(300));
+        let mut c = Coordinator::new(3, Arc::new(Echo), straggler, 4);
+        let payloads: Vec<Vec<u8>> = (0..3).map(|_| vec![1u8; 8]).collect();
+        let (got, wait) = c.submit_and_collect(payloads, 2).unwrap();
+        let ids: Vec<usize> = got.iter().map(|g| g.worker_id).collect();
+        assert!(!ids.contains(&0), "slow worker 0 should not be among first 2");
+        assert!(wait < Duration::from_millis(250), "did not wait for the straggler");
+        c.shutdown();
+    }
+
+    #[test]
+    fn multiple_jobs_reuse_pool() {
+        let mut c = Coordinator::new(3, Arc::new(Echo), StragglerModel::None, 5);
+        for _ in 0..5 {
+            let payloads: Vec<Vec<u8>> = (0..3).map(|_| vec![9u8; 2]).collect();
+            let (got, _) = c.submit_and_collect(payloads, 3).unwrap();
+            assert_eq!(got.len(), 3);
+        }
+        c.shutdown();
+    }
+}

@@ -1,0 +1,116 @@
+//! Timing and volume breakdown of one coded job — the quantities Figures
+//! 2–5 plot: master encode/decode time, upload/download volume, per-worker
+//! compute time and per-worker communication.
+
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Full breakdown of one distributed multiplication job.
+#[derive(Clone, Debug, Default)]
+pub struct JobMetrics {
+    /// Master-side encoding time (partition + polynomial evaluation, incl.
+    /// RMFE packing where applicable).
+    pub encode: Duration,
+    /// Master-side decoding time (interpolation + unpacking + assembly).
+    pub decode: Duration,
+    /// Wall time from dispatch of the first share until the `R`-th response
+    /// arrived (includes worker compute and injected straggler delays).
+    pub wait_for_r: Duration,
+    /// Bytes master → workers (all `N` shares).
+    pub upload_bytes: u64,
+    /// Bytes of the `R` responses used for decoding.
+    pub download_bytes: u64,
+    /// Pure compute durations of the responses used (length = `R`).
+    pub worker_compute: Vec<Duration>,
+    /// Injected straggler delays of the used responses.
+    pub worker_delay: Vec<Duration>,
+    /// Worker indices that contributed to the decode, in arrival order.
+    pub used_workers: Vec<usize>,
+    /// Total end-to-end wall time at the master.
+    pub total: Duration,
+}
+
+impl JobMetrics {
+    /// Mean pure compute time across the used workers.
+    pub fn mean_worker_compute(&self) -> Duration {
+        if self.worker_compute.is_empty() {
+            return Duration::ZERO;
+        }
+        self.worker_compute.iter().sum::<Duration>() / self.worker_compute.len() as u32
+    }
+
+    /// Maximum worker compute among used responses (the critical path).
+    pub fn max_worker_compute(&self) -> Duration {
+        self.worker_compute.iter().max().copied().unwrap_or(Duration::ZERO)
+    }
+
+    /// Master compute = encode + decode (Figures 2a/3a).
+    pub fn master_compute(&self) -> Duration {
+        self.encode + self.decode
+    }
+
+    /// Per-worker download volume (= the master's upload / N): what Fig. 4b/5b
+    /// call the worker's communication "download" side.
+    pub fn per_worker_download(&self, n_workers: usize) -> u64 {
+        self.upload_bytes / n_workers as u64
+    }
+
+    /// Per-worker upload volume (= master download / R).
+    pub fn per_worker_upload(&self) -> u64 {
+        if self.used_workers.is_empty() {
+            0
+        } else {
+            self.download_bytes / self.used_workers.len() as u64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("encode_s", self.encode.as_secs_f64())
+            .set("decode_s", self.decode.as_secs_f64())
+            .set("wait_for_r_s", self.wait_for_r.as_secs_f64())
+            .set("upload_bytes", self.upload_bytes)
+            .set("download_bytes", self.download_bytes)
+            .set("mean_worker_compute_s", self.mean_worker_compute().as_secs_f64())
+            .set("max_worker_compute_s", self.max_worker_compute().as_secs_f64())
+            .set(
+                "used_workers",
+                Json::Arr(self.used_workers.iter().map(|&w| Json::Int(w as i64)).collect()),
+            )
+            .set("total_s", self.total.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let m = JobMetrics {
+            encode: Duration::from_millis(10),
+            decode: Duration::from_millis(5),
+            worker_compute: vec![
+                Duration::from_millis(2),
+                Duration::from_millis(6),
+                Duration::from_millis(4),
+            ],
+            used_workers: vec![0, 2, 4],
+            upload_bytes: 800,
+            download_bytes: 300,
+            ..Default::default()
+        };
+        assert_eq!(m.master_compute(), Duration::from_millis(15));
+        assert_eq!(m.mean_worker_compute(), Duration::from_millis(4));
+        assert_eq!(m.max_worker_compute(), Duration::from_millis(6));
+        assert_eq!(m.per_worker_download(8), 100);
+        assert_eq!(m.per_worker_upload(), 100);
+    }
+
+    #[test]
+    fn json_renders() {
+        let j = JobMetrics::default().to_json().render();
+        assert!(j.contains("encode_s"));
+        assert!(j.contains("upload_bytes"));
+    }
+}

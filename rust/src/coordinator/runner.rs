@@ -1,0 +1,226 @@
+//! Glue between the coding layer and the coordinator: runs one
+//! single-product or batch job end-to-end and produces the full
+//! [`JobMetrics`] breakdown.
+
+use super::master::Coordinator;
+use super::metrics::JobMetrics;
+use super::worker::ShareCompute;
+use crate::codes::scheme::{BatchCodedScheme, CodedScheme, Share};
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub use super::worker::ShareCompute as ShareComputeTrait;
+
+/// Native worker backend for a single-product scheme: deserialize the share,
+/// multiply with the generic ring kernels, serialize the response.
+pub struct NativeSingleCompute<R: Ring, S: CodedScheme<R>> {
+    scheme: Arc<S>,
+    _marker: std::marker::PhantomData<fn() -> R>,
+}
+
+impl<R: Ring, S: CodedScheme<R>> NativeSingleCompute<R, S> {
+    pub fn new(scheme: Arc<S>) -> Self {
+        NativeSingleCompute { scheme, _marker: std::marker::PhantomData }
+    }
+}
+
+impl<R: Ring, S: CodedScheme<R> + 'static> ShareCompute for NativeSingleCompute<R, S> {
+    fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let ring = self.scheme.share_ring();
+        let share = Share::from_bytes(ring, payload);
+        let resp = self.scheme.worker_compute(&share)?;
+        Ok(resp.to_bytes(ring))
+    }
+}
+
+/// Native worker backend for a batch scheme.
+pub struct NativeBatchCompute<R: Ring, S: BatchCodedScheme<R>> {
+    scheme: Arc<S>,
+    _marker: std::marker::PhantomData<fn() -> R>,
+}
+
+impl<R: Ring, S: BatchCodedScheme<R>> NativeBatchCompute<R, S> {
+    pub fn new(scheme: Arc<S>) -> Self {
+        NativeBatchCompute { scheme, _marker: std::marker::PhantomData }
+    }
+}
+
+impl<R: Ring, S: BatchCodedScheme<R> + 'static> ShareCompute for NativeBatchCompute<R, S> {
+    fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let ring = self.scheme.share_ring();
+        let share = Share::from_bytes(ring, payload);
+        let resp = self.scheme.worker_compute(&share)?;
+        Ok(resp.to_bytes(ring))
+    }
+}
+
+/// Run one single-product job (`C = A·B`) on the pool. The coordinator must
+/// have been built with a backend compatible with `scheme` (e.g.
+/// [`NativeSingleCompute::new(scheme.clone())`]).
+pub fn run_single<R: Ring, S: CodedScheme<R>>(
+    scheme: &S,
+    coord: &mut Coordinator,
+    a: &Matrix<R::Elem>,
+    b: &Matrix<R::Elem>,
+) -> anyhow::Result<(Matrix<R::Elem>, JobMetrics)> {
+    let ring = scheme.share_ring();
+    let t_total = Instant::now();
+    let counters = coord.counters().clone();
+    counters.reset();
+
+    let t0 = Instant::now();
+    let shares = scheme.encode(a, b)?;
+    let payloads: Vec<Vec<u8>> = shares.iter().map(|s| s.to_bytes(ring)).collect();
+    let encode = t0.elapsed();
+
+    let need = scheme.recovery_threshold();
+    let (collected, wait_for_r) = coord.submit_and_collect(payloads, need)?;
+
+    let t0 = Instant::now();
+    let responses: Vec<(usize, Matrix<<S::ShareRing as Ring>::Elem>)> = collected
+        .iter()
+        .map(|c| (c.worker_id, Matrix::from_bytes(ring, &c.payload)))
+        .collect();
+    let c = scheme.decode(&responses)?;
+    let decode = t0.elapsed();
+
+    let metrics = JobMetrics {
+        encode,
+        decode,
+        wait_for_r,
+        upload_bytes: counters.upload_total(),
+        download_bytes: counters.download_used_total(),
+        worker_compute: collected.iter().map(|c| c.compute).collect(),
+        worker_delay: collected.iter().map(|c| c.injected_delay).collect(),
+        used_workers: collected.iter().map(|c| c.worker_id).collect(),
+        total: t_total.elapsed(),
+    };
+    Ok((c, metrics))
+}
+
+/// Run one batch job (`C_k = A_k·B_k`) on the pool.
+pub fn run_batch<R: Ring, S: BatchCodedScheme<R>>(
+    scheme: &S,
+    coord: &mut Coordinator,
+    a: &[Matrix<R::Elem>],
+    b: &[Matrix<R::Elem>],
+) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
+    let ring = scheme.share_ring();
+    let t_total = Instant::now();
+    let counters = coord.counters().clone();
+    counters.reset();
+
+    let t0 = Instant::now();
+    let shares = scheme.encode_batch(a, b)?;
+    let payloads: Vec<Vec<u8>> = shares.iter().map(|s| s.to_bytes(ring)).collect();
+    let encode = t0.elapsed();
+
+    let need = scheme.recovery_threshold();
+    let (collected, wait_for_r) = coord.submit_and_collect(payloads, need)?;
+
+    let t0 = Instant::now();
+    let responses: Vec<(usize, Matrix<<S::ShareRing as Ring>::Elem>)> = collected
+        .iter()
+        .map(|c| (c.worker_id, Matrix::from_bytes(ring, &c.payload)))
+        .collect();
+    let c = scheme.decode_batch(&responses)?;
+    let decode = t0.elapsed();
+
+    let metrics = JobMetrics {
+        encode,
+        decode,
+        wait_for_r,
+        upload_bytes: counters.upload_total(),
+        download_bytes: counters.download_used_total(),
+        worker_compute: collected.iter().map(|c| c.compute).collect(),
+        worker_delay: collected.iter().map(|c| c.injected_delay).collect(),
+        used_workers: collected.iter().map(|c| c.worker_id).collect(),
+        total: t_total.elapsed(),
+    };
+    Ok((c, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::batch_ep_rmfe::BatchEpRmfe;
+    use crate::codes::ep::PlainEp;
+    use crate::codes::ep_rmfe_i::EpRmfeI;
+    use crate::coordinator::straggler::StragglerModel;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    #[test]
+    fn single_job_end_to_end() {
+        let base = Zq::z2e(64);
+        let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+        let mut coord = Coordinator::new(8, backend, StragglerModel::None, 11);
+        let mut rng = Rng64::seeded(171);
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        assert_eq!(c, Matrix::matmul(&base, &a, &b));
+        // wire accounting matches the scheme's analytic model
+        assert_eq!(m.upload_bytes as usize, CodedScheme::upload_bytes(scheme.as_ref(), 8, 8, 8));
+        assert_eq!(
+            m.download_bytes as usize,
+            CodedScheme::download_bytes(scheme.as_ref(), 8, 8, 8)
+        );
+        assert_eq!(m.used_workers.len(), 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn single_job_with_stragglers_still_correct() {
+        let base = Zq::z2e(64);
+        let scheme = Arc::new(PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap());
+        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+        let straggler =
+            StragglerModel::fixed_slow([0, 1], std::time::Duration::from_millis(150));
+        let mut coord = Coordinator::new(8, backend, straggler, 12);
+        let mut rng = Rng64::seeded(172);
+        let a = Matrix::random(&base, 4, 4, &mut rng);
+        let b = Matrix::random(&base, 4, 4, &mut rng);
+        let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        assert_eq!(c, Matrix::matmul(&base, &a, &b));
+        assert!(!m.used_workers.contains(&0));
+        assert!(!m.used_workers.contains(&1));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batch_job_end_to_end() {
+        let base = Zq::z2e(64);
+        let scheme = Arc::new(BatchEpRmfe::new(base.clone(), 8, 2, 2, 1, 2).unwrap());
+        let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&scheme)));
+        let mut coord = Coordinator::new(8, backend, StragglerModel::None, 13);
+        let mut rng = Rng64::seeded(173);
+        let a: Vec<_> = (0..2).map(|_| Matrix::random(&base, 4, 4, &mut rng)).collect();
+        let b: Vec<_> = (0..2).map(|_| Matrix::random(&base, 4, 4, &mut rng)).collect();
+        let (c, m) = run_batch(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        for k in 0..2 {
+            assert_eq!(c[k], Matrix::matmul(&base, &a[k], &b[k]));
+        }
+        assert_eq!(m.used_workers.len(), scheme.recovery_threshold());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn fail_stop_within_budget_recovers() {
+        let base = Zq::z2e(64);
+        // R = 4, N = 8: tolerate up to 4 failures.
+        let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+        let straggler = StragglerModel::fail_stop([1, 3, 5, 7]);
+        let mut coord = Coordinator::new(8, backend, straggler, 14);
+        let mut rng = Rng64::seeded(174);
+        let a = Matrix::random(&base, 4, 4, &mut rng);
+        let b = Matrix::random(&base, 4, 4, &mut rng);
+        let (c, _) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        assert_eq!(c, Matrix::matmul(&base, &a, &b));
+        coord.shutdown();
+    }
+}

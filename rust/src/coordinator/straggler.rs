@@ -1,0 +1,103 @@
+//! Straggler injection — the phenomenon coded computation exists to defeat
+//! (§I: "the effect caused by some computing nodes which run unintentionally
+//! slower than others").
+//!
+//! Models:
+//! * [`StragglerModel::None`] — ideal cluster;
+//! * [`StragglerModel::FixedSlow`] — a designated set of persistently slow
+//!   nodes (e.g. co-scheduled tenants);
+//! * [`StragglerModel::Exponential`] — i.i.d. exponential delay tails on
+//!   every node (the standard model in the coded-computation literature);
+//! * [`StragglerModel::FailStop`] — nodes that never answer; the scheme
+//!   tolerates up to `N − R` of them.
+
+use crate::util::rng::Rng64;
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+/// Per-worker delay model, sampled per job.
+#[derive(Clone, Debug, Default)]
+pub enum StragglerModel {
+    /// No injected delay.
+    #[default]
+    None,
+    /// Workers in `slow` sleep `delay` before answering.
+    FixedSlow { slow: BTreeSet<usize>, delay: Duration },
+    /// Every worker sleeps an `Exp(mean)` time.
+    Exponential { mean: Duration },
+    /// Workers in `failed` never answer.
+    FailStop { failed: BTreeSet<usize> },
+}
+
+impl StragglerModel {
+    pub fn fixed_slow(slow: impl IntoIterator<Item = usize>, delay: Duration) -> Self {
+        StragglerModel::FixedSlow { slow: slow.into_iter().collect(), delay }
+    }
+
+    pub fn fail_stop(failed: impl IntoIterator<Item = usize>) -> Self {
+        StragglerModel::FailStop { failed: failed.into_iter().collect() }
+    }
+
+    /// Sample the injected delay for `worker` on one job. `None` means the
+    /// worker drops the job entirely.
+    pub fn sample(&self, worker: usize, rng: &mut Rng64) -> Option<Duration> {
+        match self {
+            StragglerModel::None => Some(Duration::ZERO),
+            StragglerModel::FixedSlow { slow, delay } => {
+                if slow.contains(&worker) {
+                    Some(*delay)
+                } else {
+                    Some(Duration::ZERO)
+                }
+            }
+            StragglerModel::Exponential { mean } => {
+                Some(Duration::from_secs_f64(rng.exp(mean.as_secs_f64())))
+            }
+            StragglerModel::FailStop { failed } => {
+                if failed.contains(&worker) {
+                    None
+                } else {
+                    Some(Duration::ZERO)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_zero() {
+        let mut rng = Rng64::seeded(1);
+        assert_eq!(StragglerModel::None.sample(0, &mut rng), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn fixed_slow_targets_only_listed() {
+        let m = StragglerModel::fixed_slow([1, 3], Duration::from_millis(50));
+        let mut rng = Rng64::seeded(2);
+        assert_eq!(m.sample(0, &mut rng), Some(Duration::ZERO));
+        assert_eq!(m.sample(1, &mut rng), Some(Duration::from_millis(50)));
+        assert_eq!(m.sample(2, &mut rng), Some(Duration::ZERO));
+        assert_eq!(m.sample(3, &mut rng), Some(Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn fail_stop_drops() {
+        let m = StragglerModel::fail_stop([2]);
+        let mut rng = Rng64::seeded(3);
+        assert_eq!(m.sample(2, &mut rng), None);
+        assert!(m.sample(0, &mut rng).is_some());
+    }
+
+    #[test]
+    fn exponential_positive_and_varies() {
+        let m = StragglerModel::Exponential { mean: Duration::from_millis(10) };
+        let mut rng = Rng64::seeded(4);
+        let a = m.sample(0, &mut rng).unwrap();
+        let b = m.sample(0, &mut rng).unwrap();
+        assert!(a != b, "two samples should differ");
+    }
+}

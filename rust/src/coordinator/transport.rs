@@ -1,0 +1,107 @@
+//! Message types and byte-accounted links between master and workers.
+//!
+//! Transport is in-process (`std::sync::mpsc`) — the paper's evaluation
+//! measures communication *volume*, not bandwidth, and volume is preserved
+//! exactly by counting the serialized payload bytes crossing each link.
+//! Every payload that would cross a network in a deployment crosses a
+//! counted channel here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Master → worker message.
+pub enum ToWorker {
+    Job {
+        job_id: u64,
+        /// Serialized [`crate::codes::Share`].
+        payload: Vec<u8>,
+    },
+    Shutdown,
+}
+
+/// Worker → master message.
+pub struct FromWorker {
+    pub job_id: u64,
+    pub worker_id: usize,
+    /// Serialized response matrix. `None` if the worker failed the job.
+    pub payload: Option<Vec<u8>>,
+    /// Pure compute time at the worker (excludes injected straggler delay).
+    pub compute: Duration,
+    /// Injected straggler delay, for reporting.
+    pub injected_delay: Duration,
+}
+
+/// Shared byte counters for one coordinator (all links).
+#[derive(Clone, Default)]
+pub struct ByteCounters {
+    /// Total bytes master → workers.
+    pub upload: Arc<AtomicU64>,
+    /// Total bytes workers → master *that the master consumed for decoding*.
+    pub download_used: Arc<AtomicU64>,
+    /// Bytes from responses that arrived after the recovery threshold was met.
+    pub download_discarded: Arc<AtomicU64>,
+}
+
+impl ByteCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_upload(&self, n: usize) {
+        self.upload.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_download_used(&self, n: usize) {
+        self.download_used.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_download_discarded(&self, n: usize) {
+        self.download_discarded.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn upload_total(&self) -> u64 {
+        self.upload.load(Ordering::Relaxed)
+    }
+
+    pub fn download_used_total(&self) -> u64 {
+        self.download_used.load(Ordering::Relaxed)
+    }
+
+    pub fn download_discarded_total(&self) -> u64 {
+        self.download_discarded.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.upload.store(0, Ordering::Relaxed);
+        self.download_used.store(0, Ordering::Relaxed);
+        self.download_discarded.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_reset() {
+        let c = ByteCounters::new();
+        c.add_upload(100);
+        c.add_upload(20);
+        c.add_download_used(7);
+        c.add_download_discarded(3);
+        assert_eq!(c.upload_total(), 120);
+        assert_eq!(c.download_used_total(), 7);
+        assert_eq!(c.download_discarded_total(), 3);
+        c.reset();
+        assert_eq!(c.upload_total(), 0);
+    }
+
+    #[test]
+    fn counters_shared_across_clones() {
+        let c = ByteCounters::new();
+        let c2 = c.clone();
+        c2.add_upload(42);
+        assert_eq!(c.upload_total(), 42);
+    }
+}

@@ -1,0 +1,72 @@
+//! The worker node: an OS thread running a receive → compute → reply loop.
+//!
+//! Workers are scheme-agnostic: they apply a [`ShareCompute`] backend
+//! (native ring kernels, or the AOT XLA executable via
+//! [`crate::runtime::gr_backend`]) to opaque serialized shares. This mirrors
+//! the deployment model where worker binaries are generic executors and the
+//! master owns all code-specific logic.
+
+use super::straggler::StragglerModel;
+use super::transport::{FromWorker, ToWorker};
+use crate::util::rng::Rng64;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The worker-side compute backend: serialized share in, serialized response
+/// out. Implementations in [`crate::coordinator::runner`] (native) and
+/// [`crate::runtime::gr_backend`] (XLA).
+pub trait ShareCompute: Send + Sync {
+    fn compute(&self, worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>>;
+    /// Human-readable backend name for logs.
+    fn backend_name(&self) -> String {
+        "native".to_string()
+    }
+}
+
+/// Spawn one worker thread. Returns its join handle.
+pub fn spawn_worker(
+    worker_id: usize,
+    rx: Receiver<ToWorker>,
+    tx: Sender<FromWorker>,
+    compute: Arc<dyn ShareCompute>,
+    straggler: StragglerModel,
+    mut rng: Rng64,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("gr-cdmm-worker-{worker_id}"))
+        .spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ToWorker::Shutdown => break,
+                    ToWorker::Job { job_id, payload } => {
+                        let delay = straggler.sample(worker_id, &mut rng);
+                        let Some(delay) = delay else {
+                            // fail-stop: silently drop the job
+                            continue;
+                        };
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        let t0 = Instant::now();
+                        let result = compute.compute(worker_id, &payload);
+                        let compute_time = t0.elapsed();
+                        let payload = match result {
+                            Ok(bytes) => Some(bytes),
+                            Err(_) => None,
+                        };
+                        // master may have hung up (job already satisfied) —
+                        // a send error is not a worker error.
+                        let _ = tx.send(FromWorker {
+                            job_id,
+                            worker_id,
+                            payload,
+                            compute: compute_time,
+                            injected_delay: delay,
+                        });
+                    }
+                }
+            }
+        })
+        .expect("failed to spawn worker thread")
+}

@@ -1,0 +1,280 @@
+//! Figures 2–5 (§V.B, §V.C): master/worker computation time and
+//! communication volume for the three single-DMM schemes over `Z_{2^64}`.
+//!
+//! Configurations (exactly §V.A):
+//! * 8 workers — `GR(2^64, 3)`, `u = v = 2, w = 1` ⇒ `R = 4`, both RMFE
+//!   variants at `n = 2`;
+//! * 16 workers — `GR(2^64, 4)`, `u = v = w = 2` ⇒ `R = 9`, `n = 2`.
+//!
+//! One sweep produces both the master view (Figs 2/3: encode+decode time,
+//! upload/download volume) and the worker view (Figs 4/5: per-worker compute
+//! time and per-worker communication) — the paper plots the same runs from
+//! two angles, and so do we.
+
+use crate::codes::ep::PlainEp;
+use crate::codes::ep_rmfe_i::EpRmfeI;
+use crate::codes::ep_rmfe_ii::EpRmfeII;
+use crate::coordinator::runner::{run_single, NativeSingleCompute};
+use crate::coordinator::{Coordinator, JobMetrics, StragglerModel};
+use crate::ring::matrix::Matrix;
+use crate::ring::zq::Zq;
+use crate::util::bench::markdown_table;
+use crate::util::json::Json;
+use crate::util::rng::Rng64;
+use std::sync::Arc;
+
+/// One measured point of the sweep.
+#[derive(Clone, Debug)]
+pub struct FigRecord {
+    pub scheme: String,
+    pub n_workers: usize,
+    pub size: usize,
+    /// Mean metrics across reps.
+    pub encode_s: f64,
+    pub decode_s: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub worker_compute_s: f64,
+    pub per_worker_down: u64,
+    pub per_worker_up: u64,
+}
+
+impl FigRecord {
+    fn from_metrics(
+        scheme: &str,
+        n_workers: usize,
+        size: usize,
+        runs: &[JobMetrics],
+    ) -> FigRecord {
+        let n = runs.len() as f64;
+        let m0 = &runs[0];
+        FigRecord {
+            scheme: scheme.to_string(),
+            n_workers,
+            size,
+            encode_s: runs.iter().map(|m| m.encode.as_secs_f64()).sum::<f64>() / n,
+            decode_s: runs.iter().map(|m| m.decode.as_secs_f64()).sum::<f64>() / n,
+            upload_bytes: m0.upload_bytes,
+            download_bytes: m0.download_bytes,
+            worker_compute_s: runs
+                .iter()
+                .map(|m| m.mean_worker_compute().as_secs_f64())
+                .sum::<f64>()
+                / n,
+            per_worker_down: m0.per_worker_download(n_workers),
+            per_worker_up: m0.per_worker_upload(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scheme", self.scheme.as_str())
+            .set("n_workers", self.n_workers)
+            .set("size", self.size)
+            .set("encode_s", self.encode_s)
+            .set("decode_s", self.decode_s)
+            .set("upload_bytes", self.upload_bytes)
+            .set("download_bytes", self.download_bytes)
+            .set("worker_compute_s", self.worker_compute_s)
+            .set("per_worker_down_bytes", self.per_worker_down)
+            .set("per_worker_up_bytes", self.per_worker_up)
+    }
+}
+
+/// The §V.A configuration for a worker count.
+pub struct FigConfig {
+    pub n_workers: usize,
+    pub m: usize,
+    pub u: usize,
+    pub w: usize,
+    pub v: usize,
+    pub n_split: usize,
+}
+
+impl FigConfig {
+    pub fn for_workers(n_workers: usize) -> anyhow::Result<FigConfig> {
+        match n_workers {
+            8 => Ok(FigConfig { n_workers: 8, m: 3, u: 2, w: 1, v: 2, n_split: 2 }),
+            16 => Ok(FigConfig { n_workers: 16, m: 4, u: 2, w: 2, v: 2, n_split: 2 }),
+            32 => Ok(FigConfig { n_workers: 32, m: 5, u: 2, w: 2, v: 2, n_split: 3 }),
+            _ => anyhow::bail!("no paper configuration for N = {n_workers} (use 8, 16 or 32)"),
+        }
+    }
+}
+
+/// Run the sweep: for each size and scheme, run `reps` jobs and average.
+pub fn sweep(
+    cfg: &FigConfig,
+    sizes: &[usize],
+    reps: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<FigRecord>> {
+    let base = Zq::z2e(64);
+    let mut records = Vec::new();
+    let mut rng = Rng64::seeded(seed);
+
+    for &size in sizes {
+        anyhow::ensure!(
+            size % (cfg.u.max(cfg.v) * cfg.n_split * cfg.w.max(1)) == 0,
+            "size {size} must be divisible by the partition/split parameters"
+        );
+        let a = Matrix::random(&base, size, size, &mut rng);
+        let b = Matrix::random(&base, size, size, &mut rng);
+
+        // EP (plain embedded baseline, Lemma III.1)
+        {
+            let scheme =
+                Arc::new(PlainEp::with_m(base.clone(), cfg.m, cfg.n_workers, cfg.u, cfg.w, cfg.v)?);
+            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+            let mut coord =
+                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed);
+            let mut runs = Vec::new();
+            for _ in 0..reps {
+                let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+                debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
+                runs.push(m);
+            }
+            coord.shutdown();
+            records.push(FigRecord::from_metrics("EP", cfg.n_workers, size, &runs));
+        }
+
+        // EP_RMFE-I (Corollary IV.1)
+        {
+            let scheme = Arc::new(EpRmfeI::with_m(
+                base.clone(),
+                cfg.m,
+                cfg.n_workers,
+                cfg.u,
+                cfg.w,
+                cfg.v,
+                cfg.n_split,
+            )?);
+            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+            let mut coord =
+                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed ^ 1);
+            let mut runs = Vec::new();
+            for _ in 0..reps {
+                let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+                debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
+                runs.push(m);
+            }
+            coord.shutdown();
+            records.push(FigRecord::from_metrics("EP_RMFE-I", cfg.n_workers, size, &runs));
+        }
+
+        // EP_RMFE-II (Corollary IV.2, φ1-only as in §V.A)
+        {
+            let scheme = Arc::new(EpRmfeII::with_m(
+                base.clone(),
+                cfg.m,
+                cfg.n_workers,
+                cfg.u,
+                cfg.w,
+                cfg.v,
+                cfg.n_split,
+            )?);
+            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+            let mut coord =
+                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed ^ 2);
+            let mut runs = Vec::new();
+            for _ in 0..reps {
+                let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+                debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
+                runs.push(m);
+            }
+            coord.shutdown();
+            records.push(FigRecord::from_metrics("EP_RMFE-II", cfg.n_workers, size, &runs));
+        }
+    }
+    Ok(records)
+}
+
+/// Master view (Figures 2 & 3): encode/decode time + upload/download volume.
+pub fn render_master_view(records: &[FigRecord]) -> String {
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            vec![
+                r.scheme.clone(),
+                r.size.to_string(),
+                format!("{:.4}", r.encode_s),
+                format!("{:.4}", r.decode_s),
+                format!("{:.2}", r.upload_bytes as f64 / 1e6),
+                format!("{:.2}", r.download_bytes as f64 / 1e6),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &["scheme", "size", "encode (s)", "decode (s)", "upload (MB)", "download (MB)"],
+        &rows,
+    )
+}
+
+/// Worker view (Figures 4 & 5): per-worker compute time + communication.
+pub fn render_worker_view(records: &[FigRecord]) -> String {
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            vec![
+                r.scheme.clone(),
+                r.size.to_string(),
+                format!("{:.4}", r.worker_compute_s),
+                format!("{:.3}", r.per_worker_down as f64 / 1e6),
+                format!("{:.3}", r.per_worker_up as f64 / 1e6),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &["scheme", "size", "worker compute (s)", "worker recv (MB)", "worker send (MB)"],
+        &rows,
+    )
+}
+
+pub fn records_to_json(records: &[FigRecord]) -> Json {
+    Json::Arr(records.iter().map(|r| r.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_smallest_size_8_workers() {
+        let cfg = FigConfig::for_workers(8).unwrap();
+        let recs = sweep(&cfg, &[16], 1, 7).unwrap();
+        assert_eq!(recs.len(), 3);
+        // the paper's headline ratios at n=2:
+        let ep = &recs[0];
+        let r1 = &recs[1];
+        let r2 = &recs[2];
+        assert_eq!(ep.scheme, "EP");
+        // EP_RMFE-I halves upload; EP_RMFE-II halves download (±headers).
+        let up_ratio = r1.upload_bytes as f64 / ep.upload_bytes as f64;
+        assert!((up_ratio - 0.5).abs() < 0.05, "upload ratio {up_ratio}");
+        let down_ratio = r2.download_bytes as f64 / ep.download_bytes as f64;
+        assert!((down_ratio - 0.5).abs() < 0.05, "download ratio {down_ratio}");
+        // EP_RMFE-I download matches EP.
+        assert_eq!(r1.download_bytes, ep.download_bytes);
+    }
+
+    #[test]
+    fn render_views() {
+        let cfg = FigConfig::for_workers(8).unwrap();
+        let recs = sweep(&cfg, &[16], 1, 8).unwrap();
+        let master = render_master_view(&recs);
+        assert!(master.contains("encode (s)"));
+        let worker = render_worker_view(&recs);
+        assert!(worker.contains("worker compute (s)"));
+    }
+
+    #[test]
+    fn config_16_is_paper_params() {
+        let cfg = FigConfig::for_workers(16).unwrap();
+        assert_eq!((cfg.m, cfg.u, cfg.w, cfg.v, cfg.n_split), (4, 2, 2, 2, 2));
+    }
+
+    #[test]
+    fn unknown_worker_count_rejected() {
+        assert!(FigConfig::for_workers(12).is_err());
+    }
+}

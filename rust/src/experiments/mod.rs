@@ -1,0 +1,21 @@
+//! The evaluation harness: regenerates every table and figure of the
+//! paper's evaluation section (see DESIGN.md §3 for the index).
+//!
+//! * [`figs`] — Figures 2–5: master/worker computation time and
+//!   communication volume for EP (plain), EP_RMFE-I and EP_RMFE-II at 8 and
+//!   16 workers over `Z_{2^64}`;
+//! * [`table1`] — Table 1: GCSA vs Batch-EP_RMFE (analytic rows for all κ +
+//!   a measured CSA-vs-Batch-EP_RMFE run at the `uvw = 1, κ = n` point);
+//! * [`rmfe35`] — the §V.C extension: 32 workers, `GR(2^64, 5)`, `(3,5)`-RMFE.
+//!
+//! Every entry point prints a markdown table (the "rows/series the paper
+//! reports") and can emit JSON for plotting.
+
+pub mod figs;
+pub mod table1;
+pub mod rmfe35;
+
+/// Default scaled-down sizes (CI-speed); `--full` switches to the paper's
+/// 2000–8000.
+pub const DEFAULT_SIZES: &[usize] = &[128, 256, 384, 512];
+pub const PAPER_SIZES: &[usize] = &[2000, 4000, 6000, 8000];

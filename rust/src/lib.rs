@@ -1,0 +1,58 @@
+//! # gr-cdmm — Coded Distributed (Batch) Matrix Multiplication over Galois Rings via RMFE
+//!
+//! A production-grade implementation of
+//! *"Coded Distributed (Batch) Matrix Multiplication over Galois Ring via RMFE"*
+//! (Kuang, Li, Li, Xing — 2024).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`ring`] — the algebraic substrate: `Z_{p^e}`, Galois rings `GR(p^e, d)`,
+//!   tower extensions `GR(p^e, d·m)`, exceptional sets, fast multipoint
+//!   evaluation / interpolation, and dense matrices over any ring.
+//! * [`rmfe`] — Reverse Multiplication-Friendly Embeddings: the interpolation
+//!   construction `(n, m)`-RMFE with `m ≥ 2n−1` (Definition II.2), the
+//!   point-at-infinity extension (`n ≤ p^d + 1`) and concatenation (Lemma II.5).
+//! * [`codes`] — the coding schemes: Entangled Polynomial (EP) codes,
+//!   Polynomial codes, MatDot codes, CSA batch codes (the runnable GCSA
+//!   baseline point), and the paper's contributions: `Batch-EP_RMFE`
+//!   (Theorem III.2), `EP_RMFE-I` (Corollary IV.1) and `EP_RMFE-II`
+//!   (Corollary IV.2).
+//! * [`coordinator`] — the L3 distributed runtime: master node, worker pool on
+//!   OS threads, byte-accounted transport, straggler injection, metrics.
+//! * [`runtime`] — the PJRT bridge: loads AOT-compiled `artifacts/*.hlo.txt`
+//!   (lowered once from JAX/Pallas by `python/compile/aot.py`) and executes
+//!   worker-node coefficient-plane matmuls through XLA. Python is never on the
+//!   request path.
+//! * [`experiments`] — the harness that regenerates every table and figure of
+//!   the paper's evaluation section (Table 1, Figures 2–5).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gr_cdmm::ring::zq::Zq;
+//! use gr_cdmm::ring::matrix::Matrix;
+//! use gr_cdmm::codes::scheme::CodedScheme;
+//! use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
+//! use gr_cdmm::util::rng::Rng64;
+//!
+//! let ring = Zq::z2e(64);                      // Z_{2^64}
+//! let mut rng = Rng64::seeded(7);
+//! let a = Matrix::random(&ring, 64, 64, &mut rng);
+//! let b = Matrix::random(&ring, 64, 64, &mut rng);
+//! // 8 workers over GR(2^64, 3), u=v=2, w=1, n=2 — the paper's Fig. 2 config.
+//! let scheme = EpRmfeI::new(ring.clone(), 8, 2, 2, 1, 2).unwrap();
+//! let shares = scheme.encode(&a, &b).unwrap();
+//! let responses: Vec<_> = shares.iter().enumerate()
+//!     .map(|(i, s)| (i, scheme.worker_compute(s).unwrap()))
+//!     .collect();
+//! let c = scheme.decode(&responses[..scheme.recovery_threshold()]).unwrap();
+//! assert_eq!(c, Matrix::matmul(&ring, &a, &b));
+//! ```
+
+pub mod util;
+pub mod ring;
+pub mod rmfe;
+pub mod codes;
+pub mod coordinator;
+pub mod runtime;
+pub mod experiments;

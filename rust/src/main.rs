@@ -1,0 +1,257 @@
+//! `gr-cdmm` — the leader binary: run coded distributed matrix
+//! multiplications, regenerate the paper's experiments, inspect the runtime.
+//!
+//! ```text
+//! gr-cdmm info
+//! gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 8 --size 256
+//!              [--straggler none|slow|exp|fail] [--backend native|xla] [--seed k]
+//! gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
+//!              [--sizes 128,256,...] [--full] [--reps k] [--out results]
+//! ```
+
+use gr_cdmm::codes::ep::PlainEp;
+use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
+use gr_cdmm::codes::ep_rmfe_ii::EpRmfeII;
+use gr_cdmm::codes::scheme::CodedScheme;
+use gr_cdmm::coordinator::runner::{run_single, NativeSingleCompute};
+use gr_cdmm::coordinator::{Coordinator, JobMetrics, StragglerModel};
+use gr_cdmm::experiments::{figs, rmfe35, table1, DEFAULT_SIZES, PAPER_SIZES};
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::traits::Ring;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::runtime::gr_backend::XlaShareCompute;
+use gr_cdmm::runtime::XlaRuntime;
+use gr_cdmm::util::cli::Args;
+use gr_cdmm::util::json::Json;
+use gr_cdmm::util::rng::Rng64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
+        "experiments" => cmd_experiments(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "gr-cdmm — coded distributed (batch) matrix multiplication over Galois rings via RMFE
+
+USAGE:
+  gr-cdmm info
+  gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 8|16|32 --size 256
+               [--straggler none|slow|exp|fail] [--backend native|xla] [--seed K]
+  gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
+               [--sizes 128,256] [--full] [--reps K] [--out DIR]"
+    );
+}
+
+fn cmd_info(_args: &Args) -> anyhow::Result<()> {
+    println!("rings:");
+    for m in [3usize, 4, 5] {
+        let ext = Extension::new(Zq::z2e(64), m);
+        println!(
+            "  {}  modulus={:?}  exceptional points={}",
+            ext.name(),
+            ext.modulus(),
+            ext.residue_size()
+        );
+    }
+    match XlaRuntime::open_default() {
+        Ok(rt) => {
+            println!("pjrt platform: {}", rt.platform());
+            println!("artifacts:");
+            for s in rt.specs() {
+                println!("  {}  m={} shapes={}x{}x{}", s.name, s.m, s.t, s.r, s.s);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn parse_straggler(args: &Args, n_workers: usize) -> StragglerModel {
+    match args.get_or("straggler", "none") {
+        "slow" => StragglerModel::fixed_slow([0, 1], Duration::from_millis(200)),
+        "exp" => StragglerModel::Exponential { mean: Duration::from_millis(50) },
+        "fail" => StragglerModel::fail_stop([n_workers - 1]),
+        _ => StragglerModel::None,
+    }
+}
+
+fn report(name: &str, m: &JobMetrics, ok: bool) {
+    println!("scheme:            {name}");
+    println!("verified:          {ok}");
+    println!("encode:            {:?}", m.encode);
+    println!("decode:            {:?}", m.decode);
+    println!("wait for R:        {:?}", m.wait_for_r);
+    println!("upload:            {:.3} MB", m.upload_bytes as f64 / 1e6);
+    println!("download:          {:.3} MB", m.download_bytes as f64 / 1e6);
+    println!("mean worker time:  {:?}", m.mean_worker_compute());
+    println!("used workers:      {:?}", m.used_workers);
+    println!("total:             {:?}", m.total);
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let n_workers = args.get_usize("workers", 8);
+    let size = args.get_usize("size", 256);
+    let seed = args.get_u64("seed", 42);
+    let scheme_name = args.get_or("scheme", "ep-rmfe-1");
+    let backend_kind = args.get_or("backend", "native");
+    let cfg = figs::FigConfig::for_workers(n_workers)?;
+    let straggler = parse_straggler(args, n_workers);
+
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(seed);
+    let a = Matrix::random(&base, size, size, &mut rng);
+    let b = Matrix::random(&base, size, size, &mut rng);
+    let expected = Matrix::matmul(&base, &a, &b);
+
+    match scheme_name {
+        "ep" => {
+            let scheme =
+                Arc::new(PlainEp::with_m(base.clone(), cfg.m, n_workers, cfg.u, cfg.w, cfg.v)?);
+            let backend: Arc<dyn gr_cdmm::coordinator::ShareCompute> = if backend_kind == "xla" {
+                let ext = scheme.share_ring().clone();
+                let (t, r, s) = (size / cfg.u, size / cfg.w, size / cfg.v);
+                Arc::new(XlaShareCompute::for_shapes(
+                    std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+                    ext,
+                    t,
+                    r,
+                    s,
+                )?)
+            } else {
+                Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)))
+            };
+            let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
+            let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+            report(&scheme.name(), &m, c == expected);
+            coord.shutdown();
+        }
+        "ep-rmfe-1" => {
+            let scheme = Arc::new(EpRmfeI::with_m(
+                base.clone(),
+                cfg.m,
+                n_workers,
+                cfg.u,
+                cfg.w,
+                cfg.v,
+                cfg.n_split,
+            )?);
+            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+            let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
+            let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+            report(&scheme.name(), &m, c == expected);
+            coord.shutdown();
+        }
+        "ep-rmfe-2" => {
+            let scheme = Arc::new(EpRmfeII::with_m(
+                base.clone(),
+                cfg.m,
+                n_workers,
+                cfg.u,
+                cfg.w,
+                cfg.v,
+                cfg.n_split,
+            )?);
+            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+            let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
+            let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
+            report(&scheme.name(), &m, c == expected);
+            coord.shutdown();
+        }
+        other => anyhow::bail!("unknown scheme {other} (ep | ep-rmfe-1 | ep-rmfe-2)"),
+    }
+    Ok(())
+}
+
+fn write_out(
+    out_dir: Option<&str>,
+    name: &str,
+    md: &str,
+    json: Option<Json>,
+) -> anyhow::Result<()> {
+    println!("\n## {name}\n\n{md}");
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/{name}.md"), md)?;
+        if let Some(j) = json {
+            std::fs::write(format!("{dir}/{name}.json"), j.render())?;
+        }
+        println!("(written to {dir}/{name}.md)");
+    }
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> anyhow::Result<()> {
+    let exp = args.get_or("exp", "all").to_string();
+    let full = args.flag("full");
+    let sizes = if full {
+        args.get_usize_list("sizes", PAPER_SIZES)
+    } else {
+        args.get_usize_list("sizes", DEFAULT_SIZES)
+    };
+    let reps = args.get_usize("reps", 1);
+    let seed = args.get_u64("seed", 42);
+    let out_dir = args.get("out");
+
+    let want = |name: &str| exp == name || exp == "all";
+
+    if want("fig2") || want("fig4") {
+        let cfg = figs::FigConfig::for_workers(8)?;
+        let recs = figs::sweep(&cfg, &sizes, reps, seed)?;
+        if want("fig2") {
+            write_out(
+                out_dir,
+                "fig2_master_8workers",
+                &figs::render_master_view(&recs),
+                Some(figs::records_to_json(&recs)),
+            )?;
+        }
+        if want("fig4") {
+            write_out(out_dir, "fig4_worker_8workers", &figs::render_worker_view(&recs), None)?;
+        }
+    }
+    if want("fig3") || want("fig5") {
+        let cfg = figs::FigConfig::for_workers(16)?;
+        let sizes16: Vec<usize> = sizes.iter().map(|&s| s.next_multiple_of(8)).collect();
+        let recs = figs::sweep(&cfg, &sizes16, reps, seed ^ 1)?;
+        if want("fig3") {
+            write_out(
+                out_dir,
+                "fig3_master_16workers",
+                &figs::render_master_view(&recs),
+                Some(figs::records_to_json(&recs)),
+            )?;
+        }
+        if want("fig5") {
+            write_out(out_dir, "fig5_worker_16workers", &figs::render_worker_view(&recs), None)?;
+        }
+    }
+    if want("table1") {
+        let rows = table1::analytic_rows(16, 4, 2, 2, 2, 1000, 1000, 1000);
+        write_out(out_dir, "table1_analytic", &table1::render_analytic(&rows), None)?;
+        let pts = table1::measured_point(2, *sizes.first().unwrap_or(&128), seed)?;
+        write_out(out_dir, "table1_measured", &table1::render_measured(&pts), None)?;
+    }
+    if want("rmfe35") {
+        let sizes35: Vec<usize> = sizes.iter().map(|&s| s.next_multiple_of(12)).collect();
+        let recs = rmfe35::run(&sizes35, seed)?;
+        write_out(out_dir, "rmfe35_32workers", &rmfe35::render(&recs), None)?;
+    }
+    Ok(())
+}

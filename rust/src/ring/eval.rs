@@ -1,0 +1,328 @@
+//! Multipoint evaluation and interpolation over exceptional sets
+//! (Lemma II.1, [14, Cor. 10.8 & 10.12]).
+//!
+//! Two implementations of each, cross-validated in tests and benchmarked in
+//! `rust/benches/eval_crossover.rs`:
+//!
+//! * **naive** — Horner per point / Lagrange basis accumulation, `O(n·deg)` /
+//!   `O(n²)`. Unbeatable for the small `N ≤ 64` of the paper's experiments.
+//! * **fast** — subproduct-tree remainder evaluation and tree-combined
+//!   interpolation, `O(n log² n)` ring operations; the asymptotics the paper's
+//!   complexity rows assume.
+//!
+//! Interpolation requires the points to form an *exceptional sequence*
+//! (pairwise differences invertible) — exactly what
+//! [`crate::ring::traits::Ring::exceptional_points`] provides; `M'(x_i)` is
+//! then a unit and the Lagrange denominators invert.
+
+use super::poly;
+use super::traits::Ring;
+
+/// Evaluate `f` at every point by Horner. `O(pts.len() · deg f)`.
+pub fn eval_many_naive<R: Ring>(ring: &R, f: &[R::Elem], pts: &[R::Elem]) -> Vec<R::Elem> {
+    pts.iter().map(|x| poly::eval(ring, f, x)).collect()
+}
+
+/// Subproduct tree over a point set: `tree[0]` are the leaves `(x − x_i)`,
+/// each higher level the product of adjacent pairs; the last level has a
+/// single polynomial `M(x) = Π (x − x_i)`.
+pub struct SubproductTree<R: Ring> {
+    /// `levels[l][k]`: product of leaves `k·2^l .. min((k+1)·2^l, n)`.
+    pub levels: Vec<Vec<Vec<R::Elem>>>,
+    pub n: usize,
+}
+
+impl<R: Ring> SubproductTree<R> {
+    pub fn build(ring: &R, pts: &[R::Elem]) -> Self {
+        let n = pts.len();
+        assert!(n > 0);
+        let mut levels: Vec<Vec<Vec<R::Elem>>> = Vec::new();
+        let leaves: Vec<Vec<R::Elem>> = pts
+            .iter()
+            .map(|p| vec![ring.neg(p), ring.one()])
+            .collect();
+        levels.push(leaves);
+        while levels.last().unwrap().len() > 1 {
+            let prev = levels.last().unwrap();
+            let mut next = Vec::with_capacity(prev.len().div_ceil(2));
+            let mut i = 0;
+            while i < prev.len() {
+                if i + 1 < prev.len() {
+                    next.push(poly::mul(ring, &prev[i], &prev[i + 1]));
+                } else {
+                    next.push(prev[i].clone());
+                }
+                i += 2;
+            }
+            levels.push(next);
+        }
+        SubproductTree { levels, n }
+    }
+
+    /// The full product `M(x) = Π (x − x_i)`.
+    pub fn root(&self) -> &Vec<R::Elem> {
+        &self.levels.last().unwrap()[0]
+    }
+
+    /// Going-down remainder evaluation: `f mod` each node, leaves give
+    /// `f(x_i)`.
+    pub fn eval(&self, ring: &R, f: &[R::Elem]) -> Vec<R::Elem> {
+        // rems for the current level, top-down
+        let top = poly::divrem(ring, f, self.root()).1;
+        let mut rems: Vec<Vec<R::Elem>> = vec![top];
+        for level_idx in (0..self.levels.len() - 1).rev() {
+            let level = &self.levels[level_idx];
+            let mut next: Vec<Vec<R::Elem>> = Vec::with_capacity(level.len());
+            for (k, node) in level.iter().enumerate() {
+                let parent = &rems[k / 2];
+                next.push(poly::divrem(ring, parent, node).1);
+            }
+            rems = next;
+        }
+        rems.into_iter()
+            .map(|r| {
+                if r.is_empty() {
+                    ring.zero()
+                } else {
+                    r[0].clone()
+                }
+            })
+            .collect()
+    }
+
+    /// Linear combination up the tree: given per-leaf constants `c_i`,
+    /// computes `Σ_i c_i · Π_{j≠i} (x − x_j)`.
+    pub fn combine(&self, ring: &R, cs: &[R::Elem]) -> Vec<R::Elem> {
+        assert_eq!(cs.len(), self.n);
+        let mut polys: Vec<Vec<R::Elem>> = cs
+            .iter()
+            .map(|c| {
+                if ring.is_zero(c) {
+                    vec![]
+                } else {
+                    vec![c.clone()]
+                }
+            })
+            .collect();
+        for level_idx in 0..self.levels.len() - 1 {
+            let level = &self.levels[level_idx];
+            let mut next: Vec<Vec<R::Elem>> = Vec::with_capacity(level.len().div_ceil(2));
+            let mut k = 0;
+            while k < level.len() {
+                if k + 1 < level.len() {
+                    // left * right_subproduct + right * left_subproduct
+                    let l = poly::mul(ring, &polys[k], &level[k + 1]);
+                    let r = poly::mul(ring, &polys[k + 1], &level[k]);
+                    next.push(poly::add(ring, &l, &r));
+                } else {
+                    next.push(polys[k].clone());
+                }
+                k += 2;
+            }
+            polys = next;
+        }
+        polys.pop().unwrap()
+    }
+}
+
+/// Fast multipoint evaluation, `O(n log² n)`.
+pub fn eval_many_fast<R: Ring>(ring: &R, f: &[R::Elem], pts: &[R::Elem]) -> Vec<R::Elem> {
+    let tree = SubproductTree::build(ring, pts);
+    tree.eval(ring, f)
+}
+
+/// Lagrange denominators `λ_i = Π_{j≠i} (x_i − x_j)^{-1}` (all units on an
+/// exceptional sequence).
+pub fn lagrange_denominators<R: Ring>(ring: &R, pts: &[R::Elem]) -> Vec<R::Elem> {
+    let n = pts.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut prod = ring.one();
+        for j in 0..n {
+            if i != j {
+                let d = ring.sub(&pts[i], &pts[j]);
+                prod = ring.mul(&prod, &d);
+            }
+        }
+        out.push(
+            ring.inv(&prod)
+                .expect("points must form an exceptional sequence"),
+        );
+    }
+    out
+}
+
+/// Coefficient vectors of the Lagrange basis polynomials `L_i(x)`
+/// (`L_i(x_j) = δ_ij`, `deg L_i = n−1`). `O(n²)`.
+///
+/// Column stacking of these vectors is the inverse of the Vandermonde matrix
+/// on `pts`; the decoders consume selected *rows* of that inverse as decode
+/// weights (see `codes::ep`).
+pub fn lagrange_basis_coeffs<R: Ring>(ring: &R, pts: &[R::Elem]) -> Vec<Vec<R::Elem>> {
+    let n = pts.len();
+    let m = poly::from_roots(ring, pts);
+    let lambdas = lagrange_denominators(ring, pts);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // M(x) / (x − x_i) by synthetic division: O(n)
+        let mut q = vec![ring.zero(); n];
+        let mut carry = ring.zero();
+        for k in (0..n).rev() {
+            // q_k = m_{k+1} + x_i * q_{k+1}
+            let qk = ring.add(&m[k + 1], &ring.mul(&pts[i], &carry));
+            q[k] = qk.clone();
+            carry = qk;
+        }
+        out.push(poly::scale(ring, &q, &lambdas[i]));
+    }
+    out
+}
+
+/// Naive Lagrange interpolation: the unique `f` with `deg f < n` and
+/// `f(x_i) = y_i`. `O(n²)`.
+pub fn interpolate_naive<R: Ring>(ring: &R, pts: &[R::Elem], ys: &[R::Elem]) -> Vec<R::Elem> {
+    assert_eq!(pts.len(), ys.len());
+    let basis = lagrange_basis_coeffs(ring, pts);
+    let mut acc = vec![ring.zero(); pts.len()];
+    for (li, y) in basis.iter().zip(ys) {
+        if ring.is_zero(y) {
+            continue;
+        }
+        for (k, c) in li.iter().enumerate() {
+            ring.mul_add_assign(&mut acc[k], c, y);
+        }
+    }
+    poly::trim(ring, acc)
+}
+
+/// Fast interpolation via the subproduct tree, `O(n log² n)`:
+/// `f = Σ y_i / M'(x_i) · M(x)/(x − x_i)` computed by tree combination.
+pub fn interpolate_fast<R: Ring>(ring: &R, pts: &[R::Elem], ys: &[R::Elem]) -> Vec<R::Elem> {
+    assert_eq!(pts.len(), ys.len());
+    let tree = SubproductTree::build(ring, pts);
+    let mprime = poly::derivative(ring, tree.root());
+    let denom = tree.eval(ring, &mprime); // M'(x_i) = Π_{j≠i}(x_i − x_j)
+    let cs: Vec<R::Elem> = ys
+        .iter()
+        .zip(&denom)
+        .map(|(y, d)| {
+            let dinv = ring
+                .inv(d)
+                .expect("points must form an exceptional sequence");
+            ring.mul(y, &dinv)
+        })
+        .collect();
+    poly::trim(ring, tree.combine(ring, &cs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::extension::Extension;
+    use crate::ring::zq::Zq;
+    use crate::ring::Ring;
+    use crate::util::rng::Rng64;
+
+    #[test]
+    fn naive_vs_fast_eval_z2e() {
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let mut rng = Rng64::seeded(41);
+        let pts = ring.exceptional_points(8).unwrap();
+        for degree in [0usize, 1, 3, 7, 12] {
+            let f: Vec<_> = (0..=degree).map(|_| ring.random(&mut rng)).collect();
+            assert_eq!(
+                eval_many_naive(&ring, &f, &pts),
+                eval_many_fast(&ring, &f, &pts),
+                "degree {degree}"
+            );
+        }
+    }
+
+    #[test]
+    fn interpolation_roundtrip_naive() {
+        let ring = Extension::new(Zq::z2e(64), 4);
+        let mut rng = Rng64::seeded(42);
+        let pts = ring.exceptional_points(9).unwrap();
+        let f: Vec<_> = (0..9).map(|_| ring.random(&mut rng)).collect();
+        let ys = eval_many_naive(&ring, &f, &pts);
+        let g = interpolate_naive(&ring, &pts, &ys);
+        assert_eq!(poly::trim(&ring, f), g);
+    }
+
+    #[test]
+    fn interpolation_roundtrip_fast() {
+        let ring = Extension::new(Zq::z2e(64), 4);
+        let mut rng = Rng64::seeded(43);
+        let pts = ring.exceptional_points(11).unwrap();
+        let f: Vec<_> = (0..11).map(|_| ring.random(&mut rng)).collect();
+        let ys = eval_many_fast(&ring, &f, &pts);
+        let g = interpolate_fast(&ring, &pts, &ys);
+        assert_eq!(poly::trim(&ring, f), g);
+    }
+
+    #[test]
+    fn naive_and_fast_interpolation_agree() {
+        let ring = Extension::new(Zq::z2e(32), 3);
+        let mut rng = Rng64::seeded(44);
+        let pts = ring.exceptional_points(7).unwrap();
+        let ys: Vec<_> = (0..7).map(|_| ring.random(&mut rng)).collect();
+        assert_eq!(
+            interpolate_naive(&ring, &pts, &ys),
+            interpolate_fast(&ring, &pts, &ys)
+        );
+    }
+
+    #[test]
+    fn lagrange_basis_kronecker_delta() {
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let pts = ring.exceptional_points(6).unwrap();
+        let basis = lagrange_basis_coeffs(&ring, &pts);
+        for (i, li) in basis.iter().enumerate() {
+            for (j, x) in pts.iter().enumerate() {
+                let v = poly::eval(&ring, li, x);
+                if i == j {
+                    assert_eq!(v, ring.one());
+                } else {
+                    assert!(ring.is_zero(&v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_over_odd_char() {
+        let ring = Zq::new(17, 2); // Z_289; 17 exceptional points available
+        let mut rng = Rng64::seeded(45);
+        let pts = ring.exceptional_points(10).unwrap();
+        let f: Vec<_> = (0..10).map(|_| ring.random(&mut rng)).collect();
+        let ys = eval_many_naive(&ring, &f, &pts);
+        assert_eq!(
+            interpolate_fast(&ring, &pts, &ys),
+            poly::trim(&ring, f)
+        );
+    }
+
+    #[test]
+    fn tree_root_is_full_product() {
+        let ring = Zq::new(13, 1);
+        let pts = ring.exceptional_points(5).unwrap();
+        let tree = SubproductTree::build(&ring, &pts);
+        assert_eq!(tree.root(), &poly::from_roots(&ring, &pts));
+    }
+
+    #[test]
+    fn non_power_of_two_points() {
+        let ring = Extension::new(Zq::z2e(64), 4);
+        let mut rng = Rng64::seeded(46);
+        for n in [1usize, 2, 3, 5, 6, 7, 9, 13] {
+            let pts = ring.exceptional_points(n).unwrap();
+            let f: Vec<_> = (0..n).map(|_| ring.random(&mut rng)).collect();
+            let ys = eval_many_fast(&ring, &f, &pts);
+            assert_eq!(
+                interpolate_fast(&ring, &pts, &ys),
+                poly::trim(&ring, f.clone()),
+                "n = {n}"
+            );
+        }
+    }
+}

@@ -1,0 +1,466 @@
+//! `Extension<R>` — the tower `GR_m = R[y]/(h(y))` over a Galois ring `R`,
+//! i.e. `GR(p^e, D·m)` *presented as a degree-m extension of* `GR(p^e, D)`.
+//!
+//! This presentation is exactly what RMFE needs (Section III-A): `φ` embeds a
+//! vector of base-ring values as the coefficients of an interpolated
+//! polynomial in the generator `y`, and `ψ` reads coefficients back. A flat
+//! representation of `GR(p^e, Dm)` would require explicit basis-change
+//! matrices; the tower gives the maps for free.
+
+use super::galois::ExtensibleRing;
+use super::gfp::{Gfq, GfqElem};
+use super::irreducible::find_irreducible;
+use super::traits::Ring;
+use super::matrix::Matrix;
+use super::zq::Zq;
+use crate::util::rng::Rng64;
+
+/// Degree-`m` extension ring of a base Galois ring `R`.
+#[derive(Clone, Debug)]
+pub struct Extension<R: ExtensibleRing> {
+    base: R,
+    m: usize,
+    /// Monic modulus `h` of degree `m` over the base ring, with `h̄`
+    /// irreducible over the base's residue field. Length `m+1`.
+    modulus: Vec<R::Elem>,
+    /// The base's residue field (cached for exceptional-point enumeration).
+    base_rf: Gfq,
+}
+
+/// Element: little-endian coefficients over the base ring, length `m`.
+pub type ExtElem<R> = Vec<<R as Ring>::Elem>;
+
+impl<R: ExtensibleRing> Extension<R> {
+    /// Build `R[y]/(h)` with the lexicographically-first valid modulus
+    /// (deterministic): `h̄` is the first monic irreducible of degree `m`
+    /// over the residue field of `R`, digit-lifted.
+    pub fn new(base: R, m: usize) -> Extension<R> {
+        assert!(m >= 1);
+        let base_rf = base.residue_field();
+        let hbar = find_irreducible(&base_rf, m);
+        let modulus: Vec<R::Elem> = hbar.iter().map(|c| base.lift_residue(c)).collect();
+        Extension { base, m, modulus, base_rf }
+    }
+
+    /// Smallest extension of `base` whose exceptional set has at least
+    /// `n_points` points, i.e. `m = ⌈log_{p^D}(n_points)⌉` (the paper's
+    /// `m = ⌈(log_p N)/d⌉`).
+    pub fn with_capacity(base: R, n_points: usize) -> Extension<R> {
+        let pd = base.residue_size();
+        let mut m = 1usize;
+        let mut cap = pd;
+        while cap < n_points as u128 {
+            m += 1;
+            cap = cap.saturating_mul(pd);
+        }
+        Extension::new(base, m)
+    }
+
+    pub fn base(&self) -> &R {
+        &self.base
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn modulus(&self) -> &[R::Elem] {
+        &self.modulus
+    }
+
+    /// Embed a base-ring element as the constant of the extension.
+    pub fn from_base(&self, c: &R::Elem) -> ExtElem<R> {
+        let mut v = vec![self.base.zero(); self.m];
+        v[0] = c.clone();
+        v
+    }
+
+    /// Element with the given low coefficients (padded with zeros).
+    pub fn from_coeffs(&self, coeffs: &[R::Elem]) -> ExtElem<R> {
+        assert!(coeffs.len() <= self.m);
+        let mut v = coeffs.to_vec();
+        v.resize(self.m, self.base.zero());
+        v
+    }
+
+    /// Coefficient view (the ψ side of RMFE reads these).
+    pub fn coeffs<'a>(&self, a: &'a ExtElem<R>) -> &'a [R::Elem] {
+        a
+    }
+
+    /// Split an extension matrix into its `m` coefficient planes over the
+    /// base ring (`planes[k][i,j] = M[i,j][k]`).
+    pub fn planes(&self, mat: &Matrix<ExtElem<R>>) -> Vec<Matrix<R::Elem>> {
+        (0..self.m).map(|k| mat.map(|e| e[k].clone())).collect()
+    }
+
+    /// Inverse of [`Extension::planes`] (takes the low `m` planes).
+    pub fn from_planes(&self, planes: &[Matrix<R::Elem>]) -> Matrix<ExtElem<R>> {
+        let (rows, cols) = (planes[0].rows, planes[0].cols);
+        Matrix::from_fn(rows, cols, |i, j| {
+            (0..self.m).map(|k| planes[k].at(i, j).clone()).collect()
+        })
+    }
+
+    /// Reduce a stack of `2m−1` coefficient-plane matrices by the monic
+    /// modulus, in place (the matrix-level analogue of [`Self::reduce_poly`]).
+    fn reduce_planes(&self, planes: &mut Vec<Matrix<R::Elem>>) {
+        let m = self.m;
+        let base = &self.base;
+        for k in (m..planes.len()).rev() {
+            let top = planes[k].clone();
+            for i in 0..m {
+                if !base.is_zero(&self.modulus[i]) {
+                    let neg = base.neg(&self.modulus[i]);
+                    planes[k - m + i].axpy(base, &neg, &top);
+                }
+            }
+        }
+        planes.truncate(m);
+    }
+
+    /// Reduce a raw product (length ≤ 2m−1) by the monic modulus.
+    fn reduce_poly(&self, mut prod: Vec<R::Elem>) -> ExtElem<R> {
+        let m = self.m;
+        for k in (m..prod.len()).rev() {
+            let c = prod[k].clone();
+            if self.base.is_zero(&c) {
+                continue;
+            }
+            prod[k] = self.base.zero();
+            for i in 0..m {
+                if !self.base.is_zero(&self.modulus[i]) {
+                    let delta = self.base.mul(&c, &self.modulus[i]);
+                    prod[k - m + i] = self.base.sub(&prod[k - m + i], &delta);
+                }
+            }
+        }
+        prod.truncate(m);
+        prod
+    }
+}
+
+impl<R: ExtensibleRing> Ring for Extension<R> {
+    type Elem = ExtElem<R>;
+
+    #[inline]
+    fn p(&self) -> u64 {
+        self.base.p()
+    }
+    #[inline]
+    fn e(&self) -> u32 {
+        self.base.e()
+    }
+    #[inline]
+    fn degree(&self) -> usize {
+        self.base.degree() * self.m
+    }
+
+    fn zero(&self) -> Self::Elem {
+        vec![self.base.zero(); self.m]
+    }
+
+    fn one(&self) -> Self::Elem {
+        self.from_base(&self.base.one())
+    }
+
+    fn add(&self, a: &Self::Elem, b: &Self::Elem) -> Self::Elem {
+        a.iter().zip(b).map(|(x, y)| self.base.add(x, y)).collect()
+    }
+
+    fn sub(&self, a: &Self::Elem, b: &Self::Elem) -> Self::Elem {
+        a.iter().zip(b).map(|(x, y)| self.base.sub(x, y)).collect()
+    }
+
+    fn neg(&self, a: &Self::Elem) -> Self::Elem {
+        a.iter().map(|x| self.base.neg(x)).collect()
+    }
+
+    fn mul(&self, a: &Self::Elem, b: &Self::Elem) -> Self::Elem {
+        let m = self.m;
+        if m == 1 {
+            return vec![self.base.mul(&a[0], &b[0])];
+        }
+        let mut prod = vec![self.base.zero(); 2 * m - 1];
+        for (i, ai) in a.iter().enumerate() {
+            if self.base.is_zero(ai) {
+                continue;
+            }
+            for (j, bj) in b.iter().enumerate() {
+                self.base.mul_add_assign(&mut prod[i + j], ai, bj);
+            }
+        }
+        self.reduce_poly(prod)
+    }
+
+    fn add_assign(&self, a: &mut Self::Elem, b: &Self::Elem) {
+        for (x, y) in a.iter_mut().zip(b) {
+            self.base.add_assign(x, y);
+        }
+    }
+
+    fn is_zero(&self, a: &Self::Elem) -> bool {
+        a.iter().all(|c| self.base.is_zero(c))
+    }
+
+    fn is_unit(&self, a: &Self::Elem) -> bool {
+        // unit ⟺ a ≢ 0 mod p ⟺ some coefficient is ≢ 0 mod p, and in a
+        // Galois ring "≢ 0 mod p" ⟺ unit (residue field).
+        a.iter().any(|c| self.base.is_unit(c))
+    }
+
+    fn exceptional_points(&self, n: usize) -> anyhow::Result<Vec<Self::Elem>> {
+        let cap = self.residue_size();
+        anyhow::ensure!(
+            (n as u128) <= cap,
+            "{} has only {} exceptional points, {} requested",
+            self.name(),
+            cap,
+            n
+        );
+        // Mixed-radix enumeration: index → m digits in base p^D, each digit
+        // lifted from the base's residue field. Two distinct indices differ in
+        // some digit, whose base-ring difference is a unit ⇒ the extension
+        // difference is ≢ 0 mod p ⇒ a unit.
+        let pd = self.base.residue_size();
+        let mut pts = Vec::with_capacity(n);
+        for idx in 0..n as u128 {
+            let mut v = Vec::with_capacity(self.m);
+            let mut rem = idx;
+            for _ in 0..self.m {
+                let digit = rem % pd;
+                rem /= pd;
+                v.push(self.base.lift_residue(&self.base_rf.element_from_index(digit)));
+            }
+            pts.push(v);
+        }
+        Ok(pts)
+    }
+
+    fn elem_bytes(&self) -> usize {
+        self.base.elem_bytes() * self.m
+    }
+
+    fn write_elem(&self, a: &Self::Elem, out: &mut Vec<u8>) {
+        for c in a {
+            self.base.write_elem(c, out);
+        }
+    }
+
+    fn read_elem(&self, buf: &[u8], pos: &mut usize) -> Self::Elem {
+        (0..self.m).map(|_| self.base.read_elem(buf, pos)).collect()
+    }
+
+    fn random(&self, rng: &mut Rng64) -> Self::Elem {
+        (0..self.m).map(|_| self.base.random(rng)).collect()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "GR({}^{}, {}·{}) [= {}[y]/h]",
+            self.p(),
+            self.e(),
+            self.base.degree(),
+            self.m,
+            self.base.name()
+        )
+    }
+
+    /// §Perf override: extension matmul as `m²` *base-ring* matmuls on
+    /// coefficient planes + one plane-level modulus reduction. The base
+    /// matmuls monomorphize to tight `u64` loops for `Zq`, removing all
+    /// per-element `Vec` allocation from the worker hot path
+    /// (~5× on GR(2^64,3) 128³ — see EXPERIMENTS.md §Perf).
+    fn mat_mul(
+        &self,
+        a: &Matrix<Self::Elem>,
+        b: &Matrix<Self::Elem>,
+    ) -> Matrix<Self::Elem> {
+        assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+        let m = self.m;
+        let base = &self.base;
+        let ap = self.planes(a);
+        let bp = self.planes(b);
+        let mut planes: Vec<Matrix<R::Elem>> = (0..2 * m - 1)
+            .map(|_| Matrix::zeros(base, a.rows, b.cols))
+            .collect();
+        for (i, api) in ap.iter().enumerate() {
+            for (j, bpj) in bp.iter().enumerate() {
+                let prod = base.mat_mul(api, bpj);
+                planes[i + j].add_assign(base, &prod);
+            }
+        }
+        self.reduce_planes(&mut planes);
+        self.from_planes(&planes)
+    }
+
+    // NOTE (§Perf iteration 3, reverted): a plane-decomposed `mat_axpy`
+    // override was measured ~1.3–1.6× SLOWER than the default elementwise
+    // loop (the plane extraction + 2m−1 temporaries cost more memory traffic
+    // than the per-element schoolbook saves). The default stands; see
+    // EXPERIMENTS.md §Perf for the measurements.
+}
+
+/// `Extension<Zq>` can itself serve as a tower base (needed for concatenated
+/// RMFEs, Lemma II.5): with scalar base coefficients the residue field is the
+/// flat `GF(p)[y]/(h̄)`, directly expressible as a [`Gfq`]. Towers over
+/// `Extension<GaloisRing>` would need a minimal-polynomial computation and
+/// are not required by any construction in the paper.
+impl ExtensibleRing for Extension<Zq> {
+    fn residue_field(&self) -> Gfq {
+        let p = self.p();
+        let modulus: Vec<u64> = self.modulus.iter().map(|c| c % p).collect();
+        Gfq::new(p, modulus)
+    }
+    fn lift_residue(&self, r: &GfqElem) -> ExtElem<Zq> {
+        debug_assert_eq!(r.len(), self.m);
+        r.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::traits::is_exceptional_sequence;
+    use crate::ring::zq::Zq;
+    use crate::ring::galois::GaloisRing;
+
+    /// GR(2^64, 3) as a degree-3 extension of Z_2^64 — the paper's 8-worker ring.
+    fn gr64_3() -> Extension<Zq> {
+        Extension::new(Zq::z2e(64), 3)
+    }
+
+    #[test]
+    fn construct_and_sizes() {
+        let r = gr64_3();
+        assert_eq!(r.degree(), 3);
+        assert_eq!(r.residue_size(), 8);
+        assert_eq!(r.elem_bytes(), 24);
+    }
+
+    #[test]
+    fn capacity_picks_smallest_m() {
+        // N=8 workers need m=3 over Z_2^e; N=16 need m=4 (paper §V.A).
+        assert_eq!(Extension::with_capacity(Zq::z2e(64), 8).m(), 3);
+        assert_eq!(Extension::with_capacity(Zq::z2e(64), 16).m(), 4);
+        assert_eq!(Extension::with_capacity(Zq::z2e(64), 32).m(), 5);
+        assert_eq!(Extension::with_capacity(Zq::z2e(64), 2).m(), 1);
+        // over GR(2^e,2): residue 4, N=16 → m=2
+        let base = GaloisRing::new(2, 32, 2);
+        assert_eq!(Extension::with_capacity(base, 16).m(), 2);
+    }
+
+    #[test]
+    fn ring_axioms_smoke() {
+        let r = gr64_3();
+        let mut rng = Rng64::seeded(21);
+        for _ in 0..40 {
+            let a = r.random(&mut rng);
+            let b = r.random(&mut rng);
+            let c = r.random(&mut rng);
+            assert_eq!(r.mul(&a, &b), r.mul(&b, &a));
+            assert_eq!(r.mul(&r.mul(&a, &b), &c), r.mul(&a, &r.mul(&b, &c)));
+            assert_eq!(
+                r.mul(&a, &r.add(&b, &c)),
+                r.add(&r.mul(&a, &b), &r.mul(&a, &c))
+            );
+            assert_eq!(r.mul(&a, &r.one()), a);
+        }
+    }
+
+    #[test]
+    fn inverses_in_tower() {
+        let r = gr64_3();
+        let mut rng = Rng64::seeded(22);
+        let mut tested = 0;
+        while tested < 20 {
+            let a = r.random(&mut rng);
+            if !r.is_unit(&a) {
+                continue;
+            }
+            let inv = r.inv(&a).unwrap();
+            assert_eq!(r.mul(&a, &inv), r.one());
+            tested += 1;
+        }
+    }
+
+    #[test]
+    fn inverses_in_tower_over_galois_base() {
+        // GR(2^8, 2)[y]/(h), m=3 — residue field GF(64).
+        let base = GaloisRing::new(2, 8, 2);
+        let r = Extension::new(base, 3);
+        assert_eq!(r.degree(), 6);
+        let mut rng = Rng64::seeded(23);
+        let mut tested = 0;
+        while tested < 15 {
+            let a = r.random(&mut rng);
+            if !r.is_unit(&a) {
+                continue;
+            }
+            assert_eq!(r.mul(&a, &r.inv(&a).unwrap()), r.one());
+            tested += 1;
+        }
+    }
+
+    #[test]
+    fn exceptional_points_gr64_3() {
+        let r = gr64_3();
+        let pts = r.exceptional_points(8).unwrap();
+        assert_eq!(pts.len(), 8);
+        assert!(is_exceptional_sequence(&r, &pts));
+        assert!(r.exceptional_points(9).is_err());
+    }
+
+    #[test]
+    fn exceptional_points_gr64_4_sixteen_workers() {
+        let r = Extension::new(Zq::z2e(64), 4);
+        let pts = r.exceptional_points(16).unwrap();
+        assert!(is_exceptional_sequence(&r, &pts));
+    }
+
+    #[test]
+    fn exceptional_points_tower_base_gr() {
+        let base = GaloisRing::new(2, 16, 2);
+        let r = Extension::new(base, 2); // residue GF(16)
+        let pts = r.exceptional_points(16).unwrap();
+        assert!(is_exceptional_sequence(&r, &pts));
+    }
+
+    #[test]
+    fn base_embedding_homomorphic() {
+        let r = gr64_3();
+        let zq = Zq::z2e(64);
+        let a = 0xDEAD_BEEFu64;
+        let b = 0x1234u64;
+        assert_eq!(
+            r.mul(&r.from_base(&a), &r.from_base(&b)),
+            r.from_base(&zq.mul(&a, &b))
+        );
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let r = gr64_3();
+        let mut rng = Rng64::seeded(24);
+        let a = r.random(&mut rng);
+        let mut buf = Vec::new();
+        r.write_elem(&a, &mut buf);
+        assert_eq!(buf.len(), 24);
+        let mut pos = 0;
+        assert_eq!(r.read_elem(&buf, &mut pos), a);
+    }
+
+    #[test]
+    fn odd_characteristic_tower() {
+        let r = Extension::new(Zq::new(3, 3), 2); // GR(27, 2)
+        let pts = r.exceptional_points(9).unwrap();
+        assert!(is_exceptional_sequence(&r, &pts));
+        let mut rng = Rng64::seeded(25);
+        for _ in 0..10 {
+            let a = r.random(&mut rng);
+            if r.is_unit(&a) {
+                assert_eq!(r.mul(&a, &r.inv(&a).unwrap()), r.one());
+            }
+        }
+    }
+}

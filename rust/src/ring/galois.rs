@@ -1,0 +1,416 @@
+//! `GaloisRing` — `GR(p^e, d) = Z_{p^e}[x]/(f(x))` with `f` monic of degree
+//! `d` and `f̄ = f mod p` irreducible over `GF(p)` (Section II-B).
+//!
+//! Elements are little-endian coefficient vectors of length `d` over
+//! [`Zq`]. Multiplication is schoolbook + reduction by the monic modulus.
+//! Inversion comes from the generic residue-Fermat + Newton–Hensel routine in
+//! the [`Ring`] trait.
+
+use super::gfp::{Gfq, GfqElem};
+use super::irreducible::find_irreducible;
+use super::traits::Ring;
+use super::zq::Zq;
+use crate::util::rng::Rng64;
+
+/// A ring that can serve as the base of a tower [`super::extension::Extension`]:
+/// it exposes its residue field as a concrete [`Gfq`] and can lift residue
+/// elements back into itself (digit lift).
+pub trait ExtensibleRing: Ring {
+    /// The residue field `GF(p^D)` with its canonical modulus.
+    fn residue_field(&self) -> Gfq;
+    /// Digit lift of a residue element (coefficients in `{0..p−1}` reused
+    /// verbatim as ring coefficients).
+    fn lift_residue(&self, r: &GfqElem) -> Self::Elem;
+}
+
+impl ExtensibleRing for Zq {
+    fn residue_field(&self) -> Gfq {
+        Gfq::new(self.p(), vec![0, 1]) // GF(p) presented as GF(p)[x]/(x)
+    }
+    fn lift_residue(&self, r: &GfqElem) -> u64 {
+        debug_assert_eq!(r.len(), 1);
+        r[0]
+    }
+}
+
+/// The Galois ring `GR(p^e, d)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GaloisRing {
+    zq: Zq,
+    d: usize,
+    /// Monic modulus, length `d+1`, coefficients in `Z_{p^e}` (actually in
+    /// `{0..p−1}` — direct lift of the irreducible residue polynomial).
+    modulus: Vec<u64>,
+}
+
+/// Element of `GR(p^e, d)`: little-endian coefficients, length = `d`.
+pub type GrElem = Vec<u64>;
+
+impl GaloisRing {
+    /// Construct `GR(p^e, d)` with the lexicographically-first irreducible
+    /// modulus (deterministic across runs).
+    pub fn new(p: u64, e: u32, d: usize) -> GaloisRing {
+        assert!(d >= 1);
+        let zq = Zq::new(p, e);
+        let gfp = Gfq::new(p, vec![0, 1]);
+        let hbar = find_irreducible(&gfp, d);
+        let modulus: Vec<u64> = hbar.iter().map(|c| c[0]).collect();
+        GaloisRing { zq, d, modulus }
+    }
+
+    /// Construct with an explicit monic modulus (must be irreducible mod p —
+    /// verified).
+    pub fn with_modulus(p: u64, e: u32, modulus: Vec<u64>) -> anyhow::Result<GaloisRing> {
+        let zq = Zq::new(p, e);
+        let d = modulus.len() - 1;
+        anyhow::ensure!(d >= 1, "modulus must have degree >= 1");
+        anyhow::ensure!(zq.reduce(modulus[d]) == 1, "modulus must be monic");
+        let gfp = Gfq::new(p, vec![0, 1]);
+        let hbar: Vec<GfqElem> = modulus.iter().map(|&c| vec![c % p]).collect();
+        anyhow::ensure!(
+            super::irreducible::is_irreducible(&gfp, &hbar),
+            "modulus is not irreducible mod p"
+        );
+        Ok(GaloisRing { zq, d, modulus })
+    }
+
+    /// The coefficient ring `Z_{p^e}`.
+    pub fn coeff_ring(&self) -> &Zq {
+        &self.zq
+    }
+
+    /// The defining modulus (monic, length d+1).
+    pub fn modulus(&self) -> &[u64] {
+        &self.modulus
+    }
+
+    /// Embed a scalar `c ∈ Z_{p^e}` as the constant element.
+    pub fn from_scalar(&self, c: u64) -> GrElem {
+        let mut v = vec![0u64; self.d];
+        v[0] = self.zq.reduce(c);
+        v
+    }
+
+    /// Element from coefficient slice (reduced; padded/truncated to d).
+    pub fn from_coeffs(&self, coeffs: &[u64]) -> GrElem {
+        let mut v = vec![0u64; self.d];
+        for (i, &c) in coeffs.iter().enumerate().take(self.d) {
+            v[i] = self.zq.reduce(c);
+        }
+        v
+    }
+
+    /// Reduce a raw product (length ≤ 2d−1) by the monic modulus, in place,
+    /// returning the low `d` coefficients.
+    fn reduce_poly(&self, mut prod: Vec<u64>) -> GrElem {
+        let d = self.d;
+        for k in (d..prod.len()).rev() {
+            let c = prod[k];
+            if c == 0 {
+                continue;
+            }
+            prod[k] = 0;
+            // x^k ≡ −Σ_{i<d} f_i x^{k−d+i}  (f monic)
+            for i in 0..d {
+                if self.modulus[i] != 0 {
+                    let delta = self.zq.mul(&c, &self.modulus[i]);
+                    prod[k - d + i] = self.zq.sub(&prod[k - d + i], &delta);
+                }
+            }
+        }
+        prod.truncate(d);
+        prod
+    }
+
+    /// The Teichmüller lift of a residue-field element `r`: the unique
+    /// element `ζ` with `ζ^(p^d) = ζ` reducing to `r` mod p. Computed as
+    /// `lift(r)^(p^d)` iterated `e−1` times. (Used in tests; the exceptional
+    /// sets used by the codes are plain digit lifts, which are cheaper.)
+    pub fn teichmuller(&self, r: &GfqElem) -> GrElem {
+        let mut t = self.lift_residue(r);
+        let pd = (self.p() as u128).pow(self.d as u32);
+        for _ in 0..self.e().saturating_sub(1) {
+            t = self.pow_u128(&t, pd);
+        }
+        t
+    }
+}
+
+impl Ring for GaloisRing {
+    type Elem = GrElem;
+
+    #[inline]
+    fn p(&self) -> u64 {
+        self.zq.p()
+    }
+    #[inline]
+    fn e(&self) -> u32 {
+        self.zq.e()
+    }
+    #[inline]
+    fn degree(&self) -> usize {
+        self.d
+    }
+
+    fn zero(&self) -> GrElem {
+        vec![0; self.d]
+    }
+
+    fn one(&self) -> GrElem {
+        self.from_scalar(1)
+    }
+
+    fn add(&self, a: &GrElem, b: &GrElem) -> GrElem {
+        a.iter().zip(b).map(|(x, y)| self.zq.add(x, y)).collect()
+    }
+
+    fn sub(&self, a: &GrElem, b: &GrElem) -> GrElem {
+        a.iter().zip(b).map(|(x, y)| self.zq.sub(x, y)).collect()
+    }
+
+    fn neg(&self, a: &GrElem) -> GrElem {
+        a.iter().map(|x| self.zq.neg(x)).collect()
+    }
+
+    fn mul(&self, a: &GrElem, b: &GrElem) -> GrElem {
+        let d = self.d;
+        if d == 1 {
+            return vec![self.zq.mul(&a[0], &b[0])];
+        }
+        let mut prod = vec![0u64; 2 * d - 1];
+        for (i, ai) in a.iter().enumerate() {
+            if *ai == 0 {
+                continue;
+            }
+            for (j, bj) in b.iter().enumerate() {
+                self.zq.mul_add_assign(&mut prod[i + j], ai, bj);
+            }
+        }
+        self.reduce_poly(prod)
+    }
+
+    fn add_assign(&self, a: &mut GrElem, b: &GrElem) {
+        for (x, y) in a.iter_mut().zip(b) {
+            self.zq.add_assign(x, y);
+        }
+    }
+
+    fn is_zero(&self, a: &GrElem) -> bool {
+        a.iter().all(|&c| c == 0)
+    }
+
+    fn is_unit(&self, a: &GrElem) -> bool {
+        // unit ⟺ a ≢ 0 (mod p) ⟺ some coefficient not divisible by p
+        a.iter().any(|&c| c % self.p() != 0)
+    }
+
+    fn exceptional_points(&self, n: usize) -> anyhow::Result<Vec<GrElem>> {
+        let pd = self.residue_size();
+        anyhow::ensure!(
+            (n as u128) <= pd,
+            "{} has only {} exceptional points, {} requested",
+            self.name(),
+            pd,
+            n
+        );
+        let rf = self.residue_field();
+        Ok((0..n as u128)
+            .map(|i| self.lift_residue(&rf.element_from_index(i)))
+            .collect())
+    }
+
+    fn elem_bytes(&self) -> usize {
+        8 * self.d
+    }
+
+    fn write_elem(&self, a: &GrElem, out: &mut Vec<u8>) {
+        for c in a {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+
+    fn read_elem(&self, buf: &[u8], pos: &mut usize) -> GrElem {
+        let mut v = Vec::with_capacity(self.d);
+        for _ in 0..self.d {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&buf[*pos..*pos + 8]);
+            *pos += 8;
+            v.push(u64::from_le_bytes(b));
+        }
+        v
+    }
+
+    fn random(&self, rng: &mut Rng64) -> GrElem {
+        (0..self.d).map(|_| self.zq.random(rng)).collect()
+    }
+
+    fn name(&self) -> String {
+        format!("GR({}^{}, {})", self.p(), self.e(), self.d)
+    }
+}
+
+impl ExtensibleRing for GaloisRing {
+    fn residue_field(&self) -> Gfq {
+        let p = self.p();
+        let hbar: Vec<GfqElem> = self.modulus.iter().map(|&c| vec![c % p]).collect();
+        // Gfq wants plain u64 coefficients for its modulus over GF(p):
+        let modulus: Vec<u64> = hbar.iter().map(|c| c[0]).collect();
+        Gfq::new(p, modulus)
+    }
+    fn lift_residue(&self, r: &GfqElem) -> GrElem {
+        debug_assert_eq!(r.len(), self.d);
+        r.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::traits::is_exceptional_sequence;
+
+    fn gr_2e64_3() -> GaloisRing {
+        GaloisRing::new(2, 64, 3)
+    }
+
+    #[test]
+    fn construct_standard_rings() {
+        // The paper's experimental rings.
+        for d in [1usize, 3, 4, 5] {
+            let r = GaloisRing::new(2, 64, d);
+            assert_eq!(r.degree(), d);
+            assert_eq!(r.residue_size(), 1u128 << d);
+        }
+        let r = GaloisRing::new(3, 2, 2);
+        assert_eq!(r.residue_size(), 9);
+    }
+
+    #[test]
+    fn ring_axioms_smoke() {
+        let r = gr_2e64_3();
+        let mut rng = Rng64::seeded(11);
+        for _ in 0..50 {
+            let a = r.random(&mut rng);
+            let b = r.random(&mut rng);
+            let c = r.random(&mut rng);
+            // commutativity, associativity, distributivity
+            assert_eq!(r.add(&a, &b), r.add(&b, &a));
+            assert_eq!(r.mul(&a, &b), r.mul(&b, &a));
+            assert_eq!(r.mul(&r.mul(&a, &b), &c), r.mul(&a, &r.mul(&b, &c)));
+            assert_eq!(
+                r.mul(&a, &r.add(&b, &c)),
+                r.add(&r.mul(&a, &b), &r.mul(&a, &c))
+            );
+            // identities
+            assert_eq!(r.add(&a, &r.zero()), a);
+            assert_eq!(r.mul(&a, &r.one()), a);
+            assert_eq!(r.add(&a, &r.neg(&a)), r.zero());
+        }
+    }
+
+    #[test]
+    fn inverses() {
+        let r = gr_2e64_3();
+        let mut rng = Rng64::seeded(12);
+        let mut tested = 0;
+        while tested < 25 {
+            let a = r.random(&mut rng);
+            if !r.is_unit(&a) {
+                assert!(r.inv(&a).is_none());
+                continue;
+            }
+            let inv = r.inv(&a).unwrap();
+            assert_eq!(r.mul(&a, &inv), r.one());
+            tested += 1;
+        }
+    }
+
+    #[test]
+    fn inverses_odd_characteristic() {
+        let r = GaloisRing::new(3, 4, 2); // GR(81, 2)
+        let mut rng = Rng64::seeded(13);
+        for _ in 0..25 {
+            let a = r.random(&mut rng);
+            if r.is_unit(&a) {
+                assert_eq!(r.mul(&a, &r.inv(&a).unwrap()), r.one());
+            }
+        }
+    }
+
+    #[test]
+    fn galois_field_case() {
+        // GR(p, d) = GF(p^d): every nonzero element is a unit.
+        let r = GaloisRing::new(2, 1, 4);
+        let mut rng = Rng64::seeded(14);
+        for _ in 0..30 {
+            let a = r.random(&mut rng);
+            if !r.is_zero(&a) {
+                assert!(r.is_unit(&a));
+                assert_eq!(r.mul(&a, &r.inv(&a).unwrap()), r.one());
+            }
+        }
+    }
+
+    #[test]
+    fn exceptional_set() {
+        let r = gr_2e64_3();
+        let pts = r.exceptional_points(8).unwrap(); // 2^3 = 8 available
+        assert_eq!(pts.len(), 8);
+        assert!(is_exceptional_sequence(&r, &pts));
+        assert!(r.exceptional_points(9).is_err());
+    }
+
+    #[test]
+    fn exceptional_set_gr_2e64_4() {
+        let r = GaloisRing::new(2, 64, 4);
+        let pts = r.exceptional_points(16).unwrap();
+        assert!(is_exceptional_sequence(&r, &pts));
+    }
+
+    #[test]
+    fn teichmuller_fixed_point() {
+        let r = gr_2e64_3();
+        let rf = r.residue_field();
+        for i in 1..8u128 {
+            let z = r.teichmuller(&rf.element_from_index(i));
+            let pd = 8u128;
+            assert_eq!(r.pow_u128(&z, pd), z, "ζ^(p^d) = ζ");
+            assert!(r.is_unit(&z));
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let r = gr_2e64_3();
+        let mut rng = Rng64::seeded(15);
+        let a = r.random(&mut rng);
+        let mut buf = Vec::new();
+        r.write_elem(&a, &mut buf);
+        assert_eq!(buf.len(), r.elem_bytes());
+        let mut pos = 0;
+        assert_eq!(r.read_elem(&buf, &mut pos), a);
+    }
+
+    #[test]
+    fn scalar_embedding_homomorphic() {
+        let r = gr_2e64_3();
+        let zq = r.coeff_ring().clone();
+        let a = 0xABCDu64;
+        let b = 0x1234_5678u64;
+        assert_eq!(
+            r.mul(&r.from_scalar(a), &r.from_scalar(b)),
+            r.from_scalar(zq.mul(&a, &b))
+        );
+        assert_eq!(
+            r.add(&r.from_scalar(a), &r.from_scalar(b)),
+            r.from_scalar(zq.add(&a, &b))
+        );
+    }
+
+    #[test]
+    fn with_modulus_validates() {
+        // x^2 + 1 is reducible mod 2 — must be rejected.
+        assert!(GaloisRing::with_modulus(2, 64, vec![1, 0, 1]).is_err());
+        // x^2 + x + 1 is fine.
+        assert!(GaloisRing::with_modulus(2, 64, vec![1, 1, 1]).is_ok());
+    }
+}

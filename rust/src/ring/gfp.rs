@@ -1,0 +1,374 @@
+//! Residue-field machinery: `GF(p)`, `GF(p^d)` and polynomial arithmetic over
+//! them. Used to *certify* defining polynomials (irreducibility mod `p`) when
+//! constructing Galois rings and towers — not on any hot path.
+
+/// The prime field `GF(p)`, elements as `u64 < p`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Gfp {
+    pub p: u64,
+}
+
+impl Gfp {
+    pub fn new(p: u64) -> Gfp {
+        assert!(super::zq::is_small_prime(p), "{p} not prime");
+        Gfp { p }
+    }
+
+    #[inline]
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        let s = a + b;
+        if s >= self.p {
+            s - self.p
+        } else {
+            s
+        }
+    }
+
+    #[inline]
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        if a >= b {
+            a - b
+        } else {
+            a + self.p - b
+        }
+    }
+
+    #[inline]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        ((a as u128 * b as u128) % self.p as u128) as u64
+    }
+
+    pub fn pow(&self, mut a: u64, mut n: u128) -> u64 {
+        let mut acc = 1u64;
+        while n > 0 {
+            if n & 1 == 1 {
+                acc = self.mul(acc, a);
+            }
+            n >>= 1;
+            if n > 0 {
+                a = self.mul(a, a);
+            }
+        }
+        acc
+    }
+
+    /// Inverse by Fermat (p is prime).
+    pub fn inv(&self, a: u64) -> u64 {
+        assert!(a % self.p != 0, "zero has no inverse");
+        self.pow(a, (self.p - 2) as u128)
+    }
+}
+
+/// The field `GF(p^d) = GF(p)[x]/(f̄)`, elements as coefficient vectors of
+/// length `d` (little-endian: index i ↔ coefficient of x^i).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Gfq {
+    pub fp: Gfp,
+    pub d: usize,
+    /// Monic modulus of degree `d`, length `d+1`, coefficients `< p`.
+    pub modulus: Vec<u64>,
+}
+
+pub type GfqElem = Vec<u64>;
+
+impl Gfq {
+    pub fn new(p: u64, modulus: Vec<u64>) -> Gfq {
+        let d = modulus.len() - 1;
+        assert!(d >= 1);
+        assert_eq!(modulus[d], 1, "modulus must be monic");
+        Gfq { fp: Gfp::new(p), d, modulus }
+    }
+
+    /// Field size `q = p^d`.
+    pub fn size(&self) -> u128 {
+        (self.fp.p as u128).pow(self.d as u32)
+    }
+
+    pub fn zero(&self) -> GfqElem {
+        vec![0; self.d]
+    }
+
+    pub fn one(&self) -> GfqElem {
+        let mut v = vec![0; self.d];
+        v[0] = 1;
+        v
+    }
+
+    pub fn is_zero(&self, a: &GfqElem) -> bool {
+        a.iter().all(|&c| c == 0)
+    }
+
+    pub fn add(&self, a: &GfqElem, b: &GfqElem) -> GfqElem {
+        a.iter().zip(b).map(|(&x, &y)| self.fp.add(x, y)).collect()
+    }
+
+    pub fn sub(&self, a: &GfqElem, b: &GfqElem) -> GfqElem {
+        a.iter().zip(b).map(|(&x, &y)| self.fp.sub(x, y)).collect()
+    }
+
+    pub fn scale(&self, a: &GfqElem, s: u64) -> GfqElem {
+        a.iter().map(|&x| self.fp.mul(x, s)).collect()
+    }
+
+    /// Schoolbook multiply + reduction by the modulus.
+    pub fn mul(&self, a: &GfqElem, b: &GfqElem) -> GfqElem {
+        let d = self.d;
+        let mut prod = vec![0u64; 2 * d - 1];
+        for (i, &ai) in a.iter().enumerate() {
+            if ai == 0 {
+                continue;
+            }
+            for (j, &bj) in b.iter().enumerate() {
+                prod[i + j] = self.fp.add(prod[i + j], self.fp.mul(ai, bj));
+            }
+        }
+        // Reduce: x^(d+k) ≡ −(modulus minus leading) · x^k
+        for k in (d..2 * d - 1).rev() {
+            let c = prod[k];
+            if c == 0 {
+                continue;
+            }
+            prod[k] = 0;
+            for (d_i, m) in self.modulus.iter().enumerate().take(d) {
+                let delta = self.fp.mul(c, *m);
+                prod[k - d + d_i] = self.fp.sub(prod[k - d + d_i], delta);
+            }
+        }
+        prod.truncate(d);
+        prod
+    }
+
+    pub fn pow(&self, a: &GfqElem, mut n: u128) -> GfqElem {
+        let mut base = a.clone();
+        let mut acc = self.one();
+        while n > 0 {
+            if n & 1 == 1 {
+                acc = self.mul(&acc, &base);
+            }
+            n >>= 1;
+            if n > 0 {
+                base = self.mul(&base, &base);
+            }
+        }
+        acc
+    }
+
+    /// Inverse by Fermat: `a^(q−2)`.
+    pub fn inv(&self, a: &GfqElem) -> GfqElem {
+        assert!(!self.is_zero(a), "zero has no inverse");
+        self.pow(a, self.size() - 2)
+    }
+
+    /// Enumerate the i-th field element as base-p digits (used for
+    /// deterministic exceptional-point lifts and polynomial search).
+    pub fn element_from_index(&self, mut idx: u128) -> GfqElem {
+        let mut v = vec![0u64; self.d];
+        for c in v.iter_mut() {
+            *c = (idx % self.fp.p as u128) as u64;
+            idx /= self.fp.p as u128;
+        }
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Polynomials over GF(q) — only what Rabin's irreducibility test needs.
+// Representation: little-endian coefficient vectors, no trailing zeros
+// (except the zero polynomial = empty vec).
+// ---------------------------------------------------------------------------
+
+/// Trim trailing zeros.
+pub fn fq_poly_trim(f: &Gfq, mut a: Vec<GfqElem>) -> Vec<GfqElem> {
+    while let Some(last) = a.last() {
+        if f.is_zero(last) {
+            a.pop();
+        } else {
+            break;
+        }
+    }
+    a
+}
+
+pub fn fq_poly_is_zero(a: &[GfqElem]) -> bool {
+    a.is_empty()
+}
+
+pub fn fq_poly_deg(a: &[GfqElem]) -> isize {
+    a.len() as isize - 1
+}
+
+pub fn fq_poly_add(f: &Gfq, a: &[GfqElem], b: &[GfqElem]) -> Vec<GfqElem> {
+    let n = a.len().max(b.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = a.get(i).cloned().unwrap_or_else(|| f.zero());
+        let y = b.get(i).cloned().unwrap_or_else(|| f.zero());
+        out.push(f.add(&x, &y));
+    }
+    fq_poly_trim(f, out)
+}
+
+pub fn fq_poly_sub(f: &Gfq, a: &[GfqElem], b: &[GfqElem]) -> Vec<GfqElem> {
+    let n = a.len().max(b.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = a.get(i).cloned().unwrap_or_else(|| f.zero());
+        let y = b.get(i).cloned().unwrap_or_else(|| f.zero());
+        out.push(f.sub(&x, &y));
+    }
+    fq_poly_trim(f, out)
+}
+
+pub fn fq_poly_mul(f: &Gfq, a: &[GfqElem], b: &[GfqElem]) -> Vec<GfqElem> {
+    if a.is_empty() || b.is_empty() {
+        return vec![];
+    }
+    let mut out = vec![f.zero(); a.len() + b.len() - 1];
+    for (i, ai) in a.iter().enumerate() {
+        if f.is_zero(ai) {
+            continue;
+        }
+        for (j, bj) in b.iter().enumerate() {
+            let t = f.mul(ai, bj);
+            out[i + j] = f.add(&out[i + j], &t);
+        }
+    }
+    fq_poly_trim(f, out)
+}
+
+/// Remainder `a mod m`; `m` need not be monic (leading coeff inverted — GF(q)
+/// is a field).
+pub fn fq_poly_rem(f: &Gfq, a: &[GfqElem], m: &[GfqElem]) -> Vec<GfqElem> {
+    assert!(!m.is_empty(), "division by zero polynomial");
+    let mut r: Vec<GfqElem> = a.to_vec();
+    let dm = m.len() - 1;
+    let lead_inv = f.inv(m.last().unwrap());
+    while r.len() > dm {
+        r = fq_poly_trim(f, r);
+        if r.len() <= dm {
+            break;
+        }
+        let k = r.len() - 1 - dm; // shift
+        let c = f.mul(r.last().unwrap(), &lead_inv);
+        for (i, mi) in m.iter().enumerate() {
+            let t = f.mul(&c, mi);
+            r[k + i] = f.sub(&r[k + i], &t);
+        }
+        r = fq_poly_trim(f, r);
+    }
+    fq_poly_trim(f, r)
+}
+
+/// `base^n mod m` by square-and-multiply with polynomial arithmetic.
+pub fn fq_poly_powmod(f: &Gfq, base: &[GfqElem], mut n: u128, m: &[GfqElem]) -> Vec<GfqElem> {
+    let mut b = fq_poly_rem(f, base, m);
+    let mut acc = vec![f.one()]; // the constant polynomial 1
+    while n > 0 {
+        if n & 1 == 1 {
+            acc = fq_poly_rem(f, &fq_poly_mul(f, &acc, &b), m);
+        }
+        n >>= 1;
+        if n > 0 {
+            b = fq_poly_rem(f, &fq_poly_mul(f, &b, &b), m);
+        }
+    }
+    acc
+}
+
+/// Monic gcd of two polynomials over GF(q).
+pub fn fq_poly_gcd(f: &Gfq, a: &[GfqElem], b: &[GfqElem]) -> Vec<GfqElem> {
+    let mut x = fq_poly_trim(f, a.to_vec());
+    let mut y = fq_poly_trim(f, b.to_vec());
+    while !y.is_empty() {
+        let r = fq_poly_rem(f, &x, &y);
+        x = y;
+        y = r;
+    }
+    if let Some(last) = x.last().cloned() {
+        let li = f.inv(&last);
+        for c in x.iter_mut() {
+            *c = f.mul(c, &li);
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gf4() -> Gfq {
+        // GF(4) = GF(2)[x]/(x^2 + x + 1)
+        Gfq::new(2, vec![1, 1, 1])
+    }
+
+    #[test]
+    fn gfp_basics() {
+        let f = Gfp::new(7);
+        assert_eq!(f.add(5, 4), 2);
+        assert_eq!(f.sub(2, 5), 4);
+        assert_eq!(f.mul(3, 5), 1);
+        assert_eq!(f.inv(3), 5);
+        assert_eq!(f.pow(3, 6), 1); // Fermat
+    }
+
+    #[test]
+    fn gf4_is_a_field() {
+        let f = gf4();
+        assert_eq!(f.size(), 4);
+        // Every nonzero element invertible, x * x = x + 1 etc.
+        for i in 1..4u128 {
+            let a = f.element_from_index(i);
+            let inv = f.inv(&a);
+            assert_eq!(f.mul(&a, &inv), f.one());
+        }
+        let x = vec![0, 1];
+        let x2 = f.mul(&x, &x);
+        assert_eq!(x2, vec![1, 1]); // x^2 = x + 1
+    }
+
+    #[test]
+    fn gf4_mult_order() {
+        let f = gf4();
+        let x = vec![0u64, 1];
+        assert_eq!(f.pow(&x, 3), f.one()); // |GF(4)*| = 3
+        assert_ne!(f.pow(&x, 1), f.one());
+    }
+
+    #[test]
+    fn gf9() {
+        // GF(9) = GF(3)[x]/(x^2 + 1)
+        let f = Gfq::new(3, vec![1, 0, 1]);
+        assert_eq!(f.size(), 9);
+        for i in 1..9u128 {
+            let a = f.element_from_index(i);
+            assert_eq!(f.mul(&a, &f.inv(&a)), f.one());
+        }
+    }
+
+    #[test]
+    fn poly_rem_and_gcd() {
+        let f = gf4();
+        // a = (y^2 + 1), m = (y + 1) over GF(4): a(1) = 0, so rem = 0
+        let one = f.one();
+        let a = vec![one.clone(), f.zero(), one.clone()];
+        let m = vec![one.clone(), one.clone()];
+        let r = fq_poly_rem(&f, &a, &m);
+        assert!(fq_poly_is_zero(&r));
+        let g = fq_poly_gcd(&f, &a, &m);
+        assert_eq!(fq_poly_deg(&g), 1);
+    }
+
+    #[test]
+    fn powmod_fermat_over_gf2() {
+        // Over GF(2)[y] mod the irreducible y^3+y+1: y^(2^3) ≡ y.
+        let f = Gfq::new(2, vec![1, 1]); // dummy GF(2) rep as Gfq with d=1: x+1 modulus
+        let one = f.one();
+        let zero = f.zero();
+        // m(y) = y^3 + y + 1
+        let m = vec![one.clone(), one.clone(), zero.clone(), one.clone()];
+        let y = vec![zero.clone(), one.clone()];
+        let yq = fq_poly_powmod(&f, &y, 8, &m);
+        assert_eq!(fq_poly_trim(&f, yq), fq_poly_trim(&f, y));
+    }
+}

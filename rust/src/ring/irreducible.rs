@@ -1,0 +1,184 @@
+//! Deterministic search + certification of irreducible polynomials over
+//! `GF(q)` (Rabin's test). Used when constructing `GR(p^e, d)` moduli and
+//! tower moduli `h(y)` with `h̄` irreducible over the residue field.
+
+use super::gfp::{
+    fq_poly_gcd, fq_poly_powmod, fq_poly_sub, fq_poly_trim, Gfq, GfqElem,
+};
+
+/// Prime factorization by trial division (arguments are tiny: extension
+/// degrees).
+pub fn prime_factors(mut n: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut d = 2u64;
+    while d * d <= n {
+        if n % d == 0 {
+            out.push(d);
+            while n % d == 0 {
+                n /= d;
+            }
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// Rabin irreducibility test for a monic polynomial `h` of degree `m ≥ 1`
+/// over `GF(q)` (given as coefficient vector of `GfqElem`s, length `m+1`).
+///
+/// `h` is irreducible iff `y^(q^m) ≡ y (mod h)` and for every prime `r | m`,
+/// `gcd(y^(q^(m/r)) − y, h) = 1`.
+pub fn is_irreducible(field: &Gfq, h: &[GfqElem]) -> bool {
+    let m = h.len() - 1;
+    assert!(m >= 1, "degree must be >= 1");
+    assert!(!field.is_zero(&h[m]), "polynomial must have nonzero leading term");
+    if m == 1 {
+        return true; // linear polynomials are always irreducible
+    }
+    let q = field.size();
+    let y: Vec<GfqElem> = vec![field.zero(), field.one()];
+
+    // frob^k(y) = y^(q^k) mod h, computed by k successive q-th powers.
+    let frob_iter = |k: usize| -> Vec<GfqElem> {
+        let mut t = y.clone();
+        for _ in 0..k {
+            t = fq_poly_powmod(field, &t, q, h);
+        }
+        t
+    };
+
+    // y^(q^m) ≡ y (mod h)?
+    let ym = frob_iter(m);
+    if fq_poly_trim(field, fq_poly_sub(field, &ym, &y)) != Vec::<GfqElem>::new() {
+        return false;
+    }
+    // gcd checks for maximal proper sub-degrees.
+    for r in prime_factors(m as u64) {
+        let k = m / r as usize;
+        let yk = frob_iter(k);
+        let diff = fq_poly_sub(field, &yk, &y);
+        let g = fq_poly_gcd(field, &diff, h);
+        if g.len() != 1 {
+            return false; // nontrivial gcd ⇒ reducible
+        }
+    }
+    true
+}
+
+/// Find the lexicographically-first monic irreducible polynomial of degree
+/// `m` over `GF(q)`. Deterministic, so every run of the system builds the
+/// same ring. Density of irreducibles is ≈ 1/m, so the scan is instant for
+/// the degrees we use (≤ 64).
+pub fn find_irreducible(field: &Gfq, m: usize) -> Vec<GfqElem> {
+    assert!(m >= 1);
+    let q = field.size();
+    // Enumerate the m lower coefficients as base-q digits of a counter.
+    let total = q.checked_pow(m as u32);
+    let mut idx: u128 = 0;
+    loop {
+        if let Some(t) = total {
+            assert!(idx < t, "no irreducible polynomial found (impossible)");
+        }
+        let mut h: Vec<GfqElem> = Vec::with_capacity(m + 1);
+        let mut v = idx;
+        for _ in 0..m {
+            h.push(field.element_from_index(v % q));
+            v /= q;
+        }
+        h.push(field.one()); // monic
+        // Quick screen: constant term must be nonzero (else divisible by y).
+        if !field.is_zero(&h[0]) && is_irreducible(field, &h) {
+            return h;
+        }
+        idx += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::gfp::fq_poly_mul;
+
+    fn gf2() -> Gfq {
+        Gfq::new(2, vec![0, 1]) // GF(2) as GF(2)[x]/(x)
+    }
+
+    #[test]
+    fn factors() {
+        assert_eq!(prime_factors(12), vec![2, 3]);
+        assert_eq!(prime_factors(1), Vec::<u64>::new());
+        assert_eq!(prime_factors(64), vec![2]);
+        assert_eq!(prime_factors(7), vec![7]);
+    }
+
+    #[test]
+    fn known_irreducibles_gf2() {
+        let f = gf2();
+        let one = f.one();
+        let zero = f.zero();
+        // x^2 + x + 1 irreducible over GF(2)
+        assert!(is_irreducible(&f, &[one.clone(), one.clone(), one.clone()]));
+        // x^2 + 1 = (x+1)^2 reducible
+        assert!(!is_irreducible(&f, &[one.clone(), zero.clone(), one.clone()]));
+        // x^3 + x + 1 irreducible
+        assert!(is_irreducible(
+            &f,
+            &[one.clone(), one.clone(), zero.clone(), one.clone()]
+        ));
+        // x^4 + x + 1 irreducible
+        assert!(is_irreducible(
+            &f,
+            &[one.clone(), one.clone(), zero.clone(), zero.clone(), one.clone()]
+        ));
+        // x^4 + x^2 + 1 = (x^2+x+1)^2 reducible
+        assert!(!is_irreducible(
+            &f,
+            &[one.clone(), zero.clone(), one.clone(), zero.clone(), one.clone()]
+        ));
+    }
+
+    #[test]
+    fn product_is_reducible() {
+        let f = gf2();
+        let one = f.one();
+        let zero = f.zero();
+        let a = vec![one.clone(), one.clone(), one.clone()]; // x^2+x+1
+        let b = vec![one.clone(), one.clone(), zero.clone(), one.clone()]; // x^3+x+1
+        let prod = fq_poly_mul(&f, &a, &b);
+        assert_eq!(prod.len(), 6);
+        assert!(!is_irreducible(&f, &prod));
+    }
+
+    #[test]
+    fn find_degree_1_through_8_gf2() {
+        let f = gf2();
+        for m in 1..=8 {
+            let h = find_irreducible(&f, m);
+            assert_eq!(h.len(), m + 1);
+            assert!(is_irreducible(&f, &h), "degree {m}");
+        }
+    }
+
+    #[test]
+    fn find_over_gf4() {
+        // GF(4) = GF(2)[x]/(x^2+x+1); find an irreducible quadratic and cubic
+        // over GF(4) — needed for towers over GR(p^e, 2).
+        let f = Gfq::new(2, vec![1, 1, 1]);
+        for m in [2usize, 3, 4] {
+            let h = find_irreducible(&f, m);
+            assert!(is_irreducible(&f, &h), "degree {m} over GF(4)");
+        }
+    }
+
+    #[test]
+    fn find_over_gf3() {
+        let f = Gfq::new(3, vec![0, 1]);
+        for m in [2usize, 3, 5] {
+            let h = find_irreducible(&f, m);
+            assert!(is_irreducible(&f, &h));
+        }
+    }
+}

@@ -1,0 +1,410 @@
+//! Dense row-major matrices over any [`Ring`].
+//!
+//! The element type is generic (`Matrix<E>`); ring context is passed to each
+//! operation, matching the rest of the crate. The multiply kernel is the
+//! cache-friendly ikj loop, which monomorphizes to vectorizable straight-line
+//! code for `Zq` (`u64` wrap-around) — this is the worker-node hot path when
+//! the native backend is selected (the XLA backend in `runtime/` is the
+//! AOT-compiled alternative).
+
+use super::traits::Ring;
+use crate::util::rng::Rng64;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix<E> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<E>,
+}
+
+impl<E: Clone> Matrix<E> {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<E>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> E) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> &E {
+        &self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: E) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[E] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of the `h × w` block with top-left corner `(i0, j0)`.
+    pub fn block(&self, i0: usize, j0: usize, h: usize, w: usize) -> Matrix<E> {
+        assert!(i0 + h <= self.rows && j0 + w <= self.cols);
+        let mut data = Vec::with_capacity(h * w);
+        for i in 0..h {
+            data.extend_from_slice(
+                &self.data[(i0 + i) * self.cols + j0..(i0 + i) * self.cols + j0 + w],
+            );
+        }
+        Matrix { rows: h, cols: w, data }
+    }
+
+    /// Partition into a `gr × gc` grid of equal blocks (dims must divide).
+    /// Returned row-major: `out[a*gc + b]` is block (a, b).
+    pub fn partition_grid(&self, gr: usize, gc: usize) -> Vec<Matrix<E>> {
+        assert!(self.rows % gr == 0, "rows {} not divisible by {}", self.rows, gr);
+        assert!(self.cols % gc == 0, "cols {} not divisible by {}", self.cols, gc);
+        let bh = self.rows / gr;
+        let bw = self.cols / gc;
+        let mut out = Vec::with_capacity(gr * gc);
+        for a in 0..gr {
+            for b in 0..gc {
+                out.push(self.block(a * bh, b * bw, bh, bw));
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`Matrix::partition_grid`].
+    pub fn stitch_grid(blocks: &[Matrix<E>], gr: usize, gc: usize) -> Matrix<E> {
+        assert_eq!(blocks.len(), gr * gc);
+        let bh = blocks[0].rows;
+        let bw = blocks[0].cols;
+        let mut out: Vec<E> = Vec::with_capacity(gr * gc * bh * bw);
+        for a in 0..gr {
+            for i in 0..bh {
+                for b in 0..gc {
+                    let blk = &blocks[a * gc + b];
+                    assert_eq!(blk.rows, bh);
+                    assert_eq!(blk.cols, bw);
+                    out.extend_from_slice(blk.row(i));
+                }
+            }
+        }
+        Matrix { rows: gr * bh, cols: gc * bw, data: out }
+    }
+
+    pub fn transpose(&self) -> Matrix<E> {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.at(j, i).clone())
+    }
+
+    /// Elementwise map into a (possibly different) element type.
+    pub fn map<F, T: Clone>(&self, f: F) -> Matrix<T>
+    where
+        F: Fn(&E) -> T,
+    {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(f).collect(),
+        }
+    }
+}
+
+impl<E: Clone + PartialEq> Matrix<E> {
+    /// All-zero matrix.
+    pub fn zeros<R: Ring<Elem = E>>(ring: &R, rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![ring.zero(); rows * cols] }
+    }
+
+    /// Identity.
+    pub fn identity<R: Ring<Elem = E>>(ring: &R, n: usize) -> Self {
+        let mut m = Self::zeros(ring, n, n);
+        for i in 0..n {
+            m.set(i, i, ring.one());
+        }
+        m
+    }
+
+    /// Uniformly random matrix.
+    pub fn random<R: Ring<Elem = E>>(ring: &R, rows: usize, cols: usize, rng: &mut Rng64) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| ring.random(rng)).collect(),
+        }
+    }
+
+    pub fn is_zero<R: Ring<Elem = E>>(&self, ring: &R) -> bool {
+        self.data.iter().all(|x| ring.is_zero(x))
+    }
+
+    pub fn add<R: Ring<Elem = E>>(ring: &R, a: &Self, b: &Self) -> Self {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        Matrix {
+            rows: a.rows,
+            cols: a.cols,
+            data: a.data.iter().zip(&b.data).map(|(x, y)| ring.add(x, y)).collect(),
+        }
+    }
+
+    pub fn sub<R: Ring<Elem = E>>(ring: &R, a: &Self, b: &Self) -> Self {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        Matrix {
+            rows: a.rows,
+            cols: a.cols,
+            data: a.data.iter().zip(&b.data).map(|(x, y)| ring.sub(x, y)).collect(),
+        }
+    }
+
+    /// `self += other`.
+    pub fn add_assign<R: Ring<Elem = E>>(&mut self, ring: &R, other: &Self) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            ring.add_assign(x, y);
+        }
+    }
+
+    /// `self = self · s` (scalar).
+    pub fn scale_assign<R: Ring<Elem = E>>(&mut self, ring: &R, s: &E) {
+        for x in self.data.iter_mut() {
+            *x = ring.mul(x, s);
+        }
+    }
+
+    /// `self += s · other` — the decode/Horner workhorse. Delegates to the
+    /// ring's [`Ring::mat_axpy`] hook (plane-decomposed for extensions).
+    pub fn axpy<R: Ring<Elem = E>>(&mut self, ring: &R, s: &E, other: &Self) {
+        ring.mat_axpy(self, s, other);
+    }
+
+    /// Matrix product. Delegates to the ring's [`Ring::mat_mul`] hook: the
+    /// generic ikj loop for scalar rings, the plane-decomposed kernel for
+    /// tower extensions (§Perf).
+    pub fn matmul<R: Ring<Elem = E>>(ring: &R, a: &Self, b: &Self) -> Self {
+        ring.mat_mul(a, b)
+    }
+
+    /// Inverse of a square matrix over the ring, by Gauss–Jordan with
+    /// *unit-pivot* search: over a local ring (every Galois ring is one) a
+    /// matrix is invertible iff its determinant is a unit, in which case at
+    /// every elimination step some candidate pivot is a unit (the reduction
+    /// mod p is an invertible matrix over the residue field). Returns `None`
+    /// if no unit pivot exists at some step (singular matrix).
+    ///
+    /// Used by the CSA decoder to invert Cauchy–Vandermonde systems.
+    pub fn invert<R: Ring<Elem = E>>(&self, ring: &R) -> Option<Matrix<E>> {
+        assert_eq!(self.rows, self.cols, "inverse needs a square matrix");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Self::identity(ring, n);
+        for col in 0..n {
+            // find a unit pivot at or below the diagonal
+            let pivot_row = (col..n).find(|&r| ring.is_unit(a.at(r, col)))?;
+            if pivot_row != col {
+                for j in 0..n {
+                    a.data.swap(pivot_row * n + j, col * n + j);
+                    inv.data.swap(pivot_row * n + j, col * n + j);
+                }
+            }
+            let pinv = ring.inv(a.at(col, col)).expect("unit pivot");
+            for j in 0..n {
+                let v = ring.mul(a.at(col, j), &pinv);
+                a.set(col, j, v);
+                let v = ring.mul(inv.at(col, j), &pinv);
+                inv.set(col, j, v);
+            }
+            for r in 0..n {
+                if r == col || ring.is_zero(a.at(r, col)) {
+                    continue;
+                }
+                let factor = a.at(r, col).clone();
+                for j in 0..n {
+                    let t = ring.mul(&factor, a.at(col, j));
+                    a.set(r, j, ring.sub(a.at(r, j), &t));
+                    let t = ring.mul(&factor, inv.at(col, j));
+                    inv.set(r, j, ring.sub(inv.at(r, j), &t));
+                }
+            }
+        }
+        Some(inv)
+    }
+
+    /// Serialized byte size under `ring`'s canonical encoding.
+    pub fn byte_len<R: Ring<Elem = E>>(&self, ring: &R) -> usize {
+        8 + 8 + self.data.len() * ring.elem_bytes()
+    }
+
+    /// Serialize: `rows (u64 LE) | cols (u64 LE) | elements`.
+    pub fn to_bytes<R: Ring<Elem = E>>(&self, ring: &R) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len(ring));
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        for x in &self.data {
+            ring.write_elem(x, &mut out);
+        }
+        out
+    }
+
+    pub fn from_bytes<R: Ring<Elem = E>>(ring: &R, buf: &[u8]) -> Self {
+        let mut pos = 0;
+        let mut b8 = [0u8; 8];
+        b8.copy_from_slice(&buf[0..8]);
+        let rows = u64::from_le_bytes(b8) as usize;
+        b8.copy_from_slice(&buf[8..16]);
+        let cols = u64::from_le_bytes(b8) as usize;
+        pos += 16;
+        let data: Vec<E> = (0..rows * cols).map(|_| ring.read_elem(buf, &mut pos)).collect();
+        Matrix { rows, cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::extension::Extension;
+    use crate::ring::zq::Zq;
+
+    fn ring() -> Zq {
+        Zq::z2e(64)
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let r = ring();
+        let a = Matrix::from_vec(2, 2, vec![1u64, 2, 3, 4]);
+        let b = Matrix::from_vec(2, 2, vec![5u64, 6, 7, 8]);
+        let c = Matrix::matmul(&r, &a, &b);
+        assert_eq!(c.data, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let r = ring();
+        let mut rng = Rng64::seeded(51);
+        let a = Matrix::random(&r, 7, 7, &mut rng);
+        let id = Matrix::identity(&r, 7);
+        assert_eq!(Matrix::matmul(&r, &a, &id), a);
+        assert_eq!(Matrix::matmul(&r, &id, &a), a);
+    }
+
+    #[test]
+    fn matmul_associative_rect() {
+        let r = ring();
+        let mut rng = Rng64::seeded(52);
+        let a = Matrix::random(&r, 4, 6, &mut rng);
+        let b = Matrix::random(&r, 6, 3, &mut rng);
+        let c = Matrix::random(&r, 3, 5, &mut rng);
+        let left = Matrix::matmul(&r, &Matrix::matmul(&r, &a, &b), &c);
+        let right = Matrix::matmul(&r, &a, &Matrix::matmul(&r, &b, &c));
+        assert_eq!(left, right);
+    }
+
+    #[test]
+    fn matmul_wraps_mod_2e64() {
+        let r = ring();
+        let a = Matrix::from_vec(1, 1, vec![u64::MAX]);
+        let b = Matrix::from_vec(1, 1, vec![2u64]);
+        assert_eq!(Matrix::matmul(&r, &a, &b).data, vec![u64::MAX - 1]);
+    }
+
+    #[test]
+    fn partition_and_stitch_roundtrip() {
+        let r = ring();
+        let mut rng = Rng64::seeded(53);
+        let a = Matrix::random(&r, 6, 8, &mut rng);
+        for (gr, gc) in [(1, 1), (2, 2), (3, 4), (6, 8), (2, 4)] {
+            let blocks = a.partition_grid(gr, gc);
+            assert_eq!(blocks.len(), gr * gc);
+            let b = Matrix::stitch_grid(&blocks, gr, gc);
+            assert_eq!(a, b, "grid {gr}x{gc}");
+        }
+    }
+
+    #[test]
+    fn block_matmul_equals_full() {
+        // (u,w) × (w,v) block-partition multiply must equal the flat product.
+        let r = ring();
+        let mut rng = Rng64::seeded(54);
+        let a = Matrix::random(&r, 6, 4, &mut rng);
+        let b = Matrix::random(&r, 4, 6, &mut rng);
+        let (u, w, v) = (3, 2, 2);
+        let ab = a.partition_grid(u, w);
+        let bb = b.partition_grid(w, v);
+        let mut cb = Vec::new();
+        for i in 0..u {
+            for l in 0..v {
+                let mut acc = Matrix::zeros(&r, a.rows / u, b.cols / v);
+                for k in 0..w {
+                    let prod = Matrix::matmul(&r, &ab[i * w + k], &bb[k * v + l]);
+                    acc.add_assign(&r, &prod);
+                }
+                cb.push(acc);
+            }
+        }
+        let c = Matrix::stitch_grid(&cb, u, v);
+        assert_eq!(c, Matrix::matmul(&r, &a, &b));
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let r = ring();
+        let mut rng = Rng64::seeded(55);
+        let a = Matrix::random(&r, 3, 3, &mut rng);
+        let b = Matrix::random(&r, 3, 3, &mut rng);
+        let s = 7u64;
+        let mut c = a.clone();
+        c.axpy(&r, &s, &b);
+        let expected = Matrix::add(&r, &a, &{
+            let mut t = b.clone();
+            t.scale_assign(&r, &s);
+            t
+        });
+        assert_eq!(c, expected);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let r = ring();
+        let mut rng = Rng64::seeded(56);
+        let a = Matrix::random(&r, 3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn serialization_roundtrip_zq() {
+        let r = ring();
+        let mut rng = Rng64::seeded(57);
+        let a = Matrix::random(&r, 4, 5, &mut rng);
+        let bytes = a.to_bytes(&r);
+        assert_eq!(bytes.len(), a.byte_len(&r));
+        assert_eq!(Matrix::from_bytes(&r, &bytes), a);
+    }
+
+    #[test]
+    fn serialization_roundtrip_extension() {
+        let ext = Extension::new(Zq::z2e(64), 3);
+        let mut rng = Rng64::seeded(58);
+        let a = Matrix::random(&ext, 3, 2, &mut rng);
+        let bytes = a.to_bytes(&ext);
+        assert_eq!(bytes.len(), 16 + 6 * 24);
+        assert_eq!(Matrix::from_bytes(&ext, &bytes), a);
+    }
+
+    #[test]
+    fn matmul_over_extension_matches_scalar_blocks() {
+        // multiply constant-embedded matrices in the tower, compare with Zq
+        let zq = Zq::z2e(64);
+        let ext = Extension::new(zq.clone(), 3);
+        let mut rng = Rng64::seeded(59);
+        let a = Matrix::random(&zq, 3, 3, &mut rng);
+        let b = Matrix::random(&zq, 3, 3, &mut rng);
+        let ae = a.map(|x| ext.from_base(x));
+        let be = b.map(|x| ext.from_base(x));
+        let ce = Matrix::matmul(&ext, &ae, &be);
+        let c = Matrix::matmul(&zq, &a, &b);
+        assert_eq!(ce, c.map(|x| ext.from_base(x)));
+    }
+}

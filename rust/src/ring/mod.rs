@@ -1,0 +1,23 @@
+//! The algebraic substrate: integer residue rings `Z_{p^e}`, Galois rings
+//! `GR(p^e, d)`, tower extensions `GR(p^e, d·m)`, residue-field helpers,
+//! irreducible-polynomial search, dense polynomials, fast multipoint
+//! evaluation / interpolation (Lemma II.1), and matrices over any ring.
+//!
+//! Everything the paper's schemes need algebraically lives here; the `codes`
+//! and `rmfe` modules are generic over the [`traits::Ring`] trait.
+
+pub mod traits;
+pub mod zq;
+pub mod gfp;
+pub mod irreducible;
+pub mod galois;
+pub mod extension;
+pub mod poly;
+pub mod eval;
+pub mod matrix;
+
+pub use traits::Ring;
+pub use zq::Zq;
+pub use galois::GaloisRing;
+pub use extension::Extension;
+pub use matrix::Matrix;

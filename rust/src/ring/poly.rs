@@ -1,0 +1,240 @@
+//! Dense univariate polynomials over any [`Ring`], little-endian coefficient
+//! vectors. Supports the operations the coding layer and the fast
+//! evaluation/interpolation algorithms need: add/sub/mul, division by monic
+//! divisors, scaling, evaluation, derivative.
+//!
+//! Polynomials are plain `Vec<R::Elem>`; the ring context is passed to every
+//! operation (same convention as the rest of the crate).
+
+use super::traits::Ring;
+
+/// Remove trailing zero coefficients (the zero polynomial is the empty vec).
+pub fn trim<R: Ring>(ring: &R, mut a: Vec<R::Elem>) -> Vec<R::Elem> {
+    while let Some(last) = a.last() {
+        if ring.is_zero(last) {
+            a.pop();
+        } else {
+            break;
+        }
+    }
+    a
+}
+
+/// Degree; the zero polynomial has degree −1.
+pub fn deg<R: Ring>(_ring: &R, a: &[R::Elem]) -> isize {
+    a.len() as isize - 1
+}
+
+pub fn add<R: Ring>(ring: &R, a: &[R::Elem], b: &[R::Elem]) -> Vec<R::Elem> {
+    let n = a.len().max(b.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = a.get(i).cloned().unwrap_or_else(|| ring.zero());
+        let y = b.get(i).cloned().unwrap_or_else(|| ring.zero());
+        out.push(ring.add(&x, &y));
+    }
+    trim(ring, out)
+}
+
+pub fn sub<R: Ring>(ring: &R, a: &[R::Elem], b: &[R::Elem]) -> Vec<R::Elem> {
+    let n = a.len().max(b.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = a.get(i).cloned().unwrap_or_else(|| ring.zero());
+        let y = b.get(i).cloned().unwrap_or_else(|| ring.zero());
+        out.push(ring.sub(&x, &y));
+    }
+    trim(ring, out)
+}
+
+/// Schoolbook product. Quadratic, but polynomial degrees on the master are
+/// bounded by the recovery threshold (≤ a few hundred); the subproduct-tree
+/// algorithms in [`super::eval`] only multiply short polynomials.
+pub fn mul<R: Ring>(ring: &R, a: &[R::Elem], b: &[R::Elem]) -> Vec<R::Elem> {
+    if a.is_empty() || b.is_empty() {
+        return vec![];
+    }
+    let mut out = vec![ring.zero(); a.len() + b.len() - 1];
+    for (i, ai) in a.iter().enumerate() {
+        if ring.is_zero(ai) {
+            continue;
+        }
+        for (j, bj) in b.iter().enumerate() {
+            ring.mul_add_assign(&mut out[i + j], ai, bj);
+        }
+    }
+    trim(ring, out)
+}
+
+/// Multiply by a scalar.
+pub fn scale<R: Ring>(ring: &R, a: &[R::Elem], s: &R::Elem) -> Vec<R::Elem> {
+    trim(ring, a.iter().map(|c| ring.mul(c, s)).collect())
+}
+
+/// `(quotient, remainder)` of `a / b` where the leading coefficient of `b`
+/// must be a unit (always true for the monic subproducts we divide by).
+pub fn divrem<R: Ring>(ring: &R, a: &[R::Elem], b: &[R::Elem]) -> (Vec<R::Elem>, Vec<R::Elem>) {
+    let b = trim(ring, b.to_vec());
+    assert!(!b.is_empty(), "division by the zero polynomial");
+    let lead_inv = ring
+        .inv(b.last().unwrap())
+        .expect("divisor leading coefficient must be a unit");
+    let db = b.len() - 1;
+    let mut r = trim(ring, a.to_vec());
+    if db == 0 {
+        // dividing by a unit constant
+        let q: Vec<R::Elem> = r.iter().map(|c| ring.mul(c, &lead_inv)).collect();
+        return (trim(ring, q), vec![]);
+    }
+    if r.len() <= db {
+        return (vec![], r);
+    }
+    let mut q = vec![ring.zero(); r.len() - db];
+    while r.len() > db {
+        let k = r.len() - 1 - db;
+        let c = ring.mul(r.last().unwrap(), &lead_inv);
+        q[k] = c.clone();
+        for (i, bi) in b.iter().enumerate().take(db) {
+            let t = ring.mul(&c, bi);
+            r[k + i] = ring.sub(&r[k + i], &t);
+        }
+        // The top coefficient is eliminated exactly.
+        r.pop();
+        r = trim(ring, r);
+    }
+    (trim(ring, q), trim(ring, r))
+}
+
+/// Horner evaluation.
+pub fn eval<R: Ring>(ring: &R, a: &[R::Elem], x: &R::Elem) -> R::Elem {
+    let mut acc = ring.zero();
+    for c in a.iter().rev() {
+        acc = ring.mul(&acc, x);
+        ring.add_assign(&mut acc, c);
+    }
+    acc
+}
+
+/// Formal derivative.
+pub fn derivative<R: Ring>(ring: &R, a: &[R::Elem]) -> Vec<R::Elem> {
+    if a.len() <= 1 {
+        return vec![];
+    }
+    let mut out = Vec::with_capacity(a.len() - 1);
+    for (i, c) in a.iter().enumerate().skip(1) {
+        // multiply by the integer i (as a ring element: i · 1)
+        let mut k = ring.zero();
+        let one = ring.one();
+        // binary expansion of i for O(log i) additions
+        let mut bit = 1usize;
+        let mut pow2 = one.clone();
+        while bit <= i {
+            if i & bit != 0 {
+                ring.add_assign(&mut k, &pow2);
+            }
+            bit <<= 1;
+            pow2 = ring.add(&pow2, &pow2);
+        }
+        out.push(ring.mul(c, &k));
+    }
+    trim(ring, out)
+}
+
+/// `Π (x − p_i)` — the monic polynomial with the given roots.
+pub fn from_roots<R: Ring>(ring: &R, pts: &[R::Elem]) -> Vec<R::Elem> {
+    let mut acc = vec![ring.one()];
+    for p in pts {
+        acc = mul(ring, &acc, &[ring.neg(p), ring.one()]);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::zq::Zq;
+    use crate::ring::extension::Extension;
+    use crate::util::rng::Rng64;
+
+    fn rand_poly(ring: &Zq, deg: usize, rng: &mut Rng64) -> Vec<u64> {
+        trim(ring, (0..=deg).map(|_| ring.random(rng)).collect())
+    }
+
+    #[test]
+    fn mul_matches_naive_identity() {
+        let r = Zq::z2e(64);
+        // (x+1)(x-1) = x^2 - 1
+        let a = vec![1u64, 1];
+        let b = vec![r.neg(&1), 1];
+        assert_eq!(mul(&r, &a, &b), vec![r.neg(&1), 0, 1]);
+    }
+
+    #[test]
+    fn divrem_reconstructs() {
+        let r = Zq::z2e(64);
+        let mut rng = Rng64::seeded(31);
+        for _ in 0..30 {
+            let a = rand_poly(&r, 12, &mut rng);
+            // monic divisor
+            let mut b = rand_poly(&r, 5, &mut rng);
+            b.resize(6, 0);
+            b[5] = 1;
+            let (q, rem) = divrem(&r, &a, &b);
+            let recon = add(&r, &mul(&r, &q, &b), &rem);
+            assert_eq!(trim(&r, recon), trim(&r, a.clone()));
+            assert!(deg(&r, &rem) < deg(&r, &b));
+        }
+    }
+
+    #[test]
+    fn divrem_by_unit_leading_nonmonic() {
+        let r = Zq::z2e(64);
+        let a = vec![5u64, 7, 9, 11];
+        let b = vec![2u64, 3]; // leading 3 is a unit mod 2^64
+        let (q, rem) = divrem(&r, &a, &b);
+        let recon = add(&r, &mul(&r, &q, &b), &rem);
+        assert_eq!(recon, a);
+    }
+
+    #[test]
+    fn eval_horner() {
+        let r = Zq::z2e(64);
+        // f(x) = 3 + 2x + x^2 at x=5 → 3 + 10 + 25 = 38
+        assert_eq!(eval(&r, &[3, 2, 1], &5), 38);
+        assert_eq!(eval(&r, &[], &5), 0);
+    }
+
+    #[test]
+    fn from_roots_vanishes() {
+        let r = Zq::z2e(64);
+        let pts = vec![0u64, 1, 7, 13];
+        let m = from_roots(&r, &pts);
+        assert_eq!(m.len(), 5);
+        for p in &pts {
+            assert_eq!(eval(&r, &m, p), 0);
+        }
+        assert_eq!(*m.last().unwrap(), 1, "monic");
+    }
+
+    #[test]
+    fn derivative_power_rule() {
+        let r = Zq::z2e(64);
+        // d/dx (x^3 + 4x + 9) = 3x^2 + 4
+        assert_eq!(derivative(&r, &[9, 4, 0, 1]), vec![4, 0, 3]);
+    }
+
+    #[test]
+    fn works_over_extension() {
+        let ext = Extension::new(Zq::z2e(32), 3);
+        let mut rng = Rng64::seeded(32);
+        let a: Vec<_> = (0..5).map(|_| ext.random(&mut rng)).collect();
+        let b: Vec<_> = (0..3).map(|_| ext.random(&mut rng)).collect();
+        let ab = mul(&ext, &a, &b);
+        // eval(ab, x) == eval(a,x)*eval(b,x)
+        let x = ext.random(&mut rng);
+        assert_eq!(
+            eval(&ext, &ab, &x),
+            ext.mul(&eval(&ext, &a, &x), &eval(&ext, &b, &x))
+        );
+    }
+}

@@ -1,0 +1,378 @@
+//! `Zq` — the integer residue ring `Z_{p^e} = GR(p^e, 1)`.
+//!
+//! Two representations:
+//! * `Mask` — `p = 2`, any `e ≤ 64`: arithmetic is wrap-around `u64` masked to
+//!   `e` bits. For `e = 64` (the paper's main experimental ring `Z_{2^64}`)
+//!   this is native machine arithmetic — additions and multiplications compile
+//!   to single instructions, exactly the "directly compatible with CPU words"
+//!   motivation of the paper.
+//! * `Mod` — odd prime `p`, `p^e < 2^63`: reduction via `u128` products.
+
+use super::traits::Ring;
+use crate::util::rng::Rng64;
+
+/// Internal representation of the modulus.
+#[derive(Clone, Debug, PartialEq)]
+enum Repr {
+    /// `q = 2^e`; the mask is `2^e − 1` (all-ones for `e = 64`).
+    Mask { mask: u64 },
+    /// General `q = p^e < 2^63`.
+    Mod { q: u64 },
+}
+
+/// The ring `Z_{p^e}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Zq {
+    p: u64,
+    e: u32,
+    repr: Repr,
+}
+
+impl Zq {
+    /// `Z_{2^e}` for `1 ≤ e ≤ 64`.
+    pub fn z2e(e: u32) -> Zq {
+        assert!((1..=64).contains(&e), "e must be in 1..=64");
+        let mask = if e == 64 { u64::MAX } else { (1u64 << e) - 1 };
+        Zq { p: 2, e, repr: Repr::Mask { mask } }
+    }
+
+    /// `Z_{p^e}` for odd prime `p` with `p^e < 2^63`.
+    pub fn new(p: u64, e: u32) -> Zq {
+        if p == 2 {
+            return Zq::z2e(e);
+        }
+        assert!(is_small_prime(p), "p = {p} is not prime");
+        assert!(e >= 1);
+        let mut q: u64 = 1;
+        for _ in 0..e {
+            q = q.checked_mul(p).expect("p^e overflows u64");
+        }
+        assert!(q < (1 << 63), "p^e must be < 2^63 for the Mod representation");
+        Zq { p, e, repr: Repr::Mod { q } }
+    }
+
+    /// The modulus `q = p^e` as `u128`.
+    pub fn q(&self) -> u128 {
+        match self.repr {
+            Repr::Mask { mask } => mask as u128 + 1,
+            Repr::Mod { q } => q as u128,
+        }
+    }
+
+    /// Canonical reduction of an arbitrary u64 into the ring.
+    #[inline]
+    pub fn reduce(&self, x: u64) -> u64 {
+        match self.repr {
+            Repr::Mask { mask } => x & mask,
+            Repr::Mod { q } => x % q,
+        }
+    }
+
+    /// Lift of a signed integer.
+    pub fn from_i64(&self, x: i64) -> u64 {
+        if x >= 0 {
+            self.reduce(x as u64)
+        } else {
+            self.neg(&self.reduce((-x) as u64))
+        }
+    }
+}
+
+/// Trial-division primality (moduli are small user inputs, not hot-path data).
+pub fn is_small_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    if n % 2 == 0 {
+        return n == 2;
+    }
+    let mut d = 3u64;
+    while d.saturating_mul(d) <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+impl Ring for Zq {
+    type Elem = u64;
+
+    #[inline]
+    fn p(&self) -> u64 {
+        self.p
+    }
+    #[inline]
+    fn e(&self) -> u32 {
+        self.e
+    }
+    #[inline]
+    fn degree(&self) -> usize {
+        1
+    }
+
+    #[inline]
+    fn zero(&self) -> u64 {
+        0
+    }
+    #[inline]
+    fn one(&self) -> u64 {
+        1
+    }
+
+    #[inline]
+    fn add(&self, a: &u64, b: &u64) -> u64 {
+        match self.repr {
+            Repr::Mask { mask } => a.wrapping_add(*b) & mask,
+            Repr::Mod { q } => {
+                let s = a + b; // both < q < 2^63, no overflow
+                if s >= q {
+                    s - q
+                } else {
+                    s
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn sub(&self, a: &u64, b: &u64) -> u64 {
+        match self.repr {
+            Repr::Mask { mask } => a.wrapping_sub(*b) & mask,
+            Repr::Mod { q } => {
+                if a >= b {
+                    a - b
+                } else {
+                    a + q - b
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn neg(&self, a: &u64) -> u64 {
+        match self.repr {
+            Repr::Mask { mask } => a.wrapping_neg() & mask,
+            Repr::Mod { q } => {
+                if *a == 0 {
+                    0
+                } else {
+                    q - a
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn mul(&self, a: &u64, b: &u64) -> u64 {
+        match self.repr {
+            Repr::Mask { mask } => a.wrapping_mul(*b) & mask,
+            Repr::Mod { q } => ((*a as u128 * *b as u128) % q as u128) as u64,
+        }
+    }
+
+    #[inline]
+    fn add_assign(&self, a: &mut u64, b: &u64) {
+        *a = self.add(a, b);
+    }
+
+    #[inline]
+    fn mul_add_assign(&self, acc: &mut u64, a: &u64, b: &u64) {
+        match self.repr {
+            // Defer the mask to read time? No — keep canonical. Single fused op.
+            Repr::Mask { mask } => *acc = acc.wrapping_add(a.wrapping_mul(*b)) & mask,
+            Repr::Mod { q } => {
+                let t = ((*a as u128 * *b as u128) % q as u128) as u64;
+                *acc = self.add(acc, &t);
+            }
+        }
+    }
+
+    #[inline]
+    fn is_zero(&self, a: &u64) -> bool {
+        *a == 0
+    }
+
+    #[inline]
+    fn is_unit(&self, a: &u64) -> bool {
+        a % self.p != 0
+    }
+
+    fn exceptional_points(&self, n: usize) -> anyhow::Result<Vec<u64>> {
+        anyhow::ensure!(
+            (n as u128) <= self.p as u128,
+            "Z_{{{}^{}}} has only {} exceptional points, {} requested (Section II-B: \
+             extend the ring via GR(p^e, m) — see Extension)",
+            self.p,
+            self.e,
+            self.p,
+            n
+        );
+        Ok((0..n as u64).collect())
+    }
+
+    #[inline]
+    fn elem_bytes(&self) -> usize {
+        8
+    }
+
+    fn write_elem(&self, a: &u64, out: &mut Vec<u8>) {
+        out.extend_from_slice(&a.to_le_bytes());
+    }
+
+    fn read_elem(&self, buf: &[u8], pos: &mut usize) -> u64 {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&buf[*pos..*pos + 8]);
+        *pos += 8;
+        u64::from_le_bytes(b)
+    }
+
+    fn random(&self, rng: &mut Rng64) -> u64 {
+        match self.repr {
+            Repr::Mask { mask } => rng.next_u64() & mask,
+            Repr::Mod { q } => rng.below(q),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("Z_{}^{}", self.p, self.e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::traits::is_exceptional_sequence;
+
+    #[test]
+    fn z2_64_wraps() {
+        let r = Zq::z2e(64);
+        assert_eq!(r.add(&u64::MAX, &1), 0);
+        assert_eq!(r.mul(&(1u64 << 63), &2), 0);
+        assert_eq!(r.sub(&0, &1), u64::MAX);
+    }
+
+    #[test]
+    fn z2_32_masks() {
+        let r = Zq::z2e(32);
+        assert_eq!(r.add(&(u32::MAX as u64), &1), 0);
+        assert_eq!(r.mul(&(1u64 << 31), &2), 0);
+        assert_eq!(r.q(), 1u128 << 32);
+    }
+
+    #[test]
+    fn odd_modulus_arithmetic() {
+        let r = Zq::new(3, 5); // 243
+        assert_eq!(r.q(), 243);
+        assert_eq!(r.add(&200, &100), 57);
+        assert_eq!(r.sub(&5, &10), 238);
+        assert_eq!(r.mul(&100, &100), 100 * 100 % 243);
+        assert_eq!(r.neg(&0), 0);
+        assert_eq!(r.neg(&1), 242);
+    }
+
+    #[test]
+    fn units_and_inverses_z2e() {
+        let r = Zq::z2e(64);
+        for a in [1u64, 3, 5, 0xDEAD_BEEF_1234_5677, u64::MAX] {
+            assert!(r.is_unit(&a), "{a} should be a unit");
+            let inv = r.inv(&a).unwrap();
+            assert_eq!(r.mul(&a, &inv), 1, "a={a}");
+        }
+        for a in [0u64, 2, 4, 1 << 20] {
+            assert!(!r.is_unit(&a));
+            assert!(r.inv(&a).is_none());
+        }
+    }
+
+    #[test]
+    fn units_and_inverses_z3e() {
+        let r = Zq::new(3, 4); // 81
+        for a in 0..81u64 {
+            if a % 3 != 0 {
+                let inv = r.inv(&a).unwrap();
+                assert_eq!(r.mul(&a, &inv), 1, "a={a}");
+            } else {
+                assert!(r.inv(&a).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn field_case_e1() {
+        // Z_p with e = 1 is GF(p); inverse = Fermat only, no Hensel steps.
+        let r = Zq::new(7, 1);
+        for a in 1..7u64 {
+            assert_eq!(r.mul(&a, &r.inv(&a).unwrap()), 1);
+        }
+    }
+
+    #[test]
+    fn exceptional_points_z2() {
+        let r = Zq::z2e(64);
+        let pts = r.exceptional_points(2).unwrap();
+        assert_eq!(pts, vec![0, 1]);
+        assert!(is_exceptional_sequence(&r, &pts));
+        assert!(r.exceptional_points(3).is_err(), "Z_2^e has only 2");
+    }
+
+    #[test]
+    fn exceptional_points_z7() {
+        let r = Zq::new(7, 2);
+        let pts = r.exceptional_points(7).unwrap();
+        assert!(is_exceptional_sequence(&r, &pts));
+        assert!(r.exceptional_points(8).is_err());
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let r = Zq::z2e(16);
+        let a = 12345u64 & 0xFFFF;
+        let mut acc = 1u64;
+        for n in 0..20u32 {
+            assert_eq!(r.pow_u128(&a, n as u128), acc);
+            acc = r.mul(&acc, &a);
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let r = Zq::z2e(64);
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, u64::MAX, 0x0123_4567_89AB_CDEF];
+        for v in &vals {
+            r.write_elem(v, &mut buf);
+        }
+        assert_eq!(buf.len(), vals.len() * r.elem_bytes());
+        let mut pos = 0;
+        for v in &vals {
+            assert_eq!(r.read_elem(&buf, &mut pos), *v);
+        }
+    }
+
+    #[test]
+    fn from_i64_signed() {
+        let r = Zq::z2e(8);
+        assert_eq!(r.from_i64(-1), 255);
+        assert_eq!(r.from_i64(300), 44);
+    }
+
+    #[test]
+    fn primality_helper() {
+        assert!(is_small_prime(2));
+        assert!(is_small_prime(3));
+        assert!(is_small_prime(65537));
+        assert!(!is_small_prime(1));
+        assert!(!is_small_prime(91));
+    }
+
+    #[test]
+    fn dot_and_sum() {
+        let r = Zq::z2e(64);
+        let xs = [1u64, 2, 3];
+        let ys = [4u64, 5, 6];
+        assert_eq!(r.dot(&xs, &ys), 32);
+        assert_eq!(r.sum(&xs), 6);
+    }
+}

@@ -1,0 +1,165 @@
+//! Concatenated RMFE (Lemma II.5): from an `(n1, m1)`-RMFE `(φ1, ψ1)` over
+//! `GR(p^e, d·m2)` and an `(n2, m2)`-RMFE `(φ2, ψ2)` over `GR(p^e, d)`,
+//! build the `(n1·n2, m1·m2)`-RMFE
+//!
+//! ```text
+//! φ = φ1 ∘ (φ2 × … × φ2)      ψ = (ψ2 × … × ψ2) ∘ ψ1
+//! ```
+//!
+//! This lifts the `n ≤ p^d + 1` cap of a single interpolation hop: over
+//! `Z_{2^e}` (where `p^d = 2`) a `(2,3) ∘ (2,3)` concatenation gives a
+//! `(4, 9)`-RMFE, `(3,5) ∘ (3,5)` gives `(9, 25)`, etc. — the asymptotic
+//! families of Lemma II.3 are exactly iterated concatenations.
+//!
+//! The composed extension is represented as the tower-of-towers
+//! `Extension<Extension<R>>`; all coding schemes are generic over [`Ring`],
+//! so they run over it unchanged.
+
+use super::poly_rmfe::PolyRmfe;
+use super::RmfeScheme;
+use crate::ring::extension::Extension;
+use crate::ring::galois::ExtensibleRing;
+use crate::ring::traits::Ring;
+
+/// Two-level concatenated RMFE. `R` must itself be extensible and its
+/// extension must be extensible again (true for `R = Zq`, the paper's
+/// experimental base).
+#[derive(Clone)]
+pub struct ConcatRmfe<R>
+where
+    R: ExtensibleRing,
+    Extension<R>: ExtensibleRing,
+{
+    /// Inner hop: `(n2, m2)` over the base.
+    inner: PolyRmfe<R>,
+    /// Outer hop: `(n1, m1)` over the inner extension.
+    outer: PolyRmfe<Extension<R>>,
+}
+
+impl<R> ConcatRmfe<R>
+where
+    R: ExtensibleRing,
+    Extension<R>: ExtensibleRing,
+{
+    /// Build the `(n1·n2, (2n1−1)(2n2−1))`-RMFE by concatenating two optimal
+    /// interpolation hops.
+    pub fn new(base: R, n2: usize, n1: usize) -> anyhow::Result<Self> {
+        let inner = PolyRmfe::new(base, n2)?;
+        let outer = PolyRmfe::new(inner.ext().clone(), n1)?;
+        Ok(ConcatRmfe { inner, outer })
+    }
+
+    pub fn inner(&self) -> &PolyRmfe<R> {
+        &self.inner
+    }
+    pub fn outer(&self) -> &PolyRmfe<Extension<R>> {
+        &self.outer
+    }
+}
+
+impl<R> RmfeScheme<R, Extension<Extension<R>>> for ConcatRmfe<R>
+where
+    R: ExtensibleRing,
+    Extension<R>: ExtensibleRing,
+{
+    fn n(&self) -> usize {
+        self.inner.n() * self.outer.n()
+    }
+    fn m(&self) -> usize {
+        self.inner.m() * self.outer.m()
+    }
+    fn base(&self) -> &R {
+        self.inner.base()
+    }
+    fn ext(&self) -> &Extension<Extension<R>> {
+        self.outer.ext()
+    }
+
+    fn phi(&self, xs: &[R::Elem]) -> <Extension<Extension<R>> as Ring>::Elem {
+        let n2 = self.inner.n();
+        assert_eq!(xs.len(), self.n(), "phi takes n1·n2 slots");
+        let mids: Vec<_> = xs.chunks(n2).map(|chunk| self.inner.phi(chunk)).collect();
+        self.outer.phi(&mids)
+    }
+
+    fn psi(&self, alpha: &<Extension<Extension<R>> as Ring>::Elem) -> Vec<R::Elem> {
+        let mids = self.outer.psi(alpha);
+        let mut out = Vec::with_capacity(self.n());
+        for mid in &mids {
+            out.extend(self.inner.psi(mid));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn check<Rm, Rr, E>(rmfe: &Rm, seed: u64, iters: usize)
+    where
+        Rr: Ring,
+        E: Ring,
+        Rm: RmfeScheme<Rr, E>,
+    {
+        let base = rmfe.base().clone();
+        let ext = rmfe.ext().clone();
+        let n = rmfe.n();
+        let mut rng = Rng64::seeded(seed);
+        for _ in 0..iters {
+            let xs: Vec<_> = (0..n).map(|_| base.random(&mut rng)).collect();
+            let ys: Vec<_> = (0..n).map(|_| base.random(&mut rng)).collect();
+            let prod = ext.mul(&rmfe.phi(&xs), &rmfe.phi(&ys));
+            let got = rmfe.psi(&prod);
+            let expect: Vec<_> = xs.iter().zip(&ys).map(|(x, y)| base.mul(x, y)).collect();
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn concat_4_9_over_z2e64() {
+        // (2,3) ∘ (2,3) = (4,9) over Z_2^64 — beyond the p^d+1 = 3 cap of a
+        // single hop.
+        let rmfe = ConcatRmfe::new(Zq::z2e(64), 2, 2).unwrap();
+        assert_eq!(rmfe.n(), 4);
+        assert_eq!(rmfe.m(), 9);
+        check(&rmfe, 81, 25);
+    }
+
+    #[test]
+    fn concat_6_15_over_z2e64() {
+        // (2,3) inner, (3,5) outer (outer hop can use ∞ over the extension).
+        let rmfe = ConcatRmfe::new(Zq::z2e(64), 2, 3).unwrap();
+        assert_eq!(rmfe.n(), 6);
+        assert_eq!(rmfe.m(), 15);
+        check(&rmfe, 82, 15);
+    }
+
+    #[test]
+    fn concat_9_25_over_z2e32() {
+        let rmfe = ConcatRmfe::new(Zq::z2e(32), 3, 3).unwrap();
+        assert_eq!(rmfe.n(), 9);
+        assert_eq!(rmfe.m(), 25);
+        check(&rmfe, 83, 10);
+    }
+
+    #[test]
+    fn concat_odd_characteristic() {
+        let rmfe = ConcatRmfe::new(Zq::new(3, 2), 3, 4).unwrap();
+        assert_eq!(rmfe.n(), 12);
+        check(&rmfe, 84, 10);
+    }
+
+    #[test]
+    fn psi_inverts_phi() {
+        let rmfe = ConcatRmfe::new(Zq::z2e(64), 2, 2).unwrap();
+        let base = rmfe.base().clone();
+        let mut rng = Rng64::seeded(85);
+        for _ in 0..10 {
+            let xs: Vec<_> = (0..4).map(|_| base.random(&mut rng)).collect();
+            assert_eq!(rmfe.psi(&rmfe.phi(&xs)), xs);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Reverse Multiplication-Friendly Embeddings (Definition II.2).
+//!
+//! An `(n, m)`-RMFE over `GR(p^e, d)` is a pair of `GR(p^e, d)`-linear maps
+//!
+//! ```text
+//! φ : GR(p^e, d)^n → GR(p^e, d·m)      ψ : GR(p^e, d·m) → GR(p^e, d)^n
+//! ```
+//!
+//! with `x ⋆ y = ψ(φ(x)·φ(y))` for all vectors `x, y` (coordinatewise
+//! product). This is the tool that amortizes the `O(m)` extension-ring
+//! overhead across a batch of `n` multiplications (Section III-A).
+//!
+//! * [`poly_rmfe`] — the interpolation construction: `m ≥ 2n−1`, supporting
+//!   `n ≤ p^d` finite evaluation points plus optionally the point at infinity
+//!   (`n ≤ p^d + 1`), e.g. the `(3,5)`-RMFE over `Z_{2^e}` used in §V.C.
+//! * [`concat`] — concatenation (Lemma II.5): `(n1 n2, m1 m2)`-RMFE from an
+//!   `(n1, m1)`-RMFE over the extension and an `(n2, m2)`-RMFE over the base,
+//!   for batch sizes beyond `p^d + 1`.
+
+pub mod poly_rmfe;
+pub mod concat;
+
+use crate::ring::matrix::Matrix;
+use crate::ring::traits::Ring;
+
+pub use poly_rmfe::PolyRmfe;
+pub use concat::ConcatRmfe;
+
+/// Common interface of RMFE constructions: base ring `R`, extension ring `E`
+/// (with `[E : R] = m`), and the pair of linear maps.
+pub trait RmfeScheme<R: Ring, E: Ring>: Send + Sync {
+    /// Number of packed slots `n`.
+    fn n(&self) -> usize;
+    /// Extension degree `m` (so `E = GR(p^e, d·m)`).
+    fn m(&self) -> usize;
+    fn base(&self) -> &R;
+    fn ext(&self) -> &E;
+
+    /// The packing map `φ` (base-linear). `xs.len()` must equal `n`.
+    fn phi(&self, xs: &[R::Elem]) -> E::Elem;
+
+    /// The unpacking map `ψ` (base-linear). Returns `n` base elements.
+    fn psi(&self, alpha: &E::Elem) -> Vec<R::Elem>;
+
+    /// Pack a batch of `n` equal-shaped matrices elementwise:
+    /// `out[i,j] = φ(mats[0][i,j], …, mats[n−1][i,j])` (Section III-A,
+    /// the construction of `𝒜` and `ℬ` from `{A_k}`, `{B_k}`).
+    fn pack_matrices(&self, mats: &[Matrix<R::Elem>]) -> Matrix<E::Elem> {
+        assert_eq!(mats.len(), self.n(), "need exactly n matrices");
+        let rows = mats[0].rows;
+        let cols = mats[0].cols;
+        for m in mats {
+            assert_eq!((m.rows, m.cols), (rows, cols), "matrices must be equal-shaped");
+        }
+        let mut slot = vec![self.base().zero(); self.n()];
+        Matrix::from_fn(rows, cols, |i, j| {
+            for (k, mk) in mats.iter().enumerate() {
+                slot[k] = mk.at(i, j).clone();
+            }
+            self.phi(&slot)
+        })
+    }
+
+    /// Unpack a matrix of extension elements into `n` base matrices
+    /// (elementwise `ψ`).
+    fn unpack_matrix(&self, packed: &Matrix<E::Elem>) -> Vec<Matrix<R::Elem>> {
+        let rows = packed.rows;
+        let cols = packed.cols;
+        let mut outs: Vec<Matrix<R::Elem>> = (0..self.n())
+            .map(|_| Matrix::zeros(self.base(), rows, cols))
+            .collect();
+        for i in 0..rows {
+            for j in 0..cols {
+                let vals = self.psi(packed.at(i, j));
+                for (k, v) in vals.into_iter().enumerate() {
+                    outs[k].set(i, j, v);
+                }
+            }
+        }
+        outs
+    }
+}

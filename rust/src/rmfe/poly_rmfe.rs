@@ -1,0 +1,344 @@
+//! The interpolation `(n, m)`-RMFE over a Galois ring (the construction
+//! behind Lemma II.3, specialised to a single extension hop).
+//!
+//! Fix `n` points: either `n` elements `a_1,…,a_n` of the base ring's
+//! exceptional set, or `n−1` such elements plus the *point at infinity*.
+//! Let `GR_m = R[y]/(h)` be the degree-`m` tower with generator `γ = y`,
+//! `m ≥ 2n−1`.
+//!
+//! * `φ(x) = f_x(γ)` where `f_x ∈ R[t]` is the unique polynomial of degree
+//!   `< n` with `f_x(a_i) = x_i` (for the ∞ variant: degree `≤ n−1` with the
+//!   coefficient of `t^{n−1}` equal to `x_n`). Because `deg f_x < n ≤ m`,
+//!   the coefficients of `f_x` *are* the `γ`-coordinates of `φ(x)`.
+//! * `ψ(α)`: write `α = g(γ)` with `deg g < m` (coordinates of `α`), output
+//!   `(g(a_1), …, g(a_n))` (∞ variant: last slot is the coefficient of
+//!   `t^{2n−2}`).
+//!
+//! Correctness: `φ(x)·φ(y) = (f_x f_y)(γ)` and `deg(f_x f_y) ≤ 2n−2 < m`, so
+//! the product's `γ`-coordinates are exactly the coefficients of `f_x f_y`;
+//! evaluating at `a_i` gives `x_i y_i` and the coefficient of `t^{2n−2}` is
+//! the product of leading coefficients, i.e. `x_n y_n` for the ∞ variant.
+//!
+//! The rate `m/n → 2` matches the constant-rate guarantee of Lemma II.3; the
+//! ∞ point gives e.g. the `(3,5)`-RMFE over `Z_{2^e}` mentioned in §V.C
+//! (`p^d = 2` has only two finite points).
+
+use super::RmfeScheme;
+use crate::ring::eval::lagrange_basis_coeffs;
+use crate::ring::extension::Extension;
+use crate::ring::galois::ExtensibleRing;
+use crate::ring::poly;
+use crate::ring::traits::Ring;
+
+/// Interpolation-based RMFE. Construct via [`PolyRmfe::new`] or
+/// [`PolyRmfe::with_ext`].
+#[derive(Clone)]
+pub struct PolyRmfe<R: ExtensibleRing> {
+    base: R,
+    ext: Extension<R>,
+    n: usize,
+    m: usize,
+    /// Finite evaluation points (n, or n−1 when `use_infinity`).
+    points: Vec<R::Elem>,
+    use_infinity: bool,
+    /// φ table: `phi_basis[i]` = coefficients (length < n, padded to n) of the
+    /// i-th Lagrange basis polynomial — φ(x) = Σ_i x_i · phi_basis[i].
+    /// For the ∞ slot the basis is `M(t) = Π (t − a_j)` itself.
+    phi_basis: Vec<Vec<R::Elem>>,
+    /// ψ table: `psi_pows[i][k] = a_i^k` for k < m — ψ_i(α) = Σ_k c_k a_i^k.
+    psi_pows: Vec<Vec<R::Elem>>,
+}
+
+impl<R: ExtensibleRing> PolyRmfe<R> {
+    /// `(n, m)`-RMFE with `m = 2n−1` (the optimal rate for one hop) over a
+    /// fresh tower `Extension::new(base, m)`.
+    ///
+    /// Uses finite points only when `n ≤ p^d`; switches to `n−1` finite
+    /// points + ∞ when `n = p^d + 1`. Errors for larger `n` (use
+    /// [`super::concat::ConcatRmfe`]).
+    pub fn new(base: R, n: usize) -> anyhow::Result<Self> {
+        Self::with_m(base, n, 2 * n - 1)
+    }
+
+    /// `(n, m)`-RMFE with explicit `m ≥ 2n−1` (the paper's §V setup uses
+    /// `(2, 3)` over `GR(2^64, 3)` but `(2, 4)` over `GR(2^64, 4)` — `m` is
+    /// dictated by the worker count, padding the RMFE).
+    pub fn with_m(base: R, n: usize, m: usize) -> anyhow::Result<Self> {
+        let ext = Extension::new(base.clone(), m);
+        Self::with_ext(ext, n)
+    }
+
+    /// `(n, m)`-RMFE into an existing tower (shared with the coding layer).
+    pub fn with_ext(ext: Extension<R>, n: usize) -> anyhow::Result<Self> {
+        let base = ext.base().clone();
+        let m = ext.m();
+        anyhow::ensure!(n >= 1, "n must be >= 1");
+        anyhow::ensure!(
+            m >= 2 * n - 1,
+            "(n={n}, m={m}): RMFE needs m >= 2n-1 so products of degree-(n-1) \
+             interpolants are faithfully represented"
+        );
+        let pd = base.residue_size();
+        let use_infinity = (n as u128) > pd;
+        anyhow::ensure!(
+            (n as u128) <= pd + 1,
+            "n = {n} exceeds p^d + 1 = {} for base {} — use ConcatRmfe (Lemma II.5)",
+            pd + 1,
+            base.name()
+        );
+        let n_finite = if use_infinity { n - 1 } else { n };
+        let points = base.exceptional_points(n_finite)?;
+
+        // φ basis: Lagrange basis over the finite points …
+        let mut phi_basis = if n_finite > 0 {
+            lagrange_basis_coeffs(&base, &points)
+        } else {
+            vec![]
+        };
+        // … plus M(t) = Π (t − a_j) for the ∞ slot (monic of degree n−1:
+        // adds x_∞ to the leading coefficient without disturbing f(a_i)).
+        if use_infinity {
+            phi_basis.push(poly::from_roots(&base, &points));
+        }
+
+        // ψ powers: a_i^k for k < m.
+        let mut psi_pows = Vec::with_capacity(n_finite);
+        for a in &points {
+            let mut row = Vec::with_capacity(m);
+            let mut acc = base.one();
+            for _ in 0..m {
+                row.push(acc.clone());
+                acc = base.mul(&acc, a);
+            }
+            psi_pows.push(row);
+        }
+
+        Ok(PolyRmfe { base, ext, n, m, points, use_infinity, phi_basis, psi_pows })
+    }
+
+    /// The finite evaluation points.
+    pub fn points(&self) -> &[R::Elem] {
+        &self.points
+    }
+
+    pub fn uses_infinity(&self) -> bool {
+        self.use_infinity
+    }
+}
+
+impl<R: ExtensibleRing> RmfeScheme<R, Extension<R>> for PolyRmfe<R> {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn base(&self) -> &R {
+        &self.base
+    }
+    fn ext(&self) -> &Extension<R> {
+        &self.ext
+    }
+
+    fn phi(&self, xs: &[R::Elem]) -> <Extension<R> as Ring>::Elem {
+        assert_eq!(xs.len(), self.n, "phi takes exactly n slots");
+        let mut coeffs = vec![self.base.zero(); self.m];
+        for (x, basis) in xs.iter().zip(&self.phi_basis) {
+            if self.base.is_zero(x) {
+                continue;
+            }
+            for (k, c) in basis.iter().enumerate() {
+                self.base.mul_add_assign(&mut coeffs[k], c, x);
+            }
+        }
+        coeffs
+    }
+
+    fn psi(&self, alpha: &<Extension<R> as Ring>::Elem) -> Vec<R::Elem> {
+        let c = self.ext.coeffs(alpha);
+        let mut out = Vec::with_capacity(self.n);
+        for row in &self.psi_pows {
+            out.push(self.base.dot(c, row));
+        }
+        if self.use_infinity {
+            // coefficient of t^{2n−2} (products of two degree-(n−1) leading
+            // coefficients land exactly there)
+            out.push(c[2 * self.n - 2].clone());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::galois::GaloisRing;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn check_rmfe_property<R: ExtensibleRing>(rmfe: &PolyRmfe<R>, seeds: u64, iters: usize) {
+        let base = rmfe.base().clone();
+        let ext = rmfe.ext().clone();
+        let n = rmfe.n();
+        let mut rng = Rng64::seeded(seeds);
+        for _ in 0..iters {
+            let xs: Vec<_> = (0..n).map(|_| base.random(&mut rng)).collect();
+            let ys: Vec<_> = (0..n).map(|_| base.random(&mut rng)).collect();
+            let prod = ext.mul(&rmfe.phi(&xs), &rmfe.phi(&ys));
+            let got = rmfe.psi(&prod);
+            let expect: Vec<_> = xs.iter().zip(&ys).map(|(x, y)| base.mul(x, y)).collect();
+            assert_eq!(got, expect, "x⋆y = ψ(φ(x)φ(y)) violated");
+        }
+    }
+
+    #[test]
+    fn rmfe_2_3_over_z2e64() {
+        // The paper's 8-worker configuration: (2,3)-RMFE over Z_2^64.
+        let rmfe = PolyRmfe::new(Zq::z2e(64), 2).unwrap();
+        assert_eq!(rmfe.m(), 3);
+        assert!(!rmfe.uses_infinity());
+        check_rmfe_property(&rmfe, 61, 50);
+    }
+
+    #[test]
+    fn rmfe_2_4_over_z2e64() {
+        // The paper's 16-worker configuration: (2,4)-RMFE (padded m).
+        let rmfe = PolyRmfe::with_m(Zq::z2e(64), 2, 4).unwrap();
+        assert_eq!(rmfe.m(), 4);
+        check_rmfe_property(&rmfe, 62, 50);
+    }
+
+    #[test]
+    fn rmfe_3_5_over_z2e64_infinity() {
+        // §V.C: (3,5)-RMFE over Z_2^64 — needs the point at infinity
+        // (Z_2 has only two finite exceptional points).
+        let rmfe = PolyRmfe::new(Zq::z2e(64), 3).unwrap();
+        assert_eq!(rmfe.m(), 5);
+        assert!(rmfe.uses_infinity());
+        check_rmfe_property(&rmfe, 63, 50);
+    }
+
+    #[test]
+    fn rmfe_over_galois_ring_base() {
+        // (4, 7)-RMFE over GR(2^16, 2): p^d = 4 finite points exactly.
+        let base = GaloisRing::new(2, 16, 2);
+        let rmfe = PolyRmfe::new(base, 4).unwrap();
+        assert!(!rmfe.uses_infinity());
+        check_rmfe_property(&rmfe, 64, 30);
+    }
+
+    #[test]
+    fn rmfe_over_galois_ring_base_infinity() {
+        // (5, 9)-RMFE over GR(2^16, 2): 4 finite + ∞.
+        let base = GaloisRing::new(2, 16, 2);
+        let rmfe = PolyRmfe::new(base, 5).unwrap();
+        assert!(rmfe.uses_infinity());
+        check_rmfe_property(&rmfe, 65, 30);
+    }
+
+    #[test]
+    fn rmfe_over_small_field() {
+        // GR(p, d) = GF(p^d): the "small Galois field" case of the paper.
+        let base = GaloisRing::new(2, 1, 2); // GF(4)
+        let rmfe = PolyRmfe::new(base, 4).unwrap();
+        check_rmfe_property(&rmfe, 66, 30);
+    }
+
+    #[test]
+    fn rmfe_odd_characteristic() {
+        let rmfe = PolyRmfe::new(Zq::new(3, 4), 3).unwrap(); // 3 finite points in Z_81
+        check_rmfe_property(&rmfe, 67, 30);
+    }
+
+    #[test]
+    fn phi_is_linear() {
+        let base = Zq::z2e(64);
+        let rmfe = PolyRmfe::new(base.clone(), 2).unwrap();
+        let ext = rmfe.ext().clone();
+        let mut rng = Rng64::seeded(68);
+        for _ in 0..20 {
+            let xs: Vec<_> = (0..2).map(|_| base.random(&mut rng)).collect();
+            let ys: Vec<_> = (0..2).map(|_| base.random(&mut rng)).collect();
+            let s = base.random(&mut rng);
+            let lhs = rmfe.phi(
+                &xs.iter()
+                    .zip(&ys)
+                    .map(|(x, y)| base.add(x, &base.mul(&s, y)))
+                    .collect::<Vec<_>>(),
+            );
+            let rhs = ext.add(
+                &rmfe.phi(&xs),
+                &ext.mul(&ext.from_base(&s), &rmfe.phi(&ys)),
+            );
+            assert_eq!(lhs, rhs);
+        }
+    }
+
+    #[test]
+    fn psi_inverts_phi_finite_points() {
+        // ψ∘φ = id holds for the finite-point variant (evaluating the
+        // interpolant recovers the slots). NOTE: it intentionally does *not*
+        // hold for the ∞ variant — ψ's last slot reads the coefficient of
+        // t^{2n−2}, which is only meaningful on *products* (the only thing
+        // Definition II.2 requires).
+        let rmfe = PolyRmfe::new(Zq::z2e(64), 2).unwrap();
+        let base = rmfe.base().clone();
+        let mut rng = Rng64::seeded(69);
+        for _ in 0..20 {
+            let xs: Vec<_> = (0..2).map(|_| base.random(&mut rng)).collect();
+            assert_eq!(rmfe.psi(&rmfe.phi(&xs)), xs);
+        }
+        // ∞ variant: the product property (checked in rmfe_3_5_…) is the
+        // contract; ψ∘φ = id is not.
+        let rmfe3 = PolyRmfe::new(Zq::z2e(64), 3).unwrap();
+        let one = vec![base.one(), base.one(), base.one()];
+        let packed = rmfe3.phi(&one);
+        let ext = rmfe3.ext().clone();
+        let prod = ext.mul(&packed, &rmfe3.phi(&one));
+        assert_eq!(rmfe3.psi(&prod), one, "1⋆1 = 1 via the product path");
+    }
+
+    #[test]
+    fn rejects_undersized_m() {
+        assert!(PolyRmfe::with_m(Zq::z2e(64), 2, 2).is_err());
+        assert!(PolyRmfe::with_m(Zq::z2e(64), 3, 4).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_n() {
+        // Z_2^e supports at most n = 3 (2 finite + ∞).
+        assert!(PolyRmfe::new(Zq::z2e(64), 4).is_err());
+    }
+
+    #[test]
+    fn matrix_pack_unpack_roundtrip() {
+        use crate::ring::matrix::Matrix;
+        let rmfe = PolyRmfe::new(Zq::z2e(64), 2).unwrap();
+        let base = rmfe.base().clone();
+        let mut rng = Rng64::seeded(70);
+        let mats: Vec<_> = (0..2).map(|_| Matrix::random(&base, 3, 4, &mut rng)).collect();
+        let packed = rmfe.pack_matrices(&mats);
+        let un = rmfe.unpack_matrix(&packed);
+        assert_eq!(un, mats);
+    }
+
+    #[test]
+    fn matrix_product_hadamard_property() {
+        // The core of Section III-A: ψ applied entrywise to 𝒜·ℬ recovers
+        // the batch of products A_k · B_k.
+        use crate::ring::matrix::Matrix;
+        let rmfe = PolyRmfe::new(Zq::z2e(64), 2).unwrap();
+        let base = rmfe.base().clone();
+        let ext = rmfe.ext().clone();
+        let mut rng = Rng64::seeded(71);
+        let as_: Vec<_> = (0..2).map(|_| Matrix::random(&base, 3, 5, &mut rng)).collect();
+        let bs: Vec<_> = (0..2).map(|_| Matrix::random(&base, 5, 2, &mut rng)).collect();
+        let pa = rmfe.pack_matrices(&as_);
+        let pb = rmfe.pack_matrices(&bs);
+        let pc = Matrix::matmul(&ext, &pa, &pb);
+        let cs = rmfe.unpack_matrix(&pc);
+        for k in 0..2 {
+            assert_eq!(cs[k], Matrix::matmul(&base, &as_[k], &bs[k]), "slot {k}");
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Worker compute backend that executes share products through the AOT XLA
+//! artifact instead of the native ring kernels.
+//!
+//! The `xla` crate's PJRT client is `Rc`-based (not `Send`), so the
+//! executable cannot be shared across worker threads. Each worker thread
+//! lazily opens its *own* client + compiled artifact through a thread-local
+//! cache — which also happens to model the deployment reality (every worker
+//! node is a separate process with its own PJRT runtime).
+//!
+//! Share wire format ↔ artifact format: a share matrix over
+//! `GR(2^64, m) = Extension<Zq>` is converted to `m` coefficient planes
+//! (plane-major `u64` buffer), matching the `(m, rows, cols)` inputs of
+//! `python/compile/kernels/gr_matmul.py`. The artifact's baked modulus must
+//! equal the rust tower's modulus — validated at construction.
+
+use super::{HloArtifact, XlaRuntime};
+use crate::codes::scheme::Share;
+use crate::coordinator::worker::ShareCompute;
+use crate::ring::extension::Extension;
+use crate::ring::matrix::Matrix;
+use crate::ring::zq::Zq;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+type ExtElem = Vec<u64>;
+
+thread_local! {
+    /// (artifact dir, artifact name) → compiled executable, per thread.
+    static ARTIFACT_CACHE: RefCell<HashMap<(String, String), Rc<HloArtifact>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Convert a `GR(2^64, m)` matrix into plane-major u64 data
+/// (`planes[k][i][j] = M[i,j][k]`).
+pub fn ext_matrix_to_planes(m: usize, mat: &Matrix<ExtElem>) -> Vec<u64> {
+    let (rows, cols) = (mat.rows, mat.cols);
+    let mut out = vec![0u64; m * rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let e = mat.at(i, j);
+            for k in 0..m {
+                out[k * rows * cols + i * cols + j] = e[k];
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`ext_matrix_to_planes`].
+pub fn planes_to_ext_matrix(m: usize, rows: usize, cols: usize, data: &[u64]) -> Matrix<ExtElem> {
+    assert_eq!(data.len(), m * rows * cols);
+    Matrix::from_fn(rows, cols, |i, j| {
+        (0..m).map(|k| data[k * rows * cols + i * cols + j]).collect::<Vec<u64>>()
+    })
+}
+
+/// XLA-backed [`ShareCompute`] for shares over `Extension<Zq>` (i.e.
+/// `GR(2^64, m)`).
+pub struct XlaShareCompute {
+    dir: PathBuf,
+    artifact_name: String,
+    ext: Extension<Zq>,
+    m: usize,
+    /// Expected share shapes (from the artifact spec): A is t×r, B is r×s.
+    t: usize,
+    r: usize,
+    s: usize,
+}
+
+impl XlaShareCompute {
+    /// Bind to the artifact matching `(m, t, r, s)` in `dir`'s manifest and
+    /// validate that its baked modulus equals `ext`'s defining polynomial.
+    pub fn for_shapes(
+        dir: impl Into<PathBuf>,
+        ext: Extension<Zq>,
+        t: usize,
+        r: usize,
+        s: usize,
+    ) -> anyhow::Result<Self> {
+        let dir: PathBuf = dir.into();
+        let m = ext.m();
+        let runtime = XlaRuntime::open(&dir)?;
+        let spec = runtime.find_spec(m, t, r, s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact for m={m}, shapes {t}x{r}x{s} in {} — regenerate with \
+                 `python -m compile.aot` for this configuration",
+                dir.display()
+            )
+        })?;
+        anyhow::ensure!(
+            spec.modulus.len() == m + 1 && spec.modulus[..] == ext_modulus_u64(&ext)[..],
+            "artifact modulus {:?} != rust tower modulus {:?} — cross-language \
+             contract violated",
+            spec.modulus,
+            ext_modulus_u64(&ext)
+        );
+        Ok(XlaShareCompute {
+            artifact_name: spec.name.clone(),
+            dir,
+            ext,
+            m,
+            t,
+            r,
+            s,
+        })
+    }
+
+    fn with_artifact<T>(
+        &self,
+        f: impl FnOnce(&HloArtifact) -> anyhow::Result<T>,
+    ) -> anyhow::Result<T> {
+        ARTIFACT_CACHE.with(|cache| {
+            let key = (
+                self.dir.display().to_string(),
+                self.artifact_name.clone(),
+            );
+            let mut cache = cache.borrow_mut();
+            if !cache.contains_key(&key) {
+                let runtime = XlaRuntime::open(&self.dir)?;
+                let artifact = runtime.load(&self.artifact_name)?;
+                cache.insert(key.clone(), Rc::new(artifact));
+            }
+            f(cache.get(&key).unwrap())
+        })
+    }
+}
+
+/// The tower modulus of `Extension<Zq>` as plain u64 coefficients.
+fn ext_modulus_u64(ext: &Extension<Zq>) -> Vec<u64> {
+    ext.modulus().to_vec()
+}
+
+impl ShareCompute for XlaShareCompute {
+    fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let share = Share::from_bytes(&self.ext, payload);
+        anyhow::ensure!(
+            share.a.rows == self.t && share.a.cols == self.r && share.b.cols == self.s,
+            "share shapes ({}, {})·({}, {}) do not match artifact {}x{}x{}",
+            share.a.rows,
+            share.a.cols,
+            share.b.rows,
+            share.b.cols,
+            self.t,
+            self.r,
+            self.s
+        );
+        let m = self.m;
+        let a_planes = ext_matrix_to_planes(m, &share.a);
+        let b_planes = ext_matrix_to_planes(m, &share.b);
+        let out = self.with_artifact(|artifact| {
+            artifact.run_u64(&[
+                (a_planes, vec![m as i64, self.t as i64, self.r as i64]),
+                (b_planes, vec![m as i64, self.r as i64, self.s as i64]),
+            ])
+        })?;
+        let c = planes_to_ext_matrix(m, self.t, self.s, &out);
+        Ok(c.to_bytes(&self.ext))
+    }
+
+    fn backend_name(&self) -> String {
+        format!("xla:{}", self.artifact_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng64;
+
+    #[test]
+    fn plane_conversion_roundtrip() {
+        let ext = Extension::new(Zq::z2e(64), 3);
+        let mut rng = Rng64::seeded(191);
+        let mat = Matrix::random(&ext, 4, 5, &mut rng);
+        let planes = ext_matrix_to_planes(3, &mat);
+        assert_eq!(planes.len(), 3 * 4 * 5);
+        let back = planes_to_ext_matrix(3, 4, 5, &planes);
+        assert_eq!(back, mat);
+    }
+
+    #[test]
+    fn plane_layout_is_plane_major() {
+        let ext = Extension::new(Zq::z2e(64), 2);
+        let mut mat = Matrix::zeros(&ext, 1, 2);
+        mat.set(0, 0, vec![10, 11]);
+        mat.set(0, 1, vec![20, 21]);
+        // plane 0 = [10, 20], plane 1 = [11, 21]
+        assert_eq!(ext_matrix_to_planes(2, &mat), vec![10, 20, 11, 21]);
+    }
+}

@@ -1,0 +1,225 @@
+//! The PJRT runtime bridge: load AOT-compiled HLO artifacts (lowered once
+//! from JAX/Pallas by `python/compile/aot.py`) and execute them from the
+//! rust request path via the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO **text** — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; `from_text_file`
+//! reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! * [`XlaRuntime`] — one PJRT client per process; compiles artifacts once.
+//! * [`HloArtifact`] — a loaded executable with its manifest entry.
+//! * [`gr_backend`] — a [`ShareCompute`](crate::coordinator::worker::ShareCompute)
+//!   backend that runs worker share products through the artifact instead of
+//!   the native ring kernels.
+
+pub mod gr_backend;
+
+use std::path::{Path, PathBuf};
+
+/// Manifest entry describing one artifact (parsed from
+/// `artifacts/manifest.json`, written by `aot.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Extension degree (1 = plain u64 matmul).
+    pub m: usize,
+    pub t: usize,
+    pub r: usize,
+    pub s: usize,
+    /// Little-endian modulus coefficients (length m+1).
+    pub modulus: Vec<u64>,
+}
+
+/// Minimal JSON value extraction for the manifest (flat, known schema; we
+/// ship no JSON parser dependency). Robust to whitespace/ordering produced
+/// by `json.dump(indent=2)`.
+fn parse_manifest(text: &str) -> anyhow::Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    // Split on the artifact object boundaries: each entry contains "name".
+    for chunk in text.split('{').skip(2) {
+        // skip root + artifacts array opener
+        if !chunk.contains("\"name\"") {
+            continue;
+        }
+        let get_str = |key: &str| -> Option<String> {
+            let pat = format!("\"{key}\":");
+            let at = chunk.find(&pat)? + pat.len();
+            let rest = chunk[at..].trim_start();
+            let rest = rest.strip_prefix('"')?;
+            Some(rest[..rest.find('"')?].to_string())
+        };
+        let get_num = |key: &str| -> Option<u64> {
+            let pat = format!("\"{key}\":");
+            let at = chunk.find(&pat)? + pat.len();
+            let rest = chunk[at..].trim_start();
+            let end = rest.find(|c: char| !c.is_ascii_digit())?;
+            rest[..end].parse().ok()
+        };
+        let get_arr = |key: &str| -> Option<Vec<u64>> {
+            let pat = format!("\"{key}\":");
+            let at = chunk.find(&pat)? + pat.len();
+            let rest = chunk[at..].trim_start().strip_prefix('[')?;
+            let inner = &rest[..rest.find(']')?];
+            Some(
+                inner
+                    .split(',')
+                    .filter_map(|x| x.trim().parse().ok())
+                    .collect(),
+            )
+        };
+        specs.push(ArtifactSpec {
+            name: get_str("name").ok_or_else(|| anyhow::anyhow!("manifest: missing name"))?,
+            file: get_str("file").ok_or_else(|| anyhow::anyhow!("manifest: missing file"))?,
+            m: get_num("m").ok_or_else(|| anyhow::anyhow!("manifest: missing m"))? as usize,
+            t: get_num("t").unwrap_or(0) as usize,
+            r: get_num("r").unwrap_or(0) as usize,
+            s: get_num("s").unwrap_or(0) as usize,
+            modulus: get_arr("modulus").unwrap_or_default(),
+        });
+    }
+    anyhow::ensure!(!specs.is_empty(), "manifest contains no artifacts");
+    Ok(specs)
+}
+
+/// A loaded, compiled HLO artifact.
+pub struct HloArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HloArtifact {
+    /// Execute with u64 input buffers (row-major, shapes from the spec).
+    /// The lowered fn returns a 1-tuple (aot.py lowers with
+    /// `return_tuple=True`).
+    pub fn run_u64(&self, inputs: &[(Vec<u64>, Vec<i64>)]) -> anyhow::Result<Vec<u64>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data.as_slice());
+                lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let out = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        out.to_vec::<u64>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+}
+
+/// The process-wide PJRT client + artifact loader.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+}
+
+impl XlaRuntime {
+    /// Open the CPU PJRT client over an artifact directory (reads
+    /// `manifest.json`). `GR_CDMM_ARTIFACTS` overrides the default
+    /// `artifacts/`.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!(
+                "read manifest in {}: {e} (run `make artifacts`)",
+                dir.display()
+            )
+        })?;
+        let specs = parse_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        Ok(XlaRuntime { client, dir, specs })
+    }
+
+    /// Default artifact directory: `$GR_CDMM_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> anyhow::Result<Self> {
+        let dir = std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Find the manifest entry for a GR worker task with the given extension
+    /// degree and share shapes.
+    pub fn find_spec(&self, m: usize, t: usize, r: usize, s: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|a| a.m == m && a.t == t && a.r == r && a.s == s)
+    }
+
+    /// Load + compile one artifact by manifest name.
+    pub fn load(&self, name: &str) -> anyhow::Result<HloArtifact> {
+        let spec = self
+            .specs
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        Ok(HloArtifact { spec, exe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parser_handles_aot_output() {
+        let text = r#"{
+  "artifacts": [
+    {
+      "name": "matmul_u64_16x16x16",
+      "file": "matmul_u64_16x16x16.hlo.txt",
+      "m": 1,
+      "t": 16,
+      "r": 16,
+      "s": 16,
+      "modulus": [0, 1],
+      "dtype": "uint64"
+    },
+    {
+      "name": "worker_gr_m3_16x32x16",
+      "file": "worker_gr_m3_16x32x16.hlo.txt",
+      "m": 3,
+      "t": 16,
+      "r": 32,
+      "s": 16,
+      "modulus": [1, 1, 0, 1],
+      "dtype": "uint64"
+    }
+  ]
+}"#;
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "matmul_u64_16x16x16");
+        assert_eq!(specs[0].m, 1);
+        assert_eq!(specs[1].modulus, vec![1, 1, 0, 1]);
+        assert_eq!(specs[1].r, 32);
+    }
+
+    #[test]
+    fn manifest_parser_rejects_empty() {
+        assert!(parse_manifest("{\"artifacts\": []}").is_err());
+    }
+}

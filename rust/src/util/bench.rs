@@ -1,0 +1,162 @@
+//! Minimal statistical micro-benchmark harness (in-repo `criterion` stand-in).
+//!
+//! Methodology mirrors the paper's (§V.A: "10 times per configuration,
+//! averaged"): warmup, `reps` timed runs, report min / median / mean / max.
+//! Used by every `rust/benches/*.rs` target and the experiments harness.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub reps: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Sample {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Benchmark runner: `warmup` untimed runs followed by `reps` timed runs.
+pub struct Bencher {
+    pub warmup: usize,
+    pub reps: usize,
+    quiet: bool,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, reps: 5, quiet: false }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Bencher { warmup, reps, quiet: false }
+    }
+
+    /// Honour `GR_CDMM_BENCH_REPS` / `GR_CDMM_BENCH_WARMUP` env overrides so CI
+    /// can dial effort up or down without editing bench sources.
+    pub fn from_env() -> Self {
+        let reps = std::env::var("GR_CDMM_BENCH_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5);
+        let warmup = std::env::var("GR_CDMM_BENCH_WARMUP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1);
+        Bencher { warmup, reps, quiet: false }
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Run `f` and collect timing statistics.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Sample {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps.max(1) {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let total: Duration = times.iter().sum();
+        let sample = Sample {
+            name: name.to_string(),
+            reps: times.len(),
+            min: times[0],
+            median: times[times.len() / 2],
+            mean: total / times.len() as u32,
+            max: *times.last().unwrap(),
+        };
+        if !self.quiet {
+            println!(
+                "{:<48} reps={:<3} min={:>12?} median={:>12?} mean={:>12?} max={:>12?}",
+                sample.name, sample.reps, sample.min, sample.median, sample.mean, sample.max
+            );
+        }
+        sample
+    }
+
+    /// Time a single invocation of `f`, returning both duration and result.
+    pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (Duration, T) {
+        let t0 = Instant::now();
+        let out = f();
+        (t0.elapsed(), out)
+    }
+}
+
+/// Format a throughput line: items (e.g. ring ops or bytes) per second.
+pub fn throughput(items: f64, d: Duration) -> f64 {
+    items / d.as_secs_f64().max(1e-12)
+}
+
+/// Render a markdown table from rows of (label, column values).
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&header.join(" | "));
+    out.push_str(" |\n|");
+    for _ in header {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher::new(0, 3).quiet();
+        let mut count = 0u64;
+        let s = b.bench("noop", || {
+            count += 1;
+        });
+        assert_eq!(s.reps, 3);
+        assert_eq!(count, 3);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (d, v) = Bencher::time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() < 1_000_000_000);
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+    }
+}

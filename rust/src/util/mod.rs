@@ -1,0 +1,8 @@
+//! Small self-contained utilities: PRNG, micro-bench harness, CLI parsing,
+//! JSON emission. The offline build environment ships no `rand`/`criterion`/
+//! `clap`/`serde` — these are deliberately minimal in-repo replacements.
+
+pub mod rng;
+pub mod bench;
+pub mod cli;
+pub mod json;

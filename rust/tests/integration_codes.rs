@@ -1,0 +1,162 @@
+//! Cross-module integration: every scheme, end to end, over multiple rings,
+//! shapes and responder subsets — beyond the per-module unit tests.
+
+use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
+use gr_cdmm::codes::csa::CsaCode;
+use gr_cdmm::codes::ep::{EpCode, PlainEp};
+use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
+use gr_cdmm::codes::ep_rmfe_ii::EpRmfeII;
+use gr_cdmm::codes::matdot::MatDotCode;
+use gr_cdmm::codes::polynomial::PolynomialCode;
+use gr_cdmm::codes::scheme::{BatchCodedScheme, CodedScheme};
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::galois::GaloisRing;
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::traits::Ring;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::rng::Rng64;
+
+/// Generic single-scheme roundtrip with a random responder subset.
+fn single_roundtrip<R: Ring, S: CodedScheme<R>>(
+    scheme: &S,
+    t: usize,
+    r: usize,
+    s: usize,
+    seed: u64,
+) {
+    let ring = scheme.input_ring().clone();
+    let mut rng = Rng64::seeded(seed);
+    let a = Matrix::random(&ring, t, r, &mut rng);
+    let b = Matrix::random(&ring, r, s, &mut rng);
+    let shares = scheme.encode(&a, &b).unwrap();
+    let picks = rng.choose_k(scheme.n_workers(), scheme.recovery_threshold());
+    let responses: Vec<_> = picks
+        .iter()
+        .map(|&i| (i, scheme.worker_compute(&shares[i]).unwrap()))
+        .collect();
+    let c = scheme.decode(&responses).unwrap();
+    assert_eq!(c, Matrix::matmul(&ring, &a, &b), "{}", scheme.name());
+}
+
+#[test]
+fn all_single_schemes_random_subsets() {
+    let base = Zq::z2e(64);
+    for seed in 0..5u64 {
+        single_roundtrip(
+            &PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap(),
+            8, 8, 8, 300 + seed,
+        );
+        single_roundtrip(
+            &EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap(),
+            8, 8, 8, 310 + seed,
+        );
+        single_roundtrip(
+            &EpRmfeII::new(base.clone(), 8, 2, 1, 2, 2).unwrap(),
+            8, 8, 8, 320 + seed,
+        );
+    }
+}
+
+#[test]
+fn all_single_schemes_16_workers() {
+    let base = Zq::z2e(64);
+    single_roundtrip(&PlainEp::new(base.clone(), 16, 2, 2, 2).unwrap(), 8, 8, 8, 330);
+    single_roundtrip(&EpRmfeI::new(base.clone(), 16, 2, 2, 2, 2).unwrap(), 8, 8, 8, 331);
+    single_roundtrip(&EpRmfeII::new(base.clone(), 16, 2, 2, 2, 2).unwrap(), 8, 8, 8, 332);
+}
+
+#[test]
+fn direct_codes_over_extension_rings() {
+    let ext3 = Extension::new(Zq::z2e(64), 3);
+    single_roundtrip(&EpCode::new(ext3.clone(), 8, 2, 1, 2).unwrap(), 4, 4, 4, 340);
+    single_roundtrip(&PolynomialCode::new(ext3.clone(), 8, 2, 2).unwrap(), 4, 4, 4, 341);
+    single_roundtrip(&MatDotCode::new(ext3, 8, 3).unwrap(), 4, 6, 4, 342);
+}
+
+#[test]
+fn schemes_over_odd_characteristic() {
+    // Z_{3^5}: 3 exceptional points in the base; m covers N.
+    let base = Zq::new(3, 5);
+    single_roundtrip(&PlainEp::new(base.clone(), 10, 2, 1, 2).unwrap(), 4, 4, 4, 350);
+    single_roundtrip(&EpRmfeI::new(base.clone(), 10, 2, 1, 2, 2).unwrap(), 4, 4, 4, 351);
+    single_roundtrip(&EpRmfeII::new(base, 10, 2, 1, 2, 3).unwrap(), 4, 4, 6, 352);
+}
+
+#[test]
+fn schemes_over_small_galois_field() {
+    // GF(4) inputs — the paper's "small Galois field" contribution.
+    let base = GaloisRing::new(2, 1, 2);
+    single_roundtrip(&PlainEp::new(base.clone(), 17, 2, 2, 2).unwrap(), 4, 4, 4, 360);
+    single_roundtrip(&EpRmfeI::new(base.clone(), 17, 2, 2, 2, 2).unwrap(), 4, 4, 4, 361);
+}
+
+#[test]
+fn batch_schemes_roundtrip_many_configs() {
+    let base = Zq::z2e(64);
+    for (n_batch, n_workers, u, w, v) in [(2, 8, 2, 1, 2), (2, 16, 2, 2, 2), (3, 32, 2, 1, 2)] {
+        let scheme = BatchEpRmfe::new(base.clone(), n_workers, n_batch, u, w, v).unwrap();
+        let mut rng = Rng64::seeded(370 + n_workers as u64);
+        let a: Vec<_> = (0..n_batch).map(|_| Matrix::random(&base, 4, 4, &mut rng)).collect();
+        let b: Vec<_> = (0..n_batch).map(|_| Matrix::random(&base, 4, 4, &mut rng)).collect();
+        let shares = scheme.encode_batch(&a, &b).unwrap();
+        let picks = rng.choose_k(n_workers, scheme.recovery_threshold());
+        let responses: Vec<_> = picks
+            .iter()
+            .map(|&i| (i, scheme.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        let c = scheme.decode_batch(&responses).unwrap();
+        for k in 0..n_batch {
+            assert_eq!(c[k], Matrix::matmul(&base, &a[k], &b[k]));
+        }
+    }
+}
+
+#[test]
+fn csa_random_subsets() {
+    let ext = Extension::new(Zq::z2e(64), 4);
+    let csa = CsaCode::new(ext.clone(), 9, 3).unwrap();
+    let mut rng = Rng64::seeded(380);
+    let a: Vec<_> = (0..3).map(|_| Matrix::random(&ext, 3, 3, &mut rng)).collect();
+    let b: Vec<_> = (0..3).map(|_| Matrix::random(&ext, 3, 3, &mut rng)).collect();
+    let shares = csa.encode_batch(&a, &b).unwrap();
+    for trial in 0..4 {
+        let picks = rng.choose_k(9, csa.recovery_threshold());
+        let responses: Vec<_> = picks
+            .iter()
+            .map(|&i| (i, csa.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        let c = csa.decode_batch(&responses).unwrap();
+        for k in 0..3 {
+            assert_eq!(c[k], Matrix::matmul(&ext, &a[k], &b[k]), "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn comm_model_matches_wire_for_all_schemes() {
+    let base = Zq::z2e(64);
+    let (t, r, s) = (8usize, 8, 8);
+    let mut rng = Rng64::seeded(390);
+    let a = Matrix::random(&base, t, r, &mut rng);
+    let b = Matrix::random(&base, r, s, &mut rng);
+
+    macro_rules! check {
+        ($scheme:expr) => {{
+            let scheme = $scheme;
+            let shares = scheme.encode(&a, &b).unwrap();
+            let ring = scheme.share_ring();
+            let wire: usize = shares.iter().map(|sh| sh.byte_len(ring)).sum();
+            assert_eq!(wire, scheme.upload_bytes(t, r, s), "{}", scheme.name());
+            let resp = scheme.worker_compute(&shares[0]).unwrap();
+            assert_eq!(
+                resp.byte_len(ring) * scheme.recovery_threshold(),
+                scheme.download_bytes(t, r, s),
+                "{}",
+                scheme.name()
+            );
+        }};
+    }
+    check!(PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap());
+    check!(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+    check!(EpRmfeII::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+}

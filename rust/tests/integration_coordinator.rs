@@ -1,0 +1,119 @@
+//! Coordinator integration: coded jobs under adverse cluster conditions.
+
+use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
+use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
+use gr_cdmm::codes::ep_rmfe_ii::EpRmfeII;
+use gr_cdmm::codes::scheme::{BatchCodedScheme, CodedScheme};
+use gr_cdmm::coordinator::runner::{run_batch, run_single, NativeBatchCompute, NativeSingleCompute};
+use gr_cdmm::coordinator::{Coordinator, StragglerModel};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::rng::Rng64;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn exponential_stragglers_still_decode() {
+    let base = Zq::z2e(64);
+    let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::Exponential { mean: Duration::from_millis(5) };
+    let mut coord = Coordinator::new(8, backend, straggler, 400);
+    let mut rng = Rng64::seeded(401);
+    for _ in 0..3 {
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        let (c, _) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        assert_eq!(c, Matrix::matmul(&base, &a, &b));
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn max_tolerable_failures() {
+    // N − R = 8 − 4 = 4 fail-stop workers: still decodable.
+    let base = Zq::z2e(64);
+    let scheme = Arc::new(EpRmfeII::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::fail_stop([0, 2, 4, 6]);
+    let mut coord = Coordinator::new(8, backend, straggler, 402);
+    let mut rng = Rng64::seeded(403);
+    let a = Matrix::random(&base, 8, 8, &mut rng);
+    let b = Matrix::random(&base, 8, 8, &mut rng);
+    let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+    assert_eq!(c, Matrix::matmul(&base, &a, &b));
+    assert_eq!(m.used_workers.len(), 4);
+    for w in &m.used_workers {
+        assert!(w % 2 == 1, "only odd workers survived");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn one_failure_too_many_times_out() {
+    let base = Zq::z2e(64);
+    let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::fail_stop([0, 1, 2, 3, 4]); // 5 > N−R
+    let mut coord = Coordinator::new(8, backend, straggler, 404);
+    coord.timeout = Duration::from_millis(300);
+    let mut rng = Rng64::seeded(405);
+    let a = Matrix::random(&base, 8, 8, &mut rng);
+    let b = Matrix::random(&base, 8, 8, &mut rng);
+    assert!(run_single(scheme.as_ref(), &mut coord, &a, &b).is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn sequential_jobs_with_job_id_isolation() {
+    // Slow stragglers from job k must not pollute job k+1 (stale job ids
+    // are discarded).
+    let base = Zq::z2e(64);
+    let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::fixed_slow([6, 7], Duration::from_millis(60));
+    let mut coord = Coordinator::new(8, backend, straggler, 406);
+    let mut rng = Rng64::seeded(407);
+    for _ in 0..4 {
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        let (c, _) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        assert_eq!(c, Matrix::matmul(&base, &a, &b));
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn batch_job_under_stragglers() {
+    let base = Zq::z2e(64);
+    let scheme = Arc::new(BatchEpRmfe::new(base.clone(), 16, 2, 2, 2, 2).unwrap());
+    let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::fixed_slow([0, 5, 10], Duration::from_millis(80));
+    let mut coord = Coordinator::new(16, backend, straggler, 408);
+    let mut rng = Rng64::seeded(409);
+    let a: Vec<_> = (0..2).map(|_| Matrix::random(&base, 8, 8, &mut rng)).collect();
+    let b: Vec<_> = (0..2).map(|_| Matrix::random(&base, 8, 8, &mut rng)).collect();
+    let (c, m) = run_batch(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+    for k in 0..2 {
+        assert_eq!(c[k], Matrix::matmul(&base, &a[k], &b[k]));
+    }
+    assert_eq!(m.used_workers.len(), 9);
+    coord.shutdown();
+}
+
+#[test]
+fn download_counters_isolated_per_job() {
+    let base = Zq::z2e(64);
+    let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let mut coord = Coordinator::new(8, backend, StragglerModel::None, 410);
+    let mut rng = Rng64::seeded(411);
+    let a = Matrix::random(&base, 8, 8, &mut rng);
+    let b = Matrix::random(&base, 8, 8, &mut rng);
+    let (_, m1) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+    let (_, m2) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+    // runner resets counters per job: both jobs report the same volumes.
+    assert_eq!(m1.upload_bytes, m2.upload_bytes);
+    assert_eq!(m1.download_bytes, m2.download_bytes);
+    coord.shutdown();
+}

@@ -1,0 +1,116 @@
+//! Integration: the python-AOT → rust-PJRT path.
+//!
+//! Requires `make artifacts` (the Makefile `test` target builds them first).
+//! Validates the cross-language contracts:
+//! 1. the deterministic modulus search agrees between
+//!    `ring::irreducible::find_irreducible` and
+//!    `python/compile/kernels/gr_matmul.py::find_irreducible_gf2`;
+//! 2. the AOT-compiled GR worker task is bit-identical to the rust-native
+//!    extension-ring matmul;
+//! 3. a full coded job decodes correctly with the XLA worker backend.
+
+use gr_cdmm::codes::ep::PlainEp;
+use gr_cdmm::codes::scheme::CodedScheme;
+use gr_cdmm::coordinator::{run_single, Coordinator, StragglerModel};
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::traits::Ring;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::runtime::gr_backend::{ext_matrix_to_planes, planes_to_ext_matrix, XlaShareCompute};
+use gr_cdmm::runtime::XlaRuntime;
+use gr_cdmm::util::rng::Rng64;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts in {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+/// Contract 1: the canonical GF(2) moduli (these exact constants are also
+/// asserted in python/tests/test_gr.py).
+#[test]
+fn canonical_moduli_cross_language_contract() {
+    assert_eq!(Extension::new(Zq::z2e(64), 2).modulus(), &[1, 1, 1]);
+    assert_eq!(Extension::new(Zq::z2e(64), 3).modulus(), &[1, 1, 0, 1]);
+    assert_eq!(Extension::new(Zq::z2e(64), 4).modulus(), &[1, 1, 0, 0, 1]);
+    assert_eq!(Extension::new(Zq::z2e(64), 5).modulus(), &[1, 0, 1, 0, 0, 1]);
+}
+
+/// Contract 2a: plain u64 matmul artifact vs rust-native matmul.
+#[test]
+fn u64_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = XlaRuntime::open(&dir).unwrap();
+    let spec = runtime.find_spec(1, 128, 128, 128).expect("u64 artifact");
+    let artifact = runtime.load(&spec.name.clone()).unwrap();
+
+    let zq = Zq::z2e(64);
+    let mut rng = Rng64::seeded(201);
+    let a = Matrix::random(&zq, 128, 128, &mut rng);
+    let b = Matrix::random(&zq, 128, 128, &mut rng);
+    let out = artifact
+        .run_u64(&[
+            (a.data.clone(), vec![128, 128]),
+            (b.data.clone(), vec![128, 128]),
+        ])
+        .unwrap();
+    let expected = Matrix::matmul(&zq, &a, &b);
+    assert_eq!(out, expected.data, "XLA artifact must be bit-identical");
+}
+
+/// Contract 2b: GR(2^64, 3) worker artifact vs rust-native extension matmul.
+#[test]
+fn gr_m3_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = XlaRuntime::open(&dir).unwrap();
+    let Some(spec) = runtime.find_spec(3, 128, 256, 128) else {
+        eprintln!("SKIP: m=3 128x256x128 artifact missing");
+        return;
+    };
+    let ext = Extension::new(Zq::z2e(64), 3);
+    assert_eq!(spec.modulus, ext.modulus(), "modulus contract");
+    let artifact = runtime.load(&spec.name.clone()).unwrap();
+
+    let mut rng = Rng64::seeded(202);
+    let a = Matrix::random(&ext, 128, 256, &mut rng);
+    let b = Matrix::random(&ext, 256, 128, &mut rng);
+    let out = artifact
+        .run_u64(&[
+            (ext_matrix_to_planes(3, &a), vec![3, 128, 256]),
+            (ext_matrix_to_planes(3, &b), vec![3, 256, 128]),
+        ])
+        .unwrap();
+    let got = planes_to_ext_matrix(3, 128, 128, &out);
+    let expected = Matrix::matmul(&ext, &a, &b);
+    assert_eq!(got, expected, "GR matmul via XLA must match rust-native");
+}
+
+/// Contract 3: full coded job (plain EP over GR(2^64,3), N=8, u=v=2, w=1,
+/// 256×256 inputs ⇒ shares 128×256 · 256×128) with XLA worker backend.
+#[test]
+fn coded_job_with_xla_workers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let base = Zq::z2e(64);
+    let scheme = Arc::new(PlainEp::with_m(base.clone(), 3, 8, 2, 1, 2).unwrap());
+    let ext = scheme.share_ring().clone();
+    let backend = match XlaShareCompute::for_shapes(&dir, ext, 128, 256, 128) {
+        Ok(b) => Arc::new(b),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let mut coord = Coordinator::new(8, backend, StragglerModel::None, 203);
+    let mut rng = Rng64::seeded(204);
+    let a = Matrix::random(&base, 256, 256, &mut rng);
+    let b = Matrix::random(&base, 256, 256, &mut rng);
+    let (c, metrics) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+    assert_eq!(c, Matrix::matmul(&base, &a, &b));
+    assert_eq!(metrics.used_workers.len(), 4);
+    coord.shutdown();
+}

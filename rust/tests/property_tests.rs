@@ -1,0 +1,216 @@
+//! Property-based tests: randomized invariants across the whole stack,
+//! driven by an in-repo case generator (the offline crate cache has no
+//! proptest; seeds are deterministic so failures reproduce exactly).
+
+use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
+use gr_cdmm::codes::ep::EpCode;
+use gr_cdmm::codes::scheme::{BatchCodedScheme, CodedScheme};
+use gr_cdmm::ring::eval::{
+    eval_many_fast, eval_many_naive, interpolate_fast, interpolate_naive,
+};
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::galois::GaloisRing;
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::poly;
+use gr_cdmm::ring::traits::{is_exceptional_sequence, Ring};
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::rmfe::{PolyRmfe, RmfeScheme};
+use gr_cdmm::util::rng::Rng64;
+
+const CASES: usize = 40;
+
+/// Property: ring axioms hold for random elements of random rings.
+#[test]
+fn prop_ring_axioms() {
+    let mut seeder = Rng64::seeded(1000);
+    for case in 0..CASES {
+        let mut rng = seeder.fork();
+        let which = case % 4;
+        macro_rules! axioms {
+            ($ring:expr) => {{
+                let ring = $ring;
+                let a = ring.random(&mut rng);
+                let b = ring.random(&mut rng);
+                let c = ring.random(&mut rng);
+                assert_eq!(ring.add(&a, &b), ring.add(&b, &a));
+                assert_eq!(ring.mul(&a, &b), ring.mul(&b, &a));
+                assert_eq!(
+                    ring.mul(&ring.mul(&a, &b), &c),
+                    ring.mul(&a, &ring.mul(&b, &c))
+                );
+                assert_eq!(
+                    ring.mul(&a, &ring.add(&b, &c)),
+                    ring.add(&ring.mul(&a, &b), &ring.mul(&a, &c))
+                );
+                assert_eq!(ring.sub(&a, &a), ring.zero());
+                if ring.is_unit(&a) {
+                    let inv = ring.inv(&a).unwrap();
+                    assert_eq!(ring.mul(&a, &inv), ring.one());
+                }
+            }};
+        }
+        match which {
+            0 => axioms!(Zq::z2e(1 + (case as u32 * 7) % 64)),
+            1 => axioms!(Zq::new([3, 5, 7, 11][case % 4], 1 + (case as u32) % 5)),
+            2 => axioms!(GaloisRing::new(2, 32, 1 + case % 5)),
+            _ => axioms!(Extension::new(Zq::z2e(64), 1 + case % 5)),
+        }
+    }
+}
+
+/// Property: exceptional sequences really are exceptional, at max size.
+#[test]
+fn prop_exceptional_sets() {
+    for (p, e, d) in [(2u64, 64u32, 1usize), (2, 8, 3), (3, 3, 2), (5, 2, 1)] {
+        let ring = GaloisRing::new(p, e, d);
+        let max = ring.residue_size().min(64) as usize;
+        let pts = ring.exceptional_points(max).unwrap();
+        assert!(is_exceptional_sequence(&ring, &pts), "GR({p}^{e},{d})");
+    }
+}
+
+/// Property: divrem reconstructs, eval/interp invert each other, naive and
+/// fast algorithms agree — over random rings and degrees.
+#[test]
+fn prop_poly_eval_interp() {
+    let mut seeder = Rng64::seeded(2000);
+    for case in 0..CASES {
+        let mut rng = seeder.fork();
+        let m = 3 + case % 3;
+        let ring = Extension::new(Zq::z2e(64), m);
+        let max_pts = (1usize << m).min(14);
+        let n = 2 + case % (max_pts - 1);
+        let pts = ring.exceptional_points(n).unwrap();
+        let f: Vec<_> = (0..n).map(|_| ring.random(&mut rng)).collect();
+        let f = poly::trim(&ring, f);
+        let naive = eval_many_naive(&ring, &f, &pts);
+        let fast = eval_many_fast(&ring, &f, &pts);
+        assert_eq!(naive, fast, "case {case}");
+        let gi = interpolate_naive(&ring, &pts, &naive);
+        let gf = interpolate_fast(&ring, &pts, &naive);
+        assert_eq!(gi, gf, "case {case}");
+        assert_eq!(gi, f, "case {case}");
+    }
+}
+
+/// Property: RMFE product law over random bases, n and padding m.
+#[test]
+fn prop_rmfe_product_law() {
+    let mut seeder = Rng64::seeded(3000);
+    for case in 0..CASES {
+        let mut rng = seeder.fork();
+        // random (n, m ≥ 2n−1) over Z_2^64 (n ≤ 3) or GR(2^16,2) (n ≤ 5)
+        let (rmfe, n) = if case % 2 == 0 {
+            let n = 2 + case % 2;
+            (PolyRmfe::with_m(Zq::z2e(64), n, 2 * n - 1 + case % 3).unwrap(), n)
+        } else {
+            let n = 2 + case % 4;
+            // base GR(2^16, 2) exposed via Zq? use Zq::new(2,16) ext of GaloisRing not needed:
+            (PolyRmfe::with_m(Zq::z2e(16), n.min(3), 2 * n.min(3) - 1).unwrap(), n.min(3))
+        };
+        let base = rmfe.base().clone();
+        let ext = rmfe.ext().clone();
+        let xs: Vec<_> = (0..n).map(|_| base.random(&mut rng)).collect();
+        let ys: Vec<_> = (0..n).map(|_| base.random(&mut rng)).collect();
+        let prod = ext.mul(&rmfe.phi(&xs), &rmfe.phi(&ys));
+        let got = rmfe.psi(&prod);
+        let want: Vec<_> = xs.iter().zip(&ys).map(|(x, y)| base.mul(x, y)).collect();
+        assert_eq!(got, want, "case {case}");
+    }
+}
+
+/// Property: EP decode is invariant to WHICH R-subset responds and to
+/// permutation of the responses.
+#[test]
+fn prop_ep_subset_invariance() {
+    let mut seeder = Rng64::seeded(4000);
+    let ring = Extension::new(Zq::z2e(64), 4);
+    let ep = EpCode::new(ring.clone(), 12, 2, 2, 2).unwrap();
+    let mut rng = seeder.fork();
+    let a = Matrix::random(&ring, 4, 4, &mut rng);
+    let b = Matrix::random(&ring, 4, 4, &mut rng);
+    let expected = Matrix::matmul(&ring, &a, &b);
+    let shares = ep.encode(&a, &b).unwrap();
+    let all: Vec<_> = shares
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i, ep.worker_compute(s).unwrap()))
+        .collect();
+    for case in 0..20 {
+        let mut rng = seeder.fork();
+        let mut picks = rng.choose_k(12, ep.recovery_threshold());
+        rng.shuffle(&mut picks);
+        let responses: Vec<_> = picks.iter().map(|&i| all[i].clone()).collect();
+        assert_eq!(ep.decode(&responses).unwrap(), expected, "case {case}");
+    }
+}
+
+/// Property: Batch-EP_RMFE equals n independent local products for random
+/// batch shapes.
+#[test]
+fn prop_batch_matches_local() {
+    let mut seeder = Rng64::seeded(5000);
+    for case in 0..12 {
+        let mut rng = seeder.fork();
+        let base = Zq::z2e(64);
+        let scheme = BatchEpRmfe::new(base.clone(), 8, 2, 2, 1, 2).unwrap();
+        let t = 2 * (1 + case % 3);
+        let r = 1 + case % 4;
+        let s = 2 * (1 + case % 2);
+        let a: Vec<_> = (0..2).map(|_| Matrix::random(&base, t, r, &mut rng)).collect();
+        let b: Vec<_> = (0..2).map(|_| Matrix::random(&base, r, s, &mut rng)).collect();
+        let shares = scheme.encode_batch(&a, &b).unwrap();
+        let responses: Vec<_> = (0..scheme.recovery_threshold())
+            .map(|i| (i, scheme.worker_compute(&shares[i]).unwrap()))
+            .collect();
+        let c = scheme.decode_batch(&responses).unwrap();
+        for k in 0..2 {
+            assert_eq!(c[k], Matrix::matmul(&base, &a[k], &b[k]), "case {case}");
+        }
+    }
+}
+
+/// Property: matrix serialization roundtrips for random shapes and rings.
+#[test]
+fn prop_serialization_roundtrip() {
+    let mut seeder = Rng64::seeded(6000);
+    for case in 0..CASES {
+        let mut rng = seeder.fork();
+        let m = 1 + case % 5;
+        let ring = Extension::new(Zq::z2e(64), m);
+        let rows = 1 + rng.below_usize(6);
+        let cols = 1 + rng.below_usize(6);
+        let mat = Matrix::random(&ring, rows, cols, &mut rng);
+        let bytes = mat.to_bytes(&ring);
+        assert_eq!(bytes.len(), mat.byte_len(&ring));
+        assert_eq!(Matrix::from_bytes(&ring, &bytes), mat, "case {case}");
+    }
+}
+
+/// Property: Gauss–Jordan inverse really inverts random unit-determinant
+/// matrices (built as products of elementary matrices).
+#[test]
+fn prop_matrix_inverse() {
+    let mut seeder = Rng64::seeded(7000);
+    let ring = Extension::new(Zq::z2e(64), 3);
+    for case in 0..15 {
+        let mut rng = seeder.fork();
+        let n = 2 + case % 4;
+        // random invertible: identity + random elementary row operations
+        let mut m = Matrix::identity(&ring, n);
+        for _ in 0..3 * n {
+            let i = rng.below_usize(n);
+            let j = rng.below_usize(n);
+            if i != j {
+                let s = ring.random(&mut rng);
+                for k in 0..n {
+                    let t = ring.mul(&s, m.at(j, k));
+                    m.set(i, k, ring.add(m.at(i, k), &t));
+                }
+            }
+        }
+        let inv = m.invert(&ring).expect("unit determinant by construction");
+        let prod = Matrix::matmul(&ring, &m, &inv);
+        assert_eq!(prod, Matrix::identity(&ring, n), "case {case}");
+    }
+}

@@ -1,0 +1,31 @@
+# Convenience targets. The rust build is fully offline; `artifacts` needs a
+# Python environment with JAX (build-time only — Python is never on the
+# request path).
+
+.PHONY: build test bench artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench fig2_master8
+	cargo bench --bench fig3_master16
+	cargo bench --bench fig4_worker8
+	cargo bench --bench fig5_worker16
+	cargo bench --bench table1_gcsa
+
+# AOT-lower the worker kernels to artifacts/*.hlo.txt + manifest.json
+# (see rust/src/runtime/mod.rs rustdoc for the manifest contract).
+# The symlink makes the default `artifacts` lookup work from both cwds in
+# play: `cargo run`/benches keep the invoking cwd (repo root), while
+# `cargo test` binaries run with cwd = rust/.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+	ln -sfn ../artifacts rust/artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts results

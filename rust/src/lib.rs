@@ -22,13 +22,19 @@
 //! * [`runtime`] — the PJRT bridge: loads AOT-compiled `artifacts/*.hlo.txt`
 //!   (lowered once from JAX/Pallas by `python/compile/aot.py`) and executes
 //!   worker-node coefficient-plane matmuls through XLA. Python is never on the
-//!   request path.
+//!   request path. Gated behind the non-default `pjrt` cargo feature; the
+//!   default build ships an offline stub (see the [`runtime`] module docs).
 //! * [`experiments`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section (Table 1, Figures 2–5).
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! One coded multiplication, encode → worker products → decode, using the
+//! paper's Fig. 2 configuration (8 workers over `GR(2^64, 3)`, `u = v = 2`,
+//! `w = 1`, split `n = 2`, recovery threshold `R = 4`). This example runs as
+//! a doctest on every `cargo test`:
+//!
+//! ```
 //! use gr_cdmm::ring::zq::Zq;
 //! use gr_cdmm::ring::matrix::Matrix;
 //! use gr_cdmm::codes::scheme::CodedScheme;
@@ -39,15 +45,20 @@
 //! let mut rng = Rng64::seeded(7);
 //! let a = Matrix::random(&ring, 64, 64, &mut rng);
 //! let b = Matrix::random(&ring, 64, 64, &mut rng);
-//! // 8 workers over GR(2^64, 3), u=v=2, w=1, n=2 — the paper's Fig. 2 config.
-//! let scheme = EpRmfeI::new(ring.clone(), 8, 2, 2, 1, 2).unwrap();
+//! // 8 workers over GR(2^64, 3), u=2, w=1, v=2, n=2 — the paper's Fig. 2 config.
+//! let scheme = EpRmfeI::new(ring.clone(), 8, 2, 1, 2, 2).unwrap();
+//! assert_eq!(scheme.recovery_threshold(), 4);
 //! let shares = scheme.encode(&a, &b).unwrap();
 //! let responses: Vec<_> = shares.iter().enumerate()
 //!     .map(|(i, s)| (i, scheme.worker_compute(s).unwrap()))
 //!     .collect();
+//! // Any R = 4 of the 8 responses decode the product.
 //! let c = scheme.decode(&responses[..scheme.recovery_threshold()]).unwrap();
 //! assert_eq!(c, Matrix::matmul(&ring, &a, &b));
 //! ```
+//!
+//! For the threaded end-to-end path (worker pool, straggler injection, byte
+//! accounting) see `examples/quickstart.rs`.
 
 pub mod util;
 pub mod ring;

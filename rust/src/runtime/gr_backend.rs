@@ -1,6 +1,12 @@
 //! Worker compute backend that executes share products through the AOT XLA
 //! artifact instead of the native ring kernels.
 //!
+//! Requires the non-default `pjrt` cargo feature for real execution; in the
+//! default offline build [`XlaShareCompute::for_shapes`] fails cleanly with
+//! a "built without the `pjrt` feature" error (see [`crate::runtime`] docs),
+//! and the plane-layout conversion helpers below remain fully functional and
+//! tested.
+//!
 //! The `xla` crate's PJRT client is `Rc`-based (not `Send`), so the
 //! executable cannot be shared across worker threads. Each worker thread
 //! lazily opens its *own* client + compiled artifact through a thread-local

@@ -2,9 +2,72 @@
 //! from JAX/Pallas by `python/compile/aot.py`) and execute them from the
 //! rust request path via the `xla` crate's PJRT CPU client.
 //!
-//! Interchange is HLO **text** — jax ≥ 0.5 emits protos with 64-bit
-//! instruction ids which xla_extension 0.5.1 rejects; `from_text_file`
-//! reassigns ids (see `/opt/xla-example/README.md`).
+//! # The `pjrt` feature
+//!
+//! Everything that touches XLA is gated behind the **non-default `pjrt`
+//! cargo feature**:
+//!
+//! * **default build (no `pjrt`)** — std-only and offline-safe. The types
+//!   in this module keep their full API ([`XlaRuntime`], [`HloArtifact`],
+//!   [`gr_backend::XlaShareCompute`]), but [`XlaRuntime::open`] returns an
+//!   error explaining that PJRT support was not compiled in. Everything that
+//!   consumes the runtime (the `gr-cdmm info` command, the
+//!   `matmul_kernels` bench, the `integration_runtime` tests) already
+//!   treats an unavailable runtime as "skip", so the default build is fully
+//!   usable with the native ring kernels.
+//! * **`--features pjrt`** — compiles the real bridge. This additionally
+//!   requires an `xla` dependency (built against a vendored `xla_extension`
+//!   checkout, e.g. `/opt/xla-example`) to be added to `rust/Cargo.toml`;
+//!   see the commented block there. The dependency is not declared by
+//!   default because the checkout does not exist in offline environments.
+//!
+//! The manifest parsing ([`ArtifactSpec`], the `artifacts/manifest.json`
+//! loader) is **not** gated: it is pure std and is unit-tested in every
+//! build.
+//!
+//! # The `artifacts/manifest.json` contract
+//!
+//! `python/compile/aot.py` (run via `make artifacts`) lowers each worker
+//! task once and writes, next to the `*.hlo.txt` files, a manifest:
+//!
+//! ```json
+//! {
+//!   "artifacts": [
+//!     {
+//!       "name": "worker_gr_m3_128x256x128",
+//!       "file": "worker_gr_m3_128x256x128.hlo.txt",
+//!       "m": 3,
+//!       "t": 128, "r": 256, "s": 128,
+//!       "modulus": [1, 1, 0, 1],
+//!       "dtype": "uint64"
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `m` — extension degree of the share ring `GR(2^64, m)`; `m = 1` marks
+//!   a plain `u64` matmul artifact.
+//! * `t`, `r`, `s` — the share shapes: worker inputs are `(m, t, r)` and
+//!   `(m, r, s)` plane-major u64 tensors (or `(t, r)`/`(r, s)` for `m = 1`),
+//!   the output is `(m, t, s)`.
+//! * `modulus` — little-endian coefficients (length `m + 1`) of the tower's
+//!   defining polynomial, baked into the lowered kernel. The rust side
+//!   validates at load time that this equals the deterministic modulus
+//!   chosen by [`crate::ring::irreducible::find_irreducible`] — the
+//!   cross-language contract asserted in `tests/integration_runtime.rs` and
+//!   `python/tests/test_gr.py`.
+//!
+//! The default artifact directory is `./artifacts`, overridable with the
+//! `GR_CDMM_ARTIFACTS` environment variable.
+//!
+//! # Why HLO *text* interchange
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto` bytes:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which
+//! `xla_extension` 0.5.1 rejects (`proto.id() <= INT_MAX`); parsing the
+//! text form reassigns ids and round-trips cleanly (see
+//! `/opt/xla-example/README.md`). Python runs once at build time
+//! (`make artifacts`) and is never on the request path.
 //!
 //! * [`XlaRuntime`] — one PJRT client per process; compiles artifacts once.
 //! * [`HloArtifact`] — a loaded executable with its manifest entry.
@@ -34,6 +97,9 @@ pub struct ArtifactSpec {
 /// Minimal JSON value extraction for the manifest (flat, known schema; we
 /// ship no JSON parser dependency). Robust to whitespace/ordering produced
 /// by `json.dump(indent=2)`.
+// Without `pjrt` only the unit tests call this (the stub runtime fails
+// before reaching the manifest), hence the cfg'd allow.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn parse_manifest(text: &str) -> anyhow::Result<Vec<ArtifactSpec>> {
     let mut specs = Vec::new();
     // Split on the artifact object boundaries: each entry contains "name".
@@ -83,11 +149,13 @@ fn parse_manifest(text: &str) -> anyhow::Result<Vec<ArtifactSpec>> {
 }
 
 /// A loaded, compiled HLO artifact.
+#[cfg(feature = "pjrt")]
 pub struct HloArtifact {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl HloArtifact {
     /// Execute with u64 input buffers (row-major, shapes from the spec).
     /// The lowered fn returns a 1-tuple (aot.py lowers with
@@ -113,12 +181,41 @@ impl HloArtifact {
 }
 
 /// The process-wide PJRT client + artifact loader.
+///
+/// Without the `pjrt` feature this is an offline stub: [`XlaRuntime::open`]
+/// always errors (so no instance can ever exist) and every consumer — the
+/// CLI `info` command, the benches, the integration tests,
+/// [`gr_backend::XlaShareCompute`] — takes its graceful "runtime
+/// unavailable" path.
 pub struct XlaRuntime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     specs: Vec<ArtifactSpec>,
 }
 
+// Feature-independent surface over the shared fields.
+impl XlaRuntime {
+    /// Default artifact directory: `$GR_CDMM_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> anyhow::Result<Self> {
+        let dir = std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Find the manifest entry for a GR worker task with the given extension
+    /// degree and share shapes.
+    pub fn find_spec(&self, m: usize, t: usize, r: usize, s: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|a| a.m == m && a.t == t && a.r == r && a.s == s)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl XlaRuntime {
     /// Open the CPU PJRT client over an artifact directory (reads
     /// `manifest.json`). `GR_CDMM_ARTIFACTS` overrides the default
@@ -136,26 +233,8 @@ impl XlaRuntime {
         Ok(XlaRuntime { client, dir, specs })
     }
 
-    /// Default artifact directory: `$GR_CDMM_ARTIFACTS` or `./artifacts`.
-    pub fn open_default() -> anyhow::Result<Self> {
-        let dir = std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-        Self::open(dir)
-    }
-
     pub fn platform(&self) -> String {
         self.client.platform_name()
-    }
-
-    pub fn specs(&self) -> &[ArtifactSpec] {
-        &self.specs
-    }
-
-    /// Find the manifest entry for a GR worker task with the given extension
-    /// degree and share shapes.
-    pub fn find_spec(&self, m: usize, t: usize, r: usize, s: usize) -> Option<&ArtifactSpec> {
-        self.specs
-            .iter()
-            .find(|a| a.m == m && a.t == t && a.r == r && a.s == s)
     }
 
     /// Load + compile one artifact by manifest name.
@@ -177,6 +256,58 @@ impl XlaRuntime {
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
         Ok(HloArtifact { spec, exe })
+    }
+}
+
+/// A loaded, compiled HLO artifact — **offline stub** (built without the
+/// `pjrt` feature). Carries the manifest entry only; [`HloArtifact::run_u64`]
+/// always errors.
+#[cfg(not(feature = "pjrt"))]
+pub struct HloArtifact {
+    pub spec: ArtifactSpec,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl HloArtifact {
+    /// Stub: always errors — rebuild with `--features pjrt` (and an `xla`
+    /// dependency) for real execution.
+    pub fn run_u64(&self, _inputs: &[(Vec<u64>, Vec<i64>)]) -> anyhow::Result<Vec<u64>> {
+        anyhow::bail!(
+            "artifact {}: gr_cdmm was built without the `pjrt` feature; \
+             XLA execution is unavailable (use the native backend, or rebuild \
+             with --features pjrt and an `xla` dependency)",
+            self.spec.name
+        )
+    }
+}
+
+// Offline stub surface: `open` always errors, so no instance can exist and
+// `platform`/`load` are only here so callers typecheck identically.
+#[cfg(not(feature = "pjrt"))]
+impl XlaRuntime {
+    /// Stub: always errors — PJRT support was not compiled in.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "cannot open artifact directory {}: gr_cdmm was built without the \
+             `pjrt` feature (std-only offline build); rebuild with \
+             --features pjrt and an `xla` dependency in rust/Cargo.toml to \
+             enable the PJRT bridge",
+            dir.as_ref().display()
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the pjrt feature)".to_string()
+    }
+
+    /// Stub: always errors (unreachable in practice — [`XlaRuntime::open`]
+    /// already fails, so no stub runtime can be constructed).
+    pub fn load(&self, name: &str) -> anyhow::Result<HloArtifact> {
+        anyhow::bail!(
+            "cannot load artifact {name} from {}: gr_cdmm was built without \
+             the `pjrt` feature",
+            self.dir.display()
+        )
     }
 }
 
@@ -221,5 +352,14 @@ mod tests {
     #[test]
     fn manifest_parser_rejects_empty() {
         assert!(parse_manifest("{\"artifacts\": []}").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = XlaRuntime::open("artifacts").err().expect("stub open must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let err = XlaRuntime::open_default().err().expect("stub open must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

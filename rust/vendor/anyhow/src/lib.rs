@@ -1,0 +1,149 @@
+//! Offline polyfill of the [`anyhow`](https://crates.io/crates/anyhow) API
+//! subset that `gr_cdmm` uses: [`Error`], [`Result`], and the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros.
+//!
+//! The build environment for this repository has no crates.io access, so the
+//! real crate cannot be fetched; this ~100-line stand-in is API-compatible
+//! for the subset in use and dependency-free. Differences from the real
+//! crate, by design:
+//!
+//! * no backtrace capture and no `context()`/`chain()` — the error is a
+//!   single eagerly formatted message (source chains are flattened with
+//!   `": "` at conversion time);
+//! * `{:#}` (alternate) formatting equals `{}` — callers only rely on both
+//!   printing the message.
+//!
+//! To switch to the real `anyhow`, point the `anyhow` dependency of
+//! `gr_cdmm` at a version requirement instead of this path — no source
+//! changes are needed.
+
+use std::fmt;
+
+/// A boxed-message error type; the polyfill's stand-in for `anyhow::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message (the polyfill's `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// Like `anyhow`, convert from any standard error, flattening its source
+/// chain into the message. `Error` itself deliberately does NOT implement
+/// `std::error::Error`, which is what makes this blanket impl coherent
+/// alongside the reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with this crate's [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string: `anyhow!("bad {x}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`]: `bail!("bad {x}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+/// `ensure!(cond)` uses the stringified condition as the message;
+/// `ensure!(cond, "msg {x}")` formats like [`anyhow!`].
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn takes_two(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(1)
+    }
+
+    fn takes_one(x: usize) -> Result<()> {
+        ensure!(x >= 1);
+        Ok(())
+    }
+
+    fn bails() -> Result<()> {
+        bail!("always {}", "fails");
+    }
+
+    #[test]
+    fn macros_format_and_return() {
+        assert_eq!(takes_two(true).unwrap(), 1);
+        assert_eq!(takes_two(false).unwrap_err().to_string(), "flag was false");
+        assert!(takes_one(1).is_ok());
+        assert_eq!(
+            takes_one(0).unwrap_err().to_string(),
+            "condition failed: `x >= 1`"
+        );
+        assert_eq!(bails().unwrap_err().to_string(), "always fails");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn display_and_debug_and_alternate_agree() {
+        let e = anyhow!("msg {}", 7);
+        assert_eq!(format!("{e}"), "msg 7");
+        assert_eq!(format!("{e:?}"), "msg 7");
+        assert_eq!(format!("{e:#}"), "msg 7");
+    }
+}

@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench artifacts clean
+.PHONY: build test bench bench-json artifacts clean
 
 build:
 	cargo build --release
@@ -10,12 +10,26 @@ build:
 test:
 	cargo test -q
 
+# Every bench target prints markdown AND writes BENCH_<name>.json into the
+# invoking directory (override with GR_CDMM_BENCH_OUT=dir).
 bench:
 	cargo bench --bench fig2_master8
 	cargo bench --bench fig3_master16
 	cargo bench --bench fig4_worker8
 	cargo bench --bench fig5_worker16
 	cargo bench --bench table1_gcsa
+
+# Machine-readable run of the full bench suite (quick settings): refreshes
+# every BENCH_<name>.json at the repo root, including the kernel and
+# eval-ablation benches that `bench` skips.
+bench-json:
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench fig2_master8
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench fig3_master16
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench fig4_worker8
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench fig5_worker16
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench table1_gcsa
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench matmul_kernels
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench eval_crossover
 
 # AOT-lower the worker kernels to artifacts/*.hlo.txt + manifest.json
 # (see rust/src/runtime/mod.rs rustdoc for the manifest contract).
@@ -28,4 +42,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -rf artifacts results
+	rm -rf artifacts results BENCH_*.json

@@ -9,8 +9,8 @@
 
 use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
 use gr_cdmm::codes::csa::CsaCode;
-use gr_cdmm::codes::scheme::BatchCodedScheme;
-use gr_cdmm::coordinator::runner::{run_batch, NativeBatchCompute};
+use gr_cdmm::codes::scheme::DmmScheme;
+use gr_cdmm::coordinator::runner::{run_batch, NativeCompute};
 use gr_cdmm::coordinator::{Coordinator, StragglerModel};
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Batch-EP_RMFE (ours): N = 8, u = v = 2, w = 1 ⇒ R = 4 ------------
     let scheme = Arc::new(BatchEpRmfe::new(base.clone(), 8, n_batch, 2, 1, 2)?);
     println!("== {}", scheme.name());
-    let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let mut coord = Coordinator::new(8, backend, StragglerModel::None, 2);
     let (c, m) = run_batch(scheme.as_ref(), &mut coord, &a, &b)?;
     coord.shutdown();
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     println!("== {}", csa.name());
     let ae: Vec<_> = a.iter().map(|mat| mat.map(|x| ext.from_base(x))).collect();
     let be: Vec<_> = b.iter().map(|mat| mat.map(|x| ext.from_base(x))).collect();
-    let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&csa)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&csa)));
     let mut coord = Coordinator::new(8, backend, StragglerModel::None, 3);
     let (c2, m2) = run_batch(csa.as_ref(), &mut coord, &ae, &be)?;
     coord.shutdown();

@@ -9,20 +9,21 @@
 //!       with straggler injection — workers execute their share products
 //!       **through XLA**, the master encodes/decodes natively.
 //!
-//! Reports per-phase latency, throughput, and the paper's Fig-2/4 metrics,
-//! for both the XLA backend and the native backend (same job), and verifies
-//! bit-exact agreement with a local product. Recorded in EXPERIMENTS.md §E2E.
+//! The plane-major share wire format is already the artifact's input layout,
+//! so the XLA path does zero layout conversion. Reports per-phase latency,
+//! throughput, and the paper's Fig-2/4 metrics, for both the XLA backend and
+//! the native backend (same job), and verifies bit-exact agreement with a
+//! local product. Recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_driver
 //! ```
 
 use gr_cdmm::codes::ep::PlainEp;
-use gr_cdmm::codes::scheme::CodedScheme;
-use gr_cdmm::coordinator::runner::{run_single, NativeSingleCompute};
+use gr_cdmm::codes::scheme::DmmScheme;
+use gr_cdmm::coordinator::runner::{run_single, NativeCompute};
 use gr_cdmm::coordinator::{Coordinator, StragglerModel};
 use gr_cdmm::ring::matrix::Matrix;
-use gr_cdmm::ring::traits::Ring;
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::runtime::gr_backend::XlaShareCompute;
 use gr_cdmm::runtime::XlaRuntime;
@@ -77,7 +78,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- Native backend on the same job ------------------------------------
     println!("\n== same job, native rust worker kernels ==");
-    let native_backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let native_backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let mut coord = Coordinator::new(8, native_backend, straggler, 5);
     let (c2, m2) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
     coord.shutdown();

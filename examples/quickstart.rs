@@ -6,8 +6,8 @@
 //! ```
 
 use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
-use gr_cdmm::codes::scheme::CodedScheme;
-use gr_cdmm::coordinator::runner::{run_single, NativeSingleCompute};
+use gr_cdmm::codes::scheme::DmmScheme;
+use gr_cdmm::coordinator::runner::{run_single, NativeCompute};
 use gr_cdmm::coordinator::{Coordinator, StragglerModel};
 use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::zq::Zq;
@@ -33,8 +33,8 @@ fn main() -> anyhow::Result<()> {
         scheme.recovery_threshold()
     );
 
-    // Spin up the worker pool and run the job.
-    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    // Spin up the worker pool (one native backend for every scheme) and run.
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let mut coord = Coordinator::new(8, backend, StragglerModel::None, 1);
     let (c, metrics) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
     coord.shutdown();

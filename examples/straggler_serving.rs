@@ -8,8 +8,8 @@
 //! ```
 
 use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
-use gr_cdmm::codes::scheme::CodedScheme;
-use gr_cdmm::coordinator::runner::{run_single, NativeSingleCompute};
+use gr_cdmm::codes::scheme::DmmScheme;
+use gr_cdmm::coordinator::runner::{run_single, NativeCompute};
 use gr_cdmm::coordinator::{Coordinator, StragglerModel};
 use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::zq::Zq;
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         delay: slow,
     };
     let scheme = Arc::new(EpRmfeI::new(ring.clone(), 8, 2, 1, 2, 2)?);
-    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let mut coord = Coordinator::new(8, backend, straggler, 17);
 
     let mut rng = Rng64::seeded(23);

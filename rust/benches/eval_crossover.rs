@@ -1,7 +1,7 @@
 //! Ablation bench (DESIGN.md §4.4): naive vs subproduct-tree multipoint
 //! evaluation/interpolation over GR(2^64, 4) — Lemma II.1's asymptotics vs
 //! the small-N constants the experiments actually live in. Prints the
-//! crossover.
+//! crossover. Also writes `BENCH_eval_crossover.json`.
 
 use gr_cdmm::ring::eval::{
     eval_many_fast, eval_many_naive, interpolate_fast, interpolate_naive,
@@ -9,13 +9,15 @@ use gr_cdmm::ring::eval::{
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::traits::Ring;
 use gr_cdmm::ring::zq::Zq;
-use gr_cdmm::util::bench::{black_box, Bencher};
+use gr_cdmm::util::bench::{black_box, write_bench_json, Bencher};
+use gr_cdmm::util::json::Json;
 use gr_cdmm::util::rng::Rng64;
 
 fn main() {
     let ring = Extension::new(Zq::z2e(64), 4);
     let b = Bencher::from_env();
     let mut rng = Rng64::seeded(47);
+    let mut report: Vec<Json> = Vec::new();
     println!("# eval/interp crossover over {}\n", ring.name());
     for n in [4usize, 8, 16, 32, 64, 128, 256] {
         // need n exceptional points: 16^k >= n ⇒ widen the tower if needed
@@ -24,18 +26,34 @@ fn main() {
         let pts = ring.exceptional_points(n).unwrap();
         let f: Vec<_> = (0..n).map(|_| ring.random(&mut rng)).collect();
         let ys = eval_many_naive(&ring, &f, &pts);
-        b.bench(&format!("eval_naive   n={n}"), || {
-            black_box(eval_many_naive(&ring, &f, &pts));
-        });
-        b.bench(&format!("eval_fast    n={n}"), || {
-            black_box(eval_many_fast(&ring, &f, &pts));
-        });
-        b.bench(&format!("interp_naive n={n}"), || {
-            black_box(interpolate_naive(&ring, &pts, &ys));
-        });
-        b.bench(&format!("interp_fast  n={n}"), || {
-            black_box(interpolate_fast(&ring, &pts, &ys));
-        });
+        report.push(
+            b.bench(&format!("eval_naive   n={n}"), || {
+                black_box(eval_many_naive(&ring, &f, &pts));
+            })
+            .to_json(),
+        );
+        report.push(
+            b.bench(&format!("eval_fast    n={n}"), || {
+                black_box(eval_many_fast(&ring, &f, &pts));
+            })
+            .to_json(),
+        );
+        report.push(
+            b.bench(&format!("interp_naive n={n}"), || {
+                black_box(interpolate_naive(&ring, &pts, &ys));
+            })
+            .to_json(),
+        );
+        report.push(
+            b.bench(&format!("interp_fast  n={n}"), || {
+                black_box(interpolate_fast(&ring, &pts, &ys));
+            })
+            .to_json(),
+        );
         println!();
+    }
+    match write_bench_json("eval_crossover", &Json::Arr(report)) {
+        Ok(p) => println!("(json: {})", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
     }
 }

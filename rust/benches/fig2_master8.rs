@@ -1,8 +1,11 @@
 //! Bench: Figure 2 — master node computation time + communication volume,
 //! 8 workers over GR(2^64, 3), u=v=2, w=1, n=2.
 //! `GR_CDMM_BENCH_SIZES=2000,4000,...` and `GR_CDMM_BENCH_REPS` override.
+//! Also writes `BENCH_fig2_master8.json`.
 
-use gr_cdmm::experiments::figs::{render_master_view, sweep, FigConfig};
+use gr_cdmm::codes::registry::SchemeConfig;
+use gr_cdmm::experiments::figs::{records_to_json, render_master_view, sweep};
+use gr_cdmm::util::bench::write_bench_json;
 
 fn sizes_from_env(default: &[usize]) -> Vec<usize> {
     std::env::var("GR_CDMM_BENCH_SIZES")
@@ -14,8 +17,12 @@ fn sizes_from_env(default: &[usize]) -> Vec<usize> {
 fn main() {
     let sizes = sizes_from_env(&[128, 256]);
     let reps = std::env::var("GR_CDMM_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
-    let cfg = FigConfig::for_workers(8).unwrap();
+    let cfg = SchemeConfig::for_workers(8).unwrap();
     let recs = sweep(&cfg, &sizes, reps, 42).unwrap();
     println!("# Figure 2 — master view, 8 workers, GR(2^64,3)\n");
     println!("{}", render_master_view(&recs));
+    match write_bench_json("fig2_master8", &records_to_json(&recs)) {
+        Ok(p) => println!("(json: {})", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
 }

@@ -1,7 +1,10 @@
 //! Bench: Figure 3 — master node computation time + communication volume,
 //! 16 workers over GR(2^64, 4), u=v=w=2, n=2.
+//! Also writes `BENCH_fig3_master16.json`.
 
-use gr_cdmm::experiments::figs::{render_master_view, sweep, FigConfig};
+use gr_cdmm::codes::registry::SchemeConfig;
+use gr_cdmm::experiments::figs::{records_to_json, render_master_view, sweep};
+use gr_cdmm::util::bench::write_bench_json;
 
 fn main() {
     let sizes: Vec<usize> = std::env::var("GR_CDMM_BENCH_SIZES")
@@ -9,8 +12,12 @@ fn main() {
         .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
         .unwrap_or_else(|| vec![128, 256]);
     let reps = std::env::var("GR_CDMM_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
-    let cfg = FigConfig::for_workers(16).unwrap();
+    let cfg = SchemeConfig::for_workers(16).unwrap();
     let recs = sweep(&cfg, &sizes, reps, 43).unwrap();
     println!("# Figure 3 — master view, 16 workers, GR(2^64,4)\n");
     println!("{}", render_master_view(&recs));
+    match write_bench_json("fig3_master16", &records_to_json(&recs)) {
+        Ok(p) => println!("(json: {})", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
 }

@@ -1,7 +1,9 @@
 //! Bench: Figure 5 — per-worker computation time + communication volume,
-//! 16 workers over GR(2^64, 4).
+//! 16 workers over GR(2^64, 4). Also writes `BENCH_fig5_worker16.json`.
 
-use gr_cdmm::experiments::figs::{render_worker_view, sweep, FigConfig};
+use gr_cdmm::codes::registry::SchemeConfig;
+use gr_cdmm::experiments::figs::{records_to_json, render_worker_view, sweep};
+use gr_cdmm::util::bench::write_bench_json;
 
 fn main() {
     let sizes: Vec<usize> = std::env::var("GR_CDMM_BENCH_SIZES")
@@ -9,8 +11,12 @@ fn main() {
         .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
         .unwrap_or_else(|| vec![128, 256]);
     let reps = std::env::var("GR_CDMM_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
-    let cfg = FigConfig::for_workers(16).unwrap();
+    let cfg = SchemeConfig::for_workers(16).unwrap();
     let recs = sweep(&cfg, &sizes, reps, 45).unwrap();
     println!("# Figure 5 — worker view, 16 workers, GR(2^64,4)\n");
     println!("{}", render_worker_view(&recs));
+    match write_bench_json("fig5_worker16", &records_to_json(&recs)) {
+        Ok(p) => println!("(json: {})", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
 }

@@ -1,22 +1,36 @@
-//! Perf bench: the worker-node hot path — u64 matmul and GR(2^64, m) matmul,
-//! native rust kernels vs (optionally) the AOT XLA artifact. This is the
-//! §Perf L3 measurement target in EXPERIMENTS.md.
+//! Perf bench: the worker-node hot path — u64 matmul and GR(2^64, m) matmul
+//! in both representations (AoS `Matrix<Vec<u64>>` baseline vs the
+//! plane-major `PlaneMatrix` the wire/worker path actually uses), plus
+//! (optionally) the AOT XLA artifact. This is the §Perf L3 measurement
+//! target in EXPERIMENTS.md.
+//!
+//! The GR section covers every Table 1 / §V.A extension degree (m = 3 for
+//! N=8, m = 4 for N=16, m = 5 for N=32) and prints the plane/AoS median
+//! ratio — the plane-major kernel must be no slower at every config.
+//!
+//! `cargo bench --bench matmul_kernels -- --smoke` runs a seconds-fast CI
+//! smoke subset. Results are also written to `BENCH_matmul_kernels.json`.
 
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::plane::PlaneMatrix;
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::runtime::gr_backend::ext_matrix_to_planes;
 use gr_cdmm::runtime::XlaRuntime;
-use gr_cdmm::util::bench::{black_box, throughput, Bencher};
+use gr_cdmm::util::bench::{black_box, throughput, write_bench_json, Bencher};
+use gr_cdmm::util::json::Json;
 use gr_cdmm::util::rng::Rng64;
 
 fn main() {
-    let b = Bencher::from_env();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = if smoke { Bencher::new(0, 1) } else { Bencher::from_env() };
     let mut rng = Rng64::seeded(48);
     let zq = Zq::z2e(64);
+    let mut report: Vec<Json> = Vec::new();
 
-    println!("# worker hot-path kernels\n## native u64 matmul");
-    for n in [64usize, 128, 256, 512] {
+    println!("# worker hot-path kernels{}\n## native u64 matmul", if smoke { " (smoke)" } else { "" });
+    let u64_sizes: &[usize] = if smoke { &[64] } else { &[64, 128, 256, 512] };
+    for &n in u64_sizes {
         let a = Matrix::random(&zq, n, n, &mut rng);
         let bm = Matrix::random(&zq, n, n, &mut rng);
         let s = b.bench(&format!("u64 matmul {n}³"), || {
@@ -24,46 +38,72 @@ fn main() {
         });
         let ops = 2.0 * (n as f64).powi(3);
         println!("    → {:.2} Gop/s", throughput(ops, s.median) / 1e9);
+        report.push(s.to_json());
     }
 
-    println!("\n## native GR(2^64, m) matmul (worker share product)");
-    for m in [3usize, 4] {
+    println!("\n## GR(2^64, m) worker share product: AoS baseline vs plane-major");
+    let n = if smoke { 32 } else { 128 };
+    for m in [3usize, 4, 5] {
         let ext = Extension::new(zq.clone(), m);
-        let n = 128;
         let a = Matrix::random(&ext, n, n, &mut rng);
         let bm = Matrix::random(&ext, n, n, &mut rng);
-        let s = b.bench(&format!("GR m={m} matmul {n}³"), || {
+        let pa = PlaneMatrix::from_aos(&ext, &a);
+        let pb = PlaneMatrix::from_aos(&ext, &bm);
+        // sanity: the two kernels agree bit-for-bit
+        assert_eq!(
+            PlaneMatrix::matmul(&ext, &pa, &pb),
+            PlaneMatrix::from_aos(&ext, &Matrix::matmul(&ext, &a, &bm)),
+            "plane-major kernel must match the AoS kernel (m={m})"
+        );
+        let aos = b.bench(&format!("GR m={m} AoS matmul {n}³"), || {
             black_box(Matrix::matmul(&ext, &a, &bm));
+        });
+        let plane = b.bench(&format!("GR m={m} plane-major matmul {n}³"), || {
+            black_box(PlaneMatrix::matmul(&ext, &pa, &pb));
         });
         // each ext mul ≈ m² u64 mul-adds + reduction
         let ops = 2.0 * (n as f64).powi(3) * (m * m) as f64;
-        println!("    → {:.2} effective u64 Gop/s", throughput(ops, s.median) / 1e9);
+        println!(
+            "    → plane-major {:.2} effective u64 Gop/s; plane/AoS median ratio {:.3}",
+            throughput(ops, plane.median) / 1e9,
+            plane.median.as_secs_f64() / aos.median.as_secs_f64().max(1e-12)
+        );
+        report.push(aos.to_json());
+        report.push(plane.to_json());
     }
 
-    println!("\n## AOT XLA artifact (same task through PJRT)");
-    match XlaRuntime::open_default() {
-        Err(e) => println!("  skipped: {e}"),
-        Ok(rt) => {
-            if let Some(spec) = rt.find_spec(3, 128, 256, 128) {
-                let artifact = rt.load(&spec.name.clone()).unwrap();
-                let ext = Extension::new(zq.clone(), 3);
-                let a = Matrix::random(&ext, 128, 256, &mut rng);
-                let bm = Matrix::random(&ext, 256, 128, &mut rng);
-                let ap = ext_matrix_to_planes(3, &a);
-                let bp = ext_matrix_to_planes(3, &bm);
-                b.bench("xla GR m=3 128x256x128", || {
-                    black_box(
-                        artifact
-                            .run_u64(&[
-                                (ap.clone(), vec![3, 128, 256]),
-                                (bp.clone(), vec![3, 256, 128]),
-                            ])
-                            .unwrap(),
-                    );
-                });
-            } else {
-                println!("  m=3 artifact missing (make artifacts)");
+    if !smoke {
+        println!("\n## AOT XLA artifact (same task through PJRT)");
+        match XlaRuntime::open_default() {
+            Err(e) => println!("  skipped: {e}"),
+            Ok(rt) => {
+                if let Some(spec) = rt.find_spec(3, 128, 256, 128) {
+                    let artifact = rt.load(&spec.name.clone()).unwrap();
+                    let ext = Extension::new(zq.clone(), 3);
+                    let a = Matrix::random(&ext, 128, 256, &mut rng);
+                    let bm = Matrix::random(&ext, 256, 128, &mut rng);
+                    let ap = ext_matrix_to_planes(3, &a);
+                    let bp = ext_matrix_to_planes(3, &bm);
+                    let s = b.bench("xla GR m=3 128x256x128", || {
+                        black_box(
+                            artifact
+                                .run_u64(&[
+                                    (ap.clone(), vec![3, 128, 256]),
+                                    (bp.clone(), vec![3, 256, 128]),
+                                ])
+                                .unwrap(),
+                        );
+                    });
+                    report.push(s.to_json());
+                } else {
+                    println!("  m=3 artifact missing (make artifacts)");
+                }
             }
         }
+    }
+
+    match write_bench_json("matmul_kernels", &Json::Arr(report)) {
+        Ok(p) => println!("\n(json: {})", p.display()),
+        Err(e) => eprintln!("\n(json write failed: {e})"),
     }
 }

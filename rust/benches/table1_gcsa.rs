@@ -1,19 +1,32 @@
 //! Bench: Table 1 — GCSA vs Batch-EP_RMFE over a Galois ring.
 //! Analytic rows for every κ | n, plus the measured head-to-head at the
-//! runnable `uvw = 1, κ = n` point (CSA).
+//! runnable `uvw = 1, κ = n` point (CSA). Also writes
+//! `BENCH_table1_gcsa.json`.
 
 use gr_cdmm::experiments::table1::{
     analytic_rows, measured_point, render_analytic, render_measured,
 };
+use gr_cdmm::util::bench::write_bench_json;
+use gr_cdmm::util::json::Json;
 
 fn main() {
     println!("# Table 1 — batch-coded matmul over Galois ring: GCSA vs Batch-EP_RMFE\n");
     println!("## analytic (N=16, n=4, u=v=w=2, t=r=s=1000; per-mult amortized)\n");
-    println!("{}", render_analytic(&analytic_rows(16, 4, 2, 2, 2, 1000, 1000, 1000)));
+    let rows = analytic_rows(16, 4, 2, 2, 2, 1000, 1000, 1000);
+    println!("{}", render_analytic(&rows));
     let size = std::env::var("GR_CDMM_BENCH_SIZES")
         .ok()
         .and_then(|s| s.split(',').next().and_then(|x| x.trim().parse().ok()))
         .unwrap_or(128);
     println!("\n## measured at the runnable point (n=2 batch, {size}², Z_2^64)\n");
-    println!("{}", render_measured(&measured_point(2, size, 46).unwrap()));
+    let points = measured_point(2, size, 46).unwrap();
+    println!("{}", render_measured(&points));
+
+    let json = Json::obj()
+        .set("analytic", Json::Arr(rows.iter().map(|r| r.to_json()).collect()))
+        .set("measured", Json::Arr(points.iter().map(|p| p.to_json()).collect()));
+    match write_bench_json("table1_gcsa", &json) {
+        Ok(p) => println!("(json: {})", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
 }

@@ -4,7 +4,8 @@
 //! Given batches `{A_k}` (`t×r`) and `{B_k}` (`r×s`) over `GR(p^e, d)`:
 //!
 //! 1. pack elementwise with the RMFE map `φ` into `𝒜, ℬ` over
-//!    `GR_m = GR(p^e, d·m)` (`m ≥ max(2n−1, ⌈log_{p^d} N⌉)`);
+//!    `GR_m = GR(p^e, d·m)` (`m ≥ max(2n−1, ⌈log_{p^d} N⌉)`) — written
+//!    directly into plane-major storage ([`crate::rmfe::pack_to_planes`]);
 //! 2. run EP codes over `GR_m` (partition `u, w, v`; `R = uvw + w − 1`,
 //!    *independent of n* — the headline improvement over GCSA, whose
 //!    threshold scales with the batch);
@@ -16,13 +17,13 @@
 //! worker compute are amortized by `n` exactly as Theorem III.2 states.
 
 use super::ep::EpCode;
-use super::scheme::{BatchCodedScheme, CodedScheme, Response, Share};
+use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
 use crate::ring::traits::Ring;
 use crate::rmfe::poly_rmfe::PolyRmfe;
-use crate::rmfe::RmfeScheme;
+use crate::rmfe::{pack_to_planes, unpack_from_planes, RmfeScheme};
 
 /// The paper's CDBMM scheme.
 #[derive(Clone)]
@@ -81,7 +82,7 @@ impl<R: ExtensibleRing> BatchEpRmfe<R> {
     }
 }
 
-impl<R: ExtensibleRing> BatchCodedScheme<R> for BatchEpRmfe<R> {
+impl<R: ExtensibleRing> DmmScheme<R> for BatchEpRmfe<R> {
     type ShareRing = Extension<R>;
 
     fn name(&self) -> String {
@@ -116,26 +117,26 @@ impl<R: ExtensibleRing> BatchCodedScheme<R> for BatchEpRmfe<R> {
         &self,
         a: &[Matrix<R::Elem>],
         b: &[Matrix<R::Elem>],
-    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+    ) -> anyhow::Result<Vec<Share<Extension<R>>>> {
         anyhow::ensure!(
             a.len() == self.batch_size() && b.len() == self.batch_size(),
             "batch size must be exactly n = {}",
             self.batch_size()
         );
-        let packed_a = self.rmfe.pack_matrices(a);
-        let packed_b = self.rmfe.pack_matrices(b);
-        self.ep.encode_ext(&packed_a, &packed_b)
+        let packed_a = pack_to_planes(&self.rmfe, a);
+        let packed_b = pack_to_planes(&self.rmfe, b);
+        self.ep.encode_planes(&packed_a, &packed_b)
     }
 
     fn decode_batch(
         &self,
-        responses: &[Response<<Extension<R> as Ring>::Elem>],
+        responses: &[Response<Extension<R>>],
     ) -> anyhow::Result<Vec<Matrix<R::Elem>>> {
         anyhow::ensure!(!responses.is_empty(), "no responses");
         let p = self.ep.partition();
         let (bh, bw) = (responses[0].1.rows, responses[0].1.cols);
-        let packed_c = self.ep.decode_ext(responses, bh * p.u, bw * p.v)?;
-        Ok(self.rmfe.unpack_matrix(&packed_c))
+        let packed_c = self.ep.decode_planes(responses, bh * p.u, bw * p.v)?;
+        Ok(unpack_from_planes(&self.rmfe, &packed_c))
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
@@ -240,6 +241,8 @@ mod tests {
         let a: Vec<_> = (0..3).map(|_| Matrix::random(&base, 2, 2, &mut rng)).collect();
         let b: Vec<_> = (0..3).map(|_| Matrix::random(&base, 2, 2, &mut rng)).collect();
         assert!(s.encode_batch(&a, &b).is_err());
+        // and the single-product conveniences refuse a batch scheme
+        assert!(s.encode(&a[0], &b[0]).is_err());
     }
 
     #[test]
@@ -247,14 +250,13 @@ mod tests {
         // n=2: the packed upload equals what plain EP pays for ONE product,
         // but serves TWO products ⇒ amortized halving (Theorem III.2).
         use super::super::ep::PlainEp;
-        use crate::codes::scheme::CodedScheme;
         let base = Zq::z2e(64);
         let batch = BatchEpRmfe::new(base.clone(), 8, 2, 2, 1, 2).unwrap();
         let plain = PlainEp::new(base, 8, 2, 1, 2).unwrap();
         let (t, r, s) = (8usize, 8, 8);
         assert_eq!(
-            BatchCodedScheme::upload_bytes(&batch, t, r, s),
-            CodedScheme::upload_bytes(&plain, t, r, s),
+            batch.upload_bytes(t, r, s),
+            plain.upload_bytes(t, r, s),
             "same wire cost ..."
         );
         assert_eq!(batch.batch_size(), 2, "... but serving n=2 products");

@@ -24,14 +24,20 @@
 //! `2n − 1` unknown matrices; the master inverts the Cauchy–Vandermonde
 //! system on any `R = 2n − 1` responding workers (all pivots are units by
 //! exceptionality) and recovers `A_l B_l = c_l^{-1} X_l`.
+//!
+//! All matrix traffic (shares, responses, encode/decode accumulators) is
+//! plane-major ([`PlaneMatrix`]); only the `R × R` scalar Cauchy–Vandermonde
+//! system stays in the AoS [`Matrix`] (it is `O(R²)` scalars, never on the
+//! wire).
 
-use super::scheme::{BatchCodedScheme, Response, Share};
+use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
 
 /// CSA batch code over a ring `E` with at least `n + N` exceptional points.
 #[derive(Clone)]
-pub struct CsaCode<E: Ring> {
+pub struct CsaCode<E: PlaneRing> {
     ring: E,
     n_batch: usize,
     n_workers: usize,
@@ -43,7 +49,7 @@ pub struct CsaCode<E: Ring> {
     c: Vec<E::Elem>,
 }
 
-impl<E: Ring> CsaCode<E> {
+impl<E: PlaneRing> CsaCode<E> {
     pub fn new(ring: E, n_workers: usize, n_batch: usize) -> anyhow::Result<Self> {
         anyhow::ensure!(n_batch >= 1);
         let r = 2 * n_batch - 1;
@@ -67,6 +73,12 @@ impl<E: Ring> CsaCode<E> {
         Ok(CsaCode { ring, n_batch, n_workers, poles, alphas, c })
     }
 
+    /// Recovery threshold `R = 2n − 1` — the single source of truth for the
+    /// `κ = n` GCSA point (used by the trait impl and the decoder).
+    fn threshold(&self) -> usize {
+        2 * self.n_batch - 1
+    }
+
     /// Row of the decode system for evaluation point `α`:
     /// `[(f_1−α)^{-1}, …, (f_n−α)^{-1}, 1, α, …, α^{n−2}]`.
     fn system_row(&self, alpha: &E::Elem) -> Vec<E::Elem> {
@@ -84,35 +96,14 @@ impl<E: Ring> CsaCode<E> {
         }
         row
     }
-}
 
-impl<E: Ring> BatchCodedScheme<E> for CsaCode<E> {
-    type ShareRing = E;
-
-    fn name(&self) -> String {
-        format!("CSA(n={}) over {}", self.n_batch, self.ring.name())
-    }
-    fn share_ring(&self) -> &E {
-        &self.ring
-    }
-    fn input_ring(&self) -> &E {
-        &self.ring
-    }
-    fn n_workers(&self) -> usize {
-        self.n_workers
-    }
-    fn recovery_threshold(&self) -> usize {
-        2 * self.n_batch - 1
-    }
-    fn batch_size(&self) -> usize {
-        self.n_batch
-    }
-
-    fn encode_batch(
+    /// Encode a batch already in plane-major share-ring form (the entry
+    /// point the registry's embedded-input adapter uses).
+    pub fn encode_planes_batch(
         &self,
-        a: &[Matrix<E::Elem>],
-        b: &[Matrix<E::Elem>],
-    ) -> anyhow::Result<Vec<Share<E::Elem>>> {
+        a: &[PlaneMatrix<E::Base>],
+        b: &[PlaneMatrix<E::Base>],
+    ) -> anyhow::Result<Vec<Share<E>>> {
         let ring = &self.ring;
         let n = self.n_batch;
         anyhow::ensure!(a.len() == n && b.len() == n, "batch size must be n = {n}");
@@ -128,8 +119,8 @@ impl<E: Ring> BatchCodedScheme<E> for CsaCode<E> {
         for alpha in &self.alphas {
             // ν_l(α) = Π_{k≠l}(f_k − α); (f_l − α)^{-1}
             let diffs: Vec<E::Elem> = self.poles.iter().map(|f| ring.sub(f, alpha)).collect();
-            let mut sa = Matrix::zeros(ring, t, r);
-            let mut sb = Matrix::zeros(ring, r, s);
+            let mut sa = PlaneMatrix::zeros(ring, t, r);
+            let mut sb = PlaneMatrix::zeros(ring, r, s);
             for l in 0..n {
                 let mut nu = ring.one();
                 for (k, d) in diffs.iter().enumerate() {
@@ -146,16 +137,28 @@ impl<E: Ring> BatchCodedScheme<E> for CsaCode<E> {
         Ok(shares)
     }
 
-    fn decode_batch(
+    /// Decode to plane-major share-ring products.
+    pub fn decode_planes_batch(
         &self,
-        responses: &[Response<E::Elem>],
-    ) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
+        responses: &[Response<E>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<E::Base>>> {
         let ring = &self.ring;
         let n = self.n_batch;
-        let rt = self.recovery_threshold();
+        let rt = self.threshold();
         anyhow::ensure!(responses.len() >= rt, "{} responses < R = {rt}", responses.len());
         let used = &responses[..rt];
-        // Cauchy–Vandermonde system on the responding alphas.
+        let (zr, zc) = (used[0].1.rows, used[0].1.cols);
+        let m = ring.plane_count();
+        for (idx, z) in used {
+            anyhow::ensure!(
+                z.rows == zr && z.cols == zc && z.planes == m,
+                "response from worker {idx} has shape {}x{} ({} planes), expected {zr}x{zc} ({m})",
+                z.rows,
+                z.cols,
+                z.planes
+            );
+        }
+        // Cauchy–Vandermonde system on the responding alphas (scalar-sized).
         let mut sys = Matrix::zeros(ring, rt, rt);
         for (row_i, (widx, _)) in used.iter().enumerate() {
             anyhow::ensure!(*widx < self.n_workers, "worker index out of range");
@@ -168,10 +171,9 @@ impl<E: Ring> BatchCodedScheme<E> for CsaCode<E> {
             .invert(ring)
             .ok_or_else(|| anyhow::anyhow!("Cauchy–Vandermonde system not invertible"))?;
         // unknown_l = Σ_i inv[l][i] · Z_i ; A_lB_l = c_l^{-1} · unknown_l
-        let (zr, zc) = (used[0].1.rows, used[0].1.cols);
         let mut out = Vec::with_capacity(n);
         for l in 0..n {
-            let mut acc = Matrix::zeros(ring, zr, zc);
+            let mut acc = PlaneMatrix::zeros(ring, zr, zc);
             for (i, (_, z)) in used.iter().enumerate() {
                 acc.axpy(ring, inv.at(l, i), z);
             }
@@ -180,6 +182,46 @@ impl<E: Ring> BatchCodedScheme<E> for CsaCode<E> {
             out.push(acc);
         }
         Ok(out)
+    }
+}
+
+impl<E: PlaneRing> DmmScheme<E> for CsaCode<E> {
+    type ShareRing = E;
+
+    fn name(&self) -> String {
+        format!("CSA(n={}) over {}", self.n_batch, self.ring.name())
+    }
+    fn share_ring(&self) -> &E {
+        &self.ring
+    }
+    fn input_ring(&self) -> &E {
+        &self.ring
+    }
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.threshold()
+    }
+    fn batch_size(&self) -> usize {
+        self.n_batch
+    }
+
+    fn encode_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<Share<E>>> {
+        let pa: Vec<PlaneMatrix<E::Base>> =
+            a.iter().map(|mk| PlaneMatrix::from_aos(&self.ring, mk)).collect();
+        let pb: Vec<PlaneMatrix<E::Base>> =
+            b.iter().map(|mk| PlaneMatrix::from_aos(&self.ring, mk)).collect();
+        self.encode_planes_batch(&pa, &pb)
+    }
+
+    fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
+        let out = self.decode_planes_batch(responses)?;
+        Ok(out.iter().map(|c| c.to_aos(&self.ring)).collect())
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {

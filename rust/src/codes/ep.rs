@@ -14,36 +14,40 @@
 //! the coefficients of `x^{i·w + (w−1) + ℓ·uw}`.
 //!
 //! Implementation notes:
-//! * encoding evaluates the (sparse) matrix polynomials with precomputed
-//!   scalar power tables and matrix-axpy — `O(#blocks · block_size)` ring
-//!   ops per worker;
+//! * all share-ring matrices are **plane-major** ([`PlaneMatrix`]): encoding
+//!   evaluates the (sparse) matrix polynomials with precomputed scalar power
+//!   tables and plane-level axpy (`m²` base-ring slice axpys per term) —
+//!   `O(#blocks · block_size)` ring ops per worker with zero per-element
+//!   heap traffic;
 //! * decoding computes the Lagrange basis coefficients on the responding
 //!   subset once (`O(R²)` scalar ops) and then takes `uv` weighted sums of
-//!   the response matrices — the interpolation never materializes `h` as a
-//!   polynomial;
+//!   the plane-major response matrices — the interpolation never
+//!   materializes `h` as a polynomial;
 //! * [`PlainEp`] is the Lemma III.1 baseline for inputs in a *small* ring:
 //!   every input element is constant-embedded into the extension
-//!   `GR(p^e, d·m)` with `p^{dm} ≥ N`, paying the `O(m)` blowup in every
-//!   metric — the overhead RMFE amortizes away.
+//!   `GR(p^e, d·m)` with `p^{dm} ≥ N` (plane 0 = input, higher planes zero),
+//!   paying the `O(m)` blowup in every metric — the overhead RMFE amortizes
+//!   away.
 
-use super::scheme::{CodedScheme, Partition, Response, Share};
+use super::scheme::{DmmScheme, Partition, Response, Share};
 use crate::ring::eval::lagrange_basis_coeffs;
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
 
 /// EP code operating directly over a ring `E` with at least `N` exceptional
 /// points (typically an extension ring).
 #[derive(Clone)]
-pub struct EpCode<E: Ring> {
-    ring: E,
+pub struct EpCode<E: PlaneRing> {
+    pub(super) ring: E,
     part: Partition,
     n_workers: usize,
     points: Vec<E::Elem>,
 }
 
-impl<E: Ring> EpCode<E> {
+impl<E: PlaneRing> EpCode<E> {
     pub fn new(ring: E, n_workers: usize, u: usize, w: usize, v: usize) -> anyhow::Result<Self> {
         let part = Partition::new(u, w, v);
         let r = part.recovery_threshold();
@@ -86,13 +90,14 @@ impl<E: Ring> EpCode<E> {
             .collect()
     }
 
-    /// Evaluate a sparse matrix polynomial `Σ blocks[b] x^{exps[b]}` at `x`.
+    /// Evaluate a sparse matrix polynomial `Σ blocks[b] x^{exps[b]}` at `x`
+    /// — plane-level Horner via [`PlaneMatrix::axpy`].
     fn eval_sparse(
         &self,
-        blocks: &[Matrix<E::Elem>],
+        blocks: &[PlaneMatrix<E::Base>],
         exps: &[usize],
         x: &E::Elem,
-    ) -> Matrix<E::Elem> {
+    ) -> PlaneMatrix<E::Base> {
         let ring = &self.ring;
         let max_exp = *exps.iter().max().unwrap();
         // power table x^0 .. x^max_exp
@@ -102,22 +107,27 @@ impl<E: Ring> EpCode<E> {
             powers.push(acc.clone());
             acc = ring.mul(&acc, x);
         }
-        let mut out = Matrix::zeros(ring, blocks[0].rows, blocks[0].cols);
+        let mut out = PlaneMatrix::zeros(ring, blocks[0].rows, blocks[0].cols);
         for (blk, &e) in blocks.iter().zip(exps) {
             out.axpy(ring, &powers[e], blk);
         }
         out
     }
 
-    /// Encode share-ring matrices directly (used by the RMFE schemes, which
-    /// pack into the extension first).
-    pub fn encode_ext(
+    /// Encode plane-major share-ring matrices directly (the entry point the
+    /// RMFE schemes use after packing into the extension).
+    pub fn encode_planes(
         &self,
-        a: &Matrix<E::Elem>,
-        b: &Matrix<E::Elem>,
-    ) -> anyhow::Result<Vec<Share<E::Elem>>> {
+        a: &PlaneMatrix<E::Base>,
+        b: &PlaneMatrix<E::Base>,
+    ) -> anyhow::Result<Vec<Share<E>>> {
         let Partition { u, w, v } = self.part;
         anyhow::ensure!(a.cols == b.rows, "inner dimensions must agree");
+        let m = self.ring.plane_count();
+        anyhow::ensure!(
+            a.planes == m && b.planes == m,
+            "share matrices must have {m} planes"
+        );
         self.part.check_shapes(a.rows, a.cols, b.cols)?;
         let a_blocks = a.partition_grid(u, w);
         let b_blocks = b.partition_grid(w, v);
@@ -133,13 +143,13 @@ impl<E: Ring> EpCode<E> {
             .collect())
     }
 
-    /// Decode a share-ring product from any `R` responses.
-    pub fn decode_ext(
+    /// Decode a plane-major share-ring product from any `R` responses.
+    pub fn decode_planes(
         &self,
-        responses: &[Response<E::Elem>],
+        responses: &[Response<E>],
         t: usize,
         s: usize,
-    ) -> anyhow::Result<Matrix<E::Elem>> {
+    ) -> anyhow::Result<PlaneMatrix<E::Base>> {
         let ring = &self.ring;
         let r_needed = self.part.recovery_threshold();
         anyhow::ensure!(
@@ -148,25 +158,36 @@ impl<E: Ring> EpCode<E> {
             responses.len()
         );
         let used = &responses[..r_needed];
-        for (idx, _) in used {
+        let Partition { u, v, .. } = self.part;
+        let (bh, bw) = (t / u, s / self.part.v);
+        let m = ring.plane_count();
+        let mut seen = vec![false; self.n_workers];
+        for (idx, y) in used {
             anyhow::ensure!(*idx < self.n_workers, "worker index {idx} out of range");
+            anyhow::ensure!(!seen[*idx], "duplicate response from worker {idx}");
+            seen[*idx] = true;
+            anyhow::ensure!(
+                y.rows == bh && y.cols == bw && y.planes == m,
+                "response from worker {idx} has shape {}x{} ({} planes), expected {bh}x{bw} ({m})",
+                y.rows,
+                y.cols,
+                y.planes
+            );
         }
         let pts: Vec<E::Elem> = used.iter().map(|(i, _)| self.points[*i].clone()).collect();
         // Lagrange basis on the responding subset: L_j has R coefficients;
         // coefficient k of h equals Σ_j L_j[k] · Y_j.
         let basis = lagrange_basis_coeffs(ring, &pts);
-        let Partition { u, v, .. } = self.part;
-        let (bh, bw) = (t / u, s / self.part.v);
         let mut c_blocks = Vec::with_capacity(u * v);
         for &k in &self.c_exponents() {
-            let mut acc = Matrix::zeros(ring, bh, bw);
+            let mut acc = PlaneMatrix::zeros(ring, bh, bw);
             for (j, (_, y)) in used.iter().enumerate() {
                 let weight = basis[j].get(k).cloned().unwrap_or_else(|| ring.zero());
                 acc.axpy(ring, &weight, y);
             }
             c_blocks.push(acc);
         }
-        Ok(Matrix::stitch_grid(&c_blocks, u, v))
+        Ok(PlaneMatrix::stitch_grid(&c_blocks, u, v))
     }
 
     /// Per-worker share byte size for `A: t×r`, `B: r×s`.
@@ -183,7 +204,7 @@ impl<E: Ring> EpCode<E> {
     }
 }
 
-impl<E: Ring> CodedScheme<E> for EpCode<E> {
+impl<E: PlaneRing> DmmScheme<E> for EpCode<E> {
     type ShareRing = E;
 
     fn name(&self) -> String {
@@ -208,15 +229,23 @@ impl<E: Ring> CodedScheme<E> for EpCode<E> {
         self.part.recovery_threshold()
     }
 
-    fn encode(&self, a: &Matrix<E::Elem>, b: &Matrix<E::Elem>) -> anyhow::Result<Vec<Share<E::Elem>>> {
-        self.encode_ext(a, b)
+    fn encode_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<Share<E>>> {
+        anyhow::ensure!(a.len() == 1 && b.len() == 1, "EP is a single-product scheme");
+        let ap = PlaneMatrix::from_aos(&self.ring, &a[0]);
+        let bp = PlaneMatrix::from_aos(&self.ring, &b[0]);
+        self.encode_planes(&ap, &bp)
     }
 
-    fn decode(&self, responses: &[Response<E::Elem>]) -> anyhow::Result<Matrix<E::Elem>> {
+    fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
         anyhow::ensure!(!responses.is_empty(), "no responses");
         let Partition { u, v, .. } = self.part;
         let (bh, bw) = (responses[0].1.rows, responses[0].1.cols);
-        self.decode_ext(responses, bh * u, bw * v)
+        let c = self.decode_planes(responses, bh * u, bw * v)?;
+        Ok(vec![c.to_aos(&self.ring)])
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
@@ -233,6 +262,10 @@ impl<E: Ring> CodedScheme<E> for EpCode<E> {
 /// `p^{dm} ≥ N`, and EP codes run over `GR_m`. Every uploaded/downloaded
 /// element costs `m` base elements and every worker multiplication costs
 /// `O(m²)` base ops — the overhead the RMFE schemes amortize.
+///
+/// The embedding itself is plane-native: plane 0 of the encoded input *is*
+/// the user matrix, higher planes are zero, and decoding reads plane 0 back
+/// — no AoS round trip anywhere.
 #[derive(Clone)]
 pub struct PlainEp<R: ExtensibleRing> {
     base: R,
@@ -265,7 +298,7 @@ impl<R: ExtensibleRing> PlainEp<R> {
     }
 }
 
-impl<R: ExtensibleRing> CodedScheme<R> for PlainEp<R> {
+impl<R: ExtensibleRing> DmmScheme<R> for PlainEp<R> {
     type ShareRing = Extension<R>;
 
     fn name(&self) -> String {
@@ -284,24 +317,28 @@ impl<R: ExtensibleRing> CodedScheme<R> for PlainEp<R> {
         self.ep.part.recovery_threshold()
     }
 
-    fn encode(
+    fn encode_batch(
         &self,
-        a: &Matrix<R::Elem>,
-        b: &Matrix<R::Elem>,
-    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+        a: &[Matrix<R::Elem>],
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<Share<Extension<R>>>> {
+        anyhow::ensure!(a.len() == 1 && b.len() == 1, "PlainEP is a single-product scheme");
         let ext = &self.ep.ring;
-        let ae = a.map(|x| ext.from_base(x));
-        let be = b.map(|x| ext.from_base(x));
-        self.ep.encode_ext(&ae, &be)
+        let ae = PlaneMatrix::from_base_matrix(ext, &a[0]);
+        let be = PlaneMatrix::from_base_matrix(ext, &b[0]);
+        self.ep.encode_planes(&ae, &be)
     }
 
-    fn decode(
+    fn decode_batch(
         &self,
-        responses: &[Response<<Extension<R> as Ring>::Elem>],
-    ) -> anyhow::Result<Matrix<R::Elem>> {
-        let ce = self.ep.decode(responses)?;
-        // Constant-embedded inputs have constant products: read coefficient 0.
-        Ok(ce.map(|x| x[0].clone()))
+        responses: &[Response<Extension<R>>],
+    ) -> anyhow::Result<Vec<Matrix<R::Elem>>> {
+        anyhow::ensure!(!responses.is_empty(), "no responses");
+        let Partition { u, v, .. } = self.ep.part;
+        let (bh, bw) = (responses[0].1.rows, responses[0].1.cols);
+        let ce = self.ep.decode_planes(responses, bh * u, bw * v)?;
+        // Constant-embedded inputs have constant products: read plane 0.
+        Ok(vec![ce.base_plane_matrix()])
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
@@ -331,14 +368,19 @@ mod tests {
         let mut rng = Rng64::seeded(seed);
         let a = Matrix::random(&ring, t, r, &mut rng);
         let b = Matrix::random(&ring, r, s, &mut rng);
-        let shares = ep.encode_ext(&a, &b).unwrap();
+        let shares = ep
+            .encode_planes(
+                &PlaneMatrix::from_aos(&ring, &a),
+                &PlaneMatrix::from_aos(&ring, &b),
+            )
+            .unwrap();
         assert_eq!(shares.len(), ep.n_workers());
         let rt = ep.recovery_threshold();
         let responses: Vec<_> = (ep.n_workers() - rt..ep.n_workers())
             .map(|i| (i, ep.worker_compute(&shares[i]).unwrap()))
             .collect();
-        let c = ep.decode_ext(&responses, t, s).unwrap();
-        assert_eq!(c, Matrix::matmul(&ring, &a, &b));
+        let c = ep.decode_planes(&responses, t, s).unwrap();
+        assert_eq!(c.to_aos(&ring), Matrix::matmul(&ring, &a, &b));
     }
 
     #[test]
@@ -404,8 +446,8 @@ mod tests {
         let mut rng = Rng64::seeded(103);
         let a = Matrix::random(&ring, 2, 2, &mut rng);
         let b = Matrix::random(&ring, 2, 2, &mut rng);
-        let expected = Matrix::matmul(&ring, &a, &b);
-        let shares = ep.encode_ext(&a, &b).unwrap();
+        let expected = PlaneMatrix::from_aos(&ring, &Matrix::matmul(&ring, &a, &b));
+        let shares = ep.encode(&a, &b).unwrap();
         let all: Vec<_> = shares
             .iter()
             .enumerate()
@@ -413,12 +455,12 @@ mod tests {
             .collect();
         // every contiguous window of R workers decodes correctly
         for start in 0..=(8 - 4) {
-            let c = ep.decode_ext(&all[start..start + 4], 2, 2).unwrap();
+            let c = ep.decode_planes(&all[start..start + 4], 2, 2).unwrap();
             assert_eq!(c, expected, "window at {start}");
         }
         // a scattered subset too
         let scattered: Vec<_> = [0usize, 2, 5, 7].iter().map(|&i| all[i].clone()).collect();
-        assert_eq!(ep.decode_ext(&scattered, 2, 2).unwrap(), expected);
+        assert_eq!(ep.decode_planes(&scattered, 2, 2).unwrap(), expected);
     }
 
     #[test]
@@ -428,11 +470,11 @@ mod tests {
         let mut rng = Rng64::seeded(104);
         let a = Matrix::random(&ring, 2, 2, &mut rng);
         let b = Matrix::random(&ring, 2, 2, &mut rng);
-        let shares = ep.encode_ext(&a, &b).unwrap();
+        let shares = ep.encode(&a, &b).unwrap();
         let responses: Vec<_> = (0..3)
             .map(|i| (i, ep.worker_compute(&shares[i]).unwrap()))
             .collect();
-        assert!(ep.decode_ext(&responses, 2, 2).is_err());
+        assert!(ep.decode_planes(&responses, 2, 2).is_err());
     }
 
     #[test]
@@ -478,12 +520,17 @@ mod tests {
     fn share_serialization_roundtrip() {
         let ring = ext_ring(3);
         let mut rng = Rng64::seeded(107);
-        let share = Share {
-            a: Matrix::random(&ring, 2, 3, &mut rng),
-            b: Matrix::random(&ring, 3, 2, &mut rng),
+        let share: Share<Extension<Zq>> = Share {
+            a: PlaneMatrix::random(&ring, 2, 3, &mut rng),
+            b: PlaneMatrix::random(&ring, 3, 2, &mut rng),
         };
         let bytes = share.to_bytes(&ring);
         assert_eq!(bytes.len(), share.byte_len(&ring));
-        assert_eq!(Share::from_bytes(&ring, &bytes), share);
+        assert_eq!(Share::from_bytes(&ring, &bytes).unwrap(), share);
+        // truncated and oversized payloads are clean errors
+        assert!(Share::<Extension<Zq>>::from_bytes(&ring, &bytes[..bytes.len() - 3]).is_err());
+        let mut big = bytes;
+        big.extend_from_slice(&[0, 0, 0]);
+        assert!(Share::<Extension<Zq>>::from_bytes(&ring, &big).is_err());
     }
 }

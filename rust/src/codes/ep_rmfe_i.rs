@@ -12,11 +12,10 @@
 //! Figures 2–5 as "EP_RMFE-I": half the encode time and upload at `n = 2`.
 
 use super::batch_ep_rmfe::BatchEpRmfe;
-use super::scheme::{BatchCodedScheme, CodedScheme, Response, Share};
+use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
-use crate::ring::traits::Ring;
 
 /// Single-DMM scheme: MatDot-split → Batch-EP_RMFE → sum.
 #[derive(Clone)]
@@ -65,7 +64,7 @@ impl<R: ExtensibleRing> EpRmfeI<R> {
     }
 }
 
-impl<R: ExtensibleRing> CodedScheme<R> for EpRmfeI<R> {
+impl<R: ExtensibleRing> DmmScheme<R> for EpRmfeI<R> {
     type ShareRing = Extension<R>;
 
     fn name(&self) -> String {
@@ -84,11 +83,13 @@ impl<R: ExtensibleRing> CodedScheme<R> for EpRmfeI<R> {
         self.batch.recovery_threshold()
     }
 
-    fn encode(
+    fn encode_batch(
         &self,
-        a: &Matrix<R::Elem>,
-        b: &Matrix<R::Elem>,
-    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+        a: &[Matrix<R::Elem>],
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<Share<Extension<R>>>> {
+        anyhow::ensure!(a.len() == 1 && b.len() == 1, "EP_RMFE-I is a single-product scheme");
+        let (a, b) = (&a[0], &b[0]);
         let n = self.n_split;
         anyhow::ensure!(a.cols == b.rows, "inner dimensions must agree");
         anyhow::ensure!(a.cols % n == 0, "split n = {n} must divide r = {}", a.cols);
@@ -97,17 +98,17 @@ impl<R: ExtensibleRing> CodedScheme<R> for EpRmfeI<R> {
         self.batch.encode_batch(&a_parts, &b_parts)
     }
 
-    fn decode(
+    fn decode_batch(
         &self,
-        responses: &[Response<<Extension<R> as Ring>::Elem>],
-    ) -> anyhow::Result<Matrix<R::Elem>> {
+        responses: &[Response<Extension<R>>],
+    ) -> anyhow::Result<Vec<Matrix<R::Elem>>> {
         let parts = self.batch.decode_batch(responses)?;
         let ring = self.input_ring();
         let mut acc = parts[0].clone();
         for p in &parts[1..] {
             acc.add_assign(ring, p);
         }
-        Ok(acc)
+        Ok(vec![acc])
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
@@ -171,16 +172,13 @@ mod tests {
         let rmfe1 = EpRmfeI::with_m(base.clone(), 3, 8, 2, 1, 2, 2).unwrap();
         let plain = PlainEp::with_m(base, 3, 8, 2, 1, 2).unwrap();
         let (t, r, s) = (64usize, 64, 64);
-        let up_rmfe = CodedScheme::upload_bytes(&rmfe1, t, r, s);
-        let up_plain = CodedScheme::upload_bytes(&plain, t, r, s);
+        let up_rmfe = rmfe1.upload_bytes(t, r, s);
+        let up_plain = plain.upload_bytes(t, r, s);
         // ratio ≈ 1/2 up to the 16-byte headers
         let ratio = up_rmfe as f64 / up_plain as f64;
         assert!((ratio - 0.5).abs() < 0.01, "ratio {ratio}");
         // download unchanged
-        assert_eq!(
-            CodedScheme::download_bytes(&rmfe1, t, r, s),
-            CodedScheme::download_bytes(&plain, t, r, s)
-        );
+        assert_eq!(rmfe1.download_bytes(t, r, s), plain.download_bytes(t, r, s));
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! not split matrix A in EP_RMFE-II and applied only φ1"):
 //!
 //! * `B` is split into `n` *column* blocks `B_1 … B_n` (`r × s/n`) and packed
-//!   elementwise: `ℬ = φ(B_1, …, B_n)` over `GR_m`;
-//! * `A` is kept whole and constant-embedded into `GR_m`;
+//!   elementwise: `ℬ = φ(B_1, …, B_n)` over `GR_m` (plane-major via
+//!   [`crate::rmfe::pack_to_planes`]);
+//! * `A` is kept whole and constant-embedded into `GR_m` (plane 0 = `A`);
 //! * EP codes over `GR_m` compute `𝒞 = 𝒜·ℬ` (`t × s/n`);
 //! * since `ψ(const_a · φ(x)) = a ⋆ x` (the embedded factor scales every
 //!   slot), unpacking `𝒞` elementwise yields `(A·B_1, …, A·B_n)`, which are
@@ -27,13 +28,14 @@
 //! of `t^{2n−2}`, which a degree-`(n−1)` product `const·φ(x)` never reaches.
 
 use super::ep::EpCode;
-use super::scheme::{CodedScheme, Response, Share};
+use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneMatrix;
 use crate::ring::traits::Ring;
 use crate::rmfe::poly_rmfe::PolyRmfe;
-use crate::rmfe::RmfeScheme;
+use crate::rmfe::{pack_to_planes, unpack_from_planes, RmfeScheme};
 
 /// Single-DMM scheme: Polynomial-split of `B` → φ-pack → EP → ψ-unpack.
 #[derive(Clone)]
@@ -103,7 +105,7 @@ impl<R: ExtensibleRing> EpRmfeII<R> {
     }
 }
 
-impl<R: ExtensibleRing> CodedScheme<R> for EpRmfeII<R> {
+impl<R: ExtensibleRing> DmmScheme<R> for EpRmfeII<R> {
     type ShareRing = Extension<R>;
 
     fn name(&self) -> String {
@@ -131,33 +133,35 @@ impl<R: ExtensibleRing> CodedScheme<R> for EpRmfeII<R> {
         self.ep.recovery_threshold()
     }
 
-    fn encode(
+    fn encode_batch(
         &self,
-        a: &Matrix<R::Elem>,
-        b: &Matrix<R::Elem>,
-    ) -> anyhow::Result<Vec<Share<<Extension<R> as Ring>::Elem>>> {
+        a: &[Matrix<R::Elem>],
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<Share<Extension<R>>>> {
+        anyhow::ensure!(a.len() == 1 && b.len() == 1, "EP_RMFE-II is a single-product scheme");
+        let (a, b) = (&a[0], &b[0]);
         let n = self.n_split;
         let ext = self.rmfe.ext();
         anyhow::ensure!(a.cols == b.rows, "inner dimensions must agree");
         anyhow::ensure!(b.cols % n == 0, "split n = {n} must divide s = {}", b.cols);
-        // 𝒜 = constant-embedded A; ℬ = φ(B_1 … B_n) columnwise.
-        let packed_a = a.map(|x| ext.from_base(x));
+        // 𝒜 = constant-embedded A (plane 0); ℬ = φ(B_1 … B_n) columnwise.
+        let packed_a = PlaneMatrix::from_base_matrix(ext, a);
         let b_parts = b.partition_grid(1, n);
-        let packed_b = self.rmfe.pack_matrices(&b_parts);
-        self.ep.encode_ext(&packed_a, &packed_b)
+        let packed_b = pack_to_planes(&self.rmfe, &b_parts);
+        self.ep.encode_planes(&packed_a, &packed_b)
     }
 
-    fn decode(
+    fn decode_batch(
         &self,
-        responses: &[Response<<Extension<R> as Ring>::Elem>],
-    ) -> anyhow::Result<Matrix<R::Elem>> {
+        responses: &[Response<Extension<R>>],
+    ) -> anyhow::Result<Vec<Matrix<R::Elem>>> {
         anyhow::ensure!(!responses.is_empty(), "no responses");
         let p = self.ep.partition();
         let (bh, bw) = (responses[0].1.rows, responses[0].1.cols);
-        let packed_c = self.ep.decode_ext(responses, bh * p.u, bw * p.v)?;
+        let packed_c = self.ep.decode_planes(responses, bh * p.u, bw * p.v)?;
         // ψ unpacks each entry into the n column stripes A·B_j.
-        let stripes = self.rmfe.unpack_matrix(&packed_c);
-        Ok(Matrix::stitch_grid(&stripes, 1, self.n_split))
+        let stripes = unpack_from_planes(&self.rmfe, &packed_c);
+        Ok(vec![Matrix::stitch_grid(&stripes, 1, self.n_split)])
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
@@ -212,13 +216,13 @@ mod tests {
         let rmfe2 = EpRmfeII::with_m(base.clone(), 3, 8, 2, 1, 2, 2).unwrap();
         let plain = PlainEp::with_m(base, 3, 8, 2, 1, 2).unwrap();
         let (t, r, s) = (64usize, 64, 64);
-        let down_rmfe = CodedScheme::download_bytes(&rmfe2, t, r, s);
-        let down_plain = CodedScheme::download_bytes(&plain, t, r, s);
+        let down_rmfe = rmfe2.download_bytes(t, r, s);
+        let down_plain = plain.download_bytes(t, r, s);
         let ratio = down_rmfe as f64 / down_plain as f64;
         assert!((ratio - 0.5).abs() < 0.01, "ratio {ratio}");
         // upload strictly between EP_RMFE-I (half) and plain EP (full):
-        let up_rmfe2 = CodedScheme::upload_bytes(&rmfe2, t, r, s);
-        let up_plain = CodedScheme::upload_bytes(&plain, t, r, s);
+        let up_rmfe2 = rmfe2.upload_bytes(t, r, s);
+        let up_plain = plain.upload_bytes(t, r, s);
         assert!(up_rmfe2 < up_plain && up_rmfe2 > up_plain / 2, "upload in between");
     }
 

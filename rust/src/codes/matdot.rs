@@ -8,17 +8,18 @@
 //! MatDot partition applied *before* packing.
 
 use super::ep::EpCode;
-use super::scheme::{CodedScheme, Response, Share};
+use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneRing;
 use crate::ring::traits::Ring;
 
 /// MatDot code over a ring with ≥ N exceptional points.
 #[derive(Clone)]
-pub struct MatDotCode<E: Ring> {
+pub struct MatDotCode<E: PlaneRing> {
     inner: EpCode<E>,
 }
 
-impl<E: Ring> MatDotCode<E> {
+impl<E: PlaneRing> MatDotCode<E> {
     pub fn new(ring: E, n_workers: usize, w: usize) -> anyhow::Result<Self> {
         Ok(MatDotCode { inner: EpCode::new(ring, n_workers, 1, w, 1)? })
     }
@@ -28,7 +29,7 @@ impl<E: Ring> MatDotCode<E> {
     }
 }
 
-impl<E: Ring> CodedScheme<E> for MatDotCode<E> {
+impl<E: PlaneRing> DmmScheme<E> for MatDotCode<E> {
     type ShareRing = E;
 
     fn name(&self) -> String {
@@ -48,11 +49,15 @@ impl<E: Ring> CodedScheme<E> for MatDotCode<E> {
         // 1·1·w + w − 1 = 2w − 1
         self.inner.recovery_threshold()
     }
-    fn encode(&self, a: &Matrix<E::Elem>, b: &Matrix<E::Elem>) -> anyhow::Result<Vec<Share<E::Elem>>> {
-        self.inner.encode(a, b)
+    fn encode_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<Share<E>>> {
+        self.inner.encode_batch(a, b)
     }
-    fn decode(&self, responses: &[Response<E::Elem>]) -> anyhow::Result<Matrix<E::Elem>> {
-        self.inner.decode(responses)
+    fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
+        self.inner.decode_batch(responses)
     }
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
         self.inner.upload_bytes(t, r, s)

@@ -11,8 +11,11 @@
 //! | [`ep_rmfe_ii`] | **EP_RMFE-II** — single DMM, Polynomial-style batch preprocessing (incl. the φ1-only variant benchmarked in §V) | Corollary IV.2 |
 //! | [`secure_matdot`] | T-private MatDot over a Galois ring — the paper's stated future work (§I) | extension |
 //!
-//! All schemes implement [`scheme::CodedScheme`] (single product) or
-//! [`scheme::BatchCodedScheme`] (batch) and are generic over the input ring.
+//! All schemes implement the one [`scheme::DmmScheme`] trait (single product
+//! = `batch_size() == 1`), store every share/response in plane-major
+//! [`crate::ring::plane::PlaneMatrix`] form, and can be erased into the
+//! object-safe byte-payload facade [`scheme::DynScheme`]; [`registry`] builds
+//! them by name over `Z_{2^64}` for the CLI and the experiments harness.
 
 pub mod scheme;
 pub mod ep;
@@ -23,5 +26,6 @@ pub mod batch_ep_rmfe;
 pub mod ep_rmfe_i;
 pub mod ep_rmfe_ii;
 pub mod secure_matdot;
+pub mod registry;
 
-pub use scheme::{BatchCodedScheme, CodedScheme, Share};
+pub use scheme::{erase, DmmScheme, DynScheme, Erased, Response, Share};

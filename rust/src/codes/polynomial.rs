@@ -9,17 +9,18 @@
 //! its own, arithmetic is shared with [`super::ep::EpCode`].
 
 use super::ep::EpCode;
-use super::scheme::{CodedScheme, Response, Share};
+use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneRing;
 use crate::ring::traits::Ring;
 
 /// Polynomial code over a ring with ≥ N exceptional points.
 #[derive(Clone)]
-pub struct PolynomialCode<E: Ring> {
+pub struct PolynomialCode<E: PlaneRing> {
     inner: EpCode<E>,
 }
 
-impl<E: Ring> PolynomialCode<E> {
+impl<E: PlaneRing> PolynomialCode<E> {
     pub fn new(ring: E, n_workers: usize, u: usize, v: usize) -> anyhow::Result<Self> {
         Ok(PolynomialCode { inner: EpCode::new(ring, n_workers, u, 1, v)? })
     }
@@ -29,7 +30,7 @@ impl<E: Ring> PolynomialCode<E> {
     }
 }
 
-impl<E: Ring> CodedScheme<E> for PolynomialCode<E> {
+impl<E: PlaneRing> DmmScheme<E> for PolynomialCode<E> {
     type ShareRing = E;
 
     fn name(&self) -> String {
@@ -49,11 +50,15 @@ impl<E: Ring> CodedScheme<E> for PolynomialCode<E> {
         // uv·1 + 1 − 1 = uv
         self.inner.recovery_threshold()
     }
-    fn encode(&self, a: &Matrix<E::Elem>, b: &Matrix<E::Elem>) -> anyhow::Result<Vec<Share<E::Elem>>> {
-        self.inner.encode(a, b)
+    fn encode_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<Share<E>>> {
+        self.inner.encode_batch(a, b)
     }
-    fn decode(&self, responses: &[Response<E::Elem>]) -> anyhow::Result<Matrix<E::Elem>> {
-        self.inner.decode(responses)
+    fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
+        self.inner.decode_batch(responses)
     }
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
         self.inner.upload_bytes(t, r, s)

@@ -1,0 +1,222 @@
+//! The scheme registry: build any of the paper's schemes as an erased
+//! [`DynScheme`] (byte payloads in, byte payloads out) from a name and a
+//! [`SchemeConfig`] — the single entry point `main.rs` and `experiments/`
+//! use instead of per-scheme monomorphized plumbing.
+//!
+//! Registry schemes take their inputs over the paper's experimental ring
+//! `Z_{2^64}`; the input matrices cross the facade in [`Matrix`]'s canonical
+//! byte format and all share traffic is plane-major (see
+//! [`super::scheme::DynScheme`] for the contract). Code that needs another
+//! input ring (odd characteristic, Galois-field bases) uses the typed
+//! constructors directly and erases with [`super::scheme::erase`].
+
+use super::batch_ep_rmfe::BatchEpRmfe;
+use super::csa::CsaCode;
+use super::ep::PlainEp;
+use super::ep_rmfe_i::EpRmfeI;
+use super::ep_rmfe_ii::EpRmfeII;
+use super::scheme::{DmmScheme, DynScheme, Erased, Response, Share};
+use crate::ring::extension::Extension;
+use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneMatrix;
+use crate::ring::zq::Zq;
+use std::sync::Arc;
+
+/// Parameters shared by every registry scheme: worker count `N`, extension
+/// degree `m`, EP partition `(u, w, v)`, and the batch size / split factor
+/// `n_split` (ignored by `ep`; `csa` derives its own extension from
+/// `n_split + n_workers` and ignores `m`/`u`/`w`/`v`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchemeConfig {
+    pub n_workers: usize,
+    pub m: usize,
+    pub u: usize,
+    pub w: usize,
+    pub v: usize,
+    pub n_split: usize,
+}
+
+impl SchemeConfig {
+    /// The §V.A configuration for a worker count (8, 16 or 32).
+    pub fn for_workers(n_workers: usize) -> anyhow::Result<SchemeConfig> {
+        match n_workers {
+            8 => Ok(SchemeConfig { n_workers: 8, m: 3, u: 2, w: 1, v: 2, n_split: 2 }),
+            16 => Ok(SchemeConfig { n_workers: 16, m: 4, u: 2, w: 2, v: 2, n_split: 2 }),
+            32 => Ok(SchemeConfig { n_workers: 32, m: 5, u: 2, w: 2, v: 2, n_split: 3 }),
+            _ => anyhow::bail!("no paper configuration for N = {n_workers} (use 8, 16 or 32)"),
+        }
+    }
+}
+
+/// `(name, description)` of every registry scheme.
+pub const SCHEME_NAMES: &[(&str, &str)] = &[
+    ("ep", "plain EP baseline (Lemma III.1): constant embedding into GR(p^e, d·m)"),
+    ("ep-rmfe-1", "EP_RMFE-I (Corollary IV.1): MatDot split + RMFE batch packing"),
+    ("ep-rmfe-2", "EP_RMFE-II (Corollary IV.2): column split of B, phi1-only"),
+    ("batch-ep-rmfe", "Batch-EP_RMFE (Theorem III.2): n-batch CDBMM, R independent of n"),
+    ("csa", "CSA batch baseline (runnable GCSA point uvw=1, kappa=n; R = 2n-1)"),
+];
+
+/// Build a registry scheme over `Z_{2^64}` inputs.
+pub fn build(name: &str, cfg: &SchemeConfig) -> anyhow::Result<Arc<dyn DynScheme>> {
+    let base = Zq::z2e(64);
+    let SchemeConfig { n_workers, m, u, w, v, n_split } = *cfg;
+    match name {
+        "ep" => Ok(Arc::new(Erased::new(Arc::new(PlainEp::with_m(
+            base, m, n_workers, u, w, v,
+        )?)))),
+        "ep-rmfe-1" => Ok(Arc::new(Erased::new(Arc::new(EpRmfeI::with_m(
+            base, m, n_workers, u, w, v, n_split,
+        )?)))),
+        "ep-rmfe-2" => Ok(Arc::new(Erased::new(Arc::new(EpRmfeII::with_m(
+            base, m, n_workers, u, w, v, n_split,
+        )?)))),
+        "batch-ep-rmfe" => Ok(Arc::new(Erased::new(Arc::new(BatchEpRmfe::with_m(
+            base, m, n_workers, n_split, u, w, v,
+        )?)))),
+        "csa" => Ok(Arc::new(Erased::new(Arc::new(CsaZq::new(n_workers, n_split)?)))),
+        other => anyhow::bail!(
+            "unknown scheme `{other}` (available: ep | ep-rmfe-1 | ep-rmfe-2 | \
+             batch-ep-rmfe | csa)"
+        ),
+    }
+}
+
+/// CSA with `Z_{2^64}` inputs: the registry adapter that constant-embeds the
+/// batch into the extension (exactly what GCSA prescribes for small-ring
+/// inputs — plane 0 = input, higher planes zero) and reads plane 0 back out,
+/// so CSA speaks the same input-ring byte contract as every other registry
+/// scheme. The extension degree is chosen for `n + N` exceptional points.
+pub struct CsaZq {
+    base: Zq,
+    inner: CsaCode<Extension<Zq>>,
+}
+
+impl CsaZq {
+    pub fn new(n_workers: usize, n_batch: usize) -> anyhow::Result<CsaZq> {
+        let base = Zq::z2e(64);
+        let ext = Extension::with_capacity(base.clone(), n_batch + n_workers);
+        Ok(CsaZq { base, inner: CsaCode::new(ext, n_workers, n_batch)? })
+    }
+
+    pub fn inner(&self) -> &CsaCode<Extension<Zq>> {
+        &self.inner
+    }
+}
+
+impl DmmScheme<Zq> for CsaZq {
+    type ShareRing = Extension<Zq>;
+
+    fn name(&self) -> String {
+        format!("CSA/GCSA (uvw=1, κ=n) [{}]", self.inner.name())
+    }
+    fn share_ring(&self) -> &Extension<Zq> {
+        self.inner.share_ring()
+    }
+    fn input_ring(&self) -> &Zq {
+        &self.base
+    }
+    fn n_workers(&self) -> usize {
+        self.inner.n_workers()
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.inner.recovery_threshold()
+    }
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn encode_batch(
+        &self,
+        a: &[Matrix<u64>],
+        b: &[Matrix<u64>],
+    ) -> anyhow::Result<Vec<Share<Extension<Zq>>>> {
+        let ext = self.inner.share_ring();
+        let pa: Vec<PlaneMatrix<Zq>> =
+            a.iter().map(|mk| PlaneMatrix::from_base_matrix(ext, mk)).collect();
+        let pb: Vec<PlaneMatrix<Zq>> =
+            b.iter().map(|mk| PlaneMatrix::from_base_matrix(ext, mk)).collect();
+        self.inner.encode_planes_batch(&pa, &pb)
+    }
+
+    fn decode_batch(
+        &self,
+        responses: &[Response<Extension<Zq>>],
+    ) -> anyhow::Result<Vec<Matrix<u64>>> {
+        // Constant-embedded inputs have constant products: read plane 0.
+        let out = self.inner.decode_planes_batch(responses)?;
+        Ok(out.iter().map(|c| c.base_plane_matrix()).collect())
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.inner.upload_bytes(t, r, s)
+    }
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.inner.download_bytes(t, r, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng64;
+
+    /// Drive a registry scheme end-to-end purely through the byte facade.
+    fn byte_roundtrip(name: &str, cfg: &SchemeConfig, size: usize, seed: u64) {
+        let base = Zq::z2e(64);
+        let scheme = build(name, cfg).unwrap();
+        let n = scheme.batch_size();
+        let mut rng = Rng64::seeded(seed);
+        let a: Vec<_> = (0..n).map(|_| Matrix::random(&base, size, size, &mut rng)).collect();
+        let b: Vec<_> = (0..n).map(|_| Matrix::random(&base, size, size, &mut rng)).collect();
+        let a_bytes: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(&base)).collect();
+        let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(&base)).collect();
+        let payloads = scheme.encode_bytes(&a_bytes, &b_bytes).unwrap();
+        assert_eq!(payloads.len(), scheme.n_workers());
+        let rt = scheme.recovery_threshold();
+        let responses: Vec<(usize, Vec<u8>)> = (scheme.n_workers() - rt..scheme.n_workers())
+            .map(|i| (i, scheme.compute_bytes(&payloads[i]).unwrap()))
+            .collect();
+        let borrowed: Vec<(usize, &[u8])> =
+            responses.iter().map(|(i, p)| (*i, p.as_slice())).collect();
+        let out = scheme.decode_bytes(&borrowed).unwrap();
+        assert_eq!(out.len(), n);
+        for (k, buf) in out.iter().enumerate() {
+            let c = Matrix::from_bytes(&base, buf).unwrap();
+            assert_eq!(c, Matrix::matmul(&base, &a[k], &b[k]), "{name} slot {k}");
+        }
+    }
+
+    #[test]
+    fn all_registry_schemes_roundtrip_through_bytes() {
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        for (name, _) in SCHEME_NAMES {
+            byte_roundtrip(name, &cfg, 8, 600);
+        }
+    }
+
+    #[test]
+    fn unknown_scheme_rejected() {
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        assert!(build("nope", &cfg).is_err());
+    }
+
+    #[test]
+    fn malformed_payloads_are_clean_errors() {
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        let scheme = build("ep-rmfe-1", &cfg).unwrap();
+        assert!(scheme.compute_bytes(&[1, 2, 3]).is_err());
+        assert!(scheme.compute_bytes(&[]).is_err());
+        assert!(scheme.encode_bytes(&[vec![0u8; 7]], &[vec![0u8; 7]]).is_err());
+        assert!(scheme.decode_bytes(&[(0, &[9u8, 9][..])]).is_err());
+    }
+
+    #[test]
+    fn paper_configs_exist_for_8_16_32() {
+        for n in [8usize, 16, 32] {
+            let cfg = SchemeConfig::for_workers(n).unwrap();
+            assert_eq!(cfg.n_workers, n);
+        }
+        assert!(SchemeConfig::for_workers(12).is_err());
+    }
+}

@@ -1,49 +1,99 @@
-//! The common interfaces of all coded DMM / DBMM schemes, plus the exact
-//! communication accounting the evaluation section reports.
+//! The common interface of all coded DMM / DBMM schemes — one trait
+//! ([`DmmScheme`], single product = `batch_size() == 1`), the plane-major
+//! [`Share`] wire type, the exact communication accounting the evaluation
+//! section reports, and the object-safe erased facade ([`DynScheme`]) the
+//! CLI/experiments registry and the worker pool run against.
 //!
 //! A scheme is parameterized by the *input ring* `R` (where the user's
 //! matrices live, e.g. `Z_{2^64}`) and internally works over a *share ring*
 //! (usually an extension `GR(p^e, d·m)` with enough exceptional points for
-//! the worker count). Workers only ever see share-ring matrices.
+//! the worker count). Workers only ever see share-ring matrices, and those
+//! are stored and serialized **plane-major** ([`PlaneMatrix`]) end-to-end:
+//! encode produces planes, the wire carries one contiguous block per share,
+//! the worker multiplies plane-by-plane, decode interpolates over planes.
 
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
+use std::marker::PhantomData;
+use std::sync::Arc;
 
 /// The pair of encoded matrices sent to one worker: the evaluations
-/// `f(α_i)`, `g(α_i)` of the master's encoding polynomials.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Share<E> {
-    pub a: Matrix<E>,
-    pub b: Matrix<E>,
+/// `f(α_i)`, `g(α_i)` of the master's encoding polynomials, stored as
+/// plane-major flat buffers over the share ring's base.
+pub struct Share<E: PlaneRing> {
+    pub a: PlaneMatrix<E::Base>,
+    pub b: PlaneMatrix<E::Base>,
 }
 
-impl<E: Clone + PartialEq> Share<E> {
+impl<E: PlaneRing> Clone for Share<E> {
+    fn clone(&self) -> Self {
+        Share { a: self.a.clone(), b: self.b.clone() }
+    }
+}
+
+impl<E: PlaneRing> PartialEq for Share<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.a == other.a && self.b == other.b
+    }
+}
+
+impl<E: PlaneRing> std::fmt::Debug for Share<E> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Share").field("a", &self.a).field("b", &self.b).finish()
+    }
+}
+
+impl<E: PlaneRing> Share<E> {
     /// Exact wire size of this share under the share ring's encoding.
-    pub fn byte_len<R: Ring<Elem = E>>(&self, ring: &R) -> usize {
+    pub fn byte_len(&self, ring: &E) -> usize {
         self.a.byte_len(ring) + self.b.byte_len(ring)
     }
 
-    pub fn to_bytes<R: Ring<Elem = E>>(&self, ring: &R) -> Vec<u8> {
+    /// Serialize both matrices as one contiguous block (`a` then `b`).
+    pub fn to_bytes(&self, ring: &E) -> Vec<u8> {
         let mut out = self.a.to_bytes(ring);
-        out.extend(self.b.to_bytes(ring));
+        out.reserve(self.b.byte_len(ring));
+        out.extend_from_slice(&self.b.to_bytes(ring));
         out
     }
 
-    pub fn from_bytes<R: Ring<Elem = E>>(ring: &R, buf: &[u8]) -> Self {
-        let a = Matrix::from_bytes(ring, buf);
-        let b = Matrix::from_bytes(ring, &buf[a.byte_len(ring)..]);
-        Share { a, b }
+    /// Deserialize; truncated, oversized or shape-inconsistent payloads
+    /// yield an `Err` (workers report such jobs as clean failures instead of
+    /// unwinding).
+    pub fn from_bytes(ring: &E, buf: &[u8]) -> anyhow::Result<Self> {
+        let mut pos = 0;
+        let a = PlaneMatrix::read_from(ring, buf, &mut pos)?;
+        let b = PlaneMatrix::read_from(ring, buf, &mut pos)?;
+        anyhow::ensure!(
+            pos == buf.len(),
+            "share payload has {} trailing bytes",
+            buf.len() - pos
+        );
+        anyhow::ensure!(
+            a.cols == b.rows,
+            "share inner dimensions disagree: a is {}x{}, b is {}x{}",
+            a.rows,
+            a.cols,
+            b.rows,
+            b.cols
+        );
+        Ok(Share { a, b })
     }
 }
 
 /// A worker's response, tagged with its worker index.
-pub type Response<E> = (usize, Matrix<E>);
+pub type Response<E> = (usize, PlaneMatrix<<E as PlaneRing>::Base>);
 
-/// Single coded distributed matrix multiplication: `C = A·B` from any
-/// `recovery_threshold()` of `n_workers()` responses.
-pub trait CodedScheme<R: Ring>: Send + Sync {
+/// Coded distributed (batch) matrix multiplication: `C_k = A_k·B_k` for a
+/// batch of [`DmmScheme::batch_size`] pairs, decodable from any
+/// [`DmmScheme::recovery_threshold`] of [`DmmScheme::n_workers`] responses.
+///
+/// Single-product schemes are the `batch_size() == 1` point and additionally
+/// get the [`DmmScheme::encode`] / [`DmmScheme::decode`] conveniences.
+pub trait DmmScheme<R: Ring>: Send + Sync {
     /// The ring shares and responses live in.
-    type ShareRing: Ring;
+    type ShareRing: PlaneRing;
 
     fn name(&self) -> String;
     fn share_ring(&self) -> &Self::ShareRing;
@@ -55,72 +105,187 @@ pub trait CodedScheme<R: Ring>: Send + Sync {
     /// Recovery threshold `R ≤ N`.
     fn recovery_threshold(&self) -> usize;
 
-    /// Master-side encoding: one share per worker.
-    fn encode(
-        &self,
-        a: &Matrix<R::Elem>,
-        b: &Matrix<R::Elem>,
-    ) -> anyhow::Result<Vec<Share<<Self::ShareRing as Ring>::Elem>>>;
-
-    /// The worker-node computation (a small share-ring matrix product).
-    fn worker_compute(
-        &self,
-        share: &Share<<Self::ShareRing as Ring>::Elem>,
-    ) -> anyhow::Result<Matrix<<Self::ShareRing as Ring>::Elem>> {
-        Ok(Matrix::matmul(self.share_ring(), &share.a, &share.b))
+    /// Number of matrix pairs multiplied per invocation (1 = single DMM).
+    fn batch_size(&self) -> usize {
+        1
     }
 
-    /// Master-side decoding from at least `recovery_threshold()` responses
-    /// (any subset of workers; extra responses are ignored).
-    fn decode(
-        &self,
-        responses: &[Response<<Self::ShareRing as Ring>::Elem>],
-    ) -> anyhow::Result<Matrix<R::Elem>>;
-
-    /// Exact total upload volume in bytes (master → all N workers) for the
-    /// given input shapes — computed from the share shapes, matching what the
-    /// byte-accounted transport measures on the wire.
-    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize;
-
-    /// Exact download volume in bytes (first `recovery_threshold()` workers →
-    /// master).
-    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
-}
-
-/// Batch coded distributed matrix multiplication: `C_k = A_k·B_k` for a batch
-/// of `batch_size()` pairs.
-pub trait BatchCodedScheme<R: Ring>: Send + Sync {
-    type ShareRing: Ring;
-
-    fn name(&self) -> String;
-    fn share_ring(&self) -> &Self::ShareRing;
-    fn input_ring(&self) -> &R;
-    fn n_workers(&self) -> usize;
-    fn recovery_threshold(&self) -> usize;
-
-    /// Number of matrix pairs multiplied per invocation.
-    fn batch_size(&self) -> usize;
-
+    /// Master-side encoding: one plane-major share per worker.
     fn encode_batch(
         &self,
         a: &[Matrix<R::Elem>],
         b: &[Matrix<R::Elem>],
-    ) -> anyhow::Result<Vec<Share<<Self::ShareRing as Ring>::Elem>>>;
+    ) -> anyhow::Result<Vec<Share<Self::ShareRing>>>;
 
+    /// The worker-node computation: a share-ring matrix product on flat
+    /// plane-major storage — the base ring's contiguous ikj kernel plane by
+    /// plane plus one modulus reduction, no per-element heap traffic.
     fn worker_compute(
         &self,
-        share: &Share<<Self::ShareRing as Ring>::Elem>,
-    ) -> anyhow::Result<Matrix<<Self::ShareRing as Ring>::Elem>> {
-        Ok(Matrix::matmul(self.share_ring(), &share.a, &share.b))
+        share: &Share<Self::ShareRing>,
+    ) -> anyhow::Result<PlaneMatrix<<Self::ShareRing as PlaneRing>::Base>> {
+        Ok(PlaneMatrix::matmul(self.share_ring(), &share.a, &share.b))
     }
 
+    /// Master-side decoding from at least `recovery_threshold()` responses
+    /// (any subset of workers; extra responses are ignored).
     fn decode_batch(
         &self,
-        responses: &[Response<<Self::ShareRing as Ring>::Elem>],
+        responses: &[Response<Self::ShareRing>],
     ) -> anyhow::Result<Vec<Matrix<R::Elem>>>;
+
+    /// Exact total upload volume in bytes (master → all N workers) for the
+    /// given input shapes — computed from the share shapes, matching what
+    /// the byte-accounted transport measures on the wire.
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+
+    /// Exact download volume in bytes (first `recovery_threshold()` workers
+    /// → master).
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+
+    /// Single-product encode (`batch_size() == 1` schemes only).
+    fn encode(
+        &self,
+        a: &Matrix<R::Elem>,
+        b: &Matrix<R::Elem>,
+    ) -> anyhow::Result<Vec<Share<Self::ShareRing>>> {
+        anyhow::ensure!(
+            self.batch_size() == 1,
+            "{} is a batch scheme (n = {}); use encode_batch",
+            self.name(),
+            self.batch_size()
+        );
+        self.encode_batch(std::slice::from_ref(a), std::slice::from_ref(b))
+    }
+
+    /// Single-product decode (`batch_size() == 1` schemes only).
+    fn decode(
+        &self,
+        responses: &[Response<Self::ShareRing>],
+    ) -> anyhow::Result<Matrix<R::Elem>> {
+        anyhow::ensure!(
+            self.batch_size() == 1,
+            "{} is a batch scheme (n = {}); use decode_batch",
+            self.name(),
+            self.batch_size()
+        );
+        let mut out = self.decode_batch(responses)?;
+        anyhow::ensure!(out.len() == 1, "single-product decode returned {} matrices", out.len());
+        Ok(out.pop().expect("length checked above"))
+    }
+}
+
+/// Object-safe erased scheme facade: **byte payloads in, byte payloads out**.
+///
+/// The contract (used by the CLI registry, the experiments harness and the
+/// native worker backend):
+///
+/// * input/output matrices cross the facade serialized in the *input ring*'s
+///   canonical [`Matrix`] format (`rows | cols | elements`, little-endian);
+/// * share payloads and worker responses cross it in the *share ring*'s
+///   plane-major [`PlaneMatrix`]/[`Share`] format — the exact bytes the
+///   coordinator puts on the wire;
+/// * every deserialization is validated; malformed payloads return `Err`.
+pub trait DynScheme: Send + Sync {
+    fn name(&self) -> String;
+    fn n_workers(&self) -> usize;
+    fn recovery_threshold(&self) -> usize;
+    fn batch_size(&self) -> usize;
+
+    /// Encode a batch of serialized input matrices into one share payload
+    /// per worker.
+    fn encode_bytes(&self, a: &[Vec<u8>], b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>>;
+
+    /// Worker computation on a serialized share payload.
+    fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<Vec<u8>>;
+
+    /// Decode serialized `(worker_id, response)` payloads into serialized
+    /// output matrices (one per batch slot).
+    fn decode_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<Vec<u8>>>;
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize;
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+}
+
+/// Adapter implementing [`DynScheme`] for any typed [`DmmScheme`].
+pub struct Erased<R: Ring, S: DmmScheme<R>> {
+    scheme: Arc<S>,
+    _input: PhantomData<fn() -> R>,
+}
+
+impl<R: Ring, S: DmmScheme<R>> Erased<R, S> {
+    pub fn new(scheme: Arc<S>) -> Self {
+        Erased { scheme, _input: PhantomData }
+    }
+
+    /// The wrapped typed scheme.
+    pub fn inner(&self) -> &S {
+        &self.scheme
+    }
+}
+
+impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
+    fn name(&self) -> String {
+        self.scheme.name()
+    }
+    fn n_workers(&self) -> usize {
+        self.scheme.n_workers()
+    }
+    fn recovery_threshold(&self) -> usize {
+        self.scheme.recovery_threshold()
+    }
+    fn batch_size(&self) -> usize {
+        self.scheme.batch_size()
+    }
+
+    fn encode_bytes(&self, a: &[Vec<u8>], b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+        let ring = self.scheme.input_ring();
+        let am: Vec<Matrix<R::Elem>> = a
+            .iter()
+            .map(|buf| Matrix::from_bytes(ring, buf))
+            .collect::<anyhow::Result<_>>()?;
+        let bm: Vec<Matrix<R::Elem>> = b
+            .iter()
+            .map(|buf| Matrix::from_bytes(ring, buf))
+            .collect::<anyhow::Result<_>>()?;
+        let shares = self.scheme.encode_batch(&am, &bm)?;
+        let sr = self.scheme.share_ring();
+        Ok(shares.iter().map(|s| s.to_bytes(sr)).collect())
+    }
+
+    fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let sr = self.scheme.share_ring();
+        let share = Share::from_bytes(sr, payload)?;
+        let resp = self.scheme.worker_compute(&share)?;
+        Ok(resp.to_bytes(sr))
+    }
+
+    fn decode_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<Vec<u8>>> {
+        let sr = self.scheme.share_ring();
+        let typed: Vec<Response<S::ShareRing>> = responses
+            .iter()
+            .map(|(w, p)| PlaneMatrix::from_bytes(sr, p).map(|m| (*w, m)))
+            .collect::<anyhow::Result<_>>()?;
+        let out = self.scheme.decode_batch(&typed)?;
+        let ir = self.scheme.input_ring();
+        Ok(out.iter().map(|m| m.to_bytes(ir)).collect())
+    }
+
+    fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.scheme.upload_bytes(t, r, s)
+    }
+    fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
+        self.scheme.download_bytes(t, r, s)
+    }
+}
+
+/// Erase a typed scheme into the byte-payload facade.
+pub fn erase<R, S>(scheme: Arc<S>) -> Arc<dyn DynScheme>
+where
+    R: Ring,
+    S: DmmScheme<R> + 'static,
+{
+    Arc::new(Erased::new(scheme))
 }
 
 /// Partition parameters `(u, w, v)` of EP-style codes with their divisibility

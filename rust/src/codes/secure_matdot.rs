@@ -3,7 +3,8 @@
 //! GR(p^e, d) can be extended to secure and private computation and we left
 //! it as a future work"). This module implements the T-private inner-product
 //! case (secure MatDot, [2]/[6]-style) over any Galois ring, reusing the
-//! exceptional-set machinery.
+//! exceptional-set machinery. Shares, masks and responses are plane-major
+//! ([`PlaneMatrix`]) like every other scheme.
 //!
 //! Construction. Partition `A` into `w` column blocks and `B` into `w` row
 //! blocks (`C = Σ_k A_k B_k`). With `T` uniformly random mask matrices
@@ -28,15 +29,16 @@
 //! tests verify the invertibility of that mask matrix for random subsets
 //! (the simulatability witness) and the correctness/threshold claims.
 
-use super::scheme::{CodedScheme, Response, Share};
+use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::eval::lagrange_basis_coeffs;
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
 use crate::util::rng::Rng64;
 use std::sync::Mutex;
 
 /// T-private MatDot code over a ring `E` with ≥ N+1 exceptional points.
-pub struct SecureMatDot<E: Ring> {
+pub struct SecureMatDot<E: PlaneRing> {
     ring: E,
     w: usize,
     t_priv: usize,
@@ -47,7 +49,7 @@ pub struct SecureMatDot<E: Ring> {
     rng: Mutex<Rng64>,
 }
 
-impl<E: Ring> SecureMatDot<E> {
+impl<E: PlaneRing> SecureMatDot<E> {
     pub fn new(
         ring: E,
         n_workers: usize,
@@ -96,7 +98,7 @@ impl<E: Ring> SecureMatDot<E> {
     }
 }
 
-impl<E: Ring> CodedScheme<E> for SecureMatDot<E> {
+impl<E: PlaneRing> DmmScheme<E> for SecureMatDot<E> {
     type ShareRing = E;
 
     fn name(&self) -> String {
@@ -120,21 +122,30 @@ impl<E: Ring> CodedScheme<E> for SecureMatDot<E> {
         2 * (self.w + self.t_priv) - 1
     }
 
-    fn encode(&self, a: &Matrix<E::Elem>, b: &Matrix<E::Elem>) -> anyhow::Result<Vec<Share<E::Elem>>> {
+    fn encode_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<Share<E>>> {
+        anyhow::ensure!(a.len() == 1 && b.len() == 1, "SecureMatDot is a single-product scheme");
         let ring = &self.ring;
         let (w, t_priv) = (self.w, self.t_priv);
+        let (a, b) = (&a[0], &b[0]);
         anyhow::ensure!(a.cols == b.rows, "inner dimensions must agree");
         anyhow::ensure!(a.cols % w == 0, "w = {w} must divide r = {}", a.cols);
-        let a_blocks = a.partition_grid(1, w);
-        let b_blocks = b.partition_grid(w, 1);
-        // fresh uniform masks per job
+        let ap = PlaneMatrix::from_aos(ring, a);
+        let bp = PlaneMatrix::from_aos(ring, b);
+        let a_blocks = ap.partition_grid(1, w);
+        let b_blocks = bp.partition_grid(w, 1);
+        // fresh uniform masks per job (a uniform extension element is m
+        // uniform base coefficients — identical distribution plane-major)
         let (r_masks, s_masks) = {
             let mut rng = self.rng.lock().unwrap();
             let r: Vec<_> = (0..t_priv)
-                .map(|_| Matrix::random(ring, a_blocks[0].rows, a_blocks[0].cols, &mut rng))
+                .map(|_| PlaneMatrix::random(ring, a_blocks[0].rows, a_blocks[0].cols, &mut rng))
                 .collect();
             let s: Vec<_> = (0..t_priv)
-                .map(|_| Matrix::random(ring, b_blocks[0].rows, b_blocks[0].cols, &mut rng))
+                .map(|_| PlaneMatrix::random(ring, b_blocks[0].rows, b_blocks[0].cols, &mut rng))
                 .collect();
             (r, s)
         };
@@ -149,14 +160,14 @@ impl<E: Ring> CodedScheme<E> for SecureMatDot<E> {
                     powers.push(acc.clone());
                     acc = ring.mul(&acc, alpha);
                 }
-                let mut fa = Matrix::zeros(ring, a_blocks[0].rows, a_blocks[0].cols);
+                let mut fa = PlaneMatrix::zeros(ring, a_blocks[0].rows, a_blocks[0].cols);
                 for (j, blk) in a_blocks.iter().enumerate() {
                     fa.axpy(ring, &powers[j], blk);
                 }
                 for (z, blk) in r_masks.iter().enumerate() {
                     fa.axpy(ring, &powers[w + z], blk); // x^{w+z} mask slot
                 }
-                let mut gb = Matrix::zeros(ring, b_blocks[0].rows, b_blocks[0].cols);
+                let mut gb = PlaneMatrix::zeros(ring, b_blocks[0].rows, b_blocks[0].cols);
                 for (k, blk) in b_blocks.iter().enumerate() {
                     gb.axpy(ring, &powers[w - 1 - k], blk);
                 }
@@ -168,11 +179,26 @@ impl<E: Ring> CodedScheme<E> for SecureMatDot<E> {
             .collect())
     }
 
-    fn decode(&self, responses: &[Response<E::Elem>]) -> anyhow::Result<Matrix<E::Elem>> {
+    fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
         let ring = &self.ring;
         let need = self.recovery_threshold();
         anyhow::ensure!(responses.len() >= need, "{} responses < R = {need}", responses.len());
         let used = &responses[..need];
+        let (rows, cols) = (used[0].1.rows, used[0].1.cols);
+        let m = ring.plane_count();
+        let mut seen = vec![false; self.n_workers];
+        for (idx, y) in used {
+            anyhow::ensure!(*idx < self.n_workers, "worker index {idx} out of range");
+            anyhow::ensure!(!seen[*idx], "duplicate response from worker {idx}");
+            seen[*idx] = true;
+            anyhow::ensure!(
+                y.rows == rows && y.cols == cols && y.planes == m,
+                "response from worker {idx} has shape {}x{} ({} planes), expected {rows}x{cols} ({m})",
+                y.rows,
+                y.cols,
+                y.planes
+            );
+        }
         let pts: Vec<E::Elem> = used
             .iter()
             .map(|(i, _)| self.points[*i].clone())
@@ -180,13 +206,12 @@ impl<E: Ring> CodedScheme<E> for SecureMatDot<E> {
         let basis = lagrange_basis_coeffs(ring, &pts);
         // C = coefficient of x^{w−1} of the interpolated product polynomial.
         let k = self.w - 1;
-        let (rows, cols) = (used[0].1.rows, used[0].1.cols);
-        let mut c = Matrix::zeros(ring, rows, cols);
+        let mut c = PlaneMatrix::zeros(ring, rows, cols);
         for (j, (_, y)) in used.iter().enumerate() {
             let weight = basis[j].get(k).cloned().unwrap_or_else(|| ring.zero());
             c.axpy(ring, &weight, y);
         }
-        Ok(c)
+        Ok(vec![c.to_aos(ring)])
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {

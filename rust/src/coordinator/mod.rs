@@ -18,9 +18,11 @@
 //!   handling;
 //! * [`metrics`] — the timing/volume breakdown the evaluation section plots
 //!   (encode / upload / worker compute / download / decode);
-//! * [`runner`] — glue that runs a [`CodedScheme`](crate::codes::CodedScheme)
-//!   or [`BatchCodedScheme`](crate::codes::BatchCodedScheme) job end-to-end
-//!   on a pool.
+//! * [`runner`] — glue that runs a [`DmmScheme`](crate::codes::DmmScheme)
+//!   job (typed, single or batch) or an erased
+//!   [`DynScheme`](crate::codes::DynScheme) job end-to-end on a pool, plus
+//!   the single native worker backend
+//!   ([`NativeCompute`](runner::NativeCompute)).
 
 pub mod transport;
 pub mod straggler;
@@ -32,5 +34,5 @@ pub mod runner;
 pub use master::Coordinator;
 pub use metrics::JobMetrics;
 pub use straggler::StragglerModel;
-pub use runner::{run_batch, run_single, NativeBatchCompute, NativeSingleCompute};
+pub use runner::{run_batch, run_erased, run_single, NativeCompute};
 pub use worker::ShareCompute;

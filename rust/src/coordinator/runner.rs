@@ -1,92 +1,68 @@
-//! Glue between the coding layer and the coordinator: runs one
-//! single-product or batch job end-to-end and produces the full
-//! [`JobMetrics`] breakdown.
+//! Glue between the coding layer and the coordinator: runs one job (single
+//! or batch — the unified [`DmmScheme`] covers both) end-to-end and produces
+//! the full [`JobMetrics`] breakdown.
+//!
+//! There is exactly **one** native worker backend, [`NativeCompute`]: it
+//! holds an erased [`DynScheme`] and forwards the serialized share payload
+//! to [`DynScheme::compute_bytes`] — deserialize the plane-major share,
+//! multiply plane-by-plane with the base ring's contiguous kernel, serialize
+//! the plane-major response. Malformed payloads surface as job failures
+//! (the worker loop reports `Err` as a dropped response), never as a panic
+//! unwinding the pool thread.
 
 use super::master::Coordinator;
 use super::metrics::JobMetrics;
 use super::worker::ShareCompute;
-use crate::codes::scheme::{BatchCodedScheme, CodedScheme, Share};
+use crate::codes::scheme::{DmmScheme, DynScheme, Erased, Response};
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneMatrix;
 use crate::ring::traits::Ring;
 use std::sync::Arc;
 use std::time::Instant;
 
 pub use super::worker::ShareCompute as ShareComputeTrait;
 
-/// Native worker backend for a single-product scheme: deserialize the share,
-/// multiply with the generic ring kernels, serialize the response.
-pub struct NativeSingleCompute<R: Ring, S: CodedScheme<R>> {
-    scheme: Arc<S>,
-    _marker: std::marker::PhantomData<fn() -> R>,
+/// The native worker backend: an erased scheme applied to byte payloads.
+pub struct NativeCompute {
+    scheme: Arc<dyn DynScheme>,
 }
 
-impl<R: Ring, S: CodedScheme<R>> NativeSingleCompute<R, S> {
-    pub fn new(scheme: Arc<S>) -> Self {
-        NativeSingleCompute { scheme, _marker: std::marker::PhantomData }
+impl NativeCompute {
+    /// Wrap an already-erased scheme (e.g. from
+    /// [`crate::codes::registry::build`]).
+    pub fn new(scheme: Arc<dyn DynScheme>) -> Self {
+        NativeCompute { scheme }
+    }
+
+    /// Convenience: erase a typed scheme and wrap it.
+    pub fn for_scheme<R, S>(scheme: Arc<S>) -> Self
+    where
+        R: Ring,
+        S: DmmScheme<R> + 'static,
+    {
+        NativeCompute { scheme: Arc::new(Erased::new(scheme)) }
     }
 }
 
-impl<R: Ring, S: CodedScheme<R> + 'static> ShareCompute for NativeSingleCompute<R, S> {
+impl ShareCompute for NativeCompute {
     fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-        let ring = self.scheme.share_ring();
-        let share = Share::from_bytes(ring, payload);
-        let resp = self.scheme.worker_compute(&share)?;
-        Ok(resp.to_bytes(ring))
+        self.scheme.compute_bytes(payload)
+    }
+
+    fn backend_name(&self) -> String {
+        format!("native:{}", self.scheme.name())
     }
 }
 
-/// Native worker backend for a batch scheme.
-pub struct NativeBatchCompute<R: Ring, S: BatchCodedScheme<R>> {
-    scheme: Arc<S>,
-    _marker: std::marker::PhantomData<fn() -> R>,
-}
-
-impl<R: Ring, S: BatchCodedScheme<R>> NativeBatchCompute<R, S> {
-    pub fn new(scheme: Arc<S>) -> Self {
-        NativeBatchCompute { scheme, _marker: std::marker::PhantomData }
-    }
-}
-
-impl<R: Ring, S: BatchCodedScheme<R> + 'static> ShareCompute for NativeBatchCompute<R, S> {
-    fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-        let ring = self.scheme.share_ring();
-        let share = Share::from_bytes(ring, payload);
-        let resp = self.scheme.worker_compute(&share)?;
-        Ok(resp.to_bytes(ring))
-    }
-}
-
-/// Run one single-product job (`C = A·B`) on the pool. The coordinator must
-/// have been built with a backend compatible with `scheme` (e.g.
-/// [`NativeSingleCompute::new(scheme.clone())`]).
-pub fn run_single<R: Ring, S: CodedScheme<R>>(
-    scheme: &S,
-    coord: &mut Coordinator,
-    a: &Matrix<R::Elem>,
-    b: &Matrix<R::Elem>,
-) -> anyhow::Result<(Matrix<R::Elem>, JobMetrics)> {
-    let ring = scheme.share_ring();
-    let t_total = Instant::now();
-    let counters = coord.counters().clone();
-    counters.reset();
-
-    let t0 = Instant::now();
-    let shares = scheme.encode(a, b)?;
-    let payloads: Vec<Vec<u8>> = shares.iter().map(|s| s.to_bytes(ring)).collect();
-    let encode = t0.elapsed();
-
-    let need = scheme.recovery_threshold();
-    let (collected, wait_for_r) = coord.submit_and_collect(payloads, need)?;
-
-    let t0 = Instant::now();
-    let responses: Vec<(usize, Matrix<<S::ShareRing as Ring>::Elem>)> = collected
-        .iter()
-        .map(|c| (c.worker_id, Matrix::from_bytes(ring, &c.payload)))
-        .collect();
-    let c = scheme.decode(&responses)?;
-    let decode = t0.elapsed();
-
-    let metrics = JobMetrics {
+fn job_metrics(
+    encode: std::time::Duration,
+    decode: std::time::Duration,
+    wait_for_r: std::time::Duration,
+    total: std::time::Duration,
+    counters: &super::transport::ByteCounters,
+    collected: &[super::master::Collected],
+) -> JobMetrics {
+    JobMetrics {
         encode,
         decode,
         wait_for_r,
@@ -95,13 +71,62 @@ pub fn run_single<R: Ring, S: CodedScheme<R>>(
         worker_compute: collected.iter().map(|c| c.compute).collect(),
         worker_delay: collected.iter().map(|c| c.injected_delay).collect(),
         used_workers: collected.iter().map(|c| c.worker_id).collect(),
-        total: t_total.elapsed(),
-    };
-    Ok((c, metrics))
+        total,
+    }
 }
 
-/// Run one batch job (`C_k = A_k·B_k`) on the pool.
-pub fn run_batch<R: Ring, S: BatchCodedScheme<R>>(
+/// Run one job through the erased byte facade: serialize the inputs in
+/// `ring`'s canonical format, encode, dispatch, collect the first `R`
+/// responses, decode. This is the path `main.rs` and `experiments/` use —
+/// scheme selection stays a string, no per-scheme monomorphization.
+pub fn run_erased<R: Ring>(
+    ring: &R,
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    a: &[Matrix<R::Elem>],
+    b: &[Matrix<R::Elem>],
+) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
+    let t_total = Instant::now();
+    let counters = coord.counters().clone();
+    counters.reset();
+
+    // Crossing the byte facade (serialize here, deserialize inside
+    // `encode_bytes`) happens OUTSIDE the timed encode window, so the
+    // reported `encode` stays comparable to the typed `run_batch` path up to
+    // one linear input pass inside the facade (memcpy-level, dwarfed by the
+    // polynomial evaluation it precedes).
+    let a_bytes: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(ring)).collect();
+    let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(ring)).collect();
+
+    let t0 = Instant::now();
+    let payloads = scheme.encode_bytes(&a_bytes, &b_bytes)?;
+    let encode = t0.elapsed();
+
+    let need = scheme.recovery_threshold();
+    let (collected, wait_for_r) = coord.submit_and_collect(payloads, need)?;
+
+    let responses: Vec<(usize, &[u8])> = collected
+        .iter()
+        .map(|c| (c.worker_id, c.payload.as_slice()))
+        .collect();
+    let t0 = Instant::now();
+    let out_bytes = scheme.decode_bytes(&responses)?;
+    let decode = t0.elapsed();
+    // Re-crossing the facade (output bytes → matrices) is untimed, mirroring
+    // the encode side.
+    let out: Vec<Matrix<R::Elem>> = out_bytes
+        .iter()
+        .map(|buf| Matrix::from_bytes(ring, buf))
+        .collect::<anyhow::Result<_>>()?;
+
+    let metrics = job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
+    Ok((out, metrics))
+}
+
+/// Run one batch job (`C_k = A_k·B_k`) with a typed scheme. The coordinator
+/// must have been built with a compatible backend (e.g.
+/// [`NativeCompute::for_scheme`]).
+pub fn run_batch<R: Ring, S: DmmScheme<R>>(
     scheme: &S,
     coord: &mut Coordinator,
     a: &[Matrix<R::Elem>],
@@ -121,25 +146,38 @@ pub fn run_batch<R: Ring, S: BatchCodedScheme<R>>(
     let (collected, wait_for_r) = coord.submit_and_collect(payloads, need)?;
 
     let t0 = Instant::now();
-    let responses: Vec<(usize, Matrix<<S::ShareRing as Ring>::Elem>)> = collected
+    let responses: Vec<Response<S::ShareRing>> = collected
         .iter()
-        .map(|c| (c.worker_id, Matrix::from_bytes(ring, &c.payload)))
-        .collect();
+        .map(|c| PlaneMatrix::from_bytes(ring, &c.payload).map(|m| (c.worker_id, m)))
+        .collect::<anyhow::Result<_>>()?;
     let c = scheme.decode_batch(&responses)?;
     let decode = t0.elapsed();
 
-    let metrics = JobMetrics {
-        encode,
-        decode,
-        wait_for_r,
-        upload_bytes: counters.upload_total(),
-        download_bytes: counters.download_used_total(),
-        worker_compute: collected.iter().map(|c| c.compute).collect(),
-        worker_delay: collected.iter().map(|c| c.injected_delay).collect(),
-        used_workers: collected.iter().map(|c| c.worker_id).collect(),
-        total: t_total.elapsed(),
-    };
+    let metrics = job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
     Ok((c, metrics))
+}
+
+/// Run one single-product job (`C = A·B`) with a typed scheme
+/// (`batch_size() == 1`).
+pub fn run_single<R: Ring, S: DmmScheme<R>>(
+    scheme: &S,
+    coord: &mut Coordinator,
+    a: &Matrix<R::Elem>,
+    b: &Matrix<R::Elem>,
+) -> anyhow::Result<(Matrix<R::Elem>, JobMetrics)> {
+    anyhow::ensure!(
+        scheme.batch_size() == 1,
+        "{} is a batch scheme; use run_batch",
+        scheme.name()
+    );
+    let (mut out, metrics) = run_batch(
+        scheme,
+        coord,
+        std::slice::from_ref(a),
+        std::slice::from_ref(b),
+    )?;
+    anyhow::ensure!(out.len() == 1, "single-product job returned {} outputs", out.len());
+    Ok((out.pop().expect("length checked above"), metrics))
 }
 
 #[cfg(test)]
@@ -148,6 +186,7 @@ mod tests {
     use crate::codes::batch_ep_rmfe::BatchEpRmfe;
     use crate::codes::ep::PlainEp;
     use crate::codes::ep_rmfe_i::EpRmfeI;
+    use crate::codes::registry::{self, SchemeConfig};
     use crate::coordinator::straggler::StragglerModel;
     use crate::ring::zq::Zq;
     use crate::util::rng::Rng64;
@@ -156,7 +195,7 @@ mod tests {
     fn single_job_end_to_end() {
         let base = Zq::z2e(64);
         let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
-        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+        let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
         let mut coord = Coordinator::new(8, backend, StragglerModel::None, 11);
         let mut rng = Rng64::seeded(171);
         let a = Matrix::random(&base, 8, 8, &mut rng);
@@ -164,11 +203,8 @@ mod tests {
         let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
         assert_eq!(c, Matrix::matmul(&base, &a, &b));
         // wire accounting matches the scheme's analytic model
-        assert_eq!(m.upload_bytes as usize, CodedScheme::upload_bytes(scheme.as_ref(), 8, 8, 8));
-        assert_eq!(
-            m.download_bytes as usize,
-            CodedScheme::download_bytes(scheme.as_ref(), 8, 8, 8)
-        );
+        assert_eq!(m.upload_bytes as usize, scheme.upload_bytes(8, 8, 8));
+        assert_eq!(m.download_bytes as usize, scheme.download_bytes(8, 8, 8));
         assert_eq!(m.used_workers.len(), 4);
         coord.shutdown();
     }
@@ -177,7 +213,7 @@ mod tests {
     fn single_job_with_stragglers_still_correct() {
         let base = Zq::z2e(64);
         let scheme = Arc::new(PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap());
-        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+        let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
         let straggler =
             StragglerModel::fixed_slow([0, 1], std::time::Duration::from_millis(150));
         let mut coord = Coordinator::new(8, backend, straggler, 12);
@@ -195,7 +231,7 @@ mod tests {
     fn batch_job_end_to_end() {
         let base = Zq::z2e(64);
         let scheme = Arc::new(BatchEpRmfe::new(base.clone(), 8, 2, 2, 1, 2).unwrap());
-        let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&scheme)));
+        let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
         let mut coord = Coordinator::new(8, backend, StragglerModel::None, 13);
         let mut rng = Rng64::seeded(173);
         let a: Vec<_> = (0..2).map(|_| Matrix::random(&base, 4, 4, &mut rng)).collect();
@@ -213,7 +249,7 @@ mod tests {
         let base = Zq::z2e(64);
         // R = 4, N = 8: tolerate up to 4 failures.
         let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
-        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+        let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
         let straggler = StragglerModel::fail_stop([1, 3, 5, 7]);
         let mut coord = Coordinator::new(8, backend, straggler, 14);
         let mut rng = Rng64::seeded(174);
@@ -221,6 +257,32 @@ mod tests {
         let b = Matrix::random(&base, 4, 4, &mut rng);
         let (c, _) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
         assert_eq!(c, Matrix::matmul(&base, &a, &b));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn erased_job_through_registry() {
+        // The exact path main.rs/experiments take: registry name → erased
+        // scheme → NativeCompute pool → run_erased.
+        let base = Zq::z2e(64);
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+        let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+        let mut coord = Coordinator::new(8, backend, StragglerModel::None, 15);
+        let mut rng = Rng64::seeded(175);
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        let (c, m) = run_erased(
+            &base,
+            scheme.as_ref(),
+            &mut coord,
+            std::slice::from_ref(&a),
+            std::slice::from_ref(&b),
+        )
+        .unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0], Matrix::matmul(&base, &a, &b));
+        assert_eq!(m.upload_bytes as usize, scheme.upload_bytes(8, 8, 8));
         coord.shutdown();
     }
 }

@@ -1,7 +1,8 @@
 //! Figures 2–5 (§V.B, §V.C): master/worker computation time and
 //! communication volume for the three single-DMM schemes over `Z_{2^64}`.
 //!
-//! Configurations (exactly §V.A):
+//! Configurations (exactly §V.A, via
+//! [`SchemeConfig::for_workers`]):
 //! * 8 workers — `GR(2^64, 3)`, `u = v = 2, w = 1` ⇒ `R = 4`, both RMFE
 //!   variants at `n = 2`;
 //! * 16 workers — `GR(2^64, 4)`, `u = v = w = 2` ⇒ `R = 9`, `n = 2`.
@@ -10,11 +11,12 @@
 //! upload/download volume) and the worker view (Figs 4/5: per-worker compute
 //! time and per-worker communication) — the paper plots the same runs from
 //! two angles, and so do we.
+//!
+//! Every scheme is built through the erased registry and driven with
+//! [`run_erased`] — one code path, no per-scheme monomorphized plumbing.
 
-use crate::codes::ep::PlainEp;
-use crate::codes::ep_rmfe_i::EpRmfeI;
-use crate::codes::ep_rmfe_ii::EpRmfeII;
-use crate::coordinator::runner::{run_single, NativeSingleCompute};
+use crate::codes::registry::{self, SchemeConfig};
+use crate::coordinator::runner::{run_erased, NativeCompute};
 use crate::coordinator::{Coordinator, JobMetrics, StragglerModel};
 use crate::ring::matrix::Matrix;
 use crate::ring::zq::Zq;
@@ -81,30 +83,14 @@ impl FigRecord {
     }
 }
 
-/// The §V.A configuration for a worker count.
-pub struct FigConfig {
-    pub n_workers: usize,
-    pub m: usize,
-    pub u: usize,
-    pub w: usize,
-    pub v: usize,
-    pub n_split: usize,
-}
-
-impl FigConfig {
-    pub fn for_workers(n_workers: usize) -> anyhow::Result<FigConfig> {
-        match n_workers {
-            8 => Ok(FigConfig { n_workers: 8, m: 3, u: 2, w: 1, v: 2, n_split: 2 }),
-            16 => Ok(FigConfig { n_workers: 16, m: 4, u: 2, w: 2, v: 2, n_split: 2 }),
-            32 => Ok(FigConfig { n_workers: 32, m: 5, u: 2, w: 2, v: 2, n_split: 3 }),
-            _ => anyhow::bail!("no paper configuration for N = {n_workers} (use 8, 16 or 32)"),
-        }
-    }
-}
+/// The three single-DMM schemes of Figures 2–5: display label, registry
+/// name, per-scheme seed perturbation.
+const FIG_SCHEMES: &[(&str, &str, u64)] =
+    &[("EP", "ep", 0), ("EP_RMFE-I", "ep-rmfe-1", 1), ("EP_RMFE-II", "ep-rmfe-2", 2)];
 
 /// Run the sweep: for each size and scheme, run `reps` jobs and average.
 pub fn sweep(
-    cfg: &FigConfig,
+    cfg: &SchemeConfig,
     sizes: &[usize],
     reps: usize,
     seed: u64,
@@ -121,69 +107,25 @@ pub fn sweep(
         let a = Matrix::random(&base, size, size, &mut rng);
         let b = Matrix::random(&base, size, size, &mut rng);
 
-        // EP (plain embedded baseline, Lemma III.1)
-        {
-            let scheme =
-                Arc::new(PlainEp::with_m(base.clone(), cfg.m, cfg.n_workers, cfg.u, cfg.w, cfg.v)?);
-            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+        for &(label, reg_name, seed_xor) in FIG_SCHEMES {
+            let scheme = registry::build(reg_name, cfg)?;
+            let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
             let mut coord =
-                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed);
+                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed ^ seed_xor);
             let mut runs = Vec::new();
             for _ in 0..reps {
-                let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
-                debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
+                let (c, m) = run_erased(
+                    &base,
+                    scheme.as_ref(),
+                    &mut coord,
+                    std::slice::from_ref(&a),
+                    std::slice::from_ref(&b),
+                )?;
+                debug_assert_eq!(c[0], Matrix::matmul(&base, &a, &b));
                 runs.push(m);
             }
             coord.shutdown();
-            records.push(FigRecord::from_metrics("EP", cfg.n_workers, size, &runs));
-        }
-
-        // EP_RMFE-I (Corollary IV.1)
-        {
-            let scheme = Arc::new(EpRmfeI::with_m(
-                base.clone(),
-                cfg.m,
-                cfg.n_workers,
-                cfg.u,
-                cfg.w,
-                cfg.v,
-                cfg.n_split,
-            )?);
-            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
-            let mut coord =
-                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed ^ 1);
-            let mut runs = Vec::new();
-            for _ in 0..reps {
-                let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
-                debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
-                runs.push(m);
-            }
-            coord.shutdown();
-            records.push(FigRecord::from_metrics("EP_RMFE-I", cfg.n_workers, size, &runs));
-        }
-
-        // EP_RMFE-II (Corollary IV.2, φ1-only as in §V.A)
-        {
-            let scheme = Arc::new(EpRmfeII::with_m(
-                base.clone(),
-                cfg.m,
-                cfg.n_workers,
-                cfg.u,
-                cfg.w,
-                cfg.v,
-                cfg.n_split,
-            )?);
-            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
-            let mut coord =
-                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed ^ 2);
-            let mut runs = Vec::new();
-            for _ in 0..reps {
-                let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
-                debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
-                runs.push(m);
-            }
-            coord.shutdown();
-            records.push(FigRecord::from_metrics("EP_RMFE-II", cfg.n_workers, size, &runs));
+            records.push(FigRecord::from_metrics(label, cfg.n_workers, size, &runs));
         }
     }
     Ok(records)
@@ -240,7 +182,7 @@ mod tests {
 
     #[test]
     fn sweep_smallest_size_8_workers() {
-        let cfg = FigConfig::for_workers(8).unwrap();
+        let cfg = SchemeConfig::for_workers(8).unwrap();
         let recs = sweep(&cfg, &[16], 1, 7).unwrap();
         assert_eq!(recs.len(), 3);
         // the paper's headline ratios at n=2:
@@ -259,7 +201,7 @@ mod tests {
 
     #[test]
     fn render_views() {
-        let cfg = FigConfig::for_workers(8).unwrap();
+        let cfg = SchemeConfig::for_workers(8).unwrap();
         let recs = sweep(&cfg, &[16], 1, 8).unwrap();
         let master = render_master_view(&recs);
         assert!(master.contains("encode (s)"));
@@ -269,12 +211,12 @@ mod tests {
 
     #[test]
     fn config_16_is_paper_params() {
-        let cfg = FigConfig::for_workers(16).unwrap();
+        let cfg = SchemeConfig::for_workers(16).unwrap();
         assert_eq!((cfg.m, cfg.u, cfg.w, cfg.v, cfg.n_split), (4, 2, 2, 2, 2));
     }
 
     #[test]
     fn unknown_worker_count_rejected() {
-        assert!(FigConfig::for_workers(12).is_err());
+        assert!(SchemeConfig::for_workers(12).is_err());
     }
 }

@@ -5,15 +5,15 @@
 //! We run EP (plain, m=5) vs EP_RMFE-I (n=3, via the ∞-point (3,5)-RMFE) at
 //! N = 32 and report the same master/worker metrics as Figures 2–5 — the
 //! expected shape is a ~3× reduction in encode time, upload volume and
-//! worker compute.
+//! worker compute. Both schemes come from the erased registry.
 
-use crate::codes::ep::PlainEp;
-use crate::codes::ep_rmfe_i::EpRmfeI;
-use crate::coordinator::runner::{run_single, NativeSingleCompute};
+use crate::codes::registry::{self, SchemeConfig};
+use crate::coordinator::runner::{run_erased, NativeCompute};
 use crate::coordinator::{Coordinator, StragglerModel};
 use crate::ring::matrix::Matrix;
 use crate::ring::zq::Zq;
 use crate::util::bench::markdown_table;
+use crate::util::json::Json;
 use crate::util::rng::Rng64;
 use std::sync::Arc;
 
@@ -27,10 +27,24 @@ pub struct Rmfe35Record {
     pub worker_compute_s: f64,
 }
 
+impl Rmfe35Record {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scheme", self.scheme.as_str())
+            .set("size", self.size)
+            .set("encode_s", self.encode_s)
+            .set("decode_s", self.decode_s)
+            .set("upload_bytes", self.upload_bytes)
+            .set("download_bytes", self.download_bytes)
+            .set("worker_compute_s", self.worker_compute_s)
+    }
+}
+
 pub fn run(sizes: &[usize], seed: u64) -> anyhow::Result<Vec<Rmfe35Record>> {
     let base = Zq::z2e(64);
-    let n_workers = 32;
-    let (u, w, v) = (2, 1, 2);
+    // N = 32 over GR(2^64, 5), u = v = 2, w = 1; EP_RMFE-I packs n = 3 via
+    // the ∞-point (3,5)-RMFE.
+    let cfg = SchemeConfig { n_workers: 32, m: 5, u: 2, w: 1, v: 2, n_split: 3 };
     let mut rng = Rng64::seeded(seed);
     let mut out = Vec::new();
     for &size in sizes {
@@ -38,38 +52,32 @@ pub fn run(sizes: &[usize], seed: u64) -> anyhow::Result<Vec<Rmfe35Record>> {
         let a = Matrix::random(&base, size, size, &mut rng);
         let b = Matrix::random(&base, size, size, &mut rng);
 
-        let plain = Arc::new(PlainEp::with_m(base.clone(), 5, n_workers, u, w, v)?);
-        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&plain)));
-        let mut coord = Coordinator::new(n_workers, backend, StragglerModel::None, seed);
-        let (c, m) = run_single(plain.as_ref(), &mut coord, &a, &b)?;
-        debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
-        coord.shutdown();
-        out.push(Rmfe35Record {
-            scheme: "EP (m=5)".into(),
-            size,
-            encode_s: m.encode.as_secs_f64(),
-            decode_s: m.decode.as_secs_f64(),
-            upload_bytes: m.upload_bytes,
-            download_bytes: m.download_bytes,
-            worker_compute_s: m.mean_worker_compute().as_secs_f64(),
-        });
-
-        let rmfe = Arc::new(EpRmfeI::with_m(base.clone(), 5, n_workers, u, w, v, 3)?);
-        assert!(rmfe.batch().rmfe().uses_infinity(), "(3,5)-RMFE uses ∞");
-        let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&rmfe)));
-        let mut coord = Coordinator::new(n_workers, backend, StragglerModel::None, seed ^ 3);
-        let (c, m) = run_single(rmfe.as_ref(), &mut coord, &a, &b)?;
-        debug_assert_eq!(c, Matrix::matmul(&base, &a, &b));
-        coord.shutdown();
-        out.push(Rmfe35Record {
-            scheme: "EP_RMFE-I (n=3, (3,5)-RMFE)".into(),
-            size,
-            encode_s: m.encode.as_secs_f64(),
-            decode_s: m.decode.as_secs_f64(),
-            upload_bytes: m.upload_bytes,
-            download_bytes: m.download_bytes,
-            worker_compute_s: m.mean_worker_compute().as_secs_f64(),
-        });
+        for (label, reg_name, seed_xor) in
+            [("EP (m=5)", "ep", 0u64), ("EP_RMFE-I (n=3, (3,5)-RMFE)", "ep-rmfe-1", 3)]
+        {
+            let scheme = registry::build(reg_name, &cfg)?;
+            let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+            let mut coord =
+                Coordinator::new(cfg.n_workers, backend, StragglerModel::None, seed ^ seed_xor);
+            let (c, m) = run_erased(
+                &base,
+                scheme.as_ref(),
+                &mut coord,
+                std::slice::from_ref(&a),
+                std::slice::from_ref(&b),
+            )?;
+            debug_assert_eq!(c[0], Matrix::matmul(&base, &a, &b));
+            coord.shutdown();
+            out.push(Rmfe35Record {
+                scheme: label.into(),
+                size,
+                encode_s: m.encode.as_secs_f64(),
+                decode_s: m.decode.as_secs_f64(),
+                upload_bytes: m.upload_bytes,
+                download_bytes: m.download_bytes,
+                worker_compute_s: m.mean_worker_compute().as_secs_f64(),
+            });
+        }
     }
     Ok(out)
 }

@@ -10,17 +10,18 @@
 //! 2. **Measured point** — at `uvw = 1, κ = n` GCSA degenerates to CSA codes
 //!    (implemented in `codes::csa`), which we run head-to-head against
 //!    Batch-EP_RMFE on the coordinator, reporting measured thresholds,
-//!    wire bytes and encode/decode times.
+//!    wire bytes and encode/decode times. Both schemes come from the erased
+//!    registry (the `csa` entry embeds `Z_{2^64}` inputs into the extension
+//!    itself, exactly as GCSA prescribes) and run through
+//!    [`run_erased`].
 
-use crate::codes::batch_ep_rmfe::BatchEpRmfe;
-use crate::codes::csa::CsaCode;
-use crate::codes::scheme::BatchCodedScheme;
-use crate::coordinator::runner::{run_batch, NativeBatchCompute};
+use crate::codes::registry::{self, SchemeConfig};
+use crate::coordinator::runner::{run_erased, NativeCompute};
 use crate::coordinator::{Coordinator, StragglerModel};
-use crate::ring::extension::Extension;
 use crate::ring::matrix::Matrix;
 use crate::ring::zq::Zq;
 use crate::util::bench::markdown_table;
+use crate::util::json::Json;
 use crate::util::rng::Rng64;
 use std::sync::Arc;
 
@@ -38,6 +39,21 @@ pub struct Table1Row {
     pub ours_download: f64,
     pub gcsa_worker: f64,
     pub ours_worker: f64,
+}
+
+impl Table1Row {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("kappa", self.kappa)
+            .set("gcsa_r", self.gcsa_r)
+            .set("ours_r", self.ours_r)
+            .set("gcsa_upload", self.gcsa_upload)
+            .set("ours_upload", self.ours_upload)
+            .set("gcsa_download", self.gcsa_download)
+            .set("ours_download", self.ours_download)
+            .set("gcsa_worker", self.gcsa_worker)
+            .set("ours_worker", self.ours_worker)
+    }
 }
 
 /// Instantiate the Table-1 formulas (amortized per matrix multiplication).
@@ -116,6 +132,19 @@ pub struct MeasuredPoint {
     pub worker_compute_s: f64,
 }
 
+impl MeasuredPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scheme", self.scheme.as_str())
+            .set("recovery_threshold", self.recovery_threshold)
+            .set("encode_s", self.encode_s)
+            .set("decode_s", self.decode_s)
+            .set("upload_bytes", self.upload_bytes)
+            .set("download_bytes", self.download_bytes)
+            .set("worker_compute_s", self.worker_compute_s)
+    }
+}
+
 pub fn measured_point(
     n_batch: usize,
     size: usize,
@@ -127,49 +156,47 @@ pub fn measured_point(
     let b: Vec<_> = (0..n_batch).map(|_| Matrix::random(&base, size, size, &mut rng)).collect();
     let mut out = Vec::new();
 
-    // Batch-EP_RMFE with u=v=w=1 (pure batching; R = 1).
-    {
-        let n_workers = 4;
-        let scheme = Arc::new(BatchEpRmfe::new(base.clone(), n_workers, n_batch, 1, 1, 1)?);
-        let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&scheme)));
-        let mut coord = Coordinator::new(n_workers, backend, StragglerModel::None, seed);
-        let (c, m) = run_batch(scheme.as_ref(), &mut coord, &a, &b)?;
+    // Registry configs for the two runnable points. Batch-EP_RMFE uses
+    // u=v=w=1 (pure batching; R = 1) with m = max(2n−1, ⌈log₂ N⌉); the CSA
+    // entry sizes its own extension for n + N exceptional points.
+    let runs = [
+        (
+            "batch-ep-rmfe",
+            SchemeConfig {
+                n_workers: 4,
+                m: (2 * n_batch - 1).max(2),
+                u: 1,
+                w: 1,
+                v: 1,
+                n_split: n_batch,
+            },
+            seed,
+        ),
+        (
+            "csa",
+            SchemeConfig {
+                n_workers: 2 * n_batch + 1,
+                m: 0, // unused: csa derives m from n_split + n_workers
+                u: 1,
+                w: 1,
+                v: 1,
+                n_split: n_batch,
+            },
+            seed ^ 1,
+        ),
+    ];
+
+    for (name, cfg, run_seed) in runs {
+        let scheme = registry::build(name, &cfg)?;
+        let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+        let mut coord = Coordinator::new(cfg.n_workers, backend, StragglerModel::None, run_seed);
+        let (c, m) = run_erased(&base, scheme.as_ref(), &mut coord, &a, &b)?;
         for k in 0..n_batch {
             debug_assert_eq!(c[k], Matrix::matmul(&base, &a[k], &b[k]));
         }
         coord.shutdown();
         out.push(MeasuredPoint {
-            scheme: format!("Batch-EP_RMFE (m={})", scheme.m()),
-            recovery_threshold: scheme.recovery_threshold(),
-            encode_s: m.encode.as_secs_f64(),
-            decode_s: m.decode.as_secs_f64(),
-            upload_bytes: m.upload_bytes,
-            download_bytes: m.download_bytes,
-            worker_compute_s: m.mean_worker_compute().as_secs_f64(),
-        });
-    }
-
-    // CSA over the *same* extension ring (m chosen for n + N points).
-    {
-        let n_workers = 2 * n_batch + 1;
-        let ext = Extension::with_capacity(Zq::z2e(64), n_batch + n_workers);
-        let m_ext = ext.m();
-        let scheme = Arc::new(CsaCode::new(ext.clone(), n_workers, n_batch)?);
-        let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&scheme)));
-        let mut coord = Coordinator::new(n_workers, backend, StragglerModel::None, seed ^ 1);
-        // CSA takes inputs already in the extension ring (GCSA would embed):
-        let ae: Vec<_> = a.iter().map(|mat| mat.map(|x| ext.from_base(x))).collect();
-        let be: Vec<_> = b.iter().map(|mat| mat.map(|x| ext.from_base(x))).collect();
-        let (c, m) = run_batch(scheme.as_ref(), &mut coord, &ae, &be)?;
-        for k in 0..n_batch {
-            debug_assert_eq!(
-                c[k].map(|x| x[0]),
-                Matrix::matmul(&base, &a[k], &b[k])
-            );
-        }
-        coord.shutdown();
-        out.push(MeasuredPoint {
-            scheme: format!("CSA/GCSA (uvw=1, κ=n, m={m_ext})"),
+            scheme: scheme.name(),
             recovery_threshold: scheme.recovery_threshold(),
             encode_s: m.encode.as_secs_f64(),
             decode_s: m.decode.as_secs_f64(),

@@ -8,7 +8,10 @@
 //!
 //! * [`ring`] — the algebraic substrate: `Z_{p^e}`, Galois rings `GR(p^e, d)`,
 //!   tower extensions `GR(p^e, d·m)`, exceptional sets, fast multipoint
-//!   evaluation / interpolation, and dense matrices over any ring.
+//!   evaluation / interpolation, and dense matrices over any ring — the AoS
+//!   [`ring::matrix::Matrix`] for user-facing inputs and the plane-major
+//!   [`ring::plane::PlaneMatrix`] that every share, wire payload and worker
+//!   product uses.
 //! * [`rmfe`] — Reverse Multiplication-Friendly Embeddings: the interpolation
 //!   construction `(n, m)`-RMFE with `m ≥ 2n−1` (Definition II.2), the
 //!   point-at-infinity extension (`n ≤ p^d + 1`) and concatenation (Lemma II.5).
@@ -16,7 +19,10 @@
 //!   Polynomial codes, MatDot codes, CSA batch codes (the runnable GCSA
 //!   baseline point), and the paper's contributions: `Batch-EP_RMFE`
 //!   (Theorem III.2), `EP_RMFE-I` (Corollary IV.1) and `EP_RMFE-II`
-//!   (Corollary IV.2).
+//!   (Corollary IV.2). One trait ([`codes::DmmScheme`], single product =
+//!   `batch_size() == 1`) covers all of them; [`codes::DynScheme`] is the
+//!   object-safe byte-payload facade and [`codes::registry`] builds schemes
+//!   by name.
 //! * [`coordinator`] — the L3 distributed runtime: master node, worker pool on
 //!   OS threads, byte-accounted transport, straggler injection, metrics.
 //! * [`runtime`] — the PJRT bridge: loads AOT-compiled `artifacts/*.hlo.txt`
@@ -37,7 +43,7 @@
 //! ```
 //! use gr_cdmm::ring::zq::Zq;
 //! use gr_cdmm::ring::matrix::Matrix;
-//! use gr_cdmm::codes::scheme::CodedScheme;
+//! use gr_cdmm::codes::scheme::DmmScheme;
 //! use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
 //! use gr_cdmm::util::rng::Rng64;
 //!
@@ -59,6 +65,11 @@
 //!
 //! For the threaded end-to-end path (worker pool, straggler injection, byte
 //! accounting) see `examples/quickstart.rs`.
+
+// Ring element types are `Vec`-backed aliases (`GfqElem`, `GrElem`,
+// `ExtElem<R>`): `&GfqElem` parameters are the canonical `&Elem` API of the
+// `Ring` trait, not slices-in-disguise, so `clippy::ptr_arg` does not apply.
+#![allow(clippy::ptr_arg)]
 
 pub mod util;
 pub mod ring;

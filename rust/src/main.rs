@@ -1,6 +1,11 @@
 //! `gr-cdmm` — the leader binary: run coded distributed matrix
 //! multiplications, regenerate the paper's experiments, inspect the runtime.
 //!
+//! Scheme selection goes through the erased registry
+//! ([`gr_cdmm::codes::registry`]): one code path serves every scheme, and
+//! the worker pool runs the single native backend
+//! ([`gr_cdmm::coordinator::NativeCompute`]) on byte payloads.
+//!
 //! ```text
 //! gr-cdmm info
 //! gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 8 --size 256
@@ -9,12 +14,9 @@
 //!              [--sizes 128,256,...] [--full] [--reps k] [--out results]
 //! ```
 
-use gr_cdmm::codes::ep::PlainEp;
-use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
-use gr_cdmm::codes::ep_rmfe_ii::EpRmfeII;
-use gr_cdmm::codes::scheme::CodedScheme;
-use gr_cdmm::coordinator::runner::{run_single, NativeSingleCompute};
-use gr_cdmm::coordinator::{Coordinator, JobMetrics, StragglerModel};
+use gr_cdmm::codes::registry::{self, SchemeConfig};
+use gr_cdmm::coordinator::runner::{run_erased, NativeCompute};
+use gr_cdmm::coordinator::{Coordinator, JobMetrics, ShareCompute, StragglerModel};
 use gr_cdmm::experiments::{figs, rmfe35, table1, DEFAULT_SIZES, PAPER_SIZES};
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
@@ -70,6 +72,10 @@ fn cmd_info(_args: &Args) -> anyhow::Result<()> {
             ext.residue_size()
         );
     }
+    println!("schemes (registry, Z_2^64 inputs):");
+    for (name, about) in registry::SCHEME_NAMES {
+        println!("  {name:<14} {about}");
+    }
     match XlaRuntime::open_default() {
         Ok(rt) => {
             println!("pjrt platform: {}", rt.platform());
@@ -109,9 +115,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let n_workers = args.get_usize("workers", 8);
     let size = args.get_usize("size", 256);
     let seed = args.get_u64("seed", 42);
-    let scheme_name = args.get_or("scheme", "ep-rmfe-1");
+    let scheme_name = args.get_or("scheme", "ep-rmfe-1").to_string();
     let backend_kind = args.get_or("backend", "native");
-    let cfg = figs::FigConfig::for_workers(n_workers)?;
+    let cfg = SchemeConfig::for_workers(n_workers)?;
     let straggler = parse_straggler(args, n_workers);
 
     let base = Zq::z2e(64);
@@ -120,62 +126,38 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let b = Matrix::random(&base, size, size, &mut rng);
     let expected = Matrix::matmul(&base, &a, &b);
 
-    match scheme_name {
-        "ep" => {
-            let scheme =
-                Arc::new(PlainEp::with_m(base.clone(), cfg.m, n_workers, cfg.u, cfg.w, cfg.v)?);
-            let backend: Arc<dyn gr_cdmm::coordinator::ShareCompute> = if backend_kind == "xla" {
-                let ext = scheme.share_ring().clone();
-                let (t, r, s) = (size / cfg.u, size / cfg.w, size / cfg.v);
-                Arc::new(XlaShareCompute::for_shapes(
-                    std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-                    ext,
-                    t,
-                    r,
-                    s,
-                )?)
-            } else {
-                Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)))
-            };
-            let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
-            let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
-            report(&scheme.name(), &m, c == expected);
-            coord.shutdown();
-        }
-        "ep-rmfe-1" => {
-            let scheme = Arc::new(EpRmfeI::with_m(
-                base.clone(),
-                cfg.m,
-                n_workers,
-                cfg.u,
-                cfg.w,
-                cfg.v,
-                cfg.n_split,
-            )?);
-            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
-            let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
-            let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
-            report(&scheme.name(), &m, c == expected);
-            coord.shutdown();
-        }
-        "ep-rmfe-2" => {
-            let scheme = Arc::new(EpRmfeII::with_m(
-                base.clone(),
-                cfg.m,
-                n_workers,
-                cfg.u,
-                cfg.w,
-                cfg.v,
-                cfg.n_split,
-            )?);
-            let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
-            let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
-            let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
-            report(&scheme.name(), &m, c == expected);
-            coord.shutdown();
-        }
-        other => anyhow::bail!("unknown scheme {other} (ep | ep-rmfe-1 | ep-rmfe-2)"),
-    }
+    let scheme = registry::build(&scheme_name, &cfg)?;
+    anyhow::ensure!(
+        scheme.batch_size() == 1,
+        "`run` multiplies one pair; {scheme_name} is a batch scheme — see `experiments --exp table1`"
+    );
+    let backend: Arc<dyn ShareCompute> = if backend_kind == "xla" {
+        anyhow::ensure!(
+            scheme_name == "ep",
+            "--backend xla supports only the plain `ep` scheme (the AOT artifacts bake its share shapes)"
+        );
+        let ext = Extension::new(base.clone(), cfg.m);
+        let (t, r, s) = (size / cfg.u, size / cfg.w, size / cfg.v);
+        Arc::new(XlaShareCompute::for_shapes(
+            std::env::var("GR_CDMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+            ext,
+            t,
+            r,
+            s,
+        )?)
+    } else {
+        Arc::new(NativeCompute::new(Arc::clone(&scheme)))
+    };
+    let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
+    let (c, m) = run_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        std::slice::from_ref(&a),
+        std::slice::from_ref(&b),
+    )?;
+    report(&scheme.name(), &m, c.len() == 1 && c[0] == expected);
+    coord.shutdown();
     Ok(())
 }
 
@@ -212,7 +194,7 @@ fn cmd_experiments(args: &Args) -> anyhow::Result<()> {
     let want = |name: &str| exp == name || exp == "all";
 
     if want("fig2") || want("fig4") {
-        let cfg = figs::FigConfig::for_workers(8)?;
+        let cfg = SchemeConfig::for_workers(8)?;
         let recs = figs::sweep(&cfg, &sizes, reps, seed)?;
         if want("fig2") {
             write_out(
@@ -227,7 +209,7 @@ fn cmd_experiments(args: &Args) -> anyhow::Result<()> {
         }
     }
     if want("fig3") || want("fig5") {
-        let cfg = figs::FigConfig::for_workers(16)?;
+        let cfg = SchemeConfig::for_workers(16)?;
         let sizes16: Vec<usize> = sizes.iter().map(|&s| s.next_multiple_of(8)).collect();
         let recs = figs::sweep(&cfg, &sizes16, reps, seed ^ 1)?;
         if want("fig3") {

@@ -88,8 +88,10 @@ impl<R: ExtensibleRing> Extension<R> {
         a
     }
 
-    /// Split an extension matrix into its `m` coefficient planes over the
-    /// base ring (`planes[k][i,j] = M[i,j][k]`).
+    /// Split an AoS extension matrix into its `m` coefficient planes over
+    /// the base ring (`planes[k][i,j] = M[i,j][k]`). This *copies*; code
+    /// that holds a [`crate::ring::plane::PlaneMatrix`] gets the same planes
+    /// as zero-copy slices via [`crate::ring::plane::PlaneMatrix::plane`].
     pub fn planes(&self, mat: &Matrix<ExtElem<R>>) -> Vec<Matrix<R::Elem>> {
         (0..self.m).map(|k| mat.map(|e| e[k].clone())).collect()
     }
@@ -271,6 +273,14 @@ impl<R: ExtensibleRing> Ring for Extension<R> {
     /// matmuls monomorphize to tight `u64` loops for `Zq`, removing all
     /// per-element `Vec` allocation from the worker hot path
     /// (~5× on GR(2^64,3) 128³ — see EXPERIMENTS.md §Perf).
+    ///
+    /// This AoS entry point still pays the plane extraction/reassembly per
+    /// call. The coding/coordinator layers therefore keep matrices in the
+    /// plane-major [`crate::ring::plane::PlaneMatrix`] end-to-end and use
+    /// [`crate::ring::plane::PlaneMatrix::matmul`], which runs the same
+    /// kernel directly on flat plane storage (asserted equivalent to this
+    /// method in `ring::plane` tests and `property_tests.rs`); this method
+    /// remains the reference implementation for AoS callers.
     fn mat_mul(
         &self,
         a: &Matrix<Self::Elem>,

@@ -1,11 +1,16 @@
-//! Dense row-major matrices over any [`Ring`].
+//! Dense row-major matrices over any [`Ring`] — the element-generic AoS
+//! representation.
 //!
 //! The element type is generic (`Matrix<E>`); ring context is passed to each
-//! operation, matching the rest of the crate. The multiply kernel is the
-//! cache-friendly ikj loop, which monomorphizes to vectorizable straight-line
-//! code for `Zq` (`u64` wrap-around) — this is the worker-node hot path when
-//! the native backend is selected (the XLA backend in `runtime/` is the
-//! AOT-compiled alternative).
+//! operation, matching the rest of the crate. `Matrix` is the *user-facing*
+//! input/output type and the container for scalar-sized internal systems
+//! (e.g. the CSA decoder's Cauchy–Vandermonde inverse). The worker-node hot
+//! path and everything on the encode → wire → worker → decode path instead
+//! use the flat plane-major [`crate::ring::plane::PlaneMatrix`], which
+//! stores an extension-ring matrix as `m` contiguous base-ring coefficient
+//! planes (no per-element heap allocation); convert between the two with
+//! [`crate::ring::plane::PlaneMatrix::from_aos`] /
+//! [`crate::ring::plane::PlaneMatrix::to_aos`].
 
 use super::traits::Ring;
 use crate::util::rng::Rng64;
@@ -248,7 +253,10 @@ impl<E: Clone + PartialEq> Matrix<E> {
         out
     }
 
-    pub fn from_bytes<R: Ring<Elem = E>>(ring: &R, buf: &[u8]) -> Self {
+    /// Deserialize, validating every length before any allocation or read:
+    /// truncated or oversized payloads yield an `Err`, never a panic.
+    pub fn from_bytes<R: Ring<Elem = E>>(ring: &R, buf: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(buf.len() >= 16, "matrix header truncated: {} of 16 bytes", buf.len());
         let mut pos = 0;
         let mut b8 = [0u8; 8];
         b8.copy_from_slice(&buf[0..8]);
@@ -256,8 +264,19 @@ impl<E: Clone + PartialEq> Matrix<E> {
         b8.copy_from_slice(&buf[8..16]);
         let cols = u64::from_le_bytes(b8) as usize;
         pos += 16;
-        let data: Vec<E> = (0..rows * cols).map(|_| ring.read_elem(buf, &mut pos)).collect();
-        Matrix { rows, cols, data }
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("matrix shape {rows}x{cols} overflows"))?;
+        let need = count
+            .checked_mul(ring.elem_bytes())
+            .ok_or_else(|| anyhow::anyhow!("matrix payload size overflows"))?;
+        anyhow::ensure!(
+            buf.len() - pos == need,
+            "matrix payload is {} bytes, expected {need} for {rows}x{cols}",
+            buf.len() - pos
+        );
+        let data: Vec<E> = (0..count).map(|_| ring.read_elem(buf, &mut pos)).collect();
+        Ok(Matrix { rows, cols, data })
     }
 }
 
@@ -380,7 +399,13 @@ mod tests {
         let a = Matrix::random(&r, 4, 5, &mut rng);
         let bytes = a.to_bytes(&r);
         assert_eq!(bytes.len(), a.byte_len(&r));
-        assert_eq!(Matrix::from_bytes(&r, &bytes), a);
+        assert_eq!(Matrix::from_bytes(&r, &bytes).unwrap(), a);
+        // truncated / oversized payloads are rejected, not panicked on
+        assert!(Matrix::<u64>::from_bytes(&r, &bytes[..bytes.len() - 1]).is_err());
+        assert!(Matrix::<u64>::from_bytes(&r, &bytes[..4]).is_err());
+        let mut big = bytes.clone();
+        big.push(0);
+        assert!(Matrix::<u64>::from_bytes(&r, &big).is_err());
     }
 
     #[test]
@@ -390,7 +415,7 @@ mod tests {
         let a = Matrix::random(&ext, 3, 2, &mut rng);
         let bytes = a.to_bytes(&ext);
         assert_eq!(bytes.len(), 16 + 6 * 24);
-        assert_eq!(Matrix::from_bytes(&ext, &bytes), a);
+        assert_eq!(Matrix::from_bytes(&ext, &bytes).unwrap(), a);
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! The algebraic substrate: integer residue rings `Z_{p^e}`, Galois rings
 //! `GR(p^e, d)`, tower extensions `GR(p^e, d·m)`, residue-field helpers,
 //! irreducible-polynomial search, dense polynomials, fast multipoint
-//! evaluation / interpolation (Lemma II.1), and matrices over any ring.
+//! evaluation / interpolation (Lemma II.1), and matrices over any ring —
+//! both the element-generic AoS [`matrix::Matrix`] and the flat plane-major
+//! [`plane::PlaneMatrix`] that the coding/coordinator layers use for
+//! everything on the encode → wire → worker → decode path.
 //!
 //! Everything the paper's schemes need algebraically lives here; the `codes`
-//! and `rmfe` modules are generic over the [`traits::Ring`] trait.
+//! and `rmfe` modules are generic over the [`traits::Ring`] and
+//! [`plane::PlaneRing`] traits.
 
 pub mod traits;
 pub mod zq;
@@ -15,9 +19,11 @@ pub mod extension;
 pub mod poly;
 pub mod eval;
 pub mod matrix;
+pub mod plane;
 
 pub use traits::Ring;
 pub use zq::Zq;
 pub use galois::GaloisRing;
 pub use extension::Extension;
 pub use matrix::Matrix;
+pub use plane::{PlaneMatrix, PlaneRing};

@@ -1,0 +1,752 @@
+//! Plane-major storage for extension-ring matrices — the wire/worker format.
+//!
+//! An extension-ring matrix over `GR_m = R[y]/(h)` is algebraically a stack
+//! of `m` *coefficient planes*, each a plain matrix over the base ring `R`.
+//! The AoS representation ([`Matrix`]`<Vec<R::Elem>>`) pays one heap
+//! allocation per element and scatters each plane across memory;
+//! [`PlaneMatrix`] stores the same data as one flat plane-major `Vec`
+//! (`data[k·rows·cols + i·cols + j]` = coefficient `k` of entry `(i, j)`),
+//! so that:
+//!
+//! * [`PlaneMatrix::plane`] is a zero-copy slice view of one base-ring plane;
+//! * the worker share product runs plane-by-plane through the base ring's
+//!   contiguous ikj kernel (monomorphized `u64` loops for `Zq`) plus one
+//!   modulus reduction — no per-element `Vec` traffic;
+//! * encode/decode Horner steps and interpolation weights are `m²`
+//!   scalar-times-slice axpys via a precomputed scalar multiplication table;
+//! * serialization is a single contiguous block, already in the layout the
+//!   AOT XLA artifacts consume (`(m, rows, cols)` u64 planes for
+//!   `GR(2^64, m)` — see [`crate::runtime::gr_backend`]).
+//!
+//! [`PlaneRing`] is the small capability trait that lets any ring act as a
+//! plane decomposition: scalar rings ([`Zq`], [`GaloisRing`]) are their own
+//! single plane, a tower [`Extension`] exposes its `m` coefficient planes
+//! over its base. Every scheme in [`crate::codes`] stores shares and
+//! responses as `PlaneMatrix` over `ShareRing::Base`.
+
+use super::extension::Extension;
+use super::galois::{ExtensibleRing, GaloisRing, GrElem};
+use super::matrix::Matrix;
+use super::traits::Ring;
+use super::zq::Zq;
+use crate::util::rng::Rng64;
+
+/// A ring whose elements decompose into `plane_count()` coefficients over a
+/// base ring — the capability [`PlaneMatrix`] kernels are generic over.
+///
+/// Scalar rings are their own (single) plane; [`Extension`] towers expose
+/// their `m` coefficient planes. The monic modulus enters only through
+/// [`PlaneRing::modulus_low`], which the matmul kernel uses for the final
+/// plane-level reduction (`y^k ≡ −Σ_i h_i·y^{k−m+i}`).
+pub trait PlaneRing: Ring {
+    /// The base ring one plane lives over (`Self` for scalar rings).
+    type Base: Ring;
+
+    /// The base-ring context.
+    fn plane_base(&self) -> &Self::Base;
+
+    /// Number of coefficient planes `m` (`1` for scalar rings).
+    fn plane_count(&self) -> usize;
+
+    /// Low `m` coefficients of the monic degree-`m` modulus (empty when
+    /// `plane_count() == 1` — a scalar ring has nothing to reduce by).
+    fn modulus_low(&self) -> &[<Self::Base as Ring>::Elem];
+
+    /// Coefficient `k` of an element (`0 ≤ k < plane_count()`).
+    fn coeff(&self, a: &Self::Elem, k: usize) -> <Self::Base as Ring>::Elem;
+
+    /// Rebuild an element from its coefficients (length `plane_count()`).
+    fn elem_from_coeffs(&self, coeffs: &[<Self::Base as Ring>::Elem]) -> Self::Elem;
+
+    /// Row-major `m × m` multiplication table of the scalar `s`: column `j`
+    /// holds the coefficients of `s·y^j mod h`, so multiplying an element by
+    /// `s` maps its coefficient vector `x` to `table·x`. This is what turns a
+    /// scalar-times-matrix axpy into `m²` base-ring slice axpys with the
+    /// modulus reduction folded in (and into the single entry `[s]` for
+    /// scalar rings).
+    fn scalar_mul_table(&self, s: &Self::Elem) -> Vec<<Self::Base as Ring>::Elem> {
+        let m = self.plane_count();
+        let base = self.plane_base();
+        let mut cur: Vec<<Self::Base as Ring>::Elem> = (0..m).map(|k| self.coeff(s, k)).collect();
+        let mut table = vec![base.zero(); m * m];
+        for j in 0..m {
+            for (k, c) in cur.iter().enumerate() {
+                table[k * m + j] = c.clone();
+            }
+            if j + 1 < m {
+                // cur ← cur·y mod h: shift up one degree, fold the overflow
+                // coefficient back with the monic modulus.
+                let top = cur[m - 1].clone();
+                for k in (1..m).rev() {
+                    cur[k] = cur[k - 1].clone();
+                }
+                cur[0] = base.zero();
+                if !base.is_zero(&top) {
+                    for (i, h) in self.modulus_low().iter().enumerate() {
+                        if !base.is_zero(h) {
+                            let d = base.mul(&top, h);
+                            cur[i] = base.sub(&cur[i], &d);
+                        }
+                    }
+                }
+            }
+        }
+        table
+    }
+}
+
+impl PlaneRing for Zq {
+    type Base = Zq;
+    fn plane_base(&self) -> &Zq {
+        self
+    }
+    fn plane_count(&self) -> usize {
+        1
+    }
+    fn modulus_low(&self) -> &[u64] {
+        &[]
+    }
+    fn coeff(&self, a: &u64, k: usize) -> u64 {
+        debug_assert_eq!(k, 0);
+        *a
+    }
+    fn elem_from_coeffs(&self, coeffs: &[u64]) -> u64 {
+        coeffs[0]
+    }
+}
+
+impl PlaneRing for GaloisRing {
+    type Base = GaloisRing;
+    fn plane_base(&self) -> &GaloisRing {
+        self
+    }
+    fn plane_count(&self) -> usize {
+        1
+    }
+    fn modulus_low(&self) -> &[GrElem] {
+        &[]
+    }
+    fn coeff(&self, a: &GrElem, k: usize) -> GrElem {
+        debug_assert_eq!(k, 0);
+        a.clone()
+    }
+    fn elem_from_coeffs(&self, coeffs: &[GrElem]) -> GrElem {
+        coeffs[0].clone()
+    }
+}
+
+impl<R: ExtensibleRing> PlaneRing for Extension<R> {
+    type Base = R;
+    fn plane_base(&self) -> &R {
+        self.base()
+    }
+    fn plane_count(&self) -> usize {
+        self.m()
+    }
+    fn modulus_low(&self) -> &[R::Elem] {
+        &self.modulus()[..self.m()]
+    }
+    fn coeff(&self, a: &Self::Elem, k: usize) -> R::Elem {
+        a[k].clone()
+    }
+    fn elem_from_coeffs(&self, coeffs: &[R::Elem]) -> Self::Elem {
+        self.from_coeffs(coeffs)
+    }
+}
+
+/// `acc += s·x` over base-ring slices — the innermost encode/decode op.
+#[inline]
+pub fn slice_axpy<B: Ring>(base: &B, acc: &mut [B::Elem], s: &B::Elem, x: &[B::Elem]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        base.mul_add_assign(a, s, b);
+    }
+}
+
+/// `c += a·b` over base-ring slices (`a: ar×ac`, `b: ac×bc`, `c: ar×bc`,
+/// all row-major). The cache-friendly ikj order with 64-row k-panels of `b`
+/// — identical structure to [`Ring::mat_mul`]'s default, monomorphizing to
+/// straight-line `u64` code for [`Zq`].
+pub fn slice_matmul_acc<B: Ring>(
+    base: &B,
+    c: &mut [B::Elem],
+    a: &[B::Elem],
+    b: &[B::Elem],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+) {
+    debug_assert_eq!(a.len(), ar * ac);
+    debug_assert_eq!(b.len(), ac * bc);
+    debug_assert_eq!(c.len(), ar * bc);
+    const KB: usize = 64;
+    let mut k0 = 0;
+    while k0 < ac {
+        let kend = (k0 + KB).min(ac);
+        for i in 0..ar {
+            let crow = &mut c[i * bc..(i + 1) * bc];
+            for k in k0..kend {
+                let aik = &a[i * ac + k];
+                if base.is_zero(aik) {
+                    continue;
+                }
+                let brow = &b[k * bc..(k + 1) * bc];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    base.mul_add_assign(cj, aik, bj);
+                }
+            }
+        }
+        k0 = kend;
+    }
+}
+
+/// An extension-ring matrix stored as `planes` contiguous base-ring
+/// coefficient planes (plane-major): `data[k·rows·cols + i·cols + j]` is
+/// coefficient `k` of entry `(i, j)`.
+///
+/// This is the storage for everything on the encode → wire → worker → decode
+/// path; [`Matrix`] remains the element-generic AoS type for user-facing
+/// inputs/outputs and scalar-sized internal systems.
+pub struct PlaneMatrix<B: Ring> {
+    pub rows: usize,
+    pub cols: usize,
+    /// Number of coefficient planes (`= plane_count()` of the plane ring).
+    pub planes: usize,
+    /// Flat plane-major storage, length `planes·rows·cols`.
+    pub data: Vec<B::Elem>,
+}
+
+impl<B: Ring> Clone for PlaneMatrix<B> {
+    fn clone(&self) -> Self {
+        PlaneMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            planes: self.planes,
+            data: self.data.clone(),
+        }
+    }
+}
+
+impl<B: Ring> PartialEq for PlaneMatrix<B> {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.planes == other.planes
+            && self.data == other.data
+    }
+}
+
+impl<B: Ring> std::fmt::Debug for PlaneMatrix<B> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlaneMatrix")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("planes", &self.planes)
+            .field("data", &self.data)
+            .finish()
+    }
+}
+
+impl<B: Ring> PlaneMatrix<B> {
+    /// Elements per plane.
+    #[inline]
+    pub fn plane_len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Zero-copy view of coefficient plane `k`.
+    #[inline]
+    pub fn plane(&self, k: usize) -> &[B::Elem] {
+        let pp = self.plane_len();
+        &self.data[k * pp..(k + 1) * pp]
+    }
+
+    /// Mutable view of coefficient plane `k`.
+    #[inline]
+    pub fn plane_mut(&mut self, k: usize) -> &mut [B::Elem] {
+        let pp = self.plane_len();
+        &mut self.data[k * pp..(k + 1) * pp]
+    }
+
+    /// All-zero matrix with `ext.plane_count()` planes.
+    pub fn zeros<E: PlaneRing<Base = B>>(ext: &E, rows: usize, cols: usize) -> Self {
+        let m = ext.plane_count();
+        PlaneMatrix {
+            rows,
+            cols,
+            planes: m,
+            data: vec![ext.plane_base().zero(); m * rows * cols],
+        }
+    }
+
+    /// Uniformly random matrix (same distribution as AoS
+    /// [`Matrix::random`] over the plane ring: independent uniform planes).
+    pub fn random<E: PlaneRing<Base = B>>(
+        ext: &E,
+        rows: usize,
+        cols: usize,
+        rng: &mut Rng64,
+    ) -> Self {
+        let m = ext.plane_count();
+        let base = ext.plane_base();
+        PlaneMatrix {
+            rows,
+            cols,
+            planes: m,
+            data: (0..m * rows * cols).map(|_| base.random(rng)).collect(),
+        }
+    }
+
+    /// Convert from the AoS representation (one allocation per element).
+    pub fn from_aos<E: PlaneRing<Base = B>>(ext: &E, mat: &Matrix<E::Elem>) -> Self {
+        let m = ext.plane_count();
+        let pp = mat.rows * mat.cols;
+        let base = ext.plane_base();
+        let mut data = vec![base.zero(); m * pp];
+        for (idx, e) in mat.data.iter().enumerate() {
+            for k in 0..m {
+                data[k * pp + idx] = ext.coeff(e, k);
+            }
+        }
+        PlaneMatrix { rows: mat.rows, cols: mat.cols, planes: m, data }
+    }
+
+    /// Convert back to the AoS representation (boundary use only).
+    pub fn to_aos<E: PlaneRing<Base = B>>(&self, ext: &E) -> Matrix<E::Elem> {
+        let m = self.planes;
+        let pp = self.plane_len();
+        let mut out = Vec::with_capacity(pp);
+        let mut coeffs: Vec<B::Elem> = Vec::with_capacity(m);
+        for idx in 0..pp {
+            coeffs.clear();
+            for k in 0..m {
+                coeffs.push(self.data[k * pp + idx].clone());
+            }
+            out.push(ext.elem_from_coeffs(&coeffs));
+        }
+        Matrix::from_vec(self.rows, self.cols, out)
+    }
+
+    /// Constant embedding of a base-ring matrix: plane 0 is `mat`, higher
+    /// planes are zero (the `PlainEp` / GCSA input embedding).
+    pub fn from_base_matrix<E: PlaneRing<Base = B>>(ext: &E, mat: &Matrix<B::Elem>) -> Self {
+        let m = ext.plane_count();
+        let pp = mat.rows * mat.cols;
+        let mut data = vec![ext.plane_base().zero(); m * pp];
+        data[..pp].clone_from_slice(&mat.data);
+        PlaneMatrix { rows: mat.rows, cols: mat.cols, planes: m, data }
+    }
+
+    /// Plane 0 as a base-ring matrix (inverse of
+    /// [`PlaneMatrix::from_base_matrix`] for constant-valued matrices).
+    pub fn base_plane_matrix(&self) -> Matrix<B::Elem> {
+        Matrix::from_vec(self.rows, self.cols, self.plane(0).to_vec())
+    }
+
+    /// `self += other`, elementwise across all planes.
+    pub fn add_assign(&mut self, base: &B, other: &Self) {
+        assert_eq!(
+            (self.rows, self.cols, self.planes),
+            (other.rows, other.cols, other.planes),
+            "plane matrix shapes must agree"
+        );
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            base.add_assign(a, b);
+        }
+    }
+
+    /// `self += s·x` for an extension-ring scalar `s` — the encode/decode
+    /// workhorse (Horner steps, Lagrange weights): `m²` base-ring slice
+    /// axpys through the precomputed [`PlaneRing::scalar_mul_table`].
+    pub fn axpy<E: PlaneRing<Base = B>>(&mut self, ext: &E, s: &E::Elem, x: &Self) {
+        assert_eq!(
+            (self.rows, self.cols, self.planes),
+            (x.rows, x.cols, x.planes),
+            "plane matrix shapes must agree"
+        );
+        if ext.is_zero(s) {
+            return;
+        }
+        let m = ext.plane_count();
+        debug_assert_eq!(self.planes, m);
+        let base = ext.plane_base();
+        let pp = self.plane_len();
+        let table = ext.scalar_mul_table(s);
+        for k in 0..m {
+            let dst = &mut self.data[k * pp..(k + 1) * pp];
+            for j in 0..m {
+                let c = &table[k * m + j];
+                if base.is_zero(c) {
+                    continue;
+                }
+                slice_axpy(base, dst, c, &x.data[j * pp..(j + 1) * pp]);
+            }
+        }
+    }
+
+    /// `self = s·self` for an extension-ring scalar `s`.
+    pub fn scale_assign<E: PlaneRing<Base = B>>(&mut self, ext: &E, s: &E::Elem) {
+        let m = ext.plane_count();
+        debug_assert_eq!(self.planes, m);
+        let base = ext.plane_base();
+        let pp = self.plane_len();
+        let table = ext.scalar_mul_table(s);
+        let mut out = vec![base.zero(); m * pp];
+        for k in 0..m {
+            let dst = &mut out[k * pp..(k + 1) * pp];
+            for j in 0..m {
+                let c = &table[k * m + j];
+                if base.is_zero(c) {
+                    continue;
+                }
+                slice_axpy(base, dst, c, &self.data[j * pp..(j + 1) * pp]);
+            }
+        }
+        self.data = out;
+    }
+
+    /// Extension-ring matrix product on plane-major storage — the worker
+    /// hot path. Schoolbook on planes: `m²` contiguous base-ring matmuls
+    /// into `2m−1` accumulation planes, then one plane-level reduction by
+    /// the monic modulus. Equivalent to the AoS [`Ring::mat_mul`] of
+    /// [`Extension`] but with zero per-element allocation or plane
+    /// extraction (asserted equivalent in tests and `property_tests.rs`).
+    pub fn matmul<E: PlaneRing<Base = B>>(ext: &E, a: &Self, b: &Self) -> Self {
+        assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+        let m = ext.plane_count();
+        assert_eq!(a.planes, m, "lhs plane count mismatch");
+        assert_eq!(b.planes, m, "rhs plane count mismatch");
+        let base = ext.plane_base();
+        let pp = a.rows * b.cols;
+        let conv_planes = 2 * m - 1;
+        let mut conv: Vec<B::Elem> = vec![base.zero(); conv_planes * pp];
+        for i in 0..m {
+            for j in 0..m {
+                let k = i + j;
+                slice_matmul_acc(
+                    base,
+                    &mut conv[k * pp..(k + 1) * pp],
+                    a.plane(i),
+                    b.plane(j),
+                    a.rows,
+                    a.cols,
+                    b.cols,
+                );
+            }
+        }
+        // Reduce planes m..2m−1 by the monic modulus:
+        // y^k ≡ −Σ_i h_i·y^{k−m+i}.
+        let h = ext.modulus_low();
+        for k in (m..conv_planes).rev() {
+            let (lo, hi) = conv.split_at_mut(k * pp);
+            let top = &hi[..pp];
+            for (i, hc) in h.iter().enumerate() {
+                if base.is_zero(hc) {
+                    continue;
+                }
+                let neg = base.neg(hc);
+                let dst = &mut lo[(k - m + i) * pp..(k - m + i + 1) * pp];
+                slice_axpy(base, dst, &neg, top);
+            }
+        }
+        conv.truncate(m * pp);
+        PlaneMatrix { rows: a.rows, cols: b.cols, planes: m, data: conv }
+    }
+
+    /// Partition into a `gr × gc` grid of equal blocks, each plane-major
+    /// (dims must divide). Row-major block order, like
+    /// [`Matrix::partition_grid`].
+    pub fn partition_grid(&self, gr: usize, gc: usize) -> Vec<Self> {
+        assert!(self.rows % gr == 0, "rows {} not divisible by {gr}", self.rows);
+        assert!(self.cols % gc == 0, "cols {} not divisible by {gc}", self.cols);
+        let bh = self.rows / gr;
+        let bw = self.cols / gc;
+        let pp = self.plane_len();
+        let mut out = Vec::with_capacity(gr * gc);
+        for a in 0..gr {
+            for b in 0..gc {
+                let mut data = Vec::with_capacity(self.planes * bh * bw);
+                for k in 0..self.planes {
+                    for i in 0..bh {
+                        let start = k * pp + (a * bh + i) * self.cols + b * bw;
+                        data.extend_from_slice(&self.data[start..start + bw]);
+                    }
+                }
+                out.push(PlaneMatrix { rows: bh, cols: bw, planes: self.planes, data });
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`PlaneMatrix::partition_grid`].
+    pub fn stitch_grid(blocks: &[Self], gr: usize, gc: usize) -> Self {
+        assert_eq!(blocks.len(), gr * gc);
+        let bh = blocks[0].rows;
+        let bw = blocks[0].cols;
+        let m = blocks[0].planes;
+        let bpp = bh * bw;
+        let (rows, cols) = (gr * bh, gc * bw);
+        let mut data = Vec::with_capacity(m * rows * cols);
+        for k in 0..m {
+            for a in 0..gr {
+                for i in 0..bh {
+                    for b in 0..gc {
+                        let blk = &blocks[a * gc + b];
+                        assert_eq!((blk.rows, blk.cols, blk.planes), (bh, bw, m));
+                        let start = k * bpp + i * bw;
+                        data.extend_from_slice(&blk.data[start..start + bw]);
+                    }
+                }
+            }
+        }
+        PlaneMatrix { rows, cols, planes: m, data }
+    }
+
+    /// Serialized byte size: 16-byte header + contiguous planes.
+    pub fn byte_len<E: PlaneRing<Base = B>>(&self, ext: &E) -> usize {
+        16 + self.data.len() * ext.plane_base().elem_bytes()
+    }
+
+    /// Serialize as one contiguous block:
+    /// `rows (u64 LE) | cols (u64 LE) | plane 0 | … | plane m−1`.
+    /// The plane count is carried by the ring context, not the wire.
+    pub fn to_bytes<E: PlaneRing<Base = B>>(&self, ext: &E) -> Vec<u8> {
+        let base = ext.plane_base();
+        let mut out = Vec::with_capacity(self.byte_len(ext));
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        for x in &self.data {
+            base.write_elem(x, &mut out);
+        }
+        out
+    }
+
+    /// Read one matrix from `buf` starting at `*pos`, advancing `*pos`.
+    /// Every length is validated before any allocation or read — truncated
+    /// or corrupt payloads yield an `Err`, never a panic (workers report
+    /// such jobs as clean failures instead of unwinding their thread).
+    pub fn read_from<E: PlaneRing<Base = B>>(
+        ext: &E,
+        buf: &[u8],
+        pos: &mut usize,
+    ) -> anyhow::Result<Self> {
+        let base = ext.plane_base();
+        let m = ext.plane_count();
+        let avail = buf.len().saturating_sub(*pos);
+        anyhow::ensure!(avail >= 16, "matrix header truncated: {avail} of 16 bytes");
+        let mut b8 = [0u8; 8];
+        b8.copy_from_slice(&buf[*pos..*pos + 8]);
+        let rows = u64::from_le_bytes(b8) as usize;
+        b8.copy_from_slice(&buf[*pos + 8..*pos + 16]);
+        let cols = u64::from_le_bytes(b8) as usize;
+        *pos += 16;
+        let count = rows
+            .checked_mul(cols)
+            .and_then(|x| x.checked_mul(m))
+            .ok_or_else(|| anyhow::anyhow!("matrix shape {rows}x{cols}x{m} overflows"))?;
+        let need = count
+            .checked_mul(base.elem_bytes())
+            .ok_or_else(|| anyhow::anyhow!("matrix payload size overflows"))?;
+        anyhow::ensure!(
+            buf.len() - *pos >= need,
+            "matrix payload truncated: need {need} bytes for {rows}x{cols} ({m} planes), have {}",
+            buf.len() - *pos
+        );
+        let data: Vec<B::Elem> = (0..count).map(|_| base.read_elem(buf, pos)).collect();
+        Ok(PlaneMatrix { rows, cols, planes: m, data })
+    }
+
+    /// Deserialize, requiring the buffer to be consumed exactly.
+    pub fn from_bytes<E: PlaneRing<Base = B>>(ext: &E, buf: &[u8]) -> anyhow::Result<Self> {
+        let mut pos = 0;
+        let mat = Self::read_from(ext, buf, &mut pos)?;
+        anyhow::ensure!(
+            pos == buf.len(),
+            "matrix payload has {} trailing bytes",
+            buf.len() - pos
+        );
+        Ok(mat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ext3() -> Extension<Zq> {
+        Extension::new(Zq::z2e(64), 3)
+    }
+
+    #[test]
+    fn aos_roundtrip_and_plane_layout() {
+        let ext = Extension::new(Zq::z2e(64), 2);
+        let mut mat = Matrix::zeros(&ext, 1, 2);
+        mat.set(0, 0, vec![10, 11]);
+        mat.set(0, 1, vec![20, 21]);
+        let pm = PlaneMatrix::from_aos(&ext, &mat);
+        // plane 0 = [10, 20], plane 1 = [11, 21] — plane-major.
+        assert_eq!(pm.data, vec![10, 20, 11, 21]);
+        assert_eq!(pm.plane(0), &[10, 20]);
+        assert_eq!(pm.plane(1), &[11, 21]);
+        assert_eq!(pm.to_aos(&ext), mat);
+    }
+
+    #[test]
+    fn matmul_matches_aos_extension_matmul() {
+        for m in [1usize, 2, 3, 4, 5] {
+            let ext = Extension::new(Zq::z2e(64), m);
+            let mut rng = Rng64::seeded(700 + m as u64);
+            let a = Matrix::random(&ext, 4, 3, &mut rng);
+            let b = Matrix::random(&ext, 3, 5, &mut rng);
+            let pa = PlaneMatrix::from_aos(&ext, &a);
+            let pb = PlaneMatrix::from_aos(&ext, &b);
+            let pc = PlaneMatrix::matmul(&ext, &pa, &pb);
+            let c = Matrix::matmul(&ext, &a, &b);
+            assert_eq!(pc, PlaneMatrix::from_aos(&ext, &c), "m={m}");
+            assert_eq!(pc.to_aos(&ext), c, "m={m}");
+        }
+    }
+
+    #[test]
+    fn matmul_scalar_ring_single_plane() {
+        let zq = Zq::z2e(64);
+        let mut rng = Rng64::seeded(710);
+        let a = Matrix::random(&zq, 5, 4, &mut rng);
+        let b = Matrix::random(&zq, 4, 6, &mut rng);
+        let pa = PlaneMatrix::from_aos(&zq, &a);
+        let pb = PlaneMatrix::from_aos(&zq, &b);
+        let pc = PlaneMatrix::matmul(&zq, &pa, &pb);
+        assert_eq!(pc.data, Matrix::matmul(&zq, &a, &b).data);
+    }
+
+    #[test]
+    fn axpy_and_scale_match_aos() {
+        let ext = ext3();
+        let mut rng = Rng64::seeded(711);
+        let a = Matrix::random(&ext, 3, 4, &mut rng);
+        let x = Matrix::random(&ext, 3, 4, &mut rng);
+        let s = ext.random(&mut rng);
+        // axpy
+        let mut pa = PlaneMatrix::from_aos(&ext, &a);
+        pa.axpy(&ext, &s, &PlaneMatrix::from_aos(&ext, &x));
+        let mut aos = a.clone();
+        aos.axpy(&ext, &s, &x);
+        assert_eq!(pa, PlaneMatrix::from_aos(&ext, &aos));
+        // scale
+        let mut ps = PlaneMatrix::from_aos(&ext, &x);
+        ps.scale_assign(&ext, &s);
+        let mut xs = x.clone();
+        xs.scale_assign(&ext, &s);
+        assert_eq!(ps, PlaneMatrix::from_aos(&ext, &xs));
+    }
+
+    #[test]
+    fn scalar_mul_table_reproduces_ring_mul() {
+        let ext = ext3();
+        let mut rng = Rng64::seeded(712);
+        for _ in 0..20 {
+            let s = ext.random(&mut rng);
+            let x = ext.random(&mut rng);
+            let table = ext.scalar_mul_table(&s);
+            let m = ext.m();
+            let base = ext.base();
+            let mut got = vec![0u64; m];
+            for k in 0..m {
+                for j in 0..m {
+                    base.mul_add_assign(&mut got[k], &table[k * m + j], &x[j]);
+                }
+            }
+            assert_eq!(got, ext.mul(&s, &x));
+        }
+    }
+
+    #[test]
+    fn partition_stitch_roundtrip() {
+        let ext = ext3();
+        let mut rng = Rng64::seeded(713);
+        let a = PlaneMatrix::random(&ext, 6, 8, &mut rng);
+        for (gr, gc) in [(1, 1), (2, 2), (3, 4), (6, 8), (2, 4)] {
+            let blocks = a.partition_grid(gr, gc);
+            assert_eq!(blocks.len(), gr * gc);
+            assert_eq!(PlaneMatrix::stitch_grid(&blocks, gr, gc), a, "grid {gr}x{gc}");
+        }
+    }
+
+    #[test]
+    fn partition_matches_aos_partition() {
+        let ext = ext3();
+        let mut rng = Rng64::seeded(714);
+        let a = Matrix::random(&ext, 4, 6, &mut rng);
+        let pa = PlaneMatrix::from_aos(&ext, &a);
+        let blocks = a.partition_grid(2, 3);
+        let pblocks = pa.partition_grid(2, 3);
+        for (b, pb) in blocks.iter().zip(&pblocks) {
+            assert_eq!(PlaneMatrix::from_aos(&ext, b), *pb);
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip_and_length() {
+        let ext = ext3();
+        let mut rng = Rng64::seeded(715);
+        let a = PlaneMatrix::random(&ext, 3, 2, &mut rng);
+        let bytes = a.to_bytes(&ext);
+        assert_eq!(bytes.len(), a.byte_len(&ext));
+        assert_eq!(bytes.len(), 16 + 3 * 2 * 3 * 8);
+        assert_eq!(PlaneMatrix::from_bytes(&ext, &bytes).unwrap(), a);
+    }
+
+    #[test]
+    fn deserialization_rejects_truncated_and_oversized() {
+        let ext = ext3();
+        let mut rng = Rng64::seeded(716);
+        let a = PlaneMatrix::random(&ext, 3, 2, &mut rng);
+        let bytes = a.to_bytes(&ext);
+        // truncated header
+        assert!(PlaneMatrix::<Zq>::from_bytes(&ext, &bytes[..8]).is_err());
+        // truncated payload
+        assert!(PlaneMatrix::<Zq>::from_bytes(&ext, &bytes[..bytes.len() - 1]).is_err());
+        // oversized payload
+        let mut big = bytes.clone();
+        big.push(0);
+        assert!(PlaneMatrix::<Zq>::from_bytes(&ext, &big).is_err());
+        // header lying about the shape
+        let mut lie = bytes;
+        lie[0] = 200; // rows = 200 with the same payload
+        assert!(PlaneMatrix::<Zq>::from_bytes(&ext, &lie).is_err());
+        // empty buffer
+        assert!(PlaneMatrix::<Zq>::from_bytes(&ext, &[]).is_err());
+    }
+
+    #[test]
+    fn const_embedding_roundtrip() {
+        let ext = ext3();
+        let zq = Zq::z2e(64);
+        let mut rng = Rng64::seeded(717);
+        let a = Matrix::random(&zq, 3, 3, &mut rng);
+        let pa = PlaneMatrix::from_base_matrix(&ext, &a);
+        assert_eq!(pa.planes, 3);
+        assert_eq!(pa.base_plane_matrix(), a);
+        assert!(pa.plane(1).iter().all(|&x| x == 0));
+        // agrees with the AoS constant embedding
+        let aos = a.map(|x| ext.from_base(x));
+        assert_eq!(pa, PlaneMatrix::from_aos(&ext, &aos));
+    }
+
+    #[test]
+    fn matmul_over_galois_base_tower() {
+        // Extension<GaloisRing>: planes hold GrElem (Vec<u64>) — the generic
+        // path still matches the AoS kernel.
+        let base = GaloisRing::new(2, 16, 2);
+        let ext = Extension::new(base, 2);
+        let mut rng = Rng64::seeded(718);
+        let a = Matrix::random(&ext, 3, 3, &mut rng);
+        let b = Matrix::random(&ext, 3, 3, &mut rng);
+        let pc = PlaneMatrix::matmul(
+            &ext,
+            &PlaneMatrix::from_aos(&ext, &a),
+            &PlaneMatrix::from_aos(&ext, &b),
+        );
+        assert_eq!(pc.to_aos(&ext), Matrix::matmul(&ext, &a, &b));
+    }
+}

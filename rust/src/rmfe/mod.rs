@@ -20,7 +20,10 @@
 pub mod poly_rmfe;
 pub mod concat;
 
+use crate::ring::extension::Extension;
+use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneMatrix;
 use crate::ring::traits::Ring;
 
 pub use poly_rmfe::PolyRmfe;
@@ -79,4 +82,64 @@ pub trait RmfeScheme<R: Ring, E: Ring>: Send + Sync {
         }
         outs
     }
+}
+
+/// Pack a batch of `n` equal-shaped base matrices elementwise with `φ`,
+/// writing straight into plane-major storage over the extension —
+/// `out[k·rows·cols + idx]` is coefficient `k` of `φ(mats[0][idx], …,
+/// mats[n−1][idx])`. This is the Section III-A construction of `𝒜`/`ℬ`
+/// without ever materializing an AoS extension matrix.
+pub fn pack_to_planes<R, S>(rmfe: &S, mats: &[Matrix<R::Elem>]) -> PlaneMatrix<R>
+where
+    R: ExtensibleRing,
+    S: RmfeScheme<R, Extension<R>> + ?Sized,
+{
+    assert_eq!(mats.len(), rmfe.n(), "need exactly n matrices");
+    let m = rmfe.m();
+    let rows = mats[0].rows;
+    let cols = mats[0].cols;
+    for mk in mats {
+        assert_eq!((mk.rows, mk.cols), (rows, cols), "matrices must be equal-shaped");
+    }
+    let base = rmfe.base();
+    let pp = rows * cols;
+    let mut data = vec![base.zero(); m * pp];
+    let mut slot = vec![base.zero(); rmfe.n()];
+    for idx in 0..pp {
+        for (k, mk) in mats.iter().enumerate() {
+            slot[k] = mk.data[idx].clone();
+        }
+        let packed = rmfe.phi(&slot);
+        for (k, c) in packed.into_iter().enumerate() {
+            data[k * pp + idx] = c;
+        }
+    }
+    PlaneMatrix { rows, cols, planes: m, data }
+}
+
+/// Inverse of [`pack_to_planes`]: unpack a plane-major extension matrix into
+/// `n` base matrices with elementwise `ψ` (gathering each element's `m`
+/// coefficients from the planes).
+pub fn unpack_from_planes<R, S>(rmfe: &S, packed: &PlaneMatrix<R>) -> Vec<Matrix<R::Elem>>
+where
+    R: ExtensibleRing,
+    S: RmfeScheme<R, Extension<R>> + ?Sized,
+{
+    let m = rmfe.m();
+    assert_eq!(packed.planes, m, "plane count must equal the RMFE's m");
+    let (rows, cols) = (packed.rows, packed.cols);
+    let pp = rows * cols;
+    let base = rmfe.base();
+    let mut outs: Vec<Vec<R::Elem>> = (0..rmfe.n()).map(|_| Vec::with_capacity(pp)).collect();
+    let mut coeffs: Vec<R::Elem> = vec![base.zero(); m];
+    for idx in 0..pp {
+        for (k, c) in coeffs.iter_mut().enumerate() {
+            *c = packed.data[k * pp + idx].clone();
+        }
+        let vals = rmfe.psi(&coeffs);
+        for (k, v) in vals.into_iter().enumerate() {
+            outs[k].push(v);
+        }
+    }
+    outs.into_iter().map(|d| Matrix::from_vec(rows, cols, d)).collect()
 }

@@ -13,17 +13,21 @@
 //! cache — which also happens to model the deployment reality (every worker
 //! node is a separate process with its own PJRT runtime).
 //!
-//! Share wire format ↔ artifact format: a share matrix over
-//! `GR(2^64, m) = Extension<Zq>` is converted to `m` coefficient planes
-//! (plane-major `u64` buffer), matching the `(m, rows, cols)` inputs of
-//! `python/compile/kernels/gr_matmul.py`. The artifact's baked modulus must
-//! equal the rust tower's modulus — validated at construction.
+//! Share wire format ↔ artifact format: the share payload is **already**
+//! plane-major — [`crate::ring::plane::PlaneMatrix`] over `Zq` serializes as
+//! contiguous `u64` planes, exactly the `(m, rows, cols)` inputs of
+//! `python/compile/kernels/gr_matmul.py` — so the backend just strips the
+//! 16-byte header and hands the flat buffer to PJRT (no layout conversion
+//! on the wire path; [`ext_matrix_to_planes`] remains for AoS callers).
+//! The artifact's baked modulus must equal the rust tower's modulus —
+//! validated at construction.
 
 use super::{HloArtifact, XlaRuntime};
 use crate::codes::scheme::Share;
 use crate::coordinator::worker::ShareCompute;
 use crate::ring::extension::Extension;
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneMatrix;
 use crate::ring::zq::Zq;
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -140,7 +144,7 @@ fn ext_modulus_u64(ext: &Extension<Zq>) -> Vec<u64> {
 
 impl ShareCompute for XlaShareCompute {
     fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-        let share = Share::from_bytes(&self.ext, payload);
+        let share: Share<Extension<Zq>> = Share::from_bytes(&self.ext, payload)?;
         anyhow::ensure!(
             share.a.rows == self.t && share.a.cols == self.r && share.b.cols == self.s,
             "share shapes ({}, {})·({}, {}) do not match artifact {}x{}x{}",
@@ -153,15 +157,21 @@ impl ShareCompute for XlaShareCompute {
             self.s
         );
         let m = self.m;
-        let a_planes = ext_matrix_to_planes(m, &share.a);
-        let b_planes = ext_matrix_to_planes(m, &share.b);
+        // The plane-major share data is byte-identical to the artifact's
+        // expected (m, rows, cols) u64 layout — no conversion needed.
         let out = self.with_artifact(|artifact| {
             artifact.run_u64(&[
-                (a_planes, vec![m as i64, self.t as i64, self.r as i64]),
-                (b_planes, vec![m as i64, self.r as i64, self.s as i64]),
+                (share.a.data.clone(), vec![m as i64, self.t as i64, self.r as i64]),
+                (share.b.data.clone(), vec![m as i64, self.r as i64, self.s as i64]),
             ])
         })?;
-        let c = planes_to_ext_matrix(m, self.t, self.s, &out);
+        anyhow::ensure!(
+            out.len() == m * self.t * self.s,
+            "artifact returned {} u64s, expected {}",
+            out.len(),
+            m * self.t * self.s
+        );
+        let c = PlaneMatrix::<Zq> { rows: self.t, cols: self.s, planes: m, data: out };
         Ok(c.to_bytes(&self.ext))
     }
 

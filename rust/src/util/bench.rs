@@ -3,7 +3,15 @@
 //! Methodology mirrors the paper's (§V.A: "10 times per configuration,
 //! averaged"): warmup, `reps` timed runs, report min / median / mean / max.
 //! Used by every `rust/benches/*.rs` target and the experiments harness.
+//!
+//! Besides the human-readable stdout, every bench target persists a
+//! machine-readable `BENCH_<name>.json` via [`write_bench_json`] (into the
+//! invoking directory — the repo root under `make bench` / `make
+//! bench-json` — or `$GR_CDMM_BENCH_OUT`), the input for perf-trajectory
+//! tooling.
 
+use crate::util::json::Json;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -24,6 +32,27 @@ impl Sample {
     pub fn median_secs(&self) -> f64 {
         self.median.as_secs_f64()
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("reps", self.reps)
+            .set("min_s", self.min.as_secs_f64())
+            .set("median_s", self.median.as_secs_f64())
+            .set("mean_s", self.mean.as_secs_f64())
+            .set("max_s", self.max.as_secs_f64())
+    }
+}
+
+/// Write `BENCH_<name>.json` into `$GR_CDMM_BENCH_OUT` (default: the current
+/// directory — the repo root when invoked via `make bench`/`make
+/// bench-json`, since cargo bench binaries keep the invoking cwd). Returns
+/// the written path.
+pub fn write_bench_json(name: &str, json: &Json) -> std::io::Result<PathBuf> {
+    let dir = std::env::var("GR_CDMM_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = PathBuf::from(dir).join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, json.render())?;
+    Ok(path)
 }
 
 /// Prevent the optimizer from discarding a computed value.
@@ -158,5 +187,15 @@ mod tests {
         let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
         assert!(t.contains("| a | b |"));
         assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn sample_to_json_has_all_stats() {
+        let b = Bencher::new(0, 2).quiet();
+        let s = b.bench("noop2", || {});
+        let j = s.to_json().render();
+        for key in ["name", "reps", "min_s", "median_s", "mean_s", "max_s"] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! Cross-module integration: every scheme, end to end, over multiple rings,
-//! shapes and responder subsets — beyond the per-module unit tests.
+//! shapes and responder subsets — beyond the per-module unit tests. All
+//! schemes run through the one `DmmScheme` trait with plane-major shares.
 
 use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
 use gr_cdmm::codes::csa::CsaCode;
@@ -8,7 +9,7 @@ use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
 use gr_cdmm::codes::ep_rmfe_ii::EpRmfeII;
 use gr_cdmm::codes::matdot::MatDotCode;
 use gr_cdmm::codes::polynomial::PolynomialCode;
-use gr_cdmm::codes::scheme::{BatchCodedScheme, CodedScheme};
+use gr_cdmm::codes::scheme::DmmScheme;
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::galois::GaloisRing;
 use gr_cdmm::ring::matrix::Matrix;
@@ -17,7 +18,7 @@ use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::util::rng::Rng64;
 
 /// Generic single-scheme roundtrip with a random responder subset.
-fn single_roundtrip<R: Ring, S: CodedScheme<R>>(
+fn single_roundtrip<R: Ring, S: DmmScheme<R>>(
     scheme: &S,
     t: usize,
     r: usize,

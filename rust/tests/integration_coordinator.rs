@@ -1,10 +1,11 @@
-//! Coordinator integration: coded jobs under adverse cluster conditions.
+//! Coordinator integration: coded jobs under adverse cluster conditions,
+//! all through the single native backend (`NativeCompute`).
 
 use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
 use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
 use gr_cdmm::codes::ep_rmfe_ii::EpRmfeII;
-use gr_cdmm::codes::scheme::{BatchCodedScheme, CodedScheme};
-use gr_cdmm::coordinator::runner::{run_batch, run_single, NativeBatchCompute, NativeSingleCompute};
+use gr_cdmm::codes::registry::{self, SchemeConfig};
+use gr_cdmm::coordinator::runner::{run_batch, run_erased, run_single, NativeCompute};
 use gr_cdmm::coordinator::{Coordinator, StragglerModel};
 use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::zq::Zq;
@@ -16,7 +17,7 @@ use std::time::Duration;
 fn exponential_stragglers_still_decode() {
     let base = Zq::z2e(64);
     let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
-    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let straggler = StragglerModel::Exponential { mean: Duration::from_millis(5) };
     let mut coord = Coordinator::new(8, backend, straggler, 400);
     let mut rng = Rng64::seeded(401);
@@ -34,7 +35,7 @@ fn max_tolerable_failures() {
     // N − R = 8 − 4 = 4 fail-stop workers: still decodable.
     let base = Zq::z2e(64);
     let scheme = Arc::new(EpRmfeII::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
-    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let straggler = StragglerModel::fail_stop([0, 2, 4, 6]);
     let mut coord = Coordinator::new(8, backend, straggler, 402);
     let mut rng = Rng64::seeded(403);
@@ -53,7 +54,7 @@ fn max_tolerable_failures() {
 fn one_failure_too_many_times_out() {
     let base = Zq::z2e(64);
     let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
-    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let straggler = StragglerModel::fail_stop([0, 1, 2, 3, 4]); // 5 > N−R
     let mut coord = Coordinator::new(8, backend, straggler, 404);
     coord.timeout = Duration::from_millis(300);
@@ -70,7 +71,7 @@ fn sequential_jobs_with_job_id_isolation() {
     // are discarded).
     let base = Zq::z2e(64);
     let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
-    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let straggler = StragglerModel::fixed_slow([6, 7], Duration::from_millis(60));
     let mut coord = Coordinator::new(8, backend, straggler, 406);
     let mut rng = Rng64::seeded(407);
@@ -87,7 +88,7 @@ fn sequential_jobs_with_job_id_isolation() {
 fn batch_job_under_stragglers() {
     let base = Zq::z2e(64);
     let scheme = Arc::new(BatchEpRmfe::new(base.clone(), 16, 2, 2, 2, 2).unwrap());
-    let backend = Arc::new(NativeBatchCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let straggler = StragglerModel::fixed_slow([0, 5, 10], Duration::from_millis(80));
     let mut coord = Coordinator::new(16, backend, straggler, 408);
     let mut rng = Rng64::seeded(409);
@@ -105,7 +106,7 @@ fn batch_job_under_stragglers() {
 fn download_counters_isolated_per_job() {
     let base = Zq::z2e(64);
     let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
-    let backend = Arc::new(NativeSingleCompute::new(Arc::clone(&scheme)));
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
     let mut coord = Coordinator::new(8, backend, StragglerModel::None, 410);
     let mut rng = Rng64::seeded(411);
     let a = Matrix::random(&base, 8, 8, &mut rng);
@@ -115,5 +116,39 @@ fn download_counters_isolated_per_job() {
     // runner resets counters per job: both jobs report the same volumes.
     assert_eq!(m1.upload_bytes, m2.upload_bytes);
     assert_eq!(m1.download_bytes, m2.download_bytes);
+    coord.shutdown();
+}
+
+#[test]
+fn malformed_payloads_fail_cleanly_and_pool_survives() {
+    // A truncated/corrupt share must surface as a job failure (timeout with
+    // zero usable responses), NOT a panic unwinding the worker threads —
+    // and the same pool must still serve a well-formed job afterwards.
+    let base = Zq::z2e(64);
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+    let mut coord = Coordinator::new(8, backend, StragglerModel::None, 412);
+    coord.timeout = Duration::from_millis(300);
+
+    // Garbage payloads: every worker's deserialization errors out.
+    let garbage: Vec<Vec<u8>> = (0..8).map(|i| vec![i as u8; 7]).collect();
+    let err = coord.submit_and_collect(garbage, 4).unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+
+    // The pool is intact: a real job on the same coordinator succeeds.
+    coord.timeout = Duration::from_secs(120);
+    let mut rng = Rng64::seeded(413);
+    let a = Matrix::random(&base, 8, 8, &mut rng);
+    let b = Matrix::random(&base, 8, 8, &mut rng);
+    let (c, _) = run_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        std::slice::from_ref(&a),
+        std::slice::from_ref(&b),
+    )
+    .unwrap();
+    assert_eq!(c[0], Matrix::matmul(&base, &a, &b));
     coord.shutdown();
 }

@@ -11,11 +11,10 @@
 //! 3. a full coded job decodes correctly with the XLA worker backend.
 
 use gr_cdmm::codes::ep::PlainEp;
-use gr_cdmm::codes::scheme::CodedScheme;
+use gr_cdmm::codes::scheme::DmmScheme;
 use gr_cdmm::coordinator::{run_single, Coordinator, StragglerModel};
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
-use gr_cdmm::ring::traits::Ring;
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::runtime::gr_backend::{ext_matrix_to_planes, planes_to_ext_matrix, XlaShareCompute};
 use gr_cdmm::runtime::XlaRuntime;

@@ -4,13 +4,14 @@
 
 use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
 use gr_cdmm::codes::ep::EpCode;
-use gr_cdmm::codes::scheme::{BatchCodedScheme, CodedScheme};
+use gr_cdmm::codes::scheme::{DmmScheme, Share};
 use gr_cdmm::ring::eval::{
     eval_many_fast, eval_many_naive, interpolate_fast, interpolate_naive,
 };
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::galois::GaloisRing;
 use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::plane::{PlaneMatrix, PlaneRing};
 use gr_cdmm::ring::poly;
 use gr_cdmm::ring::traits::{is_exceptional_sequence, Ring};
 use gr_cdmm::ring::zq::Zq;
@@ -183,8 +184,96 @@ fn prop_serialization_roundtrip() {
         let mat = Matrix::random(&ring, rows, cols, &mut rng);
         let bytes = mat.to_bytes(&ring);
         assert_eq!(bytes.len(), mat.byte_len(&ring));
-        assert_eq!(Matrix::from_bytes(&ring, &bytes), mat, "case {case}");
+        assert_eq!(Matrix::from_bytes(&ring, &bytes).unwrap(), mat, "case {case}");
     }
+}
+
+/// Property: plane-major serialization roundtrips (matrix and share level)
+/// across `Zq`, `GaloisRing` and `Extension` towers, and truncations of any
+/// length are rejected as clean errors.
+#[test]
+fn prop_plane_serialization_roundtrip() {
+    fn check<E: PlaneRing>(ring: &E, seed: u64) {
+        let mut rng = Rng64::seeded(seed);
+        for case in 0..10 {
+            let rows = 1 + rng.below_usize(5);
+            let cols = 1 + rng.below_usize(5);
+            let mat = PlaneMatrix::random(ring, rows, cols, &mut rng);
+            let bytes = mat.to_bytes(ring);
+            assert_eq!(bytes.len(), mat.byte_len(ring), "{} case {case}", ring.name());
+            assert_eq!(
+                PlaneMatrix::from_bytes(ring, &bytes).unwrap(),
+                mat,
+                "{} case {case}",
+                ring.name()
+            );
+            // every strict prefix fails cleanly
+            let cut = rng.below_usize(bytes.len());
+            assert!(
+                PlaneMatrix::<E::Base>::from_bytes(ring, &bytes[..cut]).is_err(),
+                "{} case {case}: prefix of {cut} bytes must be rejected",
+                ring.name()
+            );
+            // share-level roundtrip (a |> b as one contiguous block)
+            let share: Share<E> = Share {
+                a: mat.clone(),
+                b: PlaneMatrix::random(ring, cols, rows, &mut rng),
+            };
+            let sb = share.to_bytes(ring);
+            assert_eq!(sb.len(), share.byte_len(ring));
+            assert_eq!(Share::from_bytes(ring, &sb).unwrap(), share);
+            assert!(Share::<E>::from_bytes(ring, &sb[..sb.len() - 1]).is_err());
+        }
+    }
+    check(&Zq::z2e(64), 6100);
+    check(&Zq::new(3, 5), 6101);
+    check(&GaloisRing::new(2, 16, 2), 6102);
+    check(&Extension::new(Zq::z2e(64), 3), 6103);
+    check(&Extension::new(Zq::z2e(64), 5), 6104);
+    check(&Extension::new(GaloisRing::new(2, 16, 2), 2), 6105);
+}
+
+/// Property: the plane-major matmul kernel is bit-identical to the AoS
+/// extension matmul on random inputs for every Table 1 / §V.A parameter set
+/// (m = 3, 4, 5 over Z_2^64 and the GR(2^16,2) tower base), plus the axpy
+/// used by encode/decode.
+#[test]
+fn prop_plane_matmul_equals_aos() {
+    let mut seeder = Rng64::seeded(6200);
+    for m in [3usize, 4, 5] {
+        let ext = Extension::new(Zq::z2e(64), m);
+        for case in 0..8 {
+            let mut rng = seeder.fork();
+            let (t, r, s) = (1 + case % 4, 1 + (case + 1) % 4, 1 + (case + 2) % 4);
+            let a = Matrix::random(&ext, t, r, &mut rng);
+            let b = Matrix::random(&ext, r, s, &mut rng);
+            let pc = PlaneMatrix::matmul(
+                &ext,
+                &PlaneMatrix::from_aos(&ext, &a),
+                &PlaneMatrix::from_aos(&ext, &b),
+            );
+            assert_eq!(pc.to_aos(&ext), Matrix::matmul(&ext, &a, &b), "m={m} case {case}");
+            // axpy equivalence
+            let x = Matrix::random(&ext, t, r, &mut rng);
+            let sc = ext.random(&mut rng);
+            let mut aos = a.clone();
+            aos.axpy(&ext, &sc, &x);
+            let mut pla = PlaneMatrix::from_aos(&ext, &a);
+            pla.axpy(&ext, &sc, &PlaneMatrix::from_aos(&ext, &x));
+            assert_eq!(pla.to_aos(&ext), aos, "m={m} case {case} axpy");
+        }
+    }
+    // tower over a Galois-ring base (the paper's GR(2^e, d) generality)
+    let ext = Extension::new(GaloisRing::new(2, 16, 2), 2);
+    let mut rng = seeder.fork();
+    let a = Matrix::random(&ext, 3, 2, &mut rng);
+    let b = Matrix::random(&ext, 2, 3, &mut rng);
+    let pc = PlaneMatrix::matmul(
+        &ext,
+        &PlaneMatrix::from_aos(&ext, &a),
+        &PlaneMatrix::from_aos(&ext, &b),
+    );
+    assert_eq!(pc.to_aos(&ext), Matrix::matmul(&ext, &a, &b));
 }
 
 /// Property: Gauss–Jordan inverse really inverts random unit-determinant

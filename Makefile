@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench bench-json artifacts clean
+.PHONY: build test bench bench-json bench-serving artifacts clean
 
 build:
 	cargo build --release
@@ -18,6 +18,12 @@ bench:
 	cargo bench --bench fig4_worker8
 	cargo bench --bench fig5_worker16
 	cargo bench --bench table1_gcsa
+	cargo bench --bench serving_throughput
+
+# Serving throughput only: pipelined multi-job coordinator vs sequential
+# baseline; writes BENCH_serving_throughput.json.
+bench-serving:
+	cargo bench --bench serving_throughput
 
 # Machine-readable run of the full bench suite (quick settings): refreshes
 # every BENCH_<name>.json at the repo root, including the kernel and
@@ -30,6 +36,7 @@ bench-json:
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench table1_gcsa
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench matmul_kernels
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench eval_crossover
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench serving_throughput
 
 # AOT-lower the worker kernels to artifacts/*.hlo.txt + manifest.json
 # (see rust/src/runtime/mod.rs rustdoc for the manifest contract).

@@ -1,65 +1,119 @@
-//! Straggler mitigation in a serving loop — the phenomenon coded computation
-//! exists for (§I). A stream of multiplication requests is served by an
-//! 8-worker pool where two workers are persistently slow; the coded scheme
-//! (R = 4 of N = 8) never waits for them.
+//! Straggler mitigation in a *serving loop* — the phenomenon coded
+//! computation exists for (§I), now pipelined. A stream of multiplication
+//! requests is served by an 8-worker pool where two workers are persistently
+//! slow; the coded scheme (R = 4 of N = 8) never waits for them, and the
+//! multi-job coordinator keeps several requests in flight so the master's
+//! encode/decode overlaps the workers' compute.
+//!
+//! The same stream is run twice — sequentially (`submit` then `wait` per
+//! request) and pipelined (up to 4 `JobHandle`s outstanding) — and the
+//! jobs/sec of both are reported, along with the decode-plan cache counters:
+//! in steady state the same fast-4 subset keeps responding, so decode
+//! interpolation setup becomes a cache lookup.
 //!
 //! ```bash
 //! cargo run --release --example straggler_serving
 //! ```
 
 use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
-use gr_cdmm::codes::scheme::DmmScheme;
-use gr_cdmm::coordinator::runner::{run_single, NativeCompute};
-use gr_cdmm::coordinator::{Coordinator, StragglerModel};
+use gr_cdmm::codes::scheme::{DmmScheme, Response};
+use gr_cdmm::coordinator::{Coordinator, JobHandle, NativeCompute, StragglerModel};
+use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::plane::PlaneMatrix;
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::util::rng::Rng64;
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+const SIZE: usize = 96;
+const REQUESTS: usize = 12;
+const INFLIGHT: usize = 4;
+
+type Scheme = EpRmfeI<Zq>;
+
+fn encode_request(scheme: &Scheme, a: &Matrix<u64>, b: &Matrix<u64>) -> anyhow::Result<Vec<Vec<u8>>> {
+    let ring = scheme.share_ring();
+    Ok(scheme.encode(a, b)?.iter().map(|s| s.to_bytes(ring)).collect())
+}
+
+fn decode_request(scheme: &Scheme, handle: JobHandle) -> anyhow::Result<(Matrix<u64>, Vec<usize>)> {
+    let (collected, _) = handle.wait()?;
+    let ring = scheme.share_ring();
+    let responses: Vec<Response<Extension<Zq>>> = collected
+        .iter()
+        .map(|c| PlaneMatrix::from_bytes(ring, &c.payload).map(|m| (c.worker_id, m)))
+        .collect::<anyhow::Result<_>>()?;
+    let used = collected.iter().map(|c| c.worker_id).collect();
+    Ok((scheme.decode(&responses)?, used))
+}
+
 fn main() -> anyhow::Result<()> {
     let ring = Zq::z2e(64);
-    let size = 128usize;
-    let requests = 5usize;
-    let slow = Duration::from_millis(250);
-
-    // Two slow nodes — well within the N − R = 4 straggler budget.
-    let straggler = StragglerModel::FixedSlow {
-        slow: [2usize, 5].into_iter().collect(),
-        delay: slow,
-    };
+    let slow = Duration::from_millis(40);
+    let straggler = StragglerModel::fixed_slow([2usize, 5], slow);
     let scheme = Arc::new(EpRmfeI::new(ring.clone(), 8, 2, 1, 2, 2)?);
-    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
-    let mut coord = Coordinator::new(8, backend, straggler, 17);
+    let need = scheme.recovery_threshold();
 
     let mut rng = Rng64::seeded(23);
-    println!("serving {requests} requests on 8 workers (workers 2 and 5 slow by {slow:?})");
-    println!("recovery threshold R = {}", scheme.recovery_threshold());
+    let requests: Vec<(Matrix<u64>, Matrix<u64>)> = (0..REQUESTS)
+        .map(|_| {
+            (Matrix::random(&ring, SIZE, SIZE, &mut rng), Matrix::random(&ring, SIZE, SIZE, &mut rng))
+        })
+        .collect();
+    let expected: Vec<Matrix<u64>> =
+        requests.iter().map(|(a, b)| Matrix::matmul(&ring, a, b)).collect();
 
-    let mut coded_total = Duration::ZERO;
-    for req in 0..requests {
-        let a = Matrix::random(&ring, size, size, &mut rng);
-        let b = Matrix::random(&ring, size, size, &mut rng);
-        let t0 = Instant::now();
-        let (c, m) = run_single(scheme.as_ref(), &mut coord, &a, &b)?;
-        let wall = t0.elapsed();
-        coded_total += wall;
-        assert_eq!(c, Matrix::matmul(&ring, &a, &b));
-        println!(
-            "  req {req}: {wall:?} (used workers {:?}; stragglers bypassed: {})",
-            m.used_workers,
-            !m.used_workers.contains(&2) && !m.used_workers.contains(&5)
-        );
+    println!("serving {REQUESTS} requests on 8 workers (workers 2 and 5 slow by {slow:?})");
+    println!("recovery threshold R = {need}\n");
+
+    // --- sequential baseline: one request at a time ----------------------
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
+    let mut coord = Coordinator::new(8, backend, straggler.clone(), 17);
+    let t0 = Instant::now();
+    for (req, (a, b)) in requests.iter().enumerate() {
+        let handle = coord.submit(encode_request(&scheme, a, b)?, need)?;
+        let (c, used) = decode_request(&scheme, handle)?;
+        assert_eq!(c, expected[req]);
+        if req == 0 {
+            println!("  sequential req 0 used workers {used:?} (stragglers bypassed)");
+        }
     }
+    let seq = t0.elapsed();
     coord.shutdown();
 
-    // Uncoded baseline: an N-way split must wait for ALL workers, so every
-    // request eats the full straggler delay.
-    println!("\ncoded mean latency:  {:?}", coded_total / requests as u32);
-    println!("uncoded lower bound: ≥ {slow:?} per request (must wait for the stragglers)");
+    // --- pipelined: up to INFLIGHT JobHandles outstanding ----------------
+    let scheme2 = Arc::new(EpRmfeI::new(ring.clone(), 8, 2, 1, 2, 2)?);
+    let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme2)));
+    let mut coord = Coordinator::new(8, backend, straggler, 17);
+    let mut window: VecDeque<(usize, JobHandle)> = VecDeque::new();
+    let t0 = Instant::now();
+    for (req, (a, b)) in requests.iter().enumerate() {
+        if window.len() == INFLIGHT {
+            let (oldest, handle) = window.pop_front().expect("window is non-empty");
+            let (c, _) = decode_request(&scheme2, handle)?;
+            assert_eq!(c, expected[oldest]);
+        }
+        window.push_back((req, coord.submit(encode_request(&scheme2, a, b)?, need)?));
+    }
+    while let Some((req, handle)) = window.pop_front() {
+        let (c, _) = decode_request(&scheme2, handle)?;
+        assert_eq!(c, expected[req]);
+    }
+    let pipe = t0.elapsed();
+    coord.shutdown();
+
+    let seq_rate = REQUESTS as f64 / seq.as_secs_f64();
+    let pipe_rate = REQUESTS as f64 / pipe.as_secs_f64();
+    let (hits, misses) = scheme2.plan_cache_stats();
+    println!("\nsequential: {seq:?} total → {seq_rate:.2} jobs/s");
+    println!("pipelined ({INFLIGHT} in flight): {pipe:?} total → {pipe_rate:.2} jobs/s");
+    println!("pipelining speedup: {:.2}x", pipe_rate / seq_rate);
+    println!("decode-plan cache (pipelined pass): {hits} hits / {misses} misses");
     println!(
-        "straggler speedup:   ≥ {:.1}×",
-        slow.as_secs_f64() / (coded_total / requests as u32).as_secs_f64()
+        "\nuncoded lower bound: ≥ {slow:?} per request (an 8-way split must wait for \
+         the stragglers); coded serving never does"
     );
     Ok(())
 }

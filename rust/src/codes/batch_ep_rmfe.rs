@@ -145,6 +145,9 @@ impl<R: ExtensibleRing> DmmScheme<R> for BatchEpRmfe<R> {
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
         self.ep.download_bytes(t, r, s)
     }
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.ep.plan_cache_stats()
+    }
 }
 
 #[cfg(test)]

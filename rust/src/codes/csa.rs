@@ -28,12 +28,16 @@
 //! All matrix traffic (shares, responses, encode/decode accumulators) is
 //! plane-major ([`PlaneMatrix`]); only the `R × R` scalar Cauchy–Vandermonde
 //! system stays in the AoS [`Matrix`] (it is `O(R²)` scalars, never on the
-//! wire).
+//! wire). Its inverse is a pure function of the responding worker subset and
+//! is memoised in a sorted-subset-keyed [`PlanCache`] — recurring fast-`R`
+//! subsets skip the `O(R³)` Gauss–Jordan entirely.
 
+use super::plan_cache::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
+use std::sync::Arc;
 
 /// CSA batch code over a ring `E` with at least `n + N` exceptional points.
 #[derive(Clone)]
@@ -47,6 +51,9 @@ pub struct CsaCode<E: PlaneRing> {
     alphas: Vec<E::Elem>,
     /// `c_l = Π_{k≠l} (f_k − f_l)` (units).
     c: Vec<E::Elem>,
+    /// Cauchy–Vandermonde inverse per sorted responding subset (rows of the
+    /// system in sorted-worker order); `Arc` so clones share a warm cache.
+    plan_cache: Arc<PlanCache<Matrix<E::Elem>>>,
 }
 
 impl<E: PlaneRing> CsaCode<E> {
@@ -70,7 +77,21 @@ impl<E: PlaneRing> CsaCode<E> {
             }
             c.push(prod);
         }
-        Ok(CsaCode { ring, n_batch, n_workers, poles, alphas, c })
+        Ok(CsaCode {
+            ring,
+            n_batch,
+            n_workers,
+            poles,
+            alphas,
+            c,
+            plan_cache: Arc::new(PlanCache::new(DEFAULT_PLAN_CACHE_CAP)),
+        })
+    }
+
+    /// The decode-plan cache (Cauchy–Vandermonde inverses keyed by sorted
+    /// subset).
+    pub fn plan_cache(&self) -> &PlanCache<Matrix<E::Elem>> {
+        &self.plan_cache
     }
 
     /// Recovery threshold `R = 2n − 1` — the single source of truth for the
@@ -149,7 +170,11 @@ impl<E: PlaneRing> CsaCode<E> {
         let used = &responses[..rt];
         let (zr, zc) = (used[0].1.rows, used[0].1.cols);
         let m = ring.plane_count();
+        let mut seen = vec![false; self.n_workers];
         for (idx, z) in used {
+            anyhow::ensure!(*idx < self.n_workers, "worker index {idx} out of range");
+            anyhow::ensure!(!seen[*idx], "duplicate response from worker {idx}");
+            seen[*idx] = true;
             anyhow::ensure!(
                 z.rows == zr && z.cols == zc && z.planes == m,
                 "response from worker {idx} has shape {}x{} ({} planes), expected {zr}x{zc} ({m})",
@@ -159,23 +184,30 @@ impl<E: PlaneRing> CsaCode<E> {
             );
         }
         // Cauchy–Vandermonde system on the responding alphas (scalar-sized).
-        let mut sys = Matrix::zeros(ring, rt, rt);
-        for (row_i, (widx, _)) in used.iter().enumerate() {
-            anyhow::ensure!(*widx < self.n_workers, "worker index out of range");
-            let row = self.system_row(&self.alphas[*widx]);
-            for (col, v) in row.into_iter().enumerate() {
-                sys.set(row_i, col, v);
+        // The inverse is a pure function of the subset: cache it with rows
+        // in sorted-worker order, and read the column for each response by
+        // its rank in the sorted key (row-permuting the system permutes the
+        // columns of its unique inverse — same entries, exactly).
+        let mut sorted: Vec<usize> = used.iter().map(|(i, _)| *i).collect();
+        sorted.sort_unstable();
+        let inv = self.plan_cache.try_get_or_compute(&sorted, || {
+            let mut sys = Matrix::zeros(ring, rt, rt);
+            for (row_i, &widx) in sorted.iter().enumerate() {
+                let row = self.system_row(&self.alphas[widx]);
+                for (col, v) in row.into_iter().enumerate() {
+                    sys.set(row_i, col, v);
+                }
             }
-        }
-        let inv = sys
-            .invert(ring)
-            .ok_or_else(|| anyhow::anyhow!("Cauchy–Vandermonde system not invertible"))?;
-        // unknown_l = Σ_i inv[l][i] · Z_i ; A_lB_l = c_l^{-1} · unknown_l
+            sys.invert(ring)
+                .ok_or_else(|| anyhow::anyhow!("Cauchy–Vandermonde system not invertible"))
+        })?;
+        // unknown_l = Σ_i inv[l][rank_i] · Z_i ; A_lB_l = c_l^{-1} · unknown_l
         let mut out = Vec::with_capacity(n);
         for l in 0..n {
             let mut acc = PlaneMatrix::zeros(ring, zr, zc);
-            for (i, (_, z)) in used.iter().enumerate() {
-                acc.axpy(ring, inv.at(l, i), z);
+            for (widx, z) in used {
+                let col = sorted.binary_search(widx).expect("idx is in its own sorted subset");
+                acc.axpy(ring, inv.at(l, col), z);
             }
             let cinv = ring.inv(&self.c[l]).expect("c_l is a unit");
             acc.scale_assign(ring, &cinv);
@@ -232,6 +264,10 @@ impl<E: PlaneRing> DmmScheme<E> for CsaCode<E> {
     fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
         self.recovery_threshold() * (16 + t * s * self.ring.elem_bytes())
     }
+
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.plan_cache.stats()
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +316,45 @@ mod tests {
         for n in 1..=4usize {
             let csa = CsaCode::new(ring.clone(), 9, n).unwrap();
             assert_eq!(csa.recovery_threshold(), 2 * n - 1);
+        }
+    }
+
+    #[test]
+    fn csa_duplicate_response_rejected() {
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let csa = CsaCode::new(ring.clone(), 5, 2).unwrap();
+        let mut rng = Rng64::seeded(145);
+        let a: Vec<_> = (0..2).map(|_| Matrix::random(&ring, 2, 2, &mut rng)).collect();
+        let b: Vec<_> = (0..2).map(|_| Matrix::random(&ring, 2, 2, &mut rng)).collect();
+        let shares = csa.encode_batch(&a, &b).unwrap();
+        let z0 = csa.worker_compute(&shares[0]).unwrap();
+        let z1 = csa.worker_compute(&shares[1]).unwrap();
+        let dup = vec![(0usize, z0.clone()), (1, z1), (0, z0)];
+        assert!(csa.decode_batch(&dup).is_err());
+    }
+
+    #[test]
+    fn csa_plan_cache_hits_on_recurring_subset() {
+        let ring = Extension::new(Zq::z2e(64), 4);
+        let csa = CsaCode::new(ring.clone(), 8, 3).unwrap(); // R = 5
+        let mut rng = Rng64::seeded(146);
+        let a: Vec<_> = (0..3).map(|_| Matrix::random(&ring, 2, 2, &mut rng)).collect();
+        let b: Vec<_> = (0..3).map(|_| Matrix::random(&ring, 2, 2, &mut rng)).collect();
+        let shares = csa.encode_batch(&a, &b).unwrap();
+        let all: Vec<_> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, csa.worker_compute(s).unwrap()))
+            .collect();
+        // subset {0,2,3,5,7} in two arrival orders → one plan, one hit
+        let first: Vec<_> = [0usize, 2, 3, 5, 7].iter().map(|&i| all[i].clone()).collect();
+        let second: Vec<_> = [7usize, 3, 0, 5, 2].iter().map(|&i| all[i].clone()).collect();
+        let c1 = csa.decode_batch(&first).unwrap();
+        let c2 = csa.decode_batch(&second).unwrap();
+        assert_eq!(csa.plan_cache_stats(), (1, 1));
+        for l in 0..3 {
+            assert_eq!(c1[l], Matrix::matmul(&ring, &a[l], &b[l]), "slot {l}");
+            assert_eq!(c1[l], c2[l], "arrival order must not change the decode");
         }
     }
 

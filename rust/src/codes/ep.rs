@@ -22,13 +22,16 @@
 //! * decoding computes the Lagrange basis coefficients on the responding
 //!   subset once (`O(R²)` scalar ops) and then takes `uv` weighted sums of
 //!   the plane-major response matrices — the interpolation never
-//!   materializes `h` as a polynomial;
+//!   materializes `h` as a polynomial; the basis is memoised per sorted
+//!   subset in a [`PlanCache`], so a recurring fast-`R` subset pays the
+//!   `O(R²)` setup once per cache lifetime;
 //! * [`PlainEp`] is the Lemma III.1 baseline for inputs in a *small* ring:
 //!   every input element is constant-embedded into the extension
 //!   `GR(p^e, d·m)` with `p^{dm} ≥ N` (plane 0 = input, higher planes zero),
 //!   paying the `O(m)` blowup in every metric — the overhead RMFE amortizes
 //!   away.
 
+use super::plan_cache::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use super::scheme::{DmmScheme, Partition, Response, Share};
 use crate::ring::eval::lagrange_basis_coeffs;
 use crate::ring::extension::Extension;
@@ -36,6 +39,7 @@ use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
+use std::sync::Arc;
 
 /// EP code operating directly over a ring `E` with at least `N` exceptional
 /// points (typically an extension ring).
@@ -45,6 +49,9 @@ pub struct EpCode<E: PlaneRing> {
     part: Partition,
     n_workers: usize,
     points: Vec<E::Elem>,
+    /// Lagrange basis coefficients per sorted responding subset (the decode
+    /// plan); `Arc` so clones of the code share one warm cache.
+    plan_cache: Arc<PlanCache<Vec<Vec<E::Elem>>>>,
 }
 
 impl<E: PlaneRing> EpCode<E> {
@@ -56,7 +63,13 @@ impl<E: PlaneRing> EpCode<E> {
             "recovery threshold R = {r} exceeds worker count N = {n_workers}"
         );
         let points = ring.exceptional_points(n_workers)?;
-        Ok(EpCode { ring, part, n_workers, points })
+        Ok(EpCode {
+            ring,
+            part,
+            n_workers,
+            points,
+            plan_cache: Arc::new(PlanCache::new(DEFAULT_PLAN_CACHE_CAP)),
+        })
     }
 
     pub fn partition(&self) -> Partition {
@@ -65,6 +78,11 @@ impl<E: PlaneRing> EpCode<E> {
 
     pub fn points(&self) -> &[E::Elem] {
         &self.points
+    }
+
+    /// The decode-plan cache (Lagrange bases keyed by sorted subset).
+    pub fn plan_cache(&self) -> &PlanCache<Vec<Vec<E::Elem>>> {
+        &self.plan_cache
     }
 
     /// The sparse exponent layout of `f` for `A`-blocks: block `(i, j)` (row
@@ -174,14 +192,22 @@ impl<E: PlaneRing> EpCode<E> {
                 y.planes
             );
         }
-        let pts: Vec<E::Elem> = used.iter().map(|(i, _)| self.points[*i].clone()).collect();
         // Lagrange basis on the responding subset: L_j has R coefficients;
-        // coefficient k of h equals Σ_j L_j[k] · Y_j.
-        let basis = lagrange_basis_coeffs(ring, &pts);
+        // coefficient k of h equals Σ_j L_j[k] · Y_j. The basis is a pure
+        // function of the subset, so it is cached keyed by the sorted worker
+        // ids; basis[rank of worker in the sorted key] belongs to that
+        // worker's point, whatever the arrival order.
+        let mut sorted: Vec<usize> = used.iter().map(|(i, _)| *i).collect();
+        sorted.sort_unstable();
+        let basis = self.plan_cache.get_or_compute(&sorted, || {
+            let pts: Vec<E::Elem> = sorted.iter().map(|&i| self.points[i].clone()).collect();
+            lagrange_basis_coeffs(ring, &pts)
+        });
         let mut c_blocks = Vec::with_capacity(u * v);
         for &k in &self.c_exponents() {
             let mut acc = PlaneMatrix::zeros(ring, bh, bw);
-            for (j, (_, y)) in used.iter().enumerate() {
+            for (idx, y) in used {
+                let j = sorted.binary_search(idx).expect("idx is in its own sorted subset");
                 let weight = basis[j].get(k).cloned().unwrap_or_else(|| ring.zero());
                 acc.axpy(ring, &weight, y);
             }
@@ -254,6 +280,10 @@ impl<E: PlaneRing> DmmScheme<E> for EpCode<E> {
 
     fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
         self.recovery_threshold() * self.response_bytes(t, s)
+    }
+
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.plan_cache.stats()
     }
 }
 
@@ -347,6 +377,10 @@ impl<R: ExtensibleRing> DmmScheme<R> for PlainEp<R> {
 
     fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
         self.recovery_threshold() * self.ep.response_bytes(t, s)
+    }
+
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.ep.plan_cache.stats()
     }
 }
 
@@ -461,6 +495,35 @@ mod tests {
         // a scattered subset too
         let scattered: Vec<_> = [0usize, 2, 5, 7].iter().map(|&i| all[i].clone()).collect();
         assert_eq!(ep.decode_planes(&scattered, 2, 2).unwrap(), expected);
+    }
+
+    #[test]
+    fn decode_plan_cache_hits_on_recurring_subset_any_arrival_order() {
+        let ep = EpCode::new(ext_ring(3), 8, 2, 1, 2).unwrap();
+        let ring = ep.share_ring().clone();
+        let mut rng = Rng64::seeded(109);
+        let a = Matrix::random(&ring, 2, 2, &mut rng);
+        let b = Matrix::random(&ring, 2, 2, &mut rng);
+        let expected = PlaneMatrix::from_aos(&ring, &Matrix::matmul(&ring, &a, &b));
+        let shares = ep.encode(&a, &b).unwrap();
+        let all: Vec<_> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, ep.worker_compute(s).unwrap()))
+            .collect();
+        // same subset {1,3,4,6} in two arrival orders: one plan, two hits
+        let first: Vec<_> = [1usize, 3, 4, 6].iter().map(|&i| all[i].clone()).collect();
+        let second: Vec<_> = [6usize, 1, 4, 3].iter().map(|&i| all[i].clone()).collect();
+        assert_eq!(ep.decode_planes(&first, 2, 2).unwrap(), expected);
+        assert_eq!(ep.plan_cache_stats(), (0, 1));
+        assert_eq!(ep.decode_planes(&second, 2, 2).unwrap(), expected);
+        assert_eq!(ep.decode_planes(&first, 2, 2).unwrap(), expected);
+        assert_eq!(ep.plan_cache_stats(), (2, 1));
+        // a different subset is a fresh plan
+        let other: Vec<_> = [0usize, 2, 5, 7].iter().map(|&i| all[i].clone()).collect();
+        assert_eq!(ep.decode_planes(&other, 2, 2).unwrap(), expected);
+        assert_eq!(ep.plan_cache_stats(), (2, 2));
+        assert_eq!(ep.plan_cache().len(), 2);
     }
 
     #[test]

@@ -117,6 +117,9 @@ impl<R: ExtensibleRing> DmmScheme<R> for EpRmfeI<R> {
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
         self.batch.download_bytes(t, r / self.n_split, s)
     }
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.batch.plan_cache_stats()
+    }
 }
 
 #[cfg(test)]

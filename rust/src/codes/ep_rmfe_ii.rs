@@ -170,6 +170,9 @@ impl<R: ExtensibleRing> DmmScheme<R> for EpRmfeII<R> {
     fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
         self.recovery_threshold() * self.ep.response_bytes(t, s / self.n_split)
     }
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.ep.plan_cache_stats()
+    }
 }
 
 #[cfg(test)]

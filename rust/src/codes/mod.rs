@@ -16,8 +16,16 @@
 //! [`crate::ring::plane::PlaneMatrix`] form, and can be erased into the
 //! object-safe byte-payload facade [`scheme::DynScheme`]; [`registry`] builds
 //! them by name over `Z_{2^64}` for the CLI and the experiments harness.
+//!
+//! Decoding is subset-aware: the interpolation setup (Lagrange basis /
+//! Cauchy–Vandermonde inverse) is a pure function of the responding worker
+//! subset, and every decoder memoises it in a sorted-subset-keyed
+//! [`plan_cache::PlanCache`] — in steady-state serving the same fast-`R`
+//! subset recurs and the setup becomes a lookup (hits/misses surfaced via
+//! [`scheme::DmmScheme::plan_cache_stats`]).
 
 pub mod scheme;
+pub mod plan_cache;
 pub mod ep;
 pub mod polynomial;
 pub mod matdot;

@@ -1,0 +1,179 @@
+//! Subset-keyed decode-plan cache — the steady-state serving optimisation.
+//!
+//! Every scheme's decode begins with an interpolation setup that is a *pure
+//! function of the responding worker subset*: the Lagrange basis coefficients
+//! in [`super::ep`] / [`super::secure_matdot`], the Cauchy–Vandermonde
+//! inverse in [`super::csa`]. Under serving load the same fast-`R` subset
+//! recurs job after job (the stragglers are the stragglers), so that
+//! `O(R²)`–`O(R³)` scalar setup is recomputed for an input it has already
+//! seen. [`PlanCache`] memoises it behind a bounded LRU keyed by the
+//! **sorted** worker subset — sorting makes the key canonical under arrival
+//! order, and because ring arithmetic is exact the plan computed on the
+//! sorted subset is bit-identical to the one the arrival-order decode would
+//! have produced (the decoders index plans by each worker's rank in the
+//! sorted key; see the property tests).
+//!
+//! Hit/miss counters are cumulative over the cache lifetime and surfaced
+//! per-job through [`DmmScheme::plan_cache_stats`](super::DmmScheme::plan_cache_stats)
+//! into [`JobMetrics`](crate::coordinator::JobMetrics).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default capacity: comfortably above the `C(N−|slow|, R)` subsets a small
+/// pool cycles through, small enough that plans (a few KB each) stay cheap.
+pub const DEFAULT_PLAN_CACHE_CAP: usize = 64;
+
+struct CacheEntry<V> {
+    plan: Arc<V>,
+    last_used: u64,
+}
+
+struct Inner<V> {
+    map: HashMap<Vec<usize>, CacheEntry<V>>,
+    /// Monotone access clock for LRU eviction.
+    tick: u64,
+}
+
+/// A bounded LRU cache from sorted worker subsets to decode plans.
+///
+/// Plans are returned as `Arc<V>` so a hit never clones the plan; the
+/// compute closure runs under the cache lock (decodes are master-side and
+/// effectively serial per scheme, and a plan is far cheaper than the decode
+/// it precedes).
+pub struct PlanCache<V> {
+    cap: usize,
+    inner: Mutex<Inner<V>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<V> PlanCache<V> {
+    /// A cache holding at most `cap ≥ 1` plans.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "plan cache capacity must be at least 1");
+        PlanCache {
+            cap,
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up the plan for `key` (a **sorted** worker subset), computing and
+    /// inserting it on a miss. The computation may fail; failures are not
+    /// cached.
+    pub fn try_get_or_compute(
+        &self,
+        key: &[usize],
+        compute: impl FnOnce() -> anyhow::Result<V>,
+    ) -> anyhow::Result<Arc<V>> {
+        debug_assert!(key.windows(2).all(|w| w[0] < w[1]), "key must be sorted and duplicate-free");
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) = inner.map.get_mut(key) {
+            entry.last_used = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&entry.plan));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(compute()?);
+        if inner.map.len() >= self.cap {
+            let evict = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("cap >= 1 and map is at capacity");
+            inner.map.remove(&evict);
+        }
+        inner
+            .map
+            .insert(key.to_vec(), CacheEntry { plan: Arc::clone(&plan), last_used: tick });
+        Ok(plan)
+    }
+
+    /// Infallible variant of [`PlanCache::try_get_or_compute`].
+    pub fn get_or_compute(&self, key: &[usize], compute: impl FnOnce() -> V) -> Arc<V> {
+        match self.try_get_or_compute(key, || Ok(compute())) {
+            Ok(plan) => plan,
+            Err(_) => unreachable!("infallible compute"),
+        }
+    }
+
+    /// Cumulative `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of plans currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let c: PlanCache<u64> = PlanCache::new(4);
+        assert_eq!(*c.get_or_compute(&[0, 2, 5], || 10), 10);
+        assert_eq!(c.stats(), (0, 1));
+        // same subset: hit, no recompute
+        assert_eq!(*c.get_or_compute(&[0, 2, 5], || unreachable!()), 10);
+        assert_eq!(c.stats(), (1, 1));
+        // different subset: miss
+        assert_eq!(*c.get_or_compute(&[1, 2, 5], || 20), 20);
+        assert_eq!(c.stats(), (1, 2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c: PlanCache<usize> = PlanCache::new(2);
+        c.get_or_compute(&[0], || 0);
+        c.get_or_compute(&[1], || 1);
+        // touch [0] so [1] becomes the LRU victim
+        c.get_or_compute(&[0], || unreachable!());
+        c.get_or_compute(&[2], || 2); // evicts [1]
+        assert_eq!(c.len(), 2);
+        assert_eq!(*c.get_or_compute(&[0], || 99), 0); // still cached
+        let (hits_before, _) = c.stats();
+        c.get_or_compute(&[1], || 1); // recomputed: was evicted
+        let (hits_after, _) = c.stats();
+        assert_eq!(hits_before, hits_after, "[1] must have been a miss");
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let c: PlanCache<usize> = PlanCache::new(3);
+        for i in 0..10 {
+            c.get_or_compute(&[i], || i);
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.capacity(), 3);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn failed_compute_not_cached() {
+        let c: PlanCache<usize> = PlanCache::new(2);
+        assert!(c.try_get_or_compute(&[7], || anyhow::bail!("nope")).is_err());
+        assert_eq!(c.len(), 0);
+        // the failure counted as a miss, and the retry recomputes
+        assert_eq!(*c.try_get_or_compute(&[7], || Ok(7)).unwrap(), 7);
+        assert_eq!(c.stats(), (0, 2));
+    }
+}

@@ -154,6 +154,9 @@ impl DmmScheme<Zq> for CsaZq {
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
         self.inner.download_bytes(t, r, s)
     }
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.inner.plan_cache_stats()
+    }
 }
 
 #[cfg(test)]

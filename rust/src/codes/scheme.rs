@@ -143,6 +143,14 @@ pub trait DmmScheme<R: Ring>: Send + Sync {
     /// → master).
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
 
+    /// Cumulative decode-plan cache counters `(hits, misses)` — see
+    /// [`super::plan_cache::PlanCache`]. Schemes whose decode has no
+    /// subset-keyed setup to cache report `(0, 0)`; the runner surfaces the
+    /// per-job delta in [`crate::coordinator::JobMetrics`].
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
     /// Single-product encode (`batch_size() == 1` schemes only).
     fn encode(
         &self,
@@ -205,6 +213,10 @@ pub trait DynScheme: Send + Sync {
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize;
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
+
+    /// Cumulative decode-plan cache counters `(hits, misses)`; `(0, 0)` for
+    /// schemes without a cache.
+    fn plan_cache_stats(&self) -> (u64, u64);
 }
 
 /// Adapter implementing [`DynScheme`] for any typed [`DmmScheme`].
@@ -276,6 +288,9 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
     }
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize {
         self.scheme.download_bytes(t, r, s)
+    }
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.scheme.plan_cache_stats()
     }
 }
 

@@ -29,6 +29,7 @@
 //! tests verify the invertibility of that mask matrix for random subsets
 //! (the simulatability witness) and the correctness/threshold claims.
 
+use super::plan_cache::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::eval::lagrange_basis_coeffs;
 use crate::ring::matrix::Matrix;
@@ -47,6 +48,10 @@ pub struct SecureMatDot<E: PlaneRing> {
     points: Vec<E::Elem>,
     /// Mask source (per-job fresh masks; Mutex for Send+Sync worker pools).
     rng: Mutex<Rng64>,
+    /// Lagrange basis per sorted responding subset. Caching is sound despite
+    /// the per-job masks: the plan depends only on the evaluation points,
+    /// never on mask material.
+    plan_cache: PlanCache<Vec<Vec<E::Elem>>>,
 }
 
 impl<E: PlaneRing> SecureMatDot<E> {
@@ -76,6 +81,7 @@ impl<E: PlaneRing> SecureMatDot<E> {
             n_workers,
             points: pts,
             rng: Mutex::new(Rng64::seeded(seed)),
+            plan_cache: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
         })
     }
 
@@ -199,15 +205,20 @@ impl<E: PlaneRing> DmmScheme<E> for SecureMatDot<E> {
                 y.planes
             );
         }
-        let pts: Vec<E::Elem> = used
-            .iter()
-            .map(|(i, _)| self.points[*i].clone())
-            .collect();
-        let basis = lagrange_basis_coeffs(ring, &pts);
+        // Lagrange basis per sorted subset, cached (see `codes::plan_cache`);
+        // basis[rank in sorted key] belongs to that worker's point.
+        let mut sorted: Vec<usize> = used.iter().map(|(i, _)| *i).collect();
+        sorted.sort_unstable();
+        let basis = self.plan_cache.get_or_compute(&sorted, || {
+            let pts: Vec<E::Elem> =
+                sorted.iter().map(|&i| self.points[i].clone()).collect();
+            lagrange_basis_coeffs(ring, &pts)
+        });
         // C = coefficient of x^{w−1} of the interpolated product polynomial.
         let k = self.w - 1;
         let mut c = PlaneMatrix::zeros(ring, rows, cols);
-        for (j, (_, y)) in used.iter().enumerate() {
+        for (idx, y) in used {
+            let j = sorted.binary_search(idx).expect("idx is in its own sorted subset");
             let weight = basis[j].get(k).cloned().unwrap_or_else(|| ring.zero());
             c.axpy(ring, &weight, y);
         }
@@ -221,6 +232,10 @@ impl<E: PlaneRing> DmmScheme<E> for SecureMatDot<E> {
 
     fn download_bytes(&self, t: usize, _r: usize, s: usize) -> usize {
         self.recovery_threshold() * (16 + t * s * self.ring.elem_bytes())
+    }
+
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.plan_cache.stats()
     }
 }
 
@@ -321,6 +336,26 @@ mod tests {
         let code = SecureMatDot::new(r.clone(), 5, 2, 1, 511).unwrap();
         let alpha_w = r.pow_u128(&code.points()[0], 2);
         assert!(r.is_unit(&alpha_w));
+    }
+
+    #[test]
+    fn plan_cache_reused_across_jobs_on_same_subset() {
+        let r = ring(3);
+        let code = SecureMatDot::new(r.clone(), 5, 1, 1, 513).unwrap();
+        let mut rng = Rng64::seeded(514);
+        // same worker subset {0,1,2} every job, shuffled arrival order
+        for order in [[0usize, 1, 2], [2, 0, 1], [1, 2, 0]] {
+            let a = Matrix::random(&r, 2, 2, &mut rng);
+            let b = Matrix::random(&r, 2, 2, &mut rng);
+            let shares = code.encode(&a, &b).unwrap();
+            let responses: Vec<_> = order
+                .iter()
+                .map(|&i| (i, code.worker_compute(&shares[i]).unwrap()))
+                .collect();
+            assert_eq!(code.decode(&responses).unwrap(), Matrix::matmul(&r, &a, &b));
+        }
+        // one cold plan, two warm reuses — masks change per job, the plan doesn't
+        assert_eq!(code.plan_cache_stats(), (2, 1));
     }
 
     #[test]

@@ -1,12 +1,34 @@
 //! The master node / coordinator: owns the worker pool, dispatches encoded
-//! shares, and collects the first `R` responses per job.
+//! shares, and serves **multiple jobs in flight** — the serving model the
+//! paper motivates (§I: any `R` of `N` workers finish a request, so
+//! stragglers never gate latency).
+//!
+//! Architecture:
+//!
+//! * [`Coordinator::submit`] is non-blocking: it registers the job in a
+//!   shared job table, dispatches one payload per worker, and returns a
+//!   [`JobHandle`];
+//! * a dedicated **response-router thread** receives every [`FromWorker`]
+//!   message and forwards it to the owning job's channel by `job_id` — a
+//!   straggler answering job `k` while job `k+3` is collecting is routed,
+//!   never misattributed or dropped;
+//! * each job owns its [`ByteCounters`]: upload is counted at dispatch,
+//!   arrived download at the router, used download by the job's collector.
+//!   Overlapping jobs therefore account independently (asserted against the
+//!   schemes' analytic volumes in `tests/integration_serving.rs`);
+//! * [`JobHandle::wait`] / [`JobHandle::try_wait`] collect the first `need`
+//!   successful responses with a per-job timeout.
+//!
+//! Lifecycle details are on [`JobHandle`]; the single-job convenience path
+//! is `submit(..)?.wait()`.
 
 use super::straggler::StragglerModel;
 use super::transport::{ByteCounters, FromWorker, ToWorker};
 use super::worker::{spawn_worker, ShareCompute};
 use crate::util::rng::Rng64;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -19,16 +41,235 @@ pub struct Collected {
     pub injected_delay: Duration,
 }
 
-/// The coordinator: a persistent pool of `N` worker threads plus the
-/// master-side dispatch/collect logic.
+/// The uniform "not enough responses in time" error of both the deadline
+/// pre-check and the blocking-receive timeout.
+fn timeout_error(got: usize, need: usize) -> anyhow::Error {
+    anyhow::anyhow!("timed out with {got}/{need} responses (too many stragglers/failures?)")
+}
+
+/// The job's channel disconnected before the threshold: every worker has
+/// already reported (with too many failures) or the coordinator shut down —
+/// either way no further response can arrive, so collection fails fast
+/// instead of sleeping until the deadline.
+fn incomplete_error(job_id: u64, got: usize, need: usize) -> anyhow::Error {
+    anyhow::anyhow!(
+        "job {job_id} cannot complete: {got}/{need} responses and none still pending \
+         (worker failures or coordinator shutdown)"
+    )
+}
+
+/// A pending job's routing entry: where its responses go, its counters, and
+/// how many worker responses are still outstanding. Every worker reports
+/// exactly once per job (success, failure, or fail-stop drop — see
+/// [`super::worker`]), so `outstanding` reaching 0 retires the entry: the
+/// table stays bounded by the number of genuinely in-flight jobs.
+struct JobEntry {
+    /// `None` once the job's [`JobHandle`] is gone; late responses are then
+    /// only accounted, not forwarded.
+    tx: Option<Sender<FromWorker>>,
+    counters: ByteCounters,
+    outstanding: usize,
+}
+
+type JobTable = Arc<Mutex<HashMap<u64, JobEntry>>>;
+
+/// The response router: drains the single worker→master channel and fans
+/// messages out to the owning job, attributing download bytes to that job's
+/// counters — a straggler from an old job can never pollute a newer one.
+/// Exits when every worker has hung up, and clears the table on the way out
+/// so pending [`JobHandle`]s observe a disconnect instead of sleeping until
+/// their timeout.
+fn spawn_router(
+    rx: Receiver<FromWorker>,
+    jobs: JobTable,
+    aggregate: ByteCounters,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("gr-cdmm-router".to_string())
+        .spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                let len = msg.payload.as_ref().map_or(0, Vec::len);
+                aggregate.add_download_arrived(len);
+                let mut table = jobs.lock().unwrap();
+                let Some(entry) = table.get_mut(&msg.job_id) else {
+                    // Entry already retired (all workers heard from, or the
+                    // coordinator restarted routing) — the bytes stay
+                    // visible in the aggregate discarded count.
+                    continue;
+                };
+                let job_id = msg.job_id;
+                entry.counters.add_download_arrived(len);
+                entry.outstanding = entry.outstanding.saturating_sub(1);
+                let send_failed = match &entry.tx {
+                    Some(tx) => tx.send(msg).is_err(),
+                    None => false,
+                };
+                if send_failed {
+                    // The handle was dropped: the job is over; keep the
+                    // entry (for late-byte attribution) but stop forwarding.
+                    entry.tx = None;
+                }
+                if entry.outstanding == 0 {
+                    table.remove(&job_id);
+                }
+            }
+            jobs.lock().unwrap().clear();
+        })
+        .expect("failed to spawn router thread")
+}
+
+/// A handle to one in-flight job.
+///
+/// # Lifecycle
+///
+/// 1. [`Coordinator::submit`] registers the job and dispatches its payloads;
+///    the handle's deadline starts there (override with
+///    [`JobHandle::set_timeout`] before collecting).
+/// 2. Responses routed to this job accumulate in its private channel;
+///    [`JobHandle::counters`] observes the job's byte traffic live.
+/// 3. Collect either blocking — [`JobHandle::wait`] — or by polling
+///    [`JobHandle::try_wait`]. Both deliver `(Vec<Collected>, Duration)`:
+///    the first `need` successful responses in arrival order and the
+///    dispatch→threshold wall time. Worker-side failures are treated as
+///    stragglers (never collected); if the deadline passes first, a
+///    "timed out with k/need" error is returned.
+/// 4. Dropping the handle (with or without collecting) ends the job: the
+///    router unregisters it on the next routed response, and late bytes are
+///    accounted as discarded in the job's and the coordinator's counters.
+///
+/// Handles are independent — any number of jobs may be in flight, collected
+/// in any order.
+pub struct JobHandle {
+    job_id: u64,
+    need: usize,
+    rx: Receiver<FromWorker>,
+    counters: ByteCounters,
+    aggregate: ByteCounters,
+    submitted: Instant,
+    timeout: Duration,
+    collected: Vec<Collected>,
+    done_at: Option<Duration>,
+}
+
+impl JobHandle {
+    /// The coordinator-assigned job id.
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// The recovery threshold this job collects to.
+    pub fn need(&self) -> usize {
+        self.need
+    }
+
+    /// This job's byte counters (upload at dispatch, download as routed).
+    /// Clone them to keep observing after the handle is consumed.
+    pub fn counters(&self) -> &ByteCounters {
+        &self.counters
+    }
+
+    /// Override the per-job deadline (measured from submission).
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    /// Absorb one routed response: the first `need` successful ones are
+    /// collected (and their bytes counted as used), everything after is
+    /// left as arrived-only, i.e. discarded.
+    fn absorb(&mut self, msg: FromWorker) {
+        debug_assert_eq!(msg.job_id, self.job_id, "router must filter by job id");
+        let FromWorker { worker_id, payload, compute, injected_delay, .. } = msg;
+        let Some(payload) = payload else {
+            return; // worker-side compute error: treat as a straggler
+        };
+        if self.collected.len() < self.need {
+            self.counters.add_download_used(payload.len());
+            self.aggregate.add_download_used(payload.len());
+            self.collected.push(Collected { worker_id, payload, compute, injected_delay });
+            if self.collected.len() == self.need {
+                self.done_at = Some(self.submitted.elapsed());
+            }
+        }
+    }
+
+    /// Block until the job has `need` successful responses (or its deadline
+    /// passes). Returns them in arrival order plus the dispatch→threshold
+    /// wall time.
+    pub fn wait(mut self) -> anyhow::Result<(Vec<Collected>, Duration)> {
+        anyhow::ensure!(self.done_at.is_none(), "job {} was already collected", self.job_id);
+        while self.collected.len() < self.need {
+            // Absorb whatever already arrived before consulting the
+            // deadline: a handle collected late (the pipelined pattern)
+            // must not report a timeout for a job whose responses all
+            // arrived in time and are sitting unread in its channel.
+            match self.rx.try_recv() {
+                Ok(msg) => {
+                    self.absorb(msg);
+                    continue;
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    return Err(incomplete_error(self.job_id, self.collected.len(), self.need));
+                }
+            }
+            let remaining = self
+                .timeout
+                .checked_sub(self.submitted.elapsed())
+                .ok_or_else(|| timeout_error(self.collected.len(), self.need))?;
+            match self.rx.recv_timeout(remaining) {
+                Ok(msg) => self.absorb(msg),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(timeout_error(self.collected.len(), self.need));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(incomplete_error(self.job_id, self.collected.len(), self.need));
+                }
+            }
+        }
+        let wait = self.done_at.expect("threshold reached");
+        Ok((std::mem::take(&mut self.collected), wait))
+    }
+
+    /// Non-blocking poll. `Ok(None)` while the job is still pending within
+    /// its deadline; `Ok(Some(..))` exactly once when the threshold is met;
+    /// the same timeout error as [`JobHandle::wait`] once the deadline has
+    /// passed.
+    pub fn try_wait(&mut self) -> anyhow::Result<Option<(Vec<Collected>, Duration)>> {
+        anyhow::ensure!(self.done_at.is_none(), "job {} was already collected", self.job_id);
+        loop {
+            match self.rx.try_recv() {
+                Ok(msg) => {
+                    self.absorb(msg);
+                    if self.done_at.is_some() {
+                        let wait = self.done_at.expect("threshold reached");
+                        return Ok(Some((std::mem::take(&mut self.collected), wait)));
+                    }
+                }
+                Err(TryRecvError::Empty) => {
+                    if self.submitted.elapsed() > self.timeout {
+                        return Err(timeout_error(self.collected.len(), self.need));
+                    }
+                    return Ok(None);
+                }
+                Err(TryRecvError::Disconnected) => {
+                    return Err(incomplete_error(self.job_id, self.collected.len(), self.need));
+                }
+            }
+        }
+    }
+}
+
+/// The coordinator: a persistent pool of `N` worker threads, a response
+/// router, and the job table that lets any number of jobs overlap.
 pub struct Coordinator {
     n_workers: usize,
     senders: Vec<Sender<ToWorker>>,
-    receiver: Receiver<FromWorker>,
     handles: Vec<JoinHandle<()>>,
-    counters: ByteCounters,
+    router: Option<JoinHandle<()>>,
+    jobs: JobTable,
+    aggregate: ByteCounters,
     next_job: u64,
-    /// Max wall time to wait for the recovery threshold per job.
+    /// Default per-job deadline, captured by [`Coordinator::submit`].
     pub timeout: Duration,
 }
 
@@ -58,12 +299,17 @@ impl Coordinator {
             senders.push(tx);
             handles.push(handle);
         }
+        drop(resp_tx); // workers hold the only senders: the router exits when they do
+        let jobs: JobTable = Arc::new(Mutex::new(HashMap::new()));
+        let aggregate = ByteCounters::new();
+        let router = spawn_router(resp_rx, Arc::clone(&jobs), aggregate.clone());
         Coordinator {
             n_workers,
             senders,
-            receiver: resp_rx,
             handles,
-            counters: ByteCounters::new(),
+            router: Some(router),
+            jobs,
+            aggregate,
             next_job: 0,
             timeout: Duration::from_secs(120),
         }
@@ -73,98 +319,96 @@ impl Coordinator {
         self.n_workers
     }
 
+    /// Coordinator-lifetime byte totals, summed over every job (never
+    /// reset). Per-job accounting lives on each [`JobHandle::counters`].
     pub fn counters(&self) -> &ByteCounters {
-        &self.counters
+        &self.aggregate
     }
 
-    /// Dispatch one payload per worker and collect the first `need`
-    /// successful responses (arrival order). Late/extra responses for this
-    /// job are drained non-blockingly and counted as discarded download.
-    ///
-    /// Returns the responses and the dispatch→threshold wall time.
-    pub fn submit_and_collect(
-        &mut self,
-        payloads: Vec<Vec<u8>>,
-        need: usize,
-    ) -> anyhow::Result<(Vec<Collected>, Duration)> {
+    /// Number of jobs currently registered with the router.
+    pub fn jobs_in_flight(&self) -> usize {
+        self.jobs.lock().unwrap().len()
+    }
+
+    /// Dispatch one payload per worker and return immediately with a
+    /// [`JobHandle`] that collects the first `need` successful responses.
+    /// Any number of submitted jobs may overlap; responses are routed to
+    /// their owning job by id.
+    pub fn submit(&mut self, payloads: Vec<Vec<u8>>, need: usize) -> anyhow::Result<JobHandle> {
         anyhow::ensure!(
             payloads.len() == self.n_workers,
             "need exactly one payload per worker ({} != {})",
             payloads.len(),
             self.n_workers
         );
-        anyhow::ensure!(need <= self.n_workers, "need > n_workers");
+        anyhow::ensure!(
+            (1..=self.n_workers).contains(&need),
+            "need must be in 1..={} (got {need})",
+            self.n_workers
+        );
+        anyhow::ensure!(!self.senders.is_empty(), "coordinator is shut down");
         let job_id = self.next_job;
         self.next_job += 1;
 
-        let t0 = Instant::now();
+        let counters = ByteCounters::new();
+        let (job_tx, job_rx) = channel::<FromWorker>();
+        // Register before dispatching: a response must never beat the entry.
+        self.jobs.lock().unwrap().insert(
+            job_id,
+            JobEntry {
+                tx: Some(job_tx),
+                counters: counters.clone(),
+                outstanding: self.n_workers,
+            },
+        );
+
+        let submitted = Instant::now();
         for (tx, payload) in self.senders.iter().zip(payloads) {
-            self.counters.add_upload(payload.len());
-            tx.send(ToWorker::Job { job_id, payload })
-                .map_err(|_| anyhow::anyhow!("worker hung up"))?;
-        }
-
-        let mut collected = Vec::with_capacity(need);
-        while collected.len() < need {
-            let remaining = self
-                .timeout
-                .checked_sub(t0.elapsed())
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "timed out with {}/{need} responses (too many stragglers/failures?)",
-                        collected.len()
-                    )
-                })?;
-            match self.receiver.recv_timeout(remaining) {
-                Ok(msg) => {
-                    if msg.job_id != job_id {
-                        // stale response from a previous job
-                        if let Some(p) = msg.payload {
-                            self.counters.add_download_discarded(p.len());
-                        }
-                        continue;
-                    }
-                    let Some(payload) = msg.payload else {
-                        continue; // worker-side compute error: treat as straggler
-                    };
-                    self.counters.add_download_used(payload.len());
-                    collected.push(Collected {
-                        worker_id: msg.worker_id,
-                        payload,
-                        compute: msg.compute,
-                        injected_delay: msg.injected_delay,
-                    });
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    anyhow::bail!(
-                        "timed out with {}/{need} responses (too many stragglers/failures?)",
-                        collected.len()
-                    );
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    anyhow::bail!("all workers disconnected");
-                }
+            counters.add_upload(payload.len());
+            self.aggregate.add_upload(payload.len());
+            if tx.send(ToWorker::Job { job_id, payload }).is_err() {
+                self.jobs.lock().unwrap().remove(&job_id);
+                anyhow::bail!("worker hung up");
             }
         }
-        let wait = t0.elapsed();
-
-        // Drain any stragglers that already responded, without blocking.
-        while let Ok(msg) = self.receiver.try_recv() {
-            if let Some(p) = msg.payload {
-                self.counters.add_download_discarded(p.len());
-            }
-        }
-        Ok((collected, wait))
+        Ok(JobHandle {
+            job_id,
+            need,
+            rx: job_rx,
+            counters,
+            aggregate: self.aggregate.clone(),
+            submitted,
+            timeout: self.timeout,
+            collected: Vec::with_capacity(need),
+            done_at: None,
+        })
     }
 
-    /// Graceful shutdown: signal and join every worker.
-    pub fn shutdown(self) {
-        for tx in &self.senders {
+    fn shutdown_impl(&mut self) {
+        for tx in self.senders.drain(..) {
             let _ = tx.send(ToWorker::Shutdown);
         }
-        for h in self.handles {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        if let Some(router) = self.router.take() {
+            let _ = router.join();
+        }
+    }
+
+    /// Graceful shutdown: signal and join every worker, then the router.
+    /// Queued jobs are still processed and routed before workers exit.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Dropping the coordinator performs the same shutdown as
+/// [`Coordinator::shutdown`], so a panicking test or an early `?` return
+/// never leaks the pool/router threads.
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_impl();
     }
 }
 
@@ -180,14 +424,44 @@ mod tests {
         }
     }
 
+    fn payloads(n: usize, byte: u8, len: usize) -> Vec<Vec<u8>> {
+        (0..n).map(|_| vec![byte; len]).collect()
+    }
+
     #[test]
     fn collects_first_r() {
         let mut c = Coordinator::new(4, Arc::new(Echo), StragglerModel::None, 1);
         let payloads: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8; 10]).collect();
-        let (got, _) = c.submit_and_collect(payloads, 3).unwrap();
+        let handle = c.submit(payloads, 3).unwrap();
+        let job_counters = handle.counters().clone();
+        let (got, _) = handle.wait().unwrap();
         assert_eq!(got.len(), 3);
+        assert_eq!(job_counters.upload_total(), 40);
+        assert_eq!(job_counters.download_used_total(), 30);
+        // single job: aggregate equals the job's view
         assert_eq!(c.counters().upload_total(), 40);
         assert_eq!(c.counters().download_used_total(), 30);
+        c.shutdown();
+    }
+
+    #[test]
+    fn overlapping_jobs_route_by_job_id() {
+        let mut c = Coordinator::new(3, Arc::new(Echo), StragglerModel::None, 6);
+        let h1 = c.submit(payloads(3, 0xA1, 5), 3).unwrap();
+        let h2 = c.submit(payloads(3, 0xB2, 9), 3).unwrap();
+        let h3 = c.submit(payloads(3, 0xC3, 2), 3).unwrap();
+        assert_eq!((h1.job_id(), h2.job_id(), h3.job_id()), (0, 1, 2));
+        // collect out of submission order: routing must not care
+        for (h, byte, len) in [(h2, 0xB2u8, 9usize), (h3, 0xC3, 2), (h1, 0xA1, 5)] {
+            let counters = h.counters().clone();
+            let (got, _) = h.wait().unwrap();
+            assert_eq!(got.len(), 3);
+            for resp in &got {
+                assert_eq!(resp.payload, vec![byte; len], "response bytes belong to the job");
+            }
+            assert_eq!(counters.upload_total(), (3 * len) as u64);
+            assert_eq!(counters.download_used_total(), (3 * len) as u64);
+        }
         c.shutdown();
     }
 
@@ -195,30 +469,39 @@ mod tests {
     fn tolerates_fail_stop_up_to_n_minus_r() {
         let straggler = StragglerModel::fail_stop([0, 2]);
         let mut c = Coordinator::new(5, Arc::new(Echo), straggler, 2);
-        let payloads: Vec<Vec<u8>> = (0..5).map(|_| vec![7u8; 4]).collect();
-        let (got, _) = c.submit_and_collect(payloads, 3).unwrap();
+        let (got, _) = c.submit(payloads(5, 7, 4), 3).unwrap().wait().unwrap();
         let ids: Vec<usize> = got.iter().map(|g| g.worker_id).collect();
         assert!(!ids.contains(&0) && !ids.contains(&2));
         c.shutdown();
     }
 
     #[test]
-    fn times_out_when_too_many_fail() {
+    fn fails_fast_when_too_many_fail() {
         let straggler = StragglerModel::fail_stop([0, 1, 2]);
         let mut c = Coordinator::new(4, Arc::new(Echo), straggler, 3);
-        c.timeout = Duration::from_millis(200);
-        let payloads: Vec<Vec<u8>> = (0..4).map(|_| vec![1u8]).collect();
-        let err = c.submit_and_collect(payloads, 2).unwrap_err();
-        assert!(err.to_string().contains("timed out"), "{err}");
+        // No short timeout needed: once all four workers have reported
+        // (three of them as drops) the threshold is unreachable and the
+        // collector fails fast.
+        let err = c.submit(payloads(4, 1, 1), 2).unwrap().wait().unwrap_err();
+        assert!(err.to_string().contains("1/2"), "{err}");
         c.shutdown();
+    }
+
+    #[test]
+    fn times_out_on_slow_workers() {
+        let straggler = StragglerModel::fixed_slow([0, 1], Duration::from_millis(400));
+        let mut c = Coordinator::new(2, Arc::new(Echo), straggler, 11);
+        c.timeout = Duration::from_millis(80);
+        let err = c.submit(payloads(2, 1, 1), 1).unwrap().wait().unwrap_err();
+        assert!(err.to_string().contains("timed out with 0/1"), "{err}");
+        c.shutdown(); // joins the still-sleeping workers
     }
 
     #[test]
     fn slow_workers_not_in_first_r() {
         let straggler = StragglerModel::fixed_slow([0], Duration::from_millis(300));
         let mut c = Coordinator::new(3, Arc::new(Echo), straggler, 4);
-        let payloads: Vec<Vec<u8>> = (0..3).map(|_| vec![1u8; 8]).collect();
-        let (got, wait) = c.submit_and_collect(payloads, 2).unwrap();
+        let (got, wait) = c.submit(payloads(3, 1, 8), 2).unwrap().wait().unwrap();
         let ids: Vec<usize> = got.iter().map(|g| g.worker_id).collect();
         assert!(!ids.contains(&0), "slow worker 0 should not be among first 2");
         assert!(wait < Duration::from_millis(250), "did not wait for the straggler");
@@ -229,9 +512,92 @@ mod tests {
     fn multiple_jobs_reuse_pool() {
         let mut c = Coordinator::new(3, Arc::new(Echo), StragglerModel::None, 5);
         for _ in 0..5 {
-            let payloads: Vec<Vec<u8>> = (0..3).map(|_| vec![9u8; 2]).collect();
-            let (got, _) = c.submit_and_collect(payloads, 3).unwrap();
+            let (got, _) = c.submit(payloads(3, 9, 2), 3).unwrap().wait().unwrap();
             assert_eq!(got.len(), 3);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn try_wait_polls_to_completion() {
+        let straggler = StragglerModel::fixed_slow([0, 1, 2], Duration::from_millis(150));
+        let mut c = Coordinator::new(3, Arc::new(Echo), straggler, 7);
+        let mut handle = c.submit(payloads(3, 4, 3), 2).unwrap();
+        // workers are still sleeping: pending
+        assert!(handle.try_wait().unwrap().is_none());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let (got, _) = loop {
+            if let Some(done) = handle.try_wait().unwrap() {
+                break done;
+            }
+            assert!(Instant::now() < deadline, "try_wait never completed");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert_eq!(got.len(), 2);
+        // the handle is spent now
+        assert!(handle.try_wait().is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn dropping_handle_keeps_pool_serving() {
+        let mut c = Coordinator::new(3, Arc::new(Echo), StragglerModel::None, 8);
+        let abandoned = c.submit(payloads(3, 1, 6), 3).unwrap();
+        let abandoned_counters = abandoned.counters().clone();
+        drop(abandoned);
+        // the pool still serves the next job
+        let (got, _) = c.submit(payloads(3, 2, 4), 3).unwrap().wait().unwrap();
+        assert_eq!(got.len(), 3);
+        // the abandoned job's responses were routed/accounted, never used
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while abandoned_counters.download_arrived_total() < 18 {
+            assert!(Instant::now() < deadline, "late responses were not attributed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(abandoned_counters.download_used_total(), 0);
+        assert_eq!(abandoned_counters.download_discarded_total(), 18);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drop_joins_pool_and_drains_in_flight_job() {
+        // No explicit shutdown: Drop must signal and join workers + router
+        // (this test would hang otherwise). The job queued before the drop
+        // is still processed and routed, so its handle collects normally.
+        let handle = {
+            let mut c = Coordinator::new(2, Arc::new(Echo), StragglerModel::None, 9);
+            c.submit(payloads(2, 3, 2), 2).unwrap()
+        };
+        let (got, _) = handle.wait().unwrap();
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn handle_errors_cleanly_after_unserved_shutdown() {
+        // Workers fail-stop, coordinator dropped: the handle can never be
+        // served and reports that instead of hanging.
+        let straggler = StragglerModel::fail_stop([0, 1]);
+        let handle = {
+            let mut c = Coordinator::new(2, Arc::new(Echo), straggler, 12);
+            c.submit(payloads(2, 3, 2), 1).unwrap()
+        };
+        let err = handle.wait().unwrap_err();
+        assert!(err.to_string().contains("cannot complete"), "{err}");
+    }
+
+    #[test]
+    fn job_table_drains_after_all_workers_report() {
+        // Worker 1 fail-stops; it still reports the drop, so the entry
+        // retires once every worker has been heard from — the table stays
+        // bounded by the genuinely in-flight jobs.
+        let straggler = StragglerModel::fail_stop([1]);
+        let mut c = Coordinator::new(3, Arc::new(Echo), straggler, 10);
+        let h = c.submit(payloads(3, 5, 1), 2).unwrap();
+        let _ = h.wait().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.jobs_in_flight() != 0 {
+            assert!(Instant::now() < deadline, "job entry never retired");
+            std::thread::sleep(Duration::from_millis(5));
         }
         c.shutdown();
     }

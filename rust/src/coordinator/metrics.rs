@@ -8,6 +8,9 @@ use std::time::Duration;
 /// Full breakdown of one distributed multiplication job.
 #[derive(Clone, Debug, Default)]
 pub struct JobMetrics {
+    /// Coordinator-assigned job id (jobs may overlap; ids tie metrics to
+    /// [`super::master::JobHandle`]s).
+    pub job_id: u64,
     /// Master-side encoding time (partition + polynomial evaluation, incl.
     /// RMFE packing where applicable).
     pub encode: Duration,
@@ -26,6 +29,12 @@ pub struct JobMetrics {
     pub worker_delay: Vec<Duration>,
     /// Worker indices that contributed to the decode, in arrival order.
     pub used_workers: Vec<usize>,
+    /// Decode-plan cache hits during this job's decode (see
+    /// [`crate::codes::plan_cache`]): nonzero when the responding subset's
+    /// interpolation setup was already cached.
+    pub plan_cache_hits: u64,
+    /// Decode-plan cache misses during this job's decode.
+    pub plan_cache_misses: u64,
     /// Total end-to-end wall time at the master.
     pub total: Duration,
 }
@@ -66,6 +75,9 @@ impl JobMetrics {
 
     pub fn to_json(&self) -> Json {
         Json::obj()
+            .set("job_id", self.job_id)
+            .set("plan_cache_hits", self.plan_cache_hits)
+            .set("plan_cache_misses", self.plan_cache_misses)
             .set("encode_s", self.encode.as_secs_f64())
             .set("decode_s", self.decode.as_secs_f64())
             .set("wait_for_r_s", self.wait_for_r.as_secs_f64())
@@ -112,5 +124,7 @@ mod tests {
         let j = JobMetrics::default().to_json().render();
         assert!(j.contains("encode_s"));
         assert!(j.contains("upload_bytes"));
+        assert!(j.contains("job_id"));
+        assert!(j.contains("plan_cache_hits"));
     }
 }

@@ -1,28 +1,73 @@
 //! The L3 distributed runtime: a master node and a pool of worker nodes on
-//! OS threads, joined by byte-accounted channels.
+//! OS threads, joined by byte-accounted channels — now a **pipelined
+//! serving layer** with any number of jobs in flight.
 //!
 //! The paper's system model (§I, §V.A): a master encodes, uploads one share
 //! per worker, workers compute their small product, and the master decodes
 //! from the first `R` responses — stragglers beyond the fastest `R` are
-//! simply never waited for. This module reproduces that model faithfully:
+//! simply never waited for. This module reproduces that model faithfully
+//! and extends it to the serving setting the paper motivates: requests
+//! overlap, so worker queues never idle between jobs.
 //!
 //! * [`transport`] — message types and exact per-link byte accounting (the
 //!   paper reports communication *volume*; we count serialized bytes on the
 //!   wire, which matches the schemes' analytic `upload_bytes`/`download_bytes`
-//!   — asserted in tests);
+//!   — asserted in tests). Counters exist per job and aggregated per
+//!   coordinator;
 //! * [`straggler`] — delay/failure injection models (fixed slow set,
 //!   exponential tails, fail-stop);
 //! * [`worker`] — the worker loop: receive share → compute (native ring
 //!   kernels or the AOT XLA backend from [`crate::runtime`]) → reply;
-//! * [`master`] — the coordinator: dispatch, first-`R` collection, timeout
-//!   handling;
+//! * [`master`] — the multi-job coordinator: [`Coordinator::submit`]
+//!   dispatches a job without blocking and returns a [`JobHandle`]; a
+//!   response-router thread routes every worker reply to its owning job by
+//!   `job_id`;
 //! * [`metrics`] — the timing/volume breakdown the evaluation section plots
-//!   (encode / upload / worker compute / download / decode);
+//!   (encode / upload / worker compute / download / decode), plus the
+//!   decode-plan cache hit/miss counters;
 //! * [`runner`] — glue that runs a [`DmmScheme`](crate::codes::DmmScheme)
 //!   job (typed, single or batch) or an erased
 //!   [`DynScheme`](crate::codes::DynScheme) job end-to-end on a pool, plus
 //!   the single native worker backend
 //!   ([`NativeCompute`](runner::NativeCompute)).
+//!
+//! # The `JobHandle` lifecycle
+//!
+//! ```text
+//! submit(payloads, need) ──► JobHandle           (dispatch; deadline starts)
+//!        │                      │
+//!        │   router thread ───► │  responses routed by job_id, bytes
+//!        │                      │  attributed to the job's counters
+//!        │                      ▼
+//!        │            wait() / try_wait() ──► (Vec<Collected>, wait_for_R)
+//!        │                      │
+//!        └── drop (any time) ───┴─► job retired; late responses counted
+//!                                   as discarded against this job
+//! ```
+//!
+//! 1. **Submit.** [`Coordinator::submit`] registers the job in the shared
+//!    job table *before* dispatching, so no response can beat the entry,
+//!    and returns immediately. Any number of jobs may be in flight; submit
+//!    order and collection order are independent.
+//! 2. **Route.** The router thread owns the single worker→master channel
+//!    and forwards each [`transport::FromWorker`] to the owning job's
+//!    private channel. A straggler answering an old job while newer jobs
+//!    collect is attributed to *its* job — never discarded as "stale", and
+//!    never misread by another job's collector.
+//! 3. **Collect.** [`JobHandle::wait`] blocks (with a per-job timeout,
+//!    default [`Coordinator::timeout`] at submit time) until the first
+//!    `need` successful responses arrived; [`JobHandle::try_wait`] is the
+//!    polling variant for multiplexed serving loops. Worker-side failures
+//!    are invisible to collection (like silence on a network) but let the
+//!    collector fail fast once the threshold is provably unreachable.
+//! 4. **Retire.** Once every worker has been heard from (success, failure
+//!    or fail-stop report), the router retires the table entry — the table
+//!    is bounded by the number of genuinely in-flight jobs. Dropping the
+//!    handle early just stops forwarding; accounting continues.
+//!
+//! [`Coordinator`] implements `Drop` (signal shutdown + join workers and
+//! router), so early `?` returns and panicking tests never leak the pool;
+//! [`Coordinator::shutdown`] remains the explicit happy path.
 
 pub mod transport;
 pub mod straggler;
@@ -31,7 +76,7 @@ pub mod master;
 pub mod metrics;
 pub mod runner;
 
-pub use master::Coordinator;
+pub use master::{Coordinator, JobHandle};
 pub use metrics::JobMetrics;
 pub use straggler::StragglerModel;
 pub use runner::{run_batch, run_erased, run_single, NativeCompute};

@@ -66,12 +66,14 @@ fn job_metrics(
         encode,
         decode,
         wait_for_r,
+        total,
         upload_bytes: counters.upload_total(),
         download_bytes: counters.download_used_total(),
         worker_compute: collected.iter().map(|c| c.compute).collect(),
         worker_delay: collected.iter().map(|c| c.injected_delay).collect(),
         used_workers: collected.iter().map(|c| c.worker_id).collect(),
-        total,
+        // job_id and plan-cache deltas are filled in by the caller
+        ..JobMetrics::default()
     }
 }
 
@@ -87,8 +89,6 @@ pub fn run_erased<R: Ring>(
     b: &[Matrix<R::Elem>],
 ) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
     let t_total = Instant::now();
-    let counters = coord.counters().clone();
-    counters.reset();
 
     // Crossing the byte facade (serialize here, deserialize inside
     // `encode_bytes`) happens OUTSIDE the timed encode window, so the
@@ -103,15 +103,20 @@ pub fn run_erased<R: Ring>(
     let encode = t0.elapsed();
 
     let need = scheme.recovery_threshold();
-    let (collected, wait_for_r) = coord.submit_and_collect(payloads, need)?;
+    let handle = coord.submit(payloads, need)?;
+    let job_id = handle.job_id();
+    let counters = handle.counters().clone();
+    let (collected, wait_for_r) = handle.wait()?;
 
     let responses: Vec<(usize, &[u8])> = collected
         .iter()
         .map(|c| (c.worker_id, c.payload.as_slice()))
         .collect();
+    let (hits_before, misses_before) = scheme.plan_cache_stats();
     let t0 = Instant::now();
     let out_bytes = scheme.decode_bytes(&responses)?;
     let decode = t0.elapsed();
+    let (hits_after, misses_after) = scheme.plan_cache_stats();
     // Re-crossing the facade (output bytes → matrices) is untimed, mirroring
     // the encode side.
     let out: Vec<Matrix<R::Elem>> = out_bytes
@@ -119,7 +124,11 @@ pub fn run_erased<R: Ring>(
         .map(|buf| Matrix::from_bytes(ring, buf))
         .collect::<anyhow::Result<_>>()?;
 
-    let metrics = job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
+    let mut metrics =
+        job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
+    metrics.job_id = job_id;
+    metrics.plan_cache_hits = hits_after.saturating_sub(hits_before);
+    metrics.plan_cache_misses = misses_after.saturating_sub(misses_before);
     Ok((out, metrics))
 }
 
@@ -134,8 +143,6 @@ pub fn run_batch<R: Ring, S: DmmScheme<R>>(
 ) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
     let ring = scheme.share_ring();
     let t_total = Instant::now();
-    let counters = coord.counters().clone();
-    counters.reset();
 
     let t0 = Instant::now();
     let shares = scheme.encode_batch(a, b)?;
@@ -143,8 +150,12 @@ pub fn run_batch<R: Ring, S: DmmScheme<R>>(
     let encode = t0.elapsed();
 
     let need = scheme.recovery_threshold();
-    let (collected, wait_for_r) = coord.submit_and_collect(payloads, need)?;
+    let handle = coord.submit(payloads, need)?;
+    let job_id = handle.job_id();
+    let counters = handle.counters().clone();
+    let (collected, wait_for_r) = handle.wait()?;
 
+    let (hits_before, misses_before) = scheme.plan_cache_stats();
     let t0 = Instant::now();
     let responses: Vec<Response<S::ShareRing>> = collected
         .iter()
@@ -152,8 +163,13 @@ pub fn run_batch<R: Ring, S: DmmScheme<R>>(
         .collect::<anyhow::Result<_>>()?;
     let c = scheme.decode_batch(&responses)?;
     let decode = t0.elapsed();
+    let (hits_after, misses_after) = scheme.plan_cache_stats();
 
-    let metrics = job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
+    let mut metrics =
+        job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
+    metrics.job_id = job_id;
+    metrics.plan_cache_hits = hits_after.saturating_sub(hits_before);
+    metrics.plan_cache_misses = misses_after.saturating_sub(misses_before);
     Ok((c, metrics))
 }
 
@@ -257,6 +273,27 @@ mod tests {
         let b = Matrix::random(&base, 4, 4, &mut rng);
         let (c, _) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
         assert_eq!(c, Matrix::matmul(&base, &a, &b));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn metrics_carry_job_id_and_plan_cache_delta() {
+        let base = Zq::z2e(64);
+        let scheme = Arc::new(EpRmfeI::new(base.clone(), 8, 2, 1, 2, 2).unwrap());
+        let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme)));
+        // exactly R = 4 survivors: the responding subset is {0,1,2,3} every
+        // job, so the second decode must hit the plan cache
+        let straggler = StragglerModel::fail_stop([4, 5, 6, 7]);
+        let mut coord = Coordinator::new(8, backend, straggler, 16);
+        let mut rng = Rng64::seeded(176);
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        let (c1, m1) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        let (c2, m2) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
+        assert_eq!(c1, c2, "warm decode must equal cold decode");
+        assert_eq!((m1.job_id, m2.job_id), (0, 1));
+        assert_eq!((m1.plan_cache_hits, m1.plan_cache_misses), (0, 1));
+        assert_eq!((m2.plan_cache_hits, m2.plan_cache_misses), (1, 0));
         coord.shutdown();
     }
 

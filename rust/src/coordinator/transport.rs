@@ -5,6 +5,15 @@
 //! exactly by counting the serialized payload bytes crossing each link.
 //! Every payload that would cross a network in a deployment crosses a
 //! counted channel here.
+//!
+//! Counters exist at two scopes since the multi-job coordinator: every
+//! in-flight job owns a [`ByteCounters`] (written by the dispatch path, the
+//! response router and the job's collector — see
+//! [`super::master`]), and the coordinator keeps one **aggregate**
+//! instance summing all jobs over its lifetime. Counters are monotone;
+//! "discarded" download is derived (`arrived − used`), so late responses
+//! counted by the router can never race the collector's used-bytes
+//! accounting into a negative.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -32,15 +41,18 @@ pub struct FromWorker {
     pub injected_delay: Duration,
 }
 
-/// Shared byte counters for one coordinator (all links).
+/// Shared, monotone byte counters for one scope (one job, or one
+/// coordinator lifetime). Cloning shares the underlying atomics.
 #[derive(Clone, Default)]
 pub struct ByteCounters {
     /// Total bytes master → workers.
-    pub upload: Arc<AtomicU64>,
-    /// Total bytes workers → master *that the master consumed for decoding*.
-    pub download_used: Arc<AtomicU64>,
-    /// Bytes from responses that arrived after the recovery threshold was met.
-    pub download_discarded: Arc<AtomicU64>,
+    upload: Arc<AtomicU64>,
+    /// Total response bytes that reached the master (router-side count,
+    /// whether or not the collector still wanted them).
+    download_arrived: Arc<AtomicU64>,
+    /// Bytes of responses the collector consumed for decoding (the first
+    /// `need` successful responses of the job).
+    download_used: Arc<AtomicU64>,
 }
 
 impl ByteCounters {
@@ -52,30 +64,30 @@ impl ByteCounters {
         self.upload.fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    pub fn add_download_used(&self, n: usize) {
-        self.download_used.fetch_add(n as u64, Ordering::Relaxed);
+    pub fn add_download_arrived(&self, n: usize) {
+        self.download_arrived.fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    pub fn add_download_discarded(&self, n: usize) {
-        self.download_discarded.fetch_add(n as u64, Ordering::Relaxed);
+    pub fn add_download_used(&self, n: usize) {
+        self.download_used.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     pub fn upload_total(&self) -> u64 {
         self.upload.load(Ordering::Relaxed)
     }
 
+    pub fn download_arrived_total(&self) -> u64 {
+        self.download_arrived.load(Ordering::Relaxed)
+    }
+
     pub fn download_used_total(&self) -> u64 {
         self.download_used.load(Ordering::Relaxed)
     }
 
+    /// Bytes that arrived after the job no longer needed them (beyond the
+    /// recovery threshold, or after the job's handle was dropped).
     pub fn download_discarded_total(&self) -> u64 {
-        self.download_discarded.load(Ordering::Relaxed)
-    }
-
-    pub fn reset(&self) {
-        self.upload.store(0, Ordering::Relaxed);
-        self.download_used.store(0, Ordering::Relaxed);
-        self.download_discarded.store(0, Ordering::Relaxed);
+        self.download_arrived_total().saturating_sub(self.download_used_total())
     }
 }
 
@@ -84,17 +96,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn counters_accumulate_and_reset() {
+    fn counters_accumulate() {
         let c = ByteCounters::new();
         c.add_upload(100);
         c.add_upload(20);
+        c.add_download_arrived(10);
         c.add_download_used(7);
-        c.add_download_discarded(3);
         assert_eq!(c.upload_total(), 120);
+        assert_eq!(c.download_arrived_total(), 10);
         assert_eq!(c.download_used_total(), 7);
         assert_eq!(c.download_discarded_total(), 3);
-        c.reset();
-        assert_eq!(c.upload_total(), 0);
     }
 
     #[test]
@@ -103,5 +114,14 @@ mod tests {
         let c2 = c.clone();
         c2.add_upload(42);
         assert_eq!(c.upload_total(), 42);
+    }
+
+    #[test]
+    fn discarded_never_underflows() {
+        // The collector may count a response as used before the router's
+        // arrived increment is observed; discarded saturates at 0.
+        let c = ByteCounters::new();
+        c.add_download_used(5);
+        assert_eq!(c.download_discarded_total(), 0);
     }
 }

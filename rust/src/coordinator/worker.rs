@@ -11,7 +11,7 @@ use super::transport::{FromWorker, ToWorker};
 use crate::util::rng::Rng64;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The worker-side compute backend: serialized share in, serialized response
 /// out. Implementations in [`crate::coordinator::runner`] (native) and
@@ -42,7 +42,19 @@ pub fn spawn_worker(
                     ToWorker::Job { job_id, payload } => {
                         let delay = straggler.sample(worker_id, &mut rng);
                         let Some(delay) = delay else {
-                            // fail-stop: silently drop the job
+                            // Fail-stop: drop the job. The master never sees
+                            // response *bytes* (`payload: None` is invisible
+                            // to collection, exactly like silence on a
+                            // network), but the empty report lets the
+                            // response router retire the job's table entry
+                            // once every worker has been heard from.
+                            let _ = tx.send(FromWorker {
+                                job_id,
+                                worker_id,
+                                payload: None,
+                                compute: Duration::ZERO,
+                                injected_delay: Duration::ZERO,
+                            });
                             continue;
                         };
                         if !delay.is_zero() {

@@ -6,7 +6,10 @@
 //!   16 workers over `Z_{2^64}`;
 //! * [`table1`] — Table 1: GCSA vs Batch-EP_RMFE (analytic rows for all κ +
 //!   a measured CSA-vs-Batch-EP_RMFE run at the `uvw = 1, κ = n` point);
-//! * [`rmfe35`] — the §V.C extension: 32 workers, `GR(2^64, 5)`, `(3,5)`-RMFE.
+//! * [`rmfe35`] — the §V.C extension: 32 workers, `GR(2^64, 5)`, `(3,5)`-RMFE;
+//! * [`serving`] — serving throughput: the pipelined multi-job coordinator
+//!   vs the sequential submit+wait baseline (jobs/s, decode-plan cache
+//!   hits) — the steady-state workload §I motivates.
 //!
 //! Every entry point prints a markdown table (the "rows/series the paper
 //! reports") and can emit JSON for plotting.
@@ -14,6 +17,7 @@
 pub mod figs;
 pub mod table1;
 pub mod rmfe35;
+pub mod serving;
 
 /// Default scaled-down sizes (CI-speed); `--full` switches to the paper's
 /// 2000–8000.

@@ -1,0 +1,331 @@
+//! Serving-throughput experiment: the pipelined multi-job coordinator vs
+//! the sequential submit-then-wait baseline, on the same scheme, worker
+//! pool shape and straggler model.
+//!
+//! This is the workload §I motivates coded computation with: a *stream* of
+//! multiplication requests served by an `R`-of-`N` pool. Sequentially, the
+//! master's encode/decode and the workers' compute strictly alternate —
+//! worker queues idle while the master interpolates. Pipelined, up to
+//! `inflight` jobs overlap: the master encodes job `k+1` and decodes job
+//! `k−1` while the workers chew job `k`, and the decode-plan cache
+//! ([`crate::codes::plan_cache`]) turns the recurring fast-`R` subset's
+//! interpolation setup into a lookup.
+//!
+//! Each pass uses a **fresh scheme instance** (cold plan cache) and a
+//! **fresh pool with the same seed** (identical straggler draws), so the
+//! comparison isolates pipelining itself; the reported cache counters are
+//! the pipelined pass's own. Every decoded product is verified against a
+//! locally computed `A_k·B_k`, which also certifies warm-cache decodes
+//! bit-identical to cold ones (the first decode of each subset is cold).
+
+use crate::codes::registry::{self, SchemeConfig};
+use crate::codes::DynScheme;
+use crate::coordinator::{Coordinator, JobHandle, NativeCompute, StragglerModel};
+use crate::ring::matrix::Matrix;
+use crate::ring::zq::Zq;
+use crate::util::bench::markdown_table;
+use crate::util::json::Json;
+use crate::util::rng::Rng64;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One serving run's shape.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Registry scheme name (`ep`, `ep-rmfe-1`, `ep-rmfe-2`,
+    /// `batch-ep-rmfe`, `csa`).
+    pub scheme: String,
+    pub n_workers: usize,
+    /// Square input size per job (divisible by the partition/split params).
+    pub size: usize,
+    /// Number of jobs in the request stream.
+    pub jobs: usize,
+    /// Max jobs in flight in the pipelined pass (≥ 1).
+    pub inflight: usize,
+    pub straggler: StragglerModel,
+    pub seed: u64,
+    /// Verify every decoded product against a local `A·B` (also certifies
+    /// warm-cache decodes identical to cold ones).
+    pub verify: bool,
+}
+
+/// Measured serving results.
+#[derive(Clone, Debug)]
+pub struct ServeRecord {
+    pub scheme: String,
+    pub n_workers: usize,
+    pub size: usize,
+    pub jobs: usize,
+    pub inflight: usize,
+    pub seq_elapsed_s: f64,
+    pub seq_jobs_per_s: f64,
+    pub pipe_elapsed_s: f64,
+    pub pipe_jobs_per_s: f64,
+    /// `pipe_jobs_per_s / seq_jobs_per_s`.
+    pub speedup: f64,
+    /// Decode-plan cache counters of the pipelined pass (cold at its start).
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    /// `true` iff every decoded product of both passes matched the local
+    /// reference (trivially `true` when verification was disabled).
+    pub verified: bool,
+}
+
+/// One request's pre-generated inputs (serialized for the byte facade) and
+/// reference products.
+struct Request {
+    a_bytes: Vec<Vec<u8>>,
+    b_bytes: Vec<Vec<u8>>,
+    expected: Vec<Matrix<u64>>,
+}
+
+fn make_requests(cfg: &ServeConfig, batch: usize) -> Vec<Request> {
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(cfg.seed ^ 0x5e21);
+    (0..cfg.jobs)
+        .map(|_| {
+            let a: Vec<Matrix<u64>> =
+                (0..batch).map(|_| Matrix::random(&base, cfg.size, cfg.size, &mut rng)).collect();
+            let b: Vec<Matrix<u64>> =
+                (0..batch).map(|_| Matrix::random(&base, cfg.size, cfg.size, &mut rng)).collect();
+            let expected = if cfg.verify {
+                a.iter().zip(&b).map(|(ak, bk)| Matrix::matmul(&base, ak, bk)).collect()
+            } else {
+                Vec::new()
+            };
+            Request {
+                a_bytes: a.iter().map(|m| m.to_bytes(&base)).collect(),
+                b_bytes: b.iter().map(|m| m.to_bytes(&base)).collect(),
+                expected,
+            }
+        })
+        .collect()
+}
+
+/// Decode one collected job and verify it against the request's reference.
+/// Returns `false` on any mismatch.
+fn finish_job(
+    scheme: &dyn DynScheme,
+    req: &Request,
+    handle: JobHandle,
+) -> anyhow::Result<bool> {
+    let (collected, _) = handle.wait()?;
+    let responses: Vec<(usize, &[u8])> =
+        collected.iter().map(|c| (c.worker_id, c.payload.as_slice())).collect();
+    let out = scheme.decode_bytes(&responses)?;
+    if req.expected.is_empty() {
+        return Ok(true);
+    }
+    let base = Zq::z2e(64);
+    anyhow::ensure!(out.len() == req.expected.len(), "decode returned a wrong batch size");
+    for (buf, want) in out.iter().zip(&req.expected) {
+        if &Matrix::from_bytes(&base, buf)? != want {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+/// Run the request stream strictly sequentially: submit, wait, decode, next.
+fn run_sequential(
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    requests: &[Request],
+) -> anyhow::Result<(f64, bool)> {
+    let need = scheme.recovery_threshold();
+    let mut ok = true;
+    let t0 = Instant::now();
+    for req in requests {
+        let payloads = scheme.encode_bytes(&req.a_bytes, &req.b_bytes)?;
+        let handle = coord.submit(payloads, need)?;
+        ok &= finish_job(scheme, req, handle)?;
+    }
+    Ok((t0.elapsed().as_secs_f64(), ok))
+}
+
+/// Run the request stream with up to `inflight` jobs overlapping: the
+/// master encodes/submits ahead while older jobs are still at the workers,
+/// and decodes the oldest one whenever the window is full.
+fn run_pipelined(
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    requests: &[Request],
+    inflight: usize,
+) -> anyhow::Result<(f64, bool)> {
+    let need = scheme.recovery_threshold();
+    let mut window: VecDeque<(usize, JobHandle)> = VecDeque::with_capacity(inflight);
+    let mut ok = true;
+    let t0 = Instant::now();
+    for (idx, req) in requests.iter().enumerate() {
+        if window.len() == inflight {
+            let (oldest, handle) = window.pop_front().expect("window is non-empty");
+            ok &= finish_job(scheme, &requests[oldest], handle)?;
+        }
+        let payloads = scheme.encode_bytes(&req.a_bytes, &req.b_bytes)?;
+        window.push_back((idx, coord.submit(payloads, need)?));
+    }
+    while let Some((idx, handle)) = window.pop_front() {
+        ok &= finish_job(scheme, &requests[idx], handle)?;
+    }
+    Ok((t0.elapsed().as_secs_f64(), ok))
+}
+
+/// Run the full comparison (sequential pass, then pipelined pass on fresh
+/// state) and return the measured record.
+pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
+    anyhow::ensure!(cfg.jobs >= 1 && cfg.inflight >= 1, "jobs and inflight must be >= 1");
+    let reg_cfg = SchemeConfig::for_workers(cfg.n_workers)?;
+    anyhow::ensure!(
+        cfg.size % (reg_cfg.u.max(reg_cfg.v) * reg_cfg.n_split * reg_cfg.w.max(1)) == 0,
+        "size {} must be divisible by the partition/split parameters",
+        cfg.size
+    );
+
+    // Probe instance only for the batch size; each pass gets a cold scheme.
+    let batch = registry::build(&cfg.scheme, &reg_cfg)?.batch_size();
+    let requests = make_requests(cfg, batch);
+
+    let seq_scheme = registry::build(&cfg.scheme, &reg_cfg)?;
+    let mut seq_coord = Coordinator::new(
+        cfg.n_workers,
+        Arc::new(NativeCompute::new(Arc::clone(&seq_scheme))),
+        cfg.straggler.clone(),
+        cfg.seed,
+    );
+    let (seq_elapsed_s, seq_ok) = run_sequential(seq_scheme.as_ref(), &mut seq_coord, &requests)?;
+    seq_coord.shutdown();
+
+    let pipe_scheme = registry::build(&cfg.scheme, &reg_cfg)?;
+    let mut pipe_coord = Coordinator::new(
+        cfg.n_workers,
+        Arc::new(NativeCompute::new(Arc::clone(&pipe_scheme))),
+        cfg.straggler.clone(),
+        cfg.seed,
+    );
+    let (pipe_elapsed_s, pipe_ok) =
+        run_pipelined(pipe_scheme.as_ref(), &mut pipe_coord, &requests, cfg.inflight)?;
+    pipe_coord.shutdown();
+
+    let (plan_cache_hits, plan_cache_misses) = pipe_scheme.plan_cache_stats();
+    let seq_jobs_per_s = cfg.jobs as f64 / seq_elapsed_s.max(1e-12);
+    let pipe_jobs_per_s = cfg.jobs as f64 / pipe_elapsed_s.max(1e-12);
+    Ok(ServeRecord {
+        scheme: cfg.scheme.clone(),
+        n_workers: cfg.n_workers,
+        size: cfg.size,
+        jobs: cfg.jobs,
+        inflight: cfg.inflight,
+        seq_elapsed_s,
+        seq_jobs_per_s,
+        pipe_elapsed_s,
+        pipe_jobs_per_s,
+        speedup: pipe_jobs_per_s / seq_jobs_per_s.max(1e-12),
+        plan_cache_hits,
+        plan_cache_misses,
+        verified: seq_ok && pipe_ok,
+    })
+}
+
+/// Markdown summary of one or more serving records.
+pub fn render(records: &[ServeRecord]) -> String {
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            vec![
+                r.scheme.clone(),
+                r.size.to_string(),
+                r.jobs.to_string(),
+                r.inflight.to_string(),
+                format!("{:.2}", r.seq_jobs_per_s),
+                format!("{:.2}", r.pipe_jobs_per_s),
+                format!("{:.2}x", r.speedup),
+                format!("{}/{}", r.plan_cache_hits, r.plan_cache_hits + r.plan_cache_misses),
+                r.verified.to_string(),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &[
+            "scheme",
+            "size",
+            "jobs",
+            "inflight",
+            "seq jobs/s",
+            "pipelined jobs/s",
+            "speedup",
+            "plan-cache hits",
+            "verified",
+        ],
+        &rows,
+    )
+}
+
+impl ServeRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scheme", self.scheme.as_str())
+            .set("n_workers", self.n_workers)
+            .set("size", self.size)
+            .set("jobs", self.jobs)
+            .set("inflight", self.inflight)
+            .set("seq_elapsed_s", self.seq_elapsed_s)
+            .set("seq_jobs_per_s", self.seq_jobs_per_s)
+            .set("pipe_elapsed_s", self.pipe_elapsed_s)
+            .set("pipe_jobs_per_s", self.pipe_jobs_per_s)
+            .set("speedup", self.speedup)
+            .set("plan_cache_hits", self.plan_cache_hits)
+            .set("plan_cache_misses", self.plan_cache_misses)
+            .set("verified", self.verified)
+    }
+}
+
+pub fn records_to_json(records: &[ServeRecord]) -> Json {
+    Json::Arr(records.iter().map(|r| r.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn small_cfg(scheme: &str) -> ServeConfig {
+        ServeConfig {
+            scheme: scheme.to_string(),
+            n_workers: 8,
+            size: 16,
+            jobs: 6,
+            inflight: 3,
+            straggler: StragglerModel::fixed_slow([0, 1], Duration::from_millis(10)),
+            seed: 77,
+            verify: true,
+        }
+    }
+
+    #[test]
+    fn serving_run_verifies_all_jobs() {
+        let rec = run(&small_cfg("ep-rmfe-1")).unwrap();
+        assert!(rec.verified, "every pipelined job must decode correctly");
+        assert_eq!(rec.jobs, 6);
+        assert!(rec.seq_jobs_per_s > 0.0 && rec.pipe_jobs_per_s > 0.0);
+        // 6 decodes over at most C(6,4)=15 subsets: hits are possible but
+        // not guaranteed; the counters must at least add up.
+        assert_eq!(rec.plan_cache_hits + rec.plan_cache_misses, 6);
+    }
+
+    #[test]
+    fn serving_handles_batch_schemes() {
+        let rec = run(&small_cfg("csa")).unwrap();
+        assert!(rec.verified);
+    }
+
+    #[test]
+    fn render_and_json_contain_throughput() {
+        let rec = run(&small_cfg("ep")).unwrap();
+        let md = render(std::slice::from_ref(&rec));
+        assert!(md.contains("pipelined jobs/s"));
+        let js = records_to_json(&[rec]).render();
+        assert!(js.contains("pipe_jobs_per_s"));
+        assert!(js.contains("plan_cache_hits"));
+    }
+}

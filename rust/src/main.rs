@@ -10,6 +10,8 @@
 //! gr-cdmm info
 //! gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 8 --size 256
 //!              [--straggler none|slow|exp|fail] [--backend native|xla] [--seed k]
+//! gr-cdmm serve --scheme ep-rmfe-1 --workers 8 --size 128 --jobs 16 --inflight 4
+//!              [--straggler none|slow|exp|fail] [--no-verify] [--seed k] [--out results]
 //! gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
 //!              [--sizes 128,256,...] [--full] [--reps k] [--out results]
 //! ```
@@ -17,7 +19,7 @@
 use gr_cdmm::codes::registry::{self, SchemeConfig};
 use gr_cdmm::coordinator::runner::{run_erased, NativeCompute};
 use gr_cdmm::coordinator::{Coordinator, JobMetrics, ShareCompute, StragglerModel};
-use gr_cdmm::experiments::{figs, rmfe35, table1, DEFAULT_SIZES, PAPER_SIZES};
+use gr_cdmm::experiments::{figs, rmfe35, serving, table1, DEFAULT_SIZES, PAPER_SIZES};
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::traits::Ring;
@@ -36,6 +38,7 @@ fn main() {
     let result = match cmd {
         "info" => cmd_info(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "experiments" => cmd_experiments(&args),
         _ => {
             print_help();
@@ -56,6 +59,8 @@ USAGE:
   gr-cdmm info
   gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 8|16|32 --size 256
                [--straggler none|slow|exp|fail] [--backend native|xla] [--seed K]
+  gr-cdmm serve --scheme NAME --workers 8|16|32 --size 128 --jobs 16 --inflight 4
+               [--straggler none|slow|exp|fail] [--no-verify] [--seed K] [--out DIR]
   gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
                [--sizes 128,256] [--full] [--reps K] [--out DIR]"
     );
@@ -158,6 +163,43 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     )?;
     report(&scheme.name(), &m, c.len() == 1 && c[0] == expected);
     coord.shutdown();
+    Ok(())
+}
+
+/// Serving throughput mode: drive `--jobs` requests through the pipelined
+/// coordinator with `--inflight` jobs overlapping, against the sequential
+/// submit+wait baseline on identical state.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = serving::ServeConfig {
+        scheme: args.get_or("scheme", "ep-rmfe-1").to_string(),
+        n_workers: args.get_usize("workers", 8),
+        size: args.get_usize("size", 128),
+        jobs: args.get_usize("jobs", 16),
+        inflight: args.get_usize("inflight", 4),
+        straggler: parse_straggler(args, args.get_usize("workers", 8)),
+        seed: args.get_u64("seed", 42),
+        verify: !args.flag("no-verify"),
+    };
+    let rec = serving::run(&cfg)?;
+    println!("# serving throughput — {} jobs, {} in flight\n", rec.jobs, rec.inflight);
+    println!("{}", serving::render(std::slice::from_ref(&rec)));
+    println!(
+        "pipelined {:.2} jobs/s vs sequential {:.2} jobs/s ({:.2}x); \
+         decode-plan cache {} hits / {} misses; verified: {}",
+        rec.pipe_jobs_per_s,
+        rec.seq_jobs_per_s,
+        rec.speedup,
+        rec.plan_cache_hits,
+        rec.plan_cache_misses,
+        rec.verified
+    );
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/serving_throughput.json");
+        std::fs::write(&path, rec.to_json().render())?;
+        println!("(written to {path})");
+    }
+    anyhow::ensure!(rec.verified, "decoded outputs diverged from the local reference");
     Ok(())
 }
 

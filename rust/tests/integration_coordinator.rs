@@ -113,31 +113,32 @@ fn download_counters_isolated_per_job() {
     let b = Matrix::random(&base, 8, 8, &mut rng);
     let (_, m1) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
     let (_, m2) = run_single(scheme.as_ref(), &mut coord, &a, &b).unwrap();
-    // runner resets counters per job: both jobs report the same volumes.
+    // every job owns its counters: both jobs report the same volumes, and
+    // distinct ids tie the metrics to their jobs.
     assert_eq!(m1.upload_bytes, m2.upload_bytes);
     assert_eq!(m1.download_bytes, m2.download_bytes);
+    assert_ne!(m1.job_id, m2.job_id);
     coord.shutdown();
 }
 
 #[test]
 fn malformed_payloads_fail_cleanly_and_pool_survives() {
-    // A truncated/corrupt share must surface as a job failure (timeout with
-    // zero usable responses), NOT a panic unwinding the worker threads —
-    // and the same pool must still serve a well-formed job afterwards.
+    // A truncated/corrupt share must surface as a job failure (every worker
+    // reports a compute error, so the collector fails fast with 0 usable
+    // responses), NOT a panic unwinding the worker threads — and the same
+    // pool must still serve a well-formed job afterwards.
     let base = Zq::z2e(64);
     let cfg = SchemeConfig::for_workers(8).unwrap();
     let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
     let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
     let mut coord = Coordinator::new(8, backend, StragglerModel::None, 412);
-    coord.timeout = Duration::from_millis(300);
 
     // Garbage payloads: every worker's deserialization errors out.
     let garbage: Vec<Vec<u8>> = (0..8).map(|i| vec![i as u8; 7]).collect();
-    let err = coord.submit_and_collect(garbage, 4).unwrap_err();
-    assert!(err.to_string().contains("timed out"), "{err}");
+    let err = coord.submit(garbage, 4).unwrap().wait().unwrap_err();
+    assert!(err.to_string().contains("cannot complete"), "{err}");
 
     // The pool is intact: a real job on the same coordinator succeeds.
-    coord.timeout = Duration::from_secs(120);
     let mut rng = Rng64::seeded(413);
     let a = Matrix::random(&base, 8, 8, &mut rng);
     let b = Matrix::random(&base, 8, 8, &mut rng);

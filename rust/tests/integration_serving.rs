@@ -1,0 +1,234 @@
+//! Serving-mode integration: multiple coded jobs in flight on one pool,
+//! under every straggler model — correctness of routing, per-job byte
+//! accounting against the schemes' analytic volumes, and attribution of
+//! late responses to the job that owns them.
+//!
+//! Jobs deliberately use **distinct input sizes**, so every job's share and
+//! response payloads have distinct byte lengths: if the router ever credited
+//! a response to the wrong job, the per-job counters could not all match
+//! their analytic `upload_bytes`/`download_bytes`.
+
+use gr_cdmm::codes::registry::{self, SchemeConfig};
+use gr_cdmm::codes::DynScheme;
+use gr_cdmm::coordinator::transport::ByteCounters;
+use gr_cdmm::coordinator::{Coordinator, JobHandle, NativeCompute, StragglerModel};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::rng::Rng64;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One submitted job the test tracks to completion.
+struct InFlight {
+    size: usize,
+    expected: Matrix<u64>,
+    counters: ByteCounters,
+    handle: JobHandle,
+}
+
+/// Submit one job per size, all overlapping, on a fresh ep-rmfe-1 pool.
+fn submit_stream(
+    scheme: &Arc<dyn DynScheme>,
+    coord: &mut Coordinator,
+    sizes: &[usize],
+    seed: u64,
+) -> Vec<InFlight> {
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(seed);
+    sizes
+        .iter()
+        .map(|&size| {
+            let a = Matrix::random(&base, size, size, &mut rng);
+            let b = Matrix::random(&base, size, size, &mut rng);
+            let expected = Matrix::matmul(&base, &a, &b);
+            let payloads = scheme
+                .encode_bytes(&[a.to_bytes(&base)], &[b.to_bytes(&base)])
+                .unwrap();
+            let handle = coord.submit(payloads, scheme.recovery_threshold()).unwrap();
+            let counters = handle.counters().clone();
+            InFlight { size, expected, counters, handle }
+        })
+        .collect()
+}
+
+/// Wait for a job, decode it, and return the contributing worker ids.
+fn collect_and_check(scheme: &Arc<dyn DynScheme>, job: InFlight) -> (Vec<usize>, ByteCounters) {
+    let base = Zq::z2e(64);
+    let InFlight { size, expected, counters, handle } = job;
+    let (collected, _) = handle.wait().unwrap();
+    let workers: Vec<usize> = collected.iter().map(|c| c.worker_id).collect();
+    let responses: Vec<(usize, &[u8])> =
+        collected.iter().map(|c| (c.worker_id, c.payload.as_slice())).collect();
+    let out = scheme.decode_bytes(&responses).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(
+        Matrix::from_bytes(&base, &out[0]).unwrap(),
+        expected,
+        "job of size {size} decoded wrongly"
+    );
+    // Per-job wire accounting matches the scheme's analytic model for THIS
+    // job's size — impossible if any byte was credited across jobs.
+    assert_eq!(
+        counters.upload_total() as usize,
+        scheme.upload_bytes(size, size, size),
+        "upload accounting for size {size}"
+    );
+    assert_eq!(
+        counters.download_used_total() as usize,
+        scheme.download_bytes(size, size, size),
+        "download accounting for size {size}"
+    );
+    (workers, counters)
+}
+
+#[test]
+fn overlapping_jobs_decode_correctly_under_every_straggler_model() {
+    let models: Vec<StragglerModel> = vec![
+        StragglerModel::None,
+        StragglerModel::fixed_slow([6, 7], Duration::from_millis(30)),
+        StragglerModel::Exponential { mean: Duration::from_millis(5) },
+        StragglerModel::fail_stop([0, 5]),
+    ];
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    for (k, straggler) in models.into_iter().enumerate() {
+        let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+        let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+        let mut coord = Coordinator::new(8, backend, straggler.clone(), 500 + k as u64);
+        // five jobs in flight at once, distinct sizes
+        let jobs = submit_stream(&scheme, &mut coord, &[8, 16, 24, 32, 40], 600 + k as u64);
+        // collect in REVERSE submission order: completion must not depend
+        // on collection order
+        for job in jobs.into_iter().rev() {
+            let (workers, _) = collect_and_check(&scheme, job);
+            if let StragglerModel::FailStop { failed } = &straggler {
+                for w in &workers {
+                    assert!(!failed.contains(w), "failed worker {w} cannot respond");
+                }
+            }
+        }
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn late_responses_attributed_to_their_own_job() {
+    // Two slow workers answer ~50ms after every job's threshold is met;
+    // their bytes must land in the right job's counters as discarded.
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::fixed_slow([6, 7], Duration::from_millis(50));
+    let mut coord = Coordinator::new(8, backend, straggler, 510);
+    let sizes = [8usize, 16, 24, 32];
+    let jobs = submit_stream(&scheme, &mut coord, &sizes, 610);
+    let per_job: Vec<(usize, ByteCounters)> = jobs
+        .into_iter()
+        .map(|job| {
+            let size = job.size;
+            let (_, counters) = collect_and_check(&scheme, job);
+            (size, counters)
+        })
+        .collect();
+    // Eventually all 8 workers respond to every job: arrived = 2× the used
+    // volume (R = 4 used, 4 more discarded), attributed per job even though
+    // the handles are long gone.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for (size, counters) in &per_job {
+        let used = scheme.download_bytes(*size, *size, *size) as u64;
+        while counters.download_arrived_total() < 2 * used {
+            assert!(
+                Instant::now() < deadline,
+                "size-{size} job never saw its late responses attributed"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(counters.download_arrived_total(), 2 * used);
+        assert_eq!(counters.download_used_total(), used);
+        assert_eq!(counters.download_discarded_total(), used);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn warm_plan_cache_serving_is_bit_identical_and_hits() {
+    // Pin the responding subset (exactly R survivors) and serve repeatedly:
+    // every decode after the first must hit the plan cache and produce the
+    // identical output for identical inputs.
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::fail_stop([1, 3, 5, 7]);
+    let mut coord = Coordinator::new(8, backend, straggler, 520);
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(620);
+    let a = Matrix::random(&base, 16, 16, &mut rng);
+    let b = Matrix::random(&base, 16, 16, &mut rng);
+    let payload_a = a.to_bytes(&base);
+    let payload_b = b.to_bytes(&base);
+    let mut outputs = Vec::new();
+    for _ in 0..3 {
+        let payloads = scheme.encode_bytes(&[payload_a.clone()], &[payload_b.clone()]).unwrap();
+        let handle = coord.submit(payloads, scheme.recovery_threshold()).unwrap();
+        let (collected, _) = handle.wait().unwrap();
+        let responses: Vec<(usize, &[u8])> =
+            collected.iter().map(|c| (c.worker_id, c.payload.as_slice())).collect();
+        outputs.push(scheme.decode_bytes(&responses).unwrap());
+    }
+    let (hits, misses) = scheme.plan_cache_stats();
+    assert_eq!((hits, misses), (2, 1), "subset {{0,2,4,6}} recurs every job");
+    assert_eq!(outputs[0], outputs[1], "warm decode must be bit-identical to cold");
+    assert_eq!(outputs[1], outputs[2]);
+    assert_eq!(
+        Matrix::from_bytes(&base, &outputs[0][0]).unwrap(),
+        Matrix::matmul(&base, &a, &b)
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn try_wait_multiplexes_many_jobs() {
+    // A polling serving loop over 6 jobs with exponential stragglers:
+    // completion order is whatever it is; every job must finish correctly.
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::Exponential { mean: Duration::from_millis(8) };
+    let mut coord = Coordinator::new(8, backend, straggler, 530);
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(630);
+    let mut pending = Vec::new();
+    for _ in 0..6 {
+        let a = Matrix::random(&base, 16, 16, &mut rng);
+        let b = Matrix::random(&base, 16, 16, &mut rng);
+        let expected = Matrix::matmul(&base, &a, &b);
+        let payloads = scheme
+            .encode_bytes(&[a.to_bytes(&base)], &[b.to_bytes(&base)])
+            .unwrap();
+        let handle = coord.submit(payloads, scheme.recovery_threshold()).unwrap();
+        pending.push((handle, expected));
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut done = 0usize;
+    while !pending.is_empty() {
+        assert!(Instant::now() < deadline, "polling loop stalled");
+        let mut still_pending = Vec::new();
+        for (mut handle, expected) in pending {
+            match handle.try_wait().unwrap() {
+                Some((collected, _)) => {
+                    let responses: Vec<(usize, &[u8])> = collected
+                        .iter()
+                        .map(|c| (c.worker_id, c.payload.as_slice()))
+                        .collect();
+                    let out = scheme.decode_bytes(&responses).unwrap();
+                    assert_eq!(Matrix::from_bytes(&base, &out[0]).unwrap(), expected);
+                    done += 1;
+                }
+                None => still_pending.push((handle, expected)),
+            }
+        }
+        pending = still_pending;
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(done, 6);
+    coord.shutdown();
+}

@@ -3,6 +3,7 @@
 //! proptest; seeds are deterministic so failures reproduce exactly).
 
 use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
+use gr_cdmm::codes::csa::CsaCode;
 use gr_cdmm::codes::ep::EpCode;
 use gr_cdmm::codes::scheme::{DmmScheme, Share};
 use gr_cdmm::ring::eval::{
@@ -302,4 +303,82 @@ fn prop_matrix_inverse() {
         let prod = Matrix::matmul(&ring, &m, &inv);
         assert_eq!(prod, Matrix::identity(&ring, n), "case {case}");
     }
+}
+
+/// Property: a warm decode-plan cache is **bit-identical** to a cold decode
+/// for random responding subsets in random arrival order. The warm scheme
+/// accumulates plans across cases; the cold scheme is rebuilt per case (its
+/// cache is empty, so its decode computes the plan from scratch).
+#[test]
+fn prop_cached_ep_decode_bit_identical_to_cold() {
+    let mut seeder = Rng64::seeded(8000);
+    let ring = Extension::new(Zq::z2e(64), 3);
+    let warm = EpCode::new(ring.clone(), 8, 2, 1, 2).unwrap();
+    let mut rng = seeder.fork();
+    let a = Matrix::random(&ring, 4, 2, &mut rng);
+    let b = Matrix::random(&ring, 2, 4, &mut rng);
+    let expected = PlaneMatrix::from_aos(&ring, &Matrix::matmul(&ring, &a, &b));
+    let shares = warm.encode(&a, &b).unwrap();
+    let all: Vec<_> = shares
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i, warm.worker_compute(s).unwrap()))
+        .collect();
+    let mut last_subset = Vec::new();
+    for case in 0..CASES {
+        let mut rng = seeder.fork();
+        let subset = rng.choose_k(8, 4); // already in random (arrival) order
+        let responses: Vec<_> = subset.iter().map(|&i| all[i].clone()).collect();
+        let cold = EpCode::new(ring.clone(), 8, 2, 1, 2).unwrap();
+        let c_cold = cold.decode_planes(&responses, 4, 4).unwrap();
+        let c_warm = warm.decode_planes(&responses, 4, 4).unwrap();
+        assert_eq!(c_cold, c_warm, "case {case}: warm and cold decodes diverged");
+        assert_eq!(c_warm, expected, "case {case}: wrong product");
+        assert_eq!(cold.plan_cache_stats(), (0, 1), "cold decode computes one plan");
+        last_subset = subset;
+    }
+    // Replaying any already-seen subset must be a guaranteed hit (the cache
+    // capacity exceeds the distinct subsets of this run) with the same bits.
+    let (hits_before, _) = warm.plan_cache_stats();
+    let responses: Vec<_> = last_subset.iter().map(|&i| all[i].clone()).collect();
+    assert_eq!(warm.decode_planes(&responses, 4, 4).unwrap(), expected);
+    let (hits_after, misses) = warm.plan_cache_stats();
+    assert!(hits_after > hits_before, "replayed subset must hit");
+    assert_eq!(hits_after + misses, CASES as u64 + 1);
+}
+
+/// Property: same warm-vs-cold bit-identity for the CSA batch decoder's
+/// cached Cauchy–Vandermonde inverse.
+#[test]
+fn prop_cached_csa_decode_bit_identical_to_cold() {
+    let mut seeder = Rng64::seeded(9000);
+    let ring = Extension::new(Zq::z2e(64), 4);
+    let n_batch = 2; // R = 3 of N = 6
+    let warm = CsaCode::new(ring.clone(), 6, n_batch).unwrap();
+    let mut rng = seeder.fork();
+    let a: Vec<_> = (0..n_batch).map(|_| Matrix::random(&ring, 3, 2, &mut rng)).collect();
+    let b: Vec<_> = (0..n_batch).map(|_| Matrix::random(&ring, 2, 3, &mut rng)).collect();
+    let shares = warm.encode_batch(&a, &b).unwrap();
+    let all: Vec<_> = shares
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i, warm.worker_compute(s).unwrap()))
+        .collect();
+    for case in 0..CASES {
+        let mut rng = seeder.fork();
+        let subset = rng.choose_k(6, 3);
+        let responses: Vec<_> = subset.iter().map(|&i| all[i].clone()).collect();
+        let cold = CsaCode::new(ring.clone(), 6, n_batch).unwrap();
+        let c_cold = cold.decode_batch(&responses).unwrap();
+        let c_warm = warm.decode_batch(&responses).unwrap();
+        assert_eq!(c_cold, c_warm, "case {case}: warm and cold decodes diverged");
+        for l in 0..n_batch {
+            assert_eq!(c_warm[l], Matrix::matmul(&ring, &a[l], &b[l]), "case {case} slot {l}");
+        }
+    }
+    // C(6,3) = 20 < CASES draws: the warm cache must have seen repeats.
+    let (hits, misses) = warm.plan_cache_stats();
+    assert_eq!(hits + misses, CASES as u64);
+    assert!(misses <= 20, "at most one miss per distinct subset");
+    assert!(hits >= CASES as u64 - 20, "repeats beyond 20 subsets must hit");
 }

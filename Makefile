@@ -18,6 +18,7 @@ bench:
 	cargo bench --bench fig4_worker8
 	cargo bench --bench fig5_worker16
 	cargo bench --bench table1_gcsa
+	cargo bench --bench encode_decode
 	cargo bench --bench serving_throughput
 
 # Serving throughput only: pipelined multi-job coordinator vs sequential
@@ -35,6 +36,7 @@ bench-json:
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench fig5_worker16
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench table1_gcsa
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench matmul_kernels
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench encode_decode
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench eval_crossover
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench serving_throughput
 

@@ -1,0 +1,93 @@
+//! Perf bench: master-side encode/decode throughput per registry scheme,
+//! through the erased byte facade (the exact path `main.rs`, the
+//! experiments harness and the serving loop take).
+//!
+//! For every registry scheme at the §V.A 8-worker config this measures
+//! encode (plan-driven sparse Horner fan-out over scoped threads) and the
+//! steady-state **warm** decode (plan-cache hit: zero interpolation setup,
+//! zero scalar-mul-table builds — asserted here via
+//! [`gr_cdmm::ring::plane::scalar_table_builds`]), and reports the cold
+//! decode (first subset, computes the plan) once for contrast.
+//!
+//! `cargo bench --bench encode_decode -- --smoke` is the seconds-fast CI
+//! subset. Results are written to `BENCH_encode_decode.json`.
+
+use gr_cdmm::codes::registry::{self, SchemeConfig, SCHEME_NAMES};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::plane::scalar_table_builds;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::bench::{black_box, throughput, write_bench_json, Bencher};
+use gr_cdmm::util::json::Json;
+use gr_cdmm::util::parallel;
+use gr_cdmm::util::rng::Rng64;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = if smoke { Bencher::new(0, 1) } else { Bencher::from_env() };
+    let size: usize = std::env::var("GR_CDMM_BENCH_SIZES")
+        .ok()
+        .and_then(|s| s.split(',').next().and_then(|x| x.trim().parse().ok()))
+        .unwrap_or(if smoke { 32 } else { 256 });
+    let threads = parallel::configured_threads();
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(77);
+    let mut report: Vec<Json> = Vec::new();
+
+    println!(
+        "# encode/decode throughput{} — N=8 config, {size}² inputs, {threads} threads",
+        if smoke { " (smoke)" } else { "" }
+    );
+    for (name, _) in SCHEME_NAMES {
+        let scheme = registry::build(name, &cfg).unwrap();
+        let n = scheme.batch_size();
+        let a: Vec<Vec<u8>> = (0..n)
+            .map(|_| Matrix::random(&base, size, size, &mut rng).to_bytes(&base))
+            .collect();
+        let bb: Vec<Vec<u8>> = (0..n)
+            .map(|_| Matrix::random(&base, size, size, &mut rng).to_bytes(&base))
+            .collect();
+        let enc = b.bench(&format!("{name} encode {size}²"), || {
+            black_box(scheme.encode_bytes(&a, &bb).unwrap());
+        });
+        let payloads = scheme.encode_bytes(&a, &bb).unwrap();
+        let rt = scheme.recovery_threshold();
+        let responses: Vec<(usize, Vec<u8>)> = (0..rt)
+            .map(|i| (i, scheme.compute_bytes(&payloads[i]).unwrap()))
+            .collect();
+        let borrowed: Vec<(usize, &[u8])> =
+            responses.iter().map(|(i, p)| (*i, p.as_slice())).collect();
+        // First decode of this subset is cold: it computes and caches the
+        // decode plan. Everything after is the steady state.
+        let (cold, _) = Bencher::time_once(|| black_box(scheme.decode_bytes(&borrowed).unwrap()));
+        // Zero-builds probe: the build counter is per-thread, so run one
+        // warm decode pinned to this thread — any table rebuild is visible.
+        let builds = parallel::with_threads(1, || {
+            let before = scalar_table_builds();
+            black_box(scheme.decode_bytes(&borrowed).unwrap());
+            scalar_table_builds() - before
+        });
+        assert_eq!(
+            builds, 0,
+            "{name}: steady-state decode must not rebuild scalar-mul tables"
+        );
+        // Timed warm decodes run with the configured thread count.
+        let dec = b.bench(&format!("{name} decode(warm) {size}²"), || {
+            black_box(scheme.decode_bytes(&borrowed).unwrap());
+        });
+        let upload = scheme.upload_bytes(size, size, size) as f64;
+        println!(
+            "    → encode {:.1} MB/s upload; cold decode {cold:?}; warm/cold ratio {:.3}; \
+             steady-state table builds 0 ✓",
+            throughput(upload, enc.median) / 1e6,
+            dec.median.as_secs_f64() / cold.as_secs_f64().max(1e-12)
+        );
+        report.push(enc.to_json());
+        report.push(dec.to_json());
+    }
+
+    match write_bench_json("encode_decode", &Json::Arr(report)) {
+        Ok(p) => println!("\n(json: {})", p.display()),
+        Err(e) => eprintln!("\n(json write failed: {e})"),
+    }
+}

@@ -1,24 +1,29 @@
 //! Perf bench: the worker-node hot path — u64 matmul and GR(2^64, m) matmul
-//! in both representations (AoS `Matrix<Vec<u64>>` baseline vs the
-//! plane-major `PlaneMatrix` the wire/worker path actually uses), plus
-//! (optionally) the AOT XLA artifact. This is the §Perf L3 measurement
-//! target in EXPERIMENTS.md.
+//! across three dimensions: the AoS `Matrix<Vec<u64>>` baseline, the
+//! sequential plane-major `PlaneMatrix` kernel, and the scoped-thread
+//! parallel plane kernel the wire/worker path actually uses (row-panel
+//! split over `GR_CDMM_THREADS`, default all cores), plus (optionally) the
+//! AOT XLA artifact. This is the §Perf L3 measurement target in
+//! EXPERIMENTS.md.
 //!
 //! The GR section covers every Table 1 / §V.A extension degree (m = 3 for
-//! N=8, m = 4 for N=16, m = 5 for N=32) and prints the plane/AoS median
-//! ratio — the plane-major kernel must be no slower at every config.
+//! N=8, m = 4 for N=16, m = 5 for N=32) and prints the plane/AoS and
+//! parallel/sequential median ratios — the plane-major kernel must be no
+//! slower than AoS at every config, and the parallel kernel must beat
+//! sequential for threads ≥ 2 at the Table-1 shapes.
 //!
 //! `cargo bench --bench matmul_kernels -- --smoke` runs a seconds-fast CI
 //! smoke subset. Results are also written to `BENCH_matmul_kernels.json`.
 
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
-use gr_cdmm::ring::plane::PlaneMatrix;
+use gr_cdmm::ring::plane::{slice_matmul_acc_threads, PlaneMatrix};
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::runtime::gr_backend::ext_matrix_to_planes;
 use gr_cdmm::runtime::XlaRuntime;
 use gr_cdmm::util::bench::{black_box, throughput, write_bench_json, Bencher};
 use gr_cdmm::util::json::Json;
+use gr_cdmm::util::parallel;
 use gr_cdmm::util::rng::Rng64;
 
 fn main() {
@@ -26,9 +31,13 @@ fn main() {
     let b = if smoke { Bencher::new(0, 1) } else { Bencher::from_env() };
     let mut rng = Rng64::seeded(48);
     let zq = Zq::z2e(64);
+    let threads = parallel::configured_threads();
     let mut report: Vec<Json> = Vec::new();
 
-    println!("# worker hot-path kernels{}\n## native u64 matmul", if smoke { " (smoke)" } else { "" });
+    println!(
+        "# worker hot-path kernels{} ({threads} threads)\n## native u64 matmul",
+        if smoke { " (smoke)" } else { "" }
+    );
     let u64_sizes: &[usize] = if smoke { &[64] } else { &[64, 128, 256, 512] };
     for &n in u64_sizes {
         let a = Matrix::random(&zq, n, n, &mut rng);
@@ -36,40 +45,61 @@ fn main() {
         let s = b.bench(&format!("u64 matmul {n}³"), || {
             black_box(Matrix::matmul(&zq, &a, &bm));
         });
+        let par = b.bench(&format!("u64 matmul {n}³ ({threads}T row panels)"), || {
+            let mut c = vec![0u64; n * n];
+            slice_matmul_acc_threads(&zq, &mut c, &a.data, &bm.data, n, n, n, threads);
+            black_box(c);
+        });
         let ops = 2.0 * (n as f64).powi(3);
-        println!("    → {:.2} Gop/s", throughput(ops, s.median) / 1e9);
+        println!(
+            "    → {:.2} Gop/s sequential; par/seq median ratio {:.3}",
+            throughput(ops, s.median) / 1e9,
+            par.median.as_secs_f64() / s.median.as_secs_f64().max(1e-12)
+        );
         report.push(s.to_json());
+        report.push(par.to_json());
     }
 
-    println!("\n## GR(2^64, m) worker share product: AoS baseline vs plane-major");
-    let n = if smoke { 32 } else { 128 };
+    println!("\n## GR(2^64, m) worker share product: AoS vs plane-major vs parallel");
+    let n = if smoke { 32 } else { 256 };
     for m in [3usize, 4, 5] {
         let ext = Extension::new(zq.clone(), m);
         let a = Matrix::random(&ext, n, n, &mut rng);
         let bm = Matrix::random(&ext, n, n, &mut rng);
         let pa = PlaneMatrix::from_aos(&ext, &a);
         let pb = PlaneMatrix::from_aos(&ext, &bm);
-        // sanity: the two kernels agree bit-for-bit
+        // sanity: all three kernels agree bit-for-bit
+        let seq_c = PlaneMatrix::matmul_threads(&ext, &pa, &pb, 1);
         assert_eq!(
-            PlaneMatrix::matmul(&ext, &pa, &pb),
+            seq_c,
             PlaneMatrix::from_aos(&ext, &Matrix::matmul(&ext, &a, &bm)),
             "plane-major kernel must match the AoS kernel (m={m})"
+        );
+        assert_eq!(
+            PlaneMatrix::matmul_threads(&ext, &pa, &pb, threads),
+            seq_c,
+            "parallel kernel must be bit-identical to sequential (m={m})"
         );
         let aos = b.bench(&format!("GR m={m} AoS matmul {n}³"), || {
             black_box(Matrix::matmul(&ext, &a, &bm));
         });
-        let plane = b.bench(&format!("GR m={m} plane-major matmul {n}³"), || {
-            black_box(PlaneMatrix::matmul(&ext, &pa, &pb));
+        let plane = b.bench(&format!("GR m={m} plane-major matmul {n}³ (1T)"), || {
+            black_box(PlaneMatrix::matmul_threads(&ext, &pa, &pb, 1));
+        });
+        let par = b.bench(&format!("GR m={m} plane-major matmul {n}³ ({threads}T)"), || {
+            black_box(PlaneMatrix::matmul_threads(&ext, &pa, &pb, threads));
         });
         // each ext mul ≈ m² u64 mul-adds + reduction
         let ops = 2.0 * (n as f64).powi(3) * (m * m) as f64;
         println!(
-            "    → plane-major {:.2} effective u64 Gop/s; plane/AoS median ratio {:.3}",
-            throughput(ops, plane.median) / 1e9,
-            plane.median.as_secs_f64() / aos.median.as_secs_f64().max(1e-12)
+            "    → parallel {:.2} effective u64 Gop/s; plane/AoS ratio {:.3}; par/seq ratio {:.3}",
+            throughput(ops, par.median) / 1e9,
+            plane.median.as_secs_f64() / aos.median.as_secs_f64().max(1e-12),
+            par.median.as_secs_f64() / plane.median.as_secs_f64().max(1e-12)
         );
         report.push(aos.to_json());
         report.push(plane.to_json());
+        report.push(par.to_json());
     }
 
     if !smoke {

@@ -35,9 +35,29 @@
 use super::plan_cache::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::matrix::Matrix;
-use crate::ring::plane::{PlaneMatrix, PlaneRing};
+use crate::ring::plane::{PlaneMatrix, PlaneRing, ScalarTable};
 use crate::ring::traits::Ring;
+use crate::util::parallel;
 use std::sync::Arc;
+
+/// The CSA encode plan: the scalar-mul tables of every encode coefficient,
+/// which are fixed at construction — `ν_l(α_i)` for the `A`-side and
+/// `(f_l − α_i)^{-1}` for the `B`-side, per (worker, batch slot).
+struct CsaEncodePlan<B: Ring> {
+    /// `nu[i][l]`: table of `ν_l(α_i) = Π_{k≠l}(f_k − α_i)`.
+    nu: Vec<Vec<ScalarTable<B>>>,
+    /// `binv[i][l]`: table of `(f_l − α_i)^{-1}`.
+    binv: Vec<Vec<ScalarTable<B>>>,
+}
+
+/// The cached CSA decode plan for one sorted responding subset: the weight
+/// tables of the first `n` rows of the Cauchy–Vandermonde inverse (the
+/// rows that carry `c_l·A_lB_l`; the remaining `n−1` unknowns are the
+/// cross-term polynomial and are never materialized).
+struct CsaDecodePlan<B: Ring> {
+    /// `tables[l][col]`: table of `inv[l][col]`, `l < n`, `col < R`.
+    tables: Vec<Vec<ScalarTable<B>>>,
+}
 
 /// CSA batch code over a ring `E` with at least `n + N` exceptional points.
 #[derive(Clone)]
@@ -49,11 +69,13 @@ pub struct CsaCode<E: PlaneRing> {
     poles: Vec<E::Elem>,
     /// Evaluation points `α_1..α_N`.
     alphas: Vec<E::Elem>,
-    /// `c_l = Π_{k≠l} (f_k − f_l)` (units).
-    c: Vec<E::Elem>,
-    /// Cauchy–Vandermonde inverse per sorted responding subset (rows of the
-    /// system in sorted-worker order); `Arc` so clones share a warm cache.
-    plan_cache: Arc<PlanCache<Matrix<E::Elem>>>,
+    /// Encode tables (fixed at construction); `Arc` so clones share them.
+    encode_plan: Arc<CsaEncodePlan<E::Base>>,
+    /// `c_l^{-1}` scale tables for the decode post-scale (also fixed).
+    c_inv_tables: Arc<Vec<ScalarTable<E::Base>>>,
+    /// Decode plan (weight tables of the Cauchy–Vandermonde inverse) per
+    /// sorted responding subset; `Arc` so clones share a warm cache.
+    plan_cache: Arc<PlanCache<CsaDecodePlan<E::Base>>>,
 }
 
 impl<E: PlaneRing> CsaCode<E> {
@@ -77,21 +99,52 @@ impl<E: PlaneRing> CsaCode<E> {
             }
             c.push(prod);
         }
+        // Encode plan: every encode scalar is a pure function of the fixed
+        // poles and evaluation points — build all tables once, here.
+        let mut nu_tables = Vec::with_capacity(alphas.len());
+        let mut binv_tables = Vec::with_capacity(alphas.len());
+        for alpha in &alphas {
+            let diffs: Vec<E::Elem> = poles.iter().map(|f| ring.sub(f, alpha)).collect();
+            let mut nu_row = Vec::with_capacity(n_batch);
+            let mut bi_row = Vec::with_capacity(n_batch);
+            for l in 0..n_batch {
+                let mut nu = ring.one();
+                for (k, d) in diffs.iter().enumerate() {
+                    if k != l {
+                        nu = ring.mul(&nu, d);
+                    }
+                }
+                nu_row.push(ScalarTable::build(&ring, &nu));
+                let inv = ring.inv(&diffs[l]).expect("poles and alphas are exceptional");
+                bi_row.push(ScalarTable::build(&ring, &inv));
+            }
+            nu_tables.push(nu_row);
+            binv_tables.push(bi_row);
+        }
+        let c_inv_tables = c
+            .iter()
+            .map(|cl| {
+                let cinv = ring.inv(cl).expect("c_l is a unit");
+                ScalarTable::build(&ring, &cinv)
+            })
+            .collect();
         Ok(CsaCode {
             ring,
             n_batch,
             n_workers,
             poles,
             alphas,
-            c,
+            encode_plan: Arc::new(CsaEncodePlan { nu: nu_tables, binv: binv_tables }),
+            c_inv_tables: Arc::new(c_inv_tables),
             plan_cache: Arc::new(PlanCache::new(DEFAULT_PLAN_CACHE_CAP)),
         })
     }
 
-    /// The decode-plan cache (Cauchy–Vandermonde inverses keyed by sorted
-    /// subset).
-    pub fn plan_cache(&self) -> &PlanCache<Matrix<E::Elem>> {
-        &self.plan_cache
+    /// Number of decode plans currently cached (plans are keyed by sorted
+    /// responding subset; cumulative hit/miss counters are on
+    /// [`DmmScheme::plan_cache_stats`]).
+    pub fn plan_cache_len(&self) -> usize {
+        self.plan_cache.len()
     }
 
     /// Recovery threshold `R = 2n − 1` — the single source of truth for the
@@ -136,26 +189,28 @@ impl<E: PlaneRing> CsaCode<E> {
                 "all batch members must share shapes"
             );
         }
-        let mut shares = Vec::with_capacity(self.n_workers);
-        for alpha in &self.alphas {
-            // ν_l(α) = Π_{k≠l}(f_k − α); (f_l − α)^{-1}
-            let diffs: Vec<E::Elem> = self.poles.iter().map(|f| ring.sub(f, alpha)).collect();
+        // Per-worker shares are independent: plan-driven (the ν_l(α_i) and
+        // (f_l − α_i)^{-1} tables were built at construction) and fanned
+        // out over scoped threads; total-work gate keeps tiny encodes
+        // sequential.
+        let base = ring.plane_base();
+        let plan = &self.encode_plan;
+        let m = ring.plane_count();
+        let per_share_ops = n * (t * r + r * s) * m * m;
+        let threads = parallel::effective_threads(
+            parallel::configured_threads(),
+            self.alphas.len(),
+            per_share_ops * self.alphas.len(),
+        );
+        Ok(parallel::par_map(&self.alphas, threads, |i, _alpha| {
             let mut sa = PlaneMatrix::zeros(ring, t, r);
             let mut sb = PlaneMatrix::zeros(ring, r, s);
             for l in 0..n {
-                let mut nu = ring.one();
-                for (k, d) in diffs.iter().enumerate() {
-                    if k != l {
-                        nu = ring.mul(&nu, d);
-                    }
-                }
-                sa.axpy(ring, &nu, &a[l]);
-                let inv = ring.inv(&diffs[l]).expect("exceptional points");
-                sb.axpy(ring, &inv, &b[l]);
+                sa.axpy_with_table(base, &plan.nu[i][l], &a[l]);
+                sb.axpy_with_table(base, &plan.binv[i][l], &b[l]);
             }
-            shares.push(Share { a: sa, b: sb });
-        }
-        Ok(shares)
+            Share { a: sa, b: sb }
+        }))
     }
 
     /// Decode to plane-major share-ring products.
@@ -184,13 +239,14 @@ impl<E: PlaneRing> CsaCode<E> {
             );
         }
         // Cauchy–Vandermonde system on the responding alphas (scalar-sized).
-        // The inverse is a pure function of the subset: cache it with rows
-        // in sorted-worker order, and read the column for each response by
-        // its rank in the sorted key (row-permuting the system permutes the
-        // columns of its unique inverse — same entries, exactly).
+        // The inverse is a pure function of the subset: cache its weight
+        // tables with rows in sorted-worker order, and read the column for
+        // each response by its rank in the sorted key (row-permuting the
+        // system permutes the columns of its unique inverse — same entries,
+        // exactly).
         let mut sorted: Vec<usize> = used.iter().map(|(i, _)| *i).collect();
         sorted.sort_unstable();
-        let inv = self.plan_cache.try_get_or_compute(&sorted, || {
+        let plan = self.plan_cache.try_get_or_compute(&sorted, || {
             let mut sys = Matrix::zeros(ring, rt, rt);
             for (row_i, &widx) in sorted.iter().enumerate() {
                 let row = self.system_row(&self.alphas[widx]);
@@ -198,22 +254,32 @@ impl<E: PlaneRing> CsaCode<E> {
                     sys.set(row_i, col, v);
                 }
             }
-            sys.invert(ring)
-                .ok_or_else(|| anyhow::anyhow!("Cauchy–Vandermonde system not invertible"))
+            let inv = sys
+                .invert(ring)
+                .ok_or_else(|| anyhow::anyhow!("Cauchy–Vandermonde system not invertible"))?;
+            let tables = (0..n)
+                .map(|l| (0..rt).map(|col| ScalarTable::build(ring, inv.at(l, col))).collect())
+                .collect();
+            Ok(CsaDecodePlan { tables })
         })?;
         // unknown_l = Σ_i inv[l][rank_i] · Z_i ; A_lB_l = c_l^{-1} · unknown_l
-        let mut out = Vec::with_capacity(n);
-        for l in 0..n {
+        // — the n batch slots are independent weighted sums, table-driven
+        // and parallel over slots (warm decodes build zero tables);
+        // total-work gate keeps tiny decodes sequential.
+        let base = ring.plane_base();
+        let slots: Vec<usize> = (0..n).collect();
+        let per_slot_ops = (rt + 1) * zr * zc * m * m;
+        let threads =
+            parallel::effective_threads(parallel::configured_threads(), n, per_slot_ops * n);
+        Ok(parallel::par_map(&slots, threads, |_pos, &l| {
             let mut acc = PlaneMatrix::zeros(ring, zr, zc);
             for (widx, z) in used {
                 let col = sorted.binary_search(widx).expect("idx is in its own sorted subset");
-                acc.axpy(ring, inv.at(l, col), z);
+                acc.axpy_with_table(base, &plan.tables[l][col], z);
             }
-            let cinv = ring.inv(&self.c[l]).expect("c_l is a unit");
-            acc.scale_assign(ring, &cinv);
-            out.push(acc);
-        }
-        Ok(out)
+            acc.scale_with_table(base, &self.c_inv_tables[l]);
+            acc
+        }))
     }
 }
 

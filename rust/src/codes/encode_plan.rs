@@ -1,0 +1,176 @@
+//! Precomputed encode/decode plans — the scalar-mul tables the hot loops
+//! borrow instead of rebuilding.
+//!
+//! Every encode/decode inner loop in [`crate::codes`] is a sequence of
+//! `acc += s·X` plane axpys whose scalars are **fixed at scheme
+//! construction** (powers of the evaluation points, CSA's `ν_l(α_i)` /
+//! `(f_l − α_i)^{-1}` factors) or fixed per responding subset (Lagrange
+//! weights, the Cauchy–Vandermonde inverse). Before this module each such
+//! axpy recomputed and heap-allocated the `m × m`
+//! [`PlaneRing::scalar_mul_table`](crate::ring::plane::PlaneRing::scalar_mul_table)
+//! on every call; now:
+//!
+//! * [`PowerTables`] — built once per scheme: for every evaluation point,
+//!   the [`ScalarTable`]s of its powers `α^0 .. α^max_exp` (the sparse
+//!   Horner encode fan-out and the secure-MatDot mask slots);
+//! * [`LagrangeDecodePlan`] — built once per responding subset and cached
+//!   in the subset-keyed [`super::plan_cache::PlanCache`]: the tables of
+//!   the Lagrange-basis coefficients the EP/secure-MatDot decoders take as
+//!   interpolation weights (warm decodes do zero table work).
+//!
+//! Plan-driven results are **bit-identical** to the on-the-spot path: the
+//! plans compute each scalar with the exact operation sequence the naive
+//! loops used (the same `acc ← acc·α` power recurrence, the same
+//! `basis[j].get(k)` weight lookup) and
+//! [`PlaneMatrix::axpy_with_table`](crate::ring::plane::PlaneMatrix::axpy_with_table)
+//! replays the same slice axpys. Steady-state table builds are counted by
+//! [`crate::ring::plane::scalar_table_builds`] and asserted zero in
+//! `integration_codes.rs` and the `encode_decode` bench.
+
+use crate::ring::eval::lagrange_basis_coeffs;
+use crate::ring::plane::{PlaneRing, ScalarTable};
+use crate::ring::traits::Ring;
+
+/// Per-evaluation-point power tables: `point(i)[k]` is the
+/// [`ScalarTable`] of `points[i]^k`, for `k = 0..=max_exp`.
+pub struct PowerTables<E: PlaneRing> {
+    tables: Vec<Vec<ScalarTable<E::Base>>>,
+}
+
+impl<E: PlaneRing> PowerTables<E> {
+    /// Build tables for `points[i]^k`, `k = 0..=max_exp`, with the same
+    /// `acc ← acc·α` recurrence the naive Horner evaluators used — so
+    /// plan-driven evaluation reproduces their scalars bit for bit.
+    pub fn build(ring: &E, points: &[E::Elem], max_exp: usize) -> Self {
+        let tables = points
+            .iter()
+            .map(|alpha| {
+                let mut per_point = Vec::with_capacity(max_exp + 1);
+                let mut acc = ring.one();
+                for _ in 0..=max_exp {
+                    per_point.push(ScalarTable::build(ring, &acc));
+                    acc = ring.mul(&acc, alpha);
+                }
+                per_point
+            })
+            .collect();
+        PowerTables { tables }
+    }
+
+    /// The tables of point `i`: index `k` holds `points[i]^k`.
+    pub fn point(&self, i: usize) -> &[ScalarTable<E::Base>] {
+        &self.tables[i]
+    }
+
+    /// Number of points.
+    pub fn n_points(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Tables per point (`max_exp + 1`).
+    pub fn powers_per_point(&self) -> usize {
+        self.tables.first().map_or(0, Vec::len)
+    }
+}
+
+/// A cached decode plan for Lagrange-interpolating decoders (EP family,
+/// secure MatDot): for each response rank `j` in the **sorted** responding
+/// subset and each wanted coefficient exponent, the [`ScalarTable`] of
+/// `basis[j][exp]` — the weight the decoder multiplies response `j` by.
+pub struct LagrangeDecodePlan<E: PlaneRing> {
+    /// `tables[j][ci]`: rank `j`, index `ci` into the `exps` the plan was
+    /// built with.
+    tables: Vec<Vec<ScalarTable<E::Base>>>,
+}
+
+impl<E: PlaneRing> LagrangeDecodePlan<E> {
+    /// Build the plan for the points of a sorted subset and the wanted
+    /// coefficient exponents. Missing coefficients (`exp ≥ basis degree`)
+    /// get the zero table, matching the naive `get(k).unwrap_or(zero)`.
+    pub fn build(ring: &E, pts: &[E::Elem], exps: &[usize]) -> Self {
+        let basis = lagrange_basis_coeffs(ring, pts);
+        let tables = basis
+            .iter()
+            .map(|bj| {
+                exps.iter()
+                    .map(|&k| {
+                        let w = bj.get(k).cloned().unwrap_or_else(|| ring.zero());
+                        ScalarTable::build(ring, &w)
+                    })
+                    .collect()
+            })
+            .collect();
+        LagrangeDecodePlan { tables }
+    }
+
+    /// Weight table for sorted-subset rank `j`, wanted-exponent index `ci`.
+    pub fn table(&self, j: usize, ci: usize) -> &ScalarTable<E::Base> {
+        &self.tables[j][ci]
+    }
+
+    /// Number of ranks (the subset size the plan was built for).
+    pub fn n_ranks(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::extension::Extension;
+    use crate::ring::plane::PlaneMatrix;
+    use crate::ring::zq::Zq;
+    use crate::util::rng::Rng64;
+
+    fn ext3() -> Extension<Zq> {
+        Extension::new(Zq::z2e(64), 3)
+    }
+
+    #[test]
+    fn power_tables_reproduce_naive_powers() {
+        let ext = ext3();
+        let pts = ext.exceptional_points(8).unwrap();
+        let plan = PowerTables::build(&ext, &pts, 5);
+        assert_eq!(plan.n_points(), 8);
+        assert_eq!(plan.powers_per_point(), 6);
+        let mut rng = Rng64::seeded(730);
+        let x = PlaneMatrix::random(&ext, 2, 3, &mut rng);
+        for (i, alpha) in pts.iter().enumerate() {
+            // the naive power recurrence of the old eval_sparse
+            let mut acc = ext.one();
+            for k in 0..=5usize {
+                let mut via_plan = PlaneMatrix::zeros(&ext, 2, 3);
+                via_plan.axpy_with_table(ext.base(), &plan.point(i)[k], &x);
+                let mut naive = PlaneMatrix::zeros(&ext, 2, 3);
+                naive.axpy(&ext, &acc, &x);
+                assert_eq!(via_plan, naive, "point {i} power {k}");
+                acc = ext.mul(&acc, alpha);
+            }
+        }
+    }
+
+    #[test]
+    fn lagrange_plan_matches_naive_weights() {
+        let ext = ext3();
+        let pts = ext.exceptional_points(5).unwrap();
+        let exps = [0usize, 2, 4, 7]; // 7 is beyond the basis degree → zero
+        let plan = LagrangeDecodePlan::build(&ext, &pts, &exps);
+        assert_eq!(plan.n_ranks(), 5);
+        let basis = lagrange_basis_coeffs(&ext, &pts);
+        let mut rng = Rng64::seeded(731);
+        let y = PlaneMatrix::random(&ext, 2, 2, &mut rng);
+        for j in 0..5 {
+            for (ci, &k) in exps.iter().enumerate() {
+                let w = basis[j].get(k).cloned().unwrap_or_else(|| ext.zero());
+                let mut naive = PlaneMatrix::zeros(&ext, 2, 2);
+                naive.axpy(&ext, &w, &y);
+                let mut planned = PlaneMatrix::zeros(&ext, 2, 2);
+                planned.axpy_with_table(ext.base(), plan.table(j, ci), &y);
+                assert_eq!(planned, naive, "rank {j} exp {k}");
+                if k == 7 {
+                    assert!(plan.table(j, ci).is_zero_scalar());
+                }
+            }
+        }
+    }
+}

@@ -15,30 +15,34 @@
 //!
 //! Implementation notes:
 //! * all share-ring matrices are **plane-major** ([`PlaneMatrix`]): encoding
-//!   evaluates the (sparse) matrix polynomials with precomputed scalar power
-//!   tables and plane-level axpy (`m²` base-ring slice axpys per term) —
-//!   `O(#blocks · block_size)` ring ops per worker with zero per-element
-//!   heap traffic;
-//! * decoding computes the Lagrange basis coefficients on the responding
-//!   subset once (`O(R²)` scalar ops) and then takes `uv` weighted sums of
-//!   the plane-major response matrices — the interpolation never
-//!   materializes `h` as a polynomial; the basis is memoised per sorted
-//!   subset in a [`PlanCache`], so a recurring fast-`R` subset pays the
-//!   `O(R²)` setup once per cache lifetime;
+//!   evaluates the (sparse) matrix polynomials with the per-point power
+//!   tables precomputed once at construction ([`PowerTables`] — the encode
+//!   plan) and plane-level table axpys (`m²` base-ring slice axpys per
+//!   term), fanning the `N` worker shares out over scoped threads
+//!   ([`crate::util::parallel`]) — zero per-element heap traffic and zero
+//!   steady-state `scalar_mul_table` builds;
+//! * decoding computes a [`LagrangeDecodePlan`] on the responding subset
+//!   once (`O(R²)` scalar ops + `uv·R` weight tables) and then takes `uv`
+//!   weighted sums of the plane-major response matrices (parallel over the
+//!   `uv` output blocks) — the interpolation never materializes `h` as a
+//!   polynomial; the plan is memoised per sorted subset in a [`PlanCache`],
+//!   so a recurring fast-`R` subset pays the setup once per cache lifetime
+//!   and warm decodes do zero table work;
 //! * [`PlainEp`] is the Lemma III.1 baseline for inputs in a *small* ring:
 //!   every input element is constant-embedded into the extension
 //!   `GR(p^e, d·m)` with `p^{dm} ≥ N` (plane 0 = input, higher planes zero),
 //!   paying the `O(m)` blowup in every metric — the overhead RMFE amortizes
 //!   away.
 
+use super::encode_plan::{LagrangeDecodePlan, PowerTables};
 use super::plan_cache::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use super::scheme::{DmmScheme, Partition, Response, Share};
-use crate::ring::eval::lagrange_basis_coeffs;
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
-use crate::ring::plane::{PlaneMatrix, PlaneRing};
+use crate::ring::plane::{PlaneMatrix, PlaneRing, ScalarTable};
 use crate::ring::traits::Ring;
+use crate::util::parallel;
 use std::sync::Arc;
 
 /// EP code operating directly over a ring `E` with at least `N` exceptional
@@ -49,9 +53,13 @@ pub struct EpCode<E: PlaneRing> {
     part: Partition,
     n_workers: usize,
     points: Vec<E::Elem>,
-    /// Lagrange basis coefficients per sorted responding subset (the decode
-    /// plan); `Arc` so clones of the code share one warm cache.
-    plan_cache: Arc<PlanCache<Vec<Vec<E::Elem>>>>,
+    /// The encode plan: per-point power tables for every exponent the
+    /// sparse `f`/`g` layouts use, built once at construction; `Arc` so
+    /// clones share it.
+    encode_plan: Arc<PowerTables<E>>,
+    /// Decode plans (Lagrange weight tables) per sorted responding subset;
+    /// `Arc` so clones of the code share one warm cache.
+    plan_cache: Arc<PlanCache<LagrangeDecodePlan<E>>>,
 }
 
 impl<E: PlaneRing> EpCode<E> {
@@ -63,11 +71,18 @@ impl<E: PlaneRing> EpCode<E> {
             "recovery threshold R = {r} exceeds worker count N = {n_workers}"
         );
         let points = ring.exceptional_points(n_workers)?;
+        let max_exp = Self::a_exponents_of(part)
+            .into_iter()
+            .chain(Self::b_exponents_of(part))
+            .max()
+            .expect("u, w, v >= 1");
+        let encode_plan = Arc::new(PowerTables::build(&ring, &points, max_exp));
         Ok(EpCode {
             ring,
             part,
             n_workers,
             points,
+            encode_plan,
             plan_cache: Arc::new(PlanCache::new(DEFAULT_PLAN_CACHE_CAP)),
         })
     }
@@ -80,24 +95,33 @@ impl<E: PlaneRing> EpCode<E> {
         &self.points
     }
 
-    /// The decode-plan cache (Lagrange bases keyed by sorted subset).
-    pub fn plan_cache(&self) -> &PlanCache<Vec<Vec<E::Elem>>> {
+    /// The decode-plan cache (Lagrange weight tables keyed by sorted
+    /// subset).
+    pub fn plan_cache(&self) -> &PlanCache<LagrangeDecodePlan<E>> {
         &self.plan_cache
     }
 
     /// The sparse exponent layout of `f` for `A`-blocks: block `(i, j)` (row
     /// `i` of `u`, col `j` of `w`) sits at exponent `i·w + j`.
-    fn a_exponents(&self) -> Vec<usize> {
-        let Partition { u, w, .. } = self.part;
+    fn a_exponents_of(part: Partition) -> Vec<usize> {
+        let Partition { u, w, .. } = part;
         (0..u).flat_map(|i| (0..w).map(move |j| i * w + j)).collect()
     }
 
+    fn a_exponents(&self) -> Vec<usize> {
+        Self::a_exponents_of(self.part)
+    }
+
     /// Exponents of `g` for `B`-blocks: block `(k, ℓ)` at `(w−1−k) + ℓ·uw`.
-    fn b_exponents(&self) -> Vec<usize> {
-        let Partition { u, w, v } = self.part;
+    fn b_exponents_of(part: Partition) -> Vec<usize> {
+        let Partition { u, w, v } = part;
         (0..w)
             .flat_map(|k| (0..v).map(move |l| (w - 1 - k) + l * u * w))
             .collect()
+    }
+
+    fn b_exponents(&self) -> Vec<usize> {
+        Self::b_exponents_of(self.part)
     }
 
     /// Exponents of `h = f·g` that carry the product blocks `C_{iℓ}`.
@@ -108,26 +132,19 @@ impl<E: PlaneRing> EpCode<E> {
             .collect()
     }
 
-    /// Evaluate a sparse matrix polynomial `Σ blocks[b] x^{exps[b]}` at `x`
-    /// — plane-level Horner via [`PlaneMatrix::axpy`].
-    fn eval_sparse(
-        &self,
+    /// Evaluate a sparse matrix polynomial `Σ blocks[b] x^{exps[b]}` with
+    /// the precomputed power tables of one point — plane-level Horner via
+    /// [`PlaneMatrix::axpy_with_table`], zero table builds.
+    fn eval_sparse_tables(
+        ring: &E,
         blocks: &[PlaneMatrix<E::Base>],
         exps: &[usize],
-        x: &E::Elem,
+        tables: &[ScalarTable<E::Base>],
     ) -> PlaneMatrix<E::Base> {
-        let ring = &self.ring;
-        let max_exp = *exps.iter().max().unwrap();
-        // power table x^0 .. x^max_exp
-        let mut powers = Vec::with_capacity(max_exp + 1);
-        let mut acc = ring.one();
-        for _ in 0..=max_exp {
-            powers.push(acc.clone());
-            acc = ring.mul(&acc, x);
-        }
+        let base = ring.plane_base();
         let mut out = PlaneMatrix::zeros(ring, blocks[0].rows, blocks[0].cols);
         for (blk, &e) in blocks.iter().zip(exps) {
-            out.axpy(ring, &powers[e], blk);
+            out.axpy_with_table(base, &tables[e], blk);
         }
         out
     }
@@ -151,14 +168,26 @@ impl<E: PlaneRing> EpCode<E> {
         let b_blocks = b.partition_grid(w, v);
         let a_exps = self.a_exponents();
         let b_exps = self.b_exponents();
-        Ok(self
-            .points
-            .iter()
-            .map(|alpha| Share {
-                a: self.eval_sparse(&a_blocks, &a_exps, alpha),
-                b: self.eval_sparse(&b_blocks, &b_exps, alpha),
-            })
-            .collect())
+        let ring = &self.ring;
+        let plan = &self.encode_plan;
+        // One share per worker, fanned out over scoped threads (the shares
+        // are independent); plan-driven, so no table builds in here. Gate on
+        // total work so tiny encodes stay sequential (spawn overhead floor).
+        let per_share_ops = (a_blocks[0].data.len() * a_blocks.len()
+            + b_blocks[0].data.len() * b_blocks.len())
+            * m;
+        let threads = parallel::effective_threads(
+            parallel::configured_threads(),
+            self.points.len(),
+            per_share_ops * self.points.len(),
+        );
+        Ok(parallel::par_map(&self.points, threads, |i, _alpha| {
+            let tables = plan.point(i);
+            Share {
+                a: Self::eval_sparse_tables(ring, &a_blocks, &a_exps, tables),
+                b: Self::eval_sparse_tables(ring, &b_blocks, &b_exps, tables),
+            }
+        }))
     }
 
     /// Decode a plane-major share-ring product from any `R` responses.
@@ -193,26 +222,36 @@ impl<E: PlaneRing> EpCode<E> {
             );
         }
         // Lagrange basis on the responding subset: L_j has R coefficients;
-        // coefficient k of h equals Σ_j L_j[k] · Y_j. The basis is a pure
-        // function of the subset, so it is cached keyed by the sorted worker
-        // ids; basis[rank of worker in the sorted key] belongs to that
-        // worker's point, whatever the arrival order.
+        // coefficient k of h equals Σ_j L_j[k] · Y_j. The basis (and the
+        // weight tables derived from it) is a pure function of the subset,
+        // so the whole decode plan is cached keyed by the sorted worker
+        // ids; rank of a worker in the sorted key indexes its tables,
+        // whatever the arrival order.
         let mut sorted: Vec<usize> = used.iter().map(|(i, _)| *i).collect();
         sorted.sort_unstable();
-        let basis = self.plan_cache.get_or_compute(&sorted, || {
+        let c_exps = self.c_exponents();
+        let plan = self.plan_cache.get_or_compute(&sorted, || {
             let pts: Vec<E::Elem> = sorted.iter().map(|&i| self.points[i].clone()).collect();
-            lagrange_basis_coeffs(ring, &pts)
+            LagrangeDecodePlan::build(ring, &pts, &c_exps)
         });
-        let mut c_blocks = Vec::with_capacity(u * v);
-        for &k in &self.c_exponents() {
+        // The uv output blocks are independent weighted sums — parallel
+        // over blocks, table-driven (warm decodes build zero tables). Gate
+        // on total work so tiny decodes stay sequential.
+        let base = ring.plane_base();
+        let per_block_ops = r_needed * bh * bw * m * m;
+        let threads = parallel::effective_threads(
+            parallel::configured_threads(),
+            c_exps.len(),
+            per_block_ops * c_exps.len(),
+        );
+        let c_blocks: Vec<PlaneMatrix<E::Base>> = parallel::par_map(&c_exps, threads, |ci, _k| {
             let mut acc = PlaneMatrix::zeros(ring, bh, bw);
             for (idx, y) in used {
                 let j = sorted.binary_search(idx).expect("idx is in its own sorted subset");
-                let weight = basis[j].get(k).cloned().unwrap_or_else(|| ring.zero());
-                acc.axpy(ring, &weight, y);
+                acc.axpy_with_table(base, plan.table(j, ci), y);
             }
-            c_blocks.push(acc);
-        }
+            acc
+        });
         Ok(PlaneMatrix::stitch_grid(&c_blocks, u, v))
     }
 

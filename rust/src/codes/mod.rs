@@ -23,9 +23,19 @@
 //! [`plan_cache::PlanCache`] — in steady-state serving the same fast-`R`
 //! subset recurs and the setup becomes a lookup (hits/misses surfaced via
 //! [`scheme::DmmScheme::plan_cache_stats`]).
+//!
+//! Encoding and decoding are **plan-driven** ([`encode_plan`]): the
+//! scalar-mul tables the plane axpys need are precomputed once per scheme
+//! (encode: per-point power tables) or once per responding subset (decode:
+//! weight tables, cached alongside the interpolation setup), so the
+//! steady-state hot loops build zero tables; the per-worker encode fan-out
+//! and the per-block decode accumulation run on scoped threads
+//! ([`crate::util::parallel`], `GR_CDMM_THREADS`), bit-identical to
+//! sequential.
 
 pub mod scheme;
 pub mod plan_cache;
+pub mod encode_plan;
 pub mod ep;
 pub mod polynomial;
 pub mod matdot;

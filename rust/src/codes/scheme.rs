@@ -119,7 +119,9 @@ pub trait DmmScheme<R: Ring>: Send + Sync {
 
     /// The worker-node computation: a share-ring matrix product on flat
     /// plane-major storage — the base ring's contiguous ikj kernel plane by
-    /// plane plus one modulus reduction, no per-element heap traffic.
+    /// plane plus one modulus reduction, no per-element heap traffic. Runs
+    /// on `GR_CDMM_THREADS` scoped threads (row-panel split, bit-identical
+    /// to sequential; see [`crate::util::parallel`]).
     fn worker_compute(
         &self,
         share: &Share<Self::ShareRing>,

@@ -29,12 +29,13 @@
 //! tests verify the invertibility of that mask matrix for random subsets
 //! (the simulatability witness) and the correctness/threshold claims.
 
+use super::encode_plan::{LagrangeDecodePlan, PowerTables};
 use super::plan_cache::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use super::scheme::{DmmScheme, Response, Share};
-use crate::ring::eval::lagrange_basis_coeffs;
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
+use crate::util::parallel;
 use crate::util::rng::Rng64;
 use std::sync::Mutex;
 
@@ -46,12 +47,15 @@ pub struct SecureMatDot<E: PlaneRing> {
     n_workers: usize,
     /// Unit evaluation points (exceptional set minus 0).
     points: Vec<E::Elem>,
+    /// The encode plan: per-point power tables `α^0 .. α^{w+T−1}` (data and
+    /// mask slots), built once at construction.
+    encode_plan: PowerTables<E>,
     /// Mask source (per-job fresh masks; Mutex for Send+Sync worker pools).
     rng: Mutex<Rng64>,
-    /// Lagrange basis per sorted responding subset. Caching is sound despite
-    /// the per-job masks: the plan depends only on the evaluation points,
-    /// never on mask material.
-    plan_cache: PlanCache<Vec<Vec<E::Elem>>>,
+    /// Lagrange weight tables per sorted responding subset. Caching is
+    /// sound despite the per-job masks: the plan depends only on the
+    /// evaluation points, never on mask material.
+    plan_cache: PlanCache<LagrangeDecodePlan<E>>,
 }
 
 impl<E: PlaneRing> SecureMatDot<E> {
@@ -74,12 +78,14 @@ impl<E: PlaneRing> SecureMatDot<E> {
         let mut pts = ring.exceptional_points(n_workers + 1)?;
         pts.remove(0);
         debug_assert!(pts.iter().all(|p| ring.is_unit(p)));
+        let encode_plan = PowerTables::build(&ring, &pts, w + t_priv - 1);
         Ok(SecureMatDot {
             ring,
             w,
             t_priv,
             n_workers,
             points: pts,
+            encode_plan,
             rng: Mutex::new(Rng64::seeded(seed)),
             plan_cache: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
         })
@@ -155,34 +161,36 @@ impl<E: PlaneRing> DmmScheme<E> for SecureMatDot<E> {
                 .collect();
             (r, s)
         };
-        Ok(self
-            .points
-            .iter()
-            .map(|alpha| {
-                // power table up to w+T−1
-                let mut powers = Vec::with_capacity(w + t_priv);
-                let mut acc = ring.one();
-                for _ in 0..w + t_priv {
-                    powers.push(acc.clone());
-                    acc = ring.mul(&acc, alpha);
-                }
-                let mut fa = PlaneMatrix::zeros(ring, a_blocks[0].rows, a_blocks[0].cols);
-                for (j, blk) in a_blocks.iter().enumerate() {
-                    fa.axpy(ring, &powers[j], blk);
-                }
-                for (z, blk) in r_masks.iter().enumerate() {
-                    fa.axpy(ring, &powers[w + z], blk); // x^{w+z} mask slot
-                }
-                let mut gb = PlaneMatrix::zeros(ring, b_blocks[0].rows, b_blocks[0].cols);
-                for (k, blk) in b_blocks.iter().enumerate() {
-                    gb.axpy(ring, &powers[w - 1 - k], blk);
-                }
-                for (z, blk) in s_masks.iter().enumerate() {
-                    gb.axpy(ring, &powers[w + z], blk); // x^{w+z} mask slot
-                }
-                Share { a: fa, b: gb }
-            })
-            .collect())
+        // Per-worker shares are independent: plan-driven (the power tables
+        // up to w+T−1 were built at construction) and fanned out over
+        // scoped threads; total-work gate keeps tiny encodes sequential.
+        let base = ring.plane_base();
+        let m = ring.plane_count();
+        let per_share_ops =
+            ((w + t_priv) * a_blocks[0].data.len() + (w + t_priv) * b_blocks[0].data.len()) * m;
+        let threads = parallel::effective_threads(
+            parallel::configured_threads(),
+            self.points.len(),
+            per_share_ops * self.points.len(),
+        );
+        Ok(parallel::par_map(&self.points, threads, |i, _alpha| {
+            let powers = self.encode_plan.point(i);
+            let mut fa = PlaneMatrix::zeros(ring, a_blocks[0].rows, a_blocks[0].cols);
+            for (j, blk) in a_blocks.iter().enumerate() {
+                fa.axpy_with_table(base, &powers[j], blk);
+            }
+            for (z, blk) in r_masks.iter().enumerate() {
+                fa.axpy_with_table(base, &powers[w + z], blk); // x^{w+z} mask slot
+            }
+            let mut gb = PlaneMatrix::zeros(ring, b_blocks[0].rows, b_blocks[0].cols);
+            for (k, blk) in b_blocks.iter().enumerate() {
+                gb.axpy_with_table(base, &powers[w - 1 - k], blk);
+            }
+            for (z, blk) in s_masks.iter().enumerate() {
+                gb.axpy_with_table(base, &powers[w + z], blk); // x^{w+z} mask slot
+            }
+            Share { a: fa, b: gb }
+        }))
     }
 
     fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
@@ -205,22 +213,22 @@ impl<E: PlaneRing> DmmScheme<E> for SecureMatDot<E> {
                 y.planes
             );
         }
-        // Lagrange basis per sorted subset, cached (see `codes::plan_cache`);
-        // basis[rank in sorted key] belongs to that worker's point.
+        // Lagrange weight tables per sorted subset, cached (see
+        // `codes::plan_cache`); rank in the sorted key indexes that
+        // worker's table. C = coefficient of x^{w−1} of the interpolated
+        // product polynomial, so the plan holds exactly that one exponent.
         let mut sorted: Vec<usize> = used.iter().map(|(i, _)| *i).collect();
         sorted.sort_unstable();
-        let basis = self.plan_cache.get_or_compute(&sorted, || {
+        let plan = self.plan_cache.get_or_compute(&sorted, || {
             let pts: Vec<E::Elem> =
                 sorted.iter().map(|&i| self.points[i].clone()).collect();
-            lagrange_basis_coeffs(ring, &pts)
+            LagrangeDecodePlan::build(ring, &pts, &[self.w - 1])
         });
-        // C = coefficient of x^{w−1} of the interpolated product polynomial.
-        let k = self.w - 1;
+        let base = ring.plane_base();
         let mut c = PlaneMatrix::zeros(ring, rows, cols);
         for (idx, y) in used {
             let j = sorted.binary_search(idx).expect("idx is in its own sorted subset");
-            let weight = basis[j].get(k).cloned().unwrap_or_else(|| ring.zero());
-            c.axpy(ring, &weight, y);
+            c.axpy_with_table(base, plan.table(j, 0), y);
         }
         Ok(vec![c.to_aos(ring)])
     }

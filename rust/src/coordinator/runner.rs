@@ -4,11 +4,13 @@
 //!
 //! There is exactly **one** native worker backend, [`NativeCompute`]: it
 //! holds an erased [`DynScheme`] and forwards the serialized share payload
-//! to [`DynScheme::compute_bytes`] — deserialize the plane-major share,
-//! multiply plane-by-plane with the base ring's contiguous kernel, serialize
-//! the plane-major response. Malformed payloads surface as job failures
-//! (the worker loop reports `Err` as a dropped response), never as a panic
-//! unwinding the pool thread.
+//! to [`DynScheme::compute_bytes`] — deserialize the plane-major share
+//! (one block copy for `Zq` planes), multiply plane-by-plane with the base
+//! ring's contiguous kernel on `GR_CDMM_THREADS` scoped threads (row-panel
+//! parallel, bit-identical to sequential — see [`crate::util::parallel`]),
+//! serialize the plane-major response. Malformed payloads surface as job
+//! failures (the worker loop reports `Err` as a dropped response), never as
+//! a panic unwinding the pool thread.
 
 use super::master::Coordinator;
 use super::metrics::JobMetrics;

@@ -242,14 +242,13 @@ impl<E: Clone + PartialEq> Matrix<E> {
         8 + 8 + self.data.len() * ring.elem_bytes()
     }
 
-    /// Serialize: `rows (u64 LE) | cols (u64 LE) | elements`.
+    /// Serialize: `rows (u64 LE) | cols (u64 LE) | elements`. Elements move
+    /// through [`Ring::write_slice`] — a single block copy for `Zq`.
     pub fn to_bytes<R: Ring<Elem = E>>(&self, ring: &R) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.byte_len(ring));
         out.extend_from_slice(&(self.rows as u64).to_le_bytes());
         out.extend_from_slice(&(self.cols as u64).to_le_bytes());
-        for x in &self.data {
-            ring.write_elem(x, &mut out);
-        }
+        ring.write_slice(&self.data, &mut out);
         out
     }
 
@@ -275,7 +274,9 @@ impl<E: Clone + PartialEq> Matrix<E> {
             "matrix payload is {} bytes, expected {need} for {rows}x{cols}",
             buf.len() - pos
         );
-        let data: Vec<E> = (0..count).map(|_| ring.read_elem(buf, &mut pos)).collect();
+        // Length validated above; the bulk read (one block copy for `Zq`)
+        // cannot run past the buffer.
+        let data: Vec<E> = ring.read_slice(buf, &mut pos, count);
         Ok(Matrix { rows, cols, data })
     }
 }

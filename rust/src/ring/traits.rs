@@ -137,6 +137,25 @@ pub trait Ring: Clone + Send + Sync + 'static {
     /// Read one element back; advances `pos`.
     fn read_elem(&self, buf: &[u8], pos: &mut usize) -> Self::Elem;
 
+    /// Append the canonical serialization of a whole slice. Default is the
+    /// per-element loop; rings with a fixed-width machine representation
+    /// override with a single block copy (`Zq`: one little-endian `u64`
+    /// block — the plane-major wire hot path).
+    fn write_slice(&self, xs: &[Self::Elem], out: &mut Vec<u8>) {
+        for x in xs {
+            self.write_elem(x, out);
+        }
+    }
+
+    /// Read `count` elements back, advancing `pos`. Same caller contract as
+    /// [`Ring::read_elem`]: the caller must have validated that
+    /// `count · elem_bytes()` bytes are available (the deserializers in
+    /// [`crate::ring::matrix`] / [`crate::ring::plane`] check lengths
+    /// against the header before reading).
+    fn read_slice(&self, buf: &[u8], pos: &mut usize, count: usize) -> Vec<Self::Elem> {
+        (0..count).map(|_| self.read_elem(buf, pos)).collect()
+    }
+
     /// Uniformly random element.
     fn random(&self, rng: &mut Rng64) -> Self::Elem;
 

@@ -228,6 +228,49 @@ impl Ring for Zq {
         u64::from_le_bytes(b)
     }
 
+    /// Bulk override: a `u64` slice serializes as one little-endian block
+    /// copy instead of a per-element loop (the plane-major wire hot path —
+    /// a whole share plane is a single `memcpy`).
+    fn write_slice(&self, xs: &[u64], out: &mut Vec<u8>) {
+        if cfg!(target_endian = "little") {
+            // SAFETY: reinterpreting an initialized `u64` slice as bytes is
+            // always valid (`u8` has alignment 1, no padding, length
+            // `len·8`); on little-endian targets the byte order is exactly
+            // the canonical `to_le_bytes` wire format.
+            let bytes =
+                unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), xs.len() * 8) };
+            out.extend_from_slice(bytes);
+        } else {
+            for x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    /// Bulk override of [`Ring::read_slice`]: one block copy on
+    /// little-endian targets. Caller has validated the length (see the
+    /// trait docs); the explicit slice below re-checks it regardless.
+    fn read_slice(&self, buf: &[u8], pos: &mut usize, count: usize) -> Vec<u64> {
+        let end = *pos + count * 8;
+        let src = &buf[*pos..end];
+        *pos = end;
+        if cfg!(target_endian = "little") {
+            let mut out = vec![0u64; count];
+            // SAFETY: `out` owns `count·8` writable bytes; `src` holds
+            // exactly `count·8` initialized bytes; the regions cannot
+            // overlap (fresh allocation). Little-endian byte order matches
+            // the wire format.
+            unsafe {
+                std::ptr::copy_nonoverlapping(src.as_ptr(), out.as_mut_ptr().cast::<u8>(), count * 8);
+            }
+            out
+        } else {
+            src.chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().expect("chunks of 8")))
+                .collect()
+        }
+    }
+
     fn random(&self, rng: &mut Rng64) -> u64 {
         match self.repr {
             Repr::Mask { mask } => rng.next_u64() & mask,
@@ -349,6 +392,26 @@ mod tests {
         for v in &vals {
             assert_eq!(r.read_elem(&buf, &mut pos), *v);
         }
+    }
+
+    #[test]
+    fn bulk_slice_io_matches_per_element() {
+        let r = Zq::z2e(64);
+        let vals = [0u64, 1, u64::MAX, 0x0123_4567_89AB_CDEF, 42];
+        let mut per_elem = Vec::new();
+        for v in &vals {
+            r.write_elem(v, &mut per_elem);
+        }
+        let mut bulk = vec![0xAAu8; 3]; // pre-existing bytes must be kept
+        r.write_slice(&vals, &mut bulk);
+        assert_eq!(&bulk[3..], per_elem.as_slice());
+        let mut pos = 3;
+        assert_eq!(r.read_slice(&bulk, &mut pos, vals.len()), vals);
+        assert_eq!(pos, bulk.len());
+        // zero-length slice is a no-op
+        let mut pos = 0;
+        assert_eq!(r.read_slice(&[], &mut pos, 0), Vec::<u64>::new());
+        assert_eq!(pos, 0);
     }
 
     #[test]

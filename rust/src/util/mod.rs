@@ -1,8 +1,10 @@
 //! Small self-contained utilities: PRNG, micro-bench harness, CLI parsing,
-//! JSON emission. The offline build environment ships no `rand`/`criterion`/
-//! `clap`/`serde` — these are deliberately minimal in-repo replacements.
+//! JSON emission, scoped-thread parallelism. The offline build environment
+//! ships no `rand`/`criterion`/`clap`/`serde`/`rayon` — these are
+//! deliberately minimal in-repo replacements.
 
 pub mod rng;
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod parallel;

@@ -1,0 +1,203 @@
+//! Dependency-free scoped-thread data parallelism for the compute hot path.
+//!
+//! The offline build ships no `rayon`; this module is the minimal in-repo
+//! replacement built on [`std::thread::scope`]. Three entry points cover
+//! every parallel kernel in the crate:
+//!
+//! * [`par_map`] — order-preserving indexed map over a slice, chunked into
+//!   one contiguous range per thread (the encode fan-out over `N` workers
+//!   and the decode weight accumulation over output blocks);
+//! * [`split_ranges`] / [`effective_threads`] — the partitioning policy the
+//!   row-panel matmul kernels in [`crate::ring::plane`] share;
+//! * [`configured_threads`] / [`with_threads`] — the thread-count source.
+//!
+//! **Thread count.** `GR_CDMM_THREADS` overrides, default =
+//! [`std::thread::available_parallelism`]; `GR_CDMM_THREADS=1` takes the
+//! exact sequential code path everywhere (no scope, no spawn — kernels
+//! branch to their pre-threading loop). [`with_threads`] installs a
+//! thread-local override for the duration of a closure, which is what the
+//! bit-identity property tests use to pin the count without touching the
+//! (process-global, racy) environment. The override is per-thread: threads
+//! spawned *inside* the closure read the environment again, so nesting
+//! stays bounded by the configured count per parallel region.
+//!
+//! **Determinism.** Parallel results are bit-identical to sequential by
+//! construction: every kernel partitions its *output* into disjoint chunks
+//! and runs the unchanged sequential loop per chunk, so each output element
+//! sees exactly the same ring-operation sequence at every thread count
+//! (property-tested across `GR_CDMM_THREADS ∈ {1, 2, 8}` and all ring
+//! towers in `property_tests.rs`).
+
+use std::cell::Cell;
+use std::ops::Range;
+
+/// Minimum number of base-ring multiply-adds before a kernel bothers to
+/// spawn: below this, scope/spawn overhead (~tens of µs) dominates. The
+/// Table-1 shapes (≥ 256², m ∈ {3,4,5}) sit orders of magnitude above it.
+pub const MIN_PAR_OPS: usize = 1 << 15;
+
+thread_local! {
+    static THREAD_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The machine's available parallelism (1 if unknown).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The worker-thread count parallel kernels use: the [`with_threads`]
+/// override if one is active on this thread, else `GR_CDMM_THREADS`, else
+/// [`available_threads`]. Always ≥ 1.
+pub fn configured_threads() -> usize {
+    if let Some(n) = THREAD_OVERRIDE.with(|c| c.get()) {
+        return n.max(1);
+    }
+    std::env::var("GR_CDMM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(available_threads)
+}
+
+/// Run `f` with [`configured_threads`] pinned to `n` on the current thread
+/// (restored afterwards, panic-safe). Used by tests to compare thread
+/// counts deterministically without mutating the process environment.
+pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREAD_OVERRIDE.with(|c| c.replace(Some(n.max(1))));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Partition `0..n` into at most `parts` contiguous ranges of near-equal
+/// length (the first `n % parts` ranges get one extra element). Returns
+/// fewer ranges when `n < parts`; never returns an empty range.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// The partitioning policy of the row-panel kernels: how many threads to
+/// actually use for `units` splittable work units totalling roughly `ops`
+/// base-ring multiply-adds. Returns 1 (→ exact sequential path) when the
+/// request is sequential, the work can't be split, or it is too small to
+/// amortize spawning.
+pub fn effective_threads(threads: usize, units: usize, ops: usize) -> usize {
+    if threads <= 1 || units < 2 || ops < MIN_PAR_OPS {
+        1
+    } else {
+        threads.min(units)
+    }
+}
+
+/// Order-preserving indexed map over a slice on up to `threads` scoped
+/// threads (one contiguous chunk each). `threads <= 1` (or fewer than two
+/// items) runs the plain sequential iterator — the exact same closure calls
+/// in the exact same order, so results are identical at every count.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n < 2 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let ranges = split_ranges(n, threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                s.spawn(move || {
+                    items[r.clone()]
+                        .iter()
+                        .enumerate()
+                        .map(|(off, x)| f(r.start + off, x))
+                        .collect::<Vec<U>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for h in handles {
+            out.extend(h.join().expect("parallel worker thread panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        for (n, parts) in [(0usize, 3usize), (1, 4), (7, 3), (8, 8), (9, 2), (100, 7)] {
+            let rs = split_ranges(n, parts);
+            let total: usize = rs.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n, "n={n} parts={parts}");
+            let mut pos = 0;
+            for r in &rs {
+                assert_eq!(r.start, pos);
+                assert!(!r.is_empty());
+                pos = r.end;
+            }
+            assert!(rs.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_indices() {
+        let items: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = items.iter().map(|&x| x * x).collect();
+        for t in [1usize, 2, 5, 16, 64] {
+            let got = par_map(&items, t, |i, &x| {
+                assert_eq!(i, x);
+                x * x
+            });
+            assert_eq!(got, expect, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let outer = configured_threads();
+        let inner = with_threads(3, configured_threads);
+        assert_eq!(inner, 3);
+        assert_eq!(configured_threads(), outer);
+        // nested overrides restore in LIFO order
+        with_threads(5, || {
+            assert_eq!(configured_threads(), 5);
+            with_threads(2, || assert_eq!(configured_threads(), 2));
+            assert_eq!(configured_threads(), 5);
+        });
+    }
+
+    #[test]
+    fn effective_threads_policy() {
+        assert_eq!(effective_threads(1, 100, usize::MAX), 1);
+        assert_eq!(effective_threads(8, 1, usize::MAX), 1);
+        assert_eq!(effective_threads(8, 100, 10), 1, "tiny work stays sequential");
+        assert_eq!(effective_threads(8, 100, MIN_PAR_OPS), 8);
+        assert_eq!(effective_threads(8, 3, MIN_PAR_OPS), 3, "clamped to units");
+    }
+}

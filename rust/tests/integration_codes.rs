@@ -9,12 +9,16 @@ use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
 use gr_cdmm::codes::ep_rmfe_ii::EpRmfeII;
 use gr_cdmm::codes::matdot::MatDotCode;
 use gr_cdmm::codes::polynomial::PolynomialCode;
-use gr_cdmm::codes::scheme::DmmScheme;
+use gr_cdmm::codes::registry::{self, SchemeConfig, SCHEME_NAMES};
+use gr_cdmm::codes::scheme::{DmmScheme, DynScheme};
+use gr_cdmm::codes::secure_matdot::SecureMatDot;
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::galois::GaloisRing;
 use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::plane::scalar_table_builds;
 use gr_cdmm::ring::traits::Ring;
 use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::parallel::with_threads;
 use gr_cdmm::util::rng::Rng64;
 
 /// Generic single-scheme roundtrip with a random responder subset.
@@ -131,6 +135,109 @@ fn csa_random_subsets() {
             assert_eq!(c[k], Matrix::matmul(&ext, &a[k], &b[k]), "trial {trial}");
         }
     }
+}
+
+/// One full job through the byte facade on the fixed fast subset
+/// `{0..R−1}`: returns everything that crosses the wire, for equality
+/// comparison across thread counts.
+fn byte_job(
+    scheme: &dyn DynScheme,
+    a: &[Vec<u8>],
+    b: &[Vec<u8>],
+) -> (Vec<Vec<u8>>, Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let payloads = scheme.encode_bytes(a, b).unwrap();
+    let rt = scheme.recovery_threshold();
+    let responses: Vec<Vec<u8>> =
+        (0..rt).map(|i| scheme.compute_bytes(&payloads[i]).unwrap()).collect();
+    let borrowed: Vec<(usize, &[u8])> =
+        responses.iter().enumerate().map(|(i, p)| (i, p.as_slice())).collect();
+    let out = scheme.decode_bytes(&borrowed).unwrap();
+    (payloads, responses, out)
+}
+
+/// Every registered scheme, end to end through the byte facade, must be
+/// **bit-identical at every thread count** — share payloads, worker
+/// responses and decoded outputs — and correct against the local product.
+#[test]
+fn registry_schemes_thread_count_invariant_end_to_end() {
+    let base = Zq::z2e(64);
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    for (name, _) in SCHEME_NAMES {
+        let scheme = registry::build(name, &cfg).unwrap();
+        let n = scheme.batch_size();
+        // 32² inputs sit above the parallel work floors (MIN_PAR_OPS), so
+        // the threaded encode/decode fan-outs genuinely engage at t >= 2.
+        let mut rng = Rng64::seeded(900);
+        let a: Vec<Matrix<u64>> =
+            (0..n).map(|_| Matrix::random(&base, 32, 32, &mut rng)).collect();
+        let b: Vec<Matrix<u64>> =
+            (0..n).map(|_| Matrix::random(&base, 32, 32, &mut rng)).collect();
+        let ab: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(&base)).collect();
+        let bb: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(&base)).collect();
+        let reference = with_threads(1, || byte_job(scheme.as_ref(), &ab, &bb));
+        for t in [2usize, 8] {
+            let got = with_threads(t, || byte_job(scheme.as_ref(), &ab, &bb));
+            assert_eq!(got, reference, "{name} at {t} threads diverged from sequential");
+        }
+        for (k, buf) in reference.2.iter().enumerate() {
+            let c = Matrix::from_bytes(&base, buf).unwrap();
+            assert_eq!(c, Matrix::matmul(&base, &a[k], &b[k]), "{name} slot {k}");
+        }
+    }
+}
+
+/// The acceptance probe for the encode/decode plans: after one cold job
+/// (which may build tables — scheme construction and the first decode plan
+/// for a subset do), further jobs on the same responding subset build
+/// **zero** scalar-mul tables anywhere in encode, worker compute or
+/// decode. Run single-threaded so the per-thread build counter sees every
+/// build.
+#[test]
+fn steady_state_jobs_build_zero_scalar_tables() {
+    let base = Zq::z2e(64);
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    with_threads(1, || {
+        for (name, _) in SCHEME_NAMES {
+            let scheme = registry::build(name, &cfg).unwrap();
+            let n = scheme.batch_size();
+            let mut rng = Rng64::seeded(910);
+            let job = |rng: &mut Rng64| {
+                let a: Vec<Vec<u8>> = (0..n)
+                    .map(|_| Matrix::random(&base, 8, 8, rng).to_bytes(&base))
+                    .collect();
+                let b: Vec<Vec<u8>> = (0..n)
+                    .map(|_| Matrix::random(&base, 8, 8, rng).to_bytes(&base))
+                    .collect();
+                byte_job(scheme.as_ref(), &a, &b)
+            };
+            job(&mut rng); // cold: warms the {0..R−1} decode plan
+            let before = scalar_table_builds();
+            job(&mut rng);
+            job(&mut rng);
+            assert_eq!(
+                scalar_table_builds(),
+                before,
+                "{name}: steady-state encode/compute/decode must build no scalar-mul tables"
+            );
+        }
+        // the typed secure-MatDot path too (not in the registry)
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let code = SecureMatDot::new(ring.clone(), 5, 1, 1, 911).unwrap();
+        let mut rng = Rng64::seeded(912);
+        let job = |rng: &mut Rng64| {
+            let a = Matrix::random(&ring, 4, 4, rng);
+            let b = Matrix::random(&ring, 4, 4, rng);
+            let shares = code.encode(&a, &b).unwrap();
+            let responses: Vec<_> = (0..code.recovery_threshold())
+                .map(|i| (i, code.worker_compute(&shares[i]).unwrap()))
+                .collect();
+            assert_eq!(code.decode(&responses).unwrap(), Matrix::matmul(&ring, &a, &b));
+        };
+        job(&mut rng);
+        let before = scalar_table_builds();
+        job(&mut rng);
+        assert_eq!(scalar_table_builds(), before, "secure-matdot steady state");
+    });
 }
 
 #[test]

@@ -12,11 +12,14 @@ use gr_cdmm::ring::eval::{
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::galois::GaloisRing;
 use gr_cdmm::ring::matrix::Matrix;
-use gr_cdmm::ring::plane::{PlaneMatrix, PlaneRing};
+use gr_cdmm::ring::plane::{
+    slice_matmul_acc, slice_matmul_acc_threads, PlaneMatrix, PlaneRing, ScalarTable,
+};
 use gr_cdmm::ring::poly;
 use gr_cdmm::ring::traits::{is_exceptional_sequence, Ring};
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::rmfe::{PolyRmfe, RmfeScheme};
+use gr_cdmm::util::parallel::with_threads;
 use gr_cdmm::util::rng::Rng64;
 
 const CASES: usize = 40;
@@ -275,6 +278,99 @@ fn prop_plane_matmul_equals_aos() {
         &PlaneMatrix::from_aos(&ext, &b),
     );
     assert_eq!(pc.to_aos(&ext), Matrix::matmul(&ext, &a, &b));
+}
+
+/// Property: the scoped-thread plane matmul is **bit-identical** to the
+/// exact sequential kernel across thread counts, for every ring tower the
+/// schemes use (`Zq`, `GaloisRing`, `Extension<Zq>` at the Table-1 degrees,
+/// `Extension<GaloisRing>`). Sizes sit above `MIN_PAR_OPS` so the parallel
+/// path genuinely engages.
+#[test]
+fn prop_parallel_matmul_bit_identical_across_threads() {
+    fn check<E: PlaneRing>(ring: &E, rows: usize, inner: usize, cols: usize, seed: u64) {
+        let mut rng = Rng64::seeded(seed);
+        let a = PlaneMatrix::random(ring, rows, inner, &mut rng);
+        let b = PlaneMatrix::random(ring, inner, cols, &mut rng);
+        let seq = PlaneMatrix::matmul_threads(ring, &a, &b, 1);
+        for t in [2usize, 3, 8] {
+            let par = PlaneMatrix::matmul_threads(ring, &a, &b, t);
+            assert_eq!(par, seq, "{} threads={t}", ring.name());
+        }
+        // the env/override-driven default entry point agrees too
+        for t in [1usize, 2, 8] {
+            assert_eq!(
+                with_threads(t, || PlaneMatrix::matmul(ring, &a, &b)),
+                seq,
+                "{} with_threads({t})",
+                ring.name()
+            );
+        }
+    }
+    check(&Zq::z2e(64), 64, 40, 40, 11000);
+    check(&GaloisRing::new(2, 16, 2), 40, 24, 36, 11001);
+    check(&Extension::new(Zq::z2e(64), 3), 24, 20, 24, 11002);
+    check(&Extension::new(Zq::z2e(64), 4), 20, 16, 20, 11003);
+    check(&Extension::new(Zq::z2e(64), 5), 16, 12, 16, 11004);
+    check(&Extension::new(GaloisRing::new(2, 16, 2), 2), 24, 18, 24, 11005);
+}
+
+/// Property: the row-panel-parallel flat slice kernel equals the sequential
+/// one for awkward (non-divisible) shapes and thread counts beyond the row
+/// count.
+#[test]
+fn prop_parallel_slice_matmul_bit_identical() {
+    let zq = Zq::z2e(64);
+    let mut seeder = Rng64::seeded(11010);
+    for case in 0..6 {
+        let mut rng = seeder.fork();
+        let (ar, ac, bc) = (40 + 7 * case, 29 + case, 31 + 3 * case);
+        let a: Vec<u64> = (0..ar * ac).map(|_| zq.random(&mut rng)).collect();
+        let b: Vec<u64> = (0..ac * bc).map(|_| zq.random(&mut rng)).collect();
+        let mut seq = vec![0u64; ar * bc];
+        slice_matmul_acc(&zq, &mut seq, &a, &b, ar, ac, bc);
+        for t in [2usize, 3, 8, 128] {
+            let mut par = vec![0u64; ar * bc];
+            slice_matmul_acc_threads(&zq, &mut par, &a, &b, ar, ac, bc, t);
+            assert_eq!(par, seq, "case {case} threads={t}");
+        }
+    }
+}
+
+/// Property: the table-driven axpy/scale (the plan currency) is
+/// bit-identical to the build-on-the-spot path across ring towers,
+/// including the zero scalar.
+#[test]
+fn prop_table_driven_axpy_scale_bit_identical() {
+    fn check<E: PlaneRing>(ring: &E, seed: u64) {
+        let base = ring.plane_base();
+        let mut rng = Rng64::seeded(seed);
+        for case in 0..8 {
+            let rows = 1 + rng.below_usize(5);
+            let cols = 1 + rng.below_usize(5);
+            let acc0 = PlaneMatrix::random(ring, rows, cols, &mut rng);
+            let x = PlaneMatrix::random(ring, rows, cols, &mut rng);
+            let s = if case == 0 { ring.zero() } else { ring.random(&mut rng) };
+            let t = ScalarTable::build(ring, &s);
+            let mut a1 = acc0.clone();
+            a1.axpy(ring, &s, &x);
+            let mut a2 = acc0.clone();
+            a2.axpy_with_table(base, &t, &x);
+            assert_eq!(a1, a2, "{} case {case} axpy", ring.name());
+            let mut s1 = x.clone();
+            s1.scale_assign(ring, &s);
+            let mut s2 = x.clone();
+            s2.scale_with_table(base, &t);
+            assert_eq!(s1, s2, "{} case {case} scale", ring.name());
+            // semantics: scale really is elementwise ring multiplication
+            let expect = x.to_aos(ring).map(|e| ring.mul(&s, e));
+            assert_eq!(s2.to_aos(ring), expect, "{} case {case} scale semantics", ring.name());
+        }
+    }
+    check(&Zq::z2e(64), 12000);
+    check(&GaloisRing::new(2, 16, 2), 12001);
+    check(&Extension::new(Zq::z2e(64), 3), 12002);
+    check(&Extension::new(Zq::z2e(64), 5), 12003);
+    check(&Extension::new(GaloisRing::new(2, 16, 2), 2), 12004);
 }
 
 /// Property: Gauss–Jordan inverse really inverts random unit-determinant

@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench bench-json bench-serving artifacts clean
+.PHONY: build test bench bench-json bench-serving serve-tcp-demo artifacts clean
 
 build:
 	cargo build --release
@@ -22,9 +22,27 @@ bench:
 	cargo bench --bench serving_throughput
 
 # Serving throughput only: pipelined multi-job coordinator vs sequential
-# baseline; writes BENCH_serving_throughput.json.
+# baseline, on both transports (channel + tcp-loopback); writes
+# BENCH_serving_throughput.json.
 bench-serving:
 	cargo bench --bench serving_throughput
+
+# Multi-process demo: 4 `gr-cdmm worker` daemons on loopback ports, one
+# pipelined serve batch over --connect (decoded products are verified
+# against a local matmul). Each daemon exits after the serve's two passes
+# (--conns 2), so the recipe reaps them with `wait`.
+serve-tcp-demo: build
+	@set -e; \
+	trap 'kill $$(jobs -p) 2>/dev/null || true' EXIT; \
+	for port in 7851 7852 7853 7854; do \
+	  ./target/release/gr-cdmm worker --listen 127.0.0.1:$$port \
+	    --scheme ep-rmfe-1 --workers 4 --conns 2 & \
+	done; \
+	./target/release/gr-cdmm serve --scheme ep-rmfe-1 --workers 4 --size 64 \
+	  --jobs 8 --inflight 4 \
+	  --connect 127.0.0.1:7851,127.0.0.1:7852,127.0.0.1:7853,127.0.0.1:7854; \
+	wait; \
+	trap - EXIT
 
 # Machine-readable run of the full bench suite (quick settings): refreshes
 # every BENCH_<name>.json at the repo root, including the kernel and

@@ -5,11 +5,14 @@
 //! multi-job coordinator keeps several requests in flight so the master's
 //! encode/decode overlaps the workers' compute.
 //!
-//! The same stream is run twice — sequentially (`submit` then `wait` per
-//! request) and pipelined (up to 4 `JobHandle`s outstanding) — and the
-//! jobs/sec of both are reported, along with the decode-plan cache counters:
-//! in steady state the same fast-4 subset keeps responding, so decode
-//! interpolation setup becomes a cache lookup.
+//! The same stream is run three times — sequentially (`submit` then `wait`
+//! per request), pipelined (up to 4 `JobHandle`s outstanding), and
+//! pipelined again over **real TCP sockets** (one loopback worker daemon
+//! per worker, same straggler model and seed, so the draws are identical
+//! and the only delta is the wire) — and the jobs/sec of each pass is
+//! reported, along with the decode-plan cache counters: in steady state the
+//! same fast-4 subset keeps responding, so decode interpolation setup
+//! becomes a cache lookup.
 //!
 //! ```bash
 //! cargo run --release --example straggler_serving
@@ -17,7 +20,9 @@
 
 use gr_cdmm::codes::ep_rmfe_i::EpRmfeI;
 use gr_cdmm::codes::scheme::{DmmScheme, Response};
-use gr_cdmm::coordinator::{Coordinator, JobHandle, NativeCompute, StragglerModel};
+use gr_cdmm::coordinator::{
+    Coordinator, JobHandle, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
+};
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::plane::PlaneMatrix;
@@ -47,6 +52,33 @@ fn decode_request(scheme: &Scheme, handle: JobHandle) -> anyhow::Result<(Matrix<
         .collect::<anyhow::Result<_>>()?;
     let used = collected.iter().map(|c| c.worker_id).collect();
     Ok((scheme.decode(&responses)?, used))
+}
+
+/// One pipelined pass: up to [`INFLIGHT`] `JobHandle`s outstanding, every
+/// decoded product checked against the local reference. The same loop runs
+/// over the in-process pool and the TCP pool — only the coordinator differs.
+fn run_pipelined_pass(
+    scheme: &Scheme,
+    coord: &mut Coordinator,
+    requests: &[(Matrix<u64>, Matrix<u64>)],
+    expected: &[Matrix<u64>],
+    need: usize,
+) -> anyhow::Result<Duration> {
+    let mut window: VecDeque<(usize, JobHandle)> = VecDeque::new();
+    let t0 = Instant::now();
+    for (req, (a, b)) in requests.iter().enumerate() {
+        if window.len() == INFLIGHT {
+            let (oldest, handle) = window.pop_front().expect("window is non-empty");
+            let (c, _) = decode_request(scheme, handle)?;
+            assert_eq!(c, expected[oldest]);
+        }
+        window.push_back((req, coord.submit(encode_request(scheme, a, b)?, need)?));
+    }
+    while let Some((req, handle)) = window.pop_front() {
+        let (c, _) = decode_request(scheme, handle)?;
+        assert_eq!(c, expected[req]);
+    }
+    Ok(t0.elapsed())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -86,34 +118,41 @@ fn main() -> anyhow::Result<()> {
     // --- pipelined: up to INFLIGHT JobHandles outstanding ----------------
     let scheme2 = Arc::new(EpRmfeI::new(ring.clone(), 8, 2, 1, 2, 2)?);
     let backend = Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme2)));
-    let mut coord = Coordinator::new(8, backend, straggler, 17);
-    let mut window: VecDeque<(usize, JobHandle)> = VecDeque::new();
-    let t0 = Instant::now();
-    for (req, (a, b)) in requests.iter().enumerate() {
-        if window.len() == INFLIGHT {
-            let (oldest, handle) = window.pop_front().expect("window is non-empty");
-            let (c, _) = decode_request(&scheme2, handle)?;
-            assert_eq!(c, expected[oldest]);
-        }
-        window.push_back((req, coord.submit(encode_request(&scheme2, a, b)?, need)?));
-    }
-    while let Some((req, handle)) = window.pop_front() {
-        let (c, _) = decode_request(&scheme2, handle)?;
-        assert_eq!(c, expected[req]);
-    }
-    let pipe = t0.elapsed();
+    let mut coord = Coordinator::new(8, backend, straggler.clone(), 17);
+    let pipe = run_pipelined_pass(&scheme2, &mut coord, &requests, &expected, need)?;
     coord.shutdown();
+
+    // --- pipelined over TCP: one loopback daemon per worker --------------
+    // Same straggler model and seed as the in-process passes, so the draws
+    // are identical and the only delta is the real wire (framed payloads
+    // over sockets instead of in-process channels).
+    let scheme3 = Arc::new(EpRmfeI::new(ring.clone(), 8, 2, 1, 2, 2)?);
+    let backend: Arc<dyn ShareCompute> =
+        Arc::new(NativeCompute::for_scheme(Arc::clone(&scheme3)));
+    let daemons: Vec<WorkerDaemon> = (0..8)
+        .map(|_| WorkerDaemon::spawn_local(Arc::clone(&backend), straggler.clone(), 17, 1))
+        .collect::<anyhow::Result<_>>()?;
+    let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+    let mut coord = Coordinator::connect_tcp(&addrs)?;
+    let tcp = run_pipelined_pass(&scheme3, &mut coord, &requests, &expected, need)?;
+    coord.shutdown();
+    for daemon in daemons {
+        daemon.join()?;
+    }
 
     let seq_rate = REQUESTS as f64 / seq.as_secs_f64();
     let pipe_rate = REQUESTS as f64 / pipe.as_secs_f64();
+    let tcp_rate = REQUESTS as f64 / tcp.as_secs_f64();
     let (hits, misses) = scheme2.plan_cache_stats();
     println!("\nsequential: {seq:?} total → {seq_rate:.2} jobs/s");
     println!("pipelined ({INFLIGHT} in flight): {pipe:?} total → {pipe_rate:.2} jobs/s");
+    println!("pipelined over TCP loopback: {tcp:?} total → {tcp_rate:.2} jobs/s");
     println!("pipelining speedup: {:.2}x", pipe_rate / seq_rate);
+    println!("transport cost (channel vs TCP): {:.2}x", pipe_rate / tcp_rate);
     println!("decode-plan cache (pipelined pass): {hits} hits / {misses} misses");
     println!(
         "\nuncoded lower bound: ≥ {slow:?} per request (an 8-way split must wait for \
-         the stragglers); coded serving never does"
+         the stragglers); coded serving never does — on either transport"
     );
     Ok(())
 }

@@ -1,17 +1,23 @@
 //! Bench: serving throughput — the pipelined multi-job coordinator vs the
 //! sequential submit+wait baseline, per the ISSUE-3 acceptance setup: 8
-//! workers, two fixed-slow stragglers, ≥ 4 jobs in flight.
+//! workers, two fixed-slow stragglers, ≥ 4 jobs in flight — now measured on
+//! **both transports**: the in-process channel pool and real TCP loopback
+//! daemons (same straggler draws, so the channel-vs-tcp row pair prices the
+//! wire itself: framing + socket syscalls + loopback copies).
 //!
 //! 16 jobs per pass: with the two stragglers never among the first `R = 4`,
 //! the responding subsets are drawn from `C(6,4) = 15` possibilities, so 16
 //! decodes guarantee at least one decode-plan cache hit by pigeonhole.
 //!
 //! `cargo bench --bench serving_throughput -- --smoke` runs the seconds-fast
-//! CI subset. Writes `BENCH_serving_throughput.json` (sequential and
-//! pipelined jobs/s, speedup, plan-cache hit/miss counts, verification).
+//! CI subset. Writes `BENCH_serving_throughput.json` (per scheme × size ×
+//! transport: sequential and pipelined jobs/s, speedup, plan-cache hit/miss
+//! counts, verification).
 
 use gr_cdmm::coordinator::StragglerModel;
-use gr_cdmm::experiments::serving::{records_to_json, render, run, ServeConfig};
+use gr_cdmm::experiments::serving::{
+    records_to_json, render, run, ServeConfig, ServeTransport,
+};
 use gr_cdmm::util::bench::write_bench_json;
 use std::time::Duration;
 
@@ -22,42 +28,64 @@ fn main() {
     let straggler = StragglerModel::fixed_slow([0, 1], Duration::from_millis(25));
 
     println!(
-        "# serving throughput — 8 workers, workers 0/1 slow by 25ms, 16 jobs, 4 in flight{}\n",
+        "# serving throughput — 8 workers, workers 0/1 slow by 25ms, 16 jobs, 4 in flight, \
+         channel vs tcp-loopback{}\n",
         if smoke { " (smoke)" } else { "" }
     );
     let mut records = Vec::new();
     for &scheme in schemes {
         for &size in sizes {
-            let cfg = ServeConfig {
-                scheme: scheme.to_string(),
-                n_workers: 8,
-                size,
-                jobs: 16,
-                inflight: 4,
-                straggler: straggler.clone(),
-                seed: 42,
-                verify: true,
-            };
-            // A failed run must fail the bench (and the CI smoke step), not
-            // just print and keep going.
-            let rec = run(&cfg).unwrap_or_else(|e| panic!("{scheme}@{size}: serving run failed: {e}"));
-            assert!(rec.verified, "{scheme}@{size}: decode mismatch");
-            records.push(rec);
+            for transport in [ServeTransport::InProcess, ServeTransport::TcpLoopback] {
+                let cfg = ServeConfig {
+                    scheme: scheme.to_string(),
+                    n_workers: 8,
+                    size,
+                    jobs: 16,
+                    inflight: 4,
+                    straggler: straggler.clone(),
+                    seed: 42,
+                    verify: true,
+                    transport,
+                };
+                let label = cfg.transport.label();
+                // A failed run must fail the bench (and the CI smoke step),
+                // not just print and keep going.
+                let rec = run(&cfg).unwrap_or_else(|e| {
+                    panic!("{scheme}@{size}/{label}: serving run failed: {e}")
+                });
+                assert!(rec.verified, "{scheme}@{size}/{label}: decode mismatch");
+                records.push(rec);
+            }
         }
     }
     println!("{}", render(&records));
     for rec in &records {
         println!(
-            "{}@{}: pipelined {:.2} jobs/s vs sequential {:.2} jobs/s ({:.2}x), \
+            "{}@{} [{}]: pipelined {:.2} jobs/s vs sequential {:.2} jobs/s ({:.2}x), \
              plan cache {}/{} hits",
             rec.scheme,
             rec.size,
+            rec.transport,
             rec.pipe_jobs_per_s,
             rec.seq_jobs_per_s,
             rec.speedup,
             rec.plan_cache_hits,
             rec.plan_cache_hits + rec.plan_cache_misses,
         );
+    }
+    // The headline transport-cost row: pipelined channel vs pipelined TCP
+    // at matching (scheme, size).
+    for pair in records.chunks(2) {
+        if let [chan, tcp] = pair {
+            println!(
+                "{}@{}: transport cost {:.2}x (channel {:.2} jobs/s vs tcp-loopback {:.2} jobs/s)",
+                chan.scheme,
+                chan.size,
+                chan.pipe_jobs_per_s / tcp.pipe_jobs_per_s.max(1e-12),
+                chan.pipe_jobs_per_s,
+                tcp.pipe_jobs_per_s,
+            );
+        }
     }
     match write_bench_json("serving_throughput", &records_to_json(&records)) {
         Ok(p) => println!("\n(json: {})", p.display()),

@@ -37,13 +37,18 @@ pub struct SchemeConfig {
 }
 
 impl SchemeConfig {
-    /// The §V.A configuration for a worker count (8, 16 or 32).
+    /// The §V.A configuration for a worker count (8, 16 or 32), plus a
+    /// minimal N = 4 preset (not from the paper) for multi-process demos
+    /// and the CI loopback e2e: same `m = 3` tower and `(u, w, v) =
+    /// (2, 1, 2)` partition as N = 8, but with `R = 4 = N` — every worker
+    /// must answer, so there is no straggler slack.
     pub fn for_workers(n_workers: usize) -> anyhow::Result<SchemeConfig> {
         match n_workers {
+            4 => Ok(SchemeConfig { n_workers: 4, m: 3, u: 2, w: 1, v: 2, n_split: 2 }),
             8 => Ok(SchemeConfig { n_workers: 8, m: 3, u: 2, w: 1, v: 2, n_split: 2 }),
             16 => Ok(SchemeConfig { n_workers: 16, m: 4, u: 2, w: 2, v: 2, n_split: 2 }),
             32 => Ok(SchemeConfig { n_workers: 32, m: 5, u: 2, w: 2, v: 2, n_split: 3 }),
-            _ => anyhow::bail!("no paper configuration for N = {n_workers} (use 8, 16 or 32)"),
+            _ => anyhow::bail!("no configuration for N = {n_workers} (use 4, 8, 16 or 32)"),
         }
     }
 }
@@ -195,6 +200,16 @@ mod tests {
         let cfg = SchemeConfig::for_workers(8).unwrap();
         for (name, _) in SCHEME_NAMES {
             byte_roundtrip(name, &cfg, 8, 600);
+        }
+    }
+
+    #[test]
+    fn demo_config_n4_roundtrips_every_scheme() {
+        // The minimal multi-process/CI preset: R = N = 4 for the EP family,
+        // so every worker's response participates in the decode.
+        let cfg = SchemeConfig::for_workers(4).unwrap();
+        for (name, _) in SCHEME_NAMES {
+            byte_roundtrip(name, &cfg, 8, 610);
         }
     }
 

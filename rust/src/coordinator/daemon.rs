@@ -1,0 +1,247 @@
+//! The worker daemon: the [`super::worker`] receive → compute → reply loop
+//! served over a TCP socket — the process behind `gr-cdmm worker --listen
+//! ADDR` and the peer of [`super::tcp::TcpTransport`].
+//!
+//! A daemon is scheme-agnostic at the protocol level but is configured with
+//! a concrete [`ShareCompute`] backend (built from the scheme registry by
+//! `main.rs`, so master and workers must agree on the scheme name and
+//! worker count — exactly like any deployed executor fleet). It serves one
+//! coordinator connection at a time: frames are processed strictly in
+//! order ([`process_job`] per job frame, straggler injection included), and
+//! a `Shutdown` frame or EOF ends the connection, after which the daemon
+//! goes back to accepting — so one daemon survives any number of
+//! `gr-cdmm serve`/`run` invocations.
+//!
+//! The daemon learns *which* worker it is from the `worker_id` the
+//! coordinator stamps on each job frame, and derives its straggler RNG
+//! stream as [`worker_rng`]`(seed, worker_id)` — the identical stream an
+//! in-process pool worker with that id would draw, which is what makes
+//! channel and TCP runs comparable draw-for-draw under the same seed.
+//!
+//! A malformed peer (garbage bytes, truncated frames, oversized declared
+//! payloads) errors the *connection*, never the daemon: the error is
+//! logged and the daemon accepts the next connection.
+
+use super::straggler::StragglerModel;
+use super::wire::{self, Frame, FrameKind};
+use super::worker::{process_job, worker_rng, ShareCompute};
+use crate::util::rng::Rng64;
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Upper bound on the worker id a daemon accepts in a job frame. Deriving a
+/// worker's RNG stream costs `worker_id` PRNG steps ([`worker_rng`]), so an
+/// unbounded id from a malicious coordinator could wedge the accept loop;
+/// real ids are < N ≤ 32, so this is pure headroom.
+pub const MAX_WORKER_ID: u64 = 1 << 16;
+
+/// Worker-side configuration shared by every connection the daemon serves.
+#[derive(Clone, Debug, Default)]
+pub struct DaemonConfig {
+    /// Straggler injection applied at the worker (the daemon *is* the
+    /// remote node, so delays and fail-stop draws happen here, not at the
+    /// master).
+    pub straggler: StragglerModel,
+    /// Seed deriving the per-worker-id RNG streams ([`worker_rng`]).
+    pub seed: u64,
+}
+
+/// Serve one coordinator connection to completion: `Ok(())` on a clean
+/// shutdown frame or EOF, `Err` if the peer broke protocol mid-stream.
+fn serve_conn(
+    stream: TcpStream,
+    compute: &dyn ShareCompute,
+    cfg: &DaemonConfig,
+) -> anyhow::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    // One RNG stream per worker id seen on this connection. A coordinator
+    // addresses one daemon as one worker, so this map has a single entry in
+    // practice; keying by id keeps the draws right even if it doesn't.
+    let mut rngs: HashMap<usize, Rng64> = HashMap::new();
+    loop {
+        let Some(frame) = wire::read_frame(&mut reader)? else {
+            return Ok(()); // coordinator hung up
+        };
+        match frame.kind {
+            FrameKind::Shutdown => return Ok(()),
+            FrameKind::Job => {
+                anyhow::ensure!(
+                    frame.worker_id < MAX_WORKER_ID,
+                    "worker id {} exceeds the {MAX_WORKER_ID} limit",
+                    frame.worker_id
+                );
+                let worker_id = usize::try_from(frame.worker_id)?;
+                let rng =
+                    rngs.entry(worker_id).or_insert_with(|| worker_rng(cfg.seed, worker_id));
+                let report = process_job(
+                    worker_id,
+                    frame.job_id,
+                    frame.payload,
+                    compute,
+                    &cfg.straggler,
+                    rng,
+                );
+                wire::write_frame(&mut writer, &Frame::from_report(report))?;
+            }
+            other => anyhow::bail!("unexpected {other:?} frame from the coordinator"),
+        }
+    }
+}
+
+/// Accept loop: serve connections sequentially, `max_conns` of them (or
+/// forever when `None`). Connection-level protocol errors are logged and
+/// survived; only listener-level errors propagate.
+fn serve(
+    listener: &TcpListener,
+    compute: &dyn ShareCompute,
+    cfg: &DaemonConfig,
+    max_conns: Option<usize>,
+) -> anyhow::Result<()> {
+    let mut served = 0usize;
+    loop {
+        let (stream, peer) = listener.accept()?;
+        if let Err(e) = serve_conn(stream, compute, cfg) {
+            eprintln!("gr-cdmm worker: connection from {peer} failed: {e}");
+        }
+        served += 1;
+        if max_conns.is_some_and(|max| served >= max) {
+            return Ok(());
+        }
+    }
+}
+
+/// Run a worker daemon in the current thread: bind `listen` and serve
+/// `max_conns` coordinator connections (forever when `None`). This is the
+/// `gr-cdmm worker` subcommand's engine.
+pub fn run(
+    listen: &str,
+    compute: Arc<dyn ShareCompute>,
+    cfg: DaemonConfig,
+    max_conns: Option<usize>,
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(listen)?;
+    eprintln!(
+        "gr-cdmm worker [{}] listening on {} (straggler: {:?}, seed: {})",
+        compute.backend_name(),
+        listener.local_addr()?,
+        cfg.straggler,
+        cfg.seed
+    );
+    serve(&listener, &*compute, &cfg, max_conns)
+}
+
+/// A worker daemon on its own thread, bound to an ephemeral loopback port —
+/// how tests, benches and the serving experiment's `tcp-loopback` mode get
+/// real-socket workers without fixed ports or extra processes.
+pub struct WorkerDaemon {
+    addr: std::net::SocketAddr,
+    handle: JoinHandle<anyhow::Result<()>>,
+}
+
+impl WorkerDaemon {
+    /// Bind `127.0.0.1:0` and serve exactly `conns` coordinator
+    /// connections on a background thread.
+    pub fn spawn_local(
+        compute: Arc<dyn ShareCompute>,
+        straggler: StragglerModel,
+        seed: u64,
+        conns: usize,
+    ) -> anyhow::Result<WorkerDaemon> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let cfg = DaemonConfig { straggler, seed };
+        let handle = std::thread::Builder::new()
+            .name(format!("gr-cdmm-daemon-{addr}"))
+            .spawn(move || serve(&listener, &*compute, &cfg, Some(conns)))?;
+        Ok(WorkerDaemon { addr, handle })
+    }
+
+    /// The bound `host:port`, ready for `TcpTransport::connect`.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Wait for the daemon to finish its connection budget.
+    pub fn join(self) -> anyhow::Result<()> {
+        self.handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("worker daemon thread panicked"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    struct Echo;
+    impl ShareCompute for Echo {
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+            Ok(payload.to_vec())
+        }
+    }
+
+    #[test]
+    fn daemon_serves_jobs_and_honors_shutdown_frames() {
+        let daemon =
+            WorkerDaemon::spawn_local(Arc::new(Echo), StragglerModel::None, 1, 1).unwrap();
+        let stream = TcpStream::connect(daemon.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        wire::write_frame(&mut writer, &Frame::job(3, 0, vec![7u8; 20])).unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap().expect("one response");
+        assert_eq!(resp.kind, FrameKind::RespOk);
+        assert_eq!((resp.job_id, resp.worker_id), (3, 0));
+        assert_eq!(resp.payload, vec![7u8; 20]);
+        wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
+        daemon.join().unwrap();
+    }
+
+    #[test]
+    fn daemon_reports_fail_stop_draws_byte_free() {
+        let daemon =
+            WorkerDaemon::spawn_local(Arc::new(Echo), StragglerModel::fail_stop([2]), 1, 1)
+                .unwrap();
+        let stream = TcpStream::connect(daemon.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        // worker id 2 fail-stops, worker id 0 answers (one daemon can stand
+        // in for either — identity comes from the job frame)
+        wire::write_frame(&mut writer, &Frame::job(1, 2, vec![1u8; 8])).unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap().expect("fail report");
+        assert_eq!(resp.kind, FrameKind::RespFail);
+        assert_eq!((resp.job_id, resp.worker_id), (1, 2));
+        assert!(resp.payload.is_empty());
+        wire::write_frame(&mut writer, &Frame::job(2, 0, vec![1u8; 8])).unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap().expect("echo");
+        assert_eq!(resp.kind, FrameKind::RespOk);
+        wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
+        daemon.join().unwrap();
+    }
+
+    #[test]
+    fn daemon_survives_a_malformed_connection() {
+        let daemon =
+            WorkerDaemon::spawn_local(Arc::new(Echo), StragglerModel::None, 1, 2).unwrap();
+        // connection 1: garbage — errors the connection, not the daemon
+        {
+            let mut stream = TcpStream::connect(daemon.addr()).unwrap();
+            stream.write_all(&[0xAB; 64]).unwrap();
+        }
+        // connection 2: still served normally
+        let stream = TcpStream::connect(daemon.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        wire::write_frame(&mut writer, &Frame::job(5, 1, vec![2u8; 4])).unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap().expect("echo after bad peer");
+        assert_eq!(resp.kind, FrameKind::RespOk);
+        assert_eq!(resp.payload, vec![2u8; 4]);
+        wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
+        daemon.join().unwrap();
+    }
+}

@@ -14,6 +14,7 @@
 
 use super::master::Coordinator;
 use super::metrics::JobMetrics;
+use super::straggler::StragglerModel;
 use super::worker::ShareCompute;
 use crate::codes::scheme::{DmmScheme, DynScheme, Erased, Response};
 use crate::ring::matrix::Matrix;
@@ -23,6 +24,32 @@ use std::sync::Arc;
 use std::time::Instant;
 
 pub use super::worker::ShareCompute as ShareComputeTrait;
+
+/// Build the coordinator either way the CLI can ask for one: spawn an
+/// in-process pool (`endpoints = None`; `backend`/`straggler`/`seed` apply
+/// there), or connect to already-running `gr-cdmm worker` daemons
+/// (`endpoints = Some(..)`, one per worker — the daemons own the compute
+/// backend and straggler injection in that case, so those arguments are
+/// ignored by design).
+pub fn make_coordinator(
+    n_workers: usize,
+    backend: Arc<dyn ShareCompute>,
+    straggler: StragglerModel,
+    seed: u64,
+    endpoints: Option<&[String]>,
+) -> anyhow::Result<Coordinator> {
+    match endpoints {
+        None => Ok(Coordinator::new(n_workers, backend, straggler, seed)),
+        Some(addrs) => {
+            anyhow::ensure!(
+                addrs.len() == n_workers,
+                "--connect lists {} endpoint(s) but the scheme needs N = {n_workers} workers",
+                addrs.len()
+            );
+            Coordinator::connect_tcp(addrs)
+        }
+    }
+}
 
 /// The native worker backend: an erased scheme applied to byte payloads.
 pub struct NativeCompute {
@@ -297,6 +324,18 @@ mod tests {
         assert_eq!((m1.plan_cache_hits, m1.plan_cache_misses), (0, 1));
         assert_eq!((m2.plan_cache_hits, m2.plan_cache_misses), (1, 0));
         coord.shutdown();
+    }
+
+    #[test]
+    fn make_coordinator_validates_endpoint_count() {
+        let base = Zq::z2e(64);
+        let scheme = Arc::new(EpRmfeI::new(base, 8, 2, 1, 2, 2).unwrap());
+        let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::for_scheme(scheme));
+        let one_endpoint = vec!["127.0.0.1:1".to_string()];
+        let err =
+            make_coordinator(8, backend, StragglerModel::None, 1, Some(&one_endpoint))
+                .unwrap_err();
+        assert!(err.to_string().contains("endpoint"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! [`TcpTransport`]: the socket-backed [`Transport`] — one TCP connection
+//! per worker to a `gr-cdmm worker` daemon ([`super::daemon`]), speaking
+//! the length-prefixed [`super::wire`] protocol.
+//!
+//! # Fail-stop semantics
+//!
+//! A worker's link can die at any point: connection reset, daemon crash,
+//! malformed or truncated frames, an oversized declared payload — the
+//! per-connection reader treats every one of these as the worker turning
+//! **fail-stop**. It synthesizes a byte-free
+//! [`fail_report`](super::transport::fail_report) for every job sent on the
+//! link but not yet answered, and the writer side does the same for jobs
+//! submitted after the death, so the master's router still hears from every
+//! worker exactly once per job and PR 3's deterministic job retirement
+//! keeps working. A dead worker is indistinguishable from the
+//! [`StragglerModel::FailStop`](super::straggler::StragglerModel) model —
+//! jobs fail fast with "cannot complete" when the threshold becomes
+//! unreachable, never hang, and never panic.
+//!
+//! # Byte accounting
+//!
+//! [`Transport::send`] returns the serialized share payload length actually
+//! written (0 if the worker is already dead); response payload bytes are
+//! counted by the router as messages arrive — the same quantities at the
+//! same boundaries as [`super::transport::ChannelTransport`]. Frame headers
+//! are deliberately *excluded* so measured volume stays equal to the
+//! schemes' analytic `upload_bytes`/`download_bytes` across transports.
+//!
+//! # Identity
+//!
+//! The connection index — the position of the endpoint in the `connect`
+//! list — is the authoritative worker id: the id echoed in response frames
+//! is ignored, so a confused (or byzantine) daemon cannot impersonate
+//! another worker. Duplicate responses are additionally dropped by the
+//! master's router (see [`super::master`]).
+
+use super::transport::{fail_report, FromWorker, ToWorker, Transport};
+use super::wire::{self, Frame, FrameKind};
+use std::collections::BTreeSet;
+use std::io::{BufReader, ErrorKind};
+use std::net::{Shutdown as SockShutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Connection attempts before giving up on an endpoint (daemons may still
+/// be binding when the coordinator starts — e.g. the CI loopback e2e).
+const CONNECT_ATTEMPTS: usize = 40;
+/// Pause between connection attempts.
+const CONNECT_RETRY: Duration = Duration::from_millis(125);
+/// How long [`TcpTransport::shutdown`] waits for a peer to finish its
+/// queued work and close before force-closing the socket. A healthy daemon
+/// closes as soon as it reads the shutdown frame; a wedged one (frozen
+/// host, SIGSTOP'd process) must not hang the master's shutdown forever.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(30);
+
+/// Writer/reader-shared per-connection state. `pending` holds the job ids
+/// sent on the link but not yet answered; whoever observes the death
+/// (reader *or* writer) flips `alive` and drains `pending` into synthetic
+/// fail-stop reports under the same lock, so every job is reported exactly
+/// once.
+struct ConnState {
+    alive: bool,
+    pending: BTreeSet<u64>,
+}
+
+type SharedState = Arc<Mutex<ConnState>>;
+
+/// Take every pending job id and mark the connection dead. Returns the jobs
+/// to report as fail-stopped (empty if another path already drained them).
+fn drain_dead(state: &SharedState) -> BTreeSet<u64> {
+    let mut st = state.lock().unwrap();
+    st.alive = false;
+    std::mem::take(&mut st.pending)
+}
+
+fn spawn_reader(
+    worker_id: usize,
+    stream: TcpStream,
+    state: SharedState,
+    funnel: Sender<FromWorker>,
+    peer: String,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("gr-cdmm-tcp-reader-{worker_id}"))
+        .spawn(move || {
+            let mut reader = BufReader::new(stream);
+            loop {
+                let report = match wire::read_frame(&mut reader) {
+                    Ok(Some(frame))
+                        if matches!(frame.kind, FrameKind::RespOk | FrameKind::RespFail) =>
+                    {
+                        frame.into_report()
+                    }
+                    Ok(Some(frame)) => {
+                        eprintln!(
+                            "gr-cdmm: worker {worker_id} ({peer}) sent an unexpected \
+                             {:?} frame; treating it as fail-stopped",
+                            frame.kind
+                        );
+                        break;
+                    }
+                    Ok(None) => break, // clean close
+                    Err(e) => {
+                        eprintln!(
+                            "gr-cdmm: worker {worker_id} ({peer}) link broke: {e}; \
+                             treating it as fail-stopped"
+                        );
+                        break;
+                    }
+                };
+                let mut msg = match report {
+                    Ok(msg) => msg,
+                    Err(e) => {
+                        eprintln!(
+                            "gr-cdmm: worker {worker_id} ({peer}) sent a malformed \
+                             response ({e}); treating it as fail-stopped"
+                        );
+                        break;
+                    }
+                };
+                // The connection index is the authoritative identity.
+                msg.worker_id = worker_id;
+                state.lock().unwrap().pending.remove(&msg.job_id);
+                if funnel.send(msg).is_err() {
+                    break; // coordinator gone
+                }
+            }
+            // Fail-stop: report every job this link still owed an answer.
+            for job_id in drain_dead(&state) {
+                if funnel.send(fail_report(job_id, worker_id)).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("failed to spawn tcp reader thread")
+}
+
+fn connect_retry(addr: &str) -> anyhow::Result<TcpStream> {
+    let mut last_err = String::new();
+    for attempt in 0..CONNECT_ATTEMPTS {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) if e.kind() == ErrorKind::ConnectionRefused => {
+                last_err = e.to_string();
+                if attempt + 1 < CONNECT_ATTEMPTS {
+                    std::thread::sleep(CONNECT_RETRY);
+                }
+            }
+            Err(e) => anyhow::bail!("connecting to worker at {addr}: {e}"),
+        }
+    }
+    anyhow::bail!(
+        "worker at {addr} refused {CONNECT_ATTEMPTS} connection attempts \
+         (is `gr-cdmm worker --listen {addr}` running?): {last_err}"
+    )
+}
+
+/// The socket transport. Build with [`TcpTransport::connect`]; endpoint `i`
+/// in the list is worker `i`.
+pub struct TcpTransport {
+    streams: Vec<TcpStream>,
+    states: Vec<SharedState>,
+    readers: Vec<JoinHandle<()>>,
+    funnel: Option<Sender<FromWorker>>,
+    rx: Option<Receiver<FromWorker>>,
+    shut: bool,
+}
+
+impl TcpTransport {
+    /// Connect to one `gr-cdmm worker` daemon per endpoint (retrying
+    /// refused connections for a few seconds, so daemons may still be
+    /// starting). All endpoints must accept before any job traffic flows;
+    /// an unreachable endpoint is a hard error — a worker that dies *after*
+    /// connecting degrades to fail-stop instead.
+    pub fn connect(endpoints: &[String]) -> anyhow::Result<TcpTransport> {
+        anyhow::ensure!(!endpoints.is_empty(), "need at least one worker endpoint");
+        let mut streams = Vec::with_capacity(endpoints.len());
+        for addr in endpoints {
+            let stream = connect_retry(addr)?;
+            stream.set_nodelay(true)?;
+            streams.push(stream);
+        }
+        // Only spawn reader threads once every endpoint is connected, so a
+        // failed connect leaks nothing.
+        let (funnel_tx, rx) = channel::<FromWorker>();
+        let mut states = Vec::with_capacity(endpoints.len());
+        let mut readers = Vec::with_capacity(endpoints.len());
+        for (wid, (stream, addr)) in streams.iter().zip(endpoints).enumerate() {
+            let state: SharedState =
+                Arc::new(Mutex::new(ConnState { alive: true, pending: BTreeSet::new() }));
+            readers.push(spawn_reader(
+                wid,
+                stream.try_clone()?,
+                Arc::clone(&state),
+                funnel_tx.clone(),
+                addr.clone(),
+            ));
+            states.push(state);
+        }
+        Ok(TcpTransport {
+            streams,
+            states,
+            readers,
+            funnel: Some(funnel_tx),
+            rx: Some(rx),
+            shut: false,
+        })
+    }
+
+    /// Report `job_id` as fail-stopped at `worker_id` (link already dead).
+    fn synthesize_fail(&self, worker_id: usize, job_id: u64) {
+        if let Some(tx) = &self.funnel {
+            let _ = tx.send(fail_report(job_id, worker_id));
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n_workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn send(&mut self, worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
+        anyhow::ensure!(worker_id < self.streams.len(), "worker id {worker_id} out of range");
+        match msg {
+            ToWorker::Shutdown => {
+                if self.states[worker_id].lock().unwrap().alive {
+                    let _ = wire::write_frame(&mut &self.streams[worker_id], &Frame::shutdown());
+                }
+                Ok(0)
+            }
+            ToWorker::Job { job_id, payload } => {
+                {
+                    let mut st = self.states[worker_id].lock().unwrap();
+                    if !st.alive {
+                        // Dead link = fail-stop worker: report byte-free so
+                        // the job still retires deterministically.
+                        drop(st);
+                        self.synthesize_fail(worker_id, job_id);
+                        return Ok(0);
+                    }
+                    st.pending.insert(job_id);
+                }
+                let len = payload.len();
+                let frame = Frame::job(job_id, worker_id, payload);
+                if wire::write_frame(&mut &self.streams[worker_id], &frame).is_err() {
+                    // The link died mid-write: whatever the daemon received
+                    // is now moot. Unblock the reader and fail-stop every
+                    // job this link still owed (including this one, unless
+                    // the reader drained it first).
+                    let _ = self.streams[worker_id].shutdown(SockShutdown::Both);
+                    for job in drain_dead(&self.states[worker_id]) {
+                        self.synthesize_fail(worker_id, job);
+                    }
+                    return Ok(0);
+                }
+                Ok(len)
+            }
+        }
+    }
+
+    fn take_receiver(&mut self) -> Option<Receiver<FromWorker>> {
+        self.rx.take()
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        for (stream, state) in self.streams.iter().zip(&self.states) {
+            if state.lock().unwrap().alive {
+                let _ = wire::write_frame(&mut &*stream, &Frame::shutdown());
+            }
+            // Half-close: the daemon still drains queued jobs and writes
+            // their responses before it sees the shutdown frame / EOF and
+            // closes, at which point the reader thread exits.
+            let _ = stream.shutdown(SockShutdown::Write);
+        }
+        // Join every reader, but never hang on a wedged peer: past the
+        // grace deadline the socket is force-closed, which errors the
+        // blocked read and lets the reader run its fail-stop drain.
+        let deadline = std::time::Instant::now() + SHUTDOWN_GRACE;
+        for (i, h) in self.readers.drain(..).enumerate() {
+            while !h.is_finished() && std::time::Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            if !h.is_finished() {
+                let _ = self.streams[i].shutdown(SockShutdown::Both);
+            }
+            let _ = h.join();
+        }
+        // Dropping the last funnel sender disconnects the router's stream
+        // once every forwarded report has been consumed.
+        self.funnel = None;
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        Transport::shutdown(self);
+    }
+}

@@ -1,22 +1,41 @@
-//! Message types and byte-accounted links between master and workers.
+//! The pluggable master ↔ worker transport: message types, the object-safe
+//! [`Transport`] trait, byte accounting, and the in-process
+//! [`ChannelTransport`].
 //!
-//! Transport is in-process (`std::sync::mpsc`) — the paper's evaluation
-//! measures communication *volume*, not bandwidth, and volume is preserved
-//! exactly by counting the serialized payload bytes crossing each link.
-//! Every payload that would cross a network in a deployment crosses a
-//! counted channel here.
+//! The paper's evaluation measures communication *volume*, and volume is
+//! preserved exactly by counting the serialized payload bytes crossing each
+//! link — so both transports account the same quantity at the same
+//! boundary:
+//!
+//! * [`ChannelTransport`] — the worker pool as OS threads joined by
+//!   `std::sync::mpsc` channels. Payloads cross untouched; "wire" bytes are
+//!   the serialized payload lengths. This is the default for experiments
+//!   and tests (deterministic, no sockets).
+//! * [`super::tcp::TcpTransport`] — real sockets speaking the
+//!   length-prefixed [`super::wire`] protocol to `gr-cdmm worker` daemons
+//!   ([`super::daemon`]). The counted bytes are the same payload lengths
+//!   (framing overhead is excluded by design), so upload/download
+//!   accounting is identical across transports for the same job stream.
+//!
+//! [`Transport::send`] returns the payload bytes actually put on the link;
+//! the coordinator credits them to the job's and its own [`ByteCounters`]
+//! at that boundary. Download bytes are credited by the response router the
+//! moment the transport hands a [`FromWorker`] over (see [`super::master`]).
 //!
 //! Counters exist at two scopes since the multi-job coordinator: every
 //! in-flight job owns a [`ByteCounters`] (written by the dispatch path, the
-//! response router and the job's collector — see
-//! [`super::master`]), and the coordinator keeps one **aggregate**
-//! instance summing all jobs over its lifetime. Counters are monotone;
-//! "discarded" download is derived (`arrived − used`), so late responses
-//! counted by the router can never race the collector's used-bytes
-//! accounting into a negative.
+//! response router and the job's collector), and the coordinator keeps one
+//! **aggregate** instance summing all jobs over its lifetime. Counters are
+//! monotone; "discarded" download is derived (`arrived − used`), so late
+//! responses counted by the router can never race the collector's
+//! used-bytes accounting into a negative.
 
+use super::straggler::StragglerModel;
+use super::worker::{spawn_worker, worker_rng, ShareCompute};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Master → worker message.
@@ -39,6 +58,62 @@ pub struct FromWorker {
     pub compute: Duration,
     /// Injected straggler delay, for reporting.
     pub injected_delay: Duration,
+}
+
+/// The byte-free fail-stop report for one `(job, worker)`: what a worker
+/// that drops a job sends, and what a transport synthesizes when a worker's
+/// link dies with the job outstanding — either way the master's response
+/// router hears from every worker exactly once per job, so job retirement
+/// stays deterministic (see [`super::master`]).
+pub fn fail_report(job_id: u64, worker_id: usize) -> FromWorker {
+    FromWorker {
+        job_id,
+        worker_id,
+        payload: None,
+        compute: Duration::ZERO,
+        injected_delay: Duration::ZERO,
+    }
+}
+
+/// An object-safe master-side link to `N` workers.
+///
+/// The contract the coordinator relies on:
+///
+/// * **per-worker FIFO** — messages sent to one worker are processed in
+///   order;
+/// * **exactly-one report per (job, worker)** — for every `Job` sent, the
+///   receiver eventually yields exactly one [`FromWorker`] with that
+///   `(job_id, worker_id)`: a real response, a worker-side failure report,
+///   or a transport-synthesized fail-stop report ([`fail_report`]) if the
+///   link died. A permanently dead worker therefore looks exactly like the
+///   fail-stop straggler model, never like a hang;
+/// * **byte accounting** — [`Transport::send`] returns the payload bytes
+///   actually put on the link (0 for control messages and for jobs
+///   dropped because the worker's link is already dead), and response
+///   payload bytes arrive uncounted for the router to credit.
+pub trait Transport: Send {
+    /// Number of workers this transport reaches.
+    fn n_workers(&self) -> usize;
+
+    /// Send one message to `worker_id`. Returns the payload bytes handed to
+    /// the link. `Err` means the transport itself is broken (programming
+    /// error, e.g. a worker index out of range, or an in-process worker
+    /// that vanished without shutdown) — a *remote* worker dying is not an
+    /// error but a fail-stop, reported through the receiver instead.
+    fn send(&mut self, worker_id: usize, msg: ToWorker) -> anyhow::Result<usize>;
+
+    /// Take the single worker → master message stream. Yields each
+    /// [`FromWorker`] exactly once; the channel disconnects when the
+    /// transport is shut down and every in-flight report has been
+    /// delivered. Returns `None` on the second call.
+    fn take_receiver(&mut self) -> Option<Receiver<FromWorker>>;
+
+    /// Signal shutdown to every worker and release the transport's threads
+    /// and links. Idempotent; also invoked by `Drop` implementations.
+    fn shutdown(&mut self);
+
+    /// Short transport name for logs and reports (`"channel"`, `"tcp"`).
+    fn name(&self) -> &'static str;
 }
 
 /// Shared, monotone byte counters for one scope (one job, or one
@@ -91,6 +166,102 @@ impl ByteCounters {
     }
 }
 
+/// The in-process transport: `N` worker threads running the
+/// [`super::worker`] loop, one `mpsc` channel per direction. Behaviorally
+/// identical to the pre-trait coordinator — per-worker RNG streams, message
+/// order, byte accounting and shutdown semantics are all preserved
+/// bit-for-bit.
+pub struct ChannelTransport {
+    senders: Vec<Sender<ToWorker>>,
+    workers: Vec<JoinHandle<()>>,
+    rx: Option<Receiver<FromWorker>>,
+    shut: bool,
+}
+
+impl ChannelTransport {
+    /// Spawn `n_workers` worker threads applying `compute`, with straggler
+    /// injection. `seed` derives the per-worker RNG streams (worker `i`
+    /// gets [`worker_rng`]`(seed, i)` — the same stream a TCP daemon
+    /// serving worker `i` with the same seed would draw).
+    pub fn spawn(
+        n_workers: usize,
+        compute: Arc<dyn ShareCompute>,
+        straggler: StragglerModel,
+        seed: u64,
+    ) -> ChannelTransport {
+        let (resp_tx, resp_rx) = channel::<FromWorker>();
+        let mut senders = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let (tx, rx) = channel::<ToWorker>();
+            let handle = spawn_worker(
+                wid,
+                rx,
+                resp_tx.clone(),
+                Arc::clone(&compute),
+                straggler.clone(),
+                worker_rng(seed, wid),
+            );
+            senders.push(tx);
+            workers.push(handle);
+        }
+        // Workers hold the only response senders: the receiver disconnects
+        // exactly when the last worker exits.
+        drop(resp_tx);
+        ChannelTransport { senders, workers, rx: Some(resp_rx), shut: false }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn send(&mut self, worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
+        let len = match &msg {
+            ToWorker::Job { payload, .. } => payload.len(),
+            ToWorker::Shutdown => 0,
+        };
+        let tx = self
+            .senders
+            .get(worker_id)
+            .ok_or_else(|| anyhow::anyhow!("worker id {worker_id} out of range"))?;
+        // An in-process worker only hangs up by panicking (or after
+        // shutdown): that is a broken transport, not a fail-stop.
+        anyhow::ensure!(tx.send(msg).is_ok(), "worker {worker_id} hung up");
+        Ok(len)
+    }
+
+    fn take_receiver(&mut self) -> Option<Receiver<FromWorker>> {
+        self.rx.take()
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        // Queued jobs are still processed and replied to before each worker
+        // sees the shutdown message (per-worker FIFO).
+        for tx in self.senders.drain(..) {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "channel"
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        Transport::shutdown(self);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,5 +294,45 @@ mod tests {
         let c = ByteCounters::new();
         c.add_download_used(5);
         assert_eq!(c.download_discarded_total(), 0);
+    }
+
+    /// Echo backend for transport-level tests.
+    struct Echo;
+    impl ShareCompute for Echo {
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+            Ok(payload.to_vec())
+        }
+    }
+
+    #[test]
+    fn channel_transport_round_trips_and_reports_sent_bytes() {
+        let mut t = ChannelTransport::spawn(2, Arc::new(Echo), StragglerModel::None, 1);
+        assert_eq!(t.n_workers(), 2);
+        assert_eq!(t.name(), "channel");
+        let rx = t.take_receiver().expect("first take yields the receiver");
+        assert!(t.take_receiver().is_none(), "receiver can only be taken once");
+        let sent = t.send(0, ToWorker::Job { job_id: 9, payload: vec![5u8; 33] }).unwrap();
+        assert_eq!(sent, 33);
+        let msg = rx.recv().unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (9, 0));
+        assert_eq!(msg.payload.as_ref().map(Vec::len), Some(33));
+        assert!(t.send(5, ToWorker::Shutdown).is_err(), "out-of-range worker id");
+        Transport::shutdown(&mut t);
+        assert!(rx.recv().is_err(), "stream disconnects after shutdown");
+    }
+
+    #[test]
+    fn channel_transport_fail_stop_workers_report_byte_free() {
+        let straggler = StragglerModel::fail_stop([0]);
+        let mut t = ChannelTransport::spawn(1, Arc::new(Echo), straggler, 2);
+        let rx = t.take_receiver().unwrap();
+        let sent = t.send(0, ToWorker::Job { job_id: 4, payload: vec![1u8; 10] }).unwrap();
+        // the payload crossed the link (and is counted) even though the
+        // worker will drop the job
+        assert_eq!(sent, 10);
+        let msg = rx.recv().unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (4, 0));
+        assert!(msg.payload.is_none());
+        Transport::shutdown(&mut t);
     }
 }

@@ -1,0 +1,392 @@
+//! The `gr-cdmm` wire protocol: length-prefixed binary frames with a
+//! versioned header, spoken between a coordinator ([`super::tcp`]) and a
+//! worker daemon ([`super::daemon`]).
+//!
+//! Every message in either direction is one frame:
+//!
+//! ```text
+//! offset  size  field        notes
+//!      0     4  magic        0x4D43_5247 ("GRCM" as little-endian bytes)
+//!      4     2  version      protocol version, currently 1
+//!      6     2  kind         1=job  2=shutdown  3=response-ok  4=response-failed
+//!      8     8  job_id       coordinator-assigned job id
+//!     16     8  worker_id    worker index (stamped by the master on jobs,
+//!                            echoed by the worker on responses)
+//!     24     8  compute_us   worker compute time in microseconds (responses)
+//!     32     8  delay_us     injected straggler delay in microseconds
+//!     40     8  payload_len  must be ≤ [`MAX_PAYLOAD`]
+//!     48     …  payload      serialized share / response bytes
+//! ```
+//!
+//! All integers are little-endian. Job frames carry a serialized
+//! [`crate::codes::Share`]; response-ok frames carry a serialized
+//! [`crate::ring::plane::PlaneMatrix`]; shutdown and response-failed frames
+//! carry no payload (a response-failed frame is the byte-free fail-stop
+//! report that keeps the master's job retirement deterministic — see
+//! [`super::master`]).
+//!
+//! [`read_frame`] validates everything before allocating: bad magic, an
+//! unknown version or kind, an oversized declared `payload_len`, and
+//! truncation (mid-header or mid-payload) are all clean `Err`s; only EOF
+//! exactly on a frame boundary is a clean end-of-stream (`Ok(None)`). The
+//! receiving side treats any `Err` as a broken peer — fail-stop, never a
+//! panic or a hang.
+
+use super::transport::FromWorker;
+use std::io::{ErrorKind, Read, Write};
+use std::time::Duration;
+
+/// `b"GRCM"` read as a little-endian `u32`.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"GRCM");
+
+/// Current protocol version.
+pub const VERSION: u16 = 1;
+
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 48;
+
+/// Upper bound on a frame's declared payload length (1 GiB). A header
+/// declaring more is rejected before any allocation — a malformed or
+/// malicious peer cannot make the receiver reserve unbounded memory.
+pub const MAX_PAYLOAD: u64 = 1 << 30;
+
+/// Frame discriminator (the header's `kind` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Master → worker: compute this job's share product.
+    Job,
+    /// Master → worker: no more jobs on this connection.
+    Shutdown,
+    /// Worker → master: successful response, payload attached.
+    RespOk,
+    /// Worker → master: the job was dropped (fail-stop draw or compute
+    /// error); no payload.
+    RespFail,
+}
+
+impl FrameKind {
+    fn to_u16(self) -> u16 {
+        match self {
+            FrameKind::Job => 1,
+            FrameKind::Shutdown => 2,
+            FrameKind::RespOk => 3,
+            FrameKind::RespFail => 4,
+        }
+    }
+
+    fn from_u16(x: u16) -> Option<FrameKind> {
+        match x {
+            1 => Some(FrameKind::Job),
+            2 => Some(FrameKind::Shutdown),
+            3 => Some(FrameKind::RespOk),
+            4 => Some(FrameKind::RespFail),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded wire frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub job_id: u64,
+    pub worker_id: u64,
+    pub compute_us: u64,
+    pub delay_us: u64,
+    pub payload: Vec<u8>,
+}
+
+fn saturating_micros(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
+impl Frame {
+    /// A master → worker job frame.
+    pub fn job(job_id: u64, worker_id: usize, payload: Vec<u8>) -> Frame {
+        Frame {
+            kind: FrameKind::Job,
+            job_id,
+            worker_id: worker_id as u64,
+            compute_us: 0,
+            delay_us: 0,
+            payload,
+        }
+    }
+
+    /// A master → worker shutdown frame.
+    pub fn shutdown() -> Frame {
+        Frame {
+            kind: FrameKind::Shutdown,
+            job_id: 0,
+            worker_id: 0,
+            compute_us: 0,
+            delay_us: 0,
+            payload: Vec::new(),
+        }
+    }
+
+    /// Package a worker's job report as a response frame (durations are
+    /// rounded to microseconds on the wire).
+    pub fn from_report(msg: FromWorker) -> Frame {
+        let FromWorker { job_id, worker_id, payload, compute, injected_delay } = msg;
+        let (kind, payload) = match payload {
+            Some(p) => (FrameKind::RespOk, p),
+            None => (FrameKind::RespFail, Vec::new()),
+        };
+        Frame {
+            kind,
+            job_id,
+            worker_id: worker_id as u64,
+            compute_us: saturating_micros(compute),
+            delay_us: saturating_micros(injected_delay),
+            payload,
+        }
+    }
+
+    /// Reconstruct a worker's job report from a response frame. Errs on
+    /// non-response kinds and on a response-failed frame that smuggles
+    /// payload bytes.
+    pub fn into_report(self) -> anyhow::Result<FromWorker> {
+        let payload = match self.kind {
+            FrameKind::RespOk => Some(self.payload),
+            FrameKind::RespFail => {
+                anyhow::ensure!(
+                    self.payload.is_empty(),
+                    "response-failed frame carries {} payload bytes",
+                    self.payload.len()
+                );
+                None
+            }
+            other => anyhow::bail!("frame kind {other:?} is not a worker response"),
+        };
+        Ok(FromWorker {
+            job_id: self.job_id,
+            worker_id: usize::try_from(self.worker_id)?,
+            payload,
+            compute: Duration::from_micros(self.compute_us),
+            injected_delay: Duration::from_micros(self.delay_us),
+        })
+    }
+}
+
+/// Serialize one frame. The payload follows the fixed 48-byte header;
+/// header and payload go out as ONE write, so a `TCP_NODELAY` socket sends
+/// one segment (and pays one syscall) per frame instead of two — this is
+/// the per-message hot path of the dispatch and response loops.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + frame.payload.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&frame.kind.to_u16().to_le_bytes());
+    buf.extend_from_slice(&frame.job_id.to_le_bytes());
+    buf.extend_from_slice(&frame.worker_id.to_le_bytes());
+    buf.extend_from_slice(&frame.compute_us.to_le_bytes());
+    buf.extend_from_slice(&frame.delay_us.to_le_bytes());
+    buf.extend_from_slice(&(frame.payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&frame.payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Read exactly `buf.len()` bytes, reporting how many were read before EOF.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+fn le_u16(buf: &[u8]) -> u16 {
+    u16::from_le_bytes(buf.try_into().expect("2-byte slice"))
+}
+
+fn le_u32(buf: &[u8]) -> u32 {
+    u32::from_le_bytes(buf.try_into().expect("4-byte slice"))
+}
+
+fn le_u64(buf: &[u8]) -> u64 {
+    u64::from_le_bytes(buf.try_into().expect("8-byte slice"))
+}
+
+/// Read and validate one frame. `Ok(None)` means the peer closed the stream
+/// cleanly on a frame boundary; every malformed case — truncated header or
+/// payload, bad magic, unknown version or kind, oversized declared payload
+/// length — is an `Err`.
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    let got = read_full(r, &mut header)?;
+    if got == 0 {
+        return Ok(None);
+    }
+    anyhow::ensure!(got == HEADER_LEN, "truncated frame header ({got}/{HEADER_LEN} bytes)");
+
+    let magic = le_u32(&header[0..4]);
+    anyhow::ensure!(magic == MAGIC, "bad frame magic {magic:#010x} (expected {MAGIC:#010x})");
+    let version = le_u16(&header[4..6]);
+    anyhow::ensure!(version == VERSION, "unsupported protocol version {version} (speak {VERSION})");
+    let kind = le_u16(&header[6..8]);
+    let kind = FrameKind::from_u16(kind)
+        .ok_or_else(|| anyhow::anyhow!("unknown frame kind {kind}"))?;
+    let payload_len = le_u64(&header[40..48]);
+    anyhow::ensure!(
+        payload_len <= MAX_PAYLOAD,
+        "declared payload length {payload_len} exceeds the {MAX_PAYLOAD}-byte frame limit"
+    );
+
+    let mut payload = vec![0u8; payload_len as usize];
+    let got = read_full(r, &mut payload)?;
+    anyhow::ensure!(got == payload.len(), "truncated frame payload ({got}/{payload_len} bytes)");
+    Ok(Some(Frame {
+        kind,
+        job_id: le_u64(&header[8..16]),
+        worker_id: le_u64(&header[16..24]),
+        compute_us: le_u64(&header[24..32]),
+        delay_us: le_u64(&header[32..40]),
+        payload,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng64;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        let mut cur = Cursor::new(buf);
+        let back = read_frame(&mut cur).unwrap().expect("one frame in");
+        // stream is exactly one frame long
+        assert!(read_frame(&mut cur).unwrap().is_none());
+        back
+    }
+
+    #[test]
+    fn every_kind_roundtrips() {
+        let frames = [
+            Frame::job(7, 3, vec![1, 2, 3, 4, 5]),
+            Frame::shutdown(),
+            Frame {
+                kind: FrameKind::RespOk,
+                job_id: u64::MAX,
+                worker_id: 31,
+                compute_us: 1234,
+                delay_us: 99,
+                payload: vec![0xAB; 1000],
+            },
+            Frame {
+                kind: FrameKind::RespFail,
+                job_id: 0,
+                worker_id: 0,
+                compute_us: 0,
+                delay_us: 0,
+                payload: Vec::new(),
+            },
+        ];
+        for frame in frames {
+            assert_eq!(roundtrip(&frame), frame);
+        }
+    }
+
+    #[test]
+    fn random_payloads_roundtrip() {
+        let mut rng = Rng64::seeded(41);
+        for _ in 0..50 {
+            let len = rng.below_usize(4096);
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let frame = Frame::job(rng.next_u64(), rng.below_usize(64), payload);
+            assert_eq!(roundtrip(&frame), frame);
+        }
+    }
+
+    #[test]
+    fn every_truncation_point_is_a_clean_error() {
+        let frame = Frame::job(11, 2, vec![9u8; 64]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        for cut in 0..buf.len() {
+            let mut cur = Cursor::new(&buf[..cut]);
+            let res = read_frame(&mut cur);
+            if cut == 0 {
+                assert!(matches!(res, Ok(None)), "empty stream is a clean EOF");
+            } else {
+                let err = res.unwrap_err().to_string();
+                assert!(err.contains("truncated"), "cut at {cut}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_kind_rejected() {
+        let frame = Frame::job(1, 0, vec![7u8; 8]);
+        let mut good = Vec::new();
+        write_frame(&mut good, &frame).unwrap();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = read_frame(&mut Cursor::new(bad_magic)).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 0xEE;
+        let err = read_frame(&mut Cursor::new(bad_version)).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        let mut bad_kind = good.clone();
+        bad_kind[6] = 0x7F;
+        let err = read_frame(&mut Cursor::new(bad_kind)).unwrap_err().to_string();
+        assert!(err.contains("kind"), "{err}");
+    }
+
+    #[test]
+    fn oversized_declared_payload_rejected_before_allocation() {
+        let frame = Frame::job(1, 0, Vec::new());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        // forge payload_len = 2^40 without materializing any payload
+        buf[40..48].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn report_conversion_roundtrips_and_validates() {
+        let ok = FromWorker {
+            job_id: 5,
+            worker_id: 2,
+            payload: Some(vec![1, 2, 3]),
+            compute: Duration::from_micros(777),
+            injected_delay: Duration::from_micros(12),
+        };
+        let back = Frame::from_report(ok).into_report().unwrap();
+        assert_eq!(back.job_id, 5);
+        assert_eq!(back.worker_id, 2);
+        assert_eq!(back.payload.as_deref(), Some(&[1u8, 2, 3][..]));
+        assert_eq!(back.compute, Duration::from_micros(777));
+
+        let fail = FromWorker {
+            job_id: 6,
+            worker_id: 1,
+            payload: None,
+            compute: Duration::ZERO,
+            injected_delay: Duration::ZERO,
+        };
+        let back = Frame::from_report(fail).into_report().unwrap();
+        assert!(back.payload.is_none());
+
+        // a response-failed frame smuggling bytes is a protocol error
+        let mut forged = Frame::shutdown();
+        forged.kind = FrameKind::RespFail;
+        forged.payload = vec![1];
+        assert!(forged.into_report().is_err());
+        // a job frame is not a report
+        assert!(Frame::job(0, 0, Vec::new()).into_report().is_err());
+    }
+}

@@ -1,4 +1,8 @@
-//! The worker node: an OS thread running a receive → compute → reply loop.
+//! The worker node: a receive → compute → reply loop, runnable either as an
+//! in-process OS thread ([`spawn_worker`], used by
+//! [`super::transport::ChannelTransport`]) or inside a TCP daemon serving a
+//! socket ([`super::daemon`]). Both paths share [`process_job`], so a job
+//! is handled identically wherever the worker lives.
 //!
 //! Workers are scheme-agnostic: they apply a [`ShareCompute`] backend
 //! (native ring kernels, or the AOT XLA executable via
@@ -7,11 +11,11 @@
 //! master owns all code-specific logic.
 
 use super::straggler::StragglerModel;
-use super::transport::{FromWorker, ToWorker};
+use super::transport::{fail_report, FromWorker, ToWorker};
 use crate::util::rng::Rng64;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// The worker-side compute backend: serialized share in, serialized response
 /// out. Implementations in [`crate::coordinator::runner`] (native) and
@@ -24,7 +28,57 @@ pub trait ShareCompute: Send + Sync {
     }
 }
 
-/// Spawn one worker thread. Returns its join handle.
+/// The deterministic RNG stream of worker `worker_id` under coordinator
+/// seed `seed`: the `worker_id`-th fork of a seeder over `seed`. A TCP
+/// daemon configured with the same seed draws the identical straggler
+/// stream for worker `i` that an in-process pool thread `i` would — which
+/// is what makes channel-vs-TCP runs comparable draw-for-draw.
+pub fn worker_rng(seed: u64, worker_id: usize) -> Rng64 {
+    let mut seeder = Rng64::seeded(seed);
+    for _ in 0..worker_id {
+        seeder.next_u64();
+    }
+    seeder.fork()
+}
+
+/// Handle one job exactly as the worker loop does: sample the straggler
+/// model (a `None` draw = fail-stop — the job is dropped and reported
+/// byte-free so the master's job retirement stays deterministic), sleep any
+/// injected delay, run the compute backend, and package the report. A
+/// compute error (e.g. a malformed payload) is reported as a clean job
+/// failure, never a panic.
+pub fn process_job(
+    worker_id: usize,
+    job_id: u64,
+    payload: Vec<u8>,
+    compute: &dyn ShareCompute,
+    straggler: &StragglerModel,
+    rng: &mut Rng64,
+) -> FromWorker {
+    let Some(delay) = straggler.sample(worker_id, rng) else {
+        // Fail-stop: drop the job. The master never sees response *bytes*
+        // (`payload: None` is invisible to collection, exactly like silence
+        // on a network), but the empty report lets the response router
+        // retire the job's table entry once every worker has been heard
+        // from.
+        return fail_report(job_id, worker_id);
+    };
+    if !delay.is_zero() {
+        std::thread::sleep(delay);
+    }
+    let t0 = Instant::now();
+    let result = compute.compute(worker_id, &payload);
+    let compute_time = t0.elapsed();
+    FromWorker {
+        job_id,
+        worker_id,
+        payload: result.ok(),
+        compute: compute_time,
+        injected_delay: delay,
+    }
+}
+
+/// Spawn one in-process worker thread. Returns its join handle.
 pub fn spawn_worker(
     worker_id: usize,
     rx: Receiver<ToWorker>,
@@ -40,45 +94,79 @@ pub fn spawn_worker(
                 match msg {
                     ToWorker::Shutdown => break,
                     ToWorker::Job { job_id, payload } => {
-                        let delay = straggler.sample(worker_id, &mut rng);
-                        let Some(delay) = delay else {
-                            // Fail-stop: drop the job. The master never sees
-                            // response *bytes* (`payload: None` is invisible
-                            // to collection, exactly like silence on a
-                            // network), but the empty report lets the
-                            // response router retire the job's table entry
-                            // once every worker has been heard from.
-                            let _ = tx.send(FromWorker {
-                                job_id,
-                                worker_id,
-                                payload: None,
-                                compute: Duration::ZERO,
-                                injected_delay: Duration::ZERO,
-                            });
-                            continue;
-                        };
-                        if !delay.is_zero() {
-                            std::thread::sleep(delay);
-                        }
-                        let t0 = Instant::now();
-                        let result = compute.compute(worker_id, &payload);
-                        let compute_time = t0.elapsed();
-                        let payload = match result {
-                            Ok(bytes) => Some(bytes),
-                            Err(_) => None,
-                        };
+                        let report = process_job(
+                            worker_id,
+                            job_id,
+                            payload,
+                            &*compute,
+                            &straggler,
+                            &mut rng,
+                        );
                         // master may have hung up (job already satisfied) —
                         // a send error is not a worker error.
-                        let _ = tx.send(FromWorker {
-                            job_id,
-                            worker_id,
-                            payload,
-                            compute: compute_time,
-                            injected_delay: delay,
-                        });
+                        let _ = tx.send(report);
                     }
                 }
             }
         })
         .expect("failed to spawn worker thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    struct Echo;
+    impl ShareCompute for Echo {
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+            Ok(payload.to_vec())
+        }
+    }
+
+    struct AlwaysErr;
+    impl ShareCompute for AlwaysErr {
+        fn compute(&self, _w: usize, _payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+            anyhow::bail!("broken backend")
+        }
+    }
+
+    #[test]
+    fn worker_rng_matches_sequential_forking() {
+        // worker_rng(seed, i) must equal the i-th fork of one shared seeder
+        // (the pre-daemon pool construction), stream-for-stream.
+        let mut seeder = Rng64::seeded(77);
+        for wid in 0..8 {
+            let mut from_pool = seeder.fork();
+            let mut from_fn = worker_rng(77, wid);
+            for _ in 0..16 {
+                assert_eq!(from_pool.next_u64(), from_fn.next_u64(), "worker {wid}");
+            }
+        }
+    }
+
+    #[test]
+    fn process_job_success_failure_and_fail_stop() {
+        let mut rng = Rng64::seeded(1);
+        let ok = process_job(0, 7, vec![1, 2], &Echo, &StragglerModel::None, &mut rng);
+        assert_eq!((ok.job_id, ok.worker_id), (7, 0));
+        assert_eq!(ok.payload.as_deref(), Some(&[1u8, 2][..]));
+
+        let err = process_job(0, 8, vec![1], &AlwaysErr, &StragglerModel::None, &mut rng);
+        assert!(err.payload.is_none(), "compute errors are clean job failures");
+
+        let dropped =
+            process_job(3, 9, vec![1], &Echo, &StragglerModel::fail_stop([3]), &mut rng);
+        assert!(dropped.payload.is_none());
+        assert_eq!(dropped.compute, Duration::ZERO);
+    }
+
+    #[test]
+    fn process_job_reports_injected_delay() {
+        let mut rng = Rng64::seeded(2);
+        let slow = StragglerModel::fixed_slow([0], Duration::from_millis(15));
+        let report = process_job(0, 1, vec![9], &Echo, &slow, &mut rng);
+        assert_eq!(report.injected_delay, Duration::from_millis(15));
+        assert!(report.payload.is_some());
+    }
 }

@@ -17,10 +17,19 @@
 //! the pipelined pass's own. Every decoded product is verified against a
 //! locally computed `A_k·B_k`, which also certifies warm-cache decodes
 //! bit-identical to cold ones (the first decode of each subset is cold).
+//!
+//! The pool behind each pass is transport-selectable ([`ServeTransport`]):
+//! the in-process channel pool, freshly spawned loopback TCP daemons
+//! (identical straggler draws — the only delta vs in-process is the wire,
+//! which is how the `serving_throughput` bench prices the transport), or
+//! externally started `gr-cdmm worker` daemons via `--connect`.
 
 use crate::codes::registry::{self, SchemeConfig};
 use crate::codes::DynScheme;
-use crate::coordinator::{Coordinator, JobHandle, NativeCompute, StragglerModel};
+use crate::coordinator::runner::make_coordinator;
+use crate::coordinator::{
+    Coordinator, JobHandle, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
+};
 use crate::ring::matrix::Matrix;
 use crate::ring::zq::Zq;
 use crate::util::bench::markdown_table;
@@ -29,6 +38,34 @@ use crate::util::rng::Rng64;
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Which master ↔ worker transport a serving run uses.
+#[derive(Clone, Debug, Default)]
+pub enum ServeTransport {
+    /// The in-process worker pool over mpsc channels (the default).
+    #[default]
+    InProcess,
+    /// Spawn one real TCP worker daemon per worker on an ephemeral loopback
+    /// port — fresh daemons per pass, same straggler model and seed, so the
+    /// draws match [`ServeTransport::InProcess`] exactly and the only delta
+    /// is the wire. Self-contained: no external processes needed.
+    TcpLoopback,
+    /// Connect to externally started `gr-cdmm worker` daemons (one
+    /// endpoint per worker). The daemons own compute and straggler
+    /// injection; both passes reconnect to the same daemons.
+    Connect(Vec<String>),
+}
+
+impl ServeTransport {
+    /// Short label for reports (`channel`, `tcp-loopback`, `tcp`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServeTransport::InProcess => "channel",
+            ServeTransport::TcpLoopback => "tcp-loopback",
+            ServeTransport::Connect(_) => "tcp",
+        }
+    }
+}
 
 /// One serving run's shape.
 #[derive(Clone, Debug)]
@@ -48,12 +85,16 @@ pub struct ServeConfig {
     /// Verify every decoded product against a local `A·B` (also certifies
     /// warm-cache decodes identical to cold ones).
     pub verify: bool,
+    /// Master ↔ worker transport (see [`ServeTransport`]).
+    pub transport: ServeTransport,
 }
 
 /// Measured serving results.
 #[derive(Clone, Debug)]
 pub struct ServeRecord {
     pub scheme: String,
+    /// Transport label (`channel`, `tcp-loopback`, `tcp`).
+    pub transport: String,
     pub n_workers: usize,
     pub size: usize,
     pub jobs: usize,
@@ -171,6 +212,52 @@ fn run_pipelined(
     Ok((t0.elapsed().as_secs_f64(), ok))
 }
 
+/// Build one pass's pool for the configured transport: the in-process
+/// coordinator, or a TCP coordinator against freshly spawned loopback
+/// daemons (joined after the pass), or a TCP coordinator against external
+/// endpoints. The scheme instance passed in is the *master's* (its plan
+/// cache is the one reported); loopback daemons share it as their compute
+/// backend, exactly like the in-process pool does.
+fn make_pool(
+    cfg: &ServeConfig,
+    scheme: &Arc<dyn DynScheme>,
+) -> anyhow::Result<(Coordinator, Vec<WorkerDaemon>)> {
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(scheme)));
+    match &cfg.transport {
+        ServeTransport::TcpLoopback => {
+            let daemons: Vec<WorkerDaemon> = (0..cfg.n_workers)
+                .map(|_| {
+                    WorkerDaemon::spawn_local(
+                        Arc::clone(&backend),
+                        cfg.straggler.clone(),
+                        cfg.seed,
+                        1,
+                    )
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+            Ok((Coordinator::connect_tcp(&addrs)?, daemons))
+        }
+        // In-process and --connect are exactly the runner's two pool
+        // flavors; the endpoint-count validation lives there.
+        ServeTransport::InProcess => {
+            let coord =
+                make_coordinator(cfg.n_workers, backend, cfg.straggler.clone(), cfg.seed, None)?;
+            Ok((coord, Vec::new()))
+        }
+        ServeTransport::Connect(addrs) => {
+            let coord = make_coordinator(
+                cfg.n_workers,
+                backend,
+                cfg.straggler.clone(),
+                cfg.seed,
+                Some(addrs.as_slice()),
+            )?;
+            Ok((coord, Vec::new()))
+        }
+    }
+}
+
 /// Run the full comparison (sequential pass, then pipelined pass on fresh
 /// state) and return the measured record.
 pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
@@ -187,31 +274,28 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
     let requests = make_requests(cfg, batch);
 
     let seq_scheme = registry::build(&cfg.scheme, &reg_cfg)?;
-    let mut seq_coord = Coordinator::new(
-        cfg.n_workers,
-        Arc::new(NativeCompute::new(Arc::clone(&seq_scheme))),
-        cfg.straggler.clone(),
-        cfg.seed,
-    );
+    let (mut seq_coord, seq_daemons) = make_pool(cfg, &seq_scheme)?;
     let (seq_elapsed_s, seq_ok) = run_sequential(seq_scheme.as_ref(), &mut seq_coord, &requests)?;
     seq_coord.shutdown();
+    for daemon in seq_daemons {
+        daemon.join()?;
+    }
 
     let pipe_scheme = registry::build(&cfg.scheme, &reg_cfg)?;
-    let mut pipe_coord = Coordinator::new(
-        cfg.n_workers,
-        Arc::new(NativeCompute::new(Arc::clone(&pipe_scheme))),
-        cfg.straggler.clone(),
-        cfg.seed,
-    );
+    let (mut pipe_coord, pipe_daemons) = make_pool(cfg, &pipe_scheme)?;
     let (pipe_elapsed_s, pipe_ok) =
         run_pipelined(pipe_scheme.as_ref(), &mut pipe_coord, &requests, cfg.inflight)?;
     pipe_coord.shutdown();
+    for daemon in pipe_daemons {
+        daemon.join()?;
+    }
 
     let (plan_cache_hits, plan_cache_misses) = pipe_scheme.plan_cache_stats();
     let seq_jobs_per_s = cfg.jobs as f64 / seq_elapsed_s.max(1e-12);
     let pipe_jobs_per_s = cfg.jobs as f64 / pipe_elapsed_s.max(1e-12);
     Ok(ServeRecord {
         scheme: cfg.scheme.clone(),
+        transport: cfg.transport.label().to_string(),
         n_workers: cfg.n_workers,
         size: cfg.size,
         jobs: cfg.jobs,
@@ -234,6 +318,7 @@ pub fn render(records: &[ServeRecord]) -> String {
         .map(|r| {
             vec![
                 r.scheme.clone(),
+                r.transport.clone(),
                 r.size.to_string(),
                 r.jobs.to_string(),
                 r.inflight.to_string(),
@@ -248,6 +333,7 @@ pub fn render(records: &[ServeRecord]) -> String {
     markdown_table(
         &[
             "scheme",
+            "transport",
             "size",
             "jobs",
             "inflight",
@@ -265,6 +351,7 @@ impl ServeRecord {
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("scheme", self.scheme.as_str())
+            .set("transport", self.transport.as_str())
             .set("n_workers", self.n_workers)
             .set("size", self.size)
             .set("jobs", self.jobs)
@@ -299,6 +386,7 @@ mod tests {
             straggler: StragglerModel::fixed_slow([0, 1], Duration::from_millis(10)),
             seed: 77,
             verify: true,
+            transport: ServeTransport::InProcess,
         }
     }
 
@@ -317,6 +405,27 @@ mod tests {
     fn serving_handles_batch_schemes() {
         let rec = run(&small_cfg("csa")).unwrap();
         assert!(rec.verified);
+    }
+
+    #[test]
+    fn serving_over_tcp_loopback_verifies() {
+        // Same shape as the channel run, but every pass drives freshly
+        // spawned loopback daemons over real sockets; verification inside
+        // `run` certifies decode correctness end-to-end over the wire.
+        let mut cfg = small_cfg("ep-rmfe-1");
+        cfg.transport = ServeTransport::TcpLoopback;
+        let rec = run(&cfg).unwrap();
+        assert!(rec.verified, "every TCP-served job must decode correctly");
+        assert_eq!(rec.transport, "tcp-loopback");
+        assert_eq!(rec.plan_cache_hits + rec.plan_cache_misses, 6);
+    }
+
+    #[test]
+    fn connect_mode_validates_endpoint_count() {
+        let mut cfg = small_cfg("ep-rmfe-1");
+        cfg.transport = ServeTransport::Connect(vec!["127.0.0.1:1".to_string()]);
+        let err = run(&cfg).unwrap_err();
+        assert!(err.to_string().contains("endpoint"), "{err}");
     }
 
     #[test]

@@ -23,8 +23,11 @@
 //!   `batch_size() == 1`) covers all of them; [`codes::DynScheme`] is the
 //!   object-safe byte-payload facade and [`codes::registry`] builds schemes
 //!   by name.
-//! * [`coordinator`] — the L3 distributed runtime: master node, worker pool on
-//!   OS threads, byte-accounted transport, straggler injection, metrics.
+//! * [`coordinator`] — the L3 distributed runtime: master node, pipelined
+//!   multi-job serving, straggler injection, metrics — over a pluggable,
+//!   byte-accounted `Transport`: the in-process worker pool on OS threads
+//!   (mpsc channels), or remote `gr-cdmm worker` daemons speaking a
+//!   length-prefixed versioned wire protocol over TCP.
 //! * [`runtime`] — the PJRT bridge: loads AOT-compiled `artifacts/*.hlo.txt`
 //!   (lowered once from JAX/Pallas by `python/compile/aot.py`) and executes
 //!   worker-node coefficient-plane matmuls through XLA. Python is never on the

@@ -10,15 +10,28 @@
 //! gr-cdmm info
 //! gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 8 --size 256
 //!              [--straggler none|slow|exp|fail] [--backend native|xla] [--seed k]
+//!              [--connect HOST:PORT,HOST:PORT,...]
 //! gr-cdmm serve --scheme ep-rmfe-1 --workers 8 --size 128 --jobs 16 --inflight 4
 //!              [--straggler none|slow|exp|fail] [--no-verify] [--seed k] [--out results]
+//!              [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
+//! gr-cdmm worker --listen HOST:PORT --scheme ep-rmfe-1 --workers 8
+//!              [--straggler none|slow|exp|fail] [--seed k] [--once | --conns K]
 //! gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
 //!              [--sizes 128,256,...] [--full] [--reps k] [--out results]
 //! ```
+//!
+//! `worker` turns this binary into a remote worker daemon: it serves the
+//! same receive → compute → reply loop the in-process pool runs, over a
+//! TCP socket speaking the versioned `coordinator::wire` protocol. Start
+//! one daemon per worker (ports of your choice), then point `serve` or
+//! `run` at them with `--connect` — master and daemons must agree on
+//! `--scheme` and `--workers`.
 
 use gr_cdmm::codes::registry::{self, SchemeConfig};
-use gr_cdmm::coordinator::runner::{run_erased, NativeCompute};
-use gr_cdmm::coordinator::{Coordinator, JobMetrics, ShareCompute, StragglerModel};
+use gr_cdmm::coordinator::daemon::{self, DaemonConfig};
+use gr_cdmm::coordinator::runner::{make_coordinator, run_erased, NativeCompute};
+use gr_cdmm::coordinator::{JobMetrics, ShareCompute, StragglerModel};
+use gr_cdmm::experiments::serving::ServeTransport;
 use gr_cdmm::experiments::{figs, rmfe35, serving, table1, DEFAULT_SIZES, PAPER_SIZES};
 use gr_cdmm::ring::extension::Extension;
 use gr_cdmm::ring::matrix::Matrix;
@@ -39,6 +52,7 @@ fn main() {
         "info" => cmd_info(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "experiments" => cmd_experiments(&args),
         _ => {
             print_help();
@@ -57,12 +71,20 @@ fn print_help() {
 
 USAGE:
   gr-cdmm info
-  gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 8|16|32 --size 256
+  gr-cdmm run  --scheme ep|ep-rmfe-1|ep-rmfe-2 --workers 4|8|16|32 --size 256
                [--straggler none|slow|exp|fail] [--backend native|xla] [--seed K]
-  gr-cdmm serve --scheme NAME --workers 8|16|32 --size 128 --jobs 16 --inflight 4
+               [--connect HOST:PORT,HOST:PORT,...]
+  gr-cdmm serve --scheme NAME --workers 4|8|16|32 --size 128 --jobs 16 --inflight 4
                [--straggler none|slow|exp|fail] [--no-verify] [--seed K] [--out DIR]
+               [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
+  gr-cdmm worker --listen HOST:PORT --scheme NAME --workers 4|8|16|32
+               [--straggler none|slow|exp|fail] [--seed K] [--once | --conns K]
   gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
-               [--sizes 128,256] [--full] [--reps K] [--out DIR]"
+               [--sizes 128,256] [--full] [--reps K] [--out DIR]
+
+Multi-process quickstart: start one `worker` daemon per worker (ports of
+your choice), then `serve --connect addr1,addr2,...` — the scheme name and
+worker count must match on both sides."
     );
 }
 
@@ -101,6 +123,17 @@ fn parse_straggler(args: &Args, n_workers: usize) -> StragglerModel {
         "fail" => StragglerModel::fail_stop([n_workers - 1]),
         _ => StragglerModel::None,
     }
+}
+
+/// `--connect a,b,c` → endpoint list (None when the flag is absent).
+fn parse_connect(args: &Args) -> Option<Vec<String>> {
+    args.get("connect").map(|list| {
+        list.split(',')
+            .map(str::trim)
+            .filter(|addr| !addr.is_empty())
+            .map(str::to_string)
+            .collect()
+    })
 }
 
 fn report(name: &str, m: &JobMetrics, ok: bool) {
@@ -153,7 +186,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     } else {
         Arc::new(NativeCompute::new(Arc::clone(&scheme)))
     };
-    let mut coord = Coordinator::new(n_workers, backend, straggler, seed);
+    let connect = parse_connect(args);
+    let mut coord = make_coordinator(n_workers, backend, straggler, seed, connect.as_deref())?;
     let (c, m) = run_erased(
         &base,
         scheme.as_ref(),
@@ -170,6 +204,18 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// coordinator with `--inflight` jobs overlapping, against the sequential
 /// submit+wait baseline on identical state.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let transport = match (parse_connect(args), args.get("transport")) {
+        (Some(_), Some(_)) => anyhow::bail!(
+            "--connect and --transport are mutually exclusive (--connect already \
+             selects the external-daemon TCP transport)"
+        ),
+        (Some(addrs), None) => ServeTransport::Connect(addrs),
+        (None, Some("tcp-loopback")) => ServeTransport::TcpLoopback,
+        (None, Some("channel")) | (None, None) => ServeTransport::InProcess,
+        (None, Some(other)) => {
+            anyhow::bail!("unknown --transport `{other}` (channel | tcp-loopback | --connect)")
+        }
+    };
     let cfg = serving::ServeConfig {
         scheme: args.get_or("scheme", "ep-rmfe-1").to_string(),
         n_workers: args.get_usize("workers", 8),
@@ -179,9 +225,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         straggler: parse_straggler(args, args.get_usize("workers", 8)),
         seed: args.get_u64("seed", 42),
         verify: !args.flag("no-verify"),
+        transport,
     };
     let rec = serving::run(&cfg)?;
-    println!("# serving throughput — {} jobs, {} in flight\n", rec.jobs, rec.inflight);
+    println!(
+        "# serving throughput — {} jobs, {} in flight, {} transport\n",
+        rec.jobs, rec.inflight, rec.transport
+    );
     println!("{}", serving::render(std::slice::from_ref(&rec)));
     println!(
         "pipelined {:.2} jobs/s vs sequential {:.2} jobs/s ({:.2}x); \
@@ -201,6 +251,35 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(rec.verified, "decoded outputs diverged from the local reference");
     Ok(())
+}
+
+/// Worker daemon mode: serve the worker loop over a TCP socket. The scheme
+/// (and the worker count it is parameterized for) must match what the
+/// coordinator will use — exactly like a deployed executor fleet agreeing
+/// on a binary + config.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("--listen HOST:PORT is required"))?;
+    let n_workers = args.get_usize("workers", 8);
+    let scheme_name = args.get_or("scheme", "ep-rmfe-1");
+    let cfg = SchemeConfig::for_workers(n_workers)?;
+    let scheme = registry::build(scheme_name, &cfg)?;
+    let compute: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(scheme));
+    let straggler = parse_straggler(args, n_workers);
+    let seed = args.get_u64("seed", 42);
+    let max_conns = if args.flag("once") {
+        Some(1)
+    } else if let Some(conns) = args.get("conns") {
+        let parsed = conns
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--conns expects a connection count, got `{conns}`"))?;
+        anyhow::ensure!(parsed >= 1, "--conns must be >= 1");
+        Some(parsed)
+    } else {
+        None
+    };
+    daemon::run(listen, compute, DaemonConfig { straggler, seed }, max_conns)
 }
 
 fn write_out(

@@ -1,0 +1,307 @@
+//! Transport-layer integration: the same coded job batch must behave
+//! identically over the in-process `ChannelTransport` and the socket-backed
+//! `TcpTransport` (loopback daemons) — identical decoded products and
+//! identical upload/download byte accounting under deterministic straggler
+//! draws — and every way a TCP peer can misbehave (disconnects mid-job,
+//! garbage bytes, truncated frames, oversized declared payloads) must
+//! surface as a clean per-job failure, never a panic or a hang.
+
+use gr_cdmm::codes::registry::{self, SchemeConfig};
+use gr_cdmm::codes::DynScheme;
+use gr_cdmm::coordinator::wire::{self, Frame, FrameKind};
+use gr_cdmm::coordinator::{
+    Coordinator, JobHandle, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
+};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::rng::Rng64;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Echo backend for scheme-free transport tests.
+struct Echo;
+impl ShareCompute for Echo {
+    fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        Ok(payload.to_vec())
+    }
+}
+
+/// What one pass over a job batch measured: decoded outputs plus per-job
+/// and aggregate byte counters (read after shutdown, when every late
+/// response has been routed and attributed).
+struct BatchResult {
+    decoded: Vec<Vec<Vec<u8>>>,
+    per_job: Vec<(u64, u64, u64)>, // (upload, download_used, download_arrived)
+    aggregate: (u64, u64, u64),
+}
+
+/// Submit `sizes.len()` overlapping jobs (distinct sizes ⇒ distinct byte
+/// volumes), collect them all, decode, shut down, and read the counters.
+fn run_batch(
+    scheme: &Arc<dyn DynScheme>,
+    mut coord: Coordinator,
+    sizes: &[usize],
+    seed: u64,
+) -> BatchResult {
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(seed);
+    let mut handles: Vec<JobHandle> = Vec::new();
+    let mut expected = Vec::new();
+    for &size in sizes {
+        let a = Matrix::random(&base, size, size, &mut rng);
+        let b = Matrix::random(&base, size, size, &mut rng);
+        expected.push(Matrix::matmul(&base, &a, &b));
+        let payloads = scheme
+            .encode_bytes(&[a.to_bytes(&base)], &[b.to_bytes(&base)])
+            .unwrap();
+        handles.push(coord.submit(payloads, scheme.recovery_threshold()).unwrap());
+    }
+    let mut decoded = Vec::new();
+    let mut job_counters = Vec::new();
+    for (handle, want) in handles.into_iter().zip(&expected) {
+        job_counters.push(handle.counters().clone());
+        let (collected, _) = handle.wait().unwrap();
+        let responses: Vec<(usize, &[u8])> =
+            collected.iter().map(|c| (c.worker_id, c.payload.as_slice())).collect();
+        let out = scheme.decode_bytes(&responses).unwrap();
+        assert_eq!(
+            Matrix::from_bytes(&base, &out[0]).unwrap(),
+            *want,
+            "decoded product must match the local reference"
+        );
+        decoded.push(out);
+    }
+    let aggregate = coord.counters().clone();
+    coord.shutdown(); // drains every worker: late responses are all routed
+    BatchResult {
+        decoded,
+        per_job: job_counters
+            .iter()
+            .map(|c| (c.upload_total(), c.download_used_total(), c.download_arrived_total()))
+            .collect(),
+        aggregate: (
+            aggregate.upload_total(),
+            aggregate.download_used_total(),
+            aggregate.download_arrived_total(),
+        ),
+    }
+}
+
+/// One channel-vs-TCP comparison under a given (deterministic) straggler
+/// model: same scheme, same job sizes, same seeds on both sides.
+fn assert_tcp_matches_channel(straggler: StragglerModel, seed: u64) {
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let sizes = [8usize, 16, 24];
+
+    let chan_scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let chan_coord = Coordinator::new(
+        8,
+        Arc::new(NativeCompute::new(Arc::clone(&chan_scheme))),
+        straggler.clone(),
+        seed,
+    );
+    assert_eq!(chan_coord.transport_name(), "channel");
+    let chan = run_batch(&chan_scheme, chan_coord, &sizes, seed ^ 0xA5);
+
+    let tcp_scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend: Arc<dyn ShareCompute> =
+        Arc::new(NativeCompute::new(Arc::clone(&tcp_scheme)));
+    let daemons: Vec<WorkerDaemon> = (0..8)
+        .map(|_| {
+            WorkerDaemon::spawn_local(Arc::clone(&backend), straggler.clone(), seed, 1).unwrap()
+        })
+        .collect();
+    let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+    let tcp_coord = Coordinator::connect_tcp(&addrs).unwrap();
+    assert_eq!(tcp_coord.transport_name(), "tcp");
+    let tcp = run_batch(&tcp_scheme, tcp_coord, &sizes, seed ^ 0xA5);
+    for daemon in daemons {
+        daemon.join().unwrap();
+    }
+
+    // Identical products, byte for byte (the inputs are identical, and ring
+    // arithmetic is exact on both sides of the wire).
+    assert_eq!(chan.decoded, tcp.decoded, "decoded outputs diverged across transports");
+    // Identical accounting: upload, used and arrived, per job and overall.
+    assert_eq!(chan.per_job, tcp.per_job, "per-job byte counters diverged across transports");
+    assert_eq!(chan.aggregate, tcp.aggregate, "aggregate counters diverged across transports");
+    // And the analytic model holds for both (spot-check through one side).
+    for (&size, &(upload, used, _)) in sizes.iter().zip(&tcp.per_job) {
+        assert_eq!(upload as usize, tcp_scheme.upload_bytes(size, size, size));
+        assert_eq!(used as usize, tcp_scheme.download_bytes(size, size, size));
+    }
+}
+
+#[test]
+fn tcp_loopback_matches_channel_no_stragglers() {
+    assert_tcp_matches_channel(StragglerModel::None, 900);
+}
+
+#[test]
+fn tcp_loopback_matches_channel_fixed_slow() {
+    assert_tcp_matches_channel(
+        StragglerModel::fixed_slow([0, 1], Duration::from_millis(15)),
+        901,
+    );
+}
+
+#[test]
+fn tcp_loopback_matches_channel_fail_stop() {
+    // Fail-stop daemons still read the share (upload counted on both
+    // transports) and answer with a byte-free failure report.
+    assert_tcp_matches_channel(StragglerModel::fail_stop([2, 5]), 902);
+}
+
+/// A rogue "worker": accepts one connection, optionally reads `read_frames`
+/// job frames, writes `reply` verbatim, then slams the connection.
+fn rogue_listener(read_frames: usize, reply: Vec<u8>) -> (String, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        for _ in 0..read_frames {
+            if wire::read_frame(&mut reader).ok().flatten().is_none() {
+                break;
+            }
+        }
+        let _ = stream.write_all(&reply);
+        // dropping both halves closes the connection mid-job
+    });
+    (addr, handle)
+}
+
+/// Build a 2-worker TCP pool: worker 0 is a healthy Echo daemon, worker 1
+/// is the given rogue endpoint.
+fn echo_plus_rogue(rogue_addr: String) -> (Coordinator, WorkerDaemon) {
+    let daemon =
+        WorkerDaemon::spawn_local(Arc::new(Echo), StragglerModel::None, 7, 1).unwrap();
+    let addrs = vec![daemon.addr(), rogue_addr];
+    (Coordinator::connect_tcp(&addrs).unwrap(), daemon)
+}
+
+/// The healthy worker still answers and the rogue one degrades to
+/// fail-stop: `need = 1` succeeds, `need = 2` fails fast with "cannot
+/// complete" — and a *second* job on the now-dead link fails just as
+/// cleanly (the writer side synthesizes the failure report).
+fn assert_rogue_degrades_to_fail_stop(rogue_addr: String, rogue: JoinHandle<()>) {
+    let (mut coord, daemon) = echo_plus_rogue(rogue_addr);
+    coord.timeout = Duration::from_secs(30); // a hang must not masquerade as a straggler
+
+    let payloads = || vec![vec![1u8; 16], vec![2u8; 16]];
+    let handle = coord.submit(payloads(), 1).unwrap();
+    let (got, _) = handle.wait().unwrap();
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].worker_id, 0, "only the healthy worker can answer");
+
+    let err = coord.submit(payloads(), 2).unwrap().wait().unwrap_err();
+    assert!(err.to_string().contains("cannot complete"), "{err}");
+
+    // a later job on the (by now) dead link fails just as cleanly, whether
+    // the writer synthesizes the report at dispatch or the reader's drain
+    // beats it to the punch
+    let err = coord.submit(payloads(), 2).unwrap().wait().unwrap_err();
+    assert!(err.to_string().contains("cannot complete"), "{err}");
+
+    coord.shutdown();
+    daemon.join().unwrap();
+    rogue.join().unwrap();
+}
+
+#[test]
+fn mid_job_disconnect_is_a_clean_per_job_failure() {
+    // reads one job frame, never replies, closes
+    let (addr, rogue) = rogue_listener(1, Vec::new());
+    assert_rogue_degrades_to_fail_stop(addr, rogue);
+}
+
+#[test]
+fn garbage_frames_are_a_clean_per_job_failure() {
+    // replies with 64 bytes of garbage instead of a response frame
+    let (addr, rogue) = rogue_listener(1, vec![0xAB; 64]);
+    assert_rogue_degrades_to_fail_stop(addr, rogue);
+}
+
+/// A syntactically valid response-ok frame from worker 1 for job 0.
+fn ok_response_bytes(payload_len: usize) -> Vec<u8> {
+    let mut buf = Vec::new();
+    wire::write_frame(
+        &mut buf,
+        &Frame {
+            kind: FrameKind::RespOk,
+            job_id: 0,
+            worker_id: 1,
+            compute_us: 0,
+            delay_us: 0,
+            payload: vec![9u8; payload_len],
+        },
+    )
+    .unwrap();
+    buf
+}
+
+#[test]
+fn truncated_response_frame_is_a_clean_per_job_failure() {
+    // replies with a valid frame cut mid-payload, then closes
+    let mut reply = ok_response_bytes(100);
+    reply.truncate(wire::HEADER_LEN + 12);
+    let (addr, rogue) = rogue_listener(1, reply);
+    assert_rogue_degrades_to_fail_stop(addr, rogue);
+}
+
+#[test]
+fn oversized_declared_payload_is_a_clean_per_job_failure() {
+    // a syntactically valid response header declaring a 1 TiB payload: the
+    // reader must reject it before allocating and fail the link over
+    let mut reply = ok_response_bytes(0);
+    reply[40..48].copy_from_slice(&(1u64 << 40).to_le_bytes());
+    let (addr, rogue) = rogue_listener(1, reply);
+    assert_rogue_degrades_to_fail_stop(addr, rogue);
+}
+
+#[test]
+fn immediate_disconnect_fails_jobs_at_dispatch() {
+    // the rogue accepts and closes without reading anything: by the time
+    // jobs are submitted the link is (or is about to be) dead; either the
+    // reader's drain or the writer's synthesized report fails the job —
+    // never a hang, never a panic.
+    let (addr, rogue) = rogue_listener(0, Vec::new());
+    assert_rogue_degrades_to_fail_stop(addr, rogue);
+}
+
+#[test]
+fn connect_to_unused_port_errors_after_retries() {
+    // bind-then-drop guarantees the port is closed; connect must give up
+    // with a useful error, not spin forever (bounded retry budget).
+    let port = {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.local_addr().unwrap().port()
+    };
+    let endpoints = vec![format!("127.0.0.1:{port}")];
+    let err = Coordinator::connect_tcp(&endpoints).unwrap_err();
+    assert!(err.to_string().contains("refused"), "{err}");
+}
+
+#[test]
+fn daemon_outlives_a_rogue_coordinator_then_serves_real_jobs() {
+    // A peer that speaks garbage at a daemon must only cost that
+    // connection; a real coordinator connecting next is served normally.
+    let daemon =
+        WorkerDaemon::spawn_local(Arc::new(Echo), StragglerModel::None, 3, 2).unwrap();
+    {
+        let mut s = TcpStream::connect(daemon.addr()).unwrap();
+        s.write_all(&[0x5A; 128]).unwrap();
+        // wait for the daemon to reject the connection (it closes; EOF here)
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    let mut coord = Coordinator::connect_tcp(&[daemon.addr()]).unwrap();
+    let (got, _) = coord.submit(vec![vec![7u8; 12]], 1).unwrap().wait().unwrap();
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].payload, vec![7u8; 12]);
+    coord.shutdown();
+    daemon.join().unwrap();
+}

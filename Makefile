@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench bench-json bench-serving serve-tcp-demo artifacts clean
+.PHONY: build test bench bench-json bench-serving serve-tcp-demo serve-elastic-demo artifacts clean
 
 build:
 	cargo build --release
@@ -43,6 +43,34 @@ serve-tcp-demo: build
 	  --connect 127.0.0.1:7851,127.0.0.1:7852,127.0.0.1:7853,127.0.0.1:7854; \
 	wait; \
 	trap - EXIT
+
+# Flapping-daemon variant: the :7854 daemon is killed mid-batch and
+# restarted one second later; `serve --speculate` re-dispatches its overdue
+# shards to healthy spares and auto-reconnects the daemon once it is back,
+# so the batch completes and verifies anyway. The master's connect path
+# also retries refused connections for ~5s, so a restart landing between
+# the serve's two passes is absorbed too. The three stable daemons exit on
+# their own (--conns 2); the flapping one runs unbounded and is reaped by
+# the trap.
+serve-elastic-demo: build
+	@set -e; \
+	trap 'kill $$(jobs -p) 2>/dev/null || true' EXIT; \
+	for port in 7851 7852 7853; do \
+	  ./target/release/gr-cdmm worker --listen 127.0.0.1:$$port \
+	    --scheme ep-rmfe-1 --workers 4 --conns 2 & \
+	done; \
+	./target/release/gr-cdmm worker --listen 127.0.0.1:7854 \
+	  --scheme ep-rmfe-1 --workers 4 & \
+	flap=$$!; \
+	( sleep 1; echo "[demo] killing the :7854 daemon mid-batch"; \
+	  kill $$flap 2>/dev/null || true; sleep 1; \
+	  echo "[demo] restarting the :7854 daemon"; \
+	  exec ./target/release/gr-cdmm worker --listen 127.0.0.1:7854 \
+	    --scheme ep-rmfe-1 --workers 4 ) & \
+	./target/release/gr-cdmm serve --scheme ep-rmfe-1 --workers 4 --size 96 \
+	  --jobs 12 --inflight 4 --speculate \
+	  --connect 127.0.0.1:7851,127.0.0.1:7852,127.0.0.1:7853,127.0.0.1:7854; \
+	echo "[demo] batch completed and verified despite the flap"
 
 # Machine-readable run of the full bench suite (quick settings): refreshes
 # every BENCH_<name>.json at the repo root, including the kernel and

@@ -46,6 +46,8 @@ fn main() {
                     seed: 42,
                     verify: true,
                     transport,
+                    speculate: false,
+                    elastic: false,
                 };
                 let label = cfg.transport.label();
                 // A failed run must fail the bench (and the CI smoke step),

@@ -51,6 +51,21 @@ impl SchemeConfig {
             _ => anyhow::bail!("no configuration for N = {n_workers} (use 4, 8, 16 or 32)"),
         }
     }
+
+    /// The largest preset that fits a pool of `live` reachable workers —
+    /// how an elastic deployment picks a viable `(N, R)` when fewer daemons
+    /// than the requested preset are up: a job submitted with `N` shares on
+    /// `live ≥ N` healthy workers still completes. Fails below the smallest
+    /// preset (a 3-worker pool cannot run any configuration).
+    pub fn for_live_workers(live: usize) -> anyhow::Result<SchemeConfig> {
+        let n_workers = [32usize, 16, 8, 4].into_iter().find(|&n| n <= live);
+        match n_workers {
+            Some(n) => SchemeConfig::for_workers(n),
+            None => anyhow::bail!(
+                "only {live} live workers, but the smallest configuration needs 4"
+            ),
+        }
+    }
 }
 
 /// `(name, description)` of every registry scheme.
@@ -236,5 +251,16 @@ mod tests {
             assert_eq!(cfg.n_workers, n);
         }
         assert!(SchemeConfig::for_workers(12).is_err());
+    }
+
+    #[test]
+    fn live_worker_fallback_picks_largest_viable_preset() {
+        assert_eq!(SchemeConfig::for_live_workers(4).unwrap().n_workers, 4);
+        assert_eq!(SchemeConfig::for_live_workers(7).unwrap().n_workers, 4);
+        assert_eq!(SchemeConfig::for_live_workers(8).unwrap().n_workers, 8);
+        assert_eq!(SchemeConfig::for_live_workers(31).unwrap().n_workers, 16);
+        assert_eq!(SchemeConfig::for_live_workers(100).unwrap().n_workers, 32);
+        let err = SchemeConfig::for_live_workers(3).unwrap_err();
+        assert!(err.to_string().contains("smallest configuration needs 4"), "{err}");
     }
 }

@@ -12,11 +12,18 @@
 //! goes back to accepting — so one daemon survives any number of
 //! `gr-cdmm serve`/`run` invocations.
 //!
-//! The daemon learns *which* worker it is from the `worker_id` the
-//! coordinator stamps on each job frame, and derives its straggler RNG
-//! stream as [`worker_rng`]`(seed, worker_id)` — the identical stream an
-//! in-process pool worker with that id would draw, which is what makes
-//! channel and TCP runs comparable draw-for-draw under the same seed.
+//! The daemon learns *which machine* it is from the coordinator's hello
+//! frame (the first thing an elastic master writes on a fresh connection)
+//! and echoes the id back so the master can verify it reached the peer it
+//! meant to. The machine id keys the straggler RNG stream —
+//! [`worker_rng`]`(seed, machine_id)`, the identical stream an in-process
+//! pool worker with that id would draw, which is what makes channel and
+//! TCP runs comparable draw-for-draw under the same seed. Job frames carry
+//! the **shard** index, echoed verbatim on the response; when no hello was
+//! received (legacy peers, hand-rolled test frames) the shard index doubles
+//! as the machine id, preserving the pre-elastic behavior. Ping frames are
+//! answered with pongs; a shutdown frame is acknowledged with a goodbye
+//! before the connection closes.
 //!
 //! A malformed peer (garbage bytes, truncated frames, oversized declared
 //! payloads) errors the *connection*, never the daemon: the error is
@@ -59,29 +66,59 @@ fn serve_conn(
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    // One RNG stream per worker id seen on this connection. A coordinator
-    // addresses one daemon as one worker, so this map has a single entry in
-    // practice; keying by id keeps the draws right even if it doesn't.
+    // The machine id the coordinator assigned with its hello frame. Absent
+    // a hello, each job's shard index doubles as the machine id (the
+    // pre-elastic behavior, still exercised by raw-frame tests).
+    let mut identity: Option<usize> = None;
+    // One RNG stream per machine id seen on this connection. A coordinator
+    // addresses one daemon as one machine, so this map has a single entry
+    // in practice; keying by id keeps the draws right even if it doesn't.
     let mut rngs: HashMap<usize, Rng64> = HashMap::new();
     loop {
         let Some(frame) = wire::read_frame(&mut reader)? else {
             return Ok(()); // coordinator hung up
         };
         match frame.kind {
-            FrameKind::Shutdown => return Ok(()),
+            FrameKind::Shutdown => {
+                // Acknowledge the graceful leave. The coordinator may have
+                // already closed its read side — a failed write is fine.
+                let _ =
+                    wire::write_frame(&mut writer, &Frame::goodbye(identity.unwrap_or(0)));
+                return Ok(());
+            }
+            FrameKind::Goodbye => return Ok(()), // coordinator left
+            FrameKind::Hello => {
+                anyhow::ensure!(
+                    frame.worker_id < MAX_WORKER_ID,
+                    "hello worker id {} exceeds the {MAX_WORKER_ID} limit",
+                    frame.worker_id
+                );
+                let id = usize::try_from(frame.worker_id)?;
+                identity = Some(id);
+                // Echo the claim so the master can verify it reached the
+                // peer it meant to.
+                wire::write_frame(&mut writer, &Frame::hello(id))?;
+            }
+            FrameKind::Ping => {
+                wire::write_frame(
+                    &mut writer,
+                    &Frame::pong(frame.job_id, identity.unwrap_or(0)),
+                )?;
+            }
             FrameKind::Job => {
                 anyhow::ensure!(
                     frame.worker_id < MAX_WORKER_ID,
                     "worker id {} exceeds the {MAX_WORKER_ID} limit",
                     frame.worker_id
                 );
-                let worker_id = usize::try_from(frame.worker_id)?;
-                let rng =
-                    rngs.entry(worker_id).or_insert_with(|| worker_rng(cfg.seed, worker_id));
+                let shard = usize::try_from(frame.worker_id)?;
+                let machine = identity.unwrap_or(shard);
+                let rng = rngs.entry(machine).or_insert_with(|| worker_rng(cfg.seed, machine));
                 let report = process_job(
-                    worker_id,
+                    machine,
+                    shard,
                     frame.job_id,
-                    frame.payload,
+                    &frame.payload,
                     compute,
                     &cfg.straggler,
                     rng,
@@ -221,6 +258,39 @@ mod tests {
         let resp = wire::read_frame(&mut reader).unwrap().expect("echo");
         assert_eq!(resp.kind, FrameKind::RespOk);
         wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
+        daemon.join().unwrap();
+    }
+
+    #[test]
+    fn daemon_answers_hello_ping_and_says_goodbye() {
+        let daemon =
+            WorkerDaemon::spawn_local(Arc::new(Echo), StragglerModel::fail_stop([2]), 1, 1)
+                .unwrap();
+        let stream = TcpStream::connect(daemon.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+
+        // hello assigns machine id 2; the daemon echoes the claim
+        wire::write_frame(&mut writer, &Frame::hello(2)).unwrap();
+        let echo = wire::read_frame(&mut reader).unwrap().expect("hello echo");
+        assert_eq!((echo.kind, echo.worker_id), (FrameKind::Hello, 2));
+
+        // pings come back as pongs echoing the nonce
+        wire::write_frame(&mut writer, &Frame::ping(0xC0FFEE)).unwrap();
+        let pong = wire::read_frame(&mut reader).unwrap().expect("pong");
+        assert_eq!((pong.kind, pong.job_id, pong.worker_id), (FrameKind::Pong, 0xC0FFEE, 2));
+
+        // straggler draws key off the hello identity (machine 2 fail-stops)
+        // even when the job frame carries another worker's shard index —
+        // and the response still echoes the shard.
+        wire::write_frame(&mut writer, &Frame::job(9, 0, vec![4u8; 6])).unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap().expect("fail report");
+        assert_eq!((resp.kind, resp.job_id, resp.worker_id), (FrameKind::RespFail, 9, 0));
+
+        // shutdown is acknowledged with a goodbye
+        wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
+        let bye = wire::read_frame(&mut reader).unwrap().expect("goodbye");
+        assert_eq!((bye.kind, bye.worker_id), (FrameKind::Goodbye, 2));
         daemon.join().unwrap();
     }
 

@@ -13,22 +13,35 @@
 //!   [`Coordinator::with_transport`] accepts anything else (tests inject
 //!   mock transports this way);
 //! * [`Coordinator::submit`] is non-blocking: it registers the job in a
-//!   shared job table, dispatches one payload per worker, and returns a
-//!   [`JobHandle`];
+//!   shared job table, dispatches one payload per **shard** (to the
+//!   healthiest workers when fewer payloads than workers are given), and
+//!   returns a [`JobHandle`];
 //! * a dedicated **response-router thread** receives every [`FromWorker`]
 //!   message and forwards it to the owning job's channel by `job_id` — a
 //!   straggler answering job `k` while job `k+3` is collecting is routed,
 //!   never misattributed or dropped. The router also enforces
-//!   **exactly-one response per worker per job**: a duplicate (a
-//!   retransmitting or byzantine peer) is counted as arrived bytes and
-//!   dropped before it can reach a decoder, and an out-of-range worker id
-//!   is dropped outright;
+//!   **exactly-one forwarded response per shard per job**: a duplicate (a
+//!   retransmitting or byzantine peer, or the loser of a speculative race)
+//!   is counted as arrived bytes and dropped before it can reach a decoder,
+//!   and an out-of-range shard id is dropped outright. Successful response
+//!   latencies feed the per-worker estimators in [`super::pool`];
+//! * a **health-monitor thread** drives the elastic-pool machinery on a
+//!   fixed tick: it classifies every worker live/suspect/dead from the
+//!   transport's [`link_status`](Transport::link_status) plus periodic
+//!   pings, optionally re-dials dead links, and — when
+//!   [`ElasticConfig::speculate`] is on — re-dispatches shards that have
+//!   been outstanding past their deadline (`max(floor, mean + k·dev)` of
+//!   the assigned worker's latency EWMA) to a live spare. The router's
+//!   duplicate guard drops whichever copy loses the race. With the default
+//!   config (speculation off) the monitor only observes, and the job path
+//!   behaves exactly as the pre-elastic coordinator;
 //! * each job owns its [`ByteCounters`]: upload is counted at dispatch
 //!   (with the byte count the transport reports), arrived download at the
-//!   router, used download by the job's collector. Overlapping jobs
-//!   therefore account independently (asserted against the schemes'
-//!   analytic volumes in `tests/integration_serving.rs`), and the
-//!   accounting is transport-independent (asserted channel-vs-TCP in
+//!   router, used download by the job's collector, and speculative
+//!   re-dispatches on their own counter. Overlapping jobs therefore account
+//!   independently (asserted against the schemes' analytic volumes in
+//!   `tests/integration_serving.rs`), and the accounting is
+//!   transport-independent (asserted channel-vs-TCP in
 //!   `tests/integration_transport.rs`);
 //! * [`JobHandle::wait`] / [`JobHandle::try_wait`] collect the first `need`
 //!   successful responses with a per-job timeout.
@@ -36,11 +49,15 @@
 //! Lifecycle details are on [`JobHandle`]; the single-job convenience path
 //! is `submit(..)?.wait()`.
 
+use super::pool::{ElasticConfig, PingAction, PoolState, WorkerHealth, WorkerSnapshot};
 use super::straggler::StragglerModel;
 use super::tcp::TcpTransport;
-use super::transport::{ByteCounters, ChannelTransport, FromWorker, ToWorker, Transport};
+use super::transport::{
+    fail_report, ByteCounters, ChannelTransport, FromWorker, ToWorker, Transport,
+};
 use super::worker::ShareCompute;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -61,10 +78,10 @@ fn timeout_error(got: usize, need: usize) -> anyhow::Error {
     anyhow::anyhow!("timed out with {got}/{need} responses (too many stragglers/failures?)")
 }
 
-/// The job's channel disconnected before the threshold: every worker has
-/// already reported (with too many failures) or the coordinator shut down —
-/// either way no further response can arrive, so collection fails fast
-/// instead of sleeping until the deadline.
+/// The job's channel disconnected before the threshold: every shard has
+/// already been resolved (with too many failures) or the coordinator shut
+/// down — either way no further response can arrive, so collection fails
+/// fast instead of sleeping until the deadline.
 fn incomplete_error(job_id: u64, got: usize, need: usize) -> anyhow::Error {
     anyhow::anyhow!(
         "job {job_id} cannot complete: {got}/{need} responses and none still pending \
@@ -72,20 +89,41 @@ fn incomplete_error(job_id: u64, got: usize, need: usize) -> anyhow::Error {
     )
 }
 
+/// One shard's dispatch state within a pending job. A shard may have
+/// several copies in flight at once (primary + speculative re-dispatches);
+/// it is `done` once one copy succeeded or every recovery avenue is
+/// exhausted, and exactly one report per shard is ever forwarded to the
+/// job's collector.
+struct ShardState {
+    /// The shard has been resolved (success forwarded, or declared failed);
+    /// any further report for it is a duplicate and is dropped.
+    done: bool,
+    /// Dispatched copies not yet reported back.
+    in_flight: usize,
+    /// Every worker this shard has been dispatched to, primary first.
+    /// `len()` is the attempt count; also the speculative-spare exclusion
+    /// set (never hand a copy to a worker that already has one).
+    assigned: Vec<usize>,
+    /// When the most recent copy was dispatched; the overdue clock.
+    last_dispatch: Instant,
+}
+
 /// A pending job's routing entry: where its responses go, its counters, and
-/// which workers have been heard from. Every worker reports exactly once
-/// per job (success, failure, or fail-stop drop — enforced here against
-/// duplicating peers), so `outstanding` reaching 0 retires the entry: the
+/// the per-shard dispatch state. Every dispatched copy of a shard reports
+/// exactly once (success, failure, or fail-stop drop), and every shard is
+/// eventually resolved, so `outstanding` reaching 0 retires the entry: the
 /// table stays bounded by the number of genuinely in-flight jobs.
 struct JobEntry {
     /// `None` once the job's [`JobHandle`] is gone; late responses are then
     /// only accounted, not forwarded.
     tx: Option<Sender<FromWorker>>,
     counters: ByteCounters,
+    /// Shards not yet resolved.
     outstanding: usize,
-    /// Per-worker heard-from bits; a second report from the same worker is
-    /// dropped (duplicate-response guard).
-    reported: Vec<bool>,
+    shards: Vec<ShardState>,
+    /// Retained payloads for speculative re-dispatch; dropped per shard as
+    /// soon as the shard is resolved.
+    payloads: Vec<Option<Arc<Vec<u8>>>>,
 }
 
 type JobTable = Arc<Mutex<HashMap<u64, JobEntry>>>;
@@ -93,15 +131,16 @@ type JobTable = Arc<Mutex<HashMap<u64, JobEntry>>>;
 /// The response router: drains the transport's single worker→master stream
 /// and fans messages out to the owning job, attributing download bytes to
 /// that job's counters — a straggler from an old job can never pollute a
-/// newer one, and a worker can never be heard twice for one job. Exits when
-/// the transport shuts down, and clears the table on the way out so pending
-/// [`JobHandle`]s observe a disconnect instead of sleeping until their
-/// timeout.
+/// newer one, and a shard can never be collected twice for one job. Exits
+/// when the transport shuts down, and clears the table on the way out so
+/// pending [`JobHandle`]s observe a disconnect instead of sleeping until
+/// their timeout.
 fn spawn_router(
     rx: Receiver<FromWorker>,
     jobs: JobTable,
     aggregate: ByteCounters,
-    n_workers: usize,
+    pool: PoolState,
+    elastic: Arc<Mutex<ElasticConfig>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("gr-cdmm-router".to_string())
@@ -109,29 +148,60 @@ fn spawn_router(
             while let Ok(msg) = rx.recv() {
                 let len = msg.payload.as_ref().map_or(0, Vec::len);
                 aggregate.add_download_arrived(len);
-                if msg.worker_id >= n_workers {
-                    // Malformed/byzantine peer: unattributable, drop. The
-                    // bytes stay visible in the aggregate discarded count.
-                    continue;
-                }
                 let mut table = jobs.lock().unwrap();
                 let Some(entry) = table.get_mut(&msg.job_id) else {
-                    // Entry already retired (all workers heard from, or the
+                    // Entry already retired (all shards resolved, or the
                     // coordinator restarted routing) — the bytes stay
                     // visible in the aggregate discarded count.
                     continue;
                 };
                 let job_id = msg.job_id;
-                entry.counters.add_download_arrived(len);
-                if entry.reported[msg.worker_id] {
-                    // Duplicate-response guard: this worker already
-                    // reported for this job. Never forwarded — a duplicate
-                    // row must not reach a decoder — and `outstanding` is
-                    // not decremented twice.
+                let shard_id = msg.worker_id;
+                if shard_id >= entry.shards.len() {
+                    // Malformed/byzantine peer: unattributable, drop. The
+                    // bytes stay visible in the aggregate discarded count.
                     continue;
                 }
-                entry.reported[msg.worker_id] = true;
+                entry.counters.add_download_arrived(len);
+                let shard = &mut entry.shards[shard_id];
+                if shard.done {
+                    // Duplicate-response guard: this shard was already
+                    // resolved (a retransmitting peer, or the loser of a
+                    // speculative race). Never forwarded — a duplicate row
+                    // must not reach a decoder — and `outstanding` is not
+                    // decremented twice.
+                    continue;
+                }
+                if msg.payload.is_some() {
+                    if shard.assigned.len() == 1 {
+                        // Unambiguous attribution: only one copy was ever
+                        // dispatched, so this worker's latency estimate
+                        // learns from the response.
+                        pool.observe_latency(shard.assigned[0], shard.last_dispatch.elapsed());
+                    }
+                    shard.done = true;
+                } else {
+                    shard.in_flight = shard.in_flight.saturating_sub(1);
+                    if shard.in_flight > 0 {
+                        // A failed copy, but another copy of the shard is
+                        // still out — not resolved yet either way.
+                        continue;
+                    }
+                    let cfg = elastic.lock().unwrap().clone();
+                    let may_retry = cfg.speculate
+                        && shard.assigned.len() < cfg.max_attempts
+                        && pool.live_spare(&shard.assigned).is_some();
+                    if may_retry {
+                        // Every copy failed but a retry is possible: leave
+                        // the shard unresolved for the monitor to
+                        // re-dispatch (in_flight == 0 makes it overdue
+                        // immediately).
+                        continue;
+                    }
+                    shard.done = true;
+                }
                 entry.outstanding -= 1;
+                entry.payloads[shard_id] = None;
                 let send_failed = match &entry.tx {
                     Some(tx) => tx.send(msg).is_err(),
                     None => false,
@@ -148,6 +218,182 @@ fn spawn_router(
             jobs.lock().unwrap().clear();
         })
         .expect("failed to spawn router thread")
+}
+
+/// Everything the health-monitor thread shares with the coordinator.
+struct MonitorShared {
+    transport: Arc<Mutex<Box<dyn Transport>>>,
+    jobs: JobTable,
+    pool: PoolState,
+    aggregate: ByteCounters,
+    elastic: Arc<Mutex<ElasticConfig>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// A speculative copy the monitor decided to send, planned under the job
+/// lock and executed under the transport lock (never both at once).
+struct SpecDispatch {
+    job_id: u64,
+    shard: usize,
+    target: usize,
+    payload: Arc<Vec<u8>>,
+    counters: ByteCounters,
+}
+
+/// One membership pass: refresh every worker's live/suspect/dead verdict
+/// from the transport's link status, fire due health-check pings, and
+/// (with [`ElasticConfig::auto_reconnect`]) re-dial dead links at most once
+/// per `reconnect_interval`. Locks: transport, then pool.
+fn health_pass(
+    shared: &MonitorShared,
+    cfg: &ElasticConfig,
+    last_redial: &mut HashMap<usize, Instant>,
+) {
+    let mut t = shared.transport.lock().unwrap();
+    let n = t.n_workers();
+    shared.pool.ensure_len(n);
+    for w in 0..n {
+        let status = t.link_status(w);
+        if let PingAction::Send(nonce) = shared.pool.health_check(w, status.alive, status.idle, cfg)
+        {
+            if t.ping(w, nonce).is_err() {
+                shared.pool.set_health(w, WorkerHealth::Dead);
+            }
+        }
+        if !status.alive && cfg.auto_reconnect {
+            let due = last_redial.get(&w).is_none_or(|at| at.elapsed() >= cfg.reconnect_interval);
+            if due {
+                last_redial.insert(w, Instant::now());
+                if t.reconnect_worker(w, None).is_ok() {
+                    shared.pool.set_health(w, WorkerHealth::Live);
+                }
+            }
+        }
+    }
+}
+
+/// One speculation pass: find overdue shards and plan a copy for each on a
+/// live spare; declare a shard failed when no copy is in flight and no
+/// spare exists (so the job fails fast instead of hanging). Only plans —
+/// the sends happen in [`execute_dispatches`] without the job lock held.
+/// Locks: jobs, then pool.
+fn plan_speculation(shared: &MonitorShared, cfg: &ElasticConfig) -> Vec<SpecDispatch> {
+    let mut dispatches = Vec::new();
+    let mut retired = Vec::new();
+    let mut table = shared.jobs.lock().unwrap();
+    for (&job_id, entry) in table.iter_mut() {
+        for shard_id in 0..entry.shards.len() {
+            let (in_flight, assigned) = {
+                let s = &entry.shards[shard_id];
+                if s.done {
+                    continue;
+                }
+                let overdue = s.in_flight == 0
+                    || (cfg.speculate
+                        && s.last_dispatch.elapsed()
+                            > shared.pool.deadline(s.assigned.first().copied(), cfg));
+                if !overdue || s.in_flight >= cfg.max_copies {
+                    continue;
+                }
+                (s.in_flight, s.assigned.clone())
+            };
+            let spare = if cfg.speculate && assigned.len() < cfg.max_attempts {
+                shared.pool.live_spare(&assigned)
+            } else {
+                None
+            };
+            match spare {
+                Some(target) => {
+                    let Some(payload) = entry.payloads[shard_id].clone() else {
+                        continue;
+                    };
+                    let s = &mut entry.shards[shard_id];
+                    s.in_flight += 1;
+                    s.assigned.push(target);
+                    s.last_dispatch = Instant::now();
+                    dispatches.push(SpecDispatch {
+                        job_id,
+                        shard: shard_id,
+                        target,
+                        payload,
+                        counters: entry.counters.clone(),
+                    });
+                }
+                None if in_flight == 0 => {
+                    // Every copy failed and no spare is available: the
+                    // shard is unrecoverable. Resolve it as failed so the
+                    // collector learns now (fail fast, never hang).
+                    entry.shards[shard_id].done = true;
+                    entry.outstanding -= 1;
+                    entry.payloads[shard_id] = None;
+                    let send_failed = match &entry.tx {
+                        Some(tx) => tx.send(fail_report(job_id, shard_id)).is_err(),
+                        None => false,
+                    };
+                    if send_failed {
+                        entry.tx = None;
+                    }
+                    if entry.outstanding == 0 {
+                        retired.push(job_id);
+                    }
+                }
+                None => {}
+            }
+        }
+    }
+    for id in &retired {
+        table.remove(id);
+    }
+    dispatches
+}
+
+/// Send the planned speculative copies and credit their bytes (and the
+/// speculative-dispatch count) to the owning job and the aggregate.
+/// Locks: transport only.
+fn execute_dispatches(shared: &MonitorShared, dispatches: Vec<SpecDispatch>) {
+    if dispatches.is_empty() {
+        return;
+    }
+    let mut t = shared.transport.lock().unwrap();
+    for d in dispatches {
+        let msg = ToWorker::Job { job_id: d.job_id, shard: d.shard, payload: d.payload };
+        match t.send(d.target, msg) {
+            Ok(sent) => {
+                d.counters.add_upload(sent);
+                shared.aggregate.add_upload(sent);
+                d.counters.add_speculative(1);
+                shared.aggregate.add_speculative(1);
+            }
+            Err(e) => {
+                // Transport-level error (not a dead link — those fail-stop
+                // through the receiver): nothing to do but surface it.
+                eprintln!(
+                    "gr-cdmm: speculative re-dispatch of job {} shard {} to worker {} failed: {e}",
+                    d.job_id, d.shard, d.target
+                );
+            }
+        }
+    }
+}
+
+/// The health-monitor thread: membership refresh, pings, reconnects and
+/// speculative re-dispatch on a fixed tick. With the default config it
+/// only observes (no speculation, no reconnects), so the job path is
+/// byte-for-byte the pre-elastic coordinator's.
+fn spawn_monitor(shared: MonitorShared) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("gr-cdmm-monitor".to_string())
+        .spawn(move || {
+            let mut last_redial: HashMap<usize, Instant> = HashMap::new();
+            while !shared.stop.load(Ordering::Acquire) {
+                let cfg = shared.elastic.lock().unwrap().clone();
+                health_pass(&shared, &cfg, &mut last_redial);
+                let dispatches = plan_speculation(&shared, &cfg);
+                execute_dispatches(&shared, dispatches);
+                std::thread::sleep(cfg.tick);
+            }
+        })
+        .expect("failed to spawn monitor thread")
 }
 
 /// A handle to one in-flight job.
@@ -208,7 +454,7 @@ impl JobHandle {
     /// Absorb one routed response: the first `need` successful ones are
     /// collected (and their bytes counted as used), everything after is
     /// left as arrived-only, i.e. discarded. A second successful response
-    /// from a worker that already contributed is dropped here too (the
+    /// from a shard that already contributed is dropped here too (the
     /// router's guard makes this unreachable in practice; the collector
     /// keeps its own last line of defense so a duplicate row can never
     /// reach a decode).
@@ -298,12 +544,17 @@ impl JobHandle {
     }
 }
 
-/// The coordinator: a [`Transport`] to `N` persistent workers, a response
-/// router, and the job table that lets any number of jobs overlap.
+/// The coordinator: a [`Transport`] to an elastic pool of workers, a
+/// response router, a health monitor, and the job table that lets any
+/// number of jobs overlap.
 pub struct Coordinator {
-    transport: Box<dyn Transport>,
+    transport: Arc<Mutex<Box<dyn Transport>>>,
     router: Option<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
     jobs: JobTable,
+    pool: PoolState,
+    elastic: Arc<Mutex<ElasticConfig>>,
     aggregate: ByteCounters,
     next_job: u64,
     open: bool,
@@ -336,14 +587,36 @@ impl Coordinator {
     /// Build over any [`Transport`].
     pub fn with_transport(mut transport: Box<dyn Transport>) -> Self {
         let rx = transport.take_receiver().expect("transport's receiver was already taken");
+        let n_workers = transport.n_workers();
+        let transport = Arc::new(Mutex::new(transport));
         let jobs: JobTable = Arc::new(Mutex::new(HashMap::new()));
         let aggregate = ByteCounters::new();
-        let router =
-            spawn_router(rx, Arc::clone(&jobs), aggregate.clone(), transport.n_workers());
+        let pool = PoolState::new(n_workers);
+        let elastic = Arc::new(Mutex::new(ElasticConfig::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let router = spawn_router(
+            rx,
+            Arc::clone(&jobs),
+            aggregate.clone(),
+            pool.clone(),
+            Arc::clone(&elastic),
+        );
+        let monitor = spawn_monitor(MonitorShared {
+            transport: Arc::clone(&transport),
+            jobs: Arc::clone(&jobs),
+            pool: pool.clone(),
+            aggregate: aggregate.clone(),
+            elastic: Arc::clone(&elastic),
+            stop: Arc::clone(&stop),
+        });
         Coordinator {
             transport,
             router: Some(router),
+            monitor: Some(monitor),
+            stop,
             jobs,
+            pool,
+            elastic,
             aggregate,
             next_job: 0,
             open: true,
@@ -351,13 +624,75 @@ impl Coordinator {
         }
     }
 
+    /// Worker slots the transport reaches, dead links included (the pool
+    /// only ever grows; see [`Coordinator::live_workers`]).
     pub fn n_workers(&self) -> usize {
-        self.transport.n_workers()
+        self.transport.lock().unwrap().n_workers()
+    }
+
+    /// Workers whose link is currently up.
+    pub fn live_workers(&self) -> usize {
+        let t = self.transport.lock().unwrap();
+        (0..t.n_workers()).filter(|&w| t.link_status(w).alive).count()
+    }
+
+    /// The health monitor's current verdict for one worker (link state
+    /// always wins: a down link is dead no matter what the monitor last
+    /// recorded).
+    pub fn worker_health(&self, worker_id: usize) -> WorkerHealth {
+        if !self.transport.lock().unwrap().link_status(worker_id).alive {
+            return WorkerHealth::Dead;
+        }
+        self.pool.health(worker_id)
+    }
+
+    /// Per-worker health + latency snapshot, for reports and tests.
+    pub fn pool_snapshot(&self) -> Vec<WorkerSnapshot> {
+        self.pool.snapshot()
+    }
+
+    /// Replace the elastic-pool tuning (health cadence, speculation,
+    /// reconnect policy). Takes effect on the monitor's next tick.
+    pub fn set_elastic(&mut self, cfg: ElasticConfig) {
+        *self.elastic.lock().unwrap() = cfg;
+    }
+
+    /// The current elastic-pool tuning.
+    pub fn elastic_config(&self) -> ElasticConfig {
+        self.elastic.lock().unwrap().clone()
+    }
+
+    /// Take one worker's link down (jobs it owes fail-stop). The monitor
+    /// marks it dead on its next pass; this also records it eagerly so
+    /// placement decisions made before that pass already avoid it.
+    pub fn disconnect_worker(&mut self, worker_id: usize) -> anyhow::Result<()> {
+        self.transport.lock().unwrap().disconnect_worker(worker_id)?;
+        self.pool.set_health(worker_id, WorkerHealth::Dead);
+        Ok(())
+    }
+
+    /// Bring a worker's link back up (TCP re-dials, optionally at a new
+    /// endpoint; the channel transport revives the worker in place).
+    pub fn reconnect_worker(
+        &mut self,
+        worker_id: usize,
+        endpoint: Option<&str>,
+    ) -> anyhow::Result<()> {
+        self.transport.lock().unwrap().reconnect_worker(worker_id, endpoint)?;
+        self.pool.set_health(worker_id, WorkerHealth::Live);
+        Ok(())
+    }
+
+    /// Grow the pool by one worker mid-run; returns its id.
+    pub fn add_worker(&mut self, endpoint: Option<&str>) -> anyhow::Result<usize> {
+        let worker_id = self.transport.lock().unwrap().add_worker(endpoint)?;
+        self.pool.ensure_len(worker_id + 1);
+        Ok(worker_id)
     }
 
     /// The transport's short name (`"channel"`, `"tcp"`), for reports.
     pub fn transport_name(&self) -> &'static str {
-        self.transport.name()
+        self.transport.lock().unwrap().name()
     }
 
     /// Coordinator-lifetime byte totals, summed over every job (never
@@ -371,43 +706,82 @@ impl Coordinator {
         self.jobs.lock().unwrap().len()
     }
 
-    /// Dispatch one payload per worker and return immediately with a
-    /// [`JobHandle`] that collects the first `need` successful responses.
+    /// Dispatch the payloads — shard `i` of the job is `payloads[i]` — and
+    /// return immediately with a [`JobHandle`] that collects the first
+    /// `need` successful responses. With one payload per worker (the
+    /// classic shape) shard `i` goes to worker `i`; with **fewer** payloads
+    /// than workers the shards go to the healthiest workers (live before
+    /// suspect before dead, ties by index), which is how a degraded scheme
+    /// from [`SchemeConfig::for_live_workers`] runs on a partly-dead pool.
     /// Any number of submitted jobs may overlap; responses are routed to
     /// their owning job by id.
+    ///
+    /// [`SchemeConfig::for_live_workers`]:
+    ///     crate::codes::registry::SchemeConfig::for_live_workers
     pub fn submit(&mut self, payloads: Vec<Vec<u8>>, need: usize) -> anyhow::Result<JobHandle> {
-        let n_workers = self.n_workers();
-        anyhow::ensure!(
-            payloads.len() == n_workers,
-            "need exactly one payload per worker ({} != {})",
-            payloads.len(),
-            n_workers
-        );
-        anyhow::ensure!(
-            (1..=n_workers).contains(&need),
-            "need must be in 1..={} (got {need})",
-            n_workers
-        );
         anyhow::ensure!(self.open, "coordinator is shut down");
+        let n_workers = self.n_workers();
+        let n_shards = payloads.len();
+        anyhow::ensure!(
+            (1..=n_workers).contains(&n_shards),
+            "need between 1 and {n_workers} payloads, one per target worker (got {n_shards})"
+        );
+        anyhow::ensure!(
+            (1..=n_shards).contains(&need),
+            "need must be in 1..={n_shards} (got {need})"
+        );
+        let targets: Vec<usize> = if n_shards == n_workers {
+            (0..n_workers).collect()
+        } else {
+            let mut ranked: Vec<(u8, usize)> = {
+                let t = self.transport.lock().unwrap();
+                (0..n_workers)
+                    .map(|w| {
+                        let rank = if t.link_status(w).alive {
+                            self.pool.health(w).rank()
+                        } else {
+                            WorkerHealth::Dead.rank()
+                        };
+                        (rank, w)
+                    })
+                    .collect()
+            };
+            ranked.sort_unstable();
+            let mut chosen: Vec<usize> =
+                ranked.into_iter().take(n_shards).map(|(_, w)| w).collect();
+            chosen.sort_unstable();
+            chosen
+        };
         let job_id = self.next_job;
         self.next_job += 1;
 
+        let payloads: Vec<Arc<Vec<u8>>> = payloads.into_iter().map(Arc::new).collect();
         let counters = ByteCounters::new();
         let (job_tx, job_rx) = channel::<FromWorker>();
+        let submitted = Instant::now();
         // Register before dispatching: a response must never beat the entry.
         self.jobs.lock().unwrap().insert(
             job_id,
             JobEntry {
                 tx: Some(job_tx),
                 counters: counters.clone(),
-                outstanding: n_workers,
-                reported: vec![false; n_workers],
+                outstanding: n_shards,
+                shards: targets
+                    .iter()
+                    .map(|&t| ShardState {
+                        done: false,
+                        in_flight: 1,
+                        assigned: vec![t],
+                        last_dispatch: submitted,
+                    })
+                    .collect(),
+                payloads: payloads.iter().cloned().map(Some).collect(),
             },
         );
 
-        let submitted = Instant::now();
-        for (worker_id, payload) in payloads.into_iter().enumerate() {
-            match self.transport.send(worker_id, ToWorker::Job { job_id, payload }) {
+        for (shard, payload) in payloads.into_iter().enumerate() {
+            let msg = ToWorker::Job { job_id, shard, payload };
+            match self.transport.lock().unwrap().send(targets[shard], msg) {
                 Ok(sent) => {
                     // Credit the bytes the transport reports actually
                     // crossing the link — identical across transports.
@@ -435,15 +809,22 @@ impl Coordinator {
 
     fn shutdown_impl(&mut self) {
         self.open = false;
-        self.transport.shutdown();
+        // Monitor first (it holds no lock while asleep and exits within one
+        // tick), so nothing re-dispatches into a closing transport.
+        self.stop.store(true, Ordering::Release);
+        if let Some(monitor) = self.monitor.take() {
+            let _ = monitor.join();
+        }
+        self.transport.lock().unwrap().shutdown();
         if let Some(router) = self.router.take() {
             let _ = router.join();
         }
     }
 
-    /// Graceful shutdown: signal the transport (every worker joins / every
-    /// connection closes), then join the router. Queued jobs are still
-    /// processed and routed before workers exit.
+    /// Graceful shutdown: stop the health monitor, signal the transport
+    /// (every worker joins / every connection closes), then join the
+    /// router. Queued jobs are still processed and routed before workers
+    /// exit.
     pub fn shutdown(mut self) {
         self.shutdown_impl();
     }
@@ -451,7 +832,7 @@ impl Coordinator {
 
 /// Dropping the coordinator performs the same shutdown as
 /// [`Coordinator::shutdown`], so a panicking test or an early `?` return
-/// never leaks the pool/router threads.
+/// never leaks the pool/router/monitor threads.
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown_impl();
@@ -609,8 +990,9 @@ mod tests {
     #[test]
     fn drop_joins_pool_and_drains_in_flight_job() {
         // No explicit shutdown: Drop must signal and join workers + router
-        // (this test would hang otherwise). The job queued before the drop
-        // is still processed and routed, so its handle collects normally.
+        // + monitor (this test would hang otherwise). The job queued before
+        // the drop is still processed and routed, so its handle collects
+        // normally.
         let handle = {
             let mut c = Coordinator::new(2, Arc::new(Echo), StragglerModel::None, 9);
             c.submit(payloads(2, 3, 2), 2).unwrap()
@@ -635,8 +1017,8 @@ mod tests {
     #[test]
     fn job_table_drains_after_all_workers_report() {
         // Worker 1 fail-stops; it still reports the drop, so the entry
-        // retires once every worker has been heard from — the table stays
-        // bounded by the genuinely in-flight jobs.
+        // retires once every shard is resolved — the table stays bounded by
+        // the genuinely in-flight jobs.
         let straggler = StragglerModel::fail_stop([1]);
         let mut c = Coordinator::new(3, Arc::new(Echo), straggler, 10);
         let h = c.submit(payloads(3, 5, 1), 2).unwrap();
@@ -649,8 +1031,59 @@ mod tests {
         c.shutdown();
     }
 
+    #[test]
+    fn partial_submit_targets_healthy_workers() {
+        // One payload on a two-worker pool whose worker 0 is down: the
+        // shard must be placed on the live worker 1 (and still report as
+        // shard 0), with its bytes actually crossing the link.
+        let mut c = Coordinator::new(2, Arc::new(Echo), StragglerModel::None, 21);
+        c.disconnect_worker(0).unwrap();
+        assert_eq!(c.worker_health(0), WorkerHealth::Dead);
+        assert_eq!(c.live_workers(), 1);
+        let h = c.submit(vec![vec![7u8; 6]], 1).unwrap();
+        let job_counters = h.counters().clone();
+        let (got, _) = h.wait().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].worker_id, 0, "reports carry the shard id");
+        assert_eq!(
+            job_counters.upload_total(),
+            6,
+            "the payload crossed a live link (a dead-link dispatch would count 0)"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn speculative_redispatch_rescues_a_straggling_shard() {
+        // Worker 0 drags its shard for 2s; with speculation on, the monitor
+        // re-dispatches that shard to worker 1 after the deadline floor and
+        // the job completes far below the straggler's delay. The straggler
+        // model keys off the *machine*, so the spare copy runs clean.
+        let straggler = StragglerModel::fixed_slow([0], Duration::from_secs(2));
+        let mut c = Coordinator::new(2, Arc::new(Echo), straggler, 22);
+        let mut cfg = ElasticConfig::speculative();
+        cfg.tick = Duration::from_millis(2);
+        cfg.spec_min_deadline = Duration::from_millis(30);
+        c.set_elastic(cfg);
+        let h = c.submit(payloads(2, 0xAB, 4), 2).unwrap();
+        let job_counters = h.counters().clone();
+        let (got, wait) = h.wait().unwrap();
+        assert_eq!(got.len(), 2);
+        let mut ids: Vec<usize> = got.iter().map(|g| g.worker_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1], "both shards collected exactly once");
+        assert!(wait < Duration::from_secs(1), "speculation did not beat the straggler: {wait:?}");
+        assert_eq!(job_counters.speculative_total(), 1, "exactly one speculative copy");
+        assert_eq!(
+            job_counters.upload_total(),
+            12,
+            "the speculative copy's bytes are counted as upload too"
+        );
+        c.shutdown();
+    }
+
     /// A transport double whose "workers" echo every job TWICE, plus one
-    /// response under a bogus worker id: a retransmitting / byzantine peer
+    /// response under a bogus shard id: a retransmitting / byzantine peer
     /// distilled. Exercises the master-side duplicate-response and
     /// id-bounds guards end-to-end through submit → router → collect.
     struct DuplicatingTransport {
@@ -671,23 +1104,23 @@ mod tests {
             self.n
         }
 
-        fn send(&mut self, worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
-            let ToWorker::Job { job_id, payload } = msg else {
+        fn send(&mut self, _worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
+            let ToWorker::Job { job_id, shard, payload } = msg else {
                 return Ok(0);
             };
             let tx = self.tx.as_ref().expect("transport is open");
             let echo = |wid: usize| FromWorker {
                 job_id,
                 worker_id: wid,
-                payload: Some(payload.clone()),
+                payload: Some((*payload).clone()),
                 compute: Duration::ZERO,
                 injected_delay: Duration::ZERO,
             };
             // every worker answers twice, and worker 0's peer additionally
             // spoofs an out-of-range id
-            tx.send(echo(worker_id)).unwrap();
-            tx.send(echo(worker_id)).unwrap();
-            if worker_id == 0 {
+            tx.send(echo(shard)).unwrap();
+            tx.send(echo(shard)).unwrap();
+            if shard == 0 {
                 tx.send(echo(self.n + 7)).unwrap();
             }
             Ok(payload.len())
@@ -712,20 +1145,20 @@ mod tests {
         let handle = c.submit(payloads(3, 0xEE, 10), 3).unwrap();
         let job_counters = handle.counters().clone();
         let (got, _) = handle.wait().unwrap();
-        // exactly one collected response per worker, despite the double
+        // exactly one collected response per shard, despite the double
         // echo — a duplicate must never be fed to a decoder
         let mut ids: Vec<usize> = got.iter().map(|g| g.worker_id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2]);
         // duplicates and the spoofed id were counted as arrived, not used.
         // Job view: 3 used + the two duplicates routed before the entry
-        // retired (worker 2's duplicate lands after retirement, and the
+        // retired (shard 2's duplicate lands after retirement, and the
         // spoofed id is never attributable) = 50 bytes arrived. Safe to
         // assert here: wait() returning implies the router processed
-        // through worker 2's first response (message 6 of 7).
+        // through shard 2's first response (message 6 of 7).
         assert_eq!(job_counters.download_used_total(), 30);
         assert_eq!(job_counters.download_arrived_total(), 50);
-        // the entry retired exactly once every *distinct* worker reported
+        // the entry retired exactly once every *distinct* shard reported
         let deadline = Instant::now() + Duration::from_secs(5);
         while c.jobs_in_flight() != 0 {
             assert!(Instant::now() < deadline, "duplicates confused retirement");
@@ -733,7 +1166,7 @@ mod tests {
         }
         // Aggregate view: all 7 responses = 70 bytes arrived. Asserted
         // after shutdown (which joins the router), because the 7th message
-        // (worker 2's duplicate) may still be in flight when wait() returns.
+        // (shard 2's duplicate) may still be in flight when wait() returns.
         let aggregate = c.counters().clone();
         c.shutdown();
         assert_eq!(aggregate.download_arrived_total(), 70);

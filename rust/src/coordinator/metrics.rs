@@ -35,6 +35,10 @@ pub struct JobMetrics {
     pub plan_cache_hits: u64,
     /// Decode-plan cache misses during this job's decode.
     pub plan_cache_misses: u64,
+    /// Speculative shard re-dispatches the elastic coordinator sent for
+    /// this job (0 unless speculation is enabled; their payload bytes are
+    /// included in `upload_bytes`).
+    pub speculative_dispatches: u64,
     /// Total end-to-end wall time at the master.
     pub total: Duration,
 }
@@ -83,6 +87,7 @@ impl JobMetrics {
             .set("wait_for_r_s", self.wait_for_r.as_secs_f64())
             .set("upload_bytes", self.upload_bytes)
             .set("download_bytes", self.download_bytes)
+            .set("speculative_dispatches", self.speculative_dispatches)
             .set("mean_worker_compute_s", self.mean_worker_compute().as_secs_f64())
             .set("max_worker_compute_s", self.max_worker_compute().as_secs_f64())
             .set(
@@ -126,5 +131,6 @@ mod tests {
         assert!(j.contains("upload_bytes"));
         assert!(j.contains("job_id"));
         assert!(j.contains("plan_cache_hits"));
+        assert!(j.contains("speculative_dispatches"));
     }
 }

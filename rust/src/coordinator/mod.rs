@@ -13,7 +13,7 @@
 //!
 //! * [`transport`] — message types, the object-safe [`Transport`] trait
 //!   (per-worker FIFO sends + one worker→master stream + exactly-one
-//!   report per `(job, worker)`), exact per-link byte accounting, and the
+//!   report per dispatched shard copy), exact per-link byte accounting, and the
 //!   in-process [`ChannelTransport`] (the paper reports communication
 //!   *volume*; we count serialized payload bytes on the link, which matches
 //!   the schemes' analytic `upload_bytes`/`download_bytes` — asserted in
@@ -37,7 +37,14 @@
 //! * [`master`] — the multi-job coordinator: [`Coordinator::submit`]
 //!   dispatches a job without blocking and returns a [`JobHandle`]; a
 //!   response-router thread routes every worker reply to its owning job by
-//!   `job_id`, dropping duplicate or impersonated responses;
+//!   `job_id`, dropping duplicate or impersonated responses; a monitor
+//!   thread pings workers, tracks membership, and (when enabled)
+//!   speculatively re-dispatches overdue shards to healthy spares;
+//! * [`pool`] — elastic-membership state: per-worker
+//!   [`WorkerHealth`](pool::WorkerHealth) (live / suspect / dead), latency
+//!   EWMAs feeding the speculation deadline, ping bookkeeping, and the
+//!   [`ElasticConfig`](pool::ElasticConfig) knobs that govern health-check
+//!   cadence and re-dispatch policy;
 //! * [`metrics`] — the timing/volume breakdown the evaluation section plots
 //!   (encode / upload / worker compute / download / decode), plus the
 //!   decode-plan cache hit/miss counters;
@@ -81,10 +88,12 @@
 //!    collector fail fast once the threshold is provably unreachable. A
 //!    worker whose *connection* dies looks exactly the same — the transport
 //!    synthesizes the byte-free failure report.
-//! 4. **Retire.** Once every worker has been heard from (success, failure,
-//!    fail-stop report, or transport-synthesized disconnect report), the
-//!    router retires the table entry — the table is bounded by the number
-//!    of genuinely in-flight jobs. Dropping the handle early just stops
+//! 4. **Retire.** Once every shard is resolved (success, exhausted
+//!    failure, fail-stop report, or transport-synthesized disconnect
+//!    report — with speculation on, the *first* copy to succeed resolves
+//!    the shard and later copies are dropped as duplicates), the router
+//!    retires the table entry — the table is bounded by the number of
+//!    genuinely in-flight jobs. Dropping the handle early just stops
 //!    forwarding; accounting continues.
 //!
 //! [`Coordinator`] implements `Drop` (shut the transport down + join the
@@ -100,11 +109,13 @@ pub mod straggler;
 pub mod worker;
 pub mod master;
 pub mod metrics;
+pub mod pool;
 pub mod runner;
 
 pub use daemon::{DaemonConfig, WorkerDaemon};
 pub use master::{Coordinator, JobHandle};
 pub use metrics::JobMetrics;
+pub use pool::{ElasticConfig, WorkerHealth, WorkerSnapshot};
 pub use straggler::StragglerModel;
 pub use runner::{run_batch, run_erased, run_single, NativeCompute};
 pub use tcp::TcpTransport;

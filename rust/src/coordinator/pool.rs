@@ -1,0 +1,544 @@
+//! Master-side worker-pool health model: the live/suspect/dead membership
+//! state machine, per-worker latency estimation (EWMA mean/deviation plus a
+//! log-bucket histogram), and the [`ElasticConfig`] knobs that drive the
+//! coordinator's health monitor and speculative re-dispatch (see
+//! [`super::master`]).
+//!
+//! # Membership state machine
+//!
+//! ```text
+//!            pong / response heard
+//!          ┌─────────────────────────┐
+//!          ▼                         │
+//!        LIVE ──ping unanswered──▶ SUSPECT
+//!          │     for suspect_after   │
+//!          │                         │
+//!          └──link down──▶ DEAD ◀────┘
+//!                            │
+//!                            └──reconnect succeeds──▶ LIVE
+//! ```
+//!
+//! * **Live** — the link is up and traffic (a response, pong or hello) has
+//!   been heard recently enough. Only live workers are eligible as
+//!   speculative spares and are preferred by shard placement.
+//! * **Suspect** — the link is up but a health-check ping has gone
+//!   unanswered for longer than [`ElasticConfig::suspect_after`]. A
+//!   suspect worker keeps its in-flight work (it may just be slow) but
+//!   receives no new speculative copies.
+//! * **Dead** — the transport reports the link down. Everything it owed
+//!   has already fail-stopped; with
+//!   [`ElasticConfig::auto_reconnect`] the monitor periodically re-dials
+//!   it back to live.
+//!
+//! # Re-dispatch deadline
+//!
+//! Each worker's observed response latencies feed an exponentially
+//! weighted moving average of the mean and absolute deviation. A shard
+//! dispatched to worker `w` is overdue — and eligible for a speculative
+//! copy on a live spare — once it has been outstanding longer than
+//!
+//! ```text
+//! deadline(w) = max(spec_min_deadline, mean(w) + spec_factor · dev(w))
+//! ```
+//!
+//! with the pool-wide mean standing in for a worker with no samples yet,
+//! and `spec_min_deadline` alone when the whole pool is cold.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// EWMA smoothing factor for latency mean and deviation.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// Number of log₂ microsecond buckets in [`LatencyHistogram`] (the top
+/// bucket saturates: ≥ 2¹⁵ µs ≈ 33 ms per bucket-16 sample).
+const HISTOGRAM_BUCKETS: usize = 16;
+
+/// One worker's membership state as tracked by the master's health monitor.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WorkerHealth {
+    /// Link up, heard from recently. Eligible for new work and as a
+    /// speculative spare.
+    #[default]
+    Live,
+    /// Link up but a health check has gone unanswered past the configured
+    /// window; gets no new speculative copies until it answers again.
+    Suspect,
+    /// Link down; every job it owed has fail-stopped.
+    Dead,
+}
+
+impl WorkerHealth {
+    /// Placement preference: lower ranks first.
+    pub fn rank(self) -> u8 {
+        match self {
+            WorkerHealth::Live => 0,
+            WorkerHealth::Suspect => 1,
+            WorkerHealth::Dead => 2,
+        }
+    }
+}
+
+/// Exponentially weighted estimate of one worker's response latency: mean
+/// and mean absolute deviation, in microseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyEwma {
+    mean_us: f64,
+    dev_us: f64,
+    samples: u64,
+}
+
+impl LatencyEwma {
+    pub fn observe(&mut self, latency: Duration) {
+        let x = latency.as_micros() as f64;
+        if self.samples == 0 {
+            // First sample: seed the deviation at half the mean so a
+            // single observation doesn't produce a zero-slack deadline.
+            self.mean_us = x;
+            self.dev_us = x / 2.0;
+        } else {
+            let diff = (x - self.mean_us).abs();
+            self.mean_us += EWMA_ALPHA * (x - self.mean_us);
+            self.dev_us += EWMA_ALPHA * (diff - self.dev_us);
+        }
+        self.samples += 1;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_micros(self.mean_us as u64)
+    }
+
+    /// `mean + factor · dev`, the raw (un-floored) re-dispatch deadline.
+    pub fn deadline(&self, factor: f64) -> Duration {
+        Duration::from_micros((self.mean_us + factor * self.dev_us).max(0.0) as u64)
+    }
+}
+
+/// Log₂-bucketed latency histogram: bucket `i` counts responses with
+/// latency in `[2^i, 2^(i+1))` microseconds (bucket 0 additionally holds
+/// sub-microsecond samples; the last bucket saturates upward). Cheap enough
+/// to keep per worker, detailed enough to show a bimodal straggler.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; HISTOGRAM_BUCKETS] }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, latency: Duration) {
+        let us = latency.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(HISTOGRAM_BUCKETS - 1);
+        self.buckets[bucket] += 1;
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+}
+
+/// Tuning for the coordinator's health monitor and speculative re-dispatch.
+/// The default reproduces the pre-elastic coordinator exactly on the job
+/// path (no speculation, no auto-reconnect) while keeping passive health
+/// tracking on.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Health-monitor loop cadence.
+    pub tick: Duration,
+    /// How often to ping an idle worker; `None` disables health-check
+    /// pings entirely (liveness then comes only from link state).
+    pub ping_interval: Option<Duration>,
+    /// An unanswered ping older than this marks the worker suspect.
+    pub suspect_after: Duration,
+    /// Enable speculative re-dispatch of overdue shards to live spares.
+    pub speculate: bool,
+    /// Floor on the re-dispatch deadline — no shard is ever declared
+    /// overdue before this much time has passed.
+    pub spec_min_deadline: Duration,
+    /// Deadline slack: `deadline = max(floor, mean + spec_factor · dev)`.
+    pub spec_factor: f64,
+    /// Maximum simultaneous in-flight copies of one shard (1 = primary
+    /// only, 2 = primary + one spare, …).
+    pub max_copies: usize,
+    /// Maximum total dispatch attempts per shard over its lifetime.
+    pub max_attempts: usize,
+    /// Re-dial dead links in the background (TCP; the channel transport
+    /// revives the worker thread).
+    pub auto_reconnect: bool,
+    /// Minimum delay between background reconnect attempts per worker.
+    pub reconnect_interval: Duration,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            tick: Duration::from_millis(25),
+            ping_interval: Some(Duration::from_millis(500)),
+            suspect_after: Duration::from_secs(1),
+            speculate: false,
+            spec_min_deadline: Duration::from_millis(50),
+            spec_factor: 4.0,
+            max_copies: 2,
+            max_attempts: 4,
+            auto_reconnect: false,
+            reconnect_interval: Duration::from_millis(500),
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// The full elastic mode: speculation plus background reconnect, with
+    /// the default cadences. What `--speculate` turns on.
+    pub fn speculative() -> Self {
+        ElasticConfig { speculate: true, auto_reconnect: true, ..ElasticConfig::default() }
+    }
+}
+
+/// What the health monitor should do about one worker after a
+/// [`PoolState::health_check`] pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PingAction {
+    /// Nothing to send this tick.
+    None,
+    /// Fire a ping with this nonce.
+    Send(u64),
+}
+
+#[derive(Default)]
+struct WorkerStats {
+    health: WorkerHealth,
+    latency: LatencyEwma,
+    histogram: LatencyHistogram,
+    /// When the monitor's outstanding ping (if any) was sent.
+    ping_sent: Option<Instant>,
+}
+
+/// A read-only snapshot of one worker's health and latency estimate.
+#[derive(Clone, Debug)]
+pub struct WorkerSnapshot {
+    pub health: WorkerHealth,
+    pub mean_latency: Duration,
+    pub samples: u64,
+    pub histogram: Vec<u64>,
+}
+
+/// Shared pool-health state: written by the coordinator's router (latency
+/// observations) and health monitor (verdicts), read by shard placement and
+/// speculation. Cloning shares the underlying state.
+#[derive(Clone)]
+pub struct PoolState {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+struct PoolInner {
+    workers: Vec<WorkerStats>,
+    next_nonce: u64,
+}
+
+impl PoolState {
+    pub fn new(n_workers: usize) -> PoolState {
+        let mut workers = Vec::with_capacity(n_workers);
+        workers.resize_with(n_workers, WorkerStats::default);
+        PoolState { inner: Arc::new(Mutex::new(PoolInner { workers, next_nonce: 1 })) }
+    }
+
+    /// Grow to at least `n` workers (new entries start live). Membership
+    /// only ever grows; a removed worker is just dead forever.
+    pub fn ensure_len(&self, n: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.workers.len() < n {
+            inner.workers.resize_with(n, WorkerStats::default);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn health(&self, worker: usize) -> WorkerHealth {
+        let inner = self.inner.lock().unwrap();
+        inner.workers.get(worker).map_or(WorkerHealth::Dead, |w| w.health)
+    }
+
+    pub fn set_health(&self, worker: usize, health: WorkerHealth) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(w) = inner.workers.get_mut(worker) {
+            w.health = health;
+            if health == WorkerHealth::Live {
+                w.ping_sent = None;
+            }
+        }
+    }
+
+    /// Record a successful response latency for `worker`. Hearing a real
+    /// response also clears any suspect verdict.
+    pub fn observe_latency(&self, worker: usize, latency: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(w) = inner.workers.get_mut(worker) {
+            w.latency.observe(latency);
+            w.histogram.record(latency);
+            w.ping_sent = None;
+            if w.health == WorkerHealth::Suspect {
+                w.health = WorkerHealth::Live;
+            }
+        }
+    }
+
+    /// The lowest-index live worker not in `exclude`, if any — the spare a
+    /// speculative copy goes to.
+    pub fn live_spare(&self, exclude: &[usize]) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        (0..inner.workers.len())
+            .find(|w| inner.workers[*w].health == WorkerHealth::Live && !exclude.contains(w))
+    }
+
+    /// The re-dispatch deadline for a shard whose primary is `worker`:
+    /// `max(floor, mean + factor·dev)`, falling back to the pool-wide mean
+    /// for an unsampled worker and to the floor alone for a cold pool.
+    pub fn deadline(&self, worker: Option<usize>, cfg: &ElasticConfig) -> Duration {
+        let inner = self.inner.lock().unwrap();
+        let per_worker = worker
+            .and_then(|w| inner.workers.get(w))
+            .filter(|w| w.latency.samples() > 0)
+            .map(|w| w.latency.deadline(cfg.spec_factor));
+        let estimate = per_worker.or_else(|| {
+            let sampled: Vec<&LatencyEwma> = inner
+                .workers
+                .iter()
+                .filter(|w| w.latency.samples() > 0)
+                .map(|w| &w.latency)
+                .collect();
+            if sampled.is_empty() {
+                None
+            } else {
+                let sum: Duration = sampled.iter().map(|l| l.deadline(cfg.spec_factor)).sum();
+                Some(sum / sampled.len() as u32)
+            }
+        });
+        estimate.unwrap_or(Duration::ZERO).max(cfg.spec_min_deadline)
+    }
+
+    /// One health-check pass for `worker`, given the transport's view of
+    /// the link (`alive`, `idle` = time since last heard). Updates the
+    /// live/suspect verdict and says whether to fire a ping now.
+    pub fn health_check(
+        &self,
+        worker: usize,
+        alive: bool,
+        idle: Option<Duration>,
+        cfg: &ElasticConfig,
+    ) -> PingAction {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let nonce = inner.next_nonce;
+        let Some(w) = inner.workers.get_mut(worker) else {
+            return PingAction::None;
+        };
+        if !alive {
+            w.health = WorkerHealth::Dead;
+            w.ping_sent = None;
+            return PingAction::None;
+        }
+        if w.health == WorkerHealth::Dead {
+            // The link is back up (a reconnect landed).
+            w.health = WorkerHealth::Live;
+            w.ping_sent = None;
+        }
+        let Some(ping_interval) = cfg.ping_interval else {
+            return PingAction::None;
+        };
+        match w.ping_sent {
+            Some(sent) => {
+                // Answered if the link has been heard from since the ping
+                // left (any traffic counts, not just the pong).
+                if idle.is_some_and(|d| d < sent.elapsed()) {
+                    w.ping_sent = None;
+                    if w.health == WorkerHealth::Suspect {
+                        w.health = WorkerHealth::Live;
+                    }
+                    PingAction::None
+                } else {
+                    if sent.elapsed() > cfg.suspect_after {
+                        w.health = WorkerHealth::Suspect;
+                    }
+                    PingAction::None
+                }
+            }
+            None => {
+                let due = idle.is_none_or(|d| d >= ping_interval);
+                if due {
+                    w.ping_sent = Some(Instant::now());
+                    inner.next_nonce += 1;
+                    PingAction::Send(nonce)
+                } else {
+                    PingAction::None
+                }
+            }
+        }
+    }
+
+    /// Read-only snapshot of every worker, for reporting and tests.
+    pub fn snapshot(&self) -> Vec<WorkerSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .workers
+            .iter()
+            .map(|w| WorkerSnapshot {
+                health: w.health,
+                mean_latency: w.latency.mean(),
+                samples: w.latency.samples(),
+                histogram: w.histogram.buckets().to_vec(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn ewma_tracks_mean_and_spreads_deadline_by_deviation() {
+        let mut l = LatencyEwma::default();
+        for _ in 0..50 {
+            l.observe(ms(10));
+        }
+        let mean = l.mean();
+        assert!(mean >= ms(9) && mean <= ms(11), "converges to 10ms, got {mean:?}");
+        // Steady stream → deviation decays → deadline approaches the mean.
+        let tight = l.deadline(4.0);
+        assert!(tight < ms(25), "steady worker gets a tight deadline, got {tight:?}");
+
+        // A jittery worker earns more slack.
+        let mut jittery = LatencyEwma::default();
+        for i in 0..50 {
+            jittery.observe(if i % 2 == 0 { ms(5) } else { ms(40) });
+        }
+        assert!(jittery.deadline(4.0) > tight);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2_microseconds() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1)); // bucket 0
+        h.record(Duration::from_micros(3)); // bucket 1
+        h.record(Duration::from_micros(1024)); // bucket 10
+        h.record(Duration::from_secs(3600)); // saturates into the top bucket
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.buckets()[0], 1);
+        assert_eq!(h.buckets()[1], 1);
+        assert_eq!(h.buckets()[10], 1);
+        assert_eq!(h.buckets()[HISTOGRAM_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn live_spare_skips_unhealthy_and_excluded_workers() {
+        let pool = PoolState::new(4);
+        pool.set_health(0, WorkerHealth::Dead);
+        pool.set_health(1, WorkerHealth::Suspect);
+        assert_eq!(pool.live_spare(&[]), Some(2));
+        assert_eq!(pool.live_spare(&[2]), Some(3));
+        assert_eq!(pool.live_spare(&[2, 3]), None, "suspect workers are not spares");
+    }
+
+    #[test]
+    fn deadline_falls_back_from_worker_to_pool_to_floor() {
+        let cfg =
+            ElasticConfig { spec_min_deadline: ms(50), spec_factor: 2.0, ..Default::default() };
+        let pool = PoolState::new(2);
+        // Cold pool: the floor.
+        assert_eq!(pool.deadline(Some(0), &cfg), ms(50));
+        // Worker 1 sampled at ~200ms; worker 0 falls back to the pool mean.
+        for _ in 0..20 {
+            pool.observe_latency(1, ms(200));
+        }
+        assert!(pool.deadline(Some(1), &cfg) >= ms(200));
+        assert!(pool.deadline(Some(0), &cfg) >= ms(200), "unsampled worker uses the pool mean");
+        // A fast sampled worker still never goes below the floor.
+        for _ in 0..50 {
+            pool.observe_latency(0, Duration::from_micros(100));
+        }
+        assert_eq!(pool.deadline(Some(0), &cfg), ms(50));
+    }
+
+    #[test]
+    fn health_check_walks_live_suspect_dead_and_back() {
+        let cfg = ElasticConfig {
+            ping_interval: Some(Duration::ZERO),
+            suspect_after: Duration::ZERO,
+            ..Default::default()
+        };
+        let pool = PoolState::new(1);
+        assert_eq!(pool.health(0), WorkerHealth::Live);
+
+        // Never heard from → ping immediately.
+        let action = pool.health_check(0, true, None, &cfg);
+        assert!(matches!(action, PingAction::Send(_)));
+        // Ping outstanding, no traffic since, past the (zero) window →
+        // suspect.
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(pool.health_check(0, true, None, &cfg), PingAction::None);
+        assert_eq!(pool.health(0), WorkerHealth::Suspect);
+
+        // Fresh traffic (idle < time since ping) clears the suspicion.
+        assert_eq!(pool.health_check(0, true, Some(Duration::ZERO), &cfg), PingAction::None);
+        assert_eq!(pool.health(0), WorkerHealth::Live);
+
+        // Link down → dead; link back up → live.
+        pool.health_check(0, false, None, &cfg);
+        assert_eq!(pool.health(0), WorkerHealth::Dead);
+        pool.health_check(0, true, Some(Duration::ZERO), &cfg);
+        assert_eq!(pool.health(0), WorkerHealth::Live);
+
+        // A real observed response also revives a suspect.
+        pool.set_health(0, WorkerHealth::Suspect);
+        pool.observe_latency(0, ms(5));
+        assert_eq!(pool.health(0), WorkerHealth::Live);
+    }
+
+    #[test]
+    fn pings_respect_the_interval_and_nonces_are_unique() {
+        let cfg = ElasticConfig {
+            ping_interval: Some(Duration::from_secs(3600)),
+            ..Default::default()
+        };
+        let pool = PoolState::new(1);
+        // Heard from recently → no ping.
+        assert_eq!(pool.health_check(0, true, Some(Duration::ZERO), &cfg), PingAction::None);
+        // Idle past the interval → ping, with a fresh nonce each time.
+        let PingAction::Send(n1) = pool.health_check(0, true, Some(Duration::from_secs(7200)), &cfg)
+        else {
+            panic!("expected a ping")
+        };
+        pool.set_health(0, WorkerHealth::Live); // clears ping_sent
+        let PingAction::Send(n2) = pool.health_check(0, true, Some(Duration::from_secs(7200)), &cfg)
+        else {
+            panic!("expected a ping")
+        };
+        assert_ne!(n1, n2);
+
+        // Pings disabled → never.
+        let off = ElasticConfig { ping_interval: None, ..Default::default() };
+        assert_eq!(pool.health_check(0, true, None, &off), PingAction::None);
+    }
+}

@@ -28,9 +28,11 @@ pub use super::worker::ShareCompute as ShareComputeTrait;
 /// Build the coordinator either way the CLI can ask for one: spawn an
 /// in-process pool (`endpoints = None`; `backend`/`straggler`/`seed` apply
 /// there), or connect to already-running `gr-cdmm worker` daemons
-/// (`endpoints = Some(..)`, one per worker — the daemons own the compute
-/// backend and straggler injection in that case, so those arguments are
-/// ignored by design).
+/// (`endpoints = Some(..)` — the daemons own the compute backend and
+/// straggler injection in that case, so those arguments are ignored by
+/// design). At least `n_workers` endpoints are required; extras join the
+/// pool as spare capacity for health-ranked placement and speculative
+/// re-dispatch.
 pub fn make_coordinator(
     n_workers: usize,
     backend: Arc<dyn ShareCompute>,
@@ -42,8 +44,9 @@ pub fn make_coordinator(
         None => Ok(Coordinator::new(n_workers, backend, straggler, seed)),
         Some(addrs) => {
             anyhow::ensure!(
-                addrs.len() == n_workers,
-                "--connect lists {} endpoint(s) but the scheme needs N = {n_workers} workers",
+                addrs.len() >= n_workers,
+                "--connect lists {} endpoint(s) but the scheme needs N = {n_workers} workers \
+                 (pick a smaller preset with SchemeConfig::for_live_workers, or add daemons)",
                 addrs.len()
             );
             Coordinator::connect_tcp(addrs)
@@ -98,6 +101,7 @@ fn job_metrics(
         total,
         upload_bytes: counters.upload_total(),
         download_bytes: counters.download_used_total(),
+        speculative_dispatches: counters.speculative_total(),
         worker_compute: collected.iter().map(|c| c.compute).collect(),
         worker_delay: collected.iter().map(|c| c.injected_delay).collect(),
         used_workers: collected.iter().map(|c| c.worker_id).collect(),

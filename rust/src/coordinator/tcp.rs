@@ -8,13 +8,13 @@
 //! malformed or truncated frames, an oversized declared payload — the
 //! per-connection reader treats every one of these as the worker turning
 //! **fail-stop**. It synthesizes a byte-free
-//! [`fail_report`](super::transport::fail_report) for every job sent on the
-//! link but not yet answered, and the writer side does the same for jobs
-//! submitted after the death, so the master's router still hears from every
-//! worker exactly once per job and PR 3's deterministic job retirement
-//! keeps working. A dead worker is indistinguishable from the
-//! [`StragglerModel::FailStop`](super::straggler::StragglerModel) model —
-//! jobs fail fast with "cannot complete" when the threshold becomes
+//! [`fail_report`](super::transport::fail_report) for every `(job, shard)`
+//! sent on the link but not yet answered, and the writer side does the same
+//! for jobs submitted after the death, so the master's router still hears
+//! exactly one report per dispatched shard copy and PR 3's deterministic
+//! job retirement keeps working. A dead worker is indistinguishable from
+//! the [`StragglerModel::FailStop`](super::straggler::StragglerModel) model
+//! — jobs fail fast with "cannot complete" when the threshold becomes
 //! unreachable, never hang, and never panic.
 //!
 //! # Byte accounting
@@ -29,12 +29,28 @@
 //! # Identity
 //!
 //! The connection index — the position of the endpoint in the `connect`
-//! list — is the authoritative worker id: the id echoed in response frames
-//! is ignored, so a confused (or byzantine) daemon cannot impersonate
-//! another worker. Duplicate responses are additionally dropped by the
-//! master's router (see [`super::master`]).
+//! list — is the authoritative worker id. Every connection opens with a
+//! hello frame assigning the daemon that id; a daemon whose hello echo
+//! *claims a different id* is treated as a rogue peer and fail-stopped on
+//! the spot. Response frames carry the **shard** index (under speculative
+//! re-dispatch a spare daemon answers for another worker's shard), so the
+//! reader validates each response against the link's own outstanding
+//! `(job, shard)` set instead of trusting — or overwriting — the id: an
+//! unsolicited response is a protocol violation and kills the link, and a
+//! confused or byzantine daemon still cannot impersonate another worker.
+//! Duplicate responses are additionally dropped by the master's router
+//! (see [`super::master`]).
+//!
+//! # Elastic membership
+//!
+//! Links are dynamic: [`Transport::disconnect_worker`] force-closes a
+//! socket (fail-stopping whatever it owed), [`Transport::reconnect_worker`]
+//! re-dials the remembered (or a new) endpoint into the same worker slot,
+//! and [`Transport::add_worker`] appends a fresh slot. [`Transport::ping`]
+//! writes a ping frame whose pong stamps the link's `last_rtt`/freshness
+//! for [`Transport::link_status`].
 
-use super::transport::{fail_report, FromWorker, ToWorker, Transport};
+use super::transport::{fail_report, FromWorker, LinkStatus, ToWorker, Transport};
 use super::wire::{self, Frame, FrameKind};
 use std::collections::BTreeSet;
 use std::io::{BufReader, ErrorKind};
@@ -42,7 +58,7 @@ use std::net::{Shutdown as SockShutdown, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Connection attempts before giving up on an endpoint (daemons may still
 /// be binding when the coordinator starts — e.g. the CI loopback e2e).
@@ -55,21 +71,49 @@ const CONNECT_RETRY: Duration = Duration::from_millis(125);
 /// host, SIGSTOP'd process) must not hang the master's shutdown forever.
 const SHUTDOWN_GRACE: Duration = Duration::from_secs(30);
 
-/// Writer/reader-shared per-connection state. `pending` holds the job ids
-/// sent on the link but not yet answered; whoever observes the death
-/// (reader *or* writer) flips `alive` and drains `pending` into synthetic
-/// fail-stop reports under the same lock, so every job is reported exactly
-/// once.
+/// Writer/reader-shared per-connection state. `pending` holds the
+/// `(job_id, shard)` pairs sent on the link but not yet answered; whoever
+/// observes the death (reader *or* writer) flips `alive` and drains
+/// `pending` into synthetic fail-stop reports under the same lock, so every
+/// dispatched copy is reported exactly once.
 struct ConnState {
     alive: bool,
-    pending: BTreeSet<u64>,
+    pending: BTreeSet<(u64, u64)>,
+    /// When the link last produced *any* frame (response, pong, hello).
+    last_heard: Option<Instant>,
+    /// Outstanding health-check: (nonce, send time).
+    ping_sent: Option<(u64, Instant)>,
+    /// Most recent answered ping's round-trip time.
+    last_rtt: Option<Duration>,
+}
+
+impl ConnState {
+    fn fresh() -> ConnState {
+        ConnState {
+            alive: true,
+            pending: BTreeSet::new(),
+            last_heard: None,
+            ping_sent: None,
+            last_rtt: None,
+        }
+    }
 }
 
 type SharedState = Arc<Mutex<ConnState>>;
 
-/// Take every pending job id and mark the connection dead. Returns the jobs
-/// to report as fail-stopped (empty if another path already drained them).
-fn drain_dead(state: &SharedState) -> BTreeSet<u64> {
+/// One worker slot: the socket, its reader thread, and the endpoint to
+/// re-dial on reconnect.
+struct Conn {
+    stream: TcpStream,
+    state: SharedState,
+    reader: Option<JoinHandle<()>>,
+    endpoint: String,
+}
+
+/// Take every pending `(job, shard)` and mark the connection dead. Returns
+/// the pairs to report as fail-stopped (empty if another path already
+/// drained them).
+fn drain_dead(state: &SharedState) -> BTreeSet<(u64, u64)> {
     let mut st = state.lock().unwrap();
     st.alive = false;
     std::mem::take(&mut st.pending)
@@ -87,20 +131,8 @@ fn spawn_reader(
         .spawn(move || {
             let mut reader = BufReader::new(stream);
             loop {
-                let report = match wire::read_frame(&mut reader) {
-                    Ok(Some(frame))
-                        if matches!(frame.kind, FrameKind::RespOk | FrameKind::RespFail) =>
-                    {
-                        frame.into_report()
-                    }
-                    Ok(Some(frame)) => {
-                        eprintln!(
-                            "gr-cdmm: worker {worker_id} ({peer}) sent an unexpected \
-                             {:?} frame; treating it as fail-stopped",
-                            frame.kind
-                        );
-                        break;
-                    }
+                let frame = match wire::read_frame(&mut reader) {
+                    Ok(Some(frame)) => frame,
                     Ok(None) => break, // clean close
                     Err(e) => {
                         eprintln!(
@@ -110,26 +142,80 @@ fn spawn_reader(
                         break;
                     }
                 };
-                let mut msg = match report {
-                    Ok(msg) => msg,
-                    Err(e) => {
+                match frame.kind {
+                    FrameKind::RespOk | FrameKind::RespFail => {
+                        let msg = match frame.into_report() {
+                            Ok(msg) => msg,
+                            Err(e) => {
+                                eprintln!(
+                                    "gr-cdmm: worker {worker_id} ({peer}) sent a malformed \
+                                     response ({e}); treating it as fail-stopped"
+                                );
+                                break;
+                            }
+                        };
+                        // A response is only valid if this link actually
+                        // owes that (job, shard): anything else is a rogue
+                        // or badly confused peer — kill the link rather
+                        // than let it answer for work it was never sent.
+                        let key = (msg.job_id, msg.worker_id as u64);
+                        {
+                            let mut st = state.lock().unwrap();
+                            if !st.pending.remove(&key) {
+                                drop(st);
+                                eprintln!(
+                                    "gr-cdmm: worker {worker_id} ({peer}) sent an \
+                                     unsolicited response for job {} shard {}; treating \
+                                     the link as rogue (fail-stopped)",
+                                    msg.job_id, msg.worker_id
+                                );
+                                break;
+                            }
+                            st.last_heard = Some(Instant::now());
+                        }
+                        if funnel.send(msg).is_err() {
+                            break; // coordinator gone
+                        }
+                    }
+                    FrameKind::Pong => {
+                        let mut st = state.lock().unwrap();
+                        st.last_heard = Some(Instant::now());
+                        if let Some((nonce, sent)) = st.ping_sent {
+                            if nonce == frame.job_id {
+                                st.last_rtt = Some(sent.elapsed());
+                                st.ping_sent = None;
+                            }
+                        }
+                    }
+                    FrameKind::Hello => {
+                        // The daemon echoes the id we assigned at connect;
+                        // a different claim means we are talking to the
+                        // wrong (or a lying) peer.
+                        if frame.worker_id != worker_id as u64 {
+                            eprintln!(
+                                "gr-cdmm: peer at {peer} claims worker id {} but is \
+                                 connected as worker {worker_id}; rejecting the link \
+                                 as rogue (fail-stopped)",
+                                frame.worker_id
+                            );
+                            break;
+                        }
+                        state.lock().unwrap().last_heard = Some(Instant::now());
+                    }
+                    FrameKind::Goodbye => break, // graceful leave
+                    FrameKind::Job | FrameKind::Shutdown | FrameKind::Ping => {
                         eprintln!(
-                            "gr-cdmm: worker {worker_id} ({peer}) sent a malformed \
-                             response ({e}); treating it as fail-stopped"
+                            "gr-cdmm: worker {worker_id} ({peer}) sent an unexpected \
+                             {:?} frame; treating it as fail-stopped",
+                            frame.kind
                         );
                         break;
                     }
-                };
-                // The connection index is the authoritative identity.
-                msg.worker_id = worker_id;
-                state.lock().unwrap().pending.remove(&msg.job_id);
-                if funnel.send(msg).is_err() {
-                    break; // coordinator gone
                 }
             }
-            // Fail-stop: report every job this link still owed an answer.
-            for job_id in drain_dead(&state) {
-                if funnel.send(fail_report(job_id, worker_id)).is_err() {
+            // Fail-stop: report every (job, shard) this link still owed.
+            for (job_id, shard) in drain_dead(&state) {
+                if funnel.send(fail_report(job_id, shard as usize)).is_err() {
                     break;
                 }
             }
@@ -157,12 +243,32 @@ fn connect_retry(addr: &str) -> anyhow::Result<TcpStream> {
     )
 }
 
+/// Wrap an accepted stream into a live worker slot: reader thread plus the
+/// hello frame assigning the daemon its machine id. A hello write failure
+/// is a link that died at birth — the reader observes it and fail-stops.
+fn open_link(
+    worker_id: usize,
+    endpoint: String,
+    stream: TcpStream,
+    funnel: &Sender<FromWorker>,
+) -> anyhow::Result<Conn> {
+    stream.set_nodelay(true)?;
+    let state: SharedState = Arc::new(Mutex::new(ConnState::fresh()));
+    let reader = spawn_reader(
+        worker_id,
+        stream.try_clone()?,
+        Arc::clone(&state),
+        funnel.clone(),
+        endpoint.clone(),
+    );
+    let _ = wire::write_frame(&mut &stream, &Frame::hello(worker_id));
+    Ok(Conn { stream, state, reader: Some(reader), endpoint })
+}
+
 /// The socket transport. Build with [`TcpTransport::connect`]; endpoint `i`
 /// in the list is worker `i`.
 pub struct TcpTransport {
-    streams: Vec<TcpStream>,
-    states: Vec<SharedState>,
-    readers: Vec<JoinHandle<()>>,
+    conns: Vec<Conn>,
     funnel: Option<Sender<FromWorker>>,
     rx: Option<Receiver<FromWorker>>,
     shut: bool,
@@ -178,82 +284,90 @@ impl TcpTransport {
         anyhow::ensure!(!endpoints.is_empty(), "need at least one worker endpoint");
         let mut streams = Vec::with_capacity(endpoints.len());
         for addr in endpoints {
-            let stream = connect_retry(addr)?;
-            stream.set_nodelay(true)?;
-            streams.push(stream);
+            streams.push(connect_retry(addr)?);
         }
         // Only spawn reader threads once every endpoint is connected, so a
         // failed connect leaks nothing.
         let (funnel_tx, rx) = channel::<FromWorker>();
-        let mut states = Vec::with_capacity(endpoints.len());
-        let mut readers = Vec::with_capacity(endpoints.len());
-        for (wid, (stream, addr)) in streams.iter().zip(endpoints).enumerate() {
-            let state: SharedState =
-                Arc::new(Mutex::new(ConnState { alive: true, pending: BTreeSet::new() }));
-            readers.push(spawn_reader(
-                wid,
-                stream.try_clone()?,
-                Arc::clone(&state),
-                funnel_tx.clone(),
-                addr.clone(),
-            ));
-            states.push(state);
+        let mut conns = Vec::with_capacity(endpoints.len());
+        for (wid, (stream, addr)) in streams.into_iter().zip(endpoints).enumerate() {
+            conns.push(open_link(wid, addr.clone(), stream, &funnel_tx)?);
         }
-        Ok(TcpTransport {
-            streams,
-            states,
-            readers,
-            funnel: Some(funnel_tx),
-            rx: Some(rx),
-            shut: false,
-        })
+        Ok(TcpTransport { conns, funnel: Some(funnel_tx), rx: Some(rx), shut: false })
     }
 
-    /// Report `job_id` as fail-stopped at `worker_id` (link already dead).
-    fn synthesize_fail(&self, worker_id: usize, job_id: u64) {
+    /// Report `shard` of `job_id` as fail-stopped (link already dead).
+    fn synthesize_fail(&self, shard: usize, job_id: u64) {
         if let Some(tx) = &self.funnel {
-            let _ = tx.send(fail_report(job_id, worker_id));
+            let _ = tx.send(fail_report(job_id, shard));
+        }
+    }
+
+    /// Kill `worker_id`'s link and fail-stop everything it still owed.
+    fn kill_link(&mut self, worker_id: usize) {
+        let _ = self.conns[worker_id].stream.shutdown(SockShutdown::Both);
+        for (job, shard) in drain_dead(&self.conns[worker_id].state) {
+            self.synthesize_fail(shard as usize, job);
         }
     }
 }
 
 impl Transport for TcpTransport {
     fn n_workers(&self) -> usize {
-        self.streams.len()
+        self.conns.len()
     }
 
     fn send(&mut self, worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
-        anyhow::ensure!(worker_id < self.streams.len(), "worker id {worker_id} out of range");
+        anyhow::ensure!(worker_id < self.conns.len(), "worker id {worker_id} out of range");
         match msg {
             ToWorker::Shutdown => {
-                if self.states[worker_id].lock().unwrap().alive {
-                    let _ = wire::write_frame(&mut &self.streams[worker_id], &Frame::shutdown());
+                if self.conns[worker_id].state.lock().unwrap().alive {
+                    let _ =
+                        wire::write_frame(&mut &self.conns[worker_id].stream, &Frame::shutdown());
                 }
                 Ok(0)
             }
-            ToWorker::Job { job_id, payload } => {
+            ToWorker::Ping { nonce, .. } => {
                 {
-                    let mut st = self.states[worker_id].lock().unwrap();
+                    let mut st = self.conns[worker_id].state.lock().unwrap();
+                    if !st.alive {
+                        return Ok(0); // dead links don't answer probes
+                    }
+                    st.ping_sent = Some((nonce, Instant::now()));
+                }
+                if wire::write_frame(&mut &self.conns[worker_id].stream, &Frame::ping(nonce))
+                    .is_err()
+                {
+                    self.kill_link(worker_id);
+                }
+                Ok(0)
+            }
+            ToWorker::Job { job_id, shard, payload } => {
+                {
+                    let mut st = self.conns[worker_id].state.lock().unwrap();
                     if !st.alive {
                         // Dead link = fail-stop worker: report byte-free so
                         // the job still retires deterministically.
                         drop(st);
-                        self.synthesize_fail(worker_id, job_id);
+                        self.synthesize_fail(shard, job_id);
                         return Ok(0);
                     }
-                    st.pending.insert(job_id);
+                    st.pending.insert((job_id, shard as u64));
                 }
                 let len = payload.len();
-                let frame = Frame::job(job_id, worker_id, payload);
-                if wire::write_frame(&mut &self.streams[worker_id], &frame).is_err() {
+                if wire::write_job_frame(
+                    &mut &self.conns[worker_id].stream,
+                    job_id,
+                    shard,
+                    &payload,
+                )
+                .is_err()
+                {
                     // The link died mid-write: whatever the daemon received
                     // is now moot. Unblock the reader and fail-stop every
-                    // job this link still owed (including this one, unless
-                    // the reader drained it first).
-                    let _ = self.streams[worker_id].shutdown(SockShutdown::Both);
-                    for job in drain_dead(&self.states[worker_id]) {
-                        self.synthesize_fail(worker_id, job);
-                    }
+                    // (job, shard) this link still owed (including this
+                    // one, unless the reader drained it first).
+                    self.kill_link(worker_id);
                     return Ok(0);
                 }
                 Ok(len)
@@ -270,25 +384,27 @@ impl Transport for TcpTransport {
             return;
         }
         self.shut = true;
-        for (stream, state) in self.streams.iter().zip(&self.states) {
-            if state.lock().unwrap().alive {
-                let _ = wire::write_frame(&mut &*stream, &Frame::shutdown());
+        for conn in &self.conns {
+            if conn.state.lock().unwrap().alive {
+                let _ = wire::write_frame(&mut &conn.stream, &Frame::shutdown());
             }
             // Half-close: the daemon still drains queued jobs and writes
-            // their responses before it sees the shutdown frame / EOF and
-            // closes, at which point the reader thread exits.
-            let _ = stream.shutdown(SockShutdown::Write);
+            // their responses before it sees the shutdown frame / EOF,
+            // answers with a goodbye and closes, at which point the reader
+            // thread exits.
+            let _ = conn.stream.shutdown(SockShutdown::Write);
         }
         // Join every reader, but never hang on a wedged peer: past the
         // grace deadline the socket is force-closed, which errors the
         // blocked read and lets the reader run its fail-stop drain.
-        let deadline = std::time::Instant::now() + SHUTDOWN_GRACE;
-        for (i, h) in self.readers.drain(..).enumerate() {
-            while !h.is_finished() && std::time::Instant::now() < deadline {
+        let deadline = Instant::now() + SHUTDOWN_GRACE;
+        for conn in &mut self.conns {
+            let Some(h) = conn.reader.take() else { continue };
+            while !h.is_finished() && Instant::now() < deadline {
                 std::thread::sleep(Duration::from_millis(10));
             }
             if !h.is_finished() {
-                let _ = self.streams[i].shutdown(SockShutdown::Both);
+                let _ = conn.stream.shutdown(SockShutdown::Both);
             }
             let _ = h.join();
         }
@@ -299,6 +415,77 @@ impl Transport for TcpTransport {
 
     fn name(&self) -> &'static str {
         "tcp"
+    }
+
+    fn link_status(&self, worker_id: usize) -> LinkStatus {
+        match self.conns.get(worker_id) {
+            Some(conn) => {
+                let st = conn.state.lock().unwrap();
+                LinkStatus {
+                    alive: st.alive,
+                    idle: st.last_heard.map(|t| t.elapsed()),
+                    last_rtt: st.last_rtt,
+                }
+            }
+            None => LinkStatus { alive: false, idle: None, last_rtt: None },
+        }
+    }
+
+    fn ping(&mut self, worker_id: usize, nonce: u64) -> anyhow::Result<()> {
+        self.send(worker_id, ToWorker::Ping { nonce, sent: Instant::now() })?;
+        Ok(())
+    }
+
+    fn disconnect_worker(&mut self, worker_id: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(worker_id < self.conns.len(), "worker id {worker_id} out of range");
+        self.kill_link(worker_id);
+        // The reader exits on the closed socket; reap it so a later
+        // reconnect can install a fresh one.
+        if let Some(h) = self.conns[worker_id].reader.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    fn reconnect_worker(&mut self, worker_id: usize, endpoint: Option<&str>) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.shut, "transport is shut down");
+        anyhow::ensure!(worker_id < self.conns.len(), "worker id {worker_id} out of range");
+        let funnel = self
+            .funnel
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("transport is shutting down"))?;
+        if let Some(ep) = endpoint {
+            self.conns[worker_id].endpoint = ep.to_string();
+        }
+        anyhow::ensure!(
+            !self.conns[worker_id].state.lock().unwrap().alive,
+            "worker {worker_id} link is still alive"
+        );
+        if let Some(h) = self.conns[worker_id].reader.take() {
+            let _ = h.join();
+        }
+        // One fast dial per attempt: a refused connection fails immediately
+        // and the caller (the health monitor, typically) just retries on
+        // its next tick.
+        let addr = self.conns[worker_id].endpoint.clone();
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| anyhow::anyhow!("re-dialing worker {worker_id} at {addr}: {e}"))?;
+        self.conns[worker_id] = open_link(worker_id, addr, stream, &funnel)?;
+        Ok(())
+    }
+
+    fn add_worker(&mut self, endpoint: Option<&str>) -> anyhow::Result<usize> {
+        anyhow::ensure!(!self.shut, "transport is shut down");
+        let addr = endpoint
+            .ok_or_else(|| anyhow::anyhow!("tcp add_worker needs a host:port endpoint"))?;
+        let funnel = self
+            .funnel
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("transport is shutting down"))?;
+        let wid = self.conns.len();
+        let stream = connect_retry(addr)?;
+        self.conns.push(open_link(wid, addr.to_string(), stream, &funnel)?);
+        Ok(wid)
     }
 }
 

@@ -29,28 +29,52 @@
 //! monotone; "discarded" download is derived (`arrived − used`), so late
 //! responses counted by the router can never race the collector's
 //! used-bytes accounting into a negative.
+//!
+//! # Elastic membership
+//!
+//! Since the elastic-pool change the trait also models membership churn:
+//! workers may be taken down ([`Transport::disconnect_worker`]), revived or
+//! re-dialed ([`Transport::reconnect_worker`]), or added while the pool is
+//! serving ([`Transport::add_worker`]); [`Transport::ping`] plus
+//! [`Transport::link_status`] give the master the liveness/latency signal
+//! its health monitor turns into live/suspect/dead verdicts (see
+//! [`super::pool`]). All five have conservative default implementations so
+//! simple transports (and test mocks) keep compiling: always-alive links
+//! and "membership unsupported" errors.
 
 use super::straggler::StragglerModel;
 use super::worker::{spawn_worker, worker_rng, ShareCompute};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Master → worker message.
 pub enum ToWorker {
     Job {
         job_id: u64,
-        /// Serialized [`crate::codes::Share`].
-        payload: Vec<u8>,
+        /// Which shard of the job this payload is. Shard identity is fixed
+        /// at submit; speculative re-dispatch may hand the *same* shard to
+        /// a different worker, so the shard index — not the worker index —
+        /// is what response reports carry back.
+        shard: usize,
+        /// Serialized [`crate::codes::Share`], shared so a speculative
+        /// re-dispatch of the same shard never copies the bytes.
+        payload: Arc<Vec<u8>>,
     },
+    /// Health-check probe; the in-process worker answers by stamping its
+    /// shared [`WorkerLink`] (the socket daemon answers with a pong frame).
+    Ping { nonce: u64, sent: Instant },
     Shutdown,
 }
 
 /// Worker → master message.
 pub struct FromWorker {
     pub job_id: u64,
+    /// The **shard index** this report answers (historically equal to the
+    /// worker index; under speculative re-dispatch a spare worker reports
+    /// the original shard id).
     pub worker_id: usize,
     /// Serialized response matrix. `None` if the worker failed the job.
     pub payload: Option<Vec<u8>>,
@@ -60,11 +84,11 @@ pub struct FromWorker {
     pub injected_delay: Duration,
 }
 
-/// The byte-free fail-stop report for one `(job, worker)`: what a worker
+/// The byte-free fail-stop report for one `(job, shard)`: what a worker
 /// that drops a job sends, and what a transport synthesizes when a worker's
 /// link dies with the job outstanding — either way the master's response
-/// router hears from every worker exactly once per job, so job retirement
-/// stays deterministic (see [`super::master`]).
+/// router hears exactly one report per dispatched copy of a shard, so job
+/// retirement stays deterministic (see [`super::master`]).
 pub fn fail_report(job_id: u64, worker_id: usize) -> FromWorker {
     FromWorker {
         job_id,
@@ -75,24 +99,49 @@ pub fn fail_report(job_id: u64, worker_id: usize) -> FromWorker {
     }
 }
 
+/// One worker link's liveness/latency snapshot, as observed by the
+/// transport. The master's health monitor combines this with its own ping
+/// bookkeeping to classify the worker live/suspect/dead.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkStatus {
+    /// The link can still carry traffic. A dead link fail-stops every job
+    /// sent on it.
+    pub alive: bool,
+    /// Time since the transport last heard *anything* from the worker
+    /// (response, pong, hello). `None` if it has never been heard from.
+    pub idle: Option<Duration>,
+    /// Most recent ping → pong round-trip time, if any ping was answered.
+    pub last_rtt: Option<Duration>,
+}
+
+impl LinkStatus {
+    /// The conservative default for transports without liveness tracking:
+    /// alive, no traffic history.
+    pub fn alive_unknown() -> LinkStatus {
+        LinkStatus { alive: true, idle: None, last_rtt: None }
+    }
+}
+
 /// An object-safe master-side link to `N` workers.
 ///
 /// The contract the coordinator relies on:
 ///
 /// * **per-worker FIFO** — messages sent to one worker are processed in
 ///   order;
-/// * **exactly-one report per (job, worker)** — for every `Job` sent, the
-///   receiver eventually yields exactly one [`FromWorker`] with that
-///   `(job_id, worker_id)`: a real response, a worker-side failure report,
-///   or a transport-synthesized fail-stop report ([`fail_report`]) if the
-///   link died. A permanently dead worker therefore looks exactly like the
-///   fail-stop straggler model, never like a hang;
+/// * **exactly-one report per dispatched (job, shard) copy** — for every
+///   `Job` sent, the receiver eventually yields exactly one [`FromWorker`]
+///   with that `(job_id, shard)`: a real response, a worker-side failure
+///   report, or a transport-synthesized fail-stop report ([`fail_report`])
+///   if the link died. A permanently dead worker therefore looks exactly
+///   like the fail-stop straggler model, never like a hang;
 /// * **byte accounting** — [`Transport::send`] returns the payload bytes
 ///   actually put on the link (0 for control messages and for jobs
 ///   dropped because the worker's link is already dead), and response
 ///   payload bytes arrive uncounted for the router to credit.
 pub trait Transport: Send {
-    /// Number of workers this transport reaches.
+    /// Number of worker slots this transport reaches (dead links included —
+    /// membership grows via [`Transport::add_worker`], but slots are never
+    /// removed, only marked dead).
     fn n_workers(&self) -> usize;
 
     /// Send one message to `worker_id`. Returns the payload bytes handed to
@@ -114,10 +163,54 @@ pub trait Transport: Send {
 
     /// Short transport name for logs and reports (`"channel"`, `"tcp"`).
     fn name(&self) -> &'static str;
+
+    /// Liveness/latency snapshot for one worker link. The default claims
+    /// every in-range worker alive with no history, which keeps
+    /// health-oblivious transports (and mocks) working.
+    fn link_status(&self, worker_id: usize) -> LinkStatus {
+        if worker_id < self.n_workers() {
+            LinkStatus::alive_unknown()
+        } else {
+            LinkStatus { alive: false, idle: None, last_rtt: None }
+        }
+    }
+
+    /// Fire one health-check probe at `worker_id`. Answers surface through
+    /// [`Transport::link_status`] (a fresher `idle`, a new `last_rtt`), not
+    /// through the receiver. The default is a successful no-op.
+    fn ping(&mut self, _worker_id: usize, _nonce: u64) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Take worker `worker_id`'s link down. Jobs it still owes — and any
+    /// sent to it afterwards — fail-stop. The default errors: membership is
+    /// fixed on transports that don't override it.
+    fn disconnect_worker(&mut self, _worker_id: usize) -> anyhow::Result<()> {
+        anyhow::bail!("this transport does not support dynamic membership")
+    }
+
+    /// Bring worker `worker_id`'s link back up, optionally at a new
+    /// endpoint (TCP re-dials; the in-process transport revives the thread
+    /// and accepts no endpoint). The default errors.
+    fn reconnect_worker(
+        &mut self,
+        _worker_id: usize,
+        _endpoint: Option<&str>,
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("this transport does not support dynamic membership")
+    }
+
+    /// Grow the pool by one worker (TCP dials `endpoint`; the in-process
+    /// transport spawns a thread and accepts no endpoint). Returns the new
+    /// worker's id. The default errors.
+    fn add_worker(&mut self, _endpoint: Option<&str>) -> anyhow::Result<usize> {
+        anyhow::bail!("this transport does not support dynamic membership")
+    }
 }
 
-/// Shared, monotone byte counters for one scope (one job, or one
-/// coordinator lifetime). Cloning shares the underlying atomics.
+/// Shared, monotone counters for one scope (one job, or one coordinator
+/// lifetime): byte volume on each link direction plus the number of
+/// speculative re-dispatches. Cloning shares the underlying atomics.
 #[derive(Clone, Default)]
 pub struct ByteCounters {
     /// Total bytes master → workers.
@@ -128,6 +221,9 @@ pub struct ByteCounters {
     /// Bytes of responses the collector consumed for decoding (the first
     /// `need` successful responses of the job).
     download_used: Arc<AtomicU64>,
+    /// Speculative shard re-dispatches (copies beyond the first dispatch of
+    /// each shard). Their payload bytes are also in `upload`.
+    speculative: Arc<AtomicU64>,
 }
 
 impl ByteCounters {
@@ -147,6 +243,10 @@ impl ByteCounters {
         self.download_used.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    pub fn add_speculative(&self, n: u64) {
+        self.speculative.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn upload_total(&self) -> u64 {
         self.upload.load(Ordering::Relaxed)
     }
@@ -159,6 +259,10 @@ impl ByteCounters {
         self.download_used.load(Ordering::Relaxed)
     }
 
+    pub fn speculative_total(&self) -> u64 {
+        self.speculative.load(Ordering::Relaxed)
+    }
+
     /// Bytes that arrived after the job no longer needed them (beyond the
     /// recovery threshold, or after the job's handle was dropped).
     pub fn download_discarded_total(&self) -> u64 {
@@ -166,14 +270,44 @@ impl ByteCounters {
     }
 }
 
+/// Worker-side shared state for one in-process link: the channel analogue
+/// of a TCP connection's health. The master flips `dead` to take the link
+/// down (the worker thread then fail-stops every job it dequeues, exactly
+/// as a dead socket would); the worker stamps `last_heard`/`last_rtt` so
+/// [`Transport::link_status`] mirrors the socket transport's signal.
+pub struct WorkerLink {
+    pub dead: AtomicBool,
+    pub last_heard: Mutex<Option<Instant>>,
+    pub last_rtt: Mutex<Option<Duration>>,
+}
+
+impl WorkerLink {
+    fn new() -> WorkerLink {
+        WorkerLink {
+            dead: AtomicBool::new(false),
+            last_heard: Mutex::new(None),
+            last_rtt: Mutex::new(None),
+        }
+    }
+}
+
 /// The in-process transport: `N` worker threads running the
 /// [`super::worker`] loop, one `mpsc` channel per direction. Behaviorally
 /// identical to the pre-trait coordinator — per-worker RNG streams, message
 /// order, byte accounting and shutdown semantics are all preserved
-/// bit-for-bit.
+/// bit-for-bit — plus the full dynamic-membership surface, mirrored from
+/// [`super::tcp::TcpTransport`] so every elastic scenario can be tested
+/// without sockets: a disconnected worker's queued and future jobs
+/// fail-stop byte-free, a reconnect revives the same worker (same RNG
+/// stream, same id), and `add_worker` grows the pool mid-run.
 pub struct ChannelTransport {
+    compute: Arc<dyn ShareCompute>,
+    straggler: StragglerModel,
+    seed: u64,
     senders: Vec<Sender<ToWorker>>,
     workers: Vec<JoinHandle<()>>,
+    links: Vec<Arc<WorkerLink>>,
+    funnel: Option<Sender<FromWorker>>,
     rx: Option<Receiver<FromWorker>>,
     shut: bool,
 }
@@ -189,26 +323,43 @@ impl ChannelTransport {
         straggler: StragglerModel,
         seed: u64,
     ) -> ChannelTransport {
-        let (resp_tx, resp_rx) = channel::<FromWorker>();
-        let mut senders = Vec::with_capacity(n_workers);
-        let mut workers = Vec::with_capacity(n_workers);
-        for wid in 0..n_workers {
-            let (tx, rx) = channel::<ToWorker>();
-            let handle = spawn_worker(
-                wid,
-                rx,
-                resp_tx.clone(),
-                Arc::clone(&compute),
-                straggler.clone(),
-                worker_rng(seed, wid),
-            );
-            senders.push(tx);
-            workers.push(handle);
+        let (funnel, rx) = channel::<FromWorker>();
+        let mut t = ChannelTransport {
+            compute,
+            straggler,
+            seed,
+            senders: Vec::with_capacity(n_workers),
+            workers: Vec::with_capacity(n_workers),
+            links: Vec::with_capacity(n_workers),
+            funnel: Some(funnel),
+            rx: Some(rx),
+            shut: false,
+        };
+        for _ in 0..n_workers {
+            t.spawn_one();
         }
-        // Workers hold the only response senders: the receiver disconnects
-        // exactly when the last worker exits.
-        drop(resp_tx);
-        ChannelTransport { senders, workers, rx: Some(resp_rx), shut: false }
+        t
+    }
+
+    /// Spawn the next worker thread (id = current pool size).
+    fn spawn_one(&mut self) -> usize {
+        let wid = self.senders.len();
+        let funnel = self.funnel.as_ref().expect("pool is not shut down").clone();
+        let (tx, rx) = channel::<ToWorker>();
+        let link = Arc::new(WorkerLink::new());
+        let handle = spawn_worker(
+            wid,
+            rx,
+            funnel,
+            Arc::clone(&self.compute),
+            self.straggler.clone(),
+            worker_rng(self.seed, wid),
+            Arc::clone(&link),
+        );
+        self.senders.push(tx);
+        self.workers.push(handle);
+        self.links.push(link);
+        wid
     }
 }
 
@@ -218,14 +369,26 @@ impl Transport for ChannelTransport {
     }
 
     fn send(&mut self, worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
-        let len = match &msg {
-            ToWorker::Job { payload, .. } => payload.len(),
-            ToWorker::Shutdown => 0,
-        };
         let tx = self
             .senders
             .get(worker_id)
             .ok_or_else(|| anyhow::anyhow!("worker id {worker_id} out of range"))?;
+        let len = match &msg {
+            ToWorker::Job { payload, .. } => payload.len(),
+            ToWorker::Ping { .. } | ToWorker::Shutdown => 0,
+        };
+        if let ToWorker::Job { job_id, shard, .. } = &msg {
+            if self.links[worker_id].dead.load(Ordering::Relaxed) {
+                // Dead link = fail-stop worker: the payload never crosses
+                // (0 bytes, exactly like a dead socket) and the master
+                // still hears one byte-free report for this dispatch.
+                let report = fail_report(*job_id, *shard);
+                if let Some(funnel) = &self.funnel {
+                    let _ = funnel.send(report);
+                }
+                return Ok(0);
+            }
+        }
         // An in-process worker only hangs up by panicking (or after
         // shutdown): that is a broken transport, not a fail-stop.
         anyhow::ensure!(tx.send(msg).is_ok(), "worker {worker_id} hung up");
@@ -249,10 +412,63 @@ impl Transport for ChannelTransport {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // Only now does the router's stream disconnect: every synthesized
+        // and worker-sent report has been delivered.
+        self.funnel = None;
     }
 
     fn name(&self) -> &'static str {
         "channel"
+    }
+
+    fn link_status(&self, worker_id: usize) -> LinkStatus {
+        match self.links.get(worker_id) {
+            Some(link) => LinkStatus {
+                alive: !link.dead.load(Ordering::Relaxed),
+                idle: link.last_heard.lock().unwrap().map(|t| t.elapsed()),
+                last_rtt: *link.last_rtt.lock().unwrap(),
+            },
+            None => LinkStatus { alive: false, idle: None, last_rtt: None },
+        }
+    }
+
+    fn ping(&mut self, worker_id: usize, nonce: u64) -> anyhow::Result<()> {
+        // A dead worker swallows the probe (simulated silence); the link
+        // status already reports it dead.
+        self.send(worker_id, ToWorker::Ping { nonce, sent: Instant::now() })?;
+        Ok(())
+    }
+
+    fn disconnect_worker(&mut self, worker_id: usize) -> anyhow::Result<()> {
+        let link = self
+            .links
+            .get(worker_id)
+            .ok_or_else(|| anyhow::anyhow!("worker id {worker_id} out of range"))?;
+        link.dead.store(true, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn reconnect_worker(&mut self, worker_id: usize, endpoint: Option<&str>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            endpoint.is_none(),
+            "channel transport has no endpoints; reconnect revives the in-process worker"
+        );
+        anyhow::ensure!(!self.shut, "transport is shut down");
+        let link = self
+            .links
+            .get(worker_id)
+            .ok_or_else(|| anyhow::anyhow!("worker id {worker_id} out of range"))?;
+        link.dead.store(false, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn add_worker(&mut self, endpoint: Option<&str>) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            endpoint.is_none(),
+            "channel transport has no endpoints; add_worker spawns an in-process worker"
+        );
+        anyhow::ensure!(!self.shut, "transport is shut down");
+        Ok(self.spawn_one())
     }
 }
 
@@ -266,6 +482,10 @@ impl Drop for ChannelTransport {
 mod tests {
     use super::*;
 
+    fn job(job_id: u64, shard: usize, payload: Vec<u8>) -> ToWorker {
+        ToWorker::Job { job_id, shard, payload: Arc::new(payload) }
+    }
+
     #[test]
     fn counters_accumulate() {
         let c = ByteCounters::new();
@@ -273,10 +493,12 @@ mod tests {
         c.add_upload(20);
         c.add_download_arrived(10);
         c.add_download_used(7);
+        c.add_speculative(2);
         assert_eq!(c.upload_total(), 120);
         assert_eq!(c.download_arrived_total(), 10);
         assert_eq!(c.download_used_total(), 7);
         assert_eq!(c.download_discarded_total(), 3);
+        assert_eq!(c.speculative_total(), 2);
     }
 
     #[test]
@@ -311,7 +533,7 @@ mod tests {
         assert_eq!(t.name(), "channel");
         let rx = t.take_receiver().expect("first take yields the receiver");
         assert!(t.take_receiver().is_none(), "receiver can only be taken once");
-        let sent = t.send(0, ToWorker::Job { job_id: 9, payload: vec![5u8; 33] }).unwrap();
+        let sent = t.send(0, job(9, 0, vec![5u8; 33])).unwrap();
         assert_eq!(sent, 33);
         let msg = rx.recv().unwrap();
         assert_eq!((msg.job_id, msg.worker_id), (9, 0));
@@ -326,13 +548,74 @@ mod tests {
         let straggler = StragglerModel::fail_stop([0]);
         let mut t = ChannelTransport::spawn(1, Arc::new(Echo), straggler, 2);
         let rx = t.take_receiver().unwrap();
-        let sent = t.send(0, ToWorker::Job { job_id: 4, payload: vec![1u8; 10] }).unwrap();
+        let sent = t.send(0, job(4, 0, vec![1u8; 10])).unwrap();
         // the payload crossed the link (and is counted) even though the
         // worker will drop the job
         assert_eq!(sent, 10);
         let msg = rx.recv().unwrap();
         assert_eq!((msg.job_id, msg.worker_id), (4, 0));
         assert!(msg.payload.is_none());
+        Transport::shutdown(&mut t);
+    }
+
+    #[test]
+    fn disconnected_worker_fail_stops_byte_free_and_reconnect_revives_it() {
+        let mut t = ChannelTransport::spawn(2, Arc::new(Echo), StragglerModel::None, 3);
+        let rx = t.take_receiver().unwrap();
+        t.disconnect_worker(0).unwrap();
+        assert!(!t.link_status(0).alive);
+        assert!(t.link_status(1).alive);
+
+        // A job to the dead link: 0 bytes cross, one byte-free report.
+        let sent = t.send(0, job(1, 0, vec![7u8; 16])).unwrap();
+        assert_eq!(sent, 0);
+        let msg = rx.recv().unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (1, 0));
+        assert!(msg.payload.is_none());
+
+        // Revive and serve again (same worker id, same RNG stream).
+        t.reconnect_worker(0, None).unwrap();
+        assert!(t.link_status(0).alive);
+        let sent = t.send(0, job(2, 0, vec![7u8; 16])).unwrap();
+        assert_eq!(sent, 16);
+        let msg = rx.recv().unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (2, 0));
+        assert_eq!(msg.payload.as_ref().map(Vec::len), Some(16));
+
+        // Endpoints are a TCP concept.
+        assert!(t.reconnect_worker(0, Some("127.0.0.1:1")).is_err());
+        Transport::shutdown(&mut t);
+    }
+
+    #[test]
+    fn add_worker_grows_the_pool_mid_run() {
+        let mut t = ChannelTransport::spawn(1, Arc::new(Echo), StragglerModel::None, 4);
+        let rx = t.take_receiver().unwrap();
+        assert_eq!(t.add_worker(None).unwrap(), 1);
+        assert_eq!(t.n_workers(), 2);
+        let sent = t.send(1, job(8, 1, vec![9u8; 12])).unwrap();
+        assert_eq!(sent, 12);
+        let msg = rx.recv().unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (8, 1));
+        assert!(t.add_worker(Some("127.0.0.1:1")).is_err(), "endpoints are TCP-only");
+        Transport::shutdown(&mut t);
+    }
+
+    #[test]
+    fn ping_surfaces_rtt_and_freshness_through_link_status() {
+        let mut t = ChannelTransport::spawn(1, Arc::new(Echo), StragglerModel::None, 5);
+        let _rx = t.take_receiver().unwrap();
+        assert!(t.link_status(0).idle.is_none(), "never heard from yet");
+        t.ping(0, 99).unwrap();
+        // The worker thread answers asynchronously; wait for the stamp.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while t.link_status(0).last_rtt.is_none() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let status = t.link_status(0);
+        assert!(status.alive);
+        assert!(status.last_rtt.is_some(), "pong stamps the round-trip time");
+        assert!(status.idle.is_some(), "heard from since the ping");
         Transport::shutdown(&mut t);
     }
 }

@@ -7,11 +7,15 @@
 //! ```text
 //! offset  size  field        notes
 //!      0     4  magic        0x4D43_5247 ("GRCM" as little-endian bytes)
-//!      4     2  version      protocol version, currently 1
-//!      6     2  kind         1=job  2=shutdown  3=response-ok  4=response-failed
-//!      8     8  job_id       coordinator-assigned job id
-//!     16     8  worker_id    worker index (stamped by the master on jobs,
-//!                            echoed by the worker on responses)
+//!      4     2  version      protocol version, currently 2
+//!      6     2  kind         1=job  2=shutdown  3=response-ok
+//!                            4=response-failed  5=ping  6=pong  7=hello
+//!                            8=goodbye
+//!      8     8  job_id       coordinator-assigned job id (ping/pong reuse
+//!                            this field as the health-check nonce)
+//!     16     8  worker_id    shard index on job/response frames; the
+//!                            daemon's assigned machine id on hello, pong
+//!                            and goodbye frames
 //!     24     8  compute_us   worker compute time in microseconds (responses)
 //!     32     8  delay_us     injected straggler delay in microseconds
 //!     40     8  payload_len  must be ≤ [`MAX_PAYLOAD`]
@@ -20,10 +24,19 @@
 //!
 //! All integers are little-endian. Job frames carry a serialized
 //! [`crate::codes::Share`]; response-ok frames carry a serialized
-//! [`crate::ring::plane::PlaneMatrix`]; shutdown and response-failed frames
-//! carry no payload (a response-failed frame is the byte-free fail-stop
-//! report that keeps the master's job retirement deterministic — see
-//! [`super::master`]).
+//! [`crate::ring::plane::PlaneMatrix`]; every other kind carries no payload
+//! (a response-failed frame is the byte-free fail-stop report that keeps
+//! the master's job retirement deterministic — see [`super::master`]).
+//!
+//! Version 2 adds the four payload-free control kinds that make the pool
+//! elastic: the master opens every connection with a **hello** frame
+//! assigning the daemon its machine id (the daemon echoes it back, and the
+//! master rejects an echo whose claimed id mismatches the slot); **ping**
+//! frames carry a nonce in `job_id` which the daemon echoes in a **pong**
+//! so the master can maintain a per-worker latency/liveness estimate; a
+//! **goodbye** frame is a graceful leave — the daemon writes one after
+//! reading a shutdown frame, and a master can write one to release a
+//! connection without shutting the daemon down.
 //!
 //! [`read_frame`] validates everything before allocating: bad magic, an
 //! unknown version or kind, an oversized declared `payload_len`, and
@@ -39,8 +52,9 @@ use std::time::Duration;
 /// `b"GRCM"` read as a little-endian `u32`.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"GRCM");
 
-/// Current protocol version.
-pub const VERSION: u16 = 1;
+/// Current protocol version. Version 2 added the ping/pong/hello/goodbye
+/// control frames (kinds 5–8).
+pub const VERSION: u16 = 2;
 
 /// Fixed header length in bytes.
 pub const HEADER_LEN: usize = 48;
@@ -62,6 +76,16 @@ pub enum FrameKind {
     /// Worker → master: the job was dropped (fail-stop draw or compute
     /// error); no payload.
     RespFail,
+    /// Master → worker: health check. `job_id` carries the nonce.
+    Ping,
+    /// Worker → master: health-check reply echoing the ping's nonce.
+    Pong,
+    /// Master → worker: membership handshake assigning the daemon its
+    /// machine id; the daemon echoes the id back to confirm.
+    Hello,
+    /// Either direction: graceful leave — the peer is closing this
+    /// connection on purpose, not crashing.
+    Goodbye,
 }
 
 impl FrameKind {
@@ -71,6 +95,10 @@ impl FrameKind {
             FrameKind::Shutdown => 2,
             FrameKind::RespOk => 3,
             FrameKind::RespFail => 4,
+            FrameKind::Ping => 5,
+            FrameKind::Pong => 6,
+            FrameKind::Hello => 7,
+            FrameKind::Goodbye => 8,
         }
     }
 
@@ -80,6 +108,10 @@ impl FrameKind {
             2 => Some(FrameKind::Shutdown),
             3 => Some(FrameKind::RespOk),
             4 => Some(FrameKind::RespFail),
+            5 => Some(FrameKind::Ping),
+            6 => Some(FrameKind::Pong),
+            7 => Some(FrameKind::Hello),
+            8 => Some(FrameKind::Goodbye),
             _ => None,
         }
     }
@@ -123,6 +155,33 @@ impl Frame {
             delay_us: 0,
             payload: Vec::new(),
         }
+    }
+
+    /// A payload-free control frame of the given kind.
+    fn control(kind: FrameKind, job_id: u64, worker_id: u64) -> Frame {
+        Frame { kind, job_id, worker_id, compute_us: 0, delay_us: 0, payload: Vec::new() }
+    }
+
+    /// A master → worker health-check ping. The nonce rides in `job_id`.
+    pub fn ping(nonce: u64) -> Frame {
+        Frame::control(FrameKind::Ping, nonce, 0)
+    }
+
+    /// A worker → master pong echoing the ping's nonce, stamped with the
+    /// daemon's machine id (0 if the master never said hello).
+    pub fn pong(nonce: u64, worker_id: usize) -> Frame {
+        Frame::control(FrameKind::Pong, nonce, worker_id as u64)
+    }
+
+    /// A hello frame carrying a machine id: the master sends one to assign
+    /// the id, the daemon echoes it back to confirm.
+    pub fn hello(worker_id: usize) -> Frame {
+        Frame::control(FrameKind::Hello, 0, worker_id as u64)
+    }
+
+    /// A graceful-leave frame.
+    pub fn goodbye(worker_id: usize) -> Frame {
+        Frame::control(FrameKind::Goodbye, 0, worker_id as u64)
     }
 
     /// Package a worker's job report as a response frame (durations are
@@ -169,23 +228,60 @@ impl Frame {
     }
 }
 
-/// Serialize one frame. The payload follows the fixed 48-byte header;
-/// header and payload go out as ONE write, so a `TCP_NODELAY` socket sends
-/// one segment (and pays one syscall) per frame instead of two — this is
-/// the per-message hot path of the dispatch and response loops.
-pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
-    let mut buf = Vec::with_capacity(HEADER_LEN + frame.payload.len());
+/// Serialize one frame from borrowed parts. The payload follows the fixed
+/// 48-byte header; header and payload go out as ONE write, so a
+/// `TCP_NODELAY` socket sends one segment (and pays one syscall) per frame
+/// instead of two — this is the per-message hot path of the dispatch and
+/// response loops.
+#[allow(clippy::too_many_arguments)]
+fn write_frame_parts<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    job_id: u64,
+    worker_id: u64,
+    compute_us: u64,
+    delay_us: u64,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     buf.extend_from_slice(&MAGIC.to_le_bytes());
     buf.extend_from_slice(&VERSION.to_le_bytes());
-    buf.extend_from_slice(&frame.kind.to_u16().to_le_bytes());
-    buf.extend_from_slice(&frame.job_id.to_le_bytes());
-    buf.extend_from_slice(&frame.worker_id.to_le_bytes());
-    buf.extend_from_slice(&frame.compute_us.to_le_bytes());
-    buf.extend_from_slice(&frame.delay_us.to_le_bytes());
-    buf.extend_from_slice(&(frame.payload.len() as u64).to_le_bytes());
-    buf.extend_from_slice(&frame.payload);
+    buf.extend_from_slice(&kind.to_u16().to_le_bytes());
+    buf.extend_from_slice(&job_id.to_le_bytes());
+    buf.extend_from_slice(&worker_id.to_le_bytes());
+    buf.extend_from_slice(&compute_us.to_le_bytes());
+    buf.extend_from_slice(&delay_us.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(payload);
     w.write_all(&buf)?;
     w.flush()
+}
+
+/// Serialize one frame (single buffered write; see [`write_job_frame`] for
+/// the copy-free job dispatch path).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    write_frame_parts(
+        w,
+        frame.kind,
+        frame.job_id,
+        frame.worker_id,
+        frame.compute_us,
+        frame.delay_us,
+        &frame.payload,
+    )
+}
+
+/// Write a job frame for `shard` of `job_id` straight from a borrowed
+/// payload. Speculative re-dispatch keeps one `Arc<Vec<u8>>` per in-flight
+/// shard and may send the same bytes to several workers; this path avoids
+/// cloning the payload into an owned [`Frame`] per send.
+pub fn write_job_frame<W: Write>(
+    w: &mut W,
+    job_id: u64,
+    shard: usize,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    write_frame_parts(w, FrameKind::Job, job_id, shard as u64, 0, 0, payload)
 }
 
 /// Read exactly `buf.len()` bytes, reporting how many were read before EOF.
@@ -293,6 +389,35 @@ mod tests {
         for frame in frames {
             assert_eq!(roundtrip(&frame), frame);
         }
+    }
+
+    #[test]
+    fn control_kinds_roundtrip_and_carry_no_payload() {
+        let frames = [
+            Frame::ping(0xDEAD_BEEF),
+            Frame::pong(0xDEAD_BEEF, 13),
+            Frame::hello(7),
+            Frame::goodbye(7),
+        ];
+        for frame in frames {
+            assert!(frame.payload.is_empty());
+            assert_eq!(roundtrip(&frame), frame);
+            // control frames are not worker reports
+            assert!(frame.clone().into_report().is_err());
+        }
+        assert_eq!(Frame::ping(42).job_id, 42, "nonce rides in job_id");
+        assert_eq!(Frame::pong(42, 3).job_id, 42);
+        assert_eq!(Frame::hello(5).worker_id, 5);
+    }
+
+    #[test]
+    fn job_frame_from_borrowed_parts_matches_owned_encoding() {
+        let payload = vec![3u8; 129];
+        let mut owned = Vec::new();
+        write_frame(&mut owned, &Frame::job(77, 4, payload.clone())).unwrap();
+        let mut borrowed = Vec::new();
+        write_job_frame(&mut borrowed, 77, 4, &payload).unwrap();
+        assert_eq!(owned, borrowed);
     }
 
     #[test]

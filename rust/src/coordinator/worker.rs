@@ -9,10 +9,18 @@
 //! [`crate::runtime::gr_backend`]) to opaque serialized shares. This mirrors
 //! the deployment model where worker binaries are generic executors and the
 //! master owns all code-specific logic.
+//!
+//! Since speculative re-dispatch, a job carries two identities: the
+//! **machine id** (which physical worker is computing — keys the straggler
+//! draw and the RNG stream) and the **shard id** (which piece of the job
+//! this is — what the report must echo so the master can match it). They
+//! coincide on the primary dispatch path and differ when a spare machine
+//! recomputes another worker's shard.
 
 use super::straggler::StragglerModel;
-use super::transport::{fail_report, FromWorker, ToWorker};
+use super::transport::{fail_report, FromWorker, ToWorker, WorkerLink};
 use crate::util::rng::Rng64;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -47,31 +55,37 @@ pub fn worker_rng(seed: u64, worker_id: usize) -> Rng64 {
 /// injected delay, run the compute backend, and package the report. A
 /// compute error (e.g. a malformed payload) is reported as a clean job
 /// failure, never a panic.
+///
+/// `machine_id` is the physical worker doing the computing (keys the
+/// straggler draw and the backend); `shard` is the job piece being computed
+/// and is what the report's `worker_id` field echoes. They differ only when
+/// a spare machine recomputes a re-dispatched shard.
 pub fn process_job(
-    worker_id: usize,
+    machine_id: usize,
+    shard: usize,
     job_id: u64,
-    payload: Vec<u8>,
+    payload: &[u8],
     compute: &dyn ShareCompute,
     straggler: &StragglerModel,
     rng: &mut Rng64,
 ) -> FromWorker {
-    let Some(delay) = straggler.sample(worker_id, rng) else {
+    let Some(delay) = straggler.sample(machine_id, rng) else {
         // Fail-stop: drop the job. The master never sees response *bytes*
         // (`payload: None` is invisible to collection, exactly like silence
         // on a network), but the empty report lets the response router
         // retire the job's table entry once every worker has been heard
         // from.
-        return fail_report(job_id, worker_id);
+        return fail_report(job_id, shard);
     };
     if !delay.is_zero() {
         std::thread::sleep(delay);
     }
     let t0 = Instant::now();
-    let result = compute.compute(worker_id, &payload);
+    let result = compute.compute(machine_id, payload);
     let compute_time = t0.elapsed();
     FromWorker {
         job_id,
-        worker_id,
+        worker_id: shard,
         payload: result.ok(),
         compute: compute_time,
         injected_delay: delay,
@@ -79,6 +93,13 @@ pub fn process_job(
 }
 
 /// Spawn one in-process worker thread. Returns its join handle.
+///
+/// `link` is the master-shared membership state: while `link.dead` is set
+/// the worker fail-stops every job it dequeues (the payload was never
+/// "sent" — the master's send path already returned 0 bytes for jobs
+/// dispatched after the death, and this covers jobs that were already
+/// queued) and swallows pings, exactly like a dead socket. Clearing the
+/// flag revives the worker with its RNG stream intact.
 pub fn spawn_worker(
     worker_id: usize,
     rx: Receiver<ToWorker>,
@@ -86,6 +107,7 @@ pub fn spawn_worker(
     compute: Arc<dyn ShareCompute>,
     straggler: StragglerModel,
     mut rng: Rng64,
+    link: Arc<WorkerLink>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("gr-cdmm-worker-{worker_id}"))
@@ -93,15 +115,28 @@ pub fn spawn_worker(
             while let Ok(msg) = rx.recv() {
                 match msg {
                     ToWorker::Shutdown => break,
-                    ToWorker::Job { job_id, payload } => {
-                        let report = process_job(
-                            worker_id,
-                            job_id,
-                            payload,
-                            &*compute,
-                            &straggler,
-                            &mut rng,
-                        );
+                    ToWorker::Ping { sent, .. } => {
+                        if !link.dead.load(Ordering::Relaxed) {
+                            *link.last_rtt.lock().unwrap() = Some(sent.elapsed());
+                            *link.last_heard.lock().unwrap() = Some(Instant::now());
+                        }
+                    }
+                    ToWorker::Job { job_id, shard, payload } => {
+                        let report = if link.dead.load(Ordering::Relaxed) {
+                            fail_report(job_id, shard)
+                        } else {
+                            let r = process_job(
+                                worker_id,
+                                shard,
+                                job_id,
+                                &payload,
+                                &*compute,
+                                &straggler,
+                                &mut rng,
+                            );
+                            *link.last_heard.lock().unwrap() = Some(Instant::now());
+                            r
+                        };
                         // master may have hung up (job already satisfied) —
                         // a send error is not a worker error.
                         let _ = tx.send(report);
@@ -148,15 +183,15 @@ mod tests {
     #[test]
     fn process_job_success_failure_and_fail_stop() {
         let mut rng = Rng64::seeded(1);
-        let ok = process_job(0, 7, vec![1, 2], &Echo, &StragglerModel::None, &mut rng);
+        let ok = process_job(0, 0, 7, &[1, 2], &Echo, &StragglerModel::None, &mut rng);
         assert_eq!((ok.job_id, ok.worker_id), (7, 0));
         assert_eq!(ok.payload.as_deref(), Some(&[1u8, 2][..]));
 
-        let err = process_job(0, 8, vec![1], &AlwaysErr, &StragglerModel::None, &mut rng);
+        let err = process_job(0, 0, 8, &[1], &AlwaysErr, &StragglerModel::None, &mut rng);
         assert!(err.payload.is_none(), "compute errors are clean job failures");
 
         let dropped =
-            process_job(3, 9, vec![1], &Echo, &StragglerModel::fail_stop([3]), &mut rng);
+            process_job(3, 3, 9, &[1], &Echo, &StragglerModel::fail_stop([3]), &mut rng);
         assert!(dropped.payload.is_none());
         assert_eq!(dropped.compute, Duration::ZERO);
     }
@@ -165,8 +200,20 @@ mod tests {
     fn process_job_reports_injected_delay() {
         let mut rng = Rng64::seeded(2);
         let slow = StragglerModel::fixed_slow([0], Duration::from_millis(15));
-        let report = process_job(0, 1, vec![9], &Echo, &slow, &mut rng);
+        let report = process_job(0, 0, 1, &[9], &Echo, &slow, &mut rng);
         assert_eq!(report.injected_delay, Duration::from_millis(15));
         assert!(report.payload.is_some());
+    }
+
+    #[test]
+    fn spare_machine_reports_the_shard_id_and_draws_its_own_straggler_stream() {
+        // Machine 3 recomputes shard 0: the report must carry shard 0, and
+        // the straggler draw must be keyed by the machine — a fail-stop
+        // model targeting shard 0's machine does NOT hit the spare.
+        let mut rng = Rng64::seeded(3);
+        let model = StragglerModel::fail_stop([0]);
+        let report = process_job(3, 0, 11, &[5, 6], &Echo, &model, &mut rng);
+        assert_eq!(report.worker_id, 0, "report echoes the shard id");
+        assert!(report.payload.is_some(), "straggler draw keys off the machine id");
     }
 }

@@ -26,6 +26,7 @@
 
 use crate::codes::registry::{self, SchemeConfig};
 use crate::codes::DynScheme;
+use crate::coordinator::pool::ElasticConfig;
 use crate::coordinator::runner::make_coordinator;
 use crate::coordinator::{
     Coordinator, JobHandle, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
@@ -87,6 +88,14 @@ pub struct ServeConfig {
     pub verify: bool,
     /// Master ↔ worker transport (see [`ServeTransport`]).
     pub transport: ServeTransport,
+    /// Enable speculative re-dispatch + background reconnect
+    /// ([`ElasticConfig::speculative`]) on every pass's coordinator.
+    pub speculate: bool,
+    /// Elastic scheme selection: in [`ServeTransport::Connect`] mode, if
+    /// fewer endpoints than `n_workers` are listed, downgrade to the
+    /// largest preset the live pool can run
+    /// ([`SchemeConfig::for_live_workers`]) instead of failing.
+    pub elastic: bool,
 }
 
 /// Measured serving results.
@@ -108,6 +117,9 @@ pub struct ServeRecord {
     /// Decode-plan cache counters of the pipelined pass (cold at its start).
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// Speculative shard re-dispatches of the pipelined pass (0 unless
+    /// [`ServeConfig::speculate`] is on).
+    pub speculative_dispatches: u64,
     /// `true` iff every decoded product of both passes matched the local
     /// reference (trivially `true` when verification was disabled).
     pub verified: bool,
@@ -223,9 +235,12 @@ fn make_pool(
     scheme: &Arc<dyn DynScheme>,
 ) -> anyhow::Result<(Coordinator, Vec<WorkerDaemon>)> {
     let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(scheme)));
-    match &cfg.transport {
+    // The scheme's own N (which elastic selection may have downgraded below
+    // `cfg.n_workers`) is the pool size a pass actually needs.
+    let n_workers = scheme.n_workers();
+    let (mut coord, daemons) = match &cfg.transport {
         ServeTransport::TcpLoopback => {
-            let daemons: Vec<WorkerDaemon> = (0..cfg.n_workers)
+            let daemons: Vec<WorkerDaemon> = (0..n_workers)
                 .map(|_| {
                     WorkerDaemon::spawn_local(
                         Arc::clone(&backend),
@@ -236,33 +251,44 @@ fn make_pool(
                 })
                 .collect::<anyhow::Result<_>>()?;
             let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
-            Ok((Coordinator::connect_tcp(&addrs)?, daemons))
+            (Coordinator::connect_tcp(&addrs)?, daemons)
         }
         // In-process and --connect are exactly the runner's two pool
         // flavors; the endpoint-count validation lives there.
         ServeTransport::InProcess => {
             let coord =
-                make_coordinator(cfg.n_workers, backend, cfg.straggler.clone(), cfg.seed, None)?;
-            Ok((coord, Vec::new()))
+                make_coordinator(n_workers, backend, cfg.straggler.clone(), cfg.seed, None)?;
+            (coord, Vec::new())
         }
         ServeTransport::Connect(addrs) => {
             let coord = make_coordinator(
-                cfg.n_workers,
+                n_workers,
                 backend,
                 cfg.straggler.clone(),
                 cfg.seed,
                 Some(addrs.as_slice()),
             )?;
-            Ok((coord, Vec::new()))
+            (coord, Vec::new())
         }
+    };
+    if cfg.speculate {
+        coord.set_elastic(ElasticConfig::speculative());
     }
+    Ok((coord, daemons))
 }
 
 /// Run the full comparison (sequential pass, then pipelined pass on fresh
 /// state) and return the measured record.
 pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
     anyhow::ensure!(cfg.jobs >= 1 && cfg.inflight >= 1, "jobs and inflight must be >= 1");
-    let reg_cfg = SchemeConfig::for_workers(cfg.n_workers)?;
+    // Elastic scheme selection: a --connect pool smaller than the requested
+    // preset downgrades to the largest preset its live daemons can serve.
+    let reg_cfg = match (&cfg.transport, cfg.elastic) {
+        (ServeTransport::Connect(addrs), true) if addrs.len() < cfg.n_workers => {
+            SchemeConfig::for_live_workers(addrs.len())?
+        }
+        _ => SchemeConfig::for_workers(cfg.n_workers)?,
+    };
     anyhow::ensure!(
         cfg.size % (reg_cfg.u.max(reg_cfg.v) * reg_cfg.n_split * reg_cfg.w.max(1)) == 0,
         "size {} must be divisible by the partition/split parameters",
@@ -285,6 +311,7 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
     let (mut pipe_coord, pipe_daemons) = make_pool(cfg, &pipe_scheme)?;
     let (pipe_elapsed_s, pipe_ok) =
         run_pipelined(pipe_scheme.as_ref(), &mut pipe_coord, &requests, cfg.inflight)?;
+    let speculative_dispatches = pipe_coord.counters().speculative_total();
     pipe_coord.shutdown();
     for daemon in pipe_daemons {
         daemon.join()?;
@@ -307,6 +334,7 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
         speedup: pipe_jobs_per_s / seq_jobs_per_s.max(1e-12),
         plan_cache_hits,
         plan_cache_misses,
+        speculative_dispatches,
         verified: seq_ok && pipe_ok,
     })
 }
@@ -363,6 +391,7 @@ impl ServeRecord {
             .set("speedup", self.speedup)
             .set("plan_cache_hits", self.plan_cache_hits)
             .set("plan_cache_misses", self.plan_cache_misses)
+            .set("speculative_dispatches", self.speculative_dispatches)
             .set("verified", self.verified)
     }
 }
@@ -387,6 +416,8 @@ mod tests {
             seed: 77,
             verify: true,
             transport: ServeTransport::InProcess,
+            speculate: false,
+            elastic: false,
         }
     }
 

@@ -14,6 +14,7 @@
 //! gr-cdmm serve --scheme ep-rmfe-1 --workers 8 --size 128 --jobs 16 --inflight 4
 //!              [--straggler none|slow|exp|fail] [--no-verify] [--seed k] [--out results]
 //!              [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
+//!              [--speculate] [--elastic]
 //! gr-cdmm worker --listen HOST:PORT --scheme ep-rmfe-1 --workers 8
 //!              [--straggler none|slow|exp|fail] [--seed k] [--once | --conns K]
 //! gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
@@ -77,6 +78,7 @@ USAGE:
   gr-cdmm serve --scheme NAME --workers 4|8|16|32 --size 128 --jobs 16 --inflight 4
                [--straggler none|slow|exp|fail] [--no-verify] [--seed K] [--out DIR]
                [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
+               [--speculate] [--elastic]
   gr-cdmm worker --listen HOST:PORT --scheme NAME --workers 4|8|16|32
                [--straggler none|slow|exp|fail] [--seed K] [--once | --conns K]
   gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
@@ -84,7 +86,10 @@ USAGE:
 
 Multi-process quickstart: start one `worker` daemon per worker (ports of
 your choice), then `serve --connect addr1,addr2,...` — the scheme name and
-worker count must match on both sides."
+worker count must match on both sides. `--speculate` turns on health-check
+pings and speculative re-dispatch of overdue shards; `--elastic` lets a
+short `--connect` list downgrade to the largest scheme preset its live
+daemons can serve instead of erroring."
     );
 }
 
@@ -226,6 +231,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         seed: args.get_u64("seed", 42),
         verify: !args.flag("no-verify"),
         transport,
+        speculate: args.flag("speculate"),
+        elastic: args.flag("elastic"),
     };
     let rec = serving::run(&cfg)?;
     println!(

@@ -1,0 +1,530 @@
+//! Elastic-pool integration: dynamic membership (join, leave, reconnect),
+//! health-ranked placement, speculative re-dispatch and the duplicate-
+//! response guard — every scenario run over both the in-process
+//! `ChannelTransport` and real `TcpTransport` loopback daemons with fixed
+//! seeds. Each scenario either completes through straggler tolerance /
+//! re-dispatch or fails fast with "cannot complete"; nothing may hang.
+//! Per-job byte counters are checked against the analytic volumes.
+
+use gr_cdmm::codes::registry::{self, SchemeConfig};
+use gr_cdmm::codes::DynScheme;
+use gr_cdmm::coordinator::master::Collected;
+use gr_cdmm::coordinator::{
+    ByteCounters, Coordinator, ElasticConfig, NativeCompute, ShareCompute, StragglerModel,
+    WorkerDaemon, WorkerHealth,
+};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::rng::Rng64;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Echo backend for scheme-free membership scenarios.
+struct Echo;
+impl ShareCompute for Echo {
+    fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        Ok(payload.to_vec())
+    }
+}
+
+/// Which transport a scenario runs over. Every scenario function takes one
+/// and is invoked twice — same seeds, same assertions on both sides.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Channel,
+    Tcp,
+}
+
+/// One elastic worker pool: a coordinator plus (for TCP) the loopback
+/// daemons behind it. The membership verbs forward to the coordinator and
+/// handle the transport-specific halves (spawning daemons, endpoints).
+struct Pool {
+    kind: Kind,
+    coord: Coordinator,
+    daemons: Vec<WorkerDaemon>,
+    backend: Arc<dyn ShareCompute>,
+    straggler: StragglerModel,
+    seed: u64,
+}
+
+impl Pool {
+    /// Spawn an `n`-worker pool. `conns` is the per-daemon connection
+    /// budget (TCP only): a worker that will be disconnected and re-dialed
+    /// needs budget 2 so its daemon's accept loop terminates afterwards.
+    fn spawn(
+        kind: Kind,
+        n: usize,
+        backend: Arc<dyn ShareCompute>,
+        straggler: StragglerModel,
+        seed: u64,
+        conns: &[usize],
+    ) -> Pool {
+        match kind {
+            Kind::Channel => {
+                let coord = Coordinator::new(n, Arc::clone(&backend), straggler.clone(), seed);
+                Pool { kind, coord, daemons: Vec::new(), backend, straggler, seed }
+            }
+            Kind::Tcp => {
+                assert_eq!(conns.len(), n, "one connection budget per daemon");
+                let daemons: Vec<WorkerDaemon> = conns
+                    .iter()
+                    .map(|&c| {
+                        WorkerDaemon::spawn_local(
+                            Arc::clone(&backend),
+                            straggler.clone(),
+                            seed,
+                            c,
+                        )
+                        .unwrap()
+                    })
+                    .collect();
+                let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+                let coord = Coordinator::connect_tcp(&addrs).unwrap();
+                Pool { kind, coord, daemons, backend, straggler, seed }
+            }
+        }
+    }
+
+    /// Grow the pool by one worker: the channel transport spawns a thread,
+    /// TCP spawns a fresh daemon and dials it.
+    fn add_worker(&mut self, conns: usize) -> usize {
+        match self.kind {
+            Kind::Channel => self.coord.add_worker(None).unwrap(),
+            Kind::Tcp => {
+                let daemon = WorkerDaemon::spawn_local(
+                    Arc::clone(&self.backend),
+                    self.straggler.clone(),
+                    self.seed,
+                    conns,
+                )
+                .unwrap();
+                let addr = daemon.addr();
+                self.daemons.push(daemon);
+                self.coord.add_worker(Some(&addr)).unwrap()
+            }
+        }
+    }
+
+    /// Shut the coordinator down and join every daemon: proves no scenario
+    /// leaks a thread or leaves a daemon's accept loop waiting forever.
+    fn finish(self) {
+        let Pool { coord, daemons, .. } = self;
+        coord.shutdown();
+        for daemon in daemons {
+            daemon.join().unwrap();
+        }
+    }
+}
+
+/// Distinct per-shard payloads of a fixed length (Echo scenarios).
+fn echo_payloads(n: usize, len: usize) -> Vec<Vec<u8>> {
+    (0..n).map(|i| vec![i as u8 + 1; len]).collect()
+}
+
+/// Sorted shard ids of the collected responses.
+fn ids(collected: &[Collected]) -> Vec<usize> {
+    let mut v: Vec<usize> = collected.iter().map(|c| c.worker_id).collect();
+    v.sort_unstable();
+    v
+}
+
+/// What one coded job produced: decoded output bytes (bit-comparable
+/// across runs), the job's byte counters, which shards were collected, and
+/// the dispatch→threshold wall time.
+struct CodedRun {
+    out: Vec<Vec<u8>>,
+    counters: ByteCounters,
+    used_shards: Vec<usize>,
+    wait: Duration,
+}
+
+/// Encode one `size×size` product with fixed input seed, submit, collect,
+/// decode, and check the result against the local reference product.
+fn run_coded_job(
+    scheme: &Arc<dyn DynScheme>,
+    coord: &mut Coordinator,
+    size: usize,
+    seed: u64,
+) -> CodedRun {
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(seed);
+    let a = Matrix::random(&base, size, size, &mut rng);
+    let b = Matrix::random(&base, size, size, &mut rng);
+    let expected = Matrix::matmul(&base, &a, &b);
+    let payloads = scheme
+        .encode_bytes(&[a.to_bytes(&base)], &[b.to_bytes(&base)])
+        .unwrap();
+    let handle = coord.submit(payloads, scheme.recovery_threshold()).unwrap();
+    let counters = handle.counters().clone();
+    let (collected, wait) = handle.wait().unwrap();
+    let responses: Vec<(usize, &[u8])> =
+        collected.iter().map(|c| (c.worker_id, c.payload.as_slice())).collect();
+    let out = scheme.decode_bytes(&responses).unwrap();
+    assert_eq!(
+        Matrix::from_bytes(&base, &out[0]).unwrap(),
+        expected,
+        "decoded product must match the local reference"
+    );
+    CodedRun { out, counters, used_shards: ids(&collected), wait }
+}
+
+/// Speculation + eager fail-fast, but no background re-dialing (keeps
+/// dead-worker scenarios deterministic), with a deadline floor high enough
+/// that CI scheduling jitter can't make a healthy shard look overdue.
+fn speculate_no_reconnect() -> ElasticConfig {
+    ElasticConfig {
+        speculate: true,
+        auto_reconnect: false,
+        spec_min_deadline: Duration::from_millis(150),
+        ..ElasticConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 1: slow joiner — the pool starts below the wanted size, a viable
+// smaller (N, R) preset runs immediately, and once the late daemons join the
+// full preset runs on the same coordinator.
+// ---------------------------------------------------------------------------
+
+fn slow_joiner(kind: Kind) {
+    let cfg4 = SchemeConfig::for_live_workers(4).unwrap();
+    assert_eq!(cfg4.n_workers, 4);
+    let scheme4 = registry::build("ep-rmfe-1", &cfg4).unwrap();
+    let cfg8 = SchemeConfig::for_live_workers(8).unwrap();
+    assert_eq!(cfg8.n_workers, 8);
+    let scheme8 = registry::build("ep-rmfe-1", &cfg8).unwrap();
+
+    // The N = 4 and N = 8 presets share the m = 3 tower and partition, so
+    // one worker backend serves shares of either scheme.
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(&scheme8)));
+    let mut pool = Pool::spawn(kind, 4, backend, StragglerModel::None, 7001, &[1; 4]);
+    assert_eq!(pool.coord.live_workers(), 4);
+
+    // Degraded job while only 4 daemons are up: R = N = 4, all must answer.
+    let run4 = run_coded_job(&scheme4, &mut pool.coord, 8, 7002);
+    assert_eq!(run4.used_shards, vec![0, 1, 2, 3]);
+    assert_eq!(run4.counters.upload_total() as usize, scheme4.upload_bytes(8, 8, 8));
+    assert_eq!(run4.counters.download_used_total() as usize, scheme4.download_bytes(8, 8, 8));
+    assert_eq!(run4.counters.download_arrived_total(), run4.counters.download_used_total());
+
+    // The late daemons join; the full preset now fits.
+    for i in 4..8 {
+        assert_eq!(pool.add_worker(1), i);
+    }
+    assert_eq!(pool.coord.n_workers(), 8);
+    assert_eq!(pool.coord.live_workers(), 8);
+
+    let run8 = run_coded_job(&scheme8, &mut pool.coord, 8, 7003);
+    assert_eq!(run8.used_shards.len(), 4, "R = 4 of N = 8 collected");
+    assert_eq!(run8.counters.upload_total() as usize, scheme8.upload_bytes(8, 8, 8));
+    assert_eq!(run8.counters.download_used_total() as usize, scheme8.download_bytes(8, 8, 8));
+
+    pool.finish();
+    // After the drain all 8 responses have been attributed: uniform
+    // response sizes mean arrived is exactly N/R times used.
+    assert_eq!(run8.counters.download_arrived_total(), 2 * run8.counters.download_used_total());
+}
+
+#[test]
+fn slow_joiner_scales_scheme_to_live_workers_channel() {
+    slow_joiner(Kind::Channel);
+}
+
+#[test]
+fn slow_joiner_scales_scheme_to_live_workers_tcp() {
+    slow_joiner(Kind::Tcp);
+}
+
+#[test]
+fn for_live_workers_picks_the_largest_viable_preset() {
+    for (live, want) in [(4, 4), (7, 4), (8, 8), (15, 8), (31, 16), (100, 32)] {
+        assert_eq!(SchemeConfig::for_live_workers(live).unwrap().n_workers, want);
+    }
+    let err = SchemeConfig::for_live_workers(3).unwrap_err();
+    assert!(err.to_string().contains("needs 4"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 2: flapping worker — disconnects between jobs, the pool serves
+// degraded with exact byte accounting, then the worker rejoins and serves
+// again.
+// ---------------------------------------------------------------------------
+
+fn flapping_worker(kind: Kind) {
+    let backend: Arc<dyn ShareCompute> = Arc::new(Echo);
+    // Worker 2 will be disconnected and re-dialed: its daemon serves 2
+    // connections over its lifetime.
+    let mut pool = Pool::spawn(kind, 4, backend, StragglerModel::None, 7101, &[1, 1, 2, 1]);
+
+    // Job 1: everyone up, everyone answers.
+    let h = pool.coord.submit(echo_payloads(4, 16), 4).unwrap();
+    let c1 = h.counters().clone();
+    assert_eq!(ids(&h.wait().unwrap().0), vec![0, 1, 2, 3]);
+    assert_eq!(c1.upload_total(), 4 * 16);
+    assert_eq!(c1.download_used_total(), 4 * 16);
+
+    // Worker 2 drops out. Its shard fail-stops byte-free; the job
+    // completes through the straggler slack (need 3 of 4).
+    pool.coord.disconnect_worker(2).unwrap();
+    assert_eq!(pool.coord.worker_health(2), WorkerHealth::Dead);
+    assert_eq!(pool.coord.live_workers(), 3);
+    let h = pool.coord.submit(echo_payloads(4, 24), 3).unwrap();
+    let c2 = h.counters().clone();
+    assert_eq!(ids(&h.wait().unwrap().0), vec![0, 1, 3]);
+    assert_eq!(c2.upload_total(), 3 * 24, "the dead link carries zero upload bytes");
+    assert_eq!(c2.download_arrived_total(), 3 * 24);
+    assert_eq!(c2.download_used_total(), 3 * 24);
+
+    // Worker 2 comes back (same id, same RNG stream) and serves again.
+    pool.coord.reconnect_worker(2, None).unwrap();
+    assert_eq!(pool.coord.worker_health(2), WorkerHealth::Live);
+    assert_eq!(pool.coord.live_workers(), 4);
+    let h = pool.coord.submit(echo_payloads(4, 32), 4).unwrap();
+    let c3 = h.counters().clone();
+    assert_eq!(ids(&h.wait().unwrap().0), vec![0, 1, 2, 3]);
+    assert_eq!(c3.upload_total(), 4 * 32);
+    assert_eq!(c3.download_used_total(), 4 * 32);
+
+    let agg = pool.coord.counters().clone();
+    pool.finish();
+    let total = 4 * 16 + 3 * 24 + 4 * 32;
+    assert_eq!(agg.upload_total(), total);
+    assert_eq!(agg.download_arrived_total(), total);
+    assert_eq!(agg.download_used_total(), total);
+}
+
+#[test]
+fn flapping_worker_leaves_and_rejoins_channel() {
+    flapping_worker(Kind::Channel);
+}
+
+#[test]
+fn flapping_worker_leaves_and_rejoins_tcp() {
+    flapping_worker(Kind::Tcp);
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 3: a worker is lost permanently *mid-job* — the job still
+// completes through straggler tolerance; and when too many are lost, the
+// job fails fast with "cannot complete" instead of sleeping to a deadline.
+// ---------------------------------------------------------------------------
+
+fn lost_mid_job(kind: Kind) {
+    let backend: Arc<dyn ShareCompute> = Arc::new(Echo);
+    let straggler = StragglerModel::fixed_slow([2], Duration::from_millis(300));
+    let mut pool = Pool::spawn(kind, 4, backend, straggler, 7201, &[1; 4]);
+
+    let h = pool.coord.submit(echo_payloads(4, 20), 3).unwrap();
+    let counters = h.counters().clone();
+    // Let the three fast responses land and worker 2 enter its slow draw,
+    // then pull its link mid-job.
+    std::thread::sleep(Duration::from_millis(60));
+    pool.coord.disconnect_worker(2).unwrap();
+    let (got, _) = h.wait().unwrap();
+    assert_eq!(ids(&got), vec![0, 1, 3]);
+    assert_eq!(counters.upload_total(), 4 * 20, "all four shards were dispatched live");
+    assert_eq!(counters.download_used_total(), 3 * 20);
+
+    pool.finish();
+    // The sleeping worker's fate differs by transport: the in-process
+    // worker wakes and its late bytes still arrive (and are discarded);
+    // over TCP the closed socket eats the write, so they never do.
+    match kind {
+        Kind::Channel => assert_eq!(counters.download_arrived_total(), 4 * 20),
+        Kind::Tcp => assert_eq!(counters.download_arrived_total(), 3 * 20),
+    }
+}
+
+#[test]
+fn worker_lost_mid_job_completes_via_tolerance_channel() {
+    lost_mid_job(Kind::Channel);
+}
+
+#[test]
+fn worker_lost_mid_job_completes_via_tolerance_tcp() {
+    lost_mid_job(Kind::Tcp);
+}
+
+fn hopeless_fails_fast(kind: Kind) {
+    let backend: Arc<dyn ShareCompute> = Arc::new(Echo);
+    let mut pool = Pool::spawn(kind, 4, backend, StragglerModel::None, 7301, &[1; 4]);
+    // A generous deadline proves the failure below is fail-fast detection,
+    // not a timeout.
+    pool.coord.timeout = Duration::from_secs(60);
+    pool.coord.disconnect_worker(1).unwrap();
+    pool.coord.disconnect_worker(2).unwrap();
+
+    let t0 = Instant::now();
+    let h = pool.coord.submit(echo_payloads(4, 16), 4).unwrap();
+    let counters = h.counters().clone();
+    let err = h.wait().unwrap_err();
+    assert!(err.to_string().contains("cannot complete"), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(10), "must fail fast, not hit the deadline");
+    assert_eq!(counters.upload_total(), 2 * 16, "only the live links carry bytes");
+    assert_eq!(counters.download_used_total(), 2 * 16);
+    pool.finish();
+}
+
+#[test]
+fn hopeless_job_fails_fast_channel() {
+    hopeless_fails_fast(Kind::Channel);
+}
+
+#[test]
+fn hopeless_job_fails_fast_tcp() {
+    hopeless_fails_fast(Kind::Tcp);
+}
+
+/// The same two-dead-workers pool, but with speculation on: the shards that
+/// fail-stopped on the dead links are re-dispatched to live spares and the
+/// job completes with all four shards.
+fn dead_shards_respeculate(kind: Kind) {
+    let backend: Arc<dyn ShareCompute> = Arc::new(Echo);
+    let mut pool = Pool::spawn(kind, 4, backend, StragglerModel::None, 7351, &[1; 4]);
+    pool.coord.set_elastic(speculate_no_reconnect());
+    pool.coord.disconnect_worker(1).unwrap();
+    pool.coord.disconnect_worker(2).unwrap();
+
+    let h = pool.coord.submit(echo_payloads(4, 16), 4).unwrap();
+    let counters = h.counters().clone();
+    let (got, _) = h.wait().unwrap();
+    assert_eq!(ids(&got), vec![0, 1, 2, 3], "every shard answered, two via spares");
+    assert_eq!(counters.speculative_total(), 2);
+    assert_eq!(counters.upload_total(), 4 * 16, "2 live dispatches + 2 re-dispatches");
+    assert_eq!(counters.download_used_total(), 4 * 16);
+    pool.finish();
+}
+
+#[test]
+fn dead_shards_are_respeculated_to_spares_channel() {
+    dead_shards_respeculate(Kind::Channel);
+}
+
+#[test]
+fn dead_shards_are_respeculated_to_spares_tcp() {
+    dead_shards_respeculate(Kind::Tcp);
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 4: skewed heterogeneous pool — half the workers are much slower;
+// the job must complete from the fast half well before the slow half's
+// delay, and the latency tracker must have learned the fast workers.
+// ---------------------------------------------------------------------------
+
+fn skewed_pool(kind: Kind) {
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+    let straggler = StragglerModel::fixed_slow([0, 1, 2, 3], Duration::from_millis(400));
+    let mut pool = Pool::spawn(kind, 8, backend, straggler, 7401, &[1; 8]);
+
+    let run = run_coded_job(&scheme, &mut pool.coord, 8, 7402);
+    assert_eq!(run.used_shards, vec![4, 5, 6, 7], "only the fast half is collected");
+    assert!(run.wait < Duration::from_millis(350), "collected in {:?}", run.wait);
+    assert_eq!(run.counters.upload_total() as usize, scheme.upload_bytes(8, 8, 8));
+    assert_eq!(run.counters.download_used_total() as usize, scheme.download_bytes(8, 8, 8));
+
+    // The fast workers' responses fed the latency estimator (one
+    // unambiguous sample each); the slow half hasn't answered yet.
+    let snap = pool.coord.pool_snapshot();
+    for s in &snap[4..8] {
+        assert_eq!(s.samples, 1);
+    }
+
+    pool.finish();
+    // The drain waits for the slow half: all 8 responses attributed.
+    assert_eq!(run.counters.download_arrived_total(), 2 * run.counters.download_used_total());
+}
+
+#[test]
+fn skewed_pool_collects_the_fast_half_channel() {
+    skewed_pool(Kind::Channel);
+}
+
+#[test]
+fn skewed_pool_collects_the_fast_half_tcp() {
+    skewed_pool(Kind::Tcp);
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 5 (property): speculative re-dispatch is decode-invariant — the
+// rescued run decodes to bit-identical output bytes, and the loser of a
+// speculative race is dropped before it can double-count or reach a decode.
+// ---------------------------------------------------------------------------
+
+fn speculative_rescue_decode_invariant(kind: Kind) {
+    // R = N = 4: no straggler slack, so losing worker 3 is fatal without
+    // re-dispatch.
+    let cfg = SchemeConfig::for_workers(4).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+
+    // Baseline: clean 4-worker pool, speculation off.
+    let mut clean =
+        Pool::spawn(kind, 4, Arc::clone(&backend), StragglerModel::None, 7501, &[1; 4]);
+    let base_run = run_coded_job(&scheme, &mut clean.coord, 8, 7502);
+    clean.finish();
+
+    // Rescued: 5 workers, shards land on 0..4, worker 3 fail-stops; the
+    // monitor re-dispatches shard 3 to a live spare machine.
+    let mut pool = Pool::spawn(kind, 5, backend, StragglerModel::fail_stop([3]), 7501, &[1; 5]);
+    pool.coord.set_elastic(speculate_no_reconnect());
+    let spec_run = run_coded_job(&scheme, &mut pool.coord, 8, 7502);
+    assert_eq!(spec_run.counters.speculative_total(), 1);
+    assert_eq!(spec_run.used_shards, vec![0, 1, 2, 3]);
+    pool.finish();
+
+    assert_eq!(
+        spec_run.out, base_run.out,
+        "rescued decode must be bit-identical to the no-speculation run"
+    );
+}
+
+#[test]
+fn speculative_rescue_is_decode_invariant_channel() {
+    speculative_rescue_decode_invariant(Kind::Channel);
+}
+
+#[test]
+fn speculative_rescue_is_decode_invariant_tcp() {
+    speculative_rescue_decode_invariant(Kind::Tcp);
+}
+
+fn speculative_race_duplicate_dropped(kind: Kind) {
+    let cfg = SchemeConfig::for_workers(4).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+    // Worker 3 answers eventually — long after its shard's speculative copy
+    // (overdue at the 150 ms floor) has already won the race.
+    let straggler = StragglerModel::fixed_slow([3], Duration::from_millis(500));
+    let mut pool = Pool::spawn(kind, 5, backend, straggler, 7601, &[1; 5]);
+    pool.coord.set_elastic(speculate_no_reconnect());
+
+    let run = run_coded_job(&scheme, &mut pool.coord, 8, 7602);
+    assert_eq!(run.counters.speculative_total(), 1);
+    assert_eq!(run.used_shards, vec![0, 1, 2, 3]);
+    // Exactly one success per shard was forwarded: the entry retired once
+    // (a double-decrement of `outstanding` would have panicked the router
+    // or left the job registered).
+    assert_eq!(pool.coord.jobs_in_flight(), 0);
+
+    let agg = pool.coord.counters().clone();
+    pool.finish();
+    // The losing copy arrives after the job retired: its bytes are counted
+    // (and discarded) in the aggregate only, never credited to the job —
+    // so the job's accounting is identical to a no-race run.
+    let per_resp = (scheme.download_bytes(8, 8, 8) / scheme.recovery_threshold()) as u64;
+    assert_eq!(run.counters.download_arrived_total(), run.counters.download_used_total());
+    assert_eq!(agg.download_arrived_total(), run.counters.download_used_total() + per_resp);
+    assert_eq!(agg.download_discarded_total(), per_resp);
+}
+
+#[test]
+fn speculative_race_duplicate_never_double_counts_channel() {
+    speculative_race_duplicate_dropped(Kind::Channel);
+}
+
+#[test]
+fn speculative_race_duplicate_never_double_counts_tcp() {
+    speculative_race_duplicate_dropped(Kind::Tcp);
+}

@@ -156,7 +156,9 @@ fn tcp_loopback_matches_channel_fail_stop() {
 }
 
 /// A rogue "worker": accepts one connection, optionally reads `read_frames`
-/// job frames, writes `reply` verbatim, then slams the connection.
+/// frames (the master opens every connection with a hello frame, so the
+/// first read is that handshake and job frames follow), writes `reply`
+/// verbatim, then slams the connection.
 fn rogue_listener(read_frames: usize, reply: Vec<u8>) -> (String, JoinHandle<()>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
@@ -213,42 +215,43 @@ fn assert_rogue_degrades_to_fail_stop(rogue_addr: String, rogue: JoinHandle<()>)
 
 #[test]
 fn mid_job_disconnect_is_a_clean_per_job_failure() {
-    // reads one job frame, never replies, closes
-    let (addr, rogue) = rogue_listener(1, Vec::new());
+    // reads the hello and one job frame, never replies, closes
+    let (addr, rogue) = rogue_listener(2, Vec::new());
     assert_rogue_degrades_to_fail_stop(addr, rogue);
 }
 
 #[test]
 fn garbage_frames_are_a_clean_per_job_failure() {
     // replies with 64 bytes of garbage instead of a response frame
-    let (addr, rogue) = rogue_listener(1, vec![0xAB; 64]);
+    let (addr, rogue) = rogue_listener(2, vec![0xAB; 64]);
     assert_rogue_degrades_to_fail_stop(addr, rogue);
 }
 
-/// A syntactically valid response-ok frame from worker 1 for job 0.
-fn ok_response_bytes(payload_len: usize) -> Vec<u8> {
+/// One serialized frame, verbatim.
+fn frame_bytes(frame: &Frame) -> Vec<u8> {
     let mut buf = Vec::new();
-    wire::write_frame(
-        &mut buf,
-        &Frame {
-            kind: FrameKind::RespOk,
-            job_id: 0,
-            worker_id: 1,
-            compute_us: 0,
-            delay_us: 0,
-            payload: vec![9u8; payload_len],
-        },
-    )
-    .unwrap();
+    wire::write_frame(&mut buf, frame).unwrap();
     buf
+}
+
+/// A syntactically valid response-ok frame answering `shard` of job 0.
+fn ok_response_bytes_for(shard: usize, payload_len: usize) -> Vec<u8> {
+    frame_bytes(&Frame {
+        kind: FrameKind::RespOk,
+        job_id: 0,
+        worker_id: shard as u64,
+        compute_us: 0,
+        delay_us: 0,
+        payload: vec![9u8; payload_len],
+    })
 }
 
 #[test]
 fn truncated_response_frame_is_a_clean_per_job_failure() {
     // replies with a valid frame cut mid-payload, then closes
-    let mut reply = ok_response_bytes(100);
+    let mut reply = ok_response_bytes_for(1, 100);
     reply.truncate(wire::HEADER_LEN + 12);
-    let (addr, rogue) = rogue_listener(1, reply);
+    let (addr, rogue) = rogue_listener(2, reply);
     assert_rogue_degrades_to_fail_stop(addr, rogue);
 }
 
@@ -256,9 +259,28 @@ fn truncated_response_frame_is_a_clean_per_job_failure() {
 fn oversized_declared_payload_is_a_clean_per_job_failure() {
     // a syntactically valid response header declaring a 1 TiB payload: the
     // reader must reject it before allocating and fail the link over
-    let mut reply = ok_response_bytes(0);
+    let mut reply = ok_response_bytes_for(1, 0);
     reply[40..48].copy_from_slice(&(1u64 << 40).to_le_bytes());
-    let (addr, rogue) = rogue_listener(1, reply);
+    let (addr, rogue) = rogue_listener(2, reply);
+    assert_rogue_degrades_to_fail_stop(addr, rogue);
+}
+
+#[test]
+fn hello_claiming_a_foreign_id_is_rejected_as_rogue() {
+    // The rogue sits in slot 1 but echoes a hello claiming to be worker 0:
+    // connection index is the authoritative identity, so the master must
+    // kill the link instead of believing the claim.
+    let (addr, rogue) = rogue_listener(1, frame_bytes(&Frame::hello(0)));
+    assert_rogue_degrades_to_fail_stop(addr, rogue);
+}
+
+#[test]
+fn unsolicited_response_is_rejected_as_rogue() {
+    // The rogue (slot 1, owed only shard 1 of job 0) answers for shard 0 —
+    // work it was never sent. The reader validates responses against the
+    // link's own outstanding set, so impersonating another worker's shard
+    // kills the link and the shard it actually owed fail-stops.
+    let (addr, rogue) = rogue_listener(2, ok_response_bytes_for(0, 16));
     assert_rogue_degrades_to_fail_stop(addr, rogue);
 }
 

@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench bench-json bench-serving serve-tcp-demo serve-elastic-demo artifacts clean
+.PHONY: build test bench bench-json bench-serving bench-simd serve-tcp-demo serve-elastic-demo artifacts clean
 
 build:
 	cargo build --release
@@ -20,6 +20,15 @@ bench:
 	cargo bench --bench table1_gcsa
 	cargo bench --bench encode_decode
 	cargo bench --bench serving_throughput
+	cargo bench --bench simd_kernels
+
+# Per-kernel SIMD dispatch bench only: reference vs generic vs native slice
+# kernels per base ring (mask, Montgomery, GF(2^8) tower); asserts every
+# backend bit-identical to reference before timing and writes
+# BENCH_simd_kernels.json. Force a family with GR_CDMM_SIMD=... to compare
+# against the full sweep.
+bench-simd:
+	cargo bench --bench simd_kernels
 
 # Serving throughput only: pipelined multi-job coordinator vs sequential
 # baseline, on both transports (channel + tcp-loopback); writes
@@ -85,6 +94,7 @@ bench-json:
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench encode_decode
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench eval_crossover
 	GR_CDMM_BENCH_REPS=2 cargo bench --bench serving_throughput
+	GR_CDMM_BENCH_REPS=2 cargo bench --bench simd_kernels
 
 # AOT-lower the worker kernels to artifacts/*.hlo.txt + manifest.json
 # (see rust/src/runtime/mod.rs rustdoc for the manifest contract).

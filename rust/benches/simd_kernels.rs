@@ -1,0 +1,150 @@
+//! Perf bench: the runtime-dispatched base-ring slice kernels
+//! (`ring::arch`) — reference vs generic vs native, per base ring:
+//!
+//! * `Z_{2^64}` (mask mode: wrapping u64 + mask — the AVX2/NEON target),
+//! * odd `Z_{p^e}` (`p = 2^31−1`, `e = 2`: the Montgomery path that
+//!   replaces the per-element `u128 %`),
+//! * a `GF(2^8)`-style tower (`Extension` over `Z_2`, m = 8) driven
+//!   through the plane-major matmul, i.e. the dispatch as the worker path
+//!   actually reaches it.
+//!
+//! Before timing, every backend's output is asserted bit-identical to the
+//! reference backend — the bench refuses to measure a wrong kernel. Each
+//! row prints the median speedup over reference. Backends are forced via
+//! `arch::with_backend` (the in-process equivalent of `GR_CDMM_SIMD`), so
+//! one run covers every family the host supports; hosts without AVX2
+//! simply have no `native` rows.
+//!
+//! `cargo bench --bench simd_kernels -- --smoke` runs a seconds-fast CI
+//! subset. Results are also written to `BENCH_simd_kernels.json`.
+
+use gr_cdmm::ring::arch::{available_backends, kernels_for, with_backend, Backend};
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::plane::PlaneMatrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::ring::Ring;
+use gr_cdmm::util::bench::{black_box, throughput, write_bench_json, Bencher};
+use gr_cdmm::util::json::Json;
+use gr_cdmm::util::rng::Rng64;
+use std::time::Duration;
+
+fn ratio(reference: Duration, this: Duration) -> f64 {
+    reference.as_secs_f64() / this.as_secs_f64().max(1e-12)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = if smoke { Bencher::new(0, 1) } else { Bencher::from_env() };
+    let mut rng = Rng64::seeded(117);
+    let backends = available_backends();
+    let mut report: Vec<Json> = Vec::new();
+
+    let names: Vec<&str> = backends.iter().map(|&bk| kernels_for(bk).name).collect();
+    println!(
+        "# SIMD base-ring kernels{} — backends: {}",
+        if smoke { " (smoke)" } else { "" },
+        names.join(", ")
+    );
+
+    let (axpy_len, n, tower_n) = if smoke { (1 << 12, 32, 24) } else { (1 << 18, 256, 96) };
+
+    // ---- scalar Zq rings: mask mode and odd-modulus Montgomery mode ----
+    let rings: [(&str, Zq); 2] =
+        [("Z_2^64 (mask)", Zq::z2e(64)), ("Z_(2^31-1)^2 (montgomery)", Zq::new(2147483647, 2))];
+    for (ring_name, zq) in &rings {
+        println!("\n## {ring_name}");
+
+        // axpy: acc += s·x over a flat slice
+        let x: Vec<u64> = (0..axpy_len).map(|_| zq.random(&mut rng)).collect();
+        let acc0: Vec<u64> = (0..axpy_len).map(|_| zq.random(&mut rng)).collect();
+        let s = zq.random(&mut rng);
+        let expect = with_backend(Backend::Reference, || {
+            let mut acc = acc0.clone();
+            zq.slice_axpy_assign(&mut acc, &s, &x);
+            acc
+        });
+        let mut ref_median = Duration::ZERO;
+        for &bk in &backends {
+            let got = with_backend(bk, || {
+                let mut acc = acc0.clone();
+                zq.slice_axpy_assign(&mut acc, &s, &x);
+                acc
+            });
+            assert_eq!(got, expect, "{ring_name} axpy: {} != reference", kernels_for(bk).name);
+            let mut acc = acc0.clone();
+            let sample = b.bench(&format!("{ring_name} axpy {axpy_len} [{}]", names_of(bk)), || {
+                with_backend(bk, || zq.slice_axpy_assign(&mut acc, &s, &x));
+                black_box(&mut acc);
+            });
+            if bk == Backend::Reference {
+                ref_median = sample.median;
+            }
+            println!(
+                "    → {:.2} Gop/s, ×{:.2} vs reference",
+                throughput(2.0 * axpy_len as f64, sample.median) / 1e9,
+                ratio(ref_median, sample.median)
+            );
+            report.push(sample.to_json());
+        }
+
+        // matmul: c += a·b at n³
+        let a = Matrix::random(zq, n, n, &mut rng);
+        let bm = Matrix::random(zq, n, n, &mut rng);
+        let expect = with_backend(Backend::Reference, || Matrix::matmul(zq, &a, &bm));
+        for &bk in &backends {
+            let got = with_backend(bk, || Matrix::matmul(zq, &a, &bm));
+            assert_eq!(got, expect, "{ring_name} matmul: {} != reference", kernels_for(bk).name);
+            let sample = b.bench(&format!("{ring_name} matmul {n}³ [{}]", names_of(bk)), || {
+                black_box(with_backend(bk, || Matrix::matmul(zq, &a, &bm)));
+            });
+            if bk == Backend::Reference {
+                ref_median = sample.median;
+            }
+            println!(
+                "    → {:.2} Gop/s, ×{:.2} vs reference",
+                throughput(2.0 * (n as f64).powi(3), sample.median) / 1e9,
+                ratio(ref_median, sample.median)
+            );
+            report.push(sample.to_json());
+        }
+    }
+
+    // ---- GF(2^8)-style tower through the plane-major worker kernel ----
+    println!("\n## GF(2^8) tower (Extension over Z_2, m=8), plane-major matmul");
+    let ext = Extension::new(Zq::z2e(1), 8);
+    let a = Matrix::random(&ext, tower_n, tower_n, &mut rng);
+    let bm = Matrix::random(&ext, tower_n, tower_n, &mut rng);
+    let pa = PlaneMatrix::from_aos(&ext, &a);
+    let pb = PlaneMatrix::from_aos(&ext, &bm);
+    let expect =
+        with_backend(Backend::Reference, || PlaneMatrix::matmul_threads(&ext, &pa, &pb, 1));
+    let mut ref_median = Duration::ZERO;
+    for &bk in &backends {
+        let got = with_backend(bk, || PlaneMatrix::matmul_threads(&ext, &pa, &pb, 1));
+        assert_eq!(got, expect, "tower matmul: {} != reference", kernels_for(bk).name);
+        let sample = b.bench(&format!("GF(2^8) plane matmul {tower_n}³ [{}]", names_of(bk)), || {
+            black_box(with_backend(bk, || PlaneMatrix::matmul_threads(&ext, &pa, &pb, 1)));
+        });
+        if bk == Backend::Reference {
+            ref_median = sample.median;
+        }
+        println!(
+            "    → {:.3} Gext-op/s, ×{:.2} vs reference",
+            throughput(2.0 * (tower_n as f64).powi(3), sample.median) / 1e9,
+            ratio(ref_median, sample.median)
+        );
+        report.push(sample.to_json());
+    }
+
+    match write_bench_json("simd_kernels", &Json::Arr(report)) {
+        Ok(p) => println!("\n(json: {})", p.display()),
+        Err(e) => eprintln!("\n(json write failed: {e})"),
+    }
+}
+
+/// The kernel-family name a backend resolves to on this host (e.g.
+/// `native` → `native-avx2`).
+fn names_of(bk: Backend) -> &'static str {
+    kernels_for(bk).name
+}

@@ -1,0 +1,39 @@
+//! The `aarch64` native path.
+//!
+//! NEON is part of the baseline `aarch64` target, so the compiler already
+//! has full SIMD codegen freedom for every function in this crate — there
+//! is no runtime feature to detect and no `target_feature` gate to cross
+//! (`native_available()` is constantly true here). NEON also has no 64-bit
+//! lane multiply: the optimal encoding of the mask-mode kernels is the
+//! `umull`/`umlal` 32×32→64 partial-product sequence, which LLVM emits
+//! from the branch-free chunk-unrolled loops in [`super::generic`] as-is.
+//! Hand-written `vmull_u32` intrinsics reproduce the same instruction
+//! sequence with more unsafe surface, so this module delegates and exists
+//! as the anchor point for future explicit NEON work (e.g. SVE once
+//! runtime detection lands in std).
+//!
+//! The delegation is still a distinct dispatch entry (`native-neon`) so
+//! `GR_CDMM_SIMD=native` is meaningful — and testable — on aarch64 hosts.
+
+/// NEON-baseline `acc[j] = (acc[j] + s·x[j]) mod 2^e`.
+pub fn axpy_mask(acc: &mut [u64], s: u64, x: &[u64], mask: u64) {
+    super::generic::axpy_mask(acc, s, x, mask)
+}
+
+/// NEON-baseline `xs[j] = (xs[j]·s) mod 2^e`.
+pub fn scale_mask(xs: &mut [u64], s: u64, mask: u64) {
+    super::generic::scale_mask(xs, s, mask)
+}
+
+/// NEON-baseline `c += a·b mod 2^e`.
+pub fn matmul_mask(
+    c: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+    mask: u64,
+) {
+    super::generic::matmul_mask(c, a, b, ar, ac, bc, mask)
+}

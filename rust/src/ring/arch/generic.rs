@@ -1,0 +1,145 @@
+//! Branch-free, chunk-unrolled kernels for any target — the autovectorizer
+//! path, and the floor every `native` backend must beat.
+//!
+//! **Mask mode** (`q = 2^e`): the math is wrap-around `u64` multiply/add
+//! plus a mask — exact, order-independent, and fully vectorizable. The
+//! loops below differ from [`super::reference`] only in shape: fixed-width
+//! chunks (`chunks_exact`) tell LLVM the trip count is a multiple of the
+//! unroll factor, so it emits clean SIMD bodies without scalar prologue
+//! guesswork, and the matmul keeps the `a_ik` zero-skip *outside* the inner
+//! column loop (one branch per row sweep, never per element).
+//!
+//! **Mod mode** (odd `q = p^e`): Montgomery multiplication
+//! ([`crate::ring::zq::Montgomery`]) replaces the per-element `u128 %`.
+//! The scalar operand is converted to Montgomery form **once per slice
+//! call** (`s·R mod q`), after which each element costs three 64×64→128
+//! multiplies and no division: `mont_mul(s·R, x) = s·x mod q`, already
+//! canonical. Canonical outputs are what make this bit-identical to the
+//! reference `%` path — both produce the unique representative in `[0, q)`.
+//!
+//! Bit-identity across backends is asserted in `tests/integration_arch.rs`.
+
+use crate::ring::zq::Montgomery;
+
+/// Unroll width for the mask-mode element loops: 8 × u64 = one cache line,
+/// two AVX2 vectors, four NEON vectors — a multiple of every lane width in
+/// play.
+const LANES: usize = 8;
+
+/// `acc[j] = (acc[j] + s·x[j]) mod 2^e`, branch-free and chunk-unrolled.
+pub fn axpy_mask(acc: &mut [u64], s: u64, x: &[u64], mask: u64) {
+    debug_assert_eq!(acc.len(), x.len());
+    let split = acc.len() - acc.len() % LANES;
+    let (a_main, a_tail) = acc.split_at_mut(split);
+    let (x_main, x_tail) = x.split_at(split);
+    for (ac, xc) in a_main.chunks_exact_mut(LANES).zip(x_main.chunks_exact(LANES)) {
+        for (a, b) in ac.iter_mut().zip(xc) {
+            *a = a.wrapping_add(s.wrapping_mul(*b)) & mask;
+        }
+    }
+    for (a, b) in a_tail.iter_mut().zip(x_tail) {
+        *a = a.wrapping_add(s.wrapping_mul(*b)) & mask;
+    }
+}
+
+/// `xs[j] = (xs[j]·s) mod 2^e`, branch-free and chunk-unrolled.
+pub fn scale_mask(xs: &mut [u64], s: u64, mask: u64) {
+    let split = xs.len() - xs.len() % LANES;
+    let (main, tail) = xs.split_at_mut(split);
+    for chunk in main.chunks_exact_mut(LANES) {
+        for x in chunk.iter_mut() {
+            *x = x.wrapping_mul(s) & mask;
+        }
+    }
+    for x in tail.iter_mut() {
+        *x = x.wrapping_mul(s) & mask;
+    }
+}
+
+/// `c += a·b mod 2^e`: same ikj / 64-row k-panel structure as the
+/// reference kernel (same memory access pattern, same accumulation order),
+/// with the inner row update running through the unrolled [`axpy_mask`].
+/// Skipping `a_ik = 0` rows is kept — adding a zero product is bitwise a
+/// no-op, so the skip cannot change results, and encode matrices are often
+/// sparse in a plane.
+pub fn matmul_mask(
+    c: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+    mask: u64,
+) {
+    const KB: usize = 64;
+    let mut k0 = 0;
+    while k0 < ac {
+        let kend = (k0 + KB).min(ac);
+        for i in 0..ar {
+            let crow = &mut c[i * bc..(i + 1) * bc];
+            for k in k0..kend {
+                let aik = a[i * ac + k];
+                if aik == 0 {
+                    continue;
+                }
+                axpy_mask(crow, aik, &b[k * bc..(k + 1) * bc], mask);
+            }
+        }
+        k0 = kend;
+    }
+}
+
+/// `acc[j] = (acc[j] + s·x[j]) mod q` via Montgomery: `s` enters Montgomery
+/// form once, then each element is one `mont_mul` + one conditional-subtract
+/// add — no division anywhere. Outputs are canonical residues, bit-identical
+/// to the reference `%` loop.
+pub fn axpy_mod(acc: &mut [u64], s: u64, x: &[u64], m: &Montgomery) {
+    debug_assert_eq!(acc.len(), x.len());
+    let sm = m.to_mont(s);
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a = m.add(*a, m.mul(sm, *b));
+    }
+}
+
+/// `xs[j] = (xs[j]·s) mod q` via Montgomery (see [`axpy_mod`]).
+pub fn scale_mod(xs: &mut [u64], s: u64, m: &Montgomery) {
+    let sm = m.to_mont(s);
+    for x in xs.iter_mut() {
+        *x = m.mul(sm, *x);
+    }
+}
+
+/// `c += a·b mod q` via Montgomery: each `a_ik` is converted to Montgomery
+/// form once per row sweep (amortized over `bc` columns), the inner loop is
+/// division-free. Same panel structure and accumulation order as the
+/// reference kernel.
+pub fn matmul_mod(
+    c: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+    m: &Montgomery,
+) {
+    const KB: usize = 64;
+    let mut k0 = 0;
+    while k0 < ac {
+        let kend = (k0 + KB).min(ac);
+        for i in 0..ar {
+            let crow = &mut c[i * bc..(i + 1) * bc];
+            for k in k0..kend {
+                let aik = a[i * ac + k];
+                if aik == 0 {
+                    continue;
+                }
+                let am = m.to_mont(aik);
+                let brow = &b[k * bc..(k + 1) * bc];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj = m.add(*cj, m.mul(am, *bj));
+                }
+            }
+        }
+        k0 = kend;
+    }
+}

@@ -1,0 +1,340 @@
+//! Runtime arch-dispatch for the `Zq` base-ring slice kernels.
+//!
+//! Every hot loop in the crate bottoms out in three slice primitives over
+//! the base ring (see [`crate::ring::plane`]):
+//!
+//! * **axpy** — `acc[j] += s·x[j]` (the encode/decode table op),
+//! * **scale** — `xs[j] = s·xs[j]` (in-place scalar multiply),
+//! * **matmul-acc** — `c += a·b` on row-major slices (the worker share
+//!   product, `m²` calls per extension-ring matmul).
+//!
+//! For `Zq` those primitives monomorphize to straight-line `u64` loops; this
+//! module provides *several implementations of each* and picks one at
+//! runtime, so the same build adapts to the machine it lands on:
+//!
+//! * [`Backend::Reference`] — the exact scalar loops the crate shipped with,
+//!   kept verbatim in [`reference`] as the bit-identity oracle;
+//! * [`Backend::Generic`] — branch-free, chunk-unrolled,
+//!   autovectorizer-friendly loops ([`generic`]), plus Montgomery
+//!   multiplication for odd moduli (the per-element `u128 %` disappears —
+//!   see [`crate::ring::zq::Montgomery`]);
+//! * [`Backend::Native`] — per-ISA kernels: AVX2 via `core::arch`
+//!   intrinsics on `x86_64` (the `x86_64` module, gated at runtime on
+//!   `is_x86_feature_detected!("avx2")`), the NEON-baseline path on
+//!   `aarch64` (the `aarch64` module; both are `cfg`-gated, so only the
+//!   host's own module exists in a given build). Hosts without native
+//!   support fall back to [`Backend::Generic`].
+//!
+//! **Selection.** The default backend is resolved once per process
+//! ([`default_backend`]): `GR_CDMM_SIMD=reference|generic|native` overrides,
+//! otherwise auto-detection picks `native` where available and `generic`
+//! elsewhere. [`with_backend`] installs a thread-local override for the
+//! duration of a closure — the equivalence tests and the per-kernel bench
+//! use it to force each backend in-process without touching the (global,
+//! racy) environment. Like [`crate::util::parallel::with_threads`], the
+//! override is per-thread: scoped threads spawned inside the closure read
+//! the process default again. That is sound because **every backend is
+//! bit-identical by construction** (each produces canonical residues, and
+//! modular addition of canonical residues is order-independent), so kernels
+//! may mix backends across row panels without changing a single output bit
+//! — property-tested in `tests/integration_arch.rs`.
+//!
+//! Dispatch is a table of plain `fn` pointers ([`ZqKernels`]) rather than
+//! per-call feature detection: [`crate::ring::zq::Zq`] overrides the
+//! [`crate::ring::traits::Ring`] slice hooks to look the table up once per
+//! slice call, so the per-element loops stay monomorphic and inlinable
+//! inside each kernel.
+
+use crate::ring::zq::Montgomery;
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+pub mod generic;
+pub mod reference;
+
+#[cfg(target_arch = "aarch64")]
+pub mod aarch64;
+#[cfg(target_arch = "x86_64")]
+pub mod x86_64;
+
+/// Which kernel family to run. See the module docs for what each means.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Backend {
+    /// The original scalar loops, verbatim — the bit-identity oracle.
+    Reference,
+    /// Branch-free autovectorizer-friendly loops + Montgomery for odd `q`.
+    Generic,
+    /// Per-ISA intrinsics (AVX2 / NEON); falls back to `Generic` when the
+    /// host has no supported native path.
+    Native,
+}
+
+impl Backend {
+    /// All three backends, in escalation order.
+    pub const ALL: [Backend; 3] = [Backend::Reference, Backend::Generic, Backend::Native];
+
+    /// The `GR_CDMM_SIMD` spelling of this backend.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Reference => "reference",
+            Backend::Generic => "generic",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// Parse a `GR_CDMM_SIMD` value. `None` for anything unrecognized
+/// (including `auto`/empty, which mean "detect").
+pub fn parse_backend(s: &str) -> Option<Backend> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "reference" | "ref" => Some(Backend::Reference),
+        "generic" => Some(Backend::Generic),
+        "native" | "simd" => Some(Backend::Native),
+        _ => None,
+    }
+}
+
+/// Whether this host has a native (per-ISA) kernel path: AVX2 on `x86_64`
+/// (runtime-detected), always on `aarch64` (NEON is part of the baseline
+/// target). `GR_CDMM_SIMD=native` degrades to [`Backend::Generic`] when
+/// this is false; native-specific tests and bench rows skip.
+#[cfg(target_arch = "x86_64")]
+pub fn native_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// See the `x86_64` variant: NEON is baseline on `aarch64`.
+#[cfg(target_arch = "aarch64")]
+pub fn native_available() -> bool {
+    true
+}
+
+/// See the `x86_64` variant: no native path on other architectures.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn native_available() -> bool {
+    false
+}
+
+/// The backends that run *distinct code* on this host: always
+/// `[Reference, Generic]`, plus `Native` when [`native_available`]. The
+/// equivalence tests and the per-kernel bench iterate exactly this set.
+pub fn available_backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Reference, Backend::Generic];
+    if native_available() {
+        v.push(Backend::Native);
+    }
+    v
+}
+
+/// `c += a·b mod 2^e` over row-major slices: `(c, a, b, ar, ac, bc, mask)`
+/// with `a: ar×ac`, `b: ac×bc`, `c: ar×bc` accumulated in place.
+pub type MaskMatmulFn = fn(&mut [u64], &[u64], &[u64], usize, usize, usize, u64);
+
+/// `c += a·b mod q` over row-major slices: `(c, a, b, ar, ac, bc, mont)`,
+/// canonical residues throughout.
+pub type ModMatmulFn = fn(&mut [u64], &[u64], &[u64], usize, usize, usize, &Montgomery);
+
+/// The per-`Zq`-representation kernel table one backend provides. `mask`
+/// kernels serve `p = 2` moduli (wrap-around `u64` + mask, exact mod `2^e`);
+/// `mod` kernels serve odd `p^e` through the ring's precomputed
+/// [`Montgomery`] constants. All slices are row-major.
+pub struct ZqKernels {
+    /// Human-readable kernel-family name (shown by the bench).
+    pub name: &'static str,
+    /// `acc[j] = (acc[j] + s·x[j]) mod 2^e`.
+    pub axpy_mask: fn(acc: &mut [u64], s: u64, x: &[u64], mask: u64),
+    /// `xs[j] = (xs[j]·s) mod 2^e`.
+    pub scale_mask: fn(xs: &mut [u64], s: u64, mask: u64),
+    /// `c += a·b mod 2^e`.
+    pub matmul_mask: MaskMatmulFn,
+    /// `acc[j] = (acc[j] + s·x[j]) mod q`, canonical residues.
+    pub axpy_mod: fn(acc: &mut [u64], s: u64, x: &[u64], m: &Montgomery),
+    /// `xs[j] = (xs[j]·s) mod q`, canonical residues.
+    pub scale_mod: fn(xs: &mut [u64], s: u64, m: &Montgomery),
+    /// `c += a·b mod q`, canonical residues.
+    pub matmul_mod: ModMatmulFn,
+}
+
+static REFERENCE_KERNELS: ZqKernels = ZqKernels {
+    name: "reference",
+    axpy_mask: reference::axpy_mask,
+    scale_mask: reference::scale_mask,
+    matmul_mask: reference::matmul_mask,
+    axpy_mod: reference::axpy_mod,
+    scale_mod: reference::scale_mod,
+    matmul_mod: reference::matmul_mod,
+};
+
+static GENERIC_KERNELS: ZqKernels = ZqKernels {
+    name: "generic",
+    axpy_mask: generic::axpy_mask,
+    scale_mask: generic::scale_mask,
+    matmul_mask: generic::matmul_mask,
+    axpy_mod: generic::axpy_mod,
+    scale_mod: generic::scale_mod,
+    matmul_mod: generic::matmul_mod,
+};
+
+// Native mask-mode kernels are hand-vectorized per ISA. The odd-q path
+// stays on the generic Montgomery kernels under Native too: a widening
+// 64×64→128 vector multiply does not exist below AVX-512IFMA, so the
+// scalar Montgomery loop is already the best encoding (documented in
+// ARCHITECTURE.md → "SIMD kernel dispatch").
+#[cfg(target_arch = "x86_64")]
+static NATIVE_KERNELS: ZqKernels = ZqKernels {
+    name: "native-avx2",
+    axpy_mask: x86_64::axpy_mask,
+    scale_mask: x86_64::scale_mask,
+    matmul_mask: x86_64::matmul_mask,
+    axpy_mod: generic::axpy_mod,
+    scale_mod: generic::scale_mod,
+    matmul_mod: generic::matmul_mod,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NATIVE_KERNELS: ZqKernels = ZqKernels {
+    name: "native-neon",
+    axpy_mask: aarch64::axpy_mask,
+    scale_mask: aarch64::scale_mask,
+    matmul_mask: aarch64::matmul_mask,
+    axpy_mod: generic::axpy_mod,
+    scale_mod: generic::scale_mod,
+    matmul_mod: generic::matmul_mod,
+};
+
+fn native_kernels() -> &'static ZqKernels {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if native_available() {
+        return &NATIVE_KERNELS;
+    }
+    &GENERIC_KERNELS
+}
+
+static DEFAULT_BACKEND: OnceLock<Backend> = OnceLock::new();
+
+/// The process-wide backend, resolved once on first use: `GR_CDMM_SIMD` if
+/// set and recognized (`native` degrades to `generic` with a warning when
+/// unsupported), else `native` where [`native_available`], else `generic`.
+pub fn default_backend() -> Backend {
+    *DEFAULT_BACKEND.get_or_init(|| {
+        let auto = if native_available() { Backend::Native } else { Backend::Generic };
+        let Ok(v) = std::env::var("GR_CDMM_SIMD") else {
+            return auto;
+        };
+        match parse_backend(&v) {
+            Some(Backend::Native) if !native_available() => {
+                eprintln!(
+                    "[gr-cdmm] GR_CDMM_SIMD=native: no native SIMD path on this host, \
+                     using generic"
+                );
+                Backend::Generic
+            }
+            Some(b) => b,
+            None => {
+                let t = v.trim();
+                if !(t.is_empty() || t.eq_ignore_ascii_case("auto")) {
+                    eprintln!(
+                        "[gr-cdmm] unrecognized GR_CDMM_SIMD={t:?} \
+                         (expected reference|generic|native|auto), using {}",
+                        auto.name()
+                    );
+                }
+                auto
+            }
+        }
+    })
+}
+
+thread_local! {
+    static BACKEND_OVERRIDE: Cell<Option<Backend>> = const { Cell::new(None) };
+}
+
+/// Run `f` with the backend pinned to `b` **on the current thread**
+/// (restored afterwards, panic-safe) — the in-process counterpart of
+/// setting `GR_CDMM_SIMD`. Threads spawned inside `f` (e.g. the row-panel
+/// matmul threads) use the process default; mixing backends is safe
+/// because all backends are bit-identical (see module docs).
+pub fn with_backend<T>(b: Backend, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<Backend>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            BACKEND_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = BACKEND_OVERRIDE.with(|c| c.replace(Some(b)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The backend the current thread's kernels run: the [`with_backend`]
+/// override if active, else [`default_backend`].
+pub fn active_backend() -> Backend {
+    BACKEND_OVERRIDE.with(|c| c.get()).unwrap_or_else(default_backend)
+}
+
+/// The kernel table of a specific backend. `Native` resolves to the
+/// generic table when [`native_available`] is false, so a table fetched
+/// here is always safe to call on this host.
+pub fn kernels_for(b: Backend) -> &'static ZqKernels {
+    match b {
+        Backend::Reference => &REFERENCE_KERNELS,
+        Backend::Generic => &GENERIC_KERNELS,
+        Backend::Native => native_kernels(),
+    }
+}
+
+/// The kernel table for [`active_backend`] — what the `Zq` slice hooks call.
+#[inline]
+pub fn active_kernels() -> &'static ZqKernels {
+    kernels_for(active_backend())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_backend_spellings() {
+        assert_eq!(parse_backend("reference"), Some(Backend::Reference));
+        assert_eq!(parse_backend("REF"), Some(Backend::Reference));
+        assert_eq!(parse_backend(" generic "), Some(Backend::Generic));
+        assert_eq!(parse_backend("native"), Some(Backend::Native));
+        assert_eq!(parse_backend("simd"), Some(Backend::Native));
+        assert_eq!(parse_backend("auto"), None);
+        assert_eq!(parse_backend(""), None);
+        assert_eq!(parse_backend("avx512"), None);
+    }
+
+    #[test]
+    fn with_backend_overrides_and_restores() {
+        let outer = active_backend();
+        let inner = with_backend(Backend::Reference, active_backend);
+        assert_eq!(inner, Backend::Reference);
+        assert_eq!(active_backend(), outer);
+        with_backend(Backend::Generic, || {
+            assert_eq!(active_backend(), Backend::Generic);
+            with_backend(Backend::Reference, || {
+                assert_eq!(active_backend(), Backend::Reference);
+            });
+            assert_eq!(active_backend(), Backend::Generic);
+        });
+        assert_eq!(active_backend(), outer);
+    }
+
+    #[test]
+    fn kernels_for_native_always_callable() {
+        // Whatever the host, the Native table must resolve to something
+        // runnable (the AVX2 table only when detection succeeded).
+        let k = kernels_for(Backend::Native);
+        let mut acc = vec![1u64, 2, 3];
+        (k.axpy_mask)(&mut acc, 3, &[10, 20, 30], u64::MAX);
+        assert_eq!(acc, vec![31, 62, 93]);
+    }
+
+    #[test]
+    fn available_backends_distinct_and_ordered() {
+        let av = available_backends();
+        assert!(av.starts_with(&[Backend::Reference, Backend::Generic]));
+        assert_eq!(av.len(), 2 + usize::from(native_available()));
+    }
+}

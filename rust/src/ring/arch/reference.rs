@@ -1,0 +1,115 @@
+//! The scalar oracle kernels — the exact loops the crate shipped with
+//! before the dispatch layer existed, kept **verbatim** (including the
+//! per-`a_ik` `is_zero` skip and the `u128 %` reduction for odd `q`).
+//!
+//! Everything the optimized backends produce is asserted bit-identical to
+//! these in `tests/integration_arch.rs` and the property tests; do not
+//! "improve" them — their value is being the unchanged baseline. Forced via
+//! `GR_CDMM_SIMD=reference`.
+
+use crate::ring::zq::Montgomery;
+
+/// `acc[j] = (acc[j] + s·x[j]) mod 2^e` — the original `Zq::mul_add_assign`
+/// mask-mode loop.
+pub fn axpy_mask(acc: &mut [u64], s: u64, x: &[u64], mask: u64) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a = a.wrapping_add(s.wrapping_mul(*b)) & mask;
+    }
+}
+
+/// `xs[j] = (xs[j]·s) mod 2^e` — the original `Matrix::scale_assign` order
+/// (`x·s`; multiplication is commutative, kept for bit-layout fidelity).
+pub fn scale_mask(xs: &mut [u64], s: u64, mask: u64) {
+    for x in xs.iter_mut() {
+        *x = x.wrapping_mul(s) & mask;
+    }
+}
+
+/// `c += a·b mod 2^e` — the original `slice_matmul_acc` body: ikj order,
+/// 64-row k-panels of `b`, per-`a_ik` zero skip.
+pub fn matmul_mask(
+    c: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+    mask: u64,
+) {
+    const KB: usize = 64;
+    let mut k0 = 0;
+    while k0 < ac {
+        let kend = (k0 + KB).min(ac);
+        for i in 0..ar {
+            let crow = &mut c[i * bc..(i + 1) * bc];
+            for k in k0..kend {
+                let aik = a[i * ac + k];
+                if aik == 0 {
+                    continue;
+                }
+                let brow = &b[k * bc..(k + 1) * bc];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj = cj.wrapping_add(aik.wrapping_mul(*bj)) & mask;
+                }
+            }
+        }
+        k0 = kend;
+    }
+}
+
+/// `acc[j] = (acc[j] + s·x[j]) mod q` — the original odd-modulus
+/// `Zq::mul_add_assign` loop: `u128` product, `%` reduction, conditional
+/// subtract. Only reads `m.q`; the Montgomery constants are for the
+/// optimized backends.
+pub fn axpy_mod(acc: &mut [u64], s: u64, x: &[u64], m: &Montgomery) {
+    debug_assert_eq!(acc.len(), x.len());
+    let q = m.q;
+    for (a, b) in acc.iter_mut().zip(x) {
+        let t = ((s as u128 * *b as u128) % q as u128) as u64;
+        let sum = *a + t; // both < q < 2^63, no overflow
+        *a = if sum >= q { sum - q } else { sum };
+    }
+}
+
+/// `xs[j] = (xs[j]·s) mod q` — the original odd-modulus `Zq::mul` loop.
+pub fn scale_mod(xs: &mut [u64], s: u64, m: &Montgomery) {
+    let q = m.q;
+    for x in xs.iter_mut() {
+        *x = ((*x as u128 * s as u128) % q as u128) as u64;
+    }
+}
+
+/// `c += a·b mod q` — the original `slice_matmul_acc` body for odd `q`.
+pub fn matmul_mod(
+    c: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+    m: &Montgomery,
+) {
+    let q = m.q;
+    const KB: usize = 64;
+    let mut k0 = 0;
+    while k0 < ac {
+        let kend = (k0 + KB).min(ac);
+        for i in 0..ar {
+            let crow = &mut c[i * bc..(i + 1) * bc];
+            for k in k0..kend {
+                let aik = a[i * ac + k];
+                if aik == 0 {
+                    continue;
+                }
+                let brow = &b[k * bc..(k + 1) * bc];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    let t = ((aik as u128 * *bj as u128) % q as u128) as u64;
+                    let sum = *cj + t;
+                    *cj = if sum >= q { sum - q } else { sum };
+                }
+            }
+        }
+        k0 = kend;
+    }
+}

@@ -1,0 +1,140 @@
+//! AVX2 mask-mode kernels for `x86_64`, via `core::arch` intrinsics.
+//!
+//! Only reachable through the dispatch table, which selects this module
+//! after `is_x86_feature_detected!("avx2")` succeeded at process start —
+//! the public wrappers' `unsafe` blocks rely on that gate.
+//!
+//! AVX2 has no 64-bit low multiply (`_mm256_mullo_epi64` is AVX-512DQ), so
+//! the private `mul64_lo` helper synthesizes it from three 32×32→64 partial
+//! products:
+//! `lo(a)·lo(b) + ((lo(a)·hi(b) + hi(a)·lo(b)) << 32)` — exactly the
+//! wrapping 64-bit product, so results are bit-identical to the scalar
+//! `wrapping_mul` path. Four lanes per vector, unrolled ×2 per iteration
+//! (one cache line), scalar tail for non-multiple-of-4 lengths.
+//!
+//! Odd-modulus (Montgomery) kernels are *not* vectorized here: the inner
+//! step needs a widening 64×64→128 multiply, which AVX2 cannot express
+//! (AVX-512IFMA territory); the dispatch table routes `mod`-mode calls to
+//! the scalar Montgomery kernels in [`super::generic`] instead.
+
+use core::arch::x86_64::{
+    __m256i, _mm256_add_epi64, _mm256_and_si256, _mm256_loadu_si256, _mm256_mul_epu32,
+    _mm256_set1_epi64x, _mm256_slli_epi64, _mm256_srli_epi64, _mm256_storeu_si256,
+};
+
+/// Lane-wise wrapping 64-bit product of `a` and `b` (see module docs).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul64_lo(a: __m256i, b: __m256i) -> __m256i {
+    let a_hi = _mm256_srli_epi64::<32>(a);
+    let b_hi = _mm256_srli_epi64::<32>(b);
+    let lolo = _mm256_mul_epu32(a, b);
+    let cross = _mm256_add_epi64(_mm256_mul_epu32(a, b_hi), _mm256_mul_epu32(a_hi, b));
+    _mm256_add_epi64(lolo, _mm256_slli_epi64::<32>(cross))
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_mask_avx2(acc: &mut [u64], s: u64, x: &[u64], mask: u64) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = acc.len();
+    let vs = _mm256_set1_epi64x(s as i64);
+    let vm = _mm256_set1_epi64x(mask as i64);
+    let mut j = 0;
+    while j + 8 <= n {
+        let ap0 = acc.as_mut_ptr().add(j).cast::<__m256i>();
+        let ap1 = acc.as_mut_ptr().add(j + 4).cast::<__m256i>();
+        let x0 = _mm256_loadu_si256(x.as_ptr().add(j).cast::<__m256i>());
+        let x1 = _mm256_loadu_si256(x.as_ptr().add(j + 4).cast::<__m256i>());
+        let s0 = _mm256_add_epi64(_mm256_loadu_si256(ap0.cast_const()), mul64_lo(x0, vs));
+        let s1 = _mm256_add_epi64(_mm256_loadu_si256(ap1.cast_const()), mul64_lo(x1, vs));
+        _mm256_storeu_si256(ap0, _mm256_and_si256(s0, vm));
+        _mm256_storeu_si256(ap1, _mm256_and_si256(s1, vm));
+        j += 8;
+    }
+    while j + 4 <= n {
+        let ap = acc.as_mut_ptr().add(j).cast::<__m256i>();
+        let xv = _mm256_loadu_si256(x.as_ptr().add(j).cast::<__m256i>());
+        let sum = _mm256_add_epi64(_mm256_loadu_si256(ap.cast_const()), mul64_lo(xv, vs));
+        _mm256_storeu_si256(ap, _mm256_and_si256(sum, vm));
+        j += 4;
+    }
+    while j < n {
+        acc[j] = acc[j].wrapping_add(s.wrapping_mul(x[j])) & mask;
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_mask_avx2(xs: &mut [u64], s: u64, mask: u64) {
+    let n = xs.len();
+    let vs = _mm256_set1_epi64x(s as i64);
+    let vm = _mm256_set1_epi64x(mask as i64);
+    let mut j = 0;
+    while j + 4 <= n {
+        let p = xs.as_mut_ptr().add(j).cast::<__m256i>();
+        let v = _mm256_loadu_si256(p.cast_const());
+        _mm256_storeu_si256(p, _mm256_and_si256(mul64_lo(v, vs), vm));
+        j += 4;
+    }
+    while j < n {
+        xs[j] = xs[j].wrapping_mul(s) & mask;
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_mask_avx2(
+    c: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+    mask: u64,
+) {
+    // Same ikj / 64-row k-panel structure and accumulation order as the
+    // scalar kernels; only the row update is vectorized.
+    const KB: usize = 64;
+    let mut k0 = 0;
+    while k0 < ac {
+        let kend = (k0 + KB).min(ac);
+        for i in 0..ar {
+            let crow = &mut c[i * bc..(i + 1) * bc];
+            for k in k0..kend {
+                let aik = a[i * ac + k];
+                if aik == 0 {
+                    continue;
+                }
+                axpy_mask_avx2(crow, aik, &b[k * bc..(k + 1) * bc], mask);
+            }
+        }
+        k0 = kend;
+    }
+}
+
+/// AVX2 `acc[j] = (acc[j] + s·x[j]) mod 2^e`.
+pub fn axpy_mask(acc: &mut [u64], s: u64, x: &[u64], mask: u64) {
+    // SAFETY: this function is only installed in the dispatch table when
+    // `is_x86_feature_detected!("avx2")` returned true (see `arch::mod`).
+    unsafe { axpy_mask_avx2(acc, s, x, mask) }
+}
+
+/// AVX2 `xs[j] = (xs[j]·s) mod 2^e`.
+pub fn scale_mask(xs: &mut [u64], s: u64, mask: u64) {
+    // SAFETY: AVX2 presence gated by the dispatch table (see `axpy_mask`).
+    unsafe { scale_mask_avx2(xs, s, mask) }
+}
+
+/// AVX2 `c += a·b mod 2^e`.
+pub fn matmul_mask(
+    c: &mut [u64],
+    a: &[u64],
+    b: &[u64],
+    ar: usize,
+    ac: usize,
+    bc: usize,
+    mask: u64,
+) {
+    // SAFETY: AVX2 presence gated by the dispatch table (see `axpy_mask`).
+    unsafe { matmul_mask_avx2(c, a, b, ar, ac, bc, mask) }
+}

@@ -1,6 +1,10 @@
 //! Residue-field machinery: `GF(p)`, `GF(p^d)` and polynomial arithmetic over
 //! them. Used to *certify* defining polynomials (irreducibility mod `p`) when
-//! constructing Galois rings and towers — not on any hot path.
+//! constructing Galois rings and towers — not on any hot path, which is why
+//! multiplication stays on the plain `u128 %` reduction here: the Montgomery
+//! form that removes per-element division from odd-modulus hot loops lives in
+//! [`super::zq::Montgomery`] and is wired into the runtime-dispatched slice
+//! kernels ([`super::arch`]); construction-time certification doesn't need it.
 
 /// The prime field `GF(p)`, elements as `u64 < p`.
 #[derive(Clone, Debug, PartialEq)]

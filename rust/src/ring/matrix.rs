@@ -172,11 +172,10 @@ impl<E: Clone + PartialEq> Matrix<E> {
         }
     }
 
-    /// `self = self · s` (scalar).
+    /// `self = self · s` (scalar). Delegates to the ring's
+    /// [`Ring::slice_scale_assign`] hook (SIMD-dispatched for `Zq`).
     pub fn scale_assign<R: Ring<Elem = E>>(&mut self, ring: &R, s: &E) {
-        for x in self.data.iter_mut() {
-            *x = ring.mul(x, s);
-        }
+        ring.slice_scale_assign(&mut self.data, s);
     }
 
     /// `self += s · other` — the decode/Horner workhorse. Delegates to the

@@ -8,8 +8,11 @@
 //!
 //! Everything the paper's schemes need algebraically lives here; the `codes`
 //! and `rmfe` modules are generic over the [`traits::Ring`] and
-//! [`plane::PlaneRing`] traits.
+//! [`plane::PlaneRing`] traits. Base-ring slice kernels (axpy / scale /
+//! matmul-accumulate) route through the runtime-dispatched SIMD backend
+//! table in [`arch`] via the `Ring` slice hooks — see `GR_CDMM_SIMD`.
 
+pub mod arch;
 pub mod traits;
 pub mod zq;
 pub mod gfp;

@@ -185,18 +185,19 @@ impl<R: ExtensibleRing> PlaneRing for Extension<R> {
 }
 
 /// `acc += s·x` over base-ring slices — the innermost encode/decode op.
+/// Delegates to the [`Ring::slice_axpy_assign`] hook, so rings with a
+/// machine-word representation ([`Zq`]) run the runtime-dispatched SIMD
+/// kernel from [`crate::ring::arch`].
 #[inline]
 pub fn slice_axpy<B: Ring>(base: &B, acc: &mut [B::Elem], s: &B::Elem, x: &[B::Elem]) {
     debug_assert_eq!(acc.len(), x.len());
-    for (a, b) in acc.iter_mut().zip(x) {
-        base.mul_add_assign(a, s, b);
-    }
+    base.slice_axpy_assign(acc, s, x);
 }
 
 /// `c += a·b` over base-ring slices (`a: ar×ac`, `b: ac×bc`, `c: ar×bc`,
-/// all row-major). The cache-friendly ikj order with 64-row k-panels of `b`
-/// — identical structure to [`Ring::mat_mul`]'s default, monomorphizing to
-/// straight-line `u64` code for [`Zq`].
+/// all row-major). Delegates to the [`Ring::slice_mat_mul_acc`] hook: the
+/// cache-friendly ikj order with 64-row k-panels of `b` by default,
+/// dispatched into the [`crate::ring::arch`] SIMD kernel table for [`Zq`].
 pub fn slice_matmul_acc<B: Ring>(
     base: &B,
     c: &mut [B::Elem],
@@ -209,25 +210,7 @@ pub fn slice_matmul_acc<B: Ring>(
     debug_assert_eq!(a.len(), ar * ac);
     debug_assert_eq!(b.len(), ac * bc);
     debug_assert_eq!(c.len(), ar * bc);
-    const KB: usize = 64;
-    let mut k0 = 0;
-    while k0 < ac {
-        let kend = (k0 + KB).min(ac);
-        for i in 0..ar {
-            let crow = &mut c[i * bc..(i + 1) * bc];
-            for k in k0..kend {
-                let aik = &a[i * ac + k];
-                if base.is_zero(aik) {
-                    continue;
-                }
-                let brow = &b[k * bc..(k + 1) * bc];
-                for (cj, bj) in crow.iter_mut().zip(brow) {
-                    base.mul_add_assign(cj, aik, bj);
-                }
-            }
-        }
-        k0 = kend;
-    }
+    base.slice_mat_mul_acc(c, a, b, ar, ac, bc);
 }
 
 /// [`slice_matmul_acc`] over up to `threads` scoped threads: `c` is split
@@ -525,32 +508,43 @@ impl<B: Ring> PlaneMatrix<B> {
     }
 
     /// `self = s·self` in place, driven by a borrowed [`ScalarTable`] of
-    /// `s`: streams the `m` planes once per element column with an `O(m)`
-    /// coefficient scratch instead of allocating a fresh `m·rows·cols`
-    /// buffer per call. Per output element this runs the exact
-    /// multiply-accumulate sequence of the old out-of-place update
-    /// (ascending `j`, zero coefficients skipped, zero-initialized
-    /// accumulator), so results are bit-identical.
+    /// `s`: streams the planes in fixed-size column chunks with an
+    /// `O(m·CHUNK)` scratch instead of allocating a fresh `m·rows·cols`
+    /// buffer per call. Each chunk snapshots the `m` input plane segments,
+    /// then rebuilds every output plane segment as a zero-initialized
+    /// ascending-`j` sequence of [`slice_axpy`]s with zero coefficients
+    /// skipped — per output element that is the exact multiply-accumulate
+    /// sequence of the elementwise update (and of the old out-of-place
+    /// path), so results are bit-identical while the inner loops run
+    /// through the dispatched slice kernels over contiguous runs.
     pub fn scale_with_table(&mut self, base: &B, t: &ScalarTable<B>) {
         let m = t.m;
         debug_assert_eq!(self.planes, m, "table plane count mismatch");
         let pp = self.plane_len();
-        let mut coeffs: Vec<B::Elem> = vec![base.zero(); m];
-        for idx in 0..pp {
-            for (k, c) in coeffs.iter_mut().enumerate() {
-                *c = self.data[k * pp + idx].clone();
+        // 1024 × u64 = 8 KiB per plane segment: comfortably in L1 even for
+        // wide towers, long enough to amortize the dispatch call.
+        const CHUNK: usize = 1024;
+        let seg_cap = CHUNK.min(pp.max(1));
+        let mut scratch: Vec<B::Elem> = vec![base.zero(); m * seg_cap];
+        let mut i0 = 0;
+        while i0 < pp {
+            let seg = (pp - i0).min(seg_cap);
+            for j in 0..m {
+                scratch[j * seg_cap..j * seg_cap + seg]
+                    .clone_from_slice(&self.data[j * pp + i0..j * pp + i0 + seg]);
             }
             for k in 0..m {
-                let mut acc = base.zero();
-                for (j, xj) in coeffs.iter().enumerate() {
+                let dst = &mut self.data[k * pp + i0..k * pp + i0 + seg];
+                dst.fill(base.zero());
+                for j in 0..m {
                     let c = t.coeff(k, j);
                     if base.is_zero(c) {
                         continue;
                     }
-                    base.mul_add_assign(&mut acc, c, xj);
+                    slice_axpy(base, dst, c, &scratch[j * seg_cap..j * seg_cap + seg]);
                 }
-                self.data[k * pp + idx] = acc;
             }
+            i0 += seg;
         }
     }
 

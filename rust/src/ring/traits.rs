@@ -181,10 +181,91 @@ pub trait Ring: Clone + Send + Sync + 'static {
         acc
     }
 
-    /// Matrix product hook. The default is the cache-friendly ikj loop;
-    /// structured rings override it (e.g. `Extension` decomposes into `m²`
-    /// *base-ring* matmuls plus a modulus reduction — the §Perf optimization
-    /// that removed per-element `Vec` traffic from the worker hot path).
+    /// Slice kernel hook: `acc[j] += s·x[j]` — the innermost encode/decode
+    /// op ([`crate::ring::plane`] table axpys and modulus reductions bottom
+    /// out here). Default is the per-element scalar loop; rings with a
+    /// machine-word representation override it to dispatch into the
+    /// runtime-selected SIMD kernel table ([`crate::ring::arch`] — `Zq`
+    /// today). Every override must be bit-identical to this default.
+    fn slice_axpy_assign(&self, acc: &mut [Self::Elem], s: &Self::Elem, x: &[Self::Elem]) {
+        debug_assert_eq!(acc.len(), x.len());
+        for (a, b) in acc.iter_mut().zip(x) {
+            self.mul_add_assign(a, s, b);
+        }
+    }
+
+    /// Slice kernel hook: `xs[j] = xs[j]·s` in place (the scalar-matrix
+    /// scale). Same override contract as [`Ring::slice_axpy_assign`].
+    fn slice_scale_assign(&self, xs: &mut [Self::Elem], s: &Self::Elem) {
+        for x in xs.iter_mut() {
+            *x = self.mul(x, s);
+        }
+    }
+
+    /// Slice kernel hook: `c += a·b` over row-major slices (`a: ar×ac`,
+    /// `b: ac×bc`, `c: ar×bc`) — the dense matmul step every worker share
+    /// product bottoms out in. Cache-friendly ikj order with 64-row
+    /// k-panels of `b` (§Perf iteration 2: +10–15% at 512³ over plain ikj).
+    ///
+    /// The `a_ik` zero-skip is hoisted out of the dense path (PR 7
+    /// satellite): each panel row of `a` is probed once, and the zero-free
+    /// (dense) case runs with no branch in the `k` loop at all. Skipping a
+    /// zero `a_ik` is bitwise a no-op (`acc + 0·b` returns `acc`'s exact
+    /// representation in every ring here), so both paths are bit-identical
+    /// to the original always-branching loop — property-tested against the
+    /// verbatim old loop in `property_tests.rs`.
+    ///
+    /// `Zq` overrides this to dispatch into [`crate::ring::arch`].
+    fn slice_mat_mul_acc(
+        &self,
+        c: &mut [Self::Elem],
+        a: &[Self::Elem],
+        b: &[Self::Elem],
+        ar: usize,
+        ac: usize,
+        bc: usize,
+    ) {
+        debug_assert_eq!(a.len(), ar * ac);
+        debug_assert_eq!(b.len(), ac * bc);
+        debug_assert_eq!(c.len(), ar * bc);
+        const KB: usize = 64;
+        let mut k0 = 0;
+        while k0 < ac {
+            let kend = (k0 + KB).min(ac);
+            for i in 0..ar {
+                let arow = &a[i * ac + k0..i * ac + kend];
+                let crow = &mut c[i * bc..(i + 1) * bc];
+                if arow.iter().any(|aik| self.is_zero(aik)) {
+                    // sparse panel row: keep the per-a_ik skip
+                    for (k, aik) in arow.iter().enumerate() {
+                        if self.is_zero(aik) {
+                            continue;
+                        }
+                        let brow = &b[(k0 + k) * bc..(k0 + k + 1) * bc];
+                        for (cj, bj) in crow.iter_mut().zip(brow) {
+                            self.mul_add_assign(cj, aik, bj);
+                        }
+                    }
+                } else {
+                    // dense panel row: branch-free sweep
+                    for (k, aik) in arow.iter().enumerate() {
+                        let brow = &b[(k0 + k) * bc..(k0 + k + 1) * bc];
+                        for (cj, bj) in crow.iter_mut().zip(brow) {
+                            self.mul_add_assign(cj, aik, bj);
+                        }
+                    }
+                }
+            }
+            k0 = kend;
+        }
+    }
+
+    /// Matrix product hook. The default delegates to
+    /// [`Ring::slice_mat_mul_acc`] on the flat element storage (so scalar
+    /// rings inherit the dispatched slice kernel); structured rings
+    /// override it (e.g. `Extension` decomposes into `m²` *base-ring*
+    /// matmuls plus a modulus reduction — the §Perf optimization that
+    /// removed per-element `Vec` traffic from the worker hot path).
     fn mat_mul(
         &self,
         a: &crate::ring::matrix::Matrix<Self::Elem>,
@@ -194,34 +275,13 @@ pub trait Ring: Clone + Send + Sync + 'static {
         Self::Elem: PartialEq,
     {
         assert_eq!(a.cols, b.rows, "inner dimensions must agree");
-        let bc = b.cols;
-        let mut c = crate::ring::matrix::Matrix::zeros(self, a.rows, bc);
-        // k-panel blocking: a 64-row panel of B stays hot in L2 while every
-        // row of A sweeps it (§Perf iteration 2: +10–15% at 512³ over the
-        // plain ikj order; no effect at small sizes).
-        const KB: usize = 64;
-        let mut k0 = 0;
-        while k0 < a.cols {
-            let kend = (k0 + KB).min(a.cols);
-            for i in 0..a.rows {
-                let crow = &mut c.data[i * bc..(i + 1) * bc];
-                for k in k0..kend {
-                    let aik = &a.data[i * a.cols + k];
-                    if self.is_zero(aik) {
-                        continue;
-                    }
-                    let brow = &b.data[k * bc..(k + 1) * bc];
-                    for (cj, bj) in crow.iter_mut().zip(brow) {
-                        self.mul_add_assign(cj, aik, bj);
-                    }
-                }
-            }
-            k0 = kend;
-        }
+        let mut c = crate::ring::matrix::Matrix::zeros(self, a.rows, b.cols);
+        self.slice_mat_mul_acc(&mut c.data, &a.data, &b.data, a.rows, a.cols, b.cols);
         c
     }
 
-    /// Matrix scale-accumulate hook: `acc += s · x`. Default is elementwise;
+    /// Matrix scale-accumulate hook: `acc += s · x`. Default delegates to
+    /// the [`Ring::slice_axpy_assign`] slice kernel (dispatched for `Zq`);
     /// `Extension` overrides with a plane decomposition (encode/decode hot
     /// path — Horner steps and interpolation weights are exactly this op).
     fn mat_axpy(
@@ -236,9 +296,7 @@ pub trait Ring: Clone + Send + Sync + 'static {
         if self.is_zero(s) {
             return;
         }
-        for (a, b) in acc.data.iter_mut().zip(&x.data) {
-            self.mul_add_assign(a, s, b);
-        }
+        self.slice_axpy_assign(&mut acc.data, s, &x.data);
     }
 }
 

@@ -1,0 +1,257 @@
+//! Reference-vs-optimized equivalence for the runtime-dispatched base-ring
+//! kernels (`ring::arch`).
+//!
+//! Every backend reachable on this host (always `Reference` and `Generic`;
+//! `Native` where the CPU supports it — and even where it doesn't, since
+//! `kernels_for(Native)` falls back to the generic table) must produce
+//! **bit-identical** results on every `Zq` representation the codebase
+//! uses: power-of-two moduli (mask mode) and odd prime powers (Montgomery
+//! mode), standalone and as the base of `GaloisRing` / `Extension` towers.
+//! Shapes deliberately include lengths that are not multiples of any SIMD
+//! lane width, and the `a` operands carry a dense sprinkling of zeros so
+//! both sides of the hoisted zero-probe in `Ring::slice_mat_mul_acc` run.
+//!
+//! The final test drives complete registry schemes end to end through the
+//! byte facade and asserts the decode output is backend-invariant.
+
+use gr_cdmm::codes::registry::{self, SchemeConfig, SCHEME_NAMES};
+use gr_cdmm::codes::scheme::DynScheme;
+use gr_cdmm::ring::arch::{available_backends, kernels_for, with_backend, Backend};
+use gr_cdmm::ring::extension::Extension;
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::plane::{slice_matmul_acc_threads, PlaneMatrix};
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::ring::{GaloisRing, Ring};
+use gr_cdmm::util::parallel::with_threads;
+use gr_cdmm::util::rng::Rng64;
+
+/// The `Zq` representations the equivalence suite sweeps: every mask width
+/// class (full-word, partial-word, single-bit) and odd moduli from tiny to
+/// near the 2^63 Montgomery ceiling.
+fn zq_rings() -> Vec<Zq> {
+    vec![
+        Zq::z2e(64),
+        Zq::z2e(17),
+        Zq::z2e(1),
+        Zq::new(3, 5),
+        Zq::new(7, 3),
+        Zq::new(65537, 1),
+        Zq::new(2147483647, 2),
+    ]
+}
+
+/// Backends to force: everything distinct on this host, plus `Native`
+/// unconditionally (on hosts without a native path it must degrade to the
+/// generic table, not crash).
+fn forced_backends() -> Vec<Backend> {
+    let mut v = available_backends();
+    if !v.contains(&Backend::Native) {
+        v.push(Backend::Native);
+    }
+    v
+}
+
+/// Random matrix with ~25 % zero entries — uniform `u64` would essentially
+/// never produce a zero in a 64-bit ring, leaving the sparse half of the
+/// hoisted zero-probe untested.
+fn random_with_zeros(zq: &Zq, rows: usize, cols: usize, rng: &mut Rng64) -> Matrix<u64> {
+    let mut m = Matrix::random(zq, rows, cols, rng);
+    for x in m.data.iter_mut() {
+        if rng.below(4) == 0 {
+            *x = 0;
+        }
+    }
+    m
+}
+
+#[test]
+fn slice_kernels_backend_equivalent_all_rings_and_shapes() {
+    let shapes: &[(usize, usize, usize)] =
+        &[(1, 1, 1), (1, 7, 5), (3, 4, 13), (5, 5, 8), (7, 64, 33), (16, 16, 16), (2, 130, 31)];
+    let mut rng = Rng64::seeded(7001);
+    for zq in zq_rings() {
+        for &(ar, ac, bc) in shapes {
+            let a = random_with_zeros(&zq, ar, ac, &mut rng);
+            let b = Matrix::random(&zq, ac, bc, &mut rng);
+            let s = zq.random(&mut rng);
+            let acc0: Vec<u64> = (0..ar * bc).map(|_| zq.random(&mut rng)).collect();
+            let x: Vec<u64> = (0..ar * bc).map(|_| zq.random(&mut rng)).collect();
+
+            let (c_ref, axpy_ref, scale_ref) = with_backend(Backend::Reference, || {
+                let c = Matrix::matmul(&zq, &a, &b);
+                let mut acc = acc0.clone();
+                zq.slice_axpy_assign(&mut acc, &s, &x);
+                let mut xs = acc0.clone();
+                zq.slice_scale_assign(&mut xs, &s);
+                (c, acc, xs)
+            });
+            // independent oracle for the matmul: plain i-j-k dot products
+            // with per-element ring ops, no panels, no skips.
+            let mut c_naive = Matrix::zeros(&zq, ar, bc);
+            for i in 0..ar {
+                for j in 0..bc {
+                    let mut acc = 0u64;
+                    for k in 0..ac {
+                        zq.mul_add_assign(&mut acc, &a.data[i * ac + k], &b.data[k * bc + j]);
+                    }
+                    c_naive.data[i * bc + j] = acc;
+                }
+            }
+            assert_eq!(c_ref, c_naive, "reference vs naive q={} {ar}x{ac}x{bc}", zq.q());
+
+            for bk in forced_backends() {
+                let name = kernels_for(bk).name;
+                let (c, axpy, scale) = with_backend(bk, || {
+                    let c = Matrix::matmul(&zq, &a, &b);
+                    let mut acc = acc0.clone();
+                    zq.slice_axpy_assign(&mut acc, &s, &x);
+                    let mut xs = acc0.clone();
+                    zq.slice_scale_assign(&mut xs, &s);
+                    (c, acc, xs)
+                });
+                assert_eq!(c, c_ref, "matmul {name} q={} {ar}x{ac}x{bc}", zq.q());
+                assert_eq!(axpy, axpy_ref, "axpy {name} q={}", zq.q());
+                assert_eq!(scale, scale_ref, "scale {name} q={}", zq.q());
+            }
+        }
+    }
+}
+
+#[test]
+fn tower_plane_ops_backend_invariant() {
+    // Extension towers over both representations, incl. the GF(2^d)-style
+    // tower over Z_2, exercising matmul + table axpy + in-place scale.
+    let towers: Vec<(String, Zq, usize)> = vec![
+        ("GR(2^64,4)".into(), Zq::z2e(64), 4),
+        ("GF(2^8)".into(), Zq::z2e(1), 8),
+        ("GR(3^5,3)".into(), Zq::new(3, 5), 3),
+    ];
+    let mut rng = Rng64::seeded(7002);
+    for (name, base, m) in towers {
+        let ext = Extension::new(base.clone(), m);
+        let a = Matrix::random(&ext, 9, 7, &mut rng);
+        let b = Matrix::random(&ext, 7, 5, &mut rng);
+        let s = ext.random(&mut rng);
+        let pa = PlaneMatrix::from_aos(&ext, &a);
+        let pb = PlaneMatrix::from_aos(&ext, &b);
+
+        let job = || {
+            let c = PlaneMatrix::matmul_threads(&ext, &pa, &pb, 1);
+            let mut ax = pa.clone();
+            ax.axpy(&ext, &s, &pa);
+            let mut sc = pa.clone();
+            sc.scale_assign(&ext, &s);
+            (c, ax, sc)
+        };
+        let reference = with_backend(Backend::Reference, job);
+        for bk in forced_backends() {
+            let got = with_backend(bk, job);
+            assert_eq!(got, reference, "{name}: {} diverged from reference", kernels_for(bk).name);
+        }
+    }
+}
+
+#[test]
+fn galois_ring_matmul_backend_invariant() {
+    // GaloisRing's AoS path reaches the dispatched kernels through its Zq
+    // coefficient ops only indirectly; still must be backend-invariant.
+    let gr = GaloisRing::new(2, 16, 2);
+    let mut rng = Rng64::seeded(7003);
+    let a = Matrix::random(&gr, 6, 6, &mut rng);
+    let b = Matrix::random(&gr, 6, 6, &mut rng);
+    let reference = with_backend(Backend::Reference, || Matrix::matmul(&gr, &a, &b));
+    for bk in forced_backends() {
+        let got = with_backend(bk, || Matrix::matmul(&gr, &a, &b));
+        assert_eq!(got, reference, "{}", kernels_for(bk).name);
+    }
+}
+
+#[test]
+fn threaded_matmul_bit_identical_per_backend_and_mixed() {
+    // Per backend: the row-panel threaded kernel must equal the sequential
+    // one at every thread count. Spawned panel threads read the *process
+    // default* backend (the override is thread-local), so the t>1 runs
+    // under a forced non-default backend are genuinely mixed-backend — the
+    // strongest form of the bit-identity claim.
+    let mut rng = Rng64::seeded(7004);
+    for zq in [Zq::z2e(64), Zq::new(2147483647, 2)] {
+        let (ar, ac, bc) = (37, 65, 29);
+        let a = random_with_zeros(&zq, ar, ac, &mut rng);
+        let b = Matrix::random(&zq, ac, bc, &mut rng);
+        let reference = with_backend(Backend::Reference, || {
+            let mut c = vec![0u64; ar * bc];
+            slice_matmul_acc_threads(&zq, &mut c, &a.data, &b.data, ar, ac, bc, 1);
+            c
+        });
+        for bk in forced_backends() {
+            for t in [1usize, 4] {
+                let got = with_backend(bk, || {
+                    let mut c = vec![0u64; ar * bc];
+                    slice_matmul_acc_threads(&zq, &mut c, &a.data, &b.data, ar, ac, bc, t);
+                    c
+                });
+                assert_eq!(
+                    got,
+                    reference,
+                    "q={} backend={} threads={t}",
+                    zq.q(),
+                    kernels_for(bk).name
+                );
+            }
+        }
+    }
+}
+
+/// One full job through the byte facade on the fixed subset `{0..R−1}`.
+fn byte_job(
+    scheme: &dyn DynScheme,
+    a: &[Vec<u8>],
+    b: &[Vec<u8>],
+) -> (Vec<Vec<u8>>, Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let payloads = scheme.encode_bytes(a, b).unwrap();
+    let rt = scheme.recovery_threshold();
+    let responses: Vec<Vec<u8>> =
+        (0..rt).map(|i| scheme.compute_bytes(&payloads[i]).unwrap()).collect();
+    let borrowed: Vec<(usize, &[u8])> =
+        responses.iter().enumerate().map(|(i, p)| (i, p.as_slice())).collect();
+    let out = scheme.decode_bytes(&borrowed).unwrap();
+    (payloads, responses, out)
+}
+
+/// Every registered scheme, end to end: share payloads, worker responses
+/// and decoded outputs must not depend on the kernel backend. Run under
+/// `with_threads(1)` so the thread-local backend override governs the
+/// entire job.
+#[test]
+fn registry_schemes_backend_invariant_end_to_end() {
+    let base = Zq::z2e(64);
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    for (name, _) in SCHEME_NAMES {
+        let scheme = registry::build(name, &cfg).unwrap();
+        let n = scheme.batch_size();
+        let mut rng = Rng64::seeded(7005);
+        let a: Vec<Vec<u8>> =
+            (0..n).map(|_| Matrix::random(&base, 16, 16, &mut rng).to_bytes(&base)).collect();
+        let b: Vec<Vec<u8>> =
+            (0..n).map(|_| Matrix::random(&base, 16, 16, &mut rng).to_bytes(&base)).collect();
+        let reference = with_threads(1, || {
+            with_backend(Backend::Reference, || byte_job(scheme.as_ref(), &a, &b))
+        });
+        for bk in forced_backends() {
+            let got =
+                with_threads(1, || with_backend(bk, || byte_job(scheme.as_ref(), &a, &b)));
+            assert_eq!(
+                got,
+                reference,
+                "{name} under {} diverged from reference backend",
+                kernels_for(bk).name
+            );
+        }
+        // mixed-backend + threaded: override on the caller, default on the
+        // panel threads — still bit-identical.
+        let mixed = with_threads(4, || {
+            with_backend(Backend::Generic, || byte_job(scheme.as_ref(), &a, &b))
+        });
+        assert_eq!(mixed, reference, "{name} threaded mixed-backend run diverged");
+    }
+}

@@ -6,6 +6,7 @@ use gr_cdmm::codes::batch_ep_rmfe::BatchEpRmfe;
 use gr_cdmm::codes::csa::CsaCode;
 use gr_cdmm::codes::ep::EpCode;
 use gr_cdmm::codes::scheme::{DmmScheme, Share};
+use gr_cdmm::ring::arch::{available_backends, with_backend};
 use gr_cdmm::ring::eval::{
     eval_many_fast, eval_many_naive, interpolate_fast, interpolate_naive,
 };
@@ -441,6 +442,86 @@ fn prop_cached_ep_decode_bit_identical_to_cold() {
     let (hits_after, misses) = warm.plan_cache_stats();
     assert!(hits_after > hits_before, "replayed subset must hit");
     assert_eq!(hits_after + misses, CASES as u64 + 1);
+}
+
+/// Property (PR 7 satellite): `Ring::slice_mat_mul_acc`'s hoisted
+/// zero-probe (probe each a-panel row once, branch-free dense sweep when
+/// zero-free) is bit-identical to the original loop that branched on
+/// `is_zero(a_ik)` per element — here reproduced verbatim as the oracle —
+/// across ring towers and every forced kernel backend. `a` carries ~25 %
+/// zeros so both the sparse and the dense side of the probe run (uniform
+/// random elements of a 64-bit ring are never zero in practice).
+#[test]
+fn prop_hoisted_zero_probe_matmul_bit_identical() {
+    /// The pre-hoist loop, verbatim: per-element zero branch inside the
+    /// k-panel sweep.
+    fn old_loop<B: Ring>(
+        base: &B,
+        c: &mut [B::Elem],
+        a: &[B::Elem],
+        b: &[B::Elem],
+        dims: [usize; 3],
+    ) {
+        let [ar, ac, bc] = dims;
+        const KB: usize = 64;
+        let mut k0 = 0;
+        while k0 < ac {
+            let kend = (k0 + KB).min(ac);
+            for i in 0..ar {
+                let crow = &mut c[i * bc..(i + 1) * bc];
+                for k in k0..kend {
+                    let aik = &a[i * ac + k];
+                    if base.is_zero(aik) {
+                        continue;
+                    }
+                    let brow = &b[k * bc..(k + 1) * bc];
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        base.mul_add_assign(cj, aik, bj);
+                    }
+                }
+            }
+            k0 = kend;
+        }
+    }
+
+    fn check<B: Ring>(base: &B, seed: u64) {
+        let mut seeder = Rng64::seeded(seed);
+        for case in 0..8 {
+            let mut rng = seeder.fork();
+            let (ar, ac, bc) =
+                (1 + rng.below_usize(9), 1 + rng.below_usize(70), 1 + rng.below_usize(40));
+            let a: Vec<B::Elem> = (0..ar * ac)
+                .map(|_| {
+                    if rng.below(4) == 0 {
+                        base.zero()
+                    } else {
+                        base.random(&mut rng)
+                    }
+                })
+                .collect();
+            let b: Vec<B::Elem> = (0..ac * bc).map(|_| base.random(&mut rng)).collect();
+            let c0: Vec<B::Elem> = (0..ar * bc).map(|_| base.random(&mut rng)).collect();
+            let mut expect = c0.clone();
+            old_loop(base, &mut expect, &a, &b, [ar, ac, bc]);
+            for bk in available_backends() {
+                let mut got = c0.clone();
+                with_backend(bk, || slice_matmul_acc(base, &mut got, &a, &b, ar, ac, bc));
+                assert_eq!(
+                    got,
+                    expect,
+                    "{} case {case} backend {} {ar}x{ac}x{bc}",
+                    base.name(),
+                    bk.name()
+                );
+            }
+        }
+    }
+    check(&Zq::z2e(64), 13000);
+    check(&Zq::z2e(1), 13001);
+    check(&Zq::new(3, 5), 13002);
+    check(&Zq::new(2147483647, 2), 13003);
+    check(&GaloisRing::new(2, 16, 2), 13004);
+    check(&Extension::new(Zq::z2e(64), 3), 13005);
 }
 
 /// Property: same warm-vs-cold bit-identity for the CSA batch decoder's

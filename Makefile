@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench bench-json bench-serving bench-simd serve-tcp-demo serve-elastic-demo artifacts clean
+.PHONY: build test bench bench-json bench-serving bench-simd serve-tcp-demo serve-elastic-demo serve-prepared-demo artifacts clean
 
 build:
 	cargo build --release
@@ -31,7 +31,9 @@ bench-simd:
 	cargo bench --bench simd_kernels
 
 # Serving throughput only: pipelined multi-job coordinator vs sequential
-# baseline, on both transports (channel + tcp-loopback); writes
+# baseline, on both transports (channel + tcp-loopback), every row also
+# running the prepared (encode-once) pass — one fixed A staged on the
+# workers, B-only per-job upload, in-run encode-once assertions; writes
 # BENCH_serving_throughput.json.
 bench-serving:
 	cargo bench --bench serving_throughput
@@ -80,6 +82,36 @@ serve-elastic-demo: build
 	  --jobs 12 --inflight 4 --speculate \
 	  --connect 127.0.0.1:7851,127.0.0.1:7852,127.0.0.1:7853,127.0.0.1:7854; \
 	echo "[demo] batch completed and verified despite the flap"
+
+# Encode-once (prepared-operand) demo against real daemons: stage A's share
+# halves on 4 TCP workers once, stream B-only jobs — and kill the :7864
+# daemon mid-batch, restarting it a second later. `--speculate` rescues the
+# in-flight shards (speculative copies of prepared jobs ship the full
+# share), auto-reconnect re-dials the daemon, and the master re-stages its
+# A-half on the fresh connection before any further prepared job can reach
+# it — the batch completes, verifies, and the serve's own encode-once
+# assertions (one A-encode, B-only upload) hold throughout. The three
+# stable daemons exit after the serve's three passes (--conns 3); the
+# flapping one runs unbounded and is reaped by the trap.
+serve-prepared-demo: build
+	@set -e; \
+	trap 'kill $$(jobs -p) 2>/dev/null || true' EXIT; \
+	for port in 7861 7862 7863; do \
+	  ./target/release/gr-cdmm worker --listen 127.0.0.1:$$port \
+	    --scheme ep-rmfe-1 --workers 4 --conns 3 & \
+	done; \
+	./target/release/gr-cdmm worker --listen 127.0.0.1:7864 \
+	  --scheme ep-rmfe-1 --workers 4 & \
+	flap=$$!; \
+	( sleep 1; echo "[demo] killing the :7864 daemon mid-batch"; \
+	  kill $$flap 2>/dev/null || true; sleep 1; \
+	  echo "[demo] restarting the :7864 daemon"; \
+	  exec ./target/release/gr-cdmm worker --listen 127.0.0.1:7864 \
+	    --scheme ep-rmfe-1 --workers 4 ) & \
+	./target/release/gr-cdmm serve --scheme ep-rmfe-1 --workers 4 --size 96 \
+	  --jobs 12 --inflight 4 --prepared --speculate \
+	  --connect 127.0.0.1:7861,127.0.0.1:7862,127.0.0.1:7863,127.0.0.1:7864; \
+	echo "[demo] prepared batch completed and verified despite the flap"
 
 # Machine-readable run of the full bench suite (quick settings): refreshes
 # every BENCH_<name>.json at the repo root, including the kernel and

@@ -38,7 +38,11 @@ const INFLIGHT: usize = 4;
 
 type Scheme = EpRmfeI<Zq>;
 
-fn encode_request(scheme: &Scheme, a: &Matrix<u64>, b: &Matrix<u64>) -> anyhow::Result<Vec<Vec<u8>>> {
+fn encode_request(
+    scheme: &Scheme,
+    a: &Matrix<u64>,
+    b: &Matrix<u64>,
+) -> anyhow::Result<Vec<Vec<u8>>> {
     let ring = scheme.share_ring();
     Ok(scheme.encode(a, b)?.iter().map(|s| s.to_bytes(ring)).collect())
 }
@@ -91,7 +95,9 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng64::seeded(23);
     let requests: Vec<(Matrix<u64>, Matrix<u64>)> = (0..REQUESTS)
         .map(|_| {
-            (Matrix::random(&ring, SIZE, SIZE, &mut rng), Matrix::random(&ring, SIZE, SIZE, &mut rng))
+            let a = Matrix::random(&ring, SIZE, SIZE, &mut rng);
+            let b = Matrix::random(&ring, SIZE, SIZE, &mut rng);
+            (a, b)
         })
         .collect();
     let expected: Vec<Matrix<u64>> =

@@ -9,10 +9,19 @@
 //! the responding subsets are drawn from `C(6,4) = 15` possibilities, so 16
 //! decodes guarantee at least one decode-plan cache hit by pigeonhole.
 //!
+//! Every row also runs the **prepared** (encode-once) pass: one fixed `A`
+//! across the stream, its share halves staged on the workers once, each job
+//! shipping only its B-halves. The pass itself asserts the proof
+//! obligations — exactly one A-side encode for the whole stream and per-job
+//! upload equal to the B-halves alone (≈ ½ the full share for square
+//! shapes) — and the prepared-vs-pipelined column prices what encode-once
+//! buys on top of pipelining.
+//!
 //! `cargo bench --bench serving_throughput -- --smoke` runs the seconds-fast
 //! CI subset. Writes `BENCH_serving_throughput.json` (per scheme × size ×
-//! transport: sequential and pipelined jobs/s, speedup, plan-cache hit/miss
-//! counts, verification).
+//! transport: sequential, pipelined and prepared jobs/s, speedups, byte
+//! volumes full-share vs B-only vs staged, plan-cache and prepared-store
+//! counters, verification).
 
 use gr_cdmm::coordinator::StragglerModel;
 use gr_cdmm::experiments::serving::{
@@ -48,6 +57,10 @@ fn main() {
                     transport,
                     speculate: false,
                     elastic: false,
+                    // Every bench scheme has independent operand encodes, so
+                    // every row carries the encode-once pass (and its
+                    // in-run assertions: one A-encode, B-only upload).
+                    prepared: true,
                 };
                 let label = cfg.transport.label();
                 // A failed run must fail the bench (and the CI smoke step),
@@ -73,6 +86,19 @@ fn main() {
             rec.speedup,
             rec.plan_cache_hits,
             rec.plan_cache_hits + rec.plan_cache_misses,
+        );
+        println!(
+            "{}@{} [{}]: prepared {:.2} jobs/s ({:.2}x over pipelined), per-job upload \
+             {} B → {} B (B-halves only), A-halves staged once ({} B), steady A-encodes {}",
+            rec.scheme,
+            rec.size,
+            rec.transport,
+            rec.prep_jobs_per_s,
+            rec.prep_speedup,
+            rec.pipe_upload_bytes / rec.jobs as u64,
+            rec.prep_upload_bytes / rec.jobs as u64,
+            rec.staged_upload_bytes,
+            rec.steady_a_encodes,
         );
     }
     // The headline transport-cost row: pipelined channel vs pipelined TCP

@@ -21,6 +21,7 @@ use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneMatrix;
 use crate::ring::traits::Ring;
 use crate::rmfe::poly_rmfe::PolyRmfe;
 use crate::rmfe::{pack_to_planes, unpack_from_planes, RmfeScheme};
@@ -126,6 +127,43 @@ impl<R: ExtensibleRing> DmmScheme<R> for BatchEpRmfe<R> {
         let packed_a = pack_to_planes(&self.rmfe, a);
         let packed_b = pack_to_planes(&self.rmfe, b);
         self.ep.encode_planes(&packed_a, &packed_b)
+    }
+
+    fn encode_left_batch(
+        &self,
+        a: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(
+            a.len() == self.batch_size(),
+            "batch size must be exactly n = {}",
+            self.batch_size()
+        );
+        let packed_a = pack_to_planes(&self.rmfe, a);
+        self.ep.encode_planes_left(&packed_a)
+    }
+
+    fn encode_right_batch(
+        &self,
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(
+            b.len() == self.batch_size(),
+            "batch size must be exactly n = {}",
+            self.batch_size()
+        );
+        let packed_b = pack_to_planes(&self.rmfe, b);
+        self.ep.encode_planes_right(&packed_b)
+    }
+
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        Some((
+            self.n_workers() * self.ep.a_share_bytes(t, r),
+            self.n_workers() * self.ep.b_share_bytes(r, s),
+        ))
+    }
+
+    fn left_encodes(&self) -> u64 {
+        self.ep.left_encode_count()
     }
 
     fn decode_batch(
@@ -234,6 +272,28 @@ mod tests {
         let r3 = BatchEpRmfe::new(Zq::z2e(64), 32, 3, 2, 1, 2).unwrap().recovery_threshold();
         assert_eq!(r2, 4);
         assert_eq!(r3, 4);
+    }
+
+    #[test]
+    fn split_encode_matches_joint_batch() {
+        let s = BatchEpRmfe::new(Zq::z2e(64), 8, 2, 2, 1, 2).unwrap();
+        let base = s.input_ring().clone();
+        let mut rng = Rng64::seeded(137);
+        let a: Vec<_> = (0..2).map(|_| Matrix::random(&base, 4, 2, &mut rng)).collect();
+        let b: Vec<_> = (0..2).map(|_| Matrix::random(&base, 2, 4, &mut rng)).collect();
+        let joint = s.encode_batch(&a, &b).unwrap();
+        let left = s.encode_left_batch(&a).unwrap();
+        let right = s.encode_right_batch(&b).unwrap();
+        for (i, sh) in joint.iter().enumerate() {
+            assert_eq!(left[i], sh.a, "worker {i} a-half");
+            assert_eq!(right[i], sh.b, "worker {i} b-half");
+        }
+        let (sa, sb) = s.split_upload_bytes(4, 2, 4).unwrap();
+        assert_eq!(sa + sb, s.upload_bytes(4, 2, 4));
+        assert_eq!(s.left_encodes(), 2);
+        // wrong batch sizes are rejected on both halves
+        assert!(s.encode_left_batch(&a[..1]).is_err());
+        assert!(s.encode_right_batch(&b[..1]).is_err());
     }
 
     #[test]

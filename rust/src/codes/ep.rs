@@ -43,6 +43,7 @@ use crate::ring::matrix::Matrix;
 use crate::ring::plane::{PlaneMatrix, PlaneRing, ScalarTable};
 use crate::ring::traits::Ring;
 use crate::util::parallel;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// EP code operating directly over a ring `E` with at least `N` exceptional
@@ -60,6 +61,10 @@ pub struct EpCode<E: PlaneRing> {
     /// Decode plans (Lagrange weight tables) per sorted responding subset;
     /// `Arc` so clones of the code share one warm cache.
     plan_cache: Arc<PlanCache<LagrangeDecodePlan<E>>>,
+    /// A-side encode probe: bumped by every joint encode and every
+    /// left-only encode; `Arc` so clones share it (the serving bench
+    /// asserts the count stays flat across prepared steady-state jobs).
+    left_encodes: Arc<AtomicU64>,
 }
 
 impl<E: PlaneRing> EpCode<E> {
@@ -84,7 +89,13 @@ impl<E: PlaneRing> EpCode<E> {
             points,
             encode_plan,
             plan_cache: Arc::new(PlanCache::new(DEFAULT_PLAN_CACHE_CAP)),
+            left_encodes: Arc::new(AtomicU64::new(0)),
         })
+    }
+
+    /// Cumulative A-side encodes (joint or left-only) since construction.
+    pub fn left_encode_count(&self) -> u64 {
+        self.left_encodes.load(Ordering::Relaxed)
     }
 
     pub fn partition(&self) -> Partition {
@@ -164,6 +175,7 @@ impl<E: PlaneRing> EpCode<E> {
             "share matrices must have {m} planes"
         );
         self.part.check_shapes(a.rows, a.cols, b.cols)?;
+        self.left_encodes.fetch_add(1, Ordering::Relaxed);
         let a_blocks = a.partition_grid(u, w);
         let b_blocks = b.partition_grid(w, v);
         let a_exps = self.a_exponents();
@@ -187,6 +199,60 @@ impl<E: PlaneRing> EpCode<E> {
                 a: Self::eval_sparse_tables(ring, &a_blocks, &a_exps, tables),
                 b: Self::eval_sparse_tables(ring, &b_blocks, &b_exps, tables),
             }
+        }))
+    }
+
+    /// Encode only the A-side halves — one `f(α_i)` per worker,
+    /// bit-identical to the [`Share::a`] halves [`EpCode::encode_planes`]
+    /// produces for the same `a` (the evaluation of `f` never reads `B`).
+    pub fn encode_planes_left(
+        &self,
+        a: &PlaneMatrix<E::Base>,
+    ) -> anyhow::Result<Vec<PlaneMatrix<E::Base>>> {
+        let Partition { u, w, .. } = self.part;
+        let m = self.ring.plane_count();
+        anyhow::ensure!(a.planes == m, "share matrix must have {m} planes");
+        anyhow::ensure!(a.rows % u == 0, "u = {u} must divide t = {}", a.rows);
+        anyhow::ensure!(a.cols % w == 0, "w = {w} must divide r = {}", a.cols);
+        self.left_encodes.fetch_add(1, Ordering::Relaxed);
+        let a_blocks = a.partition_grid(u, w);
+        let a_exps = self.a_exponents();
+        let ring = &self.ring;
+        let plan = &self.encode_plan;
+        let per_share_ops = a_blocks[0].data.len() * a_blocks.len() * m;
+        let threads = parallel::effective_threads(
+            parallel::configured_threads(),
+            self.points.len(),
+            per_share_ops * self.points.len(),
+        );
+        Ok(parallel::par_map(&self.points, threads, |i, _alpha| {
+            Self::eval_sparse_tables(ring, &a_blocks, &a_exps, plan.point(i))
+        }))
+    }
+
+    /// Encode only the B-side halves — one `g(α_i)` per worker,
+    /// bit-identical to the [`Share::b`] halves of the joint encode.
+    pub fn encode_planes_right(
+        &self,
+        b: &PlaneMatrix<E::Base>,
+    ) -> anyhow::Result<Vec<PlaneMatrix<E::Base>>> {
+        let Partition { w, v, .. } = self.part;
+        let m = self.ring.plane_count();
+        anyhow::ensure!(b.planes == m, "share matrix must have {m} planes");
+        anyhow::ensure!(b.rows % w == 0, "w = {w} must divide r = {}", b.rows);
+        anyhow::ensure!(b.cols % v == 0, "v = {v} must divide s = {}", b.cols);
+        let b_blocks = b.partition_grid(w, v);
+        let b_exps = self.b_exponents();
+        let ring = &self.ring;
+        let plan = &self.encode_plan;
+        let per_share_ops = b_blocks[0].data.len() * b_blocks.len() * m;
+        let threads = parallel::effective_threads(
+            parallel::configured_threads(),
+            self.points.len(),
+            per_share_ops * self.points.len(),
+        );
+        Ok(parallel::par_map(&self.points, threads, |i, _alpha| {
+            Self::eval_sparse_tables(ring, &b_blocks, &b_exps, plan.point(i))
         }))
     }
 
@@ -255,11 +321,21 @@ impl<E: PlaneRing> EpCode<E> {
         Ok(PlaneMatrix::stitch_grid(&c_blocks, u, v))
     }
 
+    /// Per-worker byte size of the A-side share half (`f(α_i)`, serialized).
+    pub fn a_share_bytes(&self, t: usize, r: usize) -> usize {
+        let Partition { u, w, .. } = self.part;
+        16 + (t / u) * (r / w) * self.ring.elem_bytes()
+    }
+
+    /// Per-worker byte size of the B-side share half (`g(α_i)`, serialized).
+    pub fn b_share_bytes(&self, r: usize, s: usize) -> usize {
+        let Partition { w, v, .. } = self.part;
+        16 + (r / w) * (s / v) * self.ring.elem_bytes()
+    }
+
     /// Per-worker share byte size for `A: t×r`, `B: r×s`.
     pub fn share_bytes(&self, t: usize, r: usize, s: usize) -> usize {
-        let Partition { u, w, v } = self.part;
-        let eb = self.ring.elem_bytes();
-        (16 + (t / u) * (r / w) * eb) + (16 + (r / w) * (s / v) * eb)
+        self.a_share_bytes(t, r) + self.b_share_bytes(r, s)
     }
 
     /// Per-worker response byte size.
@@ -303,6 +379,33 @@ impl<E: PlaneRing> DmmScheme<E> for EpCode<E> {
         let ap = PlaneMatrix::from_aos(&self.ring, &a[0]);
         let bp = PlaneMatrix::from_aos(&self.ring, &b[0]);
         self.encode_planes(&ap, &bp)
+    }
+
+    fn encode_left_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<E::Base>>> {
+        anyhow::ensure!(a.len() == 1, "EP is a single-product scheme");
+        self.encode_planes_left(&PlaneMatrix::from_aos(&self.ring, &a[0]))
+    }
+
+    fn encode_right_batch(
+        &self,
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<E::Base>>> {
+        anyhow::ensure!(b.len() == 1, "EP is a single-product scheme");
+        self.encode_planes_right(&PlaneMatrix::from_aos(&self.ring, &b[0]))
+    }
+
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        Some((
+            self.n_workers * self.a_share_bytes(t, r),
+            self.n_workers * self.b_share_bytes(r, s),
+        ))
+    }
+
+    fn left_encodes(&self) -> u64 {
+        self.left_encode_count()
     }
 
     fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
@@ -352,7 +455,14 @@ impl<R: ExtensibleRing> PlainEp<R> {
 
     /// Override the extension degree (e.g. to match another scheme's ring
     /// for an apples-to-apples comparison).
-    pub fn with_m(base: R, m: usize, n_workers: usize, u: usize, w: usize, v: usize) -> anyhow::Result<Self> {
+    pub fn with_m(
+        base: R,
+        m: usize,
+        n_workers: usize,
+        u: usize,
+        w: usize,
+        v: usize,
+    ) -> anyhow::Result<Self> {
         let ext = Extension::new(base.clone(), m);
         let ep = EpCode::new(ext, n_workers, u, w, v)?;
         Ok(PlainEp { base, ep })
@@ -396,6 +506,35 @@ impl<R: ExtensibleRing> DmmScheme<R> for PlainEp<R> {
         let ae = PlaneMatrix::from_base_matrix(ext, &a[0]);
         let be = PlaneMatrix::from_base_matrix(ext, &b[0]);
         self.ep.encode_planes(&ae, &be)
+    }
+
+    fn encode_left_batch(
+        &self,
+        a: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(a.len() == 1, "PlainEP is a single-product scheme");
+        let ae = PlaneMatrix::from_base_matrix(&self.ep.ring, &a[0]);
+        self.ep.encode_planes_left(&ae)
+    }
+
+    fn encode_right_batch(
+        &self,
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(b.len() == 1, "PlainEP is a single-product scheme");
+        let be = PlaneMatrix::from_base_matrix(&self.ep.ring, &b[0]);
+        self.ep.encode_planes_right(&be)
+    }
+
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        Some((
+            self.ep.n_workers * self.ep.a_share_bytes(t, r),
+            self.ep.n_workers * self.ep.b_share_bytes(r, s),
+        ))
+    }
+
+    fn left_encodes(&self) -> u64 {
+        self.ep.left_encode_count()
     }
 
     fn decode_batch(
@@ -487,7 +626,9 @@ mod tests {
 
     #[test]
     fn ep_various_partitions() {
-        for (u, w, v, n) in [(1, 1, 1, 1), (2, 1, 1, 3), (1, 3, 1, 8), (2, 2, 1, 6), (1, 1, 4, 4), (2, 2, 2, 11)] {
+        let shapes =
+            [(1, 1, 1, 1), (2, 1, 1, 3), (1, 3, 1, 8), (2, 2, 1, 6), (1, 1, 4, 4), (2, 2, 2, 11)];
+        for (u, w, v, n) in shapes {
             let ep = EpCode::new(ext_ring(4), n, u, w, v).unwrap();
             roundtrip(&ep, u * 2, w * 3, v * 2, 200 + (u * 100 + w * 10 + v) as u64);
         }
@@ -616,6 +757,57 @@ mod tests {
             resp.byte_len(ring) * plain.recovery_threshold(),
             plain.download_bytes(t, r, s)
         );
+    }
+
+    #[test]
+    fn split_encode_matches_joint_halves_bytes_and_counter() {
+        let ep = EpCode::new(ext_ring(3), 8, 2, 1, 2).unwrap();
+        let ring = ep.share_ring().clone();
+        let mut rng = Rng64::seeded(111);
+        let a = Matrix::random(&ring, 4, 2, &mut rng);
+        let b = Matrix::random(&ring, 2, 4, &mut rng);
+        let ap = PlaneMatrix::from_aos(&ring, &a);
+        let bp = PlaneMatrix::from_aos(&ring, &b);
+        assert_eq!(ep.left_encode_count(), 0);
+        let joint = ep.encode_planes(&ap, &bp).unwrap();
+        assert_eq!(ep.left_encode_count(), 1, "joint encode counts as an A-encode");
+        let left = ep.encode_planes_left(&ap).unwrap();
+        let right = ep.encode_planes_right(&bp).unwrap();
+        assert_eq!(ep.left_encode_count(), 2, "right-only encode must not count");
+        for (i, s) in joint.iter().enumerate() {
+            assert_eq!(left[i], s.a, "worker {i} a-half");
+            assert_eq!(right[i], s.b, "worker {i} b-half");
+        }
+        // staged A-bytes ++ per-job B-bytes reassemble the full share
+        // payload byte for byte — the property worker-side staging relies
+        // on.
+        let mut stitched = left[0].to_bytes(&ring);
+        stitched.extend_from_slice(&right[0].to_bytes(&ring));
+        assert_eq!(stitched, joint[0].to_bytes(&ring));
+        // analytic split accounting matches both the wire and the joint sum
+        let (sa, sb) = DmmScheme::split_upload_bytes(&ep, 4, 2, 4).unwrap();
+        assert_eq!(sa + sb, ep.upload_bytes(4, 2, 4));
+        assert_eq!(sa, 8 * left[0].to_bytes(&ring).len());
+        assert_eq!(sb, 8 * right[0].to_bytes(&ring).len());
+    }
+
+    #[test]
+    fn plain_ep_split_encode_matches_joint() {
+        let base = Zq::z2e(64);
+        let plain = PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap();
+        let mut rng = Rng64::seeded(112);
+        let a = Matrix::random(&base, 4, 4, &mut rng);
+        let b = Matrix::random(&base, 4, 4, &mut rng);
+        let joint = plain.encode(&a, &b).unwrap();
+        let left = plain.encode_left(&a).unwrap();
+        let right = plain.encode_right(&b).unwrap();
+        for (i, s) in joint.iter().enumerate() {
+            assert_eq!(left[i], s.a, "worker {i} a-half");
+            assert_eq!(right[i], s.b, "worker {i} b-half");
+        }
+        let (sa, sb) = DmmScheme::split_upload_bytes(&plain, 4, 4, 4).unwrap();
+        assert_eq!(sa + sb, plain.upload_bytes(4, 4, 4));
+        assert_eq!(DmmScheme::left_encodes(&plain), 2);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use super::scheme::{DmmScheme, Response, Share};
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
+use crate::ring::plane::PlaneMatrix;
 
 /// Single-DMM scheme: MatDot-split → Batch-EP_RMFE → sum.
 #[derive(Clone)]
@@ -96,6 +97,38 @@ impl<R: ExtensibleRing> DmmScheme<R> for EpRmfeI<R> {
         let a_parts = a.partition_grid(1, n); // A = (A_1 … A_n)
         let b_parts = b.partition_grid(n, 1); // B = (B_1; …; B_n)
         self.batch.encode_batch(&a_parts, &b_parts)
+    }
+
+    fn encode_left_batch(
+        &self,
+        a: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(a.len() == 1, "EP_RMFE-I is a single-product scheme");
+        let a = &a[0];
+        let n = self.n_split;
+        anyhow::ensure!(a.cols % n == 0, "split n = {n} must divide r = {}", a.cols);
+        let a_parts = a.partition_grid(1, n);
+        self.batch.encode_left_batch(&a_parts)
+    }
+
+    fn encode_right_batch(
+        &self,
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(b.len() == 1, "EP_RMFE-I is a single-product scheme");
+        let b = &b[0];
+        let n = self.n_split;
+        anyhow::ensure!(b.rows % n == 0, "split n = {n} must divide r = {}", b.rows);
+        let b_parts = b.partition_grid(n, 1);
+        self.batch.encode_right_batch(&b_parts)
+    }
+
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        self.batch.split_upload_bytes(t, r / self.n_split, s)
+    }
+
+    fn left_encodes(&self) -> u64 {
+        self.batch.left_encodes()
     }
 
     fn decode_batch(
@@ -182,6 +215,25 @@ mod tests {
         assert!((ratio - 0.5).abs() < 0.01, "ratio {ratio}");
         // download unchanged
         assert_eq!(rmfe1.download_bytes(t, r, s), plain.download_bytes(t, r, s));
+    }
+
+    #[test]
+    fn split_encode_matches_joint() {
+        let s = EpRmfeI::new(Zq::z2e(64), 8, 2, 1, 2, 2).unwrap();
+        let base = s.input_ring().clone();
+        let mut rng = Rng64::seeded(155);
+        let a = Matrix::random(&base, 4, 4, &mut rng);
+        let b = Matrix::random(&base, 4, 4, &mut rng);
+        let joint = s.encode(&a, &b).unwrap();
+        let left = s.encode_left(&a).unwrap();
+        let right = s.encode_right(&b).unwrap();
+        for (i, sh) in joint.iter().enumerate() {
+            assert_eq!(left[i], sh.a, "worker {i} a-half");
+            assert_eq!(right[i], sh.b, "worker {i} b-half");
+        }
+        let (sa, sb) = s.split_upload_bytes(4, 4, 4).unwrap();
+        assert_eq!(sa + sb, s.upload_bytes(4, 4, 4));
+        assert_eq!(s.left_encodes(), 2);
     }
 
     #[test]

@@ -151,6 +151,40 @@ impl<R: ExtensibleRing> DmmScheme<R> for EpRmfeII<R> {
         self.ep.encode_planes(&packed_a, &packed_b)
     }
 
+    fn encode_left_batch(
+        &self,
+        a: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(a.len() == 1, "EP_RMFE-II is a single-product scheme");
+        let packed_a = PlaneMatrix::from_base_matrix(self.rmfe.ext(), &a[0]);
+        self.ep.encode_planes_left(&packed_a)
+    }
+
+    fn encode_right_batch(
+        &self,
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<R>>> {
+        anyhow::ensure!(b.len() == 1, "EP_RMFE-II is a single-product scheme");
+        let b = &b[0];
+        let n = self.n_split;
+        anyhow::ensure!(b.cols % n == 0, "split n = {n} must divide s = {}", b.cols);
+        let b_parts = b.partition_grid(1, n);
+        let packed_b = pack_to_planes(&self.rmfe, &b_parts);
+        self.ep.encode_planes_right(&packed_b)
+    }
+
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        // A is kept whole (full t×r); only B is split into n column stripes.
+        Some((
+            self.n_workers() * self.ep.a_share_bytes(t, r),
+            self.n_workers() * self.ep.b_share_bytes(r, s / self.n_split),
+        ))
+    }
+
+    fn left_encodes(&self) -> u64 {
+        self.ep.left_encode_count()
+    }
+
     fn decode_batch(
         &self,
         responses: &[Response<Extension<R>>],
@@ -227,6 +261,25 @@ mod tests {
         let up_rmfe2 = rmfe2.upload_bytes(t, r, s);
         let up_plain = plain.upload_bytes(t, r, s);
         assert!(up_rmfe2 < up_plain && up_rmfe2 > up_plain / 2, "upload in between");
+    }
+
+    #[test]
+    fn split_encode_matches_joint() {
+        let s = EpRmfeII::new(Zq::z2e(64), 8, 2, 1, 2, 2).unwrap();
+        let base = s.input_ring().clone();
+        let mut rng = Rng64::seeded(164);
+        let a = Matrix::random(&base, 4, 4, &mut rng);
+        let b = Matrix::random(&base, 4, 8, &mut rng);
+        let joint = s.encode(&a, &b).unwrap();
+        let left = s.encode_left(&a).unwrap();
+        let right = s.encode_right(&b).unwrap();
+        for (i, sh) in joint.iter().enumerate() {
+            assert_eq!(left[i], sh.a, "worker {i} a-half");
+            assert_eq!(right[i], sh.b, "worker {i} b-half");
+        }
+        let (sa, sb) = s.split_upload_bytes(4, 4, 8).unwrap();
+        assert_eq!(sa + sb, s.upload_bytes(4, 4, 8));
+        assert_eq!(s.left_encodes(), 2);
     }
 
     #[test]

@@ -56,6 +56,24 @@ impl<E: PlaneRing> DmmScheme<E> for MatDotCode<E> {
     ) -> anyhow::Result<Vec<Share<E>>> {
         self.inner.encode_batch(a, b)
     }
+    fn encode_left_batch(
+        &self,
+        a: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<crate::ring::plane::PlaneMatrix<E::Base>>> {
+        self.inner.encode_left_batch(a)
+    }
+    fn encode_right_batch(
+        &self,
+        b: &[Matrix<E::Elem>],
+    ) -> anyhow::Result<Vec<crate::ring::plane::PlaneMatrix<E::Base>>> {
+        self.inner.encode_right_batch(b)
+    }
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        self.inner.split_upload_bytes(t, r, s)
+    }
+    fn left_encodes(&self) -> u64 {
+        self.inner.left_encode_count()
+    }
     fn decode_batch(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<Matrix<E::Elem>>> {
         self.inner.decode_batch(responses)
     }
@@ -97,6 +115,25 @@ mod tests {
             .map(|i| (i, md.worker_compute(&shares[i]).unwrap()))
             .collect();
         assert_eq!(md.decode(&responses).unwrap(), Matrix::matmul(&ring, &a, &b));
+    }
+
+    #[test]
+    fn split_encode_matches_joint() {
+        let ring = Extension::new(Zq::z2e(64), 3);
+        let md = MatDotCode::new(ring.clone(), 8, 3).unwrap();
+        let mut rng = Rng64::seeded(123);
+        let a = Matrix::random(&ring, 3, 6, &mut rng);
+        let b = Matrix::random(&ring, 6, 3, &mut rng);
+        let joint = md.encode(&a, &b).unwrap();
+        let left = md.encode_left(&a).unwrap();
+        let right = md.encode_right(&b).unwrap();
+        for (i, s) in joint.iter().enumerate() {
+            assert_eq!(left[i], s.a, "worker {i} a-half");
+            assert_eq!(right[i], s.b, "worker {i} b-half");
+        }
+        let (sa, sb) = md.split_upload_bytes(3, 6, 3).unwrap();
+        assert_eq!(sa + sb, md.upload_bytes(3, 6, 3));
+        assert_eq!(md.left_encodes(), 2);
     }
 
     #[test]

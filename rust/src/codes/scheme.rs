@@ -117,6 +117,52 @@ pub trait DmmScheme<R: Ring>: Send + Sync {
         b: &[Matrix<R::Elem>],
     ) -> anyhow::Result<Vec<Share<Self::ShareRing>>>;
 
+    /// Encode only the **left** operand batch: the [`Share::a`] half of each
+    /// worker's share, bit-identical to what [`DmmScheme::encode_batch`]
+    /// would have produced for the same `a` (the encoding of `A` is a fixed
+    /// linear map per worker, independent of `B`). This is the
+    /// encode-once half of prepared-operand serving: stage these halves on
+    /// the workers, then ship only [`DmmScheme::encode_right_batch`] per job.
+    ///
+    /// Default: unsupported — schemes whose encodes entangle the two
+    /// operands keep working through the joint path.
+    fn encode_left_batch(
+        &self,
+        a: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<<Self::ShareRing as PlaneRing>::Base>>> {
+        let _ = a;
+        anyhow::bail!("{} cannot encode its left operand independently", self.name())
+    }
+
+    /// Encode only the **right** operand batch: the [`Share::b`] half of
+    /// each worker's share. See [`DmmScheme::encode_left_batch`].
+    fn encode_right_batch(
+        &self,
+        b: &[Matrix<R::Elem>],
+    ) -> anyhow::Result<Vec<PlaneMatrix<<Self::ShareRing as PlaneRing>::Base>>> {
+        let _ = b;
+        anyhow::bail!("{} cannot encode its right operand independently", self.name())
+    }
+
+    /// Split of [`DmmScheme::upload_bytes`] into `(a_side, b_side)` totals
+    /// across all `N` workers — the analytic accounting for the prepared
+    /// path, where the `a_side` is staged once and only the `b_side` ships
+    /// per job. `None` when the scheme has no independent split; when
+    /// `Some`, the two halves sum exactly to `upload_bytes(t, r, s)`.
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        let _ = (t, r, s);
+        None
+    }
+
+    /// Cumulative count of A-side encodes performed by this scheme instance
+    /// (joint encodes count too — they encode `A`). The prepared-operand
+    /// serving bench asserts this stays flat across steady-state jobs, in
+    /// the style of the `scalar_table_builds()` probe. Schemes without the
+    /// split path report 0.
+    fn left_encodes(&self) -> u64 {
+        0
+    }
+
     /// The worker-node computation: a share-ring matrix product on flat
     /// plane-major storage — the base ring's contiguous ikj kernel plane by
     /// plane plus one modulus reduction, no per-element heap traffic. Runs
@@ -183,6 +229,34 @@ pub trait DmmScheme<R: Ring>: Send + Sync {
         anyhow::ensure!(out.len() == 1, "single-product decode returned {} matrices", out.len());
         Ok(out.pop().expect("length checked above"))
     }
+
+    /// Single-product left encode (`batch_size() == 1` schemes only).
+    fn encode_left(
+        &self,
+        a: &Matrix<R::Elem>,
+    ) -> anyhow::Result<Vec<PlaneMatrix<<Self::ShareRing as PlaneRing>::Base>>> {
+        anyhow::ensure!(
+            self.batch_size() == 1,
+            "{} is a batch scheme (n = {}); use encode_left_batch",
+            self.name(),
+            self.batch_size()
+        );
+        self.encode_left_batch(std::slice::from_ref(a))
+    }
+
+    /// Single-product right encode (`batch_size() == 1` schemes only).
+    fn encode_right(
+        &self,
+        b: &Matrix<R::Elem>,
+    ) -> anyhow::Result<Vec<PlaneMatrix<<Self::ShareRing as PlaneRing>::Base>>> {
+        anyhow::ensure!(
+            self.batch_size() == 1,
+            "{} is a batch scheme (n = {}); use encode_right_batch",
+            self.name(),
+            self.batch_size()
+        );
+        self.encode_right_batch(std::slice::from_ref(b))
+    }
 }
 
 /// Object-safe erased scheme facade: **byte payloads in, byte payloads out**.
@@ -205,6 +279,39 @@ pub trait DynScheme: Send + Sync {
     /// Encode a batch of serialized input matrices into one share payload
     /// per worker.
     fn encode_bytes(&self, a: &[Vec<u8>], b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>>;
+
+    /// Encode only the left operand batch into one serialized
+    /// [`PlaneMatrix`] per worker — the leading bytes of that worker's full
+    /// share payload. Concatenating a worker's left half with its
+    /// [`DynScheme::encode_right_bytes`] half reproduces the
+    /// [`DynScheme::encode_bytes`] payload byte for byte (a [`Share`]
+    /// serializes as `a` then `b`), which is what lets staged workers
+    /// reassemble shares without any scheme knowledge. Default:
+    /// unsupported.
+    fn encode_left_bytes(&self, a: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+        let _ = a;
+        anyhow::bail!("{} cannot encode its left operand independently", self.name())
+    }
+
+    /// Encode only the right operand batch into one serialized
+    /// [`PlaneMatrix`] per worker — the trailing bytes of that worker's
+    /// full share payload. See [`DynScheme::encode_left_bytes`].
+    fn encode_right_bytes(&self, b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+        let _ = b;
+        anyhow::bail!("{} cannot encode its right operand independently", self.name())
+    }
+
+    /// `(a_side, b_side)` split of [`DynScheme::upload_bytes`], or `None`
+    /// when the scheme has no independent operand encode.
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        let _ = (t, r, s);
+        None
+    }
+
+    /// Cumulative A-side encode count (see [`DmmScheme::left_encodes`]).
+    fn left_encodes(&self) -> u64 {
+        0
+    }
 
     /// Worker computation on a serialized share payload.
     fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<Vec<u8>>;
@@ -265,6 +372,36 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
         let shares = self.scheme.encode_batch(&am, &bm)?;
         let sr = self.scheme.share_ring();
         Ok(shares.iter().map(|s| s.to_bytes(sr)).collect())
+    }
+
+    fn encode_left_bytes(&self, a: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+        let ring = self.scheme.input_ring();
+        let am: Vec<Matrix<R::Elem>> = a
+            .iter()
+            .map(|buf| Matrix::from_bytes(ring, buf))
+            .collect::<anyhow::Result<_>>()?;
+        let halves = self.scheme.encode_left_batch(&am)?;
+        let sr = self.scheme.share_ring();
+        Ok(halves.iter().map(|p| p.to_bytes(sr)).collect())
+    }
+
+    fn encode_right_bytes(&self, b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+        let ring = self.scheme.input_ring();
+        let bm: Vec<Matrix<R::Elem>> = b
+            .iter()
+            .map(|buf| Matrix::from_bytes(ring, buf))
+            .collect::<anyhow::Result<_>>()?;
+        let halves = self.scheme.encode_right_batch(&bm)?;
+        let sr = self.scheme.share_ring();
+        Ok(halves.iter().map(|p| p.to_bytes(sr)).collect())
+    }
+
+    fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
+        self.scheme.split_upload_bytes(t, r, s)
+    }
+
+    fn left_encodes(&self) -> u64 {
+        self.scheme.left_encodes()
     }
 
     fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<Vec<u8>> {

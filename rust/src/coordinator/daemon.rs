@@ -25,13 +25,23 @@
 //! answered with pongs; a shutdown frame is acknowledged with a goodbye
 //! before the connection closes.
 //!
+//! **Prepared operands** (wire v3): a stage frame stores a serialized
+//! A-side share half under its `prepared_id` (acknowledged with a
+//! stage-ack echoing the machine id), an evict frame drops it, and a job
+//! frame tagged with a prepared id is computed on the staged bytes
+//! prepended to the job payload — byte-for-byte the full share an
+//! unprepared job would carry. Staged state is **per connection**: a
+//! reconnecting master starts blank and re-stages, so prepared jobs can
+//! never silently read stale bytes; a prepared job naming an unknown id is
+//! fail-stopped (byte-free response), same as any other dropped job.
+//!
 //! A malformed peer (garbage bytes, truncated frames, oversized declared
 //! payloads) errors the *connection*, never the daemon: the error is
 //! logged and the daemon accepts the next connection.
 
 use super::straggler::StragglerModel;
 use super::wire::{self, Frame, FrameKind};
-use super::worker::{process_job, worker_rng, ShareCompute};
+use super::worker::{assemble_prepared, process_job, worker_rng, ShareCompute};
 use crate::util::rng::Rng64;
 use std::collections::HashMap;
 use std::io::BufReader;
@@ -74,6 +84,11 @@ fn serve_conn(
     // addresses one daemon as one machine, so this map has a single entry
     // in practice; keying by id keeps the draws right even if it doesn't.
     let mut rngs: HashMap<usize, Rng64> = HashMap::new();
+    // Staged prepared operands, **per connection**: a reconnecting master
+    // starts from a blank slate and must re-stage (which its prepared store
+    // does automatically), so stale staged bytes can never leak across
+    // coordinator sessions.
+    let mut staged: HashMap<u64, Vec<u8>> = HashMap::new();
     loop {
         let Some(frame) = wire::read_frame(&mut reader)? else {
             return Ok(()); // coordinator hung up
@@ -105,6 +120,20 @@ fn serve_conn(
                     &Frame::pong(frame.job_id, identity.unwrap_or(0)),
                 )?;
             }
+            FrameKind::Stage => {
+                staged.insert(frame.job_id, frame.payload);
+                // Confirm, echoing the assigned machine id so the master
+                // can verify it staged onto the peer it meant to.
+                wire::write_frame(
+                    &mut writer,
+                    &Frame::stage_ack(frame.job_id, identity.unwrap_or(0)),
+                )?;
+            }
+            FrameKind::Evict => {
+                // Unknown ids are a no-op: an evict may race a reconnect
+                // that already wiped this connection's staged state.
+                staged.remove(&frame.job_id);
+            }
             FrameKind::Job => {
                 anyhow::ensure!(
                     frame.worker_id < MAX_WORKER_ID,
@@ -113,12 +142,36 @@ fn serve_conn(
                 );
                 let shard = usize::try_from(frame.worker_id)?;
                 let machine = identity.unwrap_or(shard);
+                let full;
+                let payload: &[u8] = match frame.job_prepared_id() {
+                    None => &frame.payload,
+                    Some(id) => match staged.get(&id) {
+                        Some(a_half) => {
+                            full = assemble_prepared(a_half, &frame.payload);
+                            &full
+                        }
+                        None => {
+                            // A prepared job naming an operand this
+                            // connection was never staged with (e.g. the
+                            // job raced a reconnect before the master's
+                            // re-stage): fail-stop the shard, byte-free.
+                            wire::write_frame(
+                                &mut writer,
+                                &Frame::from_report(super::transport::fail_report(
+                                    frame.job_id,
+                                    shard,
+                                )),
+                            )?;
+                            continue;
+                        }
+                    },
+                };
                 let rng = rngs.entry(machine).or_insert_with(|| worker_rng(cfg.seed, machine));
                 let report = process_job(
                     machine,
                     shard,
                     frame.job_id,
-                    &frame.payload,
+                    payload,
                     compute,
                     &cfg.straggler,
                     rng,
@@ -291,6 +344,54 @@ mod tests {
         wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
         let bye = wire::read_frame(&mut reader).unwrap().expect("goodbye");
         assert_eq!((bye.kind, bye.worker_id), (FrameKind::Goodbye, 2));
+        daemon.join().unwrap();
+    }
+
+    #[test]
+    fn daemon_stages_prepends_and_forgets_across_connections() {
+        let daemon =
+            WorkerDaemon::spawn_local(Arc::new(Echo), StragglerModel::None, 1, 2).unwrap();
+        {
+            let stream = TcpStream::connect(daemon.addr()).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            wire::write_frame(&mut writer, &Frame::hello(1)).unwrap();
+            let _ = wire::read_frame(&mut reader).unwrap().expect("hello echo");
+
+            // Stage operand 7; the ack echoes the id and the machine id.
+            wire::write_frame(&mut writer, &Frame::stage(7, vec![0xA, 0xB])).unwrap();
+            let ack = wire::read_frame(&mut reader).unwrap().expect("stage ack");
+            assert_eq!((ack.kind, ack.job_id, ack.worker_id), (FrameKind::StageAck, 7, 1));
+
+            // A prepared job ships only the B-half; the echo proves the
+            // daemon computed on staged ++ payload.
+            wire::write_job_frame(&mut writer, 4, 0, Some(7), &[0xC, 0xD]).unwrap();
+            let resp = wire::read_frame(&mut reader).unwrap().expect("echo");
+            assert_eq!(resp.kind, FrameKind::RespOk);
+            assert_eq!(resp.payload, vec![0xA, 0xB, 0xC, 0xD]);
+
+            // An unknown prepared id fail-stops the shard, byte-free.
+            wire::write_job_frame(&mut writer, 5, 0, Some(99), &[0xC]).unwrap();
+            let resp = wire::read_frame(&mut reader).unwrap().expect("fail report");
+            assert_eq!((resp.kind, resp.job_id, resp.worker_id), (FrameKind::RespFail, 5, 0));
+            assert!(resp.payload.is_empty());
+
+            // Evicting makes the id unknown again.
+            wire::write_frame(&mut writer, &Frame::evict(7)).unwrap();
+            wire::write_job_frame(&mut writer, 6, 0, Some(7), &[0xC]).unwrap();
+            let resp = wire::read_frame(&mut reader).unwrap().expect("fail report");
+            assert_eq!(resp.kind, FrameKind::RespFail);
+            wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
+        }
+        // A fresh connection has no staged state: prepared jobs referencing
+        // the old connection's operands fail-stop until re-staged.
+        let stream = TcpStream::connect(daemon.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        wire::write_job_frame(&mut writer, 9, 0, Some(7), &[0xC]).unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap().expect("fail report");
+        assert_eq!(resp.kind, FrameKind::RespFail);
+        wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
         daemon.join().unwrap();
     }
 

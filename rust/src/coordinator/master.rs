@@ -50,12 +50,13 @@
 //! is `submit(..)?.wait()`.
 
 use super::pool::{ElasticConfig, PingAction, PoolState, WorkerHealth, WorkerSnapshot};
+use super::prepared::{PreparedStore, DEFAULT_PREPARED_CAP};
 use super::straggler::StragglerModel;
 use super::tcp::TcpTransport;
 use super::transport::{
     fail_report, ByteCounters, ChannelTransport, FromWorker, ToWorker, Transport,
 };
-use super::worker::ShareCompute;
+use super::worker::{assemble_prepared, ShareCompute};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -122,8 +123,14 @@ struct JobEntry {
     outstanding: usize,
     shards: Vec<ShardState>,
     /// Retained payloads for speculative re-dispatch; dropped per shard as
-    /// soon as the shard is resolved.
+    /// soon as the shard is resolved. For a prepared job these are only the
+    /// B-halves — a speculative copy re-assembles the full share from the
+    /// prepared store.
     payloads: Vec<Option<Arc<Vec<u8>>>>,
+    /// The prepared operand this job references, if any. A spare machine
+    /// has its *own* A-half staged, not this shard's, so speculative copies
+    /// of a prepared job ship the re-assembled full share instead.
+    prepared: Option<u64>,
 }
 
 type JobTable = Arc<Mutex<HashMap<u64, JobEntry>>>;
@@ -227,6 +234,7 @@ struct MonitorShared {
     pool: PoolState,
     aggregate: ByteCounters,
     elastic: Arc<Mutex<ElasticConfig>>,
+    prepared: PreparedStore,
     stop: Arc<AtomicBool>,
 }
 
@@ -266,8 +274,33 @@ fn health_pass(
                 last_redial.insert(w, Instant::now());
                 if t.reconnect_worker(w, None).is_ok() {
                     shared.pool.set_health(w, WorkerHealth::Live);
+                    // Re-stage every prepared operand before any job can be
+                    // routed to the revived link (the transport lock is
+                    // held across reconnect + re-stage, so a prepared job
+                    // can never slip in between).
+                    restage_worker(t.as_mut(), w, &shared.prepared, &shared.aggregate);
                 }
             }
+        }
+    }
+}
+
+/// Push every live prepared operand's `worker_id`-th A-half onto a freshly
+/// (re)connected link, crediting the bytes to the aggregate staged-upload
+/// counter. Workers beyond an operand's share count (pool grown since it
+/// was prepared) are skipped — no half exists for them. Call with the
+/// transport lock held.
+fn restage_worker(
+    t: &mut dyn Transport,
+    worker_id: usize,
+    prepared: &PreparedStore,
+    aggregate: &ByteCounters,
+) {
+    for (id, shares) in prepared.entries() {
+        let Some(half) = shares.get(worker_id) else { continue };
+        let msg = ToWorker::Stage { prepared_id: id, payload: Arc::clone(half) };
+        if let Ok(sent) = t.send(worker_id, msg) {
+            aggregate.add_staged_upload(sent);
         }
     }
 }
@@ -304,8 +337,23 @@ fn plan_speculation(shared: &MonitorShared, cfg: &ElasticConfig) -> Vec<SpecDisp
             };
             match spare {
                 Some(target) => {
-                    let Some(payload) = entry.payloads[shard_id].clone() else {
+                    let Some(retained) = entry.payloads[shard_id].clone() else {
                         continue;
+                    };
+                    // A prepared job's retained payload is only the B-half,
+                    // and the spare has *its own* A-half staged, not this
+                    // shard's — so a speculative copy ships the full share,
+                    // re-assembled from the prepared store. If the operand
+                    // was evicted since submit, no retry is possible.
+                    let payload = match entry.prepared {
+                        None => retained,
+                        Some(pid) => match shared.prepared.peek(pid) {
+                            Some(halves) => Arc::new(assemble_prepared(
+                                &halves[shard_id],
+                                &retained,
+                            )),
+                            None => continue,
+                        },
                     };
                     let s = &mut entry.shards[shard_id];
                     s.in_flight += 1;
@@ -356,7 +404,14 @@ fn execute_dispatches(shared: &MonitorShared, dispatches: Vec<SpecDispatch>) {
     }
     let mut t = shared.transport.lock().unwrap();
     for d in dispatches {
-        let msg = ToWorker::Job { job_id: d.job_id, shard: d.shard, payload: d.payload };
+        // Speculative copies always carry the full share (prepared jobs
+        // were re-assembled at planning time), so `prepared` is None.
+        let msg = ToWorker::Job {
+            job_id: d.job_id,
+            shard: d.shard,
+            prepared: None,
+            payload: d.payload,
+        };
         match t.send(d.target, msg) {
             Ok(sent) => {
                 d.counters.add_upload(sent);
@@ -556,6 +611,7 @@ pub struct Coordinator {
     pool: PoolState,
     elastic: Arc<Mutex<ElasticConfig>>,
     aggregate: ByteCounters,
+    prepared: PreparedStore,
     next_job: u64,
     open: bool,
     /// Default per-job deadline, captured by [`Coordinator::submit`].
@@ -593,6 +649,7 @@ impl Coordinator {
         let aggregate = ByteCounters::new();
         let pool = PoolState::new(n_workers);
         let elastic = Arc::new(Mutex::new(ElasticConfig::default()));
+        let prepared = PreparedStore::new(DEFAULT_PREPARED_CAP);
         let stop = Arc::new(AtomicBool::new(false));
         let router = spawn_router(
             rx,
@@ -607,6 +664,7 @@ impl Coordinator {
             pool: pool.clone(),
             aggregate: aggregate.clone(),
             elastic: Arc::clone(&elastic),
+            prepared: prepared.clone(),
             stop: Arc::clone(&stop),
         });
         Coordinator {
@@ -618,6 +676,7 @@ impl Coordinator {
             pool,
             elastic,
             aggregate,
+            prepared,
             next_job: 0,
             open: true,
             timeout: Duration::from_secs(120),
@@ -672,18 +731,26 @@ impl Coordinator {
     }
 
     /// Bring a worker's link back up (TCP re-dials, optionally at a new
-    /// endpoint; the channel transport revives the worker in place).
+    /// endpoint; the channel transport revives the worker in place), then
+    /// re-stage every prepared operand onto it before releasing the
+    /// transport — a prepared job can never reach a revived worker ahead
+    /// of its staged A-half.
     pub fn reconnect_worker(
         &mut self,
         worker_id: usize,
         endpoint: Option<&str>,
     ) -> anyhow::Result<()> {
-        self.transport.lock().unwrap().reconnect_worker(worker_id, endpoint)?;
+        let mut t = self.transport.lock().unwrap();
+        t.reconnect_worker(worker_id, endpoint)?;
+        restage_worker(t.as_mut(), worker_id, &self.prepared, &self.aggregate);
+        drop(t);
         self.pool.set_health(worker_id, WorkerHealth::Live);
         Ok(())
     }
 
-    /// Grow the pool by one worker mid-run; returns its id.
+    /// Grow the pool by one worker mid-run; returns its id. Existing
+    /// prepared operands have no A-half for the new slot (they were encoded
+    /// for the old pool size), so nothing is staged on it.
     pub fn add_worker(&mut self, endpoint: Option<&str>) -> anyhow::Result<usize> {
         let worker_id = self.transport.lock().unwrap().add_worker(endpoint)?;
         self.pool.ensure_len(worker_id + 1);
@@ -719,6 +786,114 @@ impl Coordinator {
     /// [`SchemeConfig::for_live_workers`]:
     ///     crate::codes::registry::SchemeConfig::for_live_workers
     pub fn submit(&mut self, payloads: Vec<Vec<u8>>, need: usize) -> anyhow::Result<JobHandle> {
+        self.submit_with(payloads, need, None)
+    }
+
+    /// Encode-once serving, step 1: register `a_shares` (worker `i`'s
+    /// serialized A-side share half is `a_shares[i]`, from
+    /// [`DynScheme::encode_left_bytes`]) as a **prepared operand**, staging
+    /// each half on its worker. Returns the operand's id for
+    /// [`Coordinator::submit_prepared`]. The staged bytes are credited to
+    /// the aggregate [`ByteCounters::staged_upload_total`] — not to any
+    /// job's upload — and are re-pushed automatically whenever a worker
+    /// link is re-established. The store is bounded
+    /// ([`DEFAULT_PREPARED_CAP`]): registering past capacity evicts the
+    /// least-recently-used operand master- and worker-side.
+    ///
+    /// [`DynScheme::encode_left_bytes`]:
+    ///     crate::codes::DynScheme::encode_left_bytes
+    pub fn prepare(&mut self, a_shares: Vec<Vec<u8>>) -> anyhow::Result<u64> {
+        anyhow::ensure!(self.open, "coordinator is shut down");
+        let n_workers = self.n_workers();
+        anyhow::ensure!(
+            a_shares.len() == n_workers,
+            "need one A-half per worker ({n_workers}), got {}",
+            a_shares.len()
+        );
+        let shares: Vec<Arc<Vec<u8>>> = a_shares.into_iter().map(Arc::new).collect();
+        let (id, evicted) = self.prepared.insert(shares.clone());
+        let mut t = self.transport.lock().unwrap();
+        for old in evicted {
+            for w in 0..n_workers {
+                let _ = t.send(w, ToWorker::Evict { prepared_id: old });
+            }
+        }
+        for (w, half) in shares.into_iter().enumerate() {
+            let msg = ToWorker::Stage { prepared_id: id, payload: half };
+            let sent = t.send(w, msg)?;
+            self.aggregate.add_staged_upload(sent);
+        }
+        Ok(id)
+    }
+
+    /// Drop a prepared operand master- and worker-side. Returns whether the
+    /// id was still registered.
+    pub fn release_prepared(&mut self, id: u64) -> anyhow::Result<bool> {
+        let present = self.prepared.remove(id);
+        if present {
+            let mut t = self.transport.lock().unwrap();
+            for w in 0..t.n_workers() {
+                let _ = t.send(w, ToWorker::Evict { prepared_id: id });
+            }
+        }
+        Ok(present)
+    }
+
+    /// Encode-once serving, step 2: dispatch a job whose A-side was staged
+    /// by [`Coordinator::prepare`] — `b_payloads[i]` is worker `i`'s
+    /// serialized B-side half (from [`DynScheme::encode_right_bytes`]), the
+    /// only per-job bytes that cross the wire. Workers prepend their staged
+    /// A-half, so the compute path (and the decode) is byte-identical to an
+    /// unprepared submit of the full shares. Shard `i` is pinned to worker
+    /// `i` (its staged half lives there); a dead worker's shard fail-stops,
+    /// like any straggler. Unknown/evicted ids error (and count a store
+    /// miss); hits touch the operand's LRU slot.
+    ///
+    /// [`DynScheme::encode_right_bytes`]:
+    ///     crate::codes::DynScheme::encode_right_bytes
+    pub fn submit_prepared(
+        &mut self,
+        id: u64,
+        b_payloads: Vec<Vec<u8>>,
+        need: usize,
+    ) -> anyhow::Result<JobHandle> {
+        anyhow::ensure!(self.open, "coordinator is shut down");
+        let staged = self.prepared.get(id);
+        anyhow::ensure!(staged.is_some(), "prepared operand {id} is not registered (evicted?)");
+        let n_workers = self.n_workers();
+        anyhow::ensure!(
+            b_payloads.len() == n_workers,
+            "need one B-half per worker ({n_workers}), got {} — prepared shards are pinned \
+             to their staged workers",
+            b_payloads.len()
+        );
+        self.submit_with(b_payloads, need, Some(id))
+    }
+
+    /// `(hits, misses, evictions)` of the prepared-operand store.
+    pub fn prepared_stats(&self) -> (u64, u64, u64) {
+        self.prepared.stats()
+    }
+
+    /// Number of operands currently staged.
+    pub fn prepared_len(&self) -> usize {
+        self.prepared.len()
+    }
+
+    /// Bound the prepared-operand store (default
+    /// [`DEFAULT_PREPARED_CAP`]). Shrinking below the current size takes
+    /// effect on the next [`Coordinator::prepare`], which LRU-evicts down
+    /// to the new bound master- and worker-side.
+    pub fn set_prepared_capacity(&mut self, cap: usize) {
+        self.prepared.set_capacity(cap);
+    }
+
+    fn submit_with(
+        &mut self,
+        payloads: Vec<Vec<u8>>,
+        need: usize,
+        prepared: Option<u64>,
+    ) -> anyhow::Result<JobHandle> {
         anyhow::ensure!(self.open, "coordinator is shut down");
         let n_workers = self.n_workers();
         let n_shards = payloads.len();
@@ -776,11 +951,12 @@ impl Coordinator {
                     })
                     .collect(),
                 payloads: payloads.iter().cloned().map(Some).collect(),
+                prepared,
             },
         );
 
         for (shard, payload) in payloads.into_iter().enumerate() {
-            let msg = ToWorker::Job { job_id, shard, payload };
+            let msg = ToWorker::Job { job_id, shard, prepared, payload };
             match self.transport.lock().unwrap().send(targets[shard], msg) {
                 Ok(sent) => {
                     // Credit the bytes the transport reports actually
@@ -1170,6 +1346,116 @@ mod tests {
         let aggregate = c.counters().clone();
         c.shutdown();
         assert_eq!(aggregate.download_arrived_total(), 70);
+    }
+
+    #[test]
+    fn prepared_jobs_ship_only_b_halves_and_compute_on_the_full_share() {
+        let mut c = Coordinator::new(3, Arc::new(Echo), StragglerModel::None, 30);
+        let a_halves: Vec<Vec<u8>> = (0..3).map(|w| vec![0xA0 + w as u8; 10]).collect();
+        let id = c.prepare(a_halves).unwrap();
+        assert_eq!(c.counters().staged_upload_total(), 30, "A-halves credited as staging");
+        assert_eq!(c.counters().upload_total(), 0, "staging is not job upload");
+        for round in 0..3u8 {
+            let b_halves: Vec<Vec<u8>> = (0..3).map(|w| vec![0x10 * round + w as u8; 4]).collect();
+            let h = c.submit_prepared(id, b_halves.clone(), 3).unwrap();
+            let job_counters = h.counters().clone();
+            let (got, _) = h.wait().unwrap();
+            assert_eq!(got.len(), 3);
+            for resp in &got {
+                let w = resp.worker_id;
+                let mut expect = vec![0xA0 + w as u8; 10];
+                expect.extend_from_slice(&b_halves[w]);
+                assert_eq!(resp.payload, expect, "worker {w} computed on staged ++ B-half");
+            }
+            assert_eq!(job_counters.upload_total(), 12, "only the B-halves crossed");
+            assert_eq!(job_counters.staged_upload_total(), 0);
+        }
+        let (hits, misses, evictions) = c.prepared_stats();
+        assert_eq!((hits, misses, evictions), (3, 0, 0));
+        assert_eq!(c.counters().staged_upload_total(), 30, "staged exactly once");
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_and_released_prepared_ids_are_rejected() {
+        let mut c = Coordinator::new(2, Arc::new(Echo), StragglerModel::None, 31);
+        assert!(c.submit_prepared(7, payloads(2, 1, 2), 2).is_err());
+        let id = c.prepare(payloads(2, 0xA, 5)).unwrap();
+        assert!(c.release_prepared(id).unwrap());
+        assert!(!c.release_prepared(id).unwrap(), "second release is a no-op");
+        assert!(c.submit_prepared(id, payloads(2, 1, 2), 2).is_err());
+        let (hits, misses, _) = c.prepared_stats();
+        assert_eq!((hits, misses), (0, 2));
+        // Wrong payload count is rejected before dispatch.
+        let id = c.prepare(payloads(2, 0xB, 5)).unwrap();
+        assert!(c.submit_prepared(id, payloads(1, 1, 2), 1).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn lru_eviction_propagates_to_workers() {
+        let mut c = Coordinator::new(2, Arc::new(Echo), StragglerModel::None, 32);
+        c.set_prepared_capacity(1);
+        let first = c.prepare(payloads(2, 0xA, 6)).unwrap();
+        let second = c.prepare(payloads(2, 0xB, 6)).unwrap();
+        assert_eq!(c.prepared_len(), 1);
+        // The evicted operand is gone master-side…
+        assert!(c.submit_prepared(first, payloads(2, 1, 2), 2).is_err());
+        // …and worker-side: even a forged entry submit can't reach it, but
+        // the surviving operand still serves.
+        let (got, _) = c.submit_prepared(second, payloads(2, 1, 2), 2).unwrap().wait().unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|r| r.payload[..6] == [0xB; 6]));
+        let (_, _, evictions) = c.prepared_stats();
+        assert_eq!(evictions, 1);
+        // Both prepares staged: 2 workers × 6 bytes × 2 operands.
+        assert_eq!(c.counters().staged_upload_total(), 24);
+        c.shutdown();
+    }
+
+    #[test]
+    fn reconnect_restages_prepared_operands() {
+        let mut c = Coordinator::new(3, Arc::new(Echo), StragglerModel::None, 33);
+        let id = c.prepare(payloads(3, 0xCC, 8)).unwrap();
+        assert_eq!(c.counters().staged_upload_total(), 24);
+        c.disconnect_worker(1).unwrap();
+        c.reconnect_worker(1, None).unwrap();
+        // The revived link was re-staged (one more 8-byte half).
+        assert_eq!(c.counters().staged_upload_total(), 32);
+        let h = c.submit_prepared(id, payloads(3, 0xD, 4), 3).unwrap();
+        let (got, _) = h.wait().unwrap();
+        assert_eq!(got.len(), 3, "all shards — including the revived worker's — served");
+        assert!(got.iter().all(|r| r.payload.len() == 12));
+        c.shutdown();
+    }
+
+    #[test]
+    fn speculative_copy_of_a_prepared_job_ships_the_full_share() {
+        // Worker 0 drags its prepared shard; the speculative copy to worker
+        // 1 must carry the re-assembled full share (worker 1's staged half
+        // is its own, not shard 0's) and decode-identical bytes come back.
+        let straggler = StragglerModel::fixed_slow([0], Duration::from_secs(2));
+        let mut c = Coordinator::new(2, Arc::new(Echo), straggler, 34);
+        let mut cfg = ElasticConfig::speculative();
+        cfg.tick = Duration::from_millis(2);
+        cfg.spec_min_deadline = Duration::from_millis(30);
+        c.set_elastic(cfg);
+        let id = c.prepare(vec![vec![0xA0; 6], vec![0xA1; 6]]).unwrap();
+        let h = c.submit_prepared(id, payloads(2, 0xB, 4), 2).unwrap();
+        let job_counters = h.counters().clone();
+        let (got, wait) = h.wait().unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(wait < Duration::from_secs(1), "speculation did not beat the straggler");
+        let shard0 = got.iter().find(|g| g.worker_id == 0).unwrap();
+        assert_eq!(
+            shard0.payload[..6],
+            [0xA0; 6],
+            "the spare computed shard 0 on shard 0's A-half, not its own"
+        );
+        assert_eq!(job_counters.speculative_total(), 1);
+        // Upload: 2 B-halves (4 each) + one full speculative copy (6 + 4).
+        assert_eq!(job_counters.upload_total(), 18);
+        c.shutdown();
     }
 
     #[test]

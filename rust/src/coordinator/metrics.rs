@@ -19,8 +19,13 @@ pub struct JobMetrics {
     /// Wall time from dispatch of the first share until the `R`-th response
     /// arrived (includes worker compute and injected straggler delays).
     pub wait_for_r: Duration,
-    /// Bytes master → workers (all `N` shares).
+    /// Bytes master → workers (all `N` shares; for a prepared job only the
+    /// B-halves that actually crossed per job).
     pub upload_bytes: u64,
+    /// Bytes of prepared A-halves staged master → workers on behalf of
+    /// this job's `prepare` call (0 for unprepared jobs and for prepared
+    /// jobs after the first — staging is encode-once by construction).
+    pub staged_upload_bytes: u64,
     /// Bytes of the `R` responses used for decoding.
     pub download_bytes: u64,
     /// Pure compute durations of the responses used (length = `R`).
@@ -35,6 +40,16 @@ pub struct JobMetrics {
     pub plan_cache_hits: u64,
     /// Decode-plan cache misses during this job's decode.
     pub plan_cache_misses: u64,
+    /// Prepared-operand store hits during this job (see
+    /// [`crate::coordinator::prepared`]): 1 on a prepared job whose
+    /// operand was found staged.
+    pub prepared_hits: u64,
+    /// Prepared-operand store misses during this job (an unknown or
+    /// evicted id).
+    pub prepared_misses: u64,
+    /// Prepared operands LRU-evicted during this job's submission window
+    /// (capacity pressure on the store).
+    pub prepared_evictions: u64,
     /// Speculative shard re-dispatches the elastic coordinator sent for
     /// this job (0 unless speculation is enabled; their payload bytes are
     /// included in `upload_bytes`).
@@ -82,10 +97,14 @@ impl JobMetrics {
             .set("job_id", self.job_id)
             .set("plan_cache_hits", self.plan_cache_hits)
             .set("plan_cache_misses", self.plan_cache_misses)
+            .set("prepared_hits", self.prepared_hits)
+            .set("prepared_misses", self.prepared_misses)
+            .set("prepared_evictions", self.prepared_evictions)
             .set("encode_s", self.encode.as_secs_f64())
             .set("decode_s", self.decode.as_secs_f64())
             .set("wait_for_r_s", self.wait_for_r.as_secs_f64())
             .set("upload_bytes", self.upload_bytes)
+            .set("staged_upload_bytes", self.staged_upload_bytes)
             .set("download_bytes", self.download_bytes)
             .set("speculative_dispatches", self.speculative_dispatches)
             .set("mean_worker_compute_s", self.mean_worker_compute().as_secs_f64())
@@ -131,6 +150,8 @@ mod tests {
         assert!(j.contains("upload_bytes"));
         assert!(j.contains("job_id"));
         assert!(j.contains("plan_cache_hits"));
+        assert!(j.contains("prepared_hits"));
+        assert!(j.contains("staged_upload_bytes"));
         assert!(j.contains("speculative_dispatches"));
     }
 }

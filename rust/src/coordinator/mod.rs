@@ -40,6 +40,13 @@
 //!   `job_id`, dropping duplicate or impersonated responses; a monitor
 //!   thread pings workers, tracks membership, and (when enabled)
 //!   speculatively re-dispatches overdue shards to healthy spares;
+//!   [`Coordinator::prepare`] + [`Coordinator::submit_prepared`] are the
+//!   encode-once serving path: a fixed A-operand's share halves are staged
+//!   on the workers once and every subsequent job ships only its B-halves;
+//! * [`prepared`] — the master-side [`PreparedStore`]: the bounded
+//!   (LRU-evicting) registry of staged operands, re-pushed automatically
+//!   whenever a worker link is re-established, with hit/miss/eviction
+//!   stats mirroring the decode-plan cache's;
 //! * [`pool`] — elastic-membership state: per-worker
 //!   [`WorkerHealth`](pool::WorkerHealth) (live / suspect / dead), latency
 //!   EWMAs feeding the speculation deadline, ping bookkeeping, and the
@@ -110,10 +117,12 @@ pub mod worker;
 pub mod master;
 pub mod metrics;
 pub mod pool;
+pub mod prepared;
 pub mod runner;
 
 pub use daemon::{DaemonConfig, WorkerDaemon};
 pub use master::{Coordinator, JobHandle};
+pub use prepared::{PreparedStore, DEFAULT_PREPARED_CAP};
 pub use metrics::JobMetrics;
 pub use pool::{ElasticConfig, WorkerHealth, WorkerSnapshot};
 pub use straggler::StragglerModel;

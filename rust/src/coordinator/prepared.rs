@@ -1,0 +1,268 @@
+//! Master-side registry of **prepared operands**: left (A-side) share
+//! halves encoded once and staged on every worker, so each subsequent job
+//! of a fixed-weight serving stream ships only its right (B-side) halves.
+//!
+//! The store is the staging state's single source of truth:
+//!
+//! * an entry holds the per-worker serialized A-halves (`shares[w]` goes to
+//!   worker `w`), shared via `Arc` so re-staging after a reconnect never
+//!   copies the bytes;
+//! * capacity is bounded with least-recently-used eviction, exactly like
+//!   [`crate::codes::plan_cache::PlanCache`] — a long-running server cannot
+//!   leak staged uploads. [`PreparedStore::insert`] reports which ids were
+//!   evicted so the coordinator can send the matching evict frames;
+//! * hit/miss/eviction counts are shared atomics (clone-visible), surfaced
+//!   through [`super::metrics::JobMetrics`] the same way plan-cache stats
+//!   are.
+//!
+//! Workers hold a *copy* of each staged half, keyed by the same id; the
+//! master re-pushes every live entry when a worker (re)joins, so worker
+//! state is always a function of this store — a prepared job can only ever
+//! name an id the store currently holds.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default bound on simultaneously staged operands, mirroring
+/// [`crate::codes::plan_cache::DEFAULT_PLAN_CACHE_CAP`]'s role for
+/// interpolation plans.
+pub const DEFAULT_PREPARED_CAP: usize = 64;
+
+/// One staged operand: the per-worker serialized A-halves, in worker order.
+#[derive(Clone)]
+pub struct PreparedOperand {
+    /// `shares[w]` is the A-half staged on worker `w`.
+    pub shares: Vec<Arc<Vec<u8>>>,
+    /// LRU clock value of the most recent touch.
+    last_used: u64,
+}
+
+impl PreparedOperand {
+    /// Total bytes this operand stages across the pool (the analytic
+    /// A-side upload volume of one staging pass).
+    pub fn staged_bytes(&self) -> usize {
+        self.shares.iter().map(|s| s.len()).sum()
+    }
+}
+
+struct Inner {
+    map: HashMap<u64, PreparedOperand>,
+    /// Monotone LRU clock; bumped on every insert and touch.
+    tick: u64,
+    /// Next id to assign; never reused, so a stale id on a worker can
+    /// never alias a newer operand.
+    next_id: u64,
+    /// Capacity bound; shrinking it takes effect lazily on the next
+    /// insert (which then evicts down to the new bound).
+    cap: usize,
+}
+
+/// Bounded, thread-safe store of prepared operands with LRU eviction and
+/// shared hit/miss/eviction statistics. Cloning shares the store.
+#[derive(Clone)]
+pub struct PreparedStore {
+    inner: Arc<Mutex<Inner>>,
+    hits: Arc<AtomicU64>,
+    misses: Arc<AtomicU64>,
+    evictions: Arc<AtomicU64>,
+}
+
+impl PreparedStore {
+    pub fn new(cap: usize) -> PreparedStore {
+        assert!(cap > 0, "prepared store capacity must be positive");
+        PreparedStore {
+            inner: Arc::new(Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                next_id: 0,
+                cap,
+            })),
+            hits: Arc::new(AtomicU64::new(0)),
+            misses: Arc::new(AtomicU64::new(0)),
+            evictions: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Register a new operand. Returns its id plus the ids evicted to make
+    /// room (normally at most one per insert; more after the capacity was
+    /// shrunk), so the caller can evict them from the workers too.
+    pub fn insert(&self, shares: Vec<Arc<Vec<u8>>>) -> (u64, Vec<u64>) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut evicted = Vec::new();
+        while inner.map.len() >= inner.cap {
+            let lru = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&id, _)| id)
+                .expect("non-empty map at capacity");
+            inner.map.remove(&lru);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            evicted.push(lru);
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.map.insert(id, PreparedOperand { shares, last_used: tick });
+        (id, evicted)
+    }
+
+    /// Look an operand up by id, touching its LRU slot. A hit clones the
+    /// `Arc`s (never the bytes); a miss — an id never issued, explicitly
+    /// released, or since evicted — is counted and returns `None`.
+    pub fn get(&self, id: u64) -> Option<Vec<Arc<Vec<u8>>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&id) {
+            Some(entry) => {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.shares.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Look an operand up without touching the LRU clock or the hit/miss
+    /// stats — for internal machinery (speculative re-dispatch assembling a
+    /// full payload) that must not skew the serving-visible counters.
+    pub fn peek(&self, id: u64) -> Option<Vec<Arc<Vec<u8>>>> {
+        self.inner.lock().unwrap().map.get(&id).map(|e| e.shares.clone())
+    }
+
+    /// Explicitly release an operand. Returns whether it was present. Not
+    /// counted as an eviction (those are capacity pressure only).
+    pub fn remove(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().map.remove(&id).is_some()
+    }
+
+    /// Every live entry, for re-staging a (re)joined worker. Ordered by id
+    /// so re-stages are deterministic across transports.
+    pub fn entries(&self) -> Vec<(u64, Vec<Arc<Vec<u8>>>)> {
+        let inner = self.inner.lock().unwrap();
+        let mut all: Vec<(u64, Vec<Arc<Vec<u8>>>)> =
+            inner.map.iter().map(|(&id, e)| (id, e.shares.clone())).collect();
+        all.sort_unstable_by_key(|(id, _)| *id);
+        all
+    }
+
+    /// `(hits, misses, evictions)` since construction.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().cap
+    }
+
+    /// Change the capacity bound. Shrinking below the current size takes
+    /// effect on the next insert, which evicts down to the new bound.
+    pub fn set_capacity(&self, cap: usize) {
+        assert!(cap > 0, "prepared store capacity must be positive");
+        self.inner.lock().unwrap().cap = cap;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn operand(bytes: &[usize]) -> Vec<Arc<Vec<u8>>> {
+        bytes.iter().map(|&n| Arc::new(vec![0u8; n])).collect()
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip_with_stats() {
+        let store = PreparedStore::new(4);
+        assert!(store.is_empty());
+        let (id, evicted) = store.insert(operand(&[3, 5]));
+        assert_eq!((id, evicted.len(), store.len()), (0, 0, 1));
+        let shares = store.get(id).expect("present");
+        assert_eq!(shares.iter().map(|s| s.len()).sum::<usize>(), 8);
+        assert!(store.get(99).is_none());
+        assert_eq!(store.stats(), (1, 1, 0));
+        assert!(store.remove(id));
+        assert!(!store.remove(id), "second release is a no-op");
+        assert!(store.get(id).is_none(), "released id misses");
+        assert_eq!(store.stats(), (1, 2, 0), "explicit release is not an eviction");
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity_reports_the_victim() {
+        let store = PreparedStore::new(2);
+        let (a, _) = store.insert(operand(&[1]));
+        let (b, _) = store.insert(operand(&[1]));
+        // Touch a so b is the LRU victim.
+        store.get(a).unwrap();
+        let (c, evicted) = store.insert(operand(&[1]));
+        assert_eq!(evicted, vec![b], "least-recently-used entry evicted");
+        assert_eq!(store.len(), 2);
+        assert!(store.get(a).is_some() && store.get(c).is_some());
+        assert!(store.get(b).is_none(), "evicted id misses");
+        let (_, _, evictions) = store.stats();
+        assert_eq!(evictions, 1);
+    }
+
+    #[test]
+    fn ids_are_never_reused_and_entries_are_ordered() {
+        let store = PreparedStore::new(2);
+        let (a, _) = store.insert(operand(&[1]));
+        store.remove(a);
+        let (b, _) = store.insert(operand(&[2]));
+        assert!(b > a, "released ids are not recycled");
+        let (c, _) = store.insert(operand(&[3]));
+        let ids: Vec<u64> = store.entries().iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![b, c]);
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_on_the_next_insert() {
+        let store = PreparedStore::new(4);
+        let (a, _) = store.insert(operand(&[1]));
+        let (b, _) = store.insert(operand(&[1]));
+        let (c, _) = store.insert(operand(&[1]));
+        store.set_capacity(2);
+        assert_eq!(store.len(), 3, "shrink is lazy");
+        // Touch c and a so b is the coldest.
+        store.get(c).unwrap();
+        store.get(a).unwrap();
+        let (d, mut evicted) = store.insert(operand(&[1]));
+        evicted.sort_unstable();
+        assert_eq!(evicted, vec![b, c], "evicts down to the new bound, coldest first");
+        assert_eq!(store.len(), 2);
+        assert!(store.peek(a).is_some() && store.peek(d).is_some());
+    }
+
+    #[test]
+    fn staged_bytes_sums_all_workers() {
+        let op = PreparedOperand { shares: operand(&[4, 6, 2]), last_used: 0 };
+        assert_eq!(op.staged_bytes(), 12);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let store = PreparedStore::new(4);
+        let view = store.clone();
+        let (id, _) = store.insert(operand(&[7]));
+        assert!(view.get(id).is_some());
+        assert_eq!(store.stats().0, 1, "hit visible through every clone");
+    }
+}

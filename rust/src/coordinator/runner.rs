@@ -165,6 +165,76 @@ pub fn run_erased<R: Ring>(
     Ok((out, metrics))
 }
 
+/// Encode-once serving, step 1 (erased): encode `a`'s per-worker A-side
+/// share halves via [`DynScheme::encode_left_bytes`] and stage them on the
+/// pool as a prepared operand. Returns the id for [`run_prepared_erased`].
+/// Errors if the scheme cannot encode its operands independently.
+pub fn prepare_erased<R: Ring>(
+    ring: &R,
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    a: &[Matrix<R::Elem>],
+) -> anyhow::Result<u64> {
+    let a_bytes: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(ring)).collect();
+    let halves = scheme.encode_left_bytes(&a_bytes)?;
+    coord.prepare(halves)
+}
+
+/// Encode-once serving, step 2 (erased): encode only `b`'s B-side halves
+/// ([`DynScheme::encode_right_bytes`] — the A-side was staged by
+/// [`prepare_erased`], so zero A-encodes happen here), dispatch them as a
+/// prepared job, collect and decode. The decode input is byte-identical to
+/// an unprepared [`run_erased`] of the same `(a, b)`, so the outputs are
+/// bit-identical; only the encode time and upload volume shrink. The
+/// returned metrics carry the prepared-store hit/miss/eviction deltas of
+/// this job.
+pub fn run_prepared_erased<R: Ring>(
+    ring: &R,
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    prepared_id: u64,
+    b: &[Matrix<R::Elem>],
+) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
+    let t_total = Instant::now();
+    let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(ring)).collect();
+
+    let t0 = Instant::now();
+    let payloads = scheme.encode_right_bytes(&b_bytes)?;
+    let encode = t0.elapsed();
+
+    let need = scheme.recovery_threshold();
+    let (p_hits0, p_misses0, p_evict0) = coord.prepared_stats();
+    let handle = coord.submit_prepared(prepared_id, payloads, need)?;
+    let (p_hits1, p_misses1, p_evict1) = coord.prepared_stats();
+    let job_id = handle.job_id();
+    let counters = handle.counters().clone();
+    let (collected, wait_for_r) = handle.wait()?;
+
+    let responses: Vec<(usize, &[u8])> = collected
+        .iter()
+        .map(|c| (c.worker_id, c.payload.as_slice()))
+        .collect();
+    let (hits_before, misses_before) = scheme.plan_cache_stats();
+    let t0 = Instant::now();
+    let out_bytes = scheme.decode_bytes(&responses)?;
+    let decode = t0.elapsed();
+    let (hits_after, misses_after) = scheme.plan_cache_stats();
+    let out: Vec<Matrix<R::Elem>> = out_bytes
+        .iter()
+        .map(|buf| Matrix::from_bytes(ring, buf))
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut metrics =
+        job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
+    metrics.job_id = job_id;
+    metrics.plan_cache_hits = hits_after.saturating_sub(hits_before);
+    metrics.plan_cache_misses = misses_after.saturating_sub(misses_before);
+    metrics.prepared_hits = p_hits1.saturating_sub(p_hits0);
+    metrics.prepared_misses = p_misses1.saturating_sub(p_misses0);
+    metrics.prepared_evictions = p_evict1.saturating_sub(p_evict0);
+    Ok((out, metrics))
+}
+
 /// Run one batch job (`C_k = A_k·B_k`) with a typed scheme. The coordinator
 /// must have been built with a compatible backend (e.g.
 /// [`NativeCompute::for_scheme`]).
@@ -327,6 +397,64 @@ mod tests {
         assert_eq!((m1.job_id, m2.job_id), (0, 1));
         assert_eq!((m1.plan_cache_hits, m1.plan_cache_misses), (0, 1));
         assert_eq!((m2.plan_cache_hits, m2.plan_cache_misses), (1, 0));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn prepared_serving_is_bit_identical_with_split_upload_and_zero_a_encodes() {
+        let base = Zq::z2e(64);
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+        let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+        let mut coord = Coordinator::new(8, backend, StragglerModel::None, 17);
+        let mut rng = Rng64::seeded(177);
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let bs: Vec<_> = (0..3).map(|_| Matrix::random(&base, 8, 8, &mut rng)).collect();
+
+        // Unprepared baseline for each B.
+        let mut baseline = Vec::new();
+        for b in &bs {
+            let (c, _) = run_erased(
+                &base,
+                scheme.as_ref(),
+                &mut coord,
+                std::slice::from_ref(&a),
+                std::slice::from_ref(b),
+            )
+            .unwrap();
+            baseline.push(c);
+        }
+
+        // Prepared: encode A once, stream the same Bs.
+        let encodes_before = scheme.left_encodes();
+        let id = prepare_erased(&base, scheme.as_ref(), &mut coord, std::slice::from_ref(&a))
+            .unwrap();
+        assert_eq!(scheme.left_encodes(), encodes_before + 1, "prepare encodes A once");
+        let (a_bytes, b_bytes) = scheme.split_upload_bytes(8, 8, 8).unwrap();
+        assert_eq!(
+            coord.counters().staged_upload_total() as usize,
+            a_bytes,
+            "staging ships exactly the analytic A-side volume"
+        );
+        for (b, expect) in bs.iter().zip(&baseline) {
+            let (c, m) = run_prepared_erased(
+                &base,
+                scheme.as_ref(),
+                &mut coord,
+                id,
+                std::slice::from_ref(b),
+            )
+            .unwrap();
+            assert_eq!(&c, expect, "prepared decode is bit-identical to unprepared");
+            assert_eq!(m.upload_bytes as usize, b_bytes, "per-job upload is the B-half only");
+            assert_eq!(m.staged_upload_bytes, 0, "no per-job staging");
+            assert_eq!((m.prepared_hits, m.prepared_misses), (1, 0));
+        }
+        assert_eq!(
+            scheme.left_encodes(),
+            encodes_before + 1,
+            "zero A-encodes in the steady state"
+        );
         coord.shutdown();
     }
 

@@ -202,8 +202,27 @@ fn spawn_reader(
                         }
                         state.lock().unwrap().last_heard = Some(Instant::now());
                     }
+                    FrameKind::StageAck => {
+                        // The daemon confirms a staged operand, echoing the
+                        // machine id we assigned; a different claim is the
+                        // same rogue-peer condition as a bad hello echo.
+                        if frame.worker_id != worker_id as u64 {
+                            eprintln!(
+                                "gr-cdmm: peer at {peer} acked a staged operand as worker \
+                                 {} but is connected as worker {worker_id}; rejecting the \
+                                 link as rogue (fail-stopped)",
+                                frame.worker_id
+                            );
+                            break;
+                        }
+                        state.lock().unwrap().last_heard = Some(Instant::now());
+                    }
                     FrameKind::Goodbye => break, // graceful leave
-                    FrameKind::Job | FrameKind::Shutdown | FrameKind::Ping => {
+                    FrameKind::Job
+                    | FrameKind::Shutdown
+                    | FrameKind::Ping
+                    | FrameKind::Stage
+                    | FrameKind::Evict => {
                         eprintln!(
                             "gr-cdmm: worker {worker_id} ({peer}) sent an unexpected \
                              {:?} frame; treating it as fail-stopped",
@@ -342,7 +361,39 @@ impl Transport for TcpTransport {
                 }
                 Ok(0)
             }
-            ToWorker::Job { job_id, shard, payload } => {
+            ToWorker::Stage { prepared_id, payload } => {
+                if !self.conns[worker_id].state.lock().unwrap().alive {
+                    // Staging traffic to a dead link is silently lost (the
+                    // master re-stages on reconnect) — no report is owed.
+                    return Ok(0);
+                }
+                let len = payload.len();
+                if wire::write_frame(
+                    &mut &self.conns[worker_id].stream,
+                    &Frame::stage(prepared_id, (*payload).clone()),
+                )
+                .is_err()
+                {
+                    self.kill_link(worker_id);
+                    return Ok(0);
+                }
+                Ok(len)
+            }
+            ToWorker::Evict { prepared_id } => {
+                if !self.conns[worker_id].state.lock().unwrap().alive {
+                    return Ok(0);
+                }
+                if wire::write_frame(
+                    &mut &self.conns[worker_id].stream,
+                    &Frame::evict(prepared_id),
+                )
+                .is_err()
+                {
+                    self.kill_link(worker_id);
+                }
+                Ok(0)
+            }
+            ToWorker::Job { job_id, shard, prepared, payload } => {
                 {
                     let mut st = self.conns[worker_id].state.lock().unwrap();
                     if !st.alive {
@@ -359,6 +410,7 @@ impl Transport for TcpTransport {
                     &mut &self.conns[worker_id].stream,
                     job_id,
                     shard,
+                    prepared,
                     &payload,
                 )
                 .is_err()

@@ -59,10 +59,22 @@ pub enum ToWorker {
         /// a different worker, so the shard index — not the worker index —
         /// is what response reports carry back.
         shard: usize,
-        /// Serialized [`crate::codes::Share`], shared so a speculative
-        /// re-dispatch of the same shard never copies the bytes.
+        /// `Some(prepared_id)` on a prepared job: the worker prepends its
+        /// staged A-half to `payload` (which then carries only the B-half)
+        /// before deserializing the share. `None` for a full-share job.
+        prepared: Option<u64>,
+        /// Serialized [`crate::codes::Share`] (or, on a prepared job, just
+        /// its B-half), shared so a speculative re-dispatch of the same
+        /// shard never copies the bytes.
         payload: Arc<Vec<u8>>,
     },
+    /// Store a prepared operand's A-side share half under `prepared_id` so
+    /// later prepared jobs can reference it. The worker acknowledges
+    /// (in-process: stamping its [`WorkerLink`]; socket daemon: a
+    /// stage-ack frame).
+    Stage { prepared_id: u64, payload: Arc<Vec<u8>> },
+    /// Drop a staged operand. Unknown ids are ignored.
+    Evict { prepared_id: u64 },
     /// Health-check probe; the in-process worker answers by stamping its
     /// shared [`WorkerLink`] (the socket daemon answers with a pong frame).
     Ping { nonce: u64, sent: Instant },
@@ -213,8 +225,13 @@ pub trait Transport: Send {
 /// speculative re-dispatches. Cloning shares the underlying atomics.
 #[derive(Clone, Default)]
 pub struct ByteCounters {
-    /// Total bytes master → workers.
+    /// Total per-job bytes master → workers (share payloads; on prepared
+    /// jobs only the B-half ships, so only the B-half is counted here).
     upload: Arc<AtomicU64>,
+    /// Bytes of prepared A-halves staged on workers (initial staging and
+    /// every re-stage after a reconnect/join). Kept out of `upload` so
+    /// per-job upload accounting stays analytic.
+    staged_upload: Arc<AtomicU64>,
     /// Total response bytes that reached the master (router-side count,
     /// whether or not the collector still wanted them).
     download_arrived: Arc<AtomicU64>,
@@ -235,6 +252,10 @@ impl ByteCounters {
         self.upload.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    pub fn add_staged_upload(&self, n: usize) {
+        self.staged_upload.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     pub fn add_download_arrived(&self, n: usize) {
         self.download_arrived.fetch_add(n as u64, Ordering::Relaxed);
     }
@@ -249,6 +270,10 @@ impl ByteCounters {
 
     pub fn upload_total(&self) -> u64 {
         self.upload.load(Ordering::Relaxed)
+    }
+
+    pub fn staged_upload_total(&self) -> u64 {
+        self.staged_upload.load(Ordering::Relaxed)
     }
 
     pub fn download_arrived_total(&self) -> u64 {
@@ -275,6 +300,7 @@ impl ByteCounters {
 /// down (the worker thread then fail-stops every job it dequeues, exactly
 /// as a dead socket would); the worker stamps `last_heard`/`last_rtt` so
 /// [`Transport::link_status`] mirrors the socket transport's signal.
+#[derive(Default)]
 pub struct WorkerLink {
     pub dead: AtomicBool,
     pub last_heard: Mutex<Option<Instant>>,
@@ -283,11 +309,7 @@ pub struct WorkerLink {
 
 impl WorkerLink {
     fn new() -> WorkerLink {
-        WorkerLink {
-            dead: AtomicBool::new(false),
-            last_heard: Mutex::new(None),
-            last_rtt: Mutex::new(None),
-        }
+        WorkerLink::default()
     }
 }
 
@@ -374,19 +396,26 @@ impl Transport for ChannelTransport {
             .get(worker_id)
             .ok_or_else(|| anyhow::anyhow!("worker id {worker_id} out of range"))?;
         let len = match &msg {
-            ToWorker::Job { payload, .. } => payload.len(),
-            ToWorker::Ping { .. } | ToWorker::Shutdown => 0,
+            ToWorker::Job { payload, .. } | ToWorker::Stage { payload, .. } => payload.len(),
+            ToWorker::Evict { .. } | ToWorker::Ping { .. } | ToWorker::Shutdown => 0,
         };
-        if let ToWorker::Job { job_id, shard, .. } = &msg {
-            if self.links[worker_id].dead.load(Ordering::Relaxed) {
-                // Dead link = fail-stop worker: the payload never crosses
-                // (0 bytes, exactly like a dead socket) and the master
-                // still hears one byte-free report for this dispatch.
-                let report = fail_report(*job_id, *shard);
-                if let Some(funnel) = &self.funnel {
-                    let _ = funnel.send(report);
+        if self.links[worker_id].dead.load(Ordering::Relaxed) {
+            match &msg {
+                ToWorker::Job { job_id, shard, .. } => {
+                    // Dead link = fail-stop worker: the payload never
+                    // crosses (0 bytes, exactly like a dead socket) and the
+                    // master still hears one byte-free report for this
+                    // dispatch.
+                    let report = fail_report(*job_id, *shard);
+                    if let Some(funnel) = &self.funnel {
+                        let _ = funnel.send(report);
+                    }
+                    return Ok(0);
                 }
-                return Ok(0);
+                // Staging traffic to a dead link is silently lost, exactly
+                // like a dead socket; the master re-stages on reconnect.
+                ToWorker::Stage { .. } | ToWorker::Evict { .. } => return Ok(0),
+                ToWorker::Ping { .. } | ToWorker::Shutdown => {}
             }
         }
         // An in-process worker only hangs up by panicking (or after
@@ -483,7 +512,7 @@ mod tests {
     use super::*;
 
     fn job(job_id: u64, shard: usize, payload: Vec<u8>) -> ToWorker {
-        ToWorker::Job { job_id, shard, payload: Arc::new(payload) }
+        ToWorker::Job { job_id, shard, prepared: None, payload: Arc::new(payload) }
     }
 
     #[test]
@@ -584,6 +613,43 @@ mod tests {
 
         // Endpoints are a TCP concept.
         assert!(t.reconnect_worker(0, Some("127.0.0.1:1")).is_err());
+        Transport::shutdown(&mut t);
+    }
+
+    #[test]
+    fn staging_counts_bytes_on_live_links_and_drops_silently_on_dead_ones() {
+        let mut t = ChannelTransport::spawn(2, Arc::new(Echo), StragglerModel::None, 6);
+        let rx = t.take_receiver().unwrap();
+        // Live link: the staged bytes cross and are reported for the
+        // staged_upload counter.
+        let stage = ToWorker::Stage { prepared_id: 1, payload: Arc::new(vec![0xA; 24]) };
+        assert_eq!(t.send(0, stage).unwrap(), 24);
+        // Dead link: staging traffic is silently lost (no synthesized
+        // report — only jobs owe one), 0 bytes.
+        t.disconnect_worker(1).unwrap();
+        let stage = ToWorker::Stage { prepared_id: 1, payload: Arc::new(vec![0xA; 24]) };
+        assert_eq!(t.send(1, stage).unwrap(), 0);
+        assert_eq!(t.send(1, ToWorker::Evict { prepared_id: 1 }).unwrap(), 0);
+        // Worker 0 serves a prepared job from its staged half.
+        let msg = ToWorker::Job {
+            job_id: 3,
+            shard: 0,
+            prepared: Some(1),
+            payload: Arc::new(vec![0xB; 8]),
+        };
+        assert_eq!(t.send(0, msg).unwrap(), 8, "only the B-half crosses per job");
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.payload.as_ref().map(Vec::len), Some(32), "staged ++ payload computed");
+        // Evict on a live link costs nothing and unstages.
+        assert_eq!(t.send(0, ToWorker::Evict { prepared_id: 1 }).unwrap(), 0);
+        let msg = ToWorker::Job {
+            job_id: 4,
+            shard: 0,
+            prepared: Some(1),
+            payload: Arc::new(vec![0xB; 8]),
+        };
+        t.send(0, msg).unwrap();
+        assert!(rx.recv().unwrap().payload.is_none(), "evicted id fail-stops");
         Transport::shutdown(&mut t);
     }
 

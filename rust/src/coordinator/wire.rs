@@ -7,16 +7,21 @@
 //! ```text
 //! offset  size  field        notes
 //!      0     4  magic        0x4D43_5247 ("GRCM" as little-endian bytes)
-//!      4     2  version      protocol version, currently 2
+//!      4     2  version      protocol version, currently 3
 //!      6     2  kind         1=job  2=shutdown  3=response-ok
 //!                            4=response-failed  5=ping  6=pong  7=hello
-//!                            8=goodbye
+//!                            8=goodbye  9=stage  10=stage-ack  11=evict
 //!      8     8  job_id       coordinator-assigned job id (ping/pong reuse
-//!                            this field as the health-check nonce)
+//!                            this field as the health-check nonce;
+//!                            stage/stage-ack/evict reuse it as the
+//!                            prepared-operand id)
 //!     16     8  worker_id    shard index on job/response frames; the
-//!                            daemon's assigned machine id on hello, pong
-//!                            and goodbye frames
-//!     24     8  compute_us   worker compute time in microseconds (responses)
+//!                            daemon's assigned machine id on hello, pong,
+//!                            goodbye and stage-ack frames
+//!     24     8  compute_us   worker compute time in microseconds
+//!                            (responses); on job frames, `prepared_id + 1`
+//!                            of the staged operand to prepend, 0 for an
+//!                            unprepared job
 //!     32     8  delay_us     injected straggler delay in microseconds
 //!     40     8  payload_len  must be ≤ [`MAX_PAYLOAD`]
 //!     48     …  payload      serialized share / response bytes
@@ -38,6 +43,18 @@
 //! reading a shutdown frame, and a master can write one to release a
 //! connection without shutting the daemon down.
 //!
+//! Version 3 adds prepared-operand staging (kinds 9–11): a **stage** frame
+//! carries a prepared operand's per-worker A-side share half (payload)
+//! under a `prepared_id` (in the `job_id` field); the daemon stores it
+//! per-connection and answers with a **stage-ack** echoing the id and its
+//! machine id. A job frame whose `compute_us` field is non-zero names a
+//! staged operand (`prepared_id + 1`): the daemon prepends the staged bytes
+//! to the job payload — reassembling the full serialized share, since a
+//! share serializes as `a` then `b` — before computing; a prepared job
+//! naming an id this connection has never staged fail-stops
+//! (response-failed frame). An **evict** frame (payload-free) drops the
+//! staged entry.
+//!
 //! [`read_frame`] validates everything before allocating: bad magic, an
 //! unknown version or kind, an oversized declared `payload_len`, and
 //! truncation (mid-header or mid-payload) are all clean `Err`s; only EOF
@@ -53,8 +70,10 @@ use std::time::Duration;
 pub const MAGIC: u32 = u32::from_le_bytes(*b"GRCM");
 
 /// Current protocol version. Version 2 added the ping/pong/hello/goodbye
-/// control frames (kinds 5–8).
-pub const VERSION: u16 = 2;
+/// control frames (kinds 5–8); version 3 adds prepared-operand staging
+/// (stage/stage-ack/evict, kinds 9–11) and the `prepared_id + 1` tag in a
+/// job frame's `compute_us` field.
+pub const VERSION: u16 = 3;
 
 /// Fixed header length in bytes.
 pub const HEADER_LEN: usize = 48;
@@ -86,6 +105,15 @@ pub enum FrameKind {
     /// Either direction: graceful leave — the peer is closing this
     /// connection on purpose, not crashing.
     Goodbye,
+    /// Master → worker: store this prepared operand's A-side share half.
+    /// `job_id` carries the prepared id; the payload is the staged bytes.
+    Stage,
+    /// Worker → master: confirm a stage. Echoes the prepared id in `job_id`
+    /// and the daemon's machine id in `worker_id`.
+    StageAck,
+    /// Master → worker: drop a staged operand. `job_id` carries the
+    /// prepared id; no payload.
+    Evict,
 }
 
 impl FrameKind {
@@ -99,6 +127,9 @@ impl FrameKind {
             FrameKind::Pong => 6,
             FrameKind::Hello => 7,
             FrameKind::Goodbye => 8,
+            FrameKind::Stage => 9,
+            FrameKind::StageAck => 10,
+            FrameKind::Evict => 11,
         }
     }
 
@@ -112,6 +143,9 @@ impl FrameKind {
             6 => Some(FrameKind::Pong),
             7 => Some(FrameKind::Hello),
             8 => Some(FrameKind::Goodbye),
+            9 => Some(FrameKind::Stage),
+            10 => Some(FrameKind::StageAck),
+            11 => Some(FrameKind::Evict),
             _ => None,
         }
     }
@@ -182,6 +216,38 @@ impl Frame {
     /// A graceful-leave frame.
     pub fn goodbye(worker_id: usize) -> Frame {
         Frame::control(FrameKind::Goodbye, 0, worker_id as u64)
+    }
+
+    /// A master → worker stage frame: store `payload` (a prepared operand's
+    /// A-side share half) under `prepared_id`.
+    pub fn stage(prepared_id: u64, payload: Vec<u8>) -> Frame {
+        Frame {
+            kind: FrameKind::Stage,
+            job_id: prepared_id,
+            worker_id: 0,
+            compute_us: 0,
+            delay_us: 0,
+            payload,
+        }
+    }
+
+    /// A worker → master stage-ack echoing `prepared_id`, stamped with the
+    /// daemon's machine id.
+    pub fn stage_ack(prepared_id: u64, worker_id: usize) -> Frame {
+        Frame::control(FrameKind::StageAck, prepared_id, worker_id as u64)
+    }
+
+    /// A master → worker evict frame dropping `prepared_id`.
+    pub fn evict(prepared_id: u64) -> Frame {
+        Frame::control(FrameKind::Evict, prepared_id, 0)
+    }
+
+    /// The staged-operand tag of a job frame: `Some(prepared_id)` when the
+    /// worker must prepend its staged A-half to this payload, `None` for a
+    /// full-share job. (Job frames repurpose the otherwise-unused
+    /// `compute_us` field as `prepared_id + 1`, 0 meaning unprepared.)
+    pub fn job_prepared_id(&self) -> Option<u64> {
+        (self.kind == FrameKind::Job && self.compute_us != 0).then(|| self.compute_us - 1)
     }
 
     /// Package a worker's job report as a response frame (durations are
@@ -274,14 +340,17 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
 /// Write a job frame for `shard` of `job_id` straight from a borrowed
 /// payload. Speculative re-dispatch keeps one `Arc<Vec<u8>>` per in-flight
 /// shard and may send the same bytes to several workers; this path avoids
-/// cloning the payload into an owned [`Frame`] per send.
+/// cloning the payload into an owned [`Frame`] per send. `prepared` names a
+/// staged operand the daemon must prepend (see [`Frame::job_prepared_id`]).
 pub fn write_job_frame<W: Write>(
     w: &mut W,
     job_id: u64,
     shard: usize,
+    prepared: Option<u64>,
     payload: &[u8],
 ) -> std::io::Result<()> {
-    write_frame_parts(w, FrameKind::Job, job_id, shard as u64, 0, 0, payload)
+    let tag = prepared.map_or(0, |p| p + 1);
+    write_frame_parts(w, FrameKind::Job, job_id, shard as u64, tag, 0, payload)
 }
 
 /// Read exactly `buf.len()` bytes, reporting how many were read before EOF.
@@ -416,8 +485,41 @@ mod tests {
         let mut owned = Vec::new();
         write_frame(&mut owned, &Frame::job(77, 4, payload.clone())).unwrap();
         let mut borrowed = Vec::new();
-        write_job_frame(&mut borrowed, 77, 4, &payload).unwrap();
+        write_job_frame(&mut borrowed, 77, 4, None, &payload).unwrap();
         assert_eq!(owned, borrowed);
+    }
+
+    #[test]
+    fn stage_frames_roundtrip_and_carry_the_prepared_id() {
+        let stage = Frame::stage(5, vec![1, 2, 3]);
+        assert_eq!(roundtrip(&stage), stage);
+        assert_eq!(stage.job_id, 5, "prepared id rides in job_id");
+        let ack = Frame::stage_ack(5, 3);
+        assert_eq!(roundtrip(&ack), ack);
+        assert_eq!((ack.job_id, ack.worker_id), (5, 3));
+        assert!(ack.payload.is_empty());
+        let evict = Frame::evict(5);
+        assert_eq!(roundtrip(&evict), evict);
+        assert!(evict.payload.is_empty());
+        // staging frames are not worker reports
+        assert!(stage.into_report().is_err());
+        assert!(ack.into_report().is_err());
+    }
+
+    #[test]
+    fn prepared_job_tag_roundtrips_through_compute_us() {
+        let payload = vec![8u8; 16];
+        let mut buf = Vec::new();
+        write_job_frame(&mut buf, 42, 1, Some(0), &payload).unwrap();
+        let frame = read_frame(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert_eq!(frame.job_prepared_id(), Some(0), "id 0 is distinguishable from unprepared");
+        let mut buf = Vec::new();
+        write_job_frame(&mut buf, 42, 1, Some(9), &payload).unwrap();
+        let frame = read_frame(&mut Cursor::new(buf)).unwrap().unwrap();
+        assert_eq!(frame.job_prepared_id(), Some(9));
+        assert_eq!(Frame::job(42, 1, vec![]).job_prepared_id(), None);
+        // only job frames carry the tag
+        assert_eq!(Frame::stage(7, vec![]).job_prepared_id(), None);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 use super::straggler::StragglerModel;
 use super::transport::{fail_report, FromWorker, ToWorker, WorkerLink};
 use crate::util::rng::Rng64;
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -92,7 +93,29 @@ pub fn process_job(
     }
 }
 
+/// Reassemble a prepared job's full share payload: the staged left half's
+/// bytes followed by the job's right-half bytes. [`Share::to_bytes`]
+/// concatenates the serialized `a`-planes then the `b`-planes, so this is
+/// byte-for-byte what an unprepared dispatch of the same job would carry —
+/// the compute path downstream is completely unaware of staging.
+///
+/// [`Share::to_bytes`]: crate::codes::Share::to_bytes
+pub fn assemble_prepared(staged: &[u8], b_half: &[u8]) -> Vec<u8> {
+    let mut full = Vec::with_capacity(staged.len() + b_half.len());
+    full.extend_from_slice(staged);
+    full.extend_from_slice(b_half);
+    full
+}
+
 /// Spawn one in-process worker thread. Returns its join handle.
+///
+/// The worker holds a map of **staged operands** (prepared left halves,
+/// keyed by `prepared_id`): a [`ToWorker::Stage`] inserts, a
+/// [`ToWorker::Evict`] removes, and a job carrying `prepared: Some(id)`
+/// prepends the staged bytes to its payload before computing — or
+/// fail-stops the shard if the id is unknown (e.g. the job raced a
+/// reconnect before the master re-staged), exactly like a TCP daemon whose
+/// fresh connection has no staged state yet.
 ///
 /// `link` is the master-shared membership state: while `link.dead` is set
 /// the worker fail-stops every job it dequeues (the payload was never
@@ -112,6 +135,7 @@ pub fn spawn_worker(
     std::thread::Builder::new()
         .name(format!("gr-cdmm-worker-{worker_id}"))
         .spawn(move || {
+            let mut staged: HashMap<u64, Arc<Vec<u8>>> = HashMap::new();
             while let Ok(msg) = rx.recv() {
                 match msg {
                     ToWorker::Shutdown => break,
@@ -121,15 +145,47 @@ pub fn spawn_worker(
                             *link.last_heard.lock().unwrap() = Some(Instant::now());
                         }
                     }
-                    ToWorker::Job { job_id, shard, payload } => {
+                    ToWorker::Stage { prepared_id, payload } => {
+                        if !link.dead.load(Ordering::Relaxed) {
+                            staged.insert(prepared_id, payload);
+                            *link.last_heard.lock().unwrap() = Some(Instant::now());
+                        }
+                        // A dead worker never received the bytes — exactly
+                        // like a closed socket; the master re-stages on
+                        // reconnect.
+                    }
+                    ToWorker::Evict { prepared_id } => {
+                        if !link.dead.load(Ordering::Relaxed) {
+                            staged.remove(&prepared_id);
+                        }
+                    }
+                    ToWorker::Job { job_id, shard, prepared, payload } => {
                         let report = if link.dead.load(Ordering::Relaxed) {
                             fail_report(job_id, shard)
                         } else {
+                            let full;
+                            let bytes: &[u8] = match prepared {
+                                None => &payload,
+                                Some(id) => match staged.get(&id) {
+                                    Some(a_half) => {
+                                        full = assemble_prepared(a_half, &payload);
+                                        &full
+                                    }
+                                    None => {
+                                        // Unknown prepared id: fail-stop the
+                                        // shard (byte-free report), same as
+                                        // a daemon connection that has not
+                                        // been (re-)staged yet.
+                                        let _ = tx.send(fail_report(job_id, shard));
+                                        continue;
+                                    }
+                                },
+                            };
                             let r = process_job(
                                 worker_id,
                                 shard,
                                 job_id,
-                                &payload,
+                                bytes,
                                 &*compute,
                                 &straggler,
                                 &mut rng,
@@ -203,6 +259,60 @@ mod tests {
         let report = process_job(0, 0, 1, &[9], &Echo, &slow, &mut rng);
         assert_eq!(report.injected_delay, Duration::from_millis(15));
         assert!(report.payload.is_some());
+    }
+
+    #[test]
+    fn staged_operand_is_prepended_and_unknown_id_fail_stops() {
+        use std::sync::mpsc::channel;
+        let (to_tx, to_rx) = channel();
+        let (from_tx, from_rx) = channel();
+        let link = Arc::new(WorkerLink::default());
+        let handle = spawn_worker(
+            0,
+            to_rx,
+            from_tx,
+            Arc::new(Echo),
+            StragglerModel::None,
+            Rng64::seeded(5),
+            Arc::clone(&link),
+        );
+        // Stage id 3, then a prepared job carrying only the right half:
+        // the echo must see staged ++ payload.
+        to_tx.send(ToWorker::Stage { prepared_id: 3, payload: Arc::new(vec![0xA, 0xB]) }).unwrap();
+        to_tx
+            .send(ToWorker::Job {
+                job_id: 1,
+                shard: 0,
+                prepared: Some(3),
+                payload: Arc::new(vec![0xC]),
+            })
+            .unwrap();
+        let r = from_rx.recv().unwrap();
+        assert_eq!(r.payload.as_deref(), Some(&[0xA, 0xB, 0xC][..]));
+        // Unknown id: byte-free fail report, not a panic.
+        to_tx
+            .send(ToWorker::Job {
+                job_id: 2,
+                shard: 0,
+                prepared: Some(99),
+                payload: Arc::new(vec![0xC]),
+            })
+            .unwrap();
+        let r = from_rx.recv().unwrap();
+        assert!(r.payload.is_none(), "unknown prepared id fail-stops the shard");
+        // Evicted id behaves like an unknown one.
+        to_tx.send(ToWorker::Evict { prepared_id: 3 }).unwrap();
+        to_tx
+            .send(ToWorker::Job {
+                job_id: 3,
+                shard: 0,
+                prepared: Some(3),
+                payload: Arc::new(vec![0xC]),
+            })
+            .unwrap();
+        assert!(from_rx.recv().unwrap().payload.is_none());
+        to_tx.send(ToWorker::Shutdown).unwrap();
+        handle.join().unwrap();
     }
 
     #[test]

@@ -98,7 +98,15 @@ pub fn render(records: &[Rmfe35Record]) -> String {
         })
         .collect();
     markdown_table(
-        &["scheme", "size", "encode (s)", "decode (s)", "upload (MB)", "download (MB)", "worker (s)"],
+        &[
+            "scheme",
+            "size",
+            "encode (s)",
+            "decode (s)",
+            "upload (MB)",
+            "download (MB)",
+            "worker (s)",
+        ],
         &rows,
     )
 }

@@ -23,6 +23,17 @@
 //! (identical straggler draws — the only delta vs in-process is the wire,
 //! which is how the `serving_throughput` bench prices the transport), or
 //! externally started `gr-cdmm worker` daemons via `--connect`.
+//!
+//! With [`ServeConfig::prepared`] on, the stream reuses one fixed `A` (the
+//! fixed-weight serving shape §I motivates) and a **third pass** exercises
+//! the encode-once path: the A-halves are staged on every worker via
+//! [`Coordinator::prepare`], then each job encodes and ships only its
+//! B-halves through [`Coordinator::submit_prepared`]. The run *asserts*
+//! the encode-once proof obligations — exactly one A-side encode for the
+//! whole stream (scheme counter), per-job upload equal to the summed
+//! B-halves alone, staged bytes equal to the summed A-halves — and the
+//! usual per-job verification certifies the decodes bit-identical to the
+//! local reference products.
 
 use crate::codes::registry::{self, SchemeConfig};
 use crate::codes::DynScheme;
@@ -96,6 +107,13 @@ pub struct ServeConfig {
     /// largest preset the live pool can run
     /// ([`SchemeConfig::for_live_workers`]) instead of failing.
     pub elastic: bool,
+    /// Fixed-weight serving: reuse one `A` across the whole stream and add
+    /// a third, encode-once pass (stage A via [`Coordinator::prepare`],
+    /// then `submit_prepared` B-only jobs). Requires a scheme with
+    /// independent operand encodes (`ep`, `ep-rmfe-1`, `ep-rmfe-2`,
+    /// `batch-ep-rmfe`); schemes without them (`csa`) fail with a clear
+    /// error.
+    pub prepared: bool,
 }
 
 /// Measured serving results.
@@ -120,6 +138,30 @@ pub struct ServeRecord {
     /// Speculative shard re-dispatches of the pipelined pass (0 unless
     /// [`ServeConfig::speculate`] is on).
     pub speculative_dispatches: u64,
+    /// Whether the encode-once pass ran (all fields below are 0 when not).
+    pub prepared: bool,
+    /// Steady-state elapsed time of the prepared pass (staging excluded —
+    /// it is the one-time cost `staged_upload_bytes` prices).
+    pub prep_elapsed_s: f64,
+    pub prep_jobs_per_s: f64,
+    /// `prep_jobs_per_s / pipe_jobs_per_s` — the fixed-weight serving gain
+    /// on top of pipelining.
+    pub prep_speedup: f64,
+    /// One-time A-half staging volume (bytes, all workers) of the prepared
+    /// pass — equals the summed serialized A-halves by construction.
+    pub staged_upload_bytes: u64,
+    /// Total per-job upload of the prepared pass: the B-halves alone.
+    pub prep_upload_bytes: u64,
+    /// Total per-job upload of the pipelined pass (full A++B shares), for
+    /// the ratio the encode-once path is about.
+    pub pipe_upload_bytes: u64,
+    /// Prepared-operand store counters of the prepared pass (hits must be
+    /// one per job; misses/evictions 0 for a single staged operand).
+    pub prepared_hits: u64,
+    pub prepared_misses: u64,
+    pub prepared_evictions: u64,
+    /// A-side encodes performed *after* staging (must be 0: encode-once).
+    pub steady_a_encodes: u64,
     /// `true` iff every decoded product of both passes matched the local
     /// reference (trivially `true` when verification was disabled).
     pub verified: bool,
@@ -136,10 +178,19 @@ struct Request {
 fn make_requests(cfg: &ServeConfig, batch: usize) -> Vec<Request> {
     let base = Zq::z2e(64);
     let mut rng = Rng64::seeded(cfg.seed ^ 0x5e21);
+    // Fixed-weight serving reuses one A across the stream so all three
+    // passes multiply the same operands and the comparison stays fair.
+    let fixed_a: Option<Vec<Matrix<u64>>> = cfg.prepared.then(|| {
+        (0..batch).map(|_| Matrix::random(&base, cfg.size, cfg.size, &mut rng)).collect()
+    });
     (0..cfg.jobs)
         .map(|_| {
-            let a: Vec<Matrix<u64>> =
-                (0..batch).map(|_| Matrix::random(&base, cfg.size, cfg.size, &mut rng)).collect();
+            let a: Vec<Matrix<u64>> = match &fixed_a {
+                Some(a) => a.clone(),
+                None => (0..batch)
+                    .map(|_| Matrix::random(&base, cfg.size, cfg.size, &mut rng))
+                    .collect(),
+            };
             let b: Vec<Matrix<u64>> =
                 (0..batch).map(|_| Matrix::random(&base, cfg.size, cfg.size, &mut rng)).collect();
             let expected = if cfg.verify {
@@ -222,6 +273,42 @@ fn run_pipelined(
         ok &= finish_job(scheme, &requests[idx], handle)?;
     }
     Ok((t0.elapsed().as_secs_f64(), ok))
+}
+
+/// Run the stream through the encode-once path: encode the fixed `A`'s
+/// share halves once, stage them on every worker, then pipeline
+/// `submit_prepared` jobs that encode and ship only their B-halves.
+/// Returns the steady-state elapsed time (staging excluded), the
+/// verification flag, and the analytic `(staged A-half, summed B-half)`
+/// byte volumes actually handed to the transport — the run asserts the
+/// coordinator's counters match them exactly.
+fn run_prepared(
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    requests: &[Request],
+    inflight: usize,
+) -> anyhow::Result<(f64, bool, u64, u64)> {
+    let need = scheme.recovery_threshold();
+    let a_halves = scheme.encode_left_bytes(&requests[0].a_bytes)?;
+    let staged_bytes: u64 = a_halves.iter().map(|h| h.len() as u64).sum();
+    let prep_id = coord.prepare(a_halves)?;
+    let mut b_bytes = 0u64;
+    let mut window: VecDeque<(usize, JobHandle)> = VecDeque::with_capacity(inflight);
+    let mut ok = true;
+    let t0 = Instant::now();
+    for (idx, req) in requests.iter().enumerate() {
+        if window.len() == inflight {
+            let (oldest, handle) = window.pop_front().expect("window is non-empty");
+            ok &= finish_job(scheme, &requests[oldest], handle)?;
+        }
+        let payloads = scheme.encode_right_bytes(&req.b_bytes)?;
+        b_bytes += payloads.iter().map(|p| p.len() as u64).sum::<u64>();
+        window.push_back((idx, coord.submit_prepared(prep_id, payloads, need)?));
+    }
+    while let Some((idx, handle)) = window.pop_front() {
+        ok &= finish_job(scheme, &requests[idx], handle)?;
+    }
+    Ok((t0.elapsed().as_secs_f64(), ok, staged_bytes, b_bytes))
 }
 
 /// Build one pass's pool for the configured transport: the in-process
@@ -312,14 +399,66 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
     let (pipe_elapsed_s, pipe_ok) =
         run_pipelined(pipe_scheme.as_ref(), &mut pipe_coord, &requests, cfg.inflight)?;
     let speculative_dispatches = pipe_coord.counters().speculative_total();
+    let pipe_upload_bytes = pipe_coord.counters().upload_total();
     pipe_coord.shutdown();
     for daemon in pipe_daemons {
         daemon.join()?;
     }
 
+    // Third pass (encode-once): stage the fixed A, stream B-only jobs, and
+    // hold the proof obligations — one A-encode total, per-job upload equal
+    // to the B-halves alone, staged volume equal to the A-halves.
+    let mut prep_elapsed_s = 0.0;
+    let mut prep_ok = true;
+    let mut staged_upload_bytes = 0;
+    let mut prep_upload_bytes = 0;
+    let mut prepared_counts = (0, 0, 0);
+    let mut steady_a_encodes = 0;
+    if cfg.prepared {
+        let prep_scheme = registry::build(&cfg.scheme, &reg_cfg)?;
+        let (mut prep_coord, prep_daemons) = make_pool(cfg, &prep_scheme)?;
+        let encodes_before = prep_scheme.left_encodes();
+        let (elapsed, ok, staged_analytic, b_analytic) =
+            run_prepared(prep_scheme.as_ref(), &mut prep_coord, &requests, cfg.inflight)?;
+        let encode_delta = prep_scheme.left_encodes() - encodes_before;
+        anyhow::ensure!(
+            encode_delta == 1,
+            "encode-once violated: {encode_delta} A-side encodes for {} jobs",
+            cfg.jobs
+        );
+        steady_a_encodes = encode_delta - 1;
+        staged_upload_bytes = prep_coord.counters().staged_upload_total();
+        prep_upload_bytes = prep_coord.counters().upload_total();
+        prepared_counts = prep_coord.prepared_stats();
+        if !cfg.speculate {
+            anyhow::ensure!(
+                prep_upload_bytes == b_analytic,
+                "prepared per-job upload must be the B-halves alone \
+                 (counted {prep_upload_bytes}, analytic {b_analytic})"
+            );
+            anyhow::ensure!(
+                staged_upload_bytes == staged_analytic,
+                "staged volume must be the A-halves alone \
+                 (counted {staged_upload_bytes}, analytic {staged_analytic})"
+            );
+        }
+        anyhow::ensure!(
+            prepared_counts.0 == cfg.jobs as u64 && prepared_counts.1 == 0,
+            "every prepared job must hit the staged operand (stats {prepared_counts:?})"
+        );
+        prep_elapsed_s = elapsed;
+        prep_ok = ok;
+        prep_coord.shutdown();
+        for daemon in prep_daemons {
+            daemon.join()?;
+        }
+    }
+
     let (plan_cache_hits, plan_cache_misses) = pipe_scheme.plan_cache_stats();
     let seq_jobs_per_s = cfg.jobs as f64 / seq_elapsed_s.max(1e-12);
     let pipe_jobs_per_s = cfg.jobs as f64 / pipe_elapsed_s.max(1e-12);
+    let prep_jobs_per_s =
+        if cfg.prepared { cfg.jobs as f64 / prep_elapsed_s.max(1e-12) } else { 0.0 };
     Ok(ServeRecord {
         scheme: cfg.scheme.clone(),
         transport: cfg.transport.label().to_string(),
@@ -335,7 +474,18 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
         plan_cache_hits,
         plan_cache_misses,
         speculative_dispatches,
-        verified: seq_ok && pipe_ok,
+        prepared: cfg.prepared,
+        prep_elapsed_s,
+        prep_jobs_per_s,
+        prep_speedup: if cfg.prepared { prep_jobs_per_s / pipe_jobs_per_s.max(1e-12) } else { 0.0 },
+        staged_upload_bytes,
+        prep_upload_bytes,
+        pipe_upload_bytes,
+        prepared_hits: prepared_counts.0,
+        prepared_misses: prepared_counts.1,
+        prepared_evictions: prepared_counts.2,
+        steady_a_encodes,
+        verified: seq_ok && pipe_ok && prep_ok,
     })
 }
 
@@ -353,6 +503,18 @@ pub fn render(records: &[ServeRecord]) -> String {
                 format!("{:.2}", r.seq_jobs_per_s),
                 format!("{:.2}", r.pipe_jobs_per_s),
                 format!("{:.2}x", r.speedup),
+                if r.prepared { format!("{:.2}", r.prep_jobs_per_s) } else { "-".to_string() },
+                if r.prepared && r.jobs > 0 {
+                    // Per-job upload, full share vs B-half only — the byte
+                    // saving the encode-once path is about.
+                    format!(
+                        "{}→{}",
+                        r.pipe_upload_bytes / r.jobs as u64,
+                        r.prep_upload_bytes / r.jobs as u64
+                    )
+                } else {
+                    "-".to_string()
+                },
                 format!("{}/{}", r.plan_cache_hits, r.plan_cache_hits + r.plan_cache_misses),
                 r.verified.to_string(),
             ]
@@ -368,6 +530,8 @@ pub fn render(records: &[ServeRecord]) -> String {
             "seq jobs/s",
             "pipelined jobs/s",
             "speedup",
+            "prepared jobs/s",
+            "upload/job",
             "plan-cache hits",
             "verified",
         ],
@@ -392,6 +556,17 @@ impl ServeRecord {
             .set("plan_cache_hits", self.plan_cache_hits)
             .set("plan_cache_misses", self.plan_cache_misses)
             .set("speculative_dispatches", self.speculative_dispatches)
+            .set("prepared", self.prepared)
+            .set("prep_elapsed_s", self.prep_elapsed_s)
+            .set("prep_jobs_per_s", self.prep_jobs_per_s)
+            .set("prep_speedup", self.prep_speedup)
+            .set("staged_upload_bytes", self.staged_upload_bytes)
+            .set("prep_upload_bytes", self.prep_upload_bytes)
+            .set("pipe_upload_bytes", self.pipe_upload_bytes)
+            .set("prepared_hits", self.prepared_hits)
+            .set("prepared_misses", self.prepared_misses)
+            .set("prepared_evictions", self.prepared_evictions)
+            .set("steady_a_encodes", self.steady_a_encodes)
             .set("verified", self.verified)
     }
 }
@@ -418,6 +593,7 @@ mod tests {
             transport: ServeTransport::InProcess,
             speculate: false,
             elastic: false,
+            prepared: false,
         }
     }
 
@@ -449,6 +625,53 @@ mod tests {
         assert!(rec.verified, "every TCP-served job must decode correctly");
         assert_eq!(rec.transport, "tcp-loopback");
         assert_eq!(rec.plan_cache_hits + rec.plan_cache_misses, 6);
+    }
+
+    #[test]
+    fn prepared_serving_ships_b_only_and_verifies() {
+        let mut cfg = small_cfg("ep-rmfe-1");
+        cfg.prepared = true;
+        let rec = run(&cfg).unwrap();
+        // `run` itself asserts the encode-once obligations (one A-encode,
+        // B-only upload, all hits); here we check the surfaced record.
+        assert!(rec.verified, "all three passes must decode correctly");
+        assert!(rec.prepared);
+        assert_eq!((rec.prepared_hits, rec.prepared_misses, rec.prepared_evictions), (6, 0, 0));
+        assert_eq!(rec.steady_a_encodes, 0, "zero A-side encodes in steady state");
+        assert!(rec.staged_upload_bytes > 0, "the A-halves were staged once");
+        assert!(
+            rec.prep_upload_bytes < rec.pipe_upload_bytes,
+            "B-only jobs ({}) must upload less than full-share jobs ({})",
+            rec.prep_upload_bytes,
+            rec.pipe_upload_bytes
+        );
+        assert!(rec.prep_jobs_per_s > 0.0);
+    }
+
+    #[test]
+    fn prepared_serving_over_tcp_matches_channel_accounting() {
+        // Same prepared stream over both transports: the wire must not
+        // change the staged or per-job byte volumes (both are payload
+        // bytes), and TCP-served prepared decodes must verify too.
+        let mut cfg = small_cfg("ep-rmfe-1");
+        cfg.prepared = true;
+        let chan = run(&cfg).unwrap();
+        cfg.transport = ServeTransport::TcpLoopback;
+        let tcp = run(&cfg).unwrap();
+        assert!(tcp.verified, "prepared jobs over TCP must decode correctly");
+        assert_eq!(
+            (tcp.staged_upload_bytes, tcp.prep_upload_bytes),
+            (chan.staged_upload_bytes, chan.prep_upload_bytes),
+            "byte accounting must be transport-independent"
+        );
+    }
+
+    #[test]
+    fn prepared_serving_rejects_schemes_without_split_encode() {
+        let mut cfg = small_cfg("csa");
+        cfg.prepared = true;
+        let err = run(&cfg).unwrap_err();
+        assert!(err.to_string().contains("left operand"), "{err}");
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! gr-cdmm serve --scheme ep-rmfe-1 --workers 8 --size 128 --jobs 16 --inflight 4
 //!              [--straggler none|slow|exp|fail] [--no-verify] [--seed k] [--out results]
 //!              [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
-//!              [--speculate] [--elastic]
+//!              [--speculate] [--elastic] [--prepared]
 //! gr-cdmm worker --listen HOST:PORT --scheme ep-rmfe-1 --workers 8
 //!              [--straggler none|slow|exp|fail] [--seed k] [--once | --conns K]
 //! gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
@@ -78,7 +78,7 @@ USAGE:
   gr-cdmm serve --scheme NAME --workers 4|8|16|32 --size 128 --jobs 16 --inflight 4
                [--straggler none|slow|exp|fail] [--no-verify] [--seed K] [--out DIR]
                [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
-               [--speculate] [--elastic]
+               [--speculate] [--elastic] [--prepared]
   gr-cdmm worker --listen HOST:PORT --scheme NAME --workers 4|8|16|32
                [--straggler none|slow|exp|fail] [--seed K] [--once | --conns K]
   gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
@@ -89,7 +89,10 @@ your choice), then `serve --connect addr1,addr2,...` — the scheme name and
 worker count must match on both sides. `--speculate` turns on health-check
 pings and speculative re-dispatch of overdue shards; `--elastic` lets a
 short `--connect` list downgrade to the largest scheme preset its live
-daemons can serve instead of erroring."
+daemons can serve instead of erroring. `--prepared` fixes one A across the
+stream and adds an encode-once pass: A's share halves are staged on the
+workers once and every job ships only its B-halves (the run asserts zero
+steady-state A-encodes and B-only per-job upload)."
     );
 }
 
@@ -233,6 +236,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         transport,
         speculate: args.flag("speculate"),
         elastic: args.flag("elastic"),
+        prepared: args.flag("prepared"),
     };
     let rec = serving::run(&cfg)?;
     println!(
@@ -250,6 +254,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         rec.plan_cache_misses,
         rec.verified
     );
+    if rec.prepared {
+        println!(
+            "prepared (encode-once) {:.2} jobs/s ({:.2}x over pipelined); \
+             per-job upload {} B → {} B (B-halves only), A-halves staged once ({} B); \
+             store {} hits / {} misses / {} evictions; steady-state A-encodes: {}",
+            rec.prep_jobs_per_s,
+            rec.prep_speedup,
+            rec.pipe_upload_bytes / rec.jobs.max(1) as u64,
+            rec.prep_upload_bytes / rec.jobs.max(1) as u64,
+            rec.staged_upload_bytes,
+            rec.prepared_hits,
+            rec.prepared_misses,
+            rec.prepared_evictions,
+            rec.steady_a_encodes
+        );
+    }
     if let Some(dir) = args.get("out") {
         std::fs::create_dir_all(dir)?;
         let path = format!("{dir}/serving_throughput.json");

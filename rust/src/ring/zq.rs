@@ -355,7 +355,11 @@ impl Ring for Zq {
             // overlap (fresh allocation). Little-endian byte order matches
             // the wire format.
             unsafe {
-                std::ptr::copy_nonoverlapping(src.as_ptr(), out.as_mut_ptr().cast::<u8>(), count * 8);
+                std::ptr::copy_nonoverlapping(
+                    src.as_ptr(),
+                    out.as_mut_ptr().cast::<u8>(),
+                    count * 8,
+                );
             }
             out
         } else {

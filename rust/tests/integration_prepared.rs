@@ -1,0 +1,293 @@
+//! Encode-once (prepared-operand) integration: staging a fixed `A`'s share
+//! halves and streaming B-only jobs must decode **bit-identically** to the
+//! joint-encode path — on the in-process channel transport and on real TCP
+//! daemons, under every straggler model — while the per-job upload drops to
+//! the B-halves alone and the staged volume equals the A-halves, byte for
+//! byte and identically across transports. Worker flaps mid-stream are
+//! re-staged transparently; evicted or released operands fail cleanly.
+
+use gr_cdmm::codes::registry::{self, SchemeConfig};
+use gr_cdmm::codes::DynScheme;
+use gr_cdmm::coordinator::runner::{
+    make_coordinator, prepare_erased, run_erased, run_prepared_erased,
+};
+use gr_cdmm::coordinator::{
+    Coordinator, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
+};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::rng::Rng64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N: usize = 8;
+const SIZE: usize = 16;
+const JOBS: usize = 3;
+
+fn scheme8() -> Arc<dyn DynScheme> {
+    registry::build("ep-rmfe-1", &SchemeConfig::for_workers(N).unwrap()).unwrap()
+}
+
+/// One fixed A and a stream of Bs — the fixed-weight serving shape.
+fn inputs(seed: u64) -> (Matrix<u64>, Vec<Matrix<u64>>) {
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(seed);
+    let a = Matrix::random(&base, SIZE, SIZE, &mut rng);
+    let bs = (0..JOBS).map(|_| Matrix::random(&base, SIZE, SIZE, &mut rng)).collect();
+    (a, bs)
+}
+
+#[derive(Clone, Copy)]
+enum Kind {
+    Channel,
+    Tcp,
+}
+
+/// Fresh pool of `N` workers for one pass: in-process channels, or one
+/// loopback daemon per worker (same straggler model + seed, so the draws
+/// match the channel pool exactly).
+fn pool(
+    kind: Kind,
+    scheme: &Arc<dyn DynScheme>,
+    straggler: StragglerModel,
+    seed: u64,
+    conns: usize,
+) -> (Coordinator, Vec<WorkerDaemon>) {
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(scheme)));
+    match kind {
+        Kind::Channel => {
+            (make_coordinator(N, backend, straggler, seed, None).unwrap(), Vec::new())
+        }
+        Kind::Tcp => {
+            let daemons: Vec<WorkerDaemon> = (0..N)
+                .map(|_| {
+                    WorkerDaemon::spawn_local(
+                        Arc::clone(&backend),
+                        straggler.clone(),
+                        seed,
+                        conns,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+            (Coordinator::connect_tcp(&addrs).unwrap(), daemons)
+        }
+    }
+}
+
+fn shutdown(mut coord: Coordinator, daemons: Vec<WorkerDaemon>) {
+    coord.shutdown();
+    for d in daemons {
+        d.join().unwrap();
+    }
+}
+
+/// The tentpole proof, swept across both transports and all four straggler
+/// models: prepared decodes bit-identical to the joint-encode reference,
+/// per-job upload exactly the analytic B-side, staged volume exactly the
+/// analytic A-side, one A-encode for the whole stream — and the send-side
+/// byte accounting identical between channel and TCP pools.
+#[test]
+fn prepared_matches_joint_encode_on_both_transports_under_all_stragglers() {
+    let base = Zq::z2e(64);
+    let models: [(&str, StragglerModel); 4] = [
+        ("none", StragglerModel::None),
+        ("slow", StragglerModel::fixed_slow([0, 1], Duration::from_millis(5))),
+        ("exp", StragglerModel::Exponential { mean: Duration::from_millis(2) }),
+        ("fail", StragglerModel::fail_stop([N - 1])),
+    ];
+    for (name, model) in &models {
+        // Per-model accounting, compared across the two transports.
+        let mut per_transport: Vec<(u64, u64)> = Vec::new();
+        for kind in [Kind::Channel, Kind::Tcp] {
+            let (a, bs) = inputs(0x9e37 ^ name.len() as u64);
+
+            // Joint-encode reference stream on a fresh pool.
+            let ref_scheme = scheme8();
+            let (mut coord, daemons) = pool(kind, &ref_scheme, model.clone(), 11, 1);
+            let mut want = Vec::new();
+            for b in &bs {
+                let (out, _) = run_erased(
+                    &base,
+                    ref_scheme.as_ref(),
+                    &mut coord,
+                    std::slice::from_ref(&a),
+                    std::slice::from_ref(b),
+                )
+                .unwrap();
+                want.push(out);
+            }
+            shutdown(coord, daemons);
+
+            // Prepared stream: fresh scheme (its A-encode counter starts at
+            // zero) and a fresh pool with the same seed (same draws).
+            let scheme = scheme8();
+            let (mut coord, daemons) = pool(kind, &scheme, model.clone(), 11, 1);
+            let id =
+                prepare_erased(&base, scheme.as_ref(), &mut coord, std::slice::from_ref(&a))
+                    .unwrap();
+            let (a_side, b_side) = scheme
+                .split_upload_bytes(SIZE, SIZE, SIZE)
+                .expect("ep-rmfe-1 has independent operand encodes");
+            assert_eq!(
+                coord.counters().staged_upload_total(),
+                a_side as u64,
+                "staging uploads exactly the A-halves ({name})"
+            );
+            for (b, want) in bs.iter().zip(&want) {
+                let (out, m) = run_prepared_erased(
+                    &base,
+                    scheme.as_ref(),
+                    &mut coord,
+                    id,
+                    std::slice::from_ref(b),
+                )
+                .unwrap();
+                assert_eq!(&out, want, "prepared decode must be bit-identical ({name})");
+                assert_eq!(
+                    m.upload_bytes, b_side as u64,
+                    "a prepared job ships only its B-halves ({name})"
+                );
+                assert_eq!(m.staged_upload_bytes, 0, "no re-staging in steady state");
+                assert_eq!((m.prepared_hits, m.prepared_misses), (1, 0));
+            }
+            assert_eq!(
+                scheme.left_encodes(),
+                1,
+                "exactly one A-side encode for the whole stream ({name})"
+            );
+            per_transport
+                .push((coord.counters().staged_upload_total(), coord.counters().upload_total()));
+            shutdown(coord, daemons);
+        }
+        assert_eq!(
+            per_transport[0], per_transport[1],
+            "staged/per-job upload accounting must be transport-independent ({name})"
+        );
+    }
+}
+
+/// A TCP worker link flaps mid-stream. While it is down, its shard of a
+/// prepared job fail-stops byte-free and the decode completes from the
+/// other `R`-of-`N`; on reconnect the master re-stages exactly that
+/// worker's A-half (under the same transport lock, so no prepared job can
+/// race ahead of its operand), and the worker serves again.
+#[test]
+fn tcp_worker_flap_is_restaged_and_prepared_decodes_stay_correct() {
+    let base = Zq::z2e(64);
+    let scheme = scheme8();
+    // Two connections per daemon: the original link plus the re-dial.
+    let (mut coord, daemons) = pool(Kind::Tcp, &scheme, StragglerModel::None, 23, 2);
+    let (a, bs) = inputs(0x7177);
+    let want: Vec<Matrix<u64>> = bs.iter().map(|b| Matrix::matmul(&base, &a, b)).collect();
+
+    let id =
+        prepare_erased(&base, scheme.as_ref(), &mut coord, std::slice::from_ref(&a)).unwrap();
+    let staged_once = coord.counters().staged_upload_total();
+    assert_eq!(staged_once % N as u64, 0, "equal-size halves across the pool");
+
+    let (out, _) = run_prepared_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        id,
+        std::slice::from_ref(&bs[0]),
+    )
+    .unwrap();
+    assert_eq!(out, vec![want[0].clone()]);
+
+    // Link down: the daemon's staged state dies with the connection.
+    coord.disconnect_worker(5).unwrap();
+    let (out, m) = run_prepared_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        id,
+        std::slice::from_ref(&bs[1]),
+    )
+    .unwrap();
+    assert_eq!(out, vec![want[1].clone()], "decode completes from the live R-of-N");
+    assert!(!m.used_workers.contains(&5), "the dead worker contributed nothing");
+
+    // Reconnect re-dials and re-stages that worker's half — and only it.
+    coord.reconnect_worker(5, None).unwrap();
+    assert_eq!(
+        coord.counters().staged_upload_total(),
+        staged_once + staged_once / N as u64,
+        "reconnect re-stages exactly one worker's A-half"
+    );
+    let (out, _) = run_prepared_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        id,
+        std::slice::from_ref(&bs[2]),
+    )
+    .unwrap();
+    assert_eq!(out, vec![want[2].clone()]);
+    shutdown(coord, daemons);
+}
+
+/// Capacity pressure and explicit release: the evicted/released id misses
+/// at the store (and is evicted worker-side too), the surviving operand
+/// keeps serving bit-identically, and the stats ledger matches exactly.
+#[test]
+fn evicted_and_released_prepared_operands_fail_cleanly() {
+    let base = Zq::z2e(64);
+    let scheme = scheme8();
+    let (mut coord, daemons) = pool(Kind::Channel, &scheme, StragglerModel::None, 31, 1);
+    coord.set_prepared_capacity(1);
+
+    let (a1, bs) = inputs(0x8811);
+    let mut rng = Rng64::seeded(0x8822);
+    let a2 = Matrix::random(&base, SIZE, SIZE, &mut rng);
+
+    let id1 =
+        prepare_erased(&base, scheme.as_ref(), &mut coord, std::slice::from_ref(&a1)).unwrap();
+    let id2 =
+        prepare_erased(&base, scheme.as_ref(), &mut coord, std::slice::from_ref(&a2)).unwrap();
+    assert_ne!(id1, id2);
+
+    // id1 was LRU-evicted by id2's insert: a job naming it is rejected at
+    // the master (one counted miss), before any bytes move.
+    let err = run_prepared_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        id1,
+        std::slice::from_ref(&bs[0]),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("evicted"), "{err}");
+
+    // id2 still serves, bit-identical to the local reference.
+    let (out, m) = run_prepared_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        id2,
+        std::slice::from_ref(&bs[0]),
+    )
+    .unwrap();
+    assert_eq!(out, vec![Matrix::matmul(&base, &a2, &bs[0])]);
+    assert_eq!((m.prepared_hits, m.prepared_misses), (1, 0));
+
+    // Explicit release: the id misses from then on; double-release no-ops.
+    assert!(coord.release_prepared(id2).unwrap());
+    assert!(!coord.release_prepared(id2).unwrap());
+    let err = run_prepared_erased(
+        &base,
+        scheme.as_ref(),
+        &mut coord,
+        id2,
+        std::slice::from_ref(&bs[1]),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("evicted"), "{err}");
+
+    // Ledger: one hit (the id2 job), two misses (evicted id1 + released
+    // id2), one capacity eviction (release is not an eviction).
+    assert_eq!(coord.prepared_stats(), (1, 2, 1));
+    shutdown(coord, daemons);
+}

@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench bench-json bench-serving bench-simd serve-tcp-demo serve-elastic-demo serve-prepared-demo artifacts clean
+.PHONY: build test bench bench-json bench-serving bench-simd serve-tcp-demo serve-elastic-demo serve-prepared-demo serve-byzantine-demo artifacts clean
 
 build:
 	cargo build --release
@@ -112,6 +112,31 @@ serve-prepared-demo: build
 	  --jobs 12 --inflight 4 --prepared --speculate \
 	  --connect 127.0.0.1:7861,127.0.0.1:7862,127.0.0.1:7863,127.0.0.1:7864; \
 	echo "[demo] prepared batch completed and verified despite the flap"
+
+# Byzantine-fault demo: four daemons on loopback, one of them started with
+# --corrupt silent-wrong-share (wrong-but-wellformed responses on every
+# job). The N = 4 CSA preset has R = 3, one unit of slack: `serve
+# --verify-products` cross-checks each decode against the surplus share,
+# isolates the corrupt daemon by leave-one-out re-decode, quarantines it,
+# and serves every product bit-identical to the local reference (serve
+# exits nonzero otherwise — never an unverified wrong product). Each daemon
+# exits after the single verified pass (--conns 1), so `wait` reaps them.
+serve-byzantine-demo: build
+	@set -e; \
+	trap 'kill $$(jobs -p) 2>/dev/null || true' EXIT; \
+	for port in 7871 7872 7873; do \
+	  ./target/release/gr-cdmm worker --listen 127.0.0.1:$$port \
+	    --scheme csa --workers 4 --conns 1 & \
+	done; \
+	echo "[demo] the :7874 daemon silently corrupts every response"; \
+	./target/release/gr-cdmm worker --listen 127.0.0.1:7874 \
+	  --scheme csa --workers 4 --conns 1 --corrupt silent-wrong-share & \
+	./target/release/gr-cdmm serve --scheme csa --workers 4 --size 64 \
+	  --jobs 8 --inflight 4 --verify-products \
+	  --connect 127.0.0.1:7871,127.0.0.1:7872,127.0.0.1:7873,127.0.0.1:7874; \
+	echo "[demo] every product verified; the corrupt daemon was quarantined"; \
+	wait; \
+	trap - EXIT
 
 # Machine-readable run of the full bench suite (quick settings): refreshes
 # every BENCH_<name>.json at the repo root, including the kernel and

@@ -23,7 +23,7 @@
 //! volumes full-share vs B-only vs staged, plan-cache and prepared-store
 //! counters, verification).
 
-use gr_cdmm::coordinator::StragglerModel;
+use gr_cdmm::coordinator::{CorruptionModel, StragglerModel};
 use gr_cdmm::experiments::serving::{
     records_to_json, render, run, ServeConfig, ServeTransport,
 };
@@ -52,8 +52,12 @@ fn main() {
                     jobs: 16,
                     inflight: 4,
                     straggler: straggler.clone(),
+                    corrupt: CorruptionModel::None,
                     seed: 42,
                     verify: true,
+                    // The verified pass replaces the throughput passes, so
+                    // it is exercised by serve/CI, not benched here.
+                    verify_products: false,
                     transport,
                     speculate: false,
                     elastic: false,

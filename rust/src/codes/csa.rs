@@ -281,6 +281,77 @@ impl<E: PlaneRing> CsaCode<E> {
             acc
         }))
     }
+
+    /// Consistency-check surplus responses by solving the **full**
+    /// Cauchy–Vandermonde system on the first `R` responses — all `2n−1`
+    /// unknowns, including the cross-term polynomial coefficients the
+    /// normal decode never materializes — and predicting each surplus
+    /// worker's response as `Z(α) = row(α) · unknowns`. A flagged response
+    /// disagrees with the codeword the first `R` responses determine;
+    /// empty flags mean the whole set is consistent. Uncached: the decode
+    /// plan cache only keeps the first `n` inverse rows.
+    pub fn check_surplus_planes(
+        &self,
+        responses: &[Response<E>],
+    ) -> anyhow::Result<Vec<usize>> {
+        let ring = &self.ring;
+        let rt = self.threshold();
+        anyhow::ensure!(
+            responses.len() > rt,
+            "no surplus to check: {} responses for threshold {rt}",
+            responses.len()
+        );
+        let used = &responses[..rt];
+        let (zr, zc) = (used[0].1.rows, used[0].1.cols);
+        let m = ring.plane_count();
+        let mut seen = vec![false; self.n_workers];
+        for (idx, z) in responses {
+            anyhow::ensure!(*idx < self.n_workers, "worker index {idx} out of range");
+            anyhow::ensure!(!seen[*idx], "duplicate response from worker {idx}");
+            seen[*idx] = true;
+            anyhow::ensure!(
+                z.rows == zr && z.cols == zc && z.planes == m,
+                "response from worker {idx} has shape {}x{} ({} planes), expected {zr}x{zc} ({m})",
+                z.rows,
+                z.cols,
+                z.planes
+            );
+        }
+        let mut sys = Matrix::zeros(ring, rt, rt);
+        for (row_i, (widx, _)) in used.iter().enumerate() {
+            let row = self.system_row(&self.alphas[*widx]);
+            for (col, v) in row.into_iter().enumerate() {
+                sys.set(row_i, col, v);
+            }
+        }
+        let inv = sys
+            .invert(ring)
+            .ok_or_else(|| anyhow::anyhow!("Cauchy–Vandermonde system not invertible"))?;
+        let base = ring.plane_base();
+        let unknowns: Vec<PlaneMatrix<E::Base>> = (0..rt)
+            .map(|k| {
+                let mut acc = PlaneMatrix::zeros(ring, zr, zc);
+                for (col, (_, z)) in used.iter().enumerate() {
+                    let tbl = ScalarTable::build(ring, inv.at(k, col));
+                    acc.axpy_with_table(base, &tbl, z);
+                }
+                acc
+            })
+            .collect();
+        let mut flagged = Vec::new();
+        for (idx, z) in &responses[rt..] {
+            let row = self.system_row(&self.alphas[*idx]);
+            let mut expected = PlaneMatrix::zeros(ring, zr, zc);
+            for (k, coeff) in row.iter().enumerate() {
+                let tbl = ScalarTable::build(ring, coeff);
+                expected.axpy_with_table(base, &tbl, &unknowns[k]);
+            }
+            if expected != *z {
+                flagged.push(*idx);
+            }
+        }
+        Ok(flagged)
+    }
 }
 
 impl<E: PlaneRing> DmmScheme<E> for CsaCode<E> {
@@ -333,6 +404,10 @@ impl<E: PlaneRing> DmmScheme<E> for CsaCode<E> {
 
     fn plan_cache_stats(&self) -> (u64, u64) {
         self.plan_cache.stats()
+    }
+
+    fn check_surplus(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<usize>> {
+        self.check_surplus_planes(responses)
     }
 }
 
@@ -429,6 +504,40 @@ mod tests {
         // n + N must fit in the exceptional set: 3 + 6 = 9 > 8 = 2^3.
         let ring = Extension::new(Zq::z2e(64), 3);
         assert!(CsaCode::new(ring, 6, 3).is_err());
+    }
+
+    #[test]
+    fn csa_surplus_check_accepts_clean_and_flags_corrupt() {
+        let ring = Extension::new(Zq::z2e(64), 4);
+        let csa = CsaCode::new(ring.clone(), 8, 3).unwrap(); // R = 5, slack 3
+        let mut rng = Rng64::seeded(147);
+        let a: Vec<_> = (0..3).map(|_| Matrix::random(&ring, 2, 2, &mut rng)).collect();
+        let b: Vec<_> = (0..3).map(|_| Matrix::random(&ring, 2, 2, &mut rng)).collect();
+        let shares = csa.encode_batch(&a, &b).unwrap();
+        let all: Vec<_> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, csa.worker_compute(s).unwrap()))
+            .collect();
+
+        // All eight clean responses lie on one codeword.
+        assert_eq!(csa.check_surplus_planes(&all).unwrap(), Vec::<usize>::new());
+
+        // A tampered surplus response is flagged by worker id.
+        let mut tampered = all.clone();
+        tampered[6].1.data[0] = tampered[6].1.data[0].wrapping_add(1);
+        assert_eq!(csa.check_surplus_planes(&tampered).unwrap(), vec![6]);
+        // Same answer through the trait hook.
+        assert_eq!(csa.check_surplus(&tampered).unwrap(), vec![6]);
+
+        // A corrupt response inside the first R poisons the reference:
+        // the check reports inconsistency (non-empty) without naming it.
+        let mut poisoned = all.clone();
+        poisoned[1].1.data[0] = poisoned[1].1.data[0].wrapping_add(1);
+        assert!(!csa.check_surplus_planes(&poisoned).unwrap().is_empty());
+
+        // No surplus at all is an error, not a vacuous pass.
+        assert!(csa.check_surplus_planes(&all[..5]).is_err());
     }
 
     #[test]

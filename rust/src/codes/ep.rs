@@ -36,15 +36,16 @@
 
 use super::encode_plan::{LagrangeDecodePlan, PowerTables};
 use super::plan_cache::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
-use super::scheme::{DmmScheme, Partition, Response, Share};
+use super::scheme::{freivalds_check, DmmScheme, Partition, Response, Share};
 use crate::ring::extension::Extension;
 use crate::ring::galois::ExtensibleRing;
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::{PlaneMatrix, PlaneRing, ScalarTable};
 use crate::ring::traits::Ring;
 use crate::util::parallel;
+use crate::util::rng::Rng64;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// EP code operating directly over a ring `E` with at least `N` exceptional
 /// points (typically an extension ring).
@@ -65,6 +66,12 @@ pub struct EpCode<E: PlaneRing> {
     /// left-only encode; `Arc` so clones share it (the serving bench
     /// asserts the count stays flat across prepared steady-state jobs).
     left_encodes: Arc<AtomicU64>,
+    /// The verify plan: per-point power tables for *every* exponent of `h`
+    /// (degree `R−1`, strictly more than the encode plan's sparse layouts
+    /// cover), used to re-encode an interpolated `h` at spare evaluation
+    /// points for surplus consistency checking. Built lazily on the first
+    /// verified decode; `Arc` so clones share it.
+    verify_plan: Arc<OnceLock<PowerTables<E>>>,
 }
 
 impl<E: PlaneRing> EpCode<E> {
@@ -90,6 +97,7 @@ impl<E: PlaneRing> EpCode<E> {
             encode_plan,
             plan_cache: Arc::new(PlanCache::new(DEFAULT_PLAN_CACHE_CAP)),
             left_encodes: Arc::new(AtomicU64::new(0)),
+            verify_plan: Arc::new(OnceLock::new()),
         })
     }
 
@@ -321,6 +329,73 @@ impl<E: PlaneRing> EpCode<E> {
         Ok(PlaneMatrix::stitch_grid(&c_blocks, u, v))
     }
 
+    /// Consistency-check surplus responses by **re-encode-and-compare**:
+    /// interpolate *all* `R` coefficients of `h` from the first `R`
+    /// responses (not just the `uv` product coefficients decode reads),
+    /// evaluate `h` at each surplus worker's evaluation point with the
+    /// lazily-built verify plan, and flag every surplus response that
+    /// disagrees with its re-encoding. Empty flags mean the whole response
+    /// set lies on one degree-`R−1` codeword — the overdetermined-decode
+    /// consistency guarantee. One interpolation plus a cheap sparse-style
+    /// evaluation per surplus share, instead of the default's full decode
+    /// per surplus response.
+    pub fn check_surplus_planes(
+        &self,
+        responses: &[Response<E>],
+    ) -> anyhow::Result<Vec<usize>> {
+        let ring = &self.ring;
+        let r_needed = self.part.recovery_threshold();
+        anyhow::ensure!(
+            responses.len() > r_needed,
+            "no surplus to check: {} responses for threshold {r_needed}",
+            responses.len()
+        );
+        let used = &responses[..r_needed];
+        let (bh, bw, m) = (used[0].1.rows, used[0].1.cols, ring.plane_count());
+        let mut seen = vec![false; self.n_workers];
+        for (idx, y) in responses {
+            anyhow::ensure!(*idx < self.n_workers, "worker index {idx} out of range");
+            anyhow::ensure!(!seen[*idx], "duplicate response from worker {idx}");
+            seen[*idx] = true;
+            anyhow::ensure!(
+                y.rows == bh && y.cols == bw && y.planes == m,
+                "response from worker {idx} has shape {}x{} ({} planes), expected {bh}x{bw} ({m})",
+                y.rows,
+                y.cols,
+                y.planes
+            );
+        }
+        // Interpolate every coefficient of h on the first R responses. The
+        // exponent set (0..R) differs from the decode plan's c_exponents,
+        // so this plan is built fresh rather than borrowed from the cache.
+        let pts: Vec<E::Elem> = used.iter().map(|(i, _)| self.points[*i].clone()).collect();
+        let all_exps: Vec<usize> = (0..r_needed).collect();
+        let plan = LagrangeDecodePlan::build(ring, &pts, &all_exps);
+        let base = ring.plane_base();
+        let coeffs: Vec<PlaneMatrix<E::Base>> = (0..r_needed)
+            .map(|k| {
+                let mut acc = PlaneMatrix::zeros(ring, bh, bw);
+                for (j, (_, y)) in used.iter().enumerate() {
+                    acc.axpy_with_table(base, plan.table(j, k), y);
+                }
+                acc
+            })
+            .collect();
+        // Re-encode h at each surplus point and compare bit-for-bit.
+        let tables = self
+            .verify_plan
+            .get_or_init(|| PowerTables::build(ring, &self.points, r_needed - 1));
+        let mut flagged = Vec::new();
+        for (idx, y) in &responses[r_needed..] {
+            let expected =
+                Self::eval_sparse_tables(ring, &coeffs, &all_exps, tables.point(*idx));
+            if expected != *y {
+                flagged.push(*idx);
+            }
+        }
+        Ok(flagged)
+    }
+
     /// Per-worker byte size of the A-side share half (`f(α_i)`, serialized).
     pub fn a_share_bytes(&self, t: usize, r: usize) -> usize {
         let Partition { u, w, .. } = self.part;
@@ -426,6 +501,10 @@ impl<E: PlaneRing> DmmScheme<E> for EpCode<E> {
 
     fn plan_cache_stats(&self) -> (u64, u64) {
         self.plan_cache.stats()
+    }
+
+    fn check_surplus(&self, responses: &[Response<E>]) -> anyhow::Result<Vec<usize>> {
+        self.check_surplus_planes(responses)
     }
 }
 
@@ -559,6 +638,44 @@ impl<R: ExtensibleRing> DmmScheme<R> for PlainEp<R> {
 
     fn plan_cache_stats(&self) -> (u64, u64) {
         self.ep.plan_cache.stats()
+    }
+
+    fn check_surplus(
+        &self,
+        responses: &[Response<Extension<R>>],
+    ) -> anyhow::Result<Vec<usize>> {
+        self.ep.check_surplus_planes(responses)
+    }
+
+    fn verify_products(
+        &self,
+        a: &[Matrix<R::Elem>],
+        b: &[Matrix<R::Elem>],
+        c: &[Matrix<R::Elem>],
+        trials: usize,
+        rng: &mut Rng64,
+    ) -> anyhow::Result<bool> {
+        anyhow::ensure!(
+            a.len() == b.len() && b.len() == c.len(),
+            "batch slots disagree: {} a, {} b, {} c",
+            a.len(),
+            b.len(),
+            c.len()
+        );
+        // Lift the check into the extension: its exceptional set has p^{dm}
+        // points versus the base ring's p^d, shrinking the per-trial error
+        // accordingly (constant embedding is a ring homomorphism, so
+        // a·b = c in the base ⟺ in the extension).
+        let ext = &self.ep.ring;
+        for ((ak, bk), ck) in a.iter().zip(b).zip(c) {
+            let ae = PlaneMatrix::from_base_matrix(ext, ak).to_aos(ext);
+            let be = PlaneMatrix::from_base_matrix(ext, bk).to_aos(ext);
+            let ce = PlaneMatrix::from_base_matrix(ext, ck).to_aos(ext);
+            if !freivalds_check(ext, &ae, &be, &ce, trials, rng)? {
+                return Ok(false);
+            }
+        }
+        Ok(true)
     }
 }
 
@@ -808,6 +925,73 @@ mod tests {
         let (sa, sb) = DmmScheme::split_upload_bytes(&plain, 4, 4, 4).unwrap();
         assert_eq!(sa + sb, plain.upload_bytes(4, 4, 4));
         assert_eq!(DmmScheme::left_encodes(&plain), 2);
+    }
+
+    #[test]
+    fn surplus_check_accepts_clean_responses_and_flags_corrupt_ones() {
+        let ep = EpCode::new(ext_ring(3), 8, 2, 1, 2).unwrap();
+        let ring = ep.share_ring().clone();
+        let mut rng = Rng64::seeded(113);
+        let a = Matrix::random(&ring, 2, 2, &mut rng);
+        let b = Matrix::random(&ring, 2, 2, &mut rng);
+        let shares = ep.encode(&a, &b).unwrap();
+        let all: Vec<_> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, ep.worker_compute(s).unwrap()))
+            .collect();
+        // Clean run: all 8 responses (4 surplus) lie on one codeword.
+        assert_eq!(ep.check_surplus_planes(&all).unwrap(), Vec::<usize>::new());
+
+        // A corrupted *surplus* response is flagged by worker id, and the
+        // honest surplus responses are not.
+        let mut tampered = all.clone();
+        tampered[6].1.data[0] = tampered[6].1.data[0].wrapping_add(1);
+        assert_eq!(ep.check_surplus_planes(&tampered).unwrap(), vec![6]);
+
+        // A corrupted response inside the first R poisons the
+        // interpolation: the check cannot name the culprit but must not
+        // come back clean (leave-one-out isolation takes over from here).
+        let mut poisoned = all.clone();
+        poisoned[1].1.data[0] = poisoned[1].1.data[0].wrapping_add(1);
+        assert!(!ep.check_surplus_planes(&poisoned).unwrap().is_empty());
+
+        // No surplus at all is a usage error, not a silent pass.
+        assert!(ep.check_surplus_planes(&all[..4]).is_err());
+
+        // The trait hook routes to the same specialization.
+        assert_eq!(ep.check_surplus(&tampered).unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn plain_ep_freivalds_accepts_the_product_and_rejects_a_forgery() {
+        let base = Zq::z2e(64);
+        let plain = PlainEp::new(base.clone(), 8, 2, 1, 2).unwrap();
+        let mut rng = Rng64::seeded(114);
+        let a = Matrix::random(&base, 4, 4, &mut rng);
+        let b = Matrix::random(&base, 4, 4, &mut rng);
+        let c = Matrix::matmul(&base, &a, &b);
+        let mut check_rng = Rng64::seeded(42);
+        assert!(plain
+            .verify_products(
+                std::slice::from_ref(&a),
+                std::slice::from_ref(&b),
+                std::slice::from_ref(&c),
+                10,
+                &mut check_rng
+            )
+            .unwrap());
+        let mut wrong = c.clone();
+        wrong.data[0] = base.add(&wrong.data[0], &base.one());
+        assert!(!plain
+            .verify_products(
+                std::slice::from_ref(&a),
+                std::slice::from_ref(&b),
+                std::slice::from_ref(&wrong),
+                40,
+                &mut check_rng
+            )
+            .unwrap());
     }
 
     #[test]

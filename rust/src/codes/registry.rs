@@ -15,11 +15,12 @@ use super::csa::CsaCode;
 use super::ep::PlainEp;
 use super::ep_rmfe_i::EpRmfeI;
 use super::ep_rmfe_ii::EpRmfeII;
-use super::scheme::{DmmScheme, DynScheme, Erased, Response, Share};
+use super::scheme::{freivalds_check, DmmScheme, DynScheme, Erased, Response, Share};
 use crate::ring::extension::Extension;
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::PlaneMatrix;
 use crate::ring::zq::Zq;
+use crate::util::rng::Rng64;
 use std::sync::Arc;
 
 /// Parameters shared by every registry scheme: worker count `N`, extension
@@ -177,6 +178,42 @@ impl DmmScheme<Zq> for CsaZq {
     fn plan_cache_stats(&self) -> (u64, u64) {
         self.inner.plan_cache_stats()
     }
+
+    fn check_surplus(
+        &self,
+        responses: &[Response<Extension<Zq>>],
+    ) -> anyhow::Result<Vec<usize>> {
+        self.inner.check_surplus_planes(responses)
+    }
+
+    fn verify_products(
+        &self,
+        a: &[Matrix<u64>],
+        b: &[Matrix<u64>],
+        c: &[Matrix<u64>],
+        trials: usize,
+        rng: &mut Rng64,
+    ) -> anyhow::Result<bool> {
+        // Over Z_{2^64} the exceptional set has only 2 points (error 1/2 per
+        // trial); constant-embed into the extension — a ring homomorphism —
+        // where the canonical set has 2^m points, so each trial's error is
+        // 2^{-m}.
+        let ext = self.inner.share_ring();
+        let lift = |ms: &[Matrix<u64>]| -> Vec<Matrix<_>> {
+            ms.iter().map(|mk| PlaneMatrix::from_base_matrix(ext, mk).to_aos(ext)).collect()
+        };
+        let (la, lb, lc) = (lift(a), lift(b), lift(c));
+        anyhow::ensure!(
+            la.len() == lb.len() && lb.len() == lc.len(),
+            "verify_products: slot-count mismatch"
+        );
+        for k in 0..la.len() {
+            if !freivalds_check(ext, &la[k], &lb[k], &lc[k], trials, rng)? {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
 }
 
 #[cfg(test)]
@@ -225,6 +262,62 @@ mod tests {
         let cfg = SchemeConfig::for_workers(4).unwrap();
         for (name, _) in SCHEME_NAMES {
             byte_roundtrip(name, &cfg, 8, 610);
+        }
+    }
+
+    #[test]
+    fn verified_decode_accepts_every_clean_run_for_all_schemes() {
+        // Registry-wide property: with every worker answering honestly, the
+        // whole verification stack — wellformedness, surplus consistency,
+        // Freivalds — accepts, and a single flipped byte in a surplus
+        // response is caught.
+        let base = Zq::z2e(64);
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        for (seed, (name, _)) in SCHEME_NAMES.iter().enumerate() {
+            let scheme = build(name, &cfg).unwrap();
+            let n = scheme.batch_size();
+            let mut rng = Rng64::seeded(620 + seed as u64);
+            let a: Vec<_> = (0..n).map(|_| Matrix::random(&base, 6, 6, &mut rng)).collect();
+            let b: Vec<_> = (0..n).map(|_| Matrix::random(&base, 6, 6, &mut rng)).collect();
+            let a_bytes: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(&base)).collect();
+            let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(&base)).collect();
+            let payloads = scheme.encode_bytes(&a_bytes, &b_bytes).unwrap();
+            let responses: Vec<(usize, Vec<u8>)> = payloads
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (i, scheme.compute_bytes(p).unwrap()))
+                .collect();
+            for (i, p) in &responses {
+                assert!(scheme.response_is_wellformed(p), "{name} worker {i}");
+            }
+            let borrowed: Vec<(usize, &[u8])> =
+                responses.iter().map(|(i, p)| (*i, p.as_slice())).collect();
+            assert_eq!(
+                scheme.check_surplus_bytes(&borrowed).unwrap(),
+                Vec::<usize>::new(),
+                "{name}: clean surplus must be consistent"
+            );
+            let rt = scheme.recovery_threshold();
+            let c_bytes = scheme.decode_bytes(&borrowed[..rt]).unwrap();
+            let mut vrng = Rng64::seeded(9000 + seed as u64);
+            assert!(
+                scheme
+                    .verify_products_bytes(&a_bytes, &b_bytes, &c_bytes, 16, &mut vrng)
+                    .unwrap(),
+                "{name}: Freivalds must accept the true product"
+            );
+            // One flipped byte in the last (surplus) response gets flagged.
+            let mut tampered = responses.clone();
+            let last = tampered.len() - 1;
+            let mid = tampered[last].1.len() / 2;
+            tampered[last].1[mid] ^= 0x01;
+            let tb: Vec<(usize, &[u8])> =
+                tampered.iter().map(|(i, p)| (*i, p.as_slice())).collect();
+            let flagged = scheme.check_surplus_bytes(&tb).unwrap();
+            assert!(
+                flagged.contains(&last),
+                "{name}: tampered surplus worker {last} not in {flagged:?}"
+            );
         }
     }
 

@@ -15,8 +15,70 @@
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
+use crate::util::rng::Rng64;
 use std::marker::PhantomData;
 use std::sync::Arc;
+
+/// `m · x` for a row-major matrix and a column vector.
+pub fn mat_vec<R: Ring>(ring: &R, m: &Matrix<R::Elem>, x: &[R::Elem]) -> Vec<R::Elem> {
+    assert_eq!(m.cols, x.len(), "matrix-vector dimensions must agree");
+    (0..m.rows).map(|i| ring.dot(&m.data[i * m.cols..(i + 1) * m.cols], x)).collect()
+}
+
+/// Freivalds' probabilistic product check over a Galois ring: does
+/// `a · b == c`, with one-sided error?
+///
+/// Each trial draws a challenge vector `x` coordinate-wise from the ring's
+/// canonical *exceptional set* (pairwise differences are units) and tests
+/// `a·(b·x) == c·x`. Over a ring with zero divisors a uniformly random
+/// challenge is unsound — a nonzero error matrix `d = a·b − c` can satisfy
+/// `d·x = 0` for huge swaths of non-unit `x` — but exceptional-set
+/// challenges restore the field argument: if `d·x = d·x'` for two set
+/// members `x_j ≠ x_j'` in a coordinate where `d` is nonzero, then
+/// `d_j·(x_j − x_j') = 0` with `x_j − x_j'` a unit, forcing `d_j = 0`. So a
+/// nonzero row of `d` survives a trial with probability at most `1/|S|`,
+/// i.e. at most `p^{-D}` using the full exceptional set of `GR(p^e, D)`.
+/// Over `Z_{2^64}` the set has only 2 points (error ½ per trial) — hence
+/// `trials` is configurable (40 trials ⇒ error ≤ 2⁻⁴⁰), and schemes whose
+/// share ring is a genuine extension override
+/// [`DmmScheme::verify_products`] to run the check there for `p^{-d·m}`
+/// per trial.
+///
+/// Cost per trial: two matrix-vector products and one vector-vector
+/// comparison — `O(tr + rs)` ring ops versus `O(trs)` for recomputing the
+/// product.
+pub fn freivalds_check<R: Ring>(
+    ring: &R,
+    a: &Matrix<R::Elem>,
+    b: &Matrix<R::Elem>,
+    c: &Matrix<R::Elem>,
+    trials: usize,
+    rng: &mut Rng64,
+) -> anyhow::Result<bool> {
+    anyhow::ensure!(a.cols == b.rows, "inner dimensions disagree");
+    anyhow::ensure!(
+        (c.rows, c.cols) == (a.rows, b.cols),
+        "product shape disagrees: {}x{} vs {}x{}",
+        c.rows,
+        c.cols,
+        a.rows,
+        b.cols
+    );
+    let n_points = ring.residue_size().min(64).max(2) as usize;
+    let points = ring.exceptional_points(n_points)?;
+    for _ in 0..trials {
+        let x: Vec<R::Elem> = (0..b.cols)
+            .map(|_| points[rng.below(points.len() as u64) as usize].clone())
+            .collect();
+        let bx = mat_vec(ring, b, &x);
+        let abx = mat_vec(ring, a, &bx);
+        let cx = mat_vec(ring, c, &x);
+        if abx != cx {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
 
 /// The pair of encoded matrices sent to one worker: the evaluations
 /// `f(α_i)`, `g(α_i)` of the master's encoding polynomials, stored as
@@ -199,6 +261,80 @@ pub trait DmmScheme<R: Ring>: Send + Sync {
         (0, 0)
     }
 
+    /// Consistency-check a **surplus** of responses (more than
+    /// [`DmmScheme::recovery_threshold`]): the code's redundancy makes a
+    /// `>R`-point decode overdetermined, so honest responses must agree
+    /// with the decode of any R-subset. Returns the worker indices of
+    /// responses found *inconsistent* with the rest — empty means every
+    /// response fits one consistent codeword and the decode can be trusted
+    /// (a corrupt response anywhere in the set would break agreement for
+    /// some subset, so non-empty flags mean "run leave-one-out isolation",
+    /// not "exactly these are guilty").
+    ///
+    /// Default: decode the first `R` responses as a reference, then
+    /// re-decode with each surplus response substituted in and compare —
+    /// pure decode-oracle cross-checking that works for every scheme.
+    /// Evaluation-code schemes override it with re-encode-and-compare at
+    /// the spare evaluation points, which is one interpolation plus a cheap
+    /// evaluation per surplus share instead of a full decode each.
+    fn check_surplus(
+        &self,
+        responses: &[Response<Self::ShareRing>],
+    ) -> anyhow::Result<Vec<usize>> {
+        let need = self.recovery_threshold();
+        anyhow::ensure!(
+            responses.len() > need,
+            "{} has no surplus to check: {} responses for threshold {need}",
+            self.name(),
+            responses.len()
+        );
+        let reference = self.decode_batch(&responses[..need])?;
+        let mut flagged = Vec::new();
+        for surplus in &responses[need..] {
+            let mut subset: Vec<Response<Self::ShareRing>> = responses[..need - 1].to_vec();
+            subset.push(surplus.clone());
+            match self.decode_batch(&subset) {
+                Ok(alt) if alt == reference => {}
+                _ => flagged.push(surplus.0),
+            }
+        }
+        Ok(flagged)
+    }
+
+    /// Probabilistic product verification for a decoded batch: does
+    /// `a[k] · b[k] == c[k]` for every slot, with one-sided error? The
+    /// cheap fallback when *exactly* `R` responses arrived and there is no
+    /// surplus to cross-check against.
+    ///
+    /// Default: [`freivalds_check`] over the input ring, whose exceptional
+    /// set bounds the per-trial error (see there for the soundness
+    /// argument and why `trials` matters over small residue fields).
+    /// Schemes with an extension share ring override this to lift the
+    /// check there, shrinking the error to `p^{-d·m}` per trial.
+    fn verify_products(
+        &self,
+        a: &[Matrix<R::Elem>],
+        b: &[Matrix<R::Elem>],
+        c: &[Matrix<R::Elem>],
+        trials: usize,
+        rng: &mut Rng64,
+    ) -> anyhow::Result<bool> {
+        anyhow::ensure!(
+            a.len() == b.len() && b.len() == c.len(),
+            "batch slots disagree: {} a, {} b, {} c",
+            a.len(),
+            b.len(),
+            c.len()
+        );
+        let ring = self.input_ring();
+        for ((ak, bk), ck) in a.iter().zip(b).zip(c) {
+            if !freivalds_check(ring, ak, bk, ck, trials, rng)? {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
     /// Single-product encode (`batch_size() == 1` schemes only).
     fn encode(
         &self,
@@ -326,6 +462,40 @@ pub trait DynScheme: Send + Sync {
     /// Cumulative decode-plan cache counters `(hits, misses)`; `(0, 0)` for
     /// schemes without a cache.
     fn plan_cache_stats(&self) -> (u64, u64);
+
+    /// Is `payload` a structurally valid response (a share-ring
+    /// [`PlaneMatrix`] that deserializes cleanly)? The verified-decode
+    /// path's first filter: garbage payloads are rejected here before any
+    /// algebraic checking. The permissive default accepts everything.
+    fn response_is_wellformed(&self, payload: &[u8]) -> bool {
+        let _ = payload;
+        true
+    }
+
+    /// Byte-facade of [`DmmScheme::check_surplus`]: consistency-check
+    /// `(worker_id, response)` payloads when more than the recovery
+    /// threshold arrived, returning the worker ids of inconsistent
+    /// responses (empty = all consistent). Default: unsupported.
+    fn check_surplus_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<usize>> {
+        let _ = responses;
+        anyhow::bail!("{} does not support surplus consistency checking", self.name())
+    }
+
+    /// Byte-facade of [`DmmScheme::verify_products`]: Freivalds-check
+    /// serialized input matrices `a`, `b` against decoded products `c`
+    /// (one per batch slot), `trials` challenge rounds each. Default:
+    /// unsupported.
+    fn verify_products_bytes(
+        &self,
+        a: &[Vec<u8>],
+        b: &[Vec<u8>],
+        c: &[Vec<u8>],
+        trials: usize,
+        rng: &mut Rng64,
+    ) -> anyhow::Result<bool> {
+        let _ = (a, b, c, trials, rng);
+        anyhow::bail!("{} does not support product verification", self.name())
+    }
 }
 
 /// Adapter implementing [`DynScheme`] for any typed [`DmmScheme`].
@@ -430,6 +600,35 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
         self.scheme.plan_cache_stats()
+    }
+
+    fn response_is_wellformed(&self, payload: &[u8]) -> bool {
+        PlaneMatrix::from_bytes(self.scheme.share_ring(), payload).is_ok()
+    }
+
+    fn check_surplus_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<usize>> {
+        let sr = self.scheme.share_ring();
+        let typed: Vec<Response<S::ShareRing>> = responses
+            .iter()
+            .map(|(w, p)| PlaneMatrix::from_bytes(sr, p).map(|m| (*w, m)))
+            .collect::<anyhow::Result<_>>()?;
+        self.scheme.check_surplus(&typed)
+    }
+
+    fn verify_products_bytes(
+        &self,
+        a: &[Vec<u8>],
+        b: &[Vec<u8>],
+        c: &[Vec<u8>],
+        trials: usize,
+        rng: &mut Rng64,
+    ) -> anyhow::Result<bool> {
+        let ir = self.scheme.input_ring();
+        let parse = |bufs: &[Vec<u8>]| -> anyhow::Result<Vec<Matrix<R::Elem>>> {
+            bufs.iter().map(|buf| Matrix::from_bytes(ir, buf)).collect()
+        };
+        let (am, bm, cm) = (parse(a)?, parse(b)?, parse(c)?);
+        self.scheme.verify_products(&am, &bm, &cm, trials, rng)
     }
 }
 

@@ -39,9 +39,9 @@
 //! payloads) errors the *connection*, never the daemon: the error is
 //! logged and the daemon accepts the next connection.
 
-use super::straggler::StragglerModel;
+use super::straggler::{CorruptionModel, StragglerModel};
 use super::wire::{self, Frame, FrameKind};
-use super::worker::{assemble_prepared, process_job, worker_rng, ShareCompute};
+use super::worker::{assemble_prepared, process_job_faulty, worker_rng, ShareCompute};
 use crate::util::rng::Rng64;
 use std::collections::HashMap;
 use std::io::BufReader;
@@ -62,6 +62,11 @@ pub struct DaemonConfig {
     /// remote node, so delays and fail-stop draws happen here, not at the
     /// master).
     pub straggler: StragglerModel,
+    /// Byzantine corruption injection applied at the worker, after a
+    /// successful compute — the `--corrupt` knob of `gr-cdmm worker`.
+    /// Draws share the straggler RNG streams, so a channel pool with the
+    /// same seed and model corrupts byte-for-byte identically.
+    pub corrupt: CorruptionModel,
     /// Seed deriving the per-worker-id RNG streams ([`worker_rng`]).
     pub seed: u64,
 }
@@ -84,6 +89,9 @@ fn serve_conn(
     // addresses one daemon as one machine, so this map has a single entry
     // in practice; keying by id keeps the draws right even if it doesn't.
     let mut rngs: HashMap<usize, Rng64> = HashMap::new();
+    // Per-machine previous *clean* response, feeding the stale-replay
+    // corruption model. Per connection, like the RNG streams.
+    let mut replays: HashMap<usize, Option<Vec<u8>>> = HashMap::new();
     // Staged prepared operands, **per connection**: a reconnecting master
     // starts from a blank slate and must re-stage (which its prepared store
     // does automatically), so stale staged bytes can never leak across
@@ -167,14 +175,17 @@ fn serve_conn(
                     },
                 };
                 let rng = rngs.entry(machine).or_insert_with(|| worker_rng(cfg.seed, machine));
-                let report = process_job(
+                let replay = replays.entry(machine).or_default();
+                let report = process_job_faulty(
                     machine,
                     shard,
                     frame.job_id,
                     payload,
                     compute,
                     &cfg.straggler,
+                    &cfg.corrupt,
                     rng,
+                    replay,
                 );
                 wire::write_frame(&mut writer, &Frame::from_report(report))?;
             }
@@ -216,10 +227,11 @@ pub fn run(
 ) -> anyhow::Result<()> {
     let listener = TcpListener::bind(listen)?;
     eprintln!(
-        "gr-cdmm worker [{}] listening on {} (straggler: {:?}, seed: {})",
+        "gr-cdmm worker [{}] listening on {} (straggler: {:?}, corrupt: {}, seed: {})",
         compute.backend_name(),
         listener.local_addr()?,
         cfg.straggler,
+        cfg.corrupt.label(),
         cfg.seed
     );
     serve(&listener, &*compute, &cfg, max_conns)
@@ -242,9 +254,19 @@ impl WorkerDaemon {
         seed: u64,
         conns: usize,
     ) -> anyhow::Result<WorkerDaemon> {
+        let cfg = DaemonConfig { straggler, corrupt: CorruptionModel::None, seed };
+        Self::spawn_local_cfg(compute, cfg, conns)
+    }
+
+    /// [`WorkerDaemon::spawn_local`] taking a full [`DaemonConfig`], for
+    /// daemons that also inject Byzantine corruption.
+    pub fn spawn_local_cfg(
+        compute: Arc<dyn ShareCompute>,
+        cfg: DaemonConfig,
+        conns: usize,
+    ) -> anyhow::Result<WorkerDaemon> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
-        let cfg = DaemonConfig { straggler, seed };
         let handle = std::thread::Builder::new()
             .name(format!("gr-cdmm-daemon-{addr}"))
             .spawn(move || serve(&listener, &*compute, &cfg, Some(conns)))?;
@@ -391,6 +413,43 @@ mod tests {
         wire::write_job_frame(&mut writer, 9, 0, Some(7), &[0xC]).unwrap();
         let resp = wire::read_frame(&mut reader).unwrap().expect("fail report");
         assert_eq!(resp.kind, FrameKind::RespFail);
+        wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
+        daemon.join().unwrap();
+    }
+
+    #[test]
+    fn daemon_corrupts_responses_identically_to_an_in_process_worker() {
+        let corrupt = CorruptionModel::bit_flip([0]);
+        let cfg = DaemonConfig {
+            straggler: StragglerModel::None,
+            corrupt: corrupt.clone(),
+            seed: 11,
+        };
+        let daemon = WorkerDaemon::spawn_local_cfg(Arc::new(Echo), cfg, 1).unwrap();
+        let stream = TcpStream::connect(daemon.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        wire::write_frame(&mut writer, &Frame::hello(0)).unwrap();
+        let _ = wire::read_frame(&mut reader).unwrap().expect("hello echo");
+        let payload = vec![0u8; 40];
+        wire::write_frame(&mut writer, &Frame::job(1, 0, payload.clone())).unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap().expect("corrupted echo");
+        assert_eq!(resp.kind, FrameKind::RespOk, "corruption is silent, not a failure");
+        assert_ne!(resp.payload, payload);
+        // Byte-for-byte the draw an in-process worker 0 with the same seed
+        // and model would make (the channel ↔ TCP parity property).
+        let expected = process_job_faulty(
+            0,
+            0,
+            1,
+            &payload,
+            &Echo,
+            &StragglerModel::None,
+            &corrupt,
+            &mut worker_rng(11, 0),
+            &mut None,
+        );
+        assert_eq!(resp.payload, expected.payload.unwrap());
         wire::write_frame(&mut writer, &Frame::shutdown()).unwrap();
         daemon.join().unwrap();
     }

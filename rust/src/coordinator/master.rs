@@ -475,6 +475,20 @@ fn spawn_monitor(shared: MonitorShared) -> JoinHandle<()> {
 pub struct JobHandle {
     job_id: u64,
     need: usize,
+    /// How many successful responses to keep: `need` for the plain path,
+    /// raised to `n_shards` by [`JobHandle::wait_surplus`] so verification
+    /// can cross-check the decode against the extra responses.
+    cap: usize,
+    /// Shards dispatched for this job.
+    n_shards: usize,
+    /// Shards resolved as failed (worker-side error / fail-stop).
+    failures: usize,
+    /// Whether [`JobHandle::absorb`] credits collected bytes as used.
+    /// [`JobHandle::wait_surplus`] turns this off: the verified-decode
+    /// caller classifies each response as used or rejected *after*
+    /// verification, so the `arrived == used + discarded + rejected`
+    /// identity holds even when responses are thrown out as corrupt.
+    count_used: bool,
     rx: Receiver<FromWorker>,
     counters: ByteCounters,
     aggregate: ByteCounters,
@@ -493,6 +507,11 @@ impl JobHandle {
     /// The recovery threshold this job collects to.
     pub fn need(&self) -> usize {
         self.need
+    }
+
+    /// Shards dispatched for this job (`need ≤ n_shards`).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
     }
 
     /// This job's byte counters (upload at dispatch, download as routed).
@@ -517,14 +536,17 @@ impl JobHandle {
         debug_assert_eq!(msg.job_id, self.job_id, "router must filter by job id");
         let FromWorker { worker_id, payload, compute, injected_delay, .. } = msg;
         let Some(payload) = payload else {
+            self.failures += 1;
             return; // worker-side compute error: treat as a straggler
         };
         if self.collected.iter().any(|c| c.worker_id == worker_id) {
             return; // duplicate-response guard (bytes stay arrived-only)
         }
-        if self.collected.len() < self.need {
-            self.counters.add_download_used(payload.len());
-            self.aggregate.add_download_used(payload.len());
+        if self.collected.len() < self.cap {
+            if self.count_used {
+                self.counters.add_download_used(payload.len());
+                self.aggregate.add_download_used(payload.len());
+            }
             self.collected.push(Collected { worker_id, payload, compute, injected_delay });
             if self.collected.len() == self.need {
                 self.done_at = Some(self.submitted.elapsed());
@@ -567,6 +589,65 @@ impl JobHandle {
             }
         }
         let wait = self.done_at.expect("threshold reached");
+        Ok((std::mem::take(&mut self.collected), wait))
+    }
+
+    /// Like [`JobHandle::wait`], but after the threshold is met keeps
+    /// draining for up to `grace` so late (surplus) responses are collected
+    /// too — the raw material for Byzantine verification: with more than
+    /// `need` responses in hand the decoder can cross-check the product
+    /// against the surplus shares. Returns between `need` and `n_shards`
+    /// responses in arrival order, plus the dispatch→threshold wall time
+    /// (the grace drain is excluded — it is verification overhead, not
+    /// serving latency). The deadline/timeout semantics of phase 1 are
+    /// exactly [`JobHandle::wait`]'s.
+    ///
+    /// Used-byte accounting is deferred to the caller (see
+    /// [`ByteCounters::add_download_used`] /
+    /// [`ByteCounters::add_download_rejected`]): until classified, the
+    /// collected bytes show as arrived-only.
+    pub fn wait_surplus(mut self, grace: Duration) -> anyhow::Result<(Vec<Collected>, Duration)> {
+        anyhow::ensure!(self.done_at.is_none(), "job {} was already collected", self.job_id);
+        self.cap = self.n_shards;
+        self.count_used = false;
+        while self.collected.len() < self.need {
+            match self.rx.try_recv() {
+                Ok(msg) => {
+                    self.absorb(msg);
+                    continue;
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    return Err(incomplete_error(self.job_id, self.collected.len(), self.need));
+                }
+            }
+            let remaining = self
+                .timeout
+                .checked_sub(self.submitted.elapsed())
+                .ok_or_else(|| timeout_error(self.collected.len(), self.need))?;
+            match self.rx.recv_timeout(remaining) {
+                Ok(msg) => self.absorb(msg),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(timeout_error(self.collected.len(), self.need));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(incomplete_error(self.job_id, self.collected.len(), self.need));
+                }
+            }
+        }
+        let wait = self.done_at.expect("threshold reached");
+        let grace_deadline = Instant::now() + grace;
+        while self.collected.len() + self.failures < self.n_shards {
+            let Some(remaining) = grace_deadline.checked_duration_since(Instant::now()) else {
+                break;
+            };
+            match self.rx.recv_timeout(remaining) {
+                Ok(msg) => self.absorb(msg),
+                // Grace expired or the channel closed: verification works
+                // with whatever surplus arrived in time.
+                Err(_) => break,
+            }
+        }
         Ok((std::mem::take(&mut self.collected), wait))
     }
 
@@ -708,6 +789,15 @@ impl Coordinator {
     /// Per-worker health + latency snapshot, for reports and tests.
     pub fn pool_snapshot(&self) -> Vec<WorkerSnapshot> {
         self.pool.snapshot()
+    }
+
+    /// Mark a worker [`WorkerHealth::Quarantined`] — verified-decode found
+    /// its response inconsistent with the codeword. A quarantined worker is
+    /// excluded from placement and speculative spares until it earns its
+    /// way back through the pool's ping probation (see
+    /// [`super::pool::PROBATION_CLEAN_PINGS`]).
+    pub fn quarantine_worker(&mut self, worker_id: usize) {
+        self.pool.quarantine(worker_id);
     }
 
     /// Replace the elastic-pool tuning (health cadence, speculation,
@@ -973,6 +1063,10 @@ impl Coordinator {
         Ok(JobHandle {
             job_id,
             need,
+            cap: need,
+            n_shards,
+            failures: 0,
+            count_used: true,
             rx: job_rx,
             counters,
             aggregate: self.aggregate.clone(),
@@ -1281,7 +1375,7 @@ mod tests {
         }
 
         fn send(&mut self, _worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
-            let ToWorker::Job { job_id, shard, payload } = msg else {
+            let ToWorker::Job { job_id, shard, payload, .. } = msg else {
                 return Ok(0);
             };
             let tx = self.tx.as_ref().expect("transport is open");
@@ -1455,6 +1549,52 @@ mod tests {
         assert_eq!(job_counters.speculative_total(), 1);
         // Upload: 2 B-halves (4 each) + one full speculative copy (6 + 4).
         assert_eq!(job_counters.upload_total(), 18);
+        c.shutdown();
+    }
+
+    #[test]
+    fn wait_surplus_collects_past_the_threshold() {
+        let mut c = Coordinator::new(4, Arc::new(Echo), StragglerModel::None, 40);
+        let h = c.submit(payloads(4, 0x5A, 6), 2).unwrap();
+        assert_eq!(h.n_shards(), 4);
+        let job_counters = h.counters().clone();
+        let (got, _) = h.wait_surplus(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.len(), 4, "the grace drain collects every response");
+        // Used-byte accounting is deferred to the verifying caller: the
+        // bytes show as arrived until classified used/rejected.
+        assert_eq!(job_counters.download_arrived_total(), 24);
+        assert_eq!(job_counters.download_used_total(), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn wait_surplus_ends_early_once_every_shard_is_resolved() {
+        // Worker 3 fail-stops: its drop report resolves the shard, so the
+        // drain must return 3 clean responses well before the grace expires.
+        let straggler = StragglerModel::fail_stop([3]);
+        let mut c = Coordinator::new(4, Arc::new(Echo), straggler, 41);
+        let h = c.submit(payloads(4, 0x5B, 6), 2).unwrap();
+        let start = Instant::now();
+        let (got, _) = h.wait_surplus(Duration::from_secs(30)).unwrap();
+        assert_eq!(got.len(), 3);
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "failure resolution must end the drain, not the 30s grace"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn quarantined_worker_is_excluded_from_partial_placement() {
+        // Worker 0 would drop the job (fail-stop); quarantining it steers
+        // the single-shard submit to worker 1, so the job succeeds. Without
+        // the quarantine the rank tie at Live would pick worker 0.
+        let straggler = StragglerModel::fail_stop([0]);
+        let mut c = Coordinator::new(2, Arc::new(Echo), straggler, 42);
+        c.quarantine_worker(0);
+        assert_eq!(c.worker_health(0), WorkerHealth::Quarantined);
+        let (got, _) = c.submit(vec![vec![9u8; 4]], 1).unwrap().wait().unwrap();
+        assert_eq!(got.len(), 1);
         c.shutdown();
     }
 

@@ -54,6 +54,16 @@ pub struct JobMetrics {
     /// this job (0 unless speculation is enabled; their payload bytes are
     /// included in `upload_bytes`).
     pub speculative_dispatches: u64,
+    /// Responses the verified-decode path rejected as corrupt (malformed
+    /// payloads plus shares flagged by surplus / leave-one-out
+    /// consistency). 0 unless verification ran.
+    pub corrupt_responses_detected: u64,
+    /// Freivalds probabilistic product-check trials run for this job.
+    pub verify_trials: u64,
+    /// Workers this job put into quarantine after a failed verification.
+    pub quarantines: u64,
+    /// Leave-one-out re-decodes performed to isolate an inconsistent share.
+    pub leave_one_out_decodes: u64,
     /// Total end-to-end wall time at the master.
     pub total: Duration,
 }
@@ -107,6 +117,10 @@ impl JobMetrics {
             .set("staged_upload_bytes", self.staged_upload_bytes)
             .set("download_bytes", self.download_bytes)
             .set("speculative_dispatches", self.speculative_dispatches)
+            .set("corrupt_responses_detected", self.corrupt_responses_detected)
+            .set("verify_trials", self.verify_trials)
+            .set("quarantines", self.quarantines)
+            .set("leave_one_out_decodes", self.leave_one_out_decodes)
             .set("mean_worker_compute_s", self.mean_worker_compute().as_secs_f64())
             .set("max_worker_compute_s", self.max_worker_compute().as_secs_f64())
             .set(
@@ -153,5 +167,9 @@ mod tests {
         assert!(j.contains("prepared_hits"));
         assert!(j.contains("staged_upload_bytes"));
         assert!(j.contains("speculative_dispatches"));
+        assert!(j.contains("corrupt_responses_detected"));
+        assert!(j.contains("verify_trials"));
+        assert!(j.contains("quarantines"));
+        assert!(j.contains("leave_one_out_decodes"));
     }
 }

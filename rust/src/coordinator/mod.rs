@@ -29,7 +29,9 @@
 //!   the same worker loop, served over a socket, straggler injection
 //!   included ([`WorkerDaemon`] runs one on a thread for tests/benches);
 //! * [`straggler`] — delay/failure injection models (fixed slow set,
-//!   exponential tails, fail-stop);
+//!   exponential tails, fail-stop) and Byzantine corruption models
+//!   ([`CorruptionModel`]: bit-flip, garbage payload, stale replay, silent
+//!   wrong share) with deterministic per-worker draws on both transports;
 //! * [`worker`] — the worker job handler ([`worker::process_job`]: receive
 //!   share → compute (native ring kernels or the AOT XLA backend from
 //!   [`crate::runtime`]) → reply), shared verbatim by pool threads and
@@ -125,8 +127,10 @@ pub use master::{Coordinator, JobHandle};
 pub use prepared::{PreparedStore, DEFAULT_PREPARED_CAP};
 pub use metrics::JobMetrics;
 pub use pool::{ElasticConfig, WorkerHealth, WorkerSnapshot};
-pub use straggler::StragglerModel;
-pub use runner::{run_batch, run_erased, run_single, NativeCompute};
+pub use straggler::{CorruptionModel, StragglerModel};
+pub use runner::{
+    run_batch, run_erased, run_single, run_verified_erased, NativeCompute, VerifyOptions,
+};
 pub use tcp::TcpTransport;
 pub use transport::{ByteCounters, ChannelTransport, Transport};
 pub use worker::ShareCompute;

@@ -11,9 +11,13 @@
 //!          ┌─────────────────────────┐
 //!          ▼                         │
 //!        LIVE ──ping unanswered──▶ SUSPECT
-//!          │     for suspect_after   │
-//!          │                         │
-//!          └──link down──▶ DEAD ◀────┘
+//!          │ ▲   for suspect_after   │
+//!          │ │                       │
+//!          │ └─probation: 3 clean pings
+//!          │ ┌──────────────────────┐
+//!          ├─│verification failure──▶ QUARANTINED
+//!          │ └──────────────────────┘
+//!          └──link down──▶ DEAD ◀────(suspect link down)
 //!                            │
 //!                            └──reconnect succeeds──▶ LIVE
 //! ```
@@ -25,6 +29,13 @@
 //!   unanswered for longer than [`ElasticConfig::suspect_after`]. A
 //!   suspect worker keeps its in-flight work (it may just be slow) but
 //!   receives no new speculative copies.
+//! * **Quarantined** — verified decode caught the worker returning a
+//!   corrupt share ([`PoolState::quarantine`]). Excluded from placement and
+//!   speculation like a dead worker, but the link stays up and the monitor
+//!   keeps pinging it; after [`PROBATION_CLEAN_PINGS`] consecutively
+//!   answered pings it is released back to live (the fault may have been
+//!   transient bit-rot). The verdict is *sticky*: neither fresh traffic nor
+//!   a reconnect clears it early.
 //! * **Dead** — the transport reports the link down. Everything it owed
 //!   has already fail-stopped; with
 //!   [`ElasticConfig::auto_reconnect`] the monitor periodically re-dials
@@ -54,6 +65,10 @@ const EWMA_ALPHA: f64 = 0.25;
 /// bucket saturates: ≥ 2¹⁵ µs ≈ 33 ms per bucket-16 sample).
 const HISTOGRAM_BUCKETS: usize = 16;
 
+/// Consecutively answered health-check pings a quarantined worker must
+/// accumulate before probation releases it back to live.
+pub const PROBATION_CLEAN_PINGS: u32 = 3;
+
 /// One worker's membership state as tracked by the master's health monitor.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum WorkerHealth {
@@ -64,6 +79,10 @@ pub enum WorkerHealth {
     /// Link up but a health check has gone unanswered past the configured
     /// window; gets no new speculative copies until it answers again.
     Suspect,
+    /// Caught returning a corrupt share by verified decode. Excluded from
+    /// placement until a clean ping streak releases it (probation). Sticky:
+    /// fresh traffic does not clear it.
+    Quarantined,
     /// Link down; every job it owed has fail-stopped.
     Dead,
 }
@@ -74,7 +93,8 @@ impl WorkerHealth {
         match self {
             WorkerHealth::Live => 0,
             WorkerHealth::Suspect => 1,
-            WorkerHealth::Dead => 2,
+            WorkerHealth::Quarantined => 2,
+            WorkerHealth::Dead => 3,
         }
     }
 }
@@ -223,6 +243,9 @@ struct WorkerStats {
     histogram: LatencyHistogram,
     /// When the monitor's outstanding ping (if any) was sent.
     ping_sent: Option<Instant>,
+    /// Consecutively answered pings while quarantined (probation counter;
+    /// reset on every quarantine and on every unanswered ping).
+    clean_pings: u32,
 }
 
 /// A read-only snapshot of one worker's health and latency estimate.
@@ -283,6 +306,18 @@ impl PoolState {
             if health == WorkerHealth::Live {
                 w.ping_sent = None;
             }
+            w.clean_pings = 0;
+        }
+    }
+
+    /// Quarantine `worker`: verified decode caught it returning a corrupt
+    /// share. Excluded from placement and speculation until probation (a
+    /// streak of [`PROBATION_CLEAN_PINGS`] answered pings) releases it.
+    pub fn quarantine(&self, worker: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(w) = inner.workers.get_mut(worker) {
+            w.health = WorkerHealth::Quarantined;
+            w.clean_pings = 0;
         }
     }
 
@@ -351,8 +386,13 @@ impl PoolState {
             return PingAction::None;
         };
         if !alive {
-            w.health = WorkerHealth::Dead;
+            // A quarantine verdict is sticky: the worker's link dying and
+            // coming back must not launder it through Dead → Live.
+            if w.health != WorkerHealth::Quarantined {
+                w.health = WorkerHealth::Dead;
+            }
             w.ping_sent = None;
+            w.clean_pings = 0;
             return PingAction::None;
         }
         if w.health == WorkerHealth::Dead {
@@ -369,13 +409,28 @@ impl PoolState {
                 // left (any traffic counts, not just the pong).
                 if idle.is_some_and(|d| d < sent.elapsed()) {
                     w.ping_sent = None;
-                    if w.health == WorkerHealth::Suspect {
-                        w.health = WorkerHealth::Live;
+                    match w.health {
+                        WorkerHealth::Suspect => w.health = WorkerHealth::Live,
+                        WorkerHealth::Quarantined => {
+                            // Probation: a clean ping streak earns release.
+                            w.clean_pings += 1;
+                            if w.clean_pings >= PROBATION_CLEAN_PINGS {
+                                w.health = WorkerHealth::Live;
+                                w.clean_pings = 0;
+                            }
+                        }
+                        _ => {}
                     }
                     PingAction::None
                 } else {
-                    if sent.elapsed() > cfg.suspect_after {
+                    if sent.elapsed() > cfg.suspect_after
+                        && w.health != WorkerHealth::Quarantined
+                    {
                         w.health = WorkerHealth::Suspect;
+                    }
+                    if sent.elapsed() > cfg.suspect_after {
+                        // An unanswered ping breaks a probation streak.
+                        w.clean_pings = 0;
                     }
                     PingAction::None
                 }
@@ -514,6 +569,64 @@ mod tests {
         pool.set_health(0, WorkerHealth::Suspect);
         pool.observe_latency(0, ms(5));
         assert_eq!(pool.health(0), WorkerHealth::Live);
+    }
+
+    #[test]
+    fn quarantine_excludes_from_spares_and_is_sticky() {
+        let cfg = ElasticConfig {
+            ping_interval: Some(Duration::ZERO),
+            suspect_after: Duration::ZERO,
+            ..Default::default()
+        };
+        let pool = PoolState::new(2);
+        pool.quarantine(0);
+        assert_eq!(pool.health(0), WorkerHealth::Quarantined);
+        assert_eq!(pool.live_spare(&[]), Some(1), "quarantined worker is never a spare");
+        assert!(WorkerHealth::Quarantined.rank() > WorkerHealth::Suspect.rank());
+        assert!(WorkerHealth::Quarantined.rank() < WorkerHealth::Dead.rank());
+
+        // Fresh traffic does not clear the verdict (unlike Suspect).
+        pool.observe_latency(0, ms(3));
+        assert_eq!(pool.health(0), WorkerHealth::Quarantined);
+
+        // Neither does the link bouncing: down stays quarantined (no
+        // laundering through Dead → Live on reconnect), back up too.
+        pool.health_check(0, false, None, &cfg);
+        assert_eq!(pool.health(0), WorkerHealth::Quarantined);
+        pool.health_check(0, true, Some(Duration::ZERO), &cfg);
+        assert_eq!(pool.health(0), WorkerHealth::Quarantined);
+
+        // The reconnect pass above fired a ping (zero interval); leaving it
+        // unanswered past the window never downgrades the worker to the
+        // better-ranked Suspect either.
+        std::thread::sleep(Duration::from_millis(2));
+        pool.health_check(0, true, None, &cfg);
+        assert_eq!(pool.health(0), WorkerHealth::Quarantined);
+    }
+
+    #[test]
+    fn probation_releases_after_a_clean_ping_streak() {
+        let cfg = ElasticConfig {
+            ping_interval: Some(Duration::ZERO),
+            suspect_after: Duration::from_secs(3600),
+            ..Default::default()
+        };
+        let pool = PoolState::new(1);
+        pool.quarantine(0);
+        for round in 0..PROBATION_CLEAN_PINGS {
+            assert_eq!(
+                pool.health(0),
+                WorkerHealth::Quarantined,
+                "still quarantined before clean ping {round}"
+            );
+            // Monitor fires a ping…
+            assert!(matches!(pool.health_check(0, true, None, &cfg), PingAction::Send(_)));
+            std::thread::sleep(Duration::from_millis(2));
+            // …and the worker answers it (idle < time since the ping left).
+            pool.health_check(0, true, Some(Duration::ZERO), &cfg);
+        }
+        assert_eq!(pool.health(0), WorkerHealth::Live, "probation served");
+        assert_eq!(pool.live_spare(&[]), Some(0));
     }
 
     #[test]

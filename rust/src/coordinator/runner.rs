@@ -20,8 +20,10 @@ use crate::codes::scheme::{DmmScheme, DynScheme, Erased, Response};
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::PlaneMatrix;
 use crate::ring::traits::Ring;
+use crate::util::rng::Rng64;
+use std::collections::BTreeSet;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use super::worker::ShareCompute as ShareComputeTrait;
 
@@ -162,6 +164,249 @@ pub fn run_erased<R: Ring>(
     metrics.job_id = job_id;
     metrics.plan_cache_hits = hits_after.saturating_sub(hits_before);
     metrics.plan_cache_misses = misses_after.saturating_sub(misses_before);
+    Ok((out, metrics))
+}
+
+/// Tuning for the Byzantine-tolerant decode path ([`run_verified_erased`]).
+#[derive(Clone, Debug)]
+pub struct VerifyOptions {
+    /// Freivalds trials per probabilistic product check. Each trial's error
+    /// is at most `1/|S|` for the challenge set `S` the scheme draws from
+    /// (the extension's canonical exceptional set where available), so over
+    /// `Z_{2^64}`-lifted schemes 40 trials push the error below `2^{-40}`
+    /// even in the worst `|S| = 2` case.
+    pub trials: usize,
+    /// How long to keep draining surplus responses after the threshold is
+    /// met — the raw material for the re-encode-and-compare check.
+    pub grace: Duration,
+    /// Seed of the challenge-vector RNG (XORed with the job id, so repeated
+    /// jobs draw independent challenges).
+    pub seed: u64,
+    /// Re-dispatch rounds allowed to replace rejected shares before the job
+    /// fails fast.
+    pub max_redispatch: usize,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        VerifyOptions {
+            trials: 40,
+            grace: Duration::from_millis(250),
+            seed: 0x5eed_f00d,
+            max_redispatch: 2,
+        }
+    }
+}
+
+/// Run one job with Byzantine-tolerant verified decode: collect *more* than
+/// `R` responses when the pool offers them, cross-check the decode against
+/// the surplus shares (re-encode-and-compare at the spare evaluation
+/// points), fall back to a Freivalds probabilistic product check when
+/// exactly `R` arrived, and on a verification failure isolate the
+/// inconsistent share by leave-one-out re-decode, quarantine the culprit
+/// worker, re-dispatch its shard to a spare, and retry. The job fails fast
+/// — with a named suspect set, never a silently wrong product — only when
+/// corruption exceeds the code's slack.
+///
+/// Assumes the classic one-shard-per-worker dispatch shape (shard `i` on
+/// worker `i`), which is how every serve path submits; the quarantine
+/// verdicts use the shard index as the worker id.
+pub fn run_verified_erased<R: Ring>(
+    ring: &R,
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    a: &[Matrix<R::Elem>],
+    b: &[Matrix<R::Elem>],
+    opts: &VerifyOptions,
+) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
+    let t_total = Instant::now();
+    let a_bytes: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(ring)).collect();
+    let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(ring)).collect();
+
+    let t0 = Instant::now();
+    let payloads = scheme.encode_bytes(&a_bytes, &b_bytes)?;
+    let encode = t0.elapsed();
+    // Retained for re-dispatch after a quarantine.
+    let retained = payloads.clone();
+    let n_shards = payloads.len();
+
+    let need = scheme.recovery_threshold();
+    let handle = coord.submit(payloads, need)?;
+    let job_id = handle.job_id();
+    let counters = handle.counters().clone();
+    let aggregate = coord.counters().clone();
+    let (collected, wait_for_r) = handle.wait_surplus(opts.grace)?;
+
+    let mut rng = Rng64::seeded(opts.seed ^ job_id);
+    let mut corrupt = 0u64;
+    let mut verify_trials = 0u64;
+    let mut quarantines = 0u64;
+    let mut loo = 0u64;
+    let mut redispatches = 0usize;
+    let mut suspects: BTreeSet<usize> = BTreeSet::new();
+
+    // Working set: (share index, payload, bytes already credited as used by
+    // a re-dispatch job's own counters). `wait_surplus` deferred the
+    // original collection's used-accounting to us.
+    let mut responses: Vec<(usize, Vec<u8>, bool)> =
+        collected.iter().map(|c| (c.worker_id, c.payload.clone(), false)).collect();
+
+    let (hits_before, misses_before) = scheme.plan_cache_stats();
+    let (out_bytes, decode) = loop {
+        // (0) Well-formedness: a response that does not even parse is
+        // rejected outright and its sender quarantined.
+        let mut kept = Vec::with_capacity(responses.len());
+        for (idx, payload, counted) in responses.drain(..) {
+            if scheme.response_is_wellformed(&payload) {
+                kept.push((idx, payload, counted));
+            } else {
+                corrupt += 1;
+                quarantines += 1;
+                suspects.insert(idx);
+                coord.quarantine_worker(idx);
+                if !counted {
+                    counters.add_download_rejected(payload.len());
+                    aggregate.add_download_rejected(payload.len());
+                }
+            }
+        }
+        responses = kept;
+
+        // (1) Below threshold: re-dispatch the missing shards to the
+        // healthiest (non-quarantined) workers, budget-bounded.
+        if responses.len() < need {
+            anyhow::ensure!(
+                redispatches < opts.max_redispatch,
+                "verification failed: {}/{need} trusted responses for job {job_id} after \
+                 {redispatches} re-dispatch round(s); suspect workers {suspects:?}",
+                responses.len()
+            );
+            redispatches += 1;
+            let present: BTreeSet<usize> = responses.iter().map(|r| r.0).collect();
+            let missing: Vec<usize> =
+                (0..n_shards).filter(|i| !present.contains(i)).collect();
+            let sub: Vec<Vec<u8>> = missing.iter().map(|&i| retained[i].clone()).collect();
+            let h = coord.submit(sub, missing.len())?;
+            let (extra, _) = h.wait()?;
+            for c in extra {
+                responses.push((missing[c.worker_id], c.payload, true));
+            }
+            continue;
+        }
+
+        let borrowed: Vec<(usize, &[u8])> =
+            responses.iter().map(|(i, p, _)| (*i, p.as_slice())).collect();
+
+        if responses.len() > need {
+            // (2) Surplus in hand: re-encode-and-compare at the spare
+            // evaluation points. Empty flags ⇒ the whole set lies on one
+            // codeword ⇒ the decode is trustworthy as-is.
+            let consistent = matches!(
+                scheme.check_surplus_bytes(&borrowed), Ok(f) if f.is_empty()
+            );
+            if consistent {
+                let t0 = Instant::now();
+                let out = scheme.decode_bytes(&borrowed[..need])?;
+                break (out, t0.elapsed());
+            }
+            // Leave-one-out isolation: a response whose removal restores
+            // consistency is the culprit — but only a *unique* such
+            // response is conclusive.
+            let mut culprits: Vec<usize> = Vec::new();
+            for skip in 0..borrowed.len() {
+                let subset: Vec<(usize, &[u8])> = borrowed
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != skip)
+                    .map(|(_, r)| *r)
+                    .collect();
+                loo += 1;
+                let ok = if subset.len() > need {
+                    matches!(scheme.check_surplus_bytes(&subset), Ok(f) if f.is_empty())
+                } else {
+                    verify_trials += opts.trials as u64;
+                    match scheme.decode_bytes(&subset[..need]) {
+                        Ok(c) => scheme
+                            .verify_products_bytes(&a_bytes, &b_bytes, &c, opts.trials, &mut rng)
+                            .unwrap_or(false),
+                        Err(_) => false,
+                    }
+                };
+                if ok {
+                    culprits.push(skip);
+                }
+            }
+            if culprits.len() != 1 {
+                let named: Vec<usize> = if culprits.is_empty() {
+                    borrowed.iter().map(|(i, _)| *i).collect()
+                } else {
+                    culprits.iter().map(|&j| borrowed[j].0).collect()
+                };
+                suspects.extend(named);
+                anyhow::bail!(
+                    "verification failed: mutually inconsistent responses exceed the code's \
+                     slack for job {job_id} ({} candidate culprit(s)); suspect workers \
+                     {suspects:?}",
+                    culprits.len()
+                );
+            }
+            let pos = culprits[0];
+            let (idx, payload, counted) = responses.remove(pos);
+            corrupt += 1;
+            quarantines += 1;
+            suspects.insert(idx);
+            coord.quarantine_worker(idx);
+            if !counted {
+                counters.add_download_rejected(payload.len());
+                aggregate.add_download_rejected(payload.len());
+            }
+            continue;
+        }
+
+        // (3) Exactly R responses — no surplus to compare against: the
+        // Freivalds probabilistic product check gates the result. With zero
+        // slack a rejection cannot be isolated, so fail fast with the
+        // contributing set named rather than ever emitting an unverified
+        // wrong product.
+        let t0 = Instant::now();
+        let out = scheme.decode_bytes(&borrowed)?;
+        let dt = t0.elapsed();
+        verify_trials += opts.trials as u64;
+        if scheme.verify_products_bytes(&a_bytes, &b_bytes, &out, opts.trials, &mut rng)? {
+            break (out, dt);
+        }
+        suspects.extend(borrowed.iter().map(|(i, _)| *i));
+        anyhow::bail!(
+            "verification failed: Freivalds rejected the product of job {job_id} with exactly \
+             {need} responses (no surplus to isolate with); suspect workers {suspects:?}"
+        );
+    };
+    let (hits_after, misses_after) = scheme.plan_cache_stats();
+
+    // Classify the surviving responses as used (the re-dispatch jobs
+    // already counted theirs).
+    for (_, payload, counted) in &responses {
+        if !counted {
+            counters.add_download_used(payload.len());
+            aggregate.add_download_used(payload.len());
+        }
+    }
+
+    let out: Vec<Matrix<R::Elem>> = out_bytes
+        .iter()
+        .map(|buf| Matrix::from_bytes(ring, buf))
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut metrics =
+        job_metrics(encode, decode, wait_for_r, t_total.elapsed(), &counters, &collected);
+    metrics.job_id = job_id;
+    metrics.plan_cache_hits = hits_after.saturating_sub(hits_before);
+    metrics.plan_cache_misses = misses_after.saturating_sub(misses_before);
+    metrics.used_workers = responses.iter().map(|(i, _, _)| *i).collect();
+    metrics.corrupt_responses_detected = corrupt;
+    metrics.verify_trials = verify_trials;
+    metrics.quarantines = quarantines;
+    metrics.leave_one_out_decodes = loo;
     Ok((out, metrics))
 }
 
@@ -455,6 +700,119 @@ mod tests {
             encodes_before + 1,
             "zero A-encodes in the steady state"
         );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn verified_run_accepts_a_clean_pool_via_surplus_check() {
+        let base = Zq::z2e(64);
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        let scheme = registry::build("ep", &cfg).unwrap();
+        let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+        let mut coord = Coordinator::new(8, backend, StragglerModel::None, 50);
+        let mut rng = Rng64::seeded(180);
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        let (c, m) = run_verified_erased(
+            &base,
+            scheme.as_ref(),
+            &mut coord,
+            std::slice::from_ref(&a),
+            std::slice::from_ref(&b),
+            &VerifyOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(c[0], Matrix::matmul(&base, &a, &b));
+        assert_eq!(m.corrupt_responses_detected, 0);
+        assert_eq!(m.quarantines, 0);
+        assert_eq!(m.leave_one_out_decodes, 0);
+        // All 8 clean responses arrived within the grace: the surplus check
+        // certifies the decode, no Freivalds fallback needed.
+        assert_eq!(m.verify_trials, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn verified_run_quarantines_a_silent_wrong_share_worker() {
+        use crate::coordinator::pool::WorkerHealth;
+        use crate::coordinator::straggler::CorruptionModel;
+        use crate::coordinator::transport::ChannelTransport;
+        let base = Zq::z2e(64);
+        let cfg = SchemeConfig::for_workers(8).unwrap();
+        let scheme = registry::build("ep", &cfg).unwrap();
+        let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+        let transport = ChannelTransport::spawn_faulty(
+            8,
+            backend,
+            StragglerModel::None,
+            CorruptionModel::silent_wrong_share([2]),
+            51,
+        );
+        let mut coord = Coordinator::with_transport(Box::new(transport));
+        let mut rng = Rng64::seeded(181);
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        // Clean reference from an honest in-process run of the same scheme.
+        let expect = Matrix::matmul(&base, &a, &b);
+        let (c, m) = run_verified_erased(
+            &base,
+            scheme.as_ref(),
+            &mut coord,
+            std::slice::from_ref(&a),
+            std::slice::from_ref(&b),
+            &VerifyOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(c[0], expect, "the verified product is the clean product, bit-identical");
+        assert!(m.corrupt_responses_detected >= 1, "the wrong share was detected");
+        assert!(m.quarantines >= 1);
+        assert_eq!(coord.worker_health(2), WorkerHealth::Quarantined, "culprit quarantined");
+        assert!(!m.used_workers.contains(&2), "the corrupt share is not in the trusted set");
+        // Rejected bytes live in their own bucket; the identity holds.
+        let counters = coord.counters();
+        assert!(counters.download_rejected_total() > 0);
+        assert_eq!(
+            counters.download_arrived_total(),
+            counters.download_used_total()
+                + counters.download_discarded_total()
+                + counters.download_rejected_total()
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn verified_run_fails_fast_when_corruption_exceeds_slack() {
+        use crate::coordinator::straggler::CorruptionModel;
+        use crate::coordinator::transport::ChannelTransport;
+        let base = Zq::z2e(64);
+        // N = 4 preset: R = 4 = N, zero slack — one corrupt worker is
+        // beyond the code's tolerance and must be reported, not decoded.
+        let cfg = SchemeConfig::for_workers(4).unwrap();
+        let scheme = registry::build("ep", &cfg).unwrap();
+        let backend = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+        let transport = ChannelTransport::spawn_faulty(
+            4,
+            backend,
+            StragglerModel::None,
+            CorruptionModel::silent_wrong_share([1]),
+            52,
+        );
+        let mut coord = Coordinator::with_transport(Box::new(transport));
+        let mut rng = Rng64::seeded(182);
+        let a = Matrix::random(&base, 8, 8, &mut rng);
+        let b = Matrix::random(&base, 8, 8, &mut rng);
+        let err = run_verified_erased(
+            &base,
+            scheme.as_ref(),
+            &mut coord,
+            std::slice::from_ref(&a),
+            std::slice::from_ref(&b),
+            &VerifyOptions::default(),
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("verification failed"), "{msg}");
+        assert!(msg.contains("suspect workers"), "{msg}");
         coord.shutdown();
     }
 

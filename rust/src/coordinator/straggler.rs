@@ -1,8 +1,9 @@
-//! Straggler injection — the phenomenon coded computation exists to defeat
-//! (§I: "the effect caused by some computing nodes which run unintentionally
-//! slower than others").
+//! Straggler and corruption injection — the two failure phenomena coded
+//! computation must defeat (§I: "the effect caused by some computing nodes
+//! which run unintentionally slower than others" — plus the Byzantine
+//! sibling: nodes that answer *wrongly*).
 //!
-//! Models:
+//! Delay models:
 //! * [`StragglerModel::None`] — ideal cluster;
 //! * [`StragglerModel::FixedSlow`] — a designated set of persistently slow
 //!   nodes (e.g. co-scheduled tenants);
@@ -10,6 +11,20 @@
 //!   every node (the standard model in the coded-computation literature);
 //! * [`StragglerModel::FailStop`] — nodes that never answer; the scheme
 //!   tolerates up to `N − R` of them.
+//!
+//! Corruption models ([`CorruptionModel`], drawn from the same deterministic
+//! per-worker RNG streams so channel and TCP transports inject identical
+//! faults):
+//! * [`CorruptionModel::BitFlip`] — one random bit of the response flips
+//!   (may hit the header → malformed, or the data → wrong-but-well-formed);
+//! * [`CorruptionModel::GarbagePayload`] — the whole response is replaced
+//!   with random bytes (almost surely malformed);
+//! * [`CorruptionModel::StaleReplay`] — the worker replays its previous
+//!   *clean* response instead of the current one (well-formed, usually the
+//!   wrong polynomial evaluation; the first job passes through clean);
+//! * [`CorruptionModel::SilentWrongShare`] — one payload byte past the
+//!   serialization header is perturbed: the response stays perfectly
+//!   well-formed and only *verified* decode can catch it.
 
 use crate::util::rng::Rng64;
 use std::collections::BTreeSet;
@@ -64,6 +79,160 @@ impl StragglerModel {
     }
 }
 
+/// Per-worker response-corruption model, applied after a successful compute.
+///
+/// Mirrors [`StragglerModel`]'s determinism contract: corruption draws come
+/// from the worker's own [`Rng64`] stream (`worker_rng(seed, id)`), and a
+/// model only consumes draws for the workers it targets, so straggler draws
+/// for untargeted workers are byte-identical with and without corruption.
+/// An **empty** target set means "every worker".
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum CorruptionModel {
+    /// No corruption (the default).
+    #[default]
+    None,
+    /// Flip one uniformly random bit of the response payload.
+    BitFlip { corrupt: BTreeSet<usize> },
+    /// Replace the whole response payload with uniform random bytes.
+    GarbagePayload { corrupt: BTreeSet<usize> },
+    /// Replay the previous clean response verbatim (first job: no-op).
+    StaleReplay { corrupt: BTreeSet<usize> },
+    /// Perturb one payload byte past the 16-byte serialization header, so
+    /// the response deserializes cleanly but decodes to a wrong product.
+    SilentWrongShare { corrupt: BTreeSet<usize> },
+}
+
+impl CorruptionModel {
+    pub fn bit_flip(corrupt: impl IntoIterator<Item = usize>) -> Self {
+        CorruptionModel::BitFlip { corrupt: corrupt.into_iter().collect() }
+    }
+
+    pub fn garbage_payload(corrupt: impl IntoIterator<Item = usize>) -> Self {
+        CorruptionModel::GarbagePayload { corrupt: corrupt.into_iter().collect() }
+    }
+
+    pub fn stale_replay(corrupt: impl IntoIterator<Item = usize>) -> Self {
+        CorruptionModel::StaleReplay { corrupt: corrupt.into_iter().collect() }
+    }
+
+    pub fn silent_wrong_share(corrupt: impl IntoIterator<Item = usize>) -> Self {
+        CorruptionModel::SilentWrongShare { corrupt: corrupt.into_iter().collect() }
+    }
+
+    /// `true` for [`CorruptionModel::None`].
+    pub fn is_none(&self) -> bool {
+        matches!(self, CorruptionModel::None)
+    }
+
+    /// Does this model corrupt `worker`'s responses? An empty target set
+    /// targets every worker.
+    pub fn targets(&self, worker: usize) -> bool {
+        match self {
+            CorruptionModel::None => false,
+            CorruptionModel::BitFlip { corrupt }
+            | CorruptionModel::GarbagePayload { corrupt }
+            | CorruptionModel::StaleReplay { corrupt }
+            | CorruptionModel::SilentWrongShare { corrupt } => {
+                corrupt.is_empty() || corrupt.contains(&worker)
+            }
+        }
+    }
+
+    /// Short CLI/report label (`none`, `bit-flip`, …).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CorruptionModel::None => "none",
+            CorruptionModel::BitFlip { .. } => "bit-flip",
+            CorruptionModel::GarbagePayload { .. } => "garbage-payload",
+            CorruptionModel::StaleReplay { .. } => "stale-replay",
+            CorruptionModel::SilentWrongShare { .. } => "silent-wrong-share",
+        }
+    }
+
+    /// Parse a `--corrupt` spec: `none` or `MODEL[:id,id,...]` where MODEL
+    /// is `bit-flip | garbage-payload | stale-replay | silent-wrong-share`.
+    /// Without the id list the model targets every worker.
+    pub fn parse(spec: &str) -> anyhow::Result<CorruptionModel> {
+        let (model, ids) = match spec.split_once(':') {
+            Some((m, rest)) => (m, rest),
+            None => (spec, ""),
+        };
+        let corrupt: BTreeSet<usize> = ids
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad worker id `{s}` in --corrupt `{spec}`"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        match model.trim() {
+            "none" => Ok(CorruptionModel::None),
+            "bit-flip" => Ok(CorruptionModel::BitFlip { corrupt }),
+            "garbage-payload" => Ok(CorruptionModel::GarbagePayload { corrupt }),
+            "stale-replay" => Ok(CorruptionModel::StaleReplay { corrupt }),
+            "silent-wrong-share" => Ok(CorruptionModel::SilentWrongShare { corrupt }),
+            other => anyhow::bail!(
+                "unknown corruption model `{other}` \
+                 (none | bit-flip | garbage-payload | stale-replay | silent-wrong-share)"
+            ),
+        }
+    }
+
+    /// Corrupt `payload` in place for `worker`'s current job. `prev` is the
+    /// worker's previous *clean* response (for [`CorruptionModel::StaleReplay`]).
+    /// Returns `true` iff the payload was modified. Only targeted workers
+    /// consume RNG draws, keeping untargeted straggler streams untouched.
+    pub fn apply(
+        &self,
+        worker: usize,
+        rng: &mut Rng64,
+        payload: &mut Vec<u8>,
+        prev: Option<&[u8]>,
+    ) -> bool {
+        if !self.targets(worker) {
+            return false;
+        }
+        match self {
+            CorruptionModel::None => false,
+            CorruptionModel::BitFlip { .. } => {
+                if payload.is_empty() {
+                    return false;
+                }
+                let bit = rng.below(payload.len() as u64 * 8) as usize;
+                payload[bit / 8] ^= 1 << (bit % 8);
+                true
+            }
+            CorruptionModel::GarbagePayload { .. } => {
+                for chunk in payload.chunks_mut(8) {
+                    let bytes = rng.next_u64().to_le_bytes();
+                    chunk.copy_from_slice(&bytes[..chunk.len()]);
+                }
+                true
+            }
+            CorruptionModel::StaleReplay { .. } => match prev {
+                Some(prev) => {
+                    payload.clear();
+                    payload.extend_from_slice(prev);
+                    true
+                }
+                None => false,
+            },
+            CorruptionModel::SilentWrongShare { .. } => {
+                // Skip the 16-byte PlaneMatrix header so the response still
+                // deserializes; add a nonzero delta to one data byte.
+                if payload.len() <= 16 {
+                    return false;
+                }
+                let off = 16 + rng.below((payload.len() - 16) as u64) as usize;
+                let delta = (rng.below(255) + 1) as u8;
+                payload[off] = payload[off].wrapping_add(delta);
+                true
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +268,88 @@ mod tests {
         let a = m.sample(0, &mut rng).unwrap();
         let b = m.sample(0, &mut rng).unwrap();
         assert!(a != b, "two samples should differ");
+    }
+
+    #[test]
+    fn corruption_parse_roundtrips_labels() {
+        for spec in ["none", "bit-flip", "garbage-payload", "stale-replay", "silent-wrong-share"]
+        {
+            let m = CorruptionModel::parse(spec).unwrap();
+            assert_eq!(m.label(), spec);
+        }
+        let m = CorruptionModel::parse("silent-wrong-share:1,3").unwrap();
+        assert_eq!(m, CorruptionModel::silent_wrong_share([1, 3]));
+        assert!(m.targets(1) && m.targets(3) && !m.targets(0));
+        assert!(CorruptionModel::parse("bogus").is_err());
+        assert!(CorruptionModel::parse("bit-flip:x").is_err());
+    }
+
+    #[test]
+    fn empty_target_set_targets_everyone() {
+        let m = CorruptionModel::bit_flip([]);
+        assert!(m.targets(0) && m.targets(17));
+        assert!(!CorruptionModel::None.targets(0));
+    }
+
+    #[test]
+    fn untargeted_workers_draw_nothing_and_stay_clean() {
+        let m = CorruptionModel::garbage_payload([2]);
+        let mut rng = Rng64::seeded(9);
+        let before = rng.next_u64();
+        let mut rng = Rng64::seeded(9);
+        let mut payload = vec![1u8, 2, 3, 4];
+        let orig = payload.clone();
+        assert!(!m.apply(0, &mut rng, &mut payload, None));
+        assert_eq!(payload, orig, "untargeted worker's payload untouched");
+        assert_eq!(rng.next_u64(), before, "no RNG draws consumed");
+    }
+
+    #[test]
+    fn bit_flip_changes_exactly_one_bit() {
+        let m = CorruptionModel::bit_flip([0]);
+        let mut rng = Rng64::seeded(10);
+        let mut payload = vec![0u8; 64];
+        assert!(m.apply(0, &mut rng, &mut payload, None));
+        let ones: u32 = payload.iter().map(|b| b.count_ones()).sum();
+        assert_eq!(ones, 1, "exactly one bit flipped");
+    }
+
+    #[test]
+    fn stale_replay_replays_prev_and_passes_first_job_clean() {
+        let m = CorruptionModel::stale_replay([0]);
+        let mut rng = Rng64::seeded(11);
+        let mut payload = vec![5u8; 8];
+        assert!(!m.apply(0, &mut rng, &mut payload, None), "first job has no prev");
+        assert_eq!(payload, vec![5u8; 8]);
+        let prev = vec![7u8; 8];
+        assert!(m.apply(0, &mut rng, &mut payload, Some(&prev)));
+        assert_eq!(payload, prev, "replayed the previous clean response");
+    }
+
+    #[test]
+    fn silent_wrong_share_keeps_the_header_intact() {
+        let m = CorruptionModel::silent_wrong_share([0]);
+        let mut rng = Rng64::seeded(12);
+        let mut payload: Vec<u8> = (0..48).map(|i| i as u8).collect();
+        let orig = payload.clone();
+        assert!(m.apply(0, &mut rng, &mut payload, None));
+        assert_eq!(&payload[..16], &orig[..16], "header bytes untouched");
+        let diffs = payload.iter().zip(&orig).filter(|(a, b)| a != b).count();
+        assert_eq!(diffs, 1, "exactly one data byte perturbed");
+        // too-short payloads are left alone rather than malformed
+        let mut tiny = vec![0u8; 16];
+        assert!(!m.apply(0, &mut rng, &mut tiny, None));
+    }
+
+    #[test]
+    fn corruption_draws_are_deterministic_per_seed() {
+        let m = CorruptionModel::bit_flip([0]);
+        let run = || {
+            let mut rng = Rng64::seeded(13);
+            let mut payload = vec![0u8; 32];
+            m.apply(0, &mut rng, &mut payload, None);
+            payload
+        };
+        assert_eq!(run(), run(), "same seed, same corrupt draw");
     }
 }

@@ -42,7 +42,7 @@
 //! simple transports (and test mocks) keep compiling: always-alive links
 //! and "membership unsupported" errors.
 
-use super::straggler::StragglerModel;
+use super::straggler::{CorruptionModel, StragglerModel};
 use super::worker::{spawn_worker, worker_rng, ShareCompute};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -241,6 +241,11 @@ pub struct ByteCounters {
     /// Speculative shard re-dispatches (copies beyond the first dispatch of
     /// each shard). Their payload bytes are also in `upload`.
     speculative: Arc<AtomicU64>,
+    /// Bytes of responses the verified-decode path rejected as corrupt
+    /// (malformed or inconsistent shares). Kept out of the derived
+    /// "discarded" bucket so late-but-honest and corrupt bytes are
+    /// distinguishable: `arrived == used + discarded + rejected`.
+    download_rejected: Arc<AtomicU64>,
 }
 
 impl ByteCounters {
@@ -268,6 +273,10 @@ impl ByteCounters {
         self.speculative.fetch_add(n, Ordering::Relaxed);
     }
 
+    pub fn add_download_rejected(&self, n: usize) {
+        self.download_rejected.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     pub fn upload_total(&self) -> u64 {
         self.upload.load(Ordering::Relaxed)
     }
@@ -288,10 +297,18 @@ impl ByteCounters {
         self.speculative.load(Ordering::Relaxed)
     }
 
+    pub fn download_rejected_total(&self) -> u64 {
+        self.download_rejected.load(Ordering::Relaxed)
+    }
+
     /// Bytes that arrived after the job no longer needed them (beyond the
-    /// recovery threshold, or after the job's handle was dropped).
+    /// recovery threshold, or after the job's handle was dropped). Rejected
+    /// corrupt bytes have their own bucket and are excluded here, so
+    /// `arrived == used + discarded + rejected` holds at every scope.
     pub fn download_discarded_total(&self) -> u64 {
-        self.download_arrived_total().saturating_sub(self.download_used_total())
+        self.download_arrived_total()
+            .saturating_sub(self.download_used_total())
+            .saturating_sub(self.download_rejected_total())
     }
 }
 
@@ -325,6 +342,7 @@ impl WorkerLink {
 pub struct ChannelTransport {
     compute: Arc<dyn ShareCompute>,
     straggler: StragglerModel,
+    corrupt: CorruptionModel,
     seed: u64,
     senders: Vec<Sender<ToWorker>>,
     workers: Vec<JoinHandle<()>>,
@@ -345,10 +363,26 @@ impl ChannelTransport {
         straggler: StragglerModel,
         seed: u64,
     ) -> ChannelTransport {
+        Self::spawn_faulty(n_workers, compute, straggler, CorruptionModel::None, seed)
+    }
+
+    /// [`ChannelTransport::spawn`] with Byzantine corruption injection:
+    /// workers targeted by `corrupt` mutate their response bytes after a
+    /// successful compute, drawing from the same per-worker RNG streams the
+    /// straggler models use (so a TCP daemon with the same seed and model
+    /// corrupts identically).
+    pub fn spawn_faulty(
+        n_workers: usize,
+        compute: Arc<dyn ShareCompute>,
+        straggler: StragglerModel,
+        corrupt: CorruptionModel,
+        seed: u64,
+    ) -> ChannelTransport {
         let (funnel, rx) = channel::<FromWorker>();
         let mut t = ChannelTransport {
             compute,
             straggler,
+            corrupt,
             seed,
             senders: Vec::with_capacity(n_workers),
             workers: Vec::with_capacity(n_workers),
@@ -375,6 +409,7 @@ impl ChannelTransport {
             funnel,
             Arc::clone(&self.compute),
             self.straggler.clone(),
+            self.corrupt.clone(),
             worker_rng(self.seed, wid),
             Arc::clone(&link),
         );
@@ -545,6 +580,48 @@ mod tests {
         let c = ByteCounters::new();
         c.add_download_used(5);
         assert_eq!(c.download_discarded_total(), 0);
+    }
+
+    #[test]
+    fn rejected_bytes_have_their_own_bucket() {
+        // arrived == used + discarded + rejected: corrupt responses leave
+        // the derived discarded bucket untouched.
+        let c = ByteCounters::new();
+        c.add_download_arrived(100);
+        c.add_download_used(60);
+        c.add_download_rejected(30);
+        assert_eq!(c.download_rejected_total(), 30);
+        assert_eq!(c.download_discarded_total(), 10);
+        assert_eq!(
+            c.download_arrived_total(),
+            c.download_used_total() + c.download_discarded_total() + c.download_rejected_total()
+        );
+    }
+
+    #[test]
+    fn faulty_spawn_corrupts_targeted_workers_only() {
+        let corrupt = CorruptionModel::garbage_payload([1]);
+        let mut t = ChannelTransport::spawn_faulty(
+            2,
+            Arc::new(Echo),
+            StragglerModel::None,
+            corrupt,
+            7,
+        );
+        let rx = t.take_receiver().unwrap();
+        let payload = vec![0x42u8; 24];
+        t.send(0, job(1, 0, payload.clone())).unwrap();
+        t.send(1, job(1, 1, payload.clone())).unwrap();
+        let mut by_shard = [None, None];
+        for _ in 0..2 {
+            let msg = rx.recv().unwrap();
+            by_shard[msg.worker_id] = msg.payload;
+        }
+        assert_eq!(by_shard[0].as_deref(), Some(&payload[..]), "worker 0 is clean");
+        let bad = by_shard[1].clone().unwrap();
+        assert_eq!(bad.len(), payload.len(), "garbage keeps the length (well-formed-looking)");
+        assert_ne!(bad, payload, "worker 1's response is corrupted");
+        Transport::shutdown(&mut t);
     }
 
     /// Echo backend for transport-level tests.

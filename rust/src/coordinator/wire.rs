@@ -551,6 +551,58 @@ mod tests {
     }
 
     #[test]
+    fn v3_kinds_reject_truncation_at_every_offset() {
+        // The staging frames are the newest wire surface; hold them to the
+        // same standard as job frames — a cut anywhere (mid-header or
+        // mid-payload) is a clean error, never a panic, hang, or misparse.
+        let frames = [
+            Frame::stage(3, vec![0x5A; 33]),
+            Frame::stage_ack(3, 6),
+            Frame::evict(3),
+        ];
+        for frame in frames {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &frame).unwrap();
+            for cut in 0..buf.len() {
+                let mut cur = Cursor::new(&buf[..cut]);
+                let res = read_frame(&mut cur);
+                if cut == 0 {
+                    assert!(matches!(res, Ok(None)), "empty stream is a clean EOF");
+                } else {
+                    let err = res.unwrap_err().to_string();
+                    assert!(
+                        err.contains("truncated"),
+                        "{:?} cut at {cut}: {err}",
+                        frame.kind
+                    );
+                }
+            }
+            // and the untruncated stream still parses back exactly
+            assert_eq!(roundtrip(&frame), frame);
+        }
+    }
+
+    #[test]
+    fn v3_kinds_reject_bad_kind_and_oversize() {
+        for frame in [Frame::stage(9, vec![1, 2, 3]), Frame::stage_ack(9, 1), Frame::evict(9)] {
+            let mut good = Vec::new();
+            write_frame(&mut good, &frame).unwrap();
+
+            // kind 12 is one past evict — the first unassigned discriminator
+            let mut bad_kind = good.clone();
+            bad_kind[6..8].copy_from_slice(&12u16.to_le_bytes());
+            let err = read_frame(&mut Cursor::new(bad_kind)).unwrap_err().to_string();
+            assert!(err.contains("kind"), "{err}");
+
+            // forged oversize payload_len must be rejected before allocation
+            let mut oversize = good.clone();
+            oversize[40..48].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+            let err = read_frame(&mut Cursor::new(oversize)).unwrap_err().to_string();
+            assert!(err.contains("exceeds"), "{err}");
+        }
+    }
+
+    #[test]
     fn bad_magic_version_kind_rejected() {
         let frame = Frame::job(1, 0, vec![7u8; 8]);
         let mut good = Vec::new();

@@ -17,7 +17,7 @@
 //! coincide on the primary dispatch path and differ when a spare machine
 //! recomputes another worker's shard.
 
-use super::straggler::StragglerModel;
+use super::straggler::{CorruptionModel, StragglerModel};
 use super::transport::{fail_report, FromWorker, ToWorker, WorkerLink};
 use crate::util::rng::Rng64;
 use std::collections::HashMap;
@@ -70,6 +70,44 @@ pub fn process_job(
     straggler: &StragglerModel,
     rng: &mut Rng64,
 ) -> FromWorker {
+    process_job_faulty(
+        machine_id,
+        shard,
+        job_id,
+        payload,
+        compute,
+        straggler,
+        &CorruptionModel::None,
+        rng,
+        &mut None,
+    )
+}
+
+/// [`process_job`] with Byzantine fault injection. After a successful
+/// compute, a worker targeted by `corrupt` mutates its response bytes
+/// according to the model before replying — the master receives a
+/// well-formed-looking but wrong share, exactly the failure class verified
+/// decode must catch. `replay` is the worker's previous *clean* response
+/// (fed to [`CorruptionModel::StaleReplay`]); callers hold one slot per
+/// worker so the replay state survives across jobs like it would in a
+/// long-lived daemon connection.
+///
+/// Corruption draws come from the same per-worker RNG stream as straggler
+/// draws and are taken only for targeted workers, so channel and TCP
+/// transports configured with the same seed corrupt byte-for-byte
+/// identically (the parity property the straggler models already have).
+#[allow(clippy::too_many_arguments)]
+pub fn process_job_faulty(
+    machine_id: usize,
+    shard: usize,
+    job_id: u64,
+    payload: &[u8],
+    compute: &dyn ShareCompute,
+    straggler: &StragglerModel,
+    corrupt: &CorruptionModel,
+    rng: &mut Rng64,
+    replay: &mut Option<Vec<u8>>,
+) -> FromWorker {
     let Some(delay) = straggler.sample(machine_id, rng) else {
         // Fail-stop: drop the job. The master never sees response *bytes*
         // (`payload: None` is invisible to collection, exactly like silence
@@ -84,10 +122,19 @@ pub fn process_job(
     let t0 = Instant::now();
     let result = compute.compute(machine_id, payload);
     let compute_time = t0.elapsed();
+    let response = match result.ok() {
+        Some(clean) if corrupt.targets(machine_id) => {
+            let mut bytes = clean.clone();
+            corrupt.apply(machine_id, rng, &mut bytes, replay.as_deref());
+            *replay = Some(clean);
+            Some(bytes)
+        }
+        other => other,
+    };
     FromWorker {
         job_id,
         worker_id: shard,
-        payload: result.ok(),
+        payload: response,
         compute: compute_time,
         injected_delay: delay,
     }
@@ -123,12 +170,14 @@ pub fn assemble_prepared(staged: &[u8], b_half: &[u8]) -> Vec<u8> {
 /// dispatched after the death, and this covers jobs that were already
 /// queued) and swallows pings, exactly like a dead socket. Clearing the
 /// flag revives the worker with its RNG stream intact.
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_worker(
     worker_id: usize,
     rx: Receiver<ToWorker>,
     tx: Sender<FromWorker>,
     compute: Arc<dyn ShareCompute>,
     straggler: StragglerModel,
+    corrupt: CorruptionModel,
     mut rng: Rng64,
     link: Arc<WorkerLink>,
 ) -> std::thread::JoinHandle<()> {
@@ -136,6 +185,7 @@ pub fn spawn_worker(
         .name(format!("gr-cdmm-worker-{worker_id}"))
         .spawn(move || {
             let mut staged: HashMap<u64, Arc<Vec<u8>>> = HashMap::new();
+            let mut replay: Option<Vec<u8>> = None;
             while let Ok(msg) = rx.recv() {
                 match msg {
                     ToWorker::Shutdown => break,
@@ -181,14 +231,16 @@ pub fn spawn_worker(
                                     }
                                 },
                             };
-                            let r = process_job(
+                            let r = process_job_faulty(
                                 worker_id,
                                 shard,
                                 job_id,
                                 bytes,
                                 &*compute,
                                 &straggler,
+                                &corrupt,
                                 &mut rng,
+                                &mut replay,
                             );
                             *link.last_heard.lock().unwrap() = Some(Instant::now());
                             r
@@ -273,6 +325,7 @@ mod tests {
             from_tx,
             Arc::new(Echo),
             StragglerModel::None,
+            CorruptionModel::None,
             Rng64::seeded(5),
             Arc::clone(&link),
         );
@@ -313,6 +366,50 @@ mod tests {
         assert!(from_rx.recv().unwrap().payload.is_none());
         to_tx.send(ToWorker::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn corrupting_worker_mutates_bytes_and_untargeted_worker_stays_clean() {
+        let model = CorruptionModel::bit_flip([1]);
+        let payload = vec![0u8; 32];
+        // Worker 0 is untargeted: report matches clean and draws nothing.
+        let mut rng0 = Rng64::seeded(9);
+        let mut replay0 = None;
+        let clean = process_job_faulty(
+            0, 0, 1, &payload, &Echo, &StragglerModel::None, &model, &mut rng0, &mut replay0,
+        );
+        assert_eq!(clean.payload.as_deref(), Some(&payload[..]));
+        assert!(replay0.is_none(), "untargeted worker keeps no replay state");
+        // Worker 1 is targeted: exactly one bit flipped, clean copy retained
+        // as the replay state for a future stale-replay draw.
+        let mut rng1 = Rng64::seeded(9);
+        let mut replay1 = None;
+        let bad = process_job_faulty(
+            1, 1, 1, &payload, &Echo, &StragglerModel::None, &model, &mut rng1, &mut replay1,
+        );
+        let got = bad.payload.unwrap();
+        assert_ne!(got, payload, "targeted worker's response is corrupted");
+        let flipped: u32 =
+            got.iter().zip(&payload).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(flipped, 1, "bit-flip changes exactly one bit");
+        assert_eq!(replay1.as_deref(), Some(&payload[..]), "clean bytes stored for replay");
+    }
+
+    #[test]
+    fn stale_replay_worker_resends_its_previous_clean_response() {
+        let model = CorruptionModel::stale_replay([0]);
+        let mut rng = Rng64::seeded(4);
+        let mut replay = None;
+        // First job: no previous response to replay — passes through clean.
+        let first = process_job_faulty(
+            0, 0, 1, &[1, 2, 3], &Echo, &StragglerModel::None, &model, &mut rng, &mut replay,
+        );
+        assert_eq!(first.payload.as_deref(), Some(&[1u8, 2, 3][..]));
+        // Second job: replays job 1's clean bytes instead of its own.
+        let second = process_job_faulty(
+            0, 0, 2, &[4, 5, 6], &Echo, &StragglerModel::None, &model, &mut rng, &mut replay,
+        );
+        assert_eq!(second.payload.as_deref(), Some(&[1u8, 2, 3][..]));
     }
 
     #[test]

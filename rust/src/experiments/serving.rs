@@ -34,13 +34,27 @@
 //! B-halves alone, staged bytes equal to the summed A-halves — and the
 //! usual per-job verification certifies the decodes bit-identical to the
 //! local reference products.
+//!
+//! With [`ServeConfig::verify_products`] on (`serve --verify-products`),
+//! the throughput comparison is replaced by a single **Byzantine-tolerant
+//! pass**: every job decodes through
+//! [`run_verified_erased`](crate::coordinator::run_verified_erased) —
+//! surplus responses are cross-checked against the decoded product,
+//! exact-threshold decodes are Freivalds-checked, corrupt shares are
+//! isolated by leave-one-out re-decode and their workers quarantined — so
+//! a pool poisoned by [`ServeConfig::corrupt`] (`--corrupt`, injected at
+//! the workers on both local transports) still serves bit-identical
+//! products or fails fast naming the suspects, never emitting an
+//! unverified wrong product. The pass also closes the download byte
+//! ledger: `arrived == used + discarded + rejected` is asserted in-run.
 
 use crate::codes::registry::{self, SchemeConfig};
 use crate::codes::DynScheme;
 use crate::coordinator::pool::ElasticConfig;
 use crate::coordinator::runner::make_coordinator;
 use crate::coordinator::{
-    Coordinator, JobHandle, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
+    run_verified_erased, ChannelTransport, Coordinator, CorruptionModel, DaemonConfig, JobHandle,
+    NativeCompute, ShareCompute, StragglerModel, VerifyOptions, WorkerDaemon,
 };
 use crate::ring::matrix::Matrix;
 use crate::ring::zq::Zq;
@@ -93,10 +107,21 @@ pub struct ServeConfig {
     /// Max jobs in flight in the pipelined pass (≥ 1).
     pub inflight: usize,
     pub straggler: StragglerModel,
+    /// Byzantine corruption injected at the workers (`--corrupt`): the
+    /// channel pool and freshly spawned loopback daemons corrupt with the
+    /// same deterministic per-worker draws. [`ServeTransport::Connect`]
+    /// daemons own their injection (`gr-cdmm worker --corrupt`), so a
+    /// non-none model is rejected in that mode.
+    pub corrupt: CorruptionModel,
     pub seed: u64,
     /// Verify every decoded product against a local `A·B` (also certifies
     /// warm-cache decodes identical to cold ones).
     pub verify: bool,
+    /// Byzantine-tolerant serving (`--verify-products`): skip the plain
+    /// throughput passes and run the stream through the verified decoder
+    /// instead — surplus cross-checks, Freivalds product checks,
+    /// leave-one-out isolation, quarantine + re-dispatch.
+    pub verify_products: bool,
     /// Master ↔ worker transport (see [`ServeTransport`]).
     pub transport: ServeTransport,
     /// Enable speculative re-dispatch + background reconnect
@@ -162,6 +187,24 @@ pub struct ServeRecord {
     pub prepared_evictions: u64,
     /// A-side encodes performed *after* staging (must be 0: encode-once).
     pub steady_a_encodes: u64,
+    /// Whether the Byzantine verified pass ran (`--verify-products`). When
+    /// true the plain throughput passes were skipped and their fields are 0.
+    pub verify_products: bool,
+    /// Elapsed time / throughput of the verified pass (0 when it didn't run).
+    pub vrfy_elapsed_s: f64,
+    pub vrfy_jobs_per_s: f64,
+    /// Responses the verified pass rejected as corrupt (malformed payloads
+    /// plus shares flagged by surplus / leave-one-out consistency).
+    pub corrupt_responses_detected: u64,
+    /// Quarantine markings the verified pass issued.
+    pub quarantines: u64,
+    /// Freivalds product-check trials run across the stream.
+    pub verify_trials: u64,
+    /// Leave-one-out re-decodes run to isolate inconsistent shares.
+    pub leave_one_out_decodes: u64,
+    /// Bytes of rejected-corrupt responses (the dedicated
+    /// [`ByteCounters`](crate::coordinator::ByteCounters) bucket).
+    pub download_rejected_bytes: u64,
     /// `true` iff every decoded product of both passes matched the local
     /// reference (trivially `true` when verification was disabled).
     pub verified: bool,
@@ -311,6 +354,55 @@ fn run_prepared(
     Ok((t0.elapsed().as_secs_f64(), ok, staged_bytes, b_bytes))
 }
 
+/// Verified-pass tallies summed over the stream's per-job metrics.
+#[derive(Clone, Copy, Debug, Default)]
+struct VerifiedStats {
+    corrupt: u64,
+    quarantines: u64,
+    trials: u64,
+    loo: u64,
+}
+
+/// Run the stream sequentially through the Byzantine-tolerant verified
+/// decoder: every job drains surplus responses past the threshold,
+/// cross-checks them against the decoded product, Freivalds-checks
+/// exact-threshold decodes, and quarantines + re-dispatches around corrupt
+/// workers. Returns the elapsed time, the reference-match flag, and the
+/// summed detection tallies.
+fn run_verified(
+    scheme: &dyn DynScheme,
+    coord: &mut Coordinator,
+    requests: &[Request],
+    seed: u64,
+) -> anyhow::Result<(f64, bool, VerifiedStats)> {
+    let base = Zq::z2e(64);
+    let opts = VerifyOptions { seed, ..VerifyOptions::default() };
+    let mut stats = VerifiedStats::default();
+    let mut ok = true;
+    let t0 = Instant::now();
+    for req in requests {
+        let a: Vec<Matrix<u64>> = req
+            .a_bytes
+            .iter()
+            .map(|buf| Matrix::from_bytes(&base, buf))
+            .collect::<anyhow::Result<_>>()?;
+        let b: Vec<Matrix<u64>> = req
+            .b_bytes
+            .iter()
+            .map(|buf| Matrix::from_bytes(&base, buf))
+            .collect::<anyhow::Result<_>>()?;
+        let (out, metrics) = run_verified_erased(&base, scheme, coord, &a, &b, &opts)?;
+        stats.corrupt += metrics.corrupt_responses_detected;
+        stats.quarantines += metrics.quarantines;
+        stats.trials += metrics.verify_trials;
+        stats.loo += metrics.leave_one_out_decodes;
+        if !req.expected.is_empty() {
+            ok &= out == req.expected;
+        }
+    }
+    Ok((t0.elapsed().as_secs_f64(), ok, stats))
+}
+
 /// Build one pass's pool for the configured transport: the in-process
 /// coordinator, or a TCP coordinator against freshly spawned loopback
 /// daemons (joined after the pass), or a TCP coordinator against external
@@ -329,10 +421,13 @@ fn make_pool(
         ServeTransport::TcpLoopback => {
             let daemons: Vec<WorkerDaemon> = (0..n_workers)
                 .map(|_| {
-                    WorkerDaemon::spawn_local(
+                    WorkerDaemon::spawn_local_cfg(
                         Arc::clone(&backend),
-                        cfg.straggler.clone(),
-                        cfg.seed,
+                        DaemonConfig {
+                            straggler: cfg.straggler.clone(),
+                            corrupt: cfg.corrupt.clone(),
+                            seed: cfg.seed,
+                        },
                         1,
                     )
                 })
@@ -341,13 +436,29 @@ fn make_pool(
             (Coordinator::connect_tcp(&addrs)?, daemons)
         }
         // In-process and --connect are exactly the runner's two pool
-        // flavors; the endpoint-count validation lives there.
+        // flavors; the endpoint-count validation lives there. A corrupting
+        // channel pool needs the faulty spawn path directly.
+        ServeTransport::InProcess if !cfg.corrupt.is_none() => {
+            let transport = ChannelTransport::spawn_faulty(
+                n_workers,
+                backend,
+                cfg.straggler.clone(),
+                cfg.corrupt.clone(),
+                cfg.seed,
+            );
+            (Coordinator::with_transport(Box::new(transport)), Vec::new())
+        }
         ServeTransport::InProcess => {
             let coord =
                 make_coordinator(n_workers, backend, cfg.straggler.clone(), cfg.seed, None)?;
             (coord, Vec::new())
         }
         ServeTransport::Connect(addrs) => {
+            anyhow::ensure!(
+                cfg.corrupt.is_none(),
+                "--corrupt needs a pool this process spawns; --connect daemons inject \
+                 their own corruption (gr-cdmm worker --corrupt)"
+            );
             let coord = make_coordinator(
                 n_workers,
                 backend,
@@ -385,6 +496,87 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
     // Probe instance only for the batch size; each pass gets a cold scheme.
     let batch = registry::build(&cfg.scheme, &reg_cfg)?.batch_size();
     let requests = make_requests(cfg, batch);
+
+    // Byzantine-tolerant serving: one verified pass replaces the throughput
+    // comparison. Every decode is cross-checked before release, so a
+    // corrupt pool serves bit-identical products (culprits quarantined) or
+    // fails fast naming the suspects — never an unverified wrong product.
+    if cfg.verify_products {
+        anyhow::ensure!(
+            !cfg.prepared,
+            "--verify-products and --prepared are mutually exclusive \
+             (the verified pass re-dispatches full shares)"
+        );
+        let scheme = registry::build(&cfg.scheme, &reg_cfg)?;
+        let (mut coord, daemons) = make_pool(cfg, &scheme)?;
+        let (vrfy_elapsed_s, ok, stats) =
+            run_verified(scheme.as_ref(), &mut coord, &requests, cfg.seed)?;
+        let counters = coord.counters().clone();
+        coord.shutdown();
+        for daemon in daemons {
+            daemon.join()?;
+        }
+        // The rejected bucket closes the byte ledger: every arrived
+        // response ends up classified used, discarded, or rejected.
+        anyhow::ensure!(
+            counters.download_arrived_total()
+                == counters.download_used_total()
+                    + counters.download_discarded_total()
+                    + counters.download_rejected_total(),
+            "download byte ledger must balance: arrived {} != used {} + discarded {} + rejected {}",
+            counters.download_arrived_total(),
+            counters.download_used_total(),
+            counters.download_discarded_total(),
+            counters.download_rejected_total(),
+        );
+        if !cfg.corrupt.is_none() {
+            anyhow::ensure!(
+                stats.corrupt >= 1 && stats.quarantines >= 1,
+                "corruption was injected but the verified pass detected {} corrupt \
+                 response(s) and issued {} quarantine(s)",
+                stats.corrupt,
+                stats.quarantines
+            );
+        }
+        let (plan_cache_hits, plan_cache_misses) = scheme.plan_cache_stats();
+        let vrfy_jobs_per_s = cfg.jobs as f64 / vrfy_elapsed_s.max(1e-12);
+        return Ok(ServeRecord {
+            scheme: cfg.scheme.clone(),
+            transport: cfg.transport.label().to_string(),
+            n_workers: cfg.n_workers,
+            size: cfg.size,
+            jobs: cfg.jobs,
+            inflight: cfg.inflight,
+            seq_elapsed_s: 0.0,
+            seq_jobs_per_s: 0.0,
+            pipe_elapsed_s: 0.0,
+            pipe_jobs_per_s: 0.0,
+            speedup: 0.0,
+            plan_cache_hits,
+            plan_cache_misses,
+            speculative_dispatches: 0,
+            prepared: false,
+            prep_elapsed_s: 0.0,
+            prep_jobs_per_s: 0.0,
+            prep_speedup: 0.0,
+            staged_upload_bytes: 0,
+            prep_upload_bytes: 0,
+            pipe_upload_bytes: 0,
+            prepared_hits: 0,
+            prepared_misses: 0,
+            prepared_evictions: 0,
+            steady_a_encodes: 0,
+            verify_products: true,
+            vrfy_elapsed_s,
+            vrfy_jobs_per_s,
+            corrupt_responses_detected: stats.corrupt,
+            quarantines: stats.quarantines,
+            verify_trials: stats.trials,
+            leave_one_out_decodes: stats.loo,
+            download_rejected_bytes: counters.download_rejected_total(),
+            verified: ok,
+        });
+    }
 
     let seq_scheme = registry::build(&cfg.scheme, &reg_cfg)?;
     let (mut seq_coord, seq_daemons) = make_pool(cfg, &seq_scheme)?;
@@ -485,6 +677,14 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
         prepared_misses: prepared_counts.1,
         prepared_evictions: prepared_counts.2,
         steady_a_encodes,
+        verify_products: false,
+        vrfy_elapsed_s: 0.0,
+        vrfy_jobs_per_s: 0.0,
+        corrupt_responses_detected: 0,
+        quarantines: 0,
+        verify_trials: 0,
+        leave_one_out_decodes: 0,
+        download_rejected_bytes: 0,
         verified: seq_ok && pipe_ok && prep_ok,
     })
 }
@@ -516,6 +716,18 @@ pub fn render(records: &[ServeRecord]) -> String {
                     "-".to_string()
                 },
                 format!("{}/{}", r.plan_cache_hits, r.plan_cache_hits + r.plan_cache_misses),
+                if r.verify_products {
+                    format!("{:.2}", r.vrfy_jobs_per_s)
+                } else {
+                    "-".to_string()
+                },
+                if r.verify_products {
+                    // Corrupt responses detected / quarantines issued by the
+                    // Byzantine-tolerant pass.
+                    format!("{}/{}", r.corrupt_responses_detected, r.quarantines)
+                } else {
+                    "-".to_string()
+                },
                 r.verified.to_string(),
             ]
         })
@@ -533,6 +745,8 @@ pub fn render(records: &[ServeRecord]) -> String {
             "prepared jobs/s",
             "upload/job",
             "plan-cache hits",
+            "verified jobs/s",
+            "corrupt/quar",
             "verified",
         ],
         &rows,
@@ -567,6 +781,14 @@ impl ServeRecord {
             .set("prepared_misses", self.prepared_misses)
             .set("prepared_evictions", self.prepared_evictions)
             .set("steady_a_encodes", self.steady_a_encodes)
+            .set("verify_products", self.verify_products)
+            .set("vrfy_elapsed_s", self.vrfy_elapsed_s)
+            .set("vrfy_jobs_per_s", self.vrfy_jobs_per_s)
+            .set("corrupt_responses_detected", self.corrupt_responses_detected)
+            .set("quarantines", self.quarantines)
+            .set("verify_trials", self.verify_trials)
+            .set("leave_one_out_decodes", self.leave_one_out_decodes)
+            .set("download_rejected_bytes", self.download_rejected_bytes)
             .set("verified", self.verified)
     }
 }
@@ -588,12 +810,14 @@ mod tests {
             jobs: 6,
             inflight: 3,
             straggler: StragglerModel::fixed_slow([0, 1], Duration::from_millis(10)),
+            corrupt: CorruptionModel::None,
             seed: 77,
             verify: true,
             transport: ServeTransport::InProcess,
             speculate: false,
             elastic: false,
             prepared: false,
+            verify_products: false,
         }
     }
 
@@ -675,6 +899,71 @@ mod tests {
     }
 
     #[test]
+    fn verified_serving_accepts_a_clean_pool() {
+        // No corruption: the surplus cross-check certifies every decode
+        // without ever falling back to Freivalds or leave-one-out, and the
+        // byte ledger balances with an empty rejected bucket (asserted
+        // inside `run`).
+        let mut cfg = small_cfg("ep");
+        cfg.verify_products = true;
+        let rec = run(&cfg).unwrap();
+        assert!(rec.verified, "every verified job must match the local reference");
+        assert!(rec.verify_products);
+        assert!(rec.vrfy_jobs_per_s > 0.0);
+        assert_eq!(rec.corrupt_responses_detected, 0);
+        assert_eq!(rec.quarantines, 0);
+        assert_eq!(rec.leave_one_out_decodes, 0);
+        assert_eq!(rec.download_rejected_bytes, 0);
+    }
+
+    #[test]
+    fn verified_serving_detects_and_quarantines_a_corrupt_worker() {
+        // One silently-wrong worker: plain decode would return a wrong
+        // product without any error. The verified pass must still serve the
+        // bit-identical reference product for every job, reject the corrupt
+        // shares into the dedicated byte bucket, and quarantine the culprit
+        // (`run` additionally asserts detection >= 1 whenever corruption
+        // was injected).
+        let mut cfg = small_cfg("ep");
+        cfg.straggler = StragglerModel::None;
+        cfg.corrupt = CorruptionModel::silent_wrong_share([2]);
+        cfg.verify_products = true;
+        let rec = run(&cfg).unwrap();
+        assert!(rec.verified, "products must be bit-identical to the clean reference");
+        assert!(rec.corrupt_responses_detected >= 1, "{rec:?}");
+        assert!(rec.quarantines >= 1, "{rec:?}");
+        assert!(rec.download_rejected_bytes > 0, "rejected bytes must be bucketed");
+    }
+
+    #[test]
+    fn verified_serving_over_tcp_loopback_quarantines() {
+        // Same Byzantine stream over real sockets: the loopback daemons
+        // inject the corruption (DaemonConfig::corrupt), detection happens
+        // at the master, end to end over the wire.
+        let mut cfg = small_cfg("ep");
+        cfg.jobs = 3;
+        cfg.straggler = StragglerModel::None;
+        cfg.corrupt = CorruptionModel::silent_wrong_share([2]);
+        cfg.verify_products = true;
+        cfg.transport = ServeTransport::TcpLoopback;
+        let rec = run(&cfg).unwrap();
+        assert!(rec.verified, "products must be bit-identical to the clean reference");
+        assert!(rec.corrupt_responses_detected >= 1, "{rec:?}");
+        assert!(rec.quarantines >= 1, "{rec:?}");
+    }
+
+    #[test]
+    fn connect_mode_rejects_local_corruption() {
+        // --connect daemons own their corruption injection; a local model
+        // would silently not apply, so it is rejected up front.
+        let mut cfg = small_cfg("ep-rmfe-1");
+        cfg.transport = ServeTransport::Connect(vec!["127.0.0.1:1".to_string(); 8]);
+        cfg.corrupt = CorruptionModel::silent_wrong_share([0]);
+        let err = run(&cfg).unwrap_err();
+        assert!(err.to_string().contains("--connect"), "{err}");
+    }
+
+    #[test]
     fn connect_mode_validates_endpoint_count() {
         let mut cfg = small_cfg("ep-rmfe-1");
         cfg.transport = ServeTransport::Connect(vec!["127.0.0.1:1".to_string()]);
@@ -687,8 +976,13 @@ mod tests {
         let rec = run(&small_cfg("ep")).unwrap();
         let md = render(std::slice::from_ref(&rec));
         assert!(md.contains("pipelined jobs/s"));
+        assert!(md.contains("verified jobs/s"));
+        assert!(md.contains("corrupt/quar"));
         let js = records_to_json(&[rec]).render();
         assert!(js.contains("pipe_jobs_per_s"));
         assert!(js.contains("plan_cache_hits"));
+        assert!(js.contains("vrfy_jobs_per_s"));
+        assert!(js.contains("corrupt_responses_detected"));
+        assert!(js.contains("download_rejected_bytes"));
     }
 }

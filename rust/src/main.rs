@@ -15,8 +15,10 @@
 //!              [--straggler none|slow|exp|fail] [--no-verify] [--seed k] [--out results]
 //!              [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
 //!              [--speculate] [--elastic] [--prepared]
+//!              [--corrupt MODEL[:ids]] [--verify-products]
 //! gr-cdmm worker --listen HOST:PORT --scheme ep-rmfe-1 --workers 8
-//!              [--straggler none|slow|exp|fail] [--seed k] [--once | --conns K]
+//!              [--straggler none|slow|exp|fail] [--corrupt MODEL[:ids]]
+//!              [--seed k] [--once | --conns K]
 //! gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
 //!              [--sizes 128,256,...] [--full] [--reps k] [--out results]
 //! ```
@@ -31,7 +33,7 @@
 use gr_cdmm::codes::registry::{self, SchemeConfig};
 use gr_cdmm::coordinator::daemon::{self, DaemonConfig};
 use gr_cdmm::coordinator::runner::{make_coordinator, run_erased, NativeCompute};
-use gr_cdmm::coordinator::{JobMetrics, ShareCompute, StragglerModel};
+use gr_cdmm::coordinator::{CorruptionModel, JobMetrics, ShareCompute, StragglerModel};
 use gr_cdmm::experiments::serving::ServeTransport;
 use gr_cdmm::experiments::{figs, rmfe35, serving, table1, DEFAULT_SIZES, PAPER_SIZES};
 use gr_cdmm::ring::extension::Extension;
@@ -79,8 +81,10 @@ USAGE:
                [--straggler none|slow|exp|fail] [--no-verify] [--seed K] [--out DIR]
                [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
                [--speculate] [--elastic] [--prepared]
+               [--corrupt MODEL[:ids]] [--verify-products]
   gr-cdmm worker --listen HOST:PORT --scheme NAME --workers 4|8|16|32
-               [--straggler none|slow|exp|fail] [--seed K] [--once | --conns K]
+               [--straggler none|slow|exp|fail] [--corrupt MODEL[:ids]]
+               [--seed K] [--once | --conns K]
   gr-cdmm experiments --exp fig2|fig3|fig4|fig5|table1|rmfe35|all
                [--sizes 128,256] [--full] [--reps K] [--out DIR]
 
@@ -92,7 +96,17 @@ short `--connect` list downgrade to the largest scheme preset its live
 daemons can serve instead of erroring. `--prepared` fixes one A across the
 stream and adds an encode-once pass: A's share halves are staged on the
 workers once and every job ships only its B-halves (the run asserts zero
-steady-state A-encodes and B-only per-job upload)."
+steady-state A-encodes and B-only per-job upload).
+
+Byzantine faults: `--corrupt MODEL[:ids]` injects corrupt responses at the
+listed workers (models: bit-flip | garbage-payload | stale-replay |
+silent-wrong-share; omitting the id list targets every worker) — on `serve` for the local
+transports, on `worker` for external daemons. `serve --verify-products`
+decodes every job through the verified path: surplus responses are
+cross-checked against the decoded product, exact-threshold decodes are
+Freivalds-checked, corrupt shares are isolated by leave-one-out re-decode
+and their workers quarantined — wrong products are never emitted
+unverified."
     );
 }
 
@@ -130,6 +144,14 @@ fn parse_straggler(args: &Args, n_workers: usize) -> StragglerModel {
         "exp" => StragglerModel::Exponential { mean: Duration::from_millis(50) },
         "fail" => StragglerModel::fail_stop([n_workers - 1]),
         _ => StragglerModel::None,
+    }
+}
+
+/// `--corrupt MODEL[:id,id,...]` → corruption model (None when absent).
+fn parse_corrupt(args: &Args) -> anyhow::Result<CorruptionModel> {
+    match args.get("corrupt") {
+        Some(spec) => CorruptionModel::parse(spec),
+        None => Ok(CorruptionModel::None),
     }
 }
 
@@ -231,8 +253,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         jobs: args.get_usize("jobs", 16),
         inflight: args.get_usize("inflight", 4),
         straggler: parse_straggler(args, args.get_usize("workers", 8)),
+        corrupt: parse_corrupt(args)?,
         seed: args.get_u64("seed", 42),
         verify: !args.flag("no-verify"),
+        verify_products: args.flag("verify-products"),
         transport,
         speculate: args.flag("speculate"),
         elastic: args.flag("elastic"),
@@ -244,16 +268,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         rec.jobs, rec.inflight, rec.transport
     );
     println!("{}", serving::render(std::slice::from_ref(&rec)));
-    println!(
-        "pipelined {:.2} jobs/s vs sequential {:.2} jobs/s ({:.2}x); \
-         decode-plan cache {} hits / {} misses; verified: {}",
-        rec.pipe_jobs_per_s,
-        rec.seq_jobs_per_s,
-        rec.speedup,
-        rec.plan_cache_hits,
-        rec.plan_cache_misses,
-        rec.verified
-    );
+    if rec.verify_products {
+        println!(
+            "verified (Byzantine-tolerant) {:.2} jobs/s; {} corrupt response(s) \
+             detected, {} quarantine(s), {} Freivalds trial(s), {} leave-one-out \
+             re-decode(s), {} B rejected; verified: {}",
+            rec.vrfy_jobs_per_s,
+            rec.corrupt_responses_detected,
+            rec.quarantines,
+            rec.verify_trials,
+            rec.leave_one_out_decodes,
+            rec.download_rejected_bytes,
+            rec.verified
+        );
+    } else {
+        println!(
+            "pipelined {:.2} jobs/s vs sequential {:.2} jobs/s ({:.2}x); \
+             decode-plan cache {} hits / {} misses; verified: {}",
+            rec.pipe_jobs_per_s,
+            rec.seq_jobs_per_s,
+            rec.speedup,
+            rec.plan_cache_hits,
+            rec.plan_cache_misses,
+            rec.verified
+        );
+    }
     if rec.prepared {
         println!(
             "prepared (encode-once) {:.2} jobs/s ({:.2}x over pipelined); \
@@ -294,6 +333,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let scheme = registry::build(scheme_name, &cfg)?;
     let compute: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(scheme));
     let straggler = parse_straggler(args, n_workers);
+    let corrupt = parse_corrupt(args)?;
     let seed = args.get_u64("seed", 42);
     let max_conns = if args.flag("once") {
         Some(1)
@@ -306,7 +346,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
-    daemon::run(listen, compute, DaemonConfig { straggler, seed }, max_conns)
+    daemon::run(listen, compute, DaemonConfig { straggler, corrupt, seed }, max_conns)
 }
 
 fn write_out(

@@ -11,7 +11,10 @@
 use gr_cdmm::codes::registry::{self, SchemeConfig};
 use gr_cdmm::codes::DynScheme;
 use gr_cdmm::coordinator::transport::ByteCounters;
-use gr_cdmm::coordinator::{Coordinator, JobHandle, NativeCompute, StragglerModel};
+use gr_cdmm::coordinator::{
+    run_verified_erased, ChannelTransport, Coordinator, CorruptionModel, JobHandle,
+    NativeCompute, ShareCompute, StragglerModel, VerifyOptions,
+};
 use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::util::rng::Rng64;
@@ -181,6 +184,55 @@ fn warm_plan_cache_serving_is_bit_identical_and_hits() {
     assert_eq!(
         Matrix::from_bytes(&base, &outputs[0][0]).unwrap(),
         Matrix::matmul(&base, &a, &b)
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn byte_ledger_balances_with_rejected_corrupt_responses() {
+    // A garbage-payload worker produces corrupt responses the verified
+    // decode rejects; their bytes land in the dedicated `rejected` bucket
+    // and the download ledger still closes exactly:
+    // arrived == used + discarded + rejected.
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep", &cfg).unwrap();
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(&scheme)));
+    let transport = ChannelTransport::spawn_faulty(
+        8,
+        backend,
+        StragglerModel::None,
+        CorruptionModel::garbage_payload([3]),
+        515,
+    );
+    let mut coord = Coordinator::with_transport(Box::new(transport));
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(615);
+    let a = Matrix::random(&base, 16, 16, &mut rng);
+    let b = Matrix::random(&base, 16, 16, &mut rng);
+    let expected = Matrix::matmul(&base, &a, &b);
+    let opts = VerifyOptions::default();
+    for _ in 0..2 {
+        let (out, metrics) = run_verified_erased(
+            &base,
+            scheme.as_ref(),
+            &mut coord,
+            std::slice::from_ref(&a),
+            std::slice::from_ref(&b),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], expected, "the product must match the clean reference");
+        assert!(metrics.corrupt_responses_detected >= 1, "{metrics:?}");
+    }
+    let counters = coord.counters().clone();
+    assert!(counters.download_rejected_total() > 0, "rejected bytes must be bucketed");
+    assert_eq!(
+        counters.download_arrived_total(),
+        counters.download_used_total()
+            + counters.download_discarded_total()
+            + counters.download_rejected_total(),
+        "download byte ledger must balance"
     );
     coord.shutdown();
 }

@@ -10,7 +10,8 @@ use gr_cdmm::codes::registry::{self, SchemeConfig};
 use gr_cdmm::codes::DynScheme;
 use gr_cdmm::coordinator::wire::{self, Frame, FrameKind};
 use gr_cdmm::coordinator::{
-    Coordinator, JobHandle, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
+    ChannelTransport, Coordinator, CorruptionModel, DaemonConfig, JobHandle, NativeCompute,
+    ShareCompute, StragglerModel, WorkerDaemon,
 };
 use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::zq::Zq;
@@ -153,6 +154,118 @@ fn tcp_loopback_matches_channel_fail_stop() {
     // Fail-stop daemons still read the share (upload counted on both
     // transports) and answer with a byte-free failure report.
     assert_tcp_matches_channel(StragglerModel::fail_stop([2, 5]), 902);
+}
+
+/// The per-worker payload of job `job` in the corruption parity runs.
+fn parity_payload(job: u8, worker: usize) -> Vec<u8> {
+    vec![job * 16 + worker as u8 + 1; 24]
+}
+
+/// Run two sequential 4-worker echo jobs under `model` and return every
+/// response's bytes, sorted by worker, one Vec per job.
+fn corrupt_responses_for(
+    model: &CorruptionModel,
+    tcp: bool,
+    seed: u64,
+) -> Vec<Vec<(usize, Vec<u8>)>> {
+    let n = 4;
+    let backend: Arc<dyn ShareCompute> = Arc::new(Echo);
+    let (mut coord, daemons) = if tcp {
+        let daemons: Vec<WorkerDaemon> = (0..n)
+            .map(|_| {
+                WorkerDaemon::spawn_local_cfg(
+                    Arc::clone(&backend),
+                    DaemonConfig {
+                        straggler: StragglerModel::None,
+                        corrupt: model.clone(),
+                        seed,
+                    },
+                    1,
+                )
+                .unwrap()
+            })
+            .collect();
+        let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+        (Coordinator::connect_tcp(&addrs).unwrap(), daemons)
+    } else {
+        let transport = ChannelTransport::spawn_faulty(
+            n,
+            Arc::clone(&backend),
+            StragglerModel::None,
+            model.clone(),
+            seed,
+        );
+        (Coordinator::with_transport(Box::new(transport)), Vec::new())
+    };
+    let mut jobs = Vec::new();
+    for job in 0..2u8 {
+        let payloads: Vec<Vec<u8>> = (0..n).map(|w| parity_payload(job, w)).collect();
+        let (collected, _) = coord.submit(payloads, n).unwrap().wait().unwrap();
+        let mut got: Vec<(usize, Vec<u8>)> =
+            collected.into_iter().map(|c| (c.worker_id, c.payload)).collect();
+        got.sort_by_key(|&(w, _)| w);
+        jobs.push(got);
+    }
+    coord.shutdown();
+    for daemon in daemons {
+        daemon.join().unwrap();
+    }
+    jobs
+}
+
+#[test]
+fn corruption_draws_match_across_transports() {
+    // Mirror of the straggler parity tests above for the Byzantine models:
+    // same model + same seed must corrupt byte-for-byte identically whether
+    // the drawing happens in the channel pool or in a TCP daemon — that is
+    // what makes Byzantine fault scenarios reproducible across transports.
+    for model in [
+        CorruptionModel::bit_flip([1]),
+        CorruptionModel::garbage_payload([2]),
+        CorruptionModel::stale_replay([1, 3]),
+        CorruptionModel::silent_wrong_share([0]),
+    ] {
+        let chan = corrupt_responses_for(&model, false, 606);
+        let tcp = corrupt_responses_for(&model, true, 606);
+        assert_eq!(
+            chan, tcp,
+            "corrupt draws diverged across transports for {}",
+            model.label()
+        );
+        // And the injection actually fired (parity alone would also hold if
+        // corruption were silently a no-op everywhere).
+        match &model {
+            CorruptionModel::StaleReplay { .. } => {
+                // First job has nothing to replay (clean); the second job's
+                // targeted workers replay their first clean response.
+                for &w in &[1usize, 3] {
+                    assert_eq!(chan[0][w].1, parity_payload(0, w));
+                    assert_eq!(chan[1][w].1, parity_payload(0, w), "worker {w} must replay");
+                }
+            }
+            _ => {
+                let target = match &model {
+                    CorruptionModel::BitFlip { .. } => 1usize,
+                    CorruptionModel::GarbagePayload { .. } => 2,
+                    _ => 0,
+                };
+                assert_ne!(
+                    chan[0][target].1,
+                    parity_payload(0, target),
+                    "{} must corrupt worker {target}'s response",
+                    model.label()
+                );
+            }
+        }
+        // Untargeted workers echo cleanly on every model.
+        for (job, responses) in chan.iter().enumerate() {
+            for &(w, ref payload) in responses {
+                if !model.targets(w) {
+                    assert_eq!(*payload, parity_payload(job as u8, w), "worker {w} is clean");
+                }
+            }
+        }
+    }
 }
 
 /// A rogue "worker": accepts one connection, optionally reads `read_frames`

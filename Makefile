@@ -2,7 +2,7 @@
 # Python environment with JAX (build-time only — Python is never on the
 # request path).
 
-.PHONY: build test bench bench-json bench-serving bench-simd serve-tcp-demo serve-elastic-demo serve-prepared-demo serve-byzantine-demo artifacts clean
+.PHONY: build test bench bench-json bench-serving bench-simd serve-tcp-demo serve-shm-demo serve-elastic-demo serve-prepared-demo serve-byzantine-demo artifacts clean
 
 build:
 	cargo build --release
@@ -31,10 +31,12 @@ bench-simd:
 	cargo bench --bench simd_kernels
 
 # Serving throughput only: pipelined multi-job coordinator vs sequential
-# baseline, on both transports (channel + tcp-loopback), every row also
-# running the prepared (encode-once) pass — one fixed A staged on the
-# workers, B-only per-job upload, in-run encode-once assertions; writes
-# BENCH_serving_throughput.json.
+# baseline, on all three transports (channel + tcp-loopback + shm), every
+# row also running the prepared (encode-once) pass — one fixed A staged on
+# the workers, B-only per-job upload, in-run encode-once assertions — and
+# reporting the memory-discipline probes (pool hits, large allocs, copied
+# bytes/job) plus a final pooled-vs-unpooled (GR_CDMM_POOL_CAP=0) pair;
+# writes BENCH_serving_throughput.json.
 bench-serving:
 	cargo bench --bench serving_throughput
 
@@ -54,6 +56,16 @@ serve-tcp-demo: build
 	  --connect 127.0.0.1:7851,127.0.0.1:7852,127.0.0.1:7853,127.0.0.1:7854; \
 	wait; \
 	trap - EXIT
+
+# Shared-memory data-plane demo: `serve --transport shm` spawns its own
+# loopback daemons whose control frames ride TCP while every payload moves
+# out-of-line through per-worker file-backed rings. Decoded products are
+# verified against a local matmul, and the report's memory-discipline
+# columns (pool hits, large allocs, copied/job) surface the zero-copy
+# steady state.
+serve-shm-demo: build
+	./target/release/gr-cdmm serve --scheme ep-rmfe-1 --workers 4 --size 64 \
+	  --jobs 8 --inflight 4 --transport shm
 
 # Flapping-daemon variant: the :7854 daemon is killed mid-batch and
 # restarted one second later; `serve --speculate` re-dispatches its overdue

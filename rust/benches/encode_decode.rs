@@ -17,6 +17,7 @@ use gr_cdmm::ring::matrix::Matrix;
 use gr_cdmm::ring::plane::scalar_table_builds;
 use gr_cdmm::ring::zq::Zq;
 use gr_cdmm::util::bench::{black_box, throughput, write_bench_json, Bencher};
+use gr_cdmm::util::bytepool::PooledBuf;
 use gr_cdmm::util::json::Json;
 use gr_cdmm::util::parallel;
 use gr_cdmm::util::rng::Rng64;
@@ -52,7 +53,7 @@ fn main() {
         });
         let payloads = scheme.encode_bytes(&a, &bb).unwrap();
         let rt = scheme.recovery_threshold();
-        let responses: Vec<(usize, Vec<u8>)> = (0..rt)
+        let responses: Vec<(usize, PooledBuf)> = (0..rt)
             .map(|i| (i, scheme.compute_bytes(&payloads[i]).unwrap()))
             .collect();
         let borrowed: Vec<(usize, &[u8])> =

@@ -1,9 +1,15 @@
 //! Bench: serving throughput — the pipelined multi-job coordinator vs the
 //! sequential submit+wait baseline, per the ISSUE-3 acceptance setup: 8
 //! workers, two fixed-slow stragglers, ≥ 4 jobs in flight — now measured on
-//! **both transports**: the in-process channel pool and real TCP loopback
-//! daemons (same straggler draws, so the channel-vs-tcp row pair prices the
-//! wire itself: framing + socket syscalls + loopback copies).
+//! **three transports**: the in-process channel pool, real TCP loopback
+//! daemons, and the shared-memory transport (control on TCP, payloads
+//! through file-backed rings). Same straggler draws across the triple, so
+//! the rows price the wire itself: framing + socket syscalls + copies.
+//!
+//! Each row also reports the memory-discipline probes (pool hit ratio,
+//! large allocations, copied bytes per job), and a final pooled-vs-unpooled
+//! pair re-runs one row with the buffer pool disabled (`GR_CDMM_POOL_CAP=0`
+//! operating point) to price what pooling buys.
 //!
 //! 16 jobs per pass: with the two stragglers never among the first `R = 4`,
 //! the responding subsets are drawn from `C(6,4) = 15` possibilities, so 16
@@ -28,6 +34,7 @@ use gr_cdmm::experiments::serving::{
     records_to_json, render, run, ServeConfig, ServeTransport,
 };
 use gr_cdmm::util::bench::write_bench_json;
+use gr_cdmm::util::bytepool::BytePool;
 use std::time::Duration;
 
 fn main() {
@@ -38,13 +45,17 @@ fn main() {
 
     println!(
         "# serving throughput — 8 workers, workers 0/1 slow by 25ms, 16 jobs, 4 in flight, \
-         channel vs tcp-loopback{}\n",
+         channel vs tcp-loopback vs shm{}\n",
         if smoke { " (smoke)" } else { "" }
     );
     let mut records = Vec::new();
     for &scheme in schemes {
         for &size in sizes {
-            for transport in [ServeTransport::InProcess, ServeTransport::TcpLoopback] {
+            for transport in [
+                ServeTransport::InProcess,
+                ServeTransport::TcpLoopback,
+                ServeTransport::ShmLoopback,
+            ] {
                 let cfg = ServeConfig {
                     scheme: scheme.to_string(),
                     n_workers: 8,
@@ -104,21 +115,79 @@ fn main() {
             rec.staged_upload_bytes,
             rec.steady_a_encodes,
         );
+        println!(
+            "{}@{} [{}]: memory discipline — pool hits {}/{}, large allocs {}, \
+             copied {} B/job",
+            rec.scheme,
+            rec.size,
+            rec.transport,
+            rec.pool_hits,
+            rec.pool_hits + rec.pool_misses,
+            rec.large_allocs,
+            rec.copied_bytes / rec.jobs.max(1) as u64,
+        );
     }
-    // The headline transport-cost row: pipelined channel vs pipelined TCP
-    // at matching (scheme, size).
-    for pair in records.chunks(2) {
-        if let [chan, tcp] = pair {
+    // The headline transport-cost rows: pipelined channel vs pipelined TCP
+    // vs pipelined shm at matching (scheme, size).
+    for triple in records.chunks(3) {
+        if let [chan, tcp, shm] = triple {
             println!(
-                "{}@{}: transport cost {:.2}x (channel {:.2} jobs/s vs tcp-loopback {:.2} jobs/s)",
+                "{}@{}: transport cost channel {:.2} jobs/s vs tcp-loopback {:.2} jobs/s \
+                 ({:.2}x) vs shm {:.2} jobs/s ({:.2}x)",
                 chan.scheme,
                 chan.size,
-                chan.pipe_jobs_per_s / tcp.pipe_jobs_per_s.max(1e-12),
                 chan.pipe_jobs_per_s,
                 tcp.pipe_jobs_per_s,
+                chan.pipe_jobs_per_s / tcp.pipe_jobs_per_s.max(1e-12),
+                shm.pipe_jobs_per_s,
+                chan.pipe_jobs_per_s / shm.pipe_jobs_per_s.max(1e-12),
             );
         }
     }
+
+    // Pooled vs unpooled: re-run one channel row with the global pool
+    // disabled (the `GR_CDMM_POOL_CAP=0` operating point) and price what
+    // the buffer pool buys — the allocs-per-job delta is the whole story,
+    // since a cap-0 pool misses every lease.
+    let base_cfg = ServeConfig {
+        scheme: schemes[0].to_string(),
+        n_workers: 8,
+        size: sizes[0],
+        jobs: 16,
+        inflight: 4,
+        straggler: straggler.clone(),
+        corrupt: CorruptionModel::None,
+        seed: 42,
+        verify: true,
+        verify_products: false,
+        transport: ServeTransport::InProcess,
+        speculate: false,
+        elastic: false,
+        prepared: false,
+    };
+    let pooled = run(&base_cfg).expect("pooled comparison run failed");
+    let saved_cap = BytePool::global().cap();
+    BytePool::global().set_cap(0);
+    let unpooled = run(&base_cfg).expect("unpooled comparison run failed");
+    BytePool::global().set_cap(saved_cap);
+    assert!(pooled.verified && unpooled.verified, "comparison runs must decode correctly");
+    let jobs = base_cfg.jobs as u64;
+    println!(
+        "\npooled vs unpooled ({}@{}, channel, {} jobs): \
+         allocs/job {:.1} → {:.1}, large allocs {} → {}, copied {} → {} B/job",
+        base_cfg.scheme,
+        base_cfg.size,
+        jobs,
+        pooled.pool_misses as f64 / jobs as f64,
+        unpooled.pool_misses as f64 / jobs as f64,
+        pooled.large_allocs,
+        unpooled.large_allocs,
+        pooled.copied_bytes / jobs,
+        unpooled.copied_bytes / jobs,
+    );
+    records.push(pooled);
+    records.push(unpooled);
+
     match write_bench_json("serving_throughput", &records_to_json(&records)) {
         Ok(p) => println!("\n(json: {})", p.display()),
         Err(e) => eprintln!("\n(json write failed: {e})"),

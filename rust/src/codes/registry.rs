@@ -234,9 +234,10 @@ mod tests {
         let payloads = scheme.encode_bytes(&a_bytes, &b_bytes).unwrap();
         assert_eq!(payloads.len(), scheme.n_workers());
         let rt = scheme.recovery_threshold();
-        let responses: Vec<(usize, Vec<u8>)> = (scheme.n_workers() - rt..scheme.n_workers())
-            .map(|i| (i, scheme.compute_bytes(&payloads[i]).unwrap()))
-            .collect();
+        let responses: Vec<(usize, crate::util::bytepool::PooledBuf)> =
+            (scheme.n_workers() - rt..scheme.n_workers())
+                .map(|i| (i, scheme.compute_bytes(&payloads[i]).unwrap()))
+                .collect();
         let borrowed: Vec<(usize, &[u8])> =
             responses.iter().map(|(i, p)| (*i, p.as_slice())).collect();
         let out = scheme.decode_bytes(&borrowed).unwrap();
@@ -282,7 +283,7 @@ mod tests {
             let a_bytes: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(&base)).collect();
             let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(&base)).collect();
             let payloads = scheme.encode_bytes(&a_bytes, &b_bytes).unwrap();
-            let responses: Vec<(usize, Vec<u8>)> = payloads
+            let responses: Vec<(usize, crate::util::bytepool::PooledBuf)> = payloads
                 .iter()
                 .enumerate()
                 .map(|(i, p)| (i, scheme.compute_bytes(p).unwrap()))
@@ -307,12 +308,12 @@ mod tests {
                 "{name}: Freivalds must accept the true product"
             );
             // One flipped byte in the last (surplus) response gets flagged.
-            let mut tampered = responses.clone();
-            let last = tampered.len() - 1;
-            let mid = tampered[last].1.len() / 2;
-            tampered[last].1[mid] ^= 0x01;
-            let tb: Vec<(usize, &[u8])> =
-                tampered.iter().map(|(i, p)| (*i, p.as_slice())).collect();
+            let last = responses.len() - 1;
+            let mut corrupted = responses[last].1.to_vec();
+            corrupted[corrupted.len() / 2] ^= 0x01;
+            let mut tb: Vec<(usize, &[u8])> =
+                responses[..last].iter().map(|(i, p)| (*i, p.as_slice())).collect();
+            tb.push((last, corrupted.as_slice()));
             let flagged = scheme.check_surplus_bytes(&tb).unwrap();
             assert!(
                 flagged.contains(&last),

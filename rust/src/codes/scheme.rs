@@ -15,6 +15,7 @@
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::{PlaneMatrix, PlaneRing};
 use crate::ring::traits::Ring;
+use crate::util::bytepool::{BytePool, PooledBuf};
 use crate::util::rng::Rng64;
 use std::marker::PhantomData;
 use std::sync::Arc;
@@ -114,10 +115,17 @@ impl<E: PlaneRing> Share<E> {
 
     /// Serialize both matrices as one contiguous block (`a` then `b`).
     pub fn to_bytes(&self, ring: &E) -> Vec<u8> {
-        let mut out = self.a.to_bytes(ring);
-        out.reserve(self.b.byte_len(ring));
-        out.extend_from_slice(&self.b.to_bytes(ring));
+        let mut out = Vec::with_capacity(self.byte_len(ring));
+        self.write_bytes_into(ring, &mut out);
         out
+    }
+
+    /// Append the serialized share (`a` then `b`) to a borrowed buffer —
+    /// the pool-leased zero-copy path ([`PlaneMatrix::write_bytes_into`]).
+    pub fn write_bytes_into(&self, ring: &E, out: &mut Vec<u8>) {
+        out.reserve(self.byte_len(ring));
+        self.a.write_bytes_into(ring, out);
+        self.b.write_bytes_into(ring, out);
     }
 
     /// Deserialize; truncated, oversized or shape-inconsistent payloads
@@ -405,7 +413,11 @@ pub trait DmmScheme<R: Ring>: Send + Sync {
 /// * share payloads and worker responses cross it in the *share ring*'s
 ///   plane-major [`PlaneMatrix`]/[`Share`] format — the exact bytes the
 ///   coordinator puts on the wire;
-/// * every deserialization is validated; malformed payloads return `Err`.
+/// * every deserialization is validated; malformed payloads return `Err`;
+/// * every payload the facade *produces* (encoded shares, worker responses,
+///   decoded outputs) is written into a pool-leased [`PooledBuf`] — bytes
+///   bit-identical to the old `Vec` path, but steady-state serving
+///   allocates nothing per job (see [`crate::util::bytepool`]).
 pub trait DynScheme: Send + Sync {
     fn name(&self) -> String;
     fn n_workers(&self) -> usize;
@@ -414,7 +426,7 @@ pub trait DynScheme: Send + Sync {
 
     /// Encode a batch of serialized input matrices into one share payload
     /// per worker.
-    fn encode_bytes(&self, a: &[Vec<u8>], b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>>;
+    fn encode_bytes(&self, a: &[Vec<u8>], b: &[Vec<u8>]) -> anyhow::Result<Vec<PooledBuf>>;
 
     /// Encode only the left operand batch into one serialized
     /// [`PlaneMatrix`] per worker — the leading bytes of that worker's full
@@ -424,7 +436,7 @@ pub trait DynScheme: Send + Sync {
     /// serializes as `a` then `b`), which is what lets staged workers
     /// reassemble shares without any scheme knowledge. Default:
     /// unsupported.
-    fn encode_left_bytes(&self, a: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+    fn encode_left_bytes(&self, a: &[Vec<u8>]) -> anyhow::Result<Vec<PooledBuf>> {
         let _ = a;
         anyhow::bail!("{} cannot encode its left operand independently", self.name())
     }
@@ -432,7 +444,7 @@ pub trait DynScheme: Send + Sync {
     /// Encode only the right operand batch into one serialized
     /// [`PlaneMatrix`] per worker — the trailing bytes of that worker's
     /// full share payload. See [`DynScheme::encode_left_bytes`].
-    fn encode_right_bytes(&self, b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+    fn encode_right_bytes(&self, b: &[Vec<u8>]) -> anyhow::Result<Vec<PooledBuf>> {
         let _ = b;
         anyhow::bail!("{} cannot encode its right operand independently", self.name())
     }
@@ -450,11 +462,11 @@ pub trait DynScheme: Send + Sync {
     }
 
     /// Worker computation on a serialized share payload.
-    fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<Vec<u8>>;
+    fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<PooledBuf>;
 
     /// Decode serialized `(worker_id, response)` payloads into serialized
     /// output matrices (one per batch slot).
-    fn decode_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<Vec<u8>>>;
+    fn decode_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<PooledBuf>>;
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize;
     fn download_bytes(&self, t: usize, r: usize, s: usize) -> usize;
@@ -483,13 +495,13 @@ pub trait DynScheme: Send + Sync {
 
     /// Byte-facade of [`DmmScheme::verify_products`]: Freivalds-check
     /// serialized input matrices `a`, `b` against decoded products `c`
-    /// (one per batch slot), `trials` challenge rounds each. Default:
-    /// unsupported.
+    /// (one per batch slot, as returned by [`DynScheme::decode_bytes`]),
+    /// `trials` challenge rounds each. Default: unsupported.
     fn verify_products_bytes(
         &self,
         a: &[Vec<u8>],
         b: &[Vec<u8>],
-        c: &[Vec<u8>],
+        c: &[PooledBuf],
         trials: usize,
         rng: &mut Rng64,
     ) -> anyhow::Result<bool> {
@@ -529,7 +541,7 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
         self.scheme.batch_size()
     }
 
-    fn encode_bytes(&self, a: &[Vec<u8>], b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+    fn encode_bytes(&self, a: &[Vec<u8>], b: &[Vec<u8>]) -> anyhow::Result<Vec<PooledBuf>> {
         let ring = self.scheme.input_ring();
         let am: Vec<Matrix<R::Elem>> = a
             .iter()
@@ -541,10 +553,18 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
             .collect::<anyhow::Result<_>>()?;
         let shares = self.scheme.encode_batch(&am, &bm)?;
         let sr = self.scheme.share_ring();
-        Ok(shares.iter().map(|s| s.to_bytes(sr)).collect())
+        let pool = BytePool::global();
+        Ok(shares
+            .iter()
+            .map(|s| {
+                let mut lease = pool.lease(s.byte_len(sr));
+                s.write_bytes_into(sr, &mut lease);
+                lease.freeze()
+            })
+            .collect())
     }
 
-    fn encode_left_bytes(&self, a: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+    fn encode_left_bytes(&self, a: &[Vec<u8>]) -> anyhow::Result<Vec<PooledBuf>> {
         let ring = self.scheme.input_ring();
         let am: Vec<Matrix<R::Elem>> = a
             .iter()
@@ -552,10 +572,18 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
             .collect::<anyhow::Result<_>>()?;
         let halves = self.scheme.encode_left_batch(&am)?;
         let sr = self.scheme.share_ring();
-        Ok(halves.iter().map(|p| p.to_bytes(sr)).collect())
+        let pool = BytePool::global();
+        Ok(halves
+            .iter()
+            .map(|p| {
+                let mut lease = pool.lease(p.byte_len(sr));
+                p.write_bytes_into(sr, &mut lease);
+                lease.freeze()
+            })
+            .collect())
     }
 
-    fn encode_right_bytes(&self, b: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+    fn encode_right_bytes(&self, b: &[Vec<u8>]) -> anyhow::Result<Vec<PooledBuf>> {
         let ring = self.scheme.input_ring();
         let bm: Vec<Matrix<R::Elem>> = b
             .iter()
@@ -563,7 +591,15 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
             .collect::<anyhow::Result<_>>()?;
         let halves = self.scheme.encode_right_batch(&bm)?;
         let sr = self.scheme.share_ring();
-        Ok(halves.iter().map(|p| p.to_bytes(sr)).collect())
+        let pool = BytePool::global();
+        Ok(halves
+            .iter()
+            .map(|p| {
+                let mut lease = pool.lease(p.byte_len(sr));
+                p.write_bytes_into(sr, &mut lease);
+                lease.freeze()
+            })
+            .collect())
     }
 
     fn split_upload_bytes(&self, t: usize, r: usize, s: usize) -> Option<(usize, usize)> {
@@ -574,14 +610,16 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
         self.scheme.left_encodes()
     }
 
-    fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+    fn compute_bytes(&self, payload: &[u8]) -> anyhow::Result<PooledBuf> {
         let sr = self.scheme.share_ring();
         let share = Share::from_bytes(sr, payload)?;
         let resp = self.scheme.worker_compute(&share)?;
-        Ok(resp.to_bytes(sr))
+        let mut lease = BytePool::global().lease(resp.byte_len(sr));
+        resp.write_bytes_into(sr, &mut lease);
+        Ok(lease.freeze())
     }
 
-    fn decode_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<Vec<u8>>> {
+    fn decode_bytes(&self, responses: &[(usize, &[u8])]) -> anyhow::Result<Vec<PooledBuf>> {
         let sr = self.scheme.share_ring();
         let typed: Vec<Response<S::ShareRing>> = responses
             .iter()
@@ -589,7 +627,15 @@ impl<R: Ring, S: DmmScheme<R>> DynScheme for Erased<R, S> {
             .collect::<anyhow::Result<_>>()?;
         let out = self.scheme.decode_batch(&typed)?;
         let ir = self.scheme.input_ring();
-        Ok(out.iter().map(|m| m.to_bytes(ir)).collect())
+        let pool = BytePool::global();
+        Ok(out
+            .iter()
+            .map(|m| {
+                let mut lease = pool.lease(m.byte_len(ir));
+                m.write_bytes_into(ir, &mut lease);
+                lease.freeze()
+            })
+            .collect())
     }
 
     fn upload_bytes(&self, t: usize, r: usize, s: usize) -> usize {

@@ -69,6 +69,21 @@ pub struct DaemonConfig {
     pub corrupt: CorruptionModel,
     /// Seed deriving the per-worker-id RNG streams ([`worker_rng`]).
     pub seed: u64,
+    /// Shared-memory ring directory for the [`super::shm::ShmTransport`]
+    /// data plane. When set, the daemon opens `m2w-<id>.ring` /
+    /// `w2m-<id>.ring` here on the coordinator's hello, accepts
+    /// job-ref/stage-ref doorbells, and ships fitting responses back
+    /// through its ring (oversize ones fall back inline). `None` (the
+    /// default) serves classic inline frames only.
+    pub shm_dir: Option<std::path::PathBuf>,
+}
+
+/// Per-connection shared-memory state: the two rings opened on hello plus
+/// the next worker→master payload sequence number.
+struct ShmState {
+    m2w: super::shm::ShmRing,
+    w2m: super::shm::ShmRing,
+    next_seq: u64,
 }
 
 /// Serve one coordinator connection to completion: `Ok(())` on a clean
@@ -96,7 +111,11 @@ fn serve_conn(
     // starts from a blank slate and must re-stage (which its prepared store
     // does automatically), so stale staged bytes can never leak across
     // coordinator sessions.
-    let mut staged: HashMap<u64, Vec<u8>> = HashMap::new();
+    let mut staged: HashMap<u64, crate::util::bytepool::PooledBuf> = HashMap::new();
+    // Shared-memory rings, opened when a hello arrives and `cfg.shm_dir` is
+    // set. The master creates the ring files *before* sending the hello, so
+    // by the time it is read here both files exist with zeroed slots.
+    let mut shm: Option<ShmState> = None;
     loop {
         let Some(frame) = wire::read_frame(&mut reader)? else {
             return Ok(()); // coordinator hung up
@@ -118,6 +137,14 @@ fn serve_conn(
                 );
                 let id = usize::try_from(frame.worker_id)?;
                 identity = Some(id);
+                if let Some(dir) = &cfg.shm_dir {
+                    let (m2w, w2m) = super::shm::ring_paths(dir, id);
+                    shm = Some(ShmState {
+                        m2w: super::shm::ShmRing::open(m2w)?,
+                        w2m: super::shm::ShmRing::open(w2m)?,
+                        next_seq: 0,
+                    });
+                }
                 // Echo the claim so the master can verify it reached the
                 // peer it meant to.
                 wire::write_frame(&mut writer, &Frame::hello(id))?;
@@ -128,8 +155,19 @@ fn serve_conn(
                     &Frame::pong(frame.job_id, identity.unwrap_or(0)),
                 )?;
             }
-            FrameKind::Stage => {
-                staged.insert(frame.job_id, frame.payload);
+            FrameKind::Stage | FrameKind::StageRef => {
+                let bytes = if frame.kind == FrameKind::StageRef {
+                    // Out-of-line staged half: resolve the doorbell's slot
+                    // (with full header validation) from the m2w ring.
+                    let (seq, len) = frame.ref_slot()?;
+                    let Some(st) = shm.as_ref() else {
+                        anyhow::bail!("stage-ref frame on a connection without shm rings")
+                    };
+                    st.m2w.read_payload(seq, len)?
+                } else {
+                    frame.payload
+                };
+                staged.insert(frame.job_id, bytes);
                 // Confirm, echoing the assigned machine id so the master
                 // can verify it staged onto the peer it meant to.
                 wire::write_frame(
@@ -142,7 +180,7 @@ fn serve_conn(
                 // that already wiped this connection's staged state.
                 staged.remove(&frame.job_id);
             }
-            FrameKind::Job => {
+            FrameKind::Job | FrameKind::JobRef => {
                 anyhow::ensure!(
                     frame.worker_id < MAX_WORKER_ID,
                     "worker id {} exceeds the {MAX_WORKER_ID} limit",
@@ -150,12 +188,25 @@ fn serve_conn(
                 );
                 let shard = usize::try_from(frame.worker_id)?;
                 let machine = identity.unwrap_or(shard);
+                // A job-ref's share bytes sit in the m2w ring; an inline
+                // job's ride the frame. Either way the buffer is shared,
+                // not copied.
+                let incoming: crate::util::bytepool::PooledBuf =
+                    if frame.kind == FrameKind::JobRef {
+                        let (seq, len) = frame.ref_slot()?;
+                        let Some(st) = shm.as_ref() else {
+                            anyhow::bail!("job-ref frame on a connection without shm rings")
+                        };
+                        st.m2w.read_payload(seq, len)?
+                    } else {
+                        frame.payload.clone()
+                    };
                 let full;
                 let payload: &[u8] = match frame.job_prepared_id() {
-                    None => &frame.payload,
+                    None => &incoming,
                     Some(id) => match staged.get(&id) {
                         Some(a_half) => {
-                            full = assemble_prepared(a_half, &frame.payload);
+                            full = assemble_prepared(a_half, &incoming);
                             &full
                         }
                         None => {
@@ -187,7 +238,33 @@ fn serve_conn(
                     rng,
                     replay,
                 );
-                wire::write_frame(&mut writer, &Frame::from_report(report))?;
+                // When the rings are up and the response fits a slot, ship
+                // it out-of-line: ring write first, then the response-ref
+                // doorbell. Fail reports (byte-free) and oversize payloads
+                // go inline — correctness never depends on ring geometry.
+                let mut shipped = false;
+                if let (Some(st), Some(p)) = (shm.as_mut(), report.payload.as_ref()) {
+                    if p.len() as u64 <= st.w2m.slot_size() {
+                        let seq = st.next_seq;
+                        st.w2m.write_payload(seq, p, super::shm::SLOT_WAIT)?;
+                        wire::write_frame(
+                            &mut writer,
+                            &Frame::resp_ref(
+                                report.job_id,
+                                report.worker_id,
+                                report.compute,
+                                report.injected_delay,
+                                seq,
+                                p.len() as u64,
+                            ),
+                        )?;
+                        st.next_seq += 1;
+                        shipped = true;
+                    }
+                }
+                if !shipped {
+                    wire::write_frame(&mut writer, &Frame::from_report(report))?;
+                }
             }
             other => anyhow::bail!("unexpected {other:?} frame from the coordinator"),
         }
@@ -254,7 +331,7 @@ impl WorkerDaemon {
         seed: u64,
         conns: usize,
     ) -> anyhow::Result<WorkerDaemon> {
-        let cfg = DaemonConfig { straggler, corrupt: CorruptionModel::None, seed };
+        let cfg = DaemonConfig { straggler, seed, ..DaemonConfig::default() };
         Self::spawn_local_cfg(compute, cfg, conns)
     }
 
@@ -293,8 +370,12 @@ mod tests {
 
     struct Echo;
     impl ShareCompute for Echo {
-        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-            Ok(payload.to_vec())
+        fn compute(
+            &self,
+            _w: usize,
+            payload: &[u8],
+        ) -> anyhow::Result<crate::util::bytepool::PooledBuf> {
+            Ok(payload.to_vec().into())
         }
     }
 
@@ -424,6 +505,7 @@ mod tests {
             straggler: StragglerModel::None,
             corrupt: corrupt.clone(),
             seed: 11,
+            ..DaemonConfig::default()
         };
         let daemon = WorkerDaemon::spawn_local_cfg(Arc::new(Echo), cfg, 1).unwrap();
         let stream = TcpStream::connect(daemon.addr()).unwrap();

@@ -57,6 +57,7 @@ use super::transport::{
     fail_report, ByteCounters, ChannelTransport, FromWorker, ToWorker, Transport,
 };
 use super::worker::{assemble_prepared, ShareCompute};
+use crate::util::bytepool::PooledBuf;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -64,11 +65,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One collected response.
+/// One collected response. The payload is the pool-recycled buffer the
+/// transport produced — cloning it is a reference-count bump, and dropping
+/// the last clone returns the storage to the global
+/// [`BytePool`](crate::util::bytepool::BytePool).
 #[derive(Debug)]
 pub struct Collected {
     pub worker_id: usize,
-    pub payload: Vec<u8>,
+    pub payload: PooledBuf,
     pub compute: Duration,
     pub injected_delay: Duration,
 }
@@ -123,10 +127,10 @@ struct JobEntry {
     outstanding: usize,
     shards: Vec<ShardState>,
     /// Retained payloads for speculative re-dispatch; dropped per shard as
-    /// soon as the shard is resolved. For a prepared job these are only the
-    /// B-halves — a speculative copy re-assembles the full share from the
-    /// prepared store.
-    payloads: Vec<Option<Arc<Vec<u8>>>>,
+    /// soon as the shard is resolved (returning the buffer to the pool).
+    /// For a prepared job these are only the B-halves — a speculative copy
+    /// re-assembles the full share from the prepared store.
+    payloads: Vec<Option<PooledBuf>>,
     /// The prepared operand this job references, if any. A spare machine
     /// has its *own* A-half staged, not this shard's, so speculative copies
     /// of a prepared job ship the re-assembled full share instead.
@@ -153,7 +157,7 @@ fn spawn_router(
         .name("gr-cdmm-router".to_string())
         .spawn(move || {
             while let Ok(msg) = rx.recv() {
-                let len = msg.payload.as_ref().map_or(0, Vec::len);
+                let len = msg.payload.as_ref().map_or(0, PooledBuf::len);
                 aggregate.add_download_arrived(len);
                 let mut table = jobs.lock().unwrap();
                 let Some(entry) = table.get_mut(&msg.job_id) else {
@@ -244,7 +248,7 @@ struct SpecDispatch {
     job_id: u64,
     shard: usize,
     target: usize,
-    payload: Arc<Vec<u8>>,
+    payload: PooledBuf,
     counters: ByteCounters,
 }
 
@@ -298,7 +302,7 @@ fn restage_worker(
 ) {
     for (id, shares) in prepared.entries() {
         let Some(half) = shares.get(worker_id) else { continue };
-        let msg = ToWorker::Stage { prepared_id: id, payload: Arc::clone(half) };
+        let msg = ToWorker::Stage { prepared_id: id, payload: half.clone() };
         if let Ok(sent) = t.send(worker_id, msg) {
             aggregate.add_staged_upload(sent);
         }
@@ -343,15 +347,14 @@ fn plan_speculation(shared: &MonitorShared, cfg: &ElasticConfig) -> Vec<SpecDisp
                     // A prepared job's retained payload is only the B-half,
                     // and the spare has *its own* A-half staged, not this
                     // shard's — so a speculative copy ships the full share,
-                    // re-assembled from the prepared store. If the operand
-                    // was evicted since submit, no retry is possible.
+                    // re-assembled from the prepared store (a pool-leased
+                    // buffer; the inherent copy is charged to the
+                    // copied-bytes probe). If the operand was evicted since
+                    // submit, no retry is possible.
                     let payload = match entry.prepared {
                         None => retained,
                         Some(pid) => match shared.prepared.peek(pid) {
-                            Some(halves) => Arc::new(assemble_prepared(
-                                &halves[shard_id],
-                                &retained,
-                            )),
+                            Some(halves) => assemble_prepared(&halves[shard_id], &retained),
                             None => continue,
                         },
                     };
@@ -721,6 +724,17 @@ impl Coordinator {
         Ok(Self::with_transport(Box::new(TcpTransport::connect(endpoints)?)))
     }
 
+    /// Connect to same-host daemons over the shared-memory transport:
+    /// control frames ride TCP to each endpoint, payloads travel through
+    /// ring files under `dir` — which must be the daemons'
+    /// [`DaemonConfig::shm_dir`](super::daemon::DaemonConfig).
+    pub fn connect_shm(
+        endpoints: &[String],
+        dir: impl Into<std::path::PathBuf>,
+    ) -> anyhow::Result<Self> {
+        Ok(Self::with_transport(Box::new(super::shm::ShmTransport::connect(endpoints, dir)?)))
+    }
+
     /// Build over any [`Transport`].
     pub fn with_transport(mut transport: Box<dyn Transport>) -> Self {
         let rx = transport.take_receiver().expect("transport's receiver was already taken");
@@ -873,10 +887,19 @@ impl Coordinator {
     /// Any number of submitted jobs may overlap; responses are routed to
     /// their owning job by id.
     ///
+    /// Payloads are anything convertible into a [`PooledBuf`] —
+    /// pool-leased buffers from the erased scheme facade ride through with
+    /// zero copies; plain `Vec<u8>`s (tests, ad-hoc callers) are wrapped
+    /// without reallocation.
+    ///
     /// [`SchemeConfig::for_live_workers`]:
     ///     crate::codes::registry::SchemeConfig::for_live_workers
-    pub fn submit(&mut self, payloads: Vec<Vec<u8>>, need: usize) -> anyhow::Result<JobHandle> {
-        self.submit_with(payloads, need, None)
+    pub fn submit<P: Into<PooledBuf>>(
+        &mut self,
+        payloads: Vec<P>,
+        need: usize,
+    ) -> anyhow::Result<JobHandle> {
+        self.submit_with(payloads.into_iter().map(Into::into).collect(), need, None)
     }
 
     /// Encode-once serving, step 1: register `a_shares` (worker `i`'s
@@ -892,7 +915,7 @@ impl Coordinator {
     ///
     /// [`DynScheme::encode_left_bytes`]:
     ///     crate::codes::DynScheme::encode_left_bytes
-    pub fn prepare(&mut self, a_shares: Vec<Vec<u8>>) -> anyhow::Result<u64> {
+    pub fn prepare<P: Into<PooledBuf>>(&mut self, a_shares: Vec<P>) -> anyhow::Result<u64> {
         anyhow::ensure!(self.open, "coordinator is shut down");
         let n_workers = self.n_workers();
         anyhow::ensure!(
@@ -900,7 +923,7 @@ impl Coordinator {
             "need one A-half per worker ({n_workers}), got {}",
             a_shares.len()
         );
-        let shares: Vec<Arc<Vec<u8>>> = a_shares.into_iter().map(Arc::new).collect();
+        let shares: Vec<PooledBuf> = a_shares.into_iter().map(Into::into).collect();
         let (id, evicted) = self.prepared.insert(shares.clone());
         let mut t = self.transport.lock().unwrap();
         for old in evicted {
@@ -941,10 +964,10 @@ impl Coordinator {
     ///
     /// [`DynScheme::encode_right_bytes`]:
     ///     crate::codes::DynScheme::encode_right_bytes
-    pub fn submit_prepared(
+    pub fn submit_prepared<P: Into<PooledBuf>>(
         &mut self,
         id: u64,
-        b_payloads: Vec<Vec<u8>>,
+        b_payloads: Vec<P>,
         need: usize,
     ) -> anyhow::Result<JobHandle> {
         anyhow::ensure!(self.open, "coordinator is shut down");
@@ -957,7 +980,7 @@ impl Coordinator {
              to their staged workers",
             b_payloads.len()
         );
-        self.submit_with(b_payloads, need, Some(id))
+        self.submit_with(b_payloads.into_iter().map(Into::into).collect(), need, Some(id))
     }
 
     /// `(hits, misses, evictions)` of the prepared-operand store.
@@ -980,7 +1003,7 @@ impl Coordinator {
 
     fn submit_with(
         &mut self,
-        payloads: Vec<Vec<u8>>,
+        payloads: Vec<PooledBuf>,
         need: usize,
         prepared: Option<u64>,
     ) -> anyhow::Result<JobHandle> {
@@ -1020,7 +1043,6 @@ impl Coordinator {
         let job_id = self.next_job;
         self.next_job += 1;
 
-        let payloads: Vec<Arc<Vec<u8>>> = payloads.into_iter().map(Arc::new).collect();
         let counters = ByteCounters::new();
         let (job_tx, job_rx) = channel::<FromWorker>();
         let submitted = Instant::now();
@@ -1116,8 +1138,8 @@ mod tests {
     /// Echo backend: replies with the payload itself.
     struct Echo;
     impl ShareCompute for Echo {
-        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-            Ok(payload.to_vec())
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<PooledBuf> {
+            Ok(payload.to_vec().into())
         }
     }
 
@@ -1382,7 +1404,7 @@ mod tests {
             let echo = |wid: usize| FromWorker {
                 job_id,
                 worker_id: wid,
-                payload: Some((*payload).clone()),
+                payload: Some(payload.clone()),
                 compute: Duration::ZERO,
                 injected_delay: Duration::ZERO,
             };

@@ -64,6 +64,18 @@ pub struct JobMetrics {
     pub quarantines: u64,
     /// Leave-one-out re-decodes performed to isolate an inconsistent share.
     pub leave_one_out_decodes: u64,
+    /// Byte-pool buffer reuses during this job's window (see
+    /// [`crate::util::bytepool`]): a warm steady-state job serves every
+    /// payload-sized buffer from the pool.
+    pub pool_hits: u64,
+    /// Byte-pool misses (fresh heap allocations) during this job's window;
+    /// 0 once the pool is warm.
+    pub pool_misses: u64,
+    /// Hot-path heap allocations ≥ 64 KiB during this job's window — the
+    /// zero-alloc counter-proof probe, mirroring
+    /// `scalar_table_builds()` for encode tables. 0 in the pooled steady
+    /// state.
+    pub large_allocs: u64,
     /// Total end-to-end wall time at the master.
     pub total: Duration,
 }
@@ -121,6 +133,9 @@ impl JobMetrics {
             .set("verify_trials", self.verify_trials)
             .set("quarantines", self.quarantines)
             .set("leave_one_out_decodes", self.leave_one_out_decodes)
+            .set("pool_hits", self.pool_hits)
+            .set("pool_misses", self.pool_misses)
+            .set("large_allocs", self.large_allocs)
             .set("mean_worker_compute_s", self.mean_worker_compute().as_secs_f64())
             .set("max_worker_compute_s", self.max_worker_compute().as_secs_f64())
             .set(
@@ -171,5 +186,7 @@ mod tests {
         assert!(j.contains("verify_trials"));
         assert!(j.contains("quarantines"));
         assert!(j.contains("leave_one_out_decodes"));
+        assert!(j.contains("pool_hits"));
+        assert!(j.contains("large_allocs"));
     }
 }

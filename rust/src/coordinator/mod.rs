@@ -25,6 +25,11 @@
 //! * [`tcp`] — [`TcpTransport`]: one socket per worker to a `gr-cdmm
 //!   worker` daemon; disconnects and malformed peers degrade to fail-stop
 //!   (synthetic byte-free reports), never hangs or panics;
+//! * [`shm`] — [`ShmTransport`]: the same-host zero-copy variant — control
+//!   frames ride TCP but payloads travel out-of-line through file-backed
+//!   ring buffers both processes share by path, preserving the full
+//!   fail-stop / duplicate-guard / byte-accounting contract (per-job
+//!   counters are identical across channel, tcp and shm);
 //! * [`daemon`] — the worker daemon behind `gr-cdmm worker --listen ADDR`:
 //!   the same worker loop, served over a socket, straggler injection
 //!   included ([`WorkerDaemon`] runs one on a thread for tests/benches);
@@ -113,6 +118,7 @@
 pub mod transport;
 pub mod wire;
 pub mod tcp;
+pub mod shm;
 pub mod daemon;
 pub mod straggler;
 pub mod worker;
@@ -131,6 +137,7 @@ pub use straggler::{CorruptionModel, StragglerModel};
 pub use runner::{
     run_batch, run_erased, run_single, run_verified_erased, NativeCompute, VerifyOptions,
 };
+pub use shm::ShmTransport;
 pub use tcp::TcpTransport;
 pub use transport::{ByteCounters, ChannelTransport, Transport};
 pub use worker::ShareCompute;

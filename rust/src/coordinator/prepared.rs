@@ -5,8 +5,9 @@
 //! The store is the staging state's single source of truth:
 //!
 //! * an entry holds the per-worker serialized A-halves (`shares[w]` goes to
-//!   worker `w`), shared via `Arc` so re-staging after a reconnect never
-//!   copies the bytes;
+//!   worker `w`), shared via ref-counted [`PooledBuf`]s so re-staging
+//!   after a reconnect never copies the bytes (and evicting an operand
+//!   returns its buffers to the global byte pool);
 //! * capacity is bounded with least-recently-used eviction, exactly like
 //!   [`crate::codes::plan_cache::PlanCache`] — a long-running server cannot
 //!   leak staged uploads. [`PreparedStore::insert`] reports which ids were
@@ -20,6 +21,7 @@
 //! state is always a function of this store — a prepared job can only ever
 //! name an id the store currently holds.
 
+use crate::util::bytepool::PooledBuf;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -33,7 +35,7 @@ pub const DEFAULT_PREPARED_CAP: usize = 64;
 #[derive(Clone)]
 pub struct PreparedOperand {
     /// `shares[w]` is the A-half staged on worker `w`.
-    pub shares: Vec<Arc<Vec<u8>>>,
+    pub shares: Vec<PooledBuf>,
     /// LRU clock value of the most recent touch.
     last_used: u64,
 }
@@ -87,7 +89,7 @@ impl PreparedStore {
     /// Register a new operand. Returns its id plus the ids evicted to make
     /// room (normally at most one per insert; more after the capacity was
     /// shrunk), so the caller can evict them from the workers too.
-    pub fn insert(&self, shares: Vec<Arc<Vec<u8>>>) -> (u64, Vec<u64>) {
+    pub fn insert(&self, shares: Vec<PooledBuf>) -> (u64, Vec<u64>) {
         let mut inner = self.inner.lock().unwrap();
         let mut evicted = Vec::new();
         while inner.map.len() >= inner.cap {
@@ -110,9 +112,9 @@ impl PreparedStore {
     }
 
     /// Look an operand up by id, touching its LRU slot. A hit clones the
-    /// `Arc`s (never the bytes); a miss — an id never issued, explicitly
+    /// buffers by reference count (never the bytes); a miss — an id never issued, explicitly
     /// released, or since evicted — is counted and returns `None`.
-    pub fn get(&self, id: u64) -> Option<Vec<Arc<Vec<u8>>>> {
+    pub fn get(&self, id: u64) -> Option<Vec<PooledBuf>> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -132,7 +134,7 @@ impl PreparedStore {
     /// Look an operand up without touching the LRU clock or the hit/miss
     /// stats — for internal machinery (speculative re-dispatch assembling a
     /// full payload) that must not skew the serving-visible counters.
-    pub fn peek(&self, id: u64) -> Option<Vec<Arc<Vec<u8>>>> {
+    pub fn peek(&self, id: u64) -> Option<Vec<PooledBuf>> {
         self.inner.lock().unwrap().map.get(&id).map(|e| e.shares.clone())
     }
 
@@ -144,9 +146,9 @@ impl PreparedStore {
 
     /// Every live entry, for re-staging a (re)joined worker. Ordered by id
     /// so re-stages are deterministic across transports.
-    pub fn entries(&self) -> Vec<(u64, Vec<Arc<Vec<u8>>>)> {
+    pub fn entries(&self) -> Vec<(u64, Vec<PooledBuf>)> {
         let inner = self.inner.lock().unwrap();
-        let mut all: Vec<(u64, Vec<Arc<Vec<u8>>>)> =
+        let mut all: Vec<(u64, Vec<PooledBuf>)> =
             inner.map.iter().map(|(&id, e)| (id, e.shares.clone())).collect();
         all.sort_unstable_by_key(|(id, _)| *id);
         all
@@ -185,8 +187,8 @@ impl PreparedStore {
 mod tests {
     use super::*;
 
-    fn operand(bytes: &[usize]) -> Vec<Arc<Vec<u8>>> {
-        bytes.iter().map(|&n| Arc::new(vec![0u8; n])).collect()
+    fn operand(bytes: &[usize]) -> Vec<PooledBuf> {
+        bytes.iter().map(|&n| vec![0u8; n].into()).collect()
     }
 
     #[test]

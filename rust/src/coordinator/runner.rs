@@ -20,6 +20,7 @@ use crate::codes::scheme::{DmmScheme, DynScheme, Erased, Response};
 use crate::ring::matrix::Matrix;
 use crate::ring::plane::PlaneMatrix;
 use crate::ring::traits::Ring;
+use crate::util::bytepool::{large_allocs, BytePool, PooledBuf};
 use crate::util::rng::Rng64;
 use std::collections::BTreeSet;
 use std::sync::Arc;
@@ -79,12 +80,40 @@ impl NativeCompute {
 }
 
 impl ShareCompute for NativeCompute {
-    fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+    fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<PooledBuf> {
         self.scheme.compute_bytes(payload)
     }
 
     fn backend_name(&self) -> String {
         format!("native:{}", self.scheme.name())
+    }
+}
+
+/// Snapshot of the global byte pool's counters at job start, for the
+/// per-job deltas [`JobMetrics`] reports. Overlapping jobs share the
+/// process-wide pool, so a delta attributes *everything* that happened
+/// during the job's window — exact for the sequential serving loops that
+/// consume these metrics, an upper bound under concurrent submission.
+struct PoolProbe {
+    hits: u64,
+    misses: u64,
+    allocs: u64,
+}
+
+impl PoolProbe {
+    fn start() -> PoolProbe {
+        let s = BytePool::global().stats();
+        PoolProbe { hits: s.hits, misses: s.misses, allocs: large_allocs() }
+    }
+
+    /// `(pool_hits, pool_misses, large_allocs)` since [`PoolProbe::start`].
+    fn delta(&self) -> (u64, u64, u64) {
+        let s = BytePool::global().stats();
+        (
+            s.hits.saturating_sub(self.hits),
+            s.misses.saturating_sub(self.misses),
+            large_allocs().saturating_sub(self.allocs),
+        )
     }
 }
 
@@ -124,6 +153,7 @@ pub fn run_erased<R: Ring>(
     b: &[Matrix<R::Elem>],
 ) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
     let t_total = Instant::now();
+    let probe = PoolProbe::start();
 
     // Crossing the byte facade (serialize here, deserialize inside
     // `encode_bytes`) happens OUTSIDE the timed encode window, so the
@@ -164,6 +194,7 @@ pub fn run_erased<R: Ring>(
     metrics.job_id = job_id;
     metrics.plan_cache_hits = hits_after.saturating_sub(hits_before);
     metrics.plan_cache_misses = misses_after.saturating_sub(misses_before);
+    (metrics.pool_hits, metrics.pool_misses, metrics.large_allocs) = probe.delta();
     Ok((out, metrics))
 }
 
@@ -220,6 +251,7 @@ pub fn run_verified_erased<R: Ring>(
     opts: &VerifyOptions,
 ) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
     let t_total = Instant::now();
+    let probe = PoolProbe::start();
     let a_bytes: Vec<Vec<u8>> = a.iter().map(|m| m.to_bytes(ring)).collect();
     let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(ring)).collect();
 
@@ -247,8 +279,9 @@ pub fn run_verified_erased<R: Ring>(
 
     // Working set: (share index, payload, bytes already credited as used by
     // a re-dispatch job's own counters). `wait_surplus` deferred the
-    // original collection's used-accounting to us.
-    let mut responses: Vec<(usize, Vec<u8>, bool)> =
+    // original collection's used-accounting to us. Payload clones are
+    // reference-count bumps on the pooled buffers, not byte copies.
+    let mut responses: Vec<(usize, PooledBuf, bool)> =
         collected.iter().map(|c| (c.worker_id, c.payload.clone(), false)).collect();
 
     let (hits_before, misses_before) = scheme.plan_cache_stats();
@@ -285,7 +318,7 @@ pub fn run_verified_erased<R: Ring>(
             let present: BTreeSet<usize> = responses.iter().map(|r| r.0).collect();
             let missing: Vec<usize> =
                 (0..n_shards).filter(|i| !present.contains(i)).collect();
-            let sub: Vec<Vec<u8>> = missing.iter().map(|&i| retained[i].clone()).collect();
+            let sub: Vec<PooledBuf> = missing.iter().map(|&i| retained[i].clone()).collect();
             let h = coord.submit(sub, missing.len())?;
             let (extra, _) = h.wait()?;
             for c in extra {
@@ -407,6 +440,7 @@ pub fn run_verified_erased<R: Ring>(
     metrics.verify_trials = verify_trials;
     metrics.quarantines = quarantines;
     metrics.leave_one_out_decodes = loo;
+    (metrics.pool_hits, metrics.pool_misses, metrics.large_allocs) = probe.delta();
     Ok((out, metrics))
 }
 
@@ -441,6 +475,7 @@ pub fn run_prepared_erased<R: Ring>(
     b: &[Matrix<R::Elem>],
 ) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
     let t_total = Instant::now();
+    let probe = PoolProbe::start();
     let b_bytes: Vec<Vec<u8>> = b.iter().map(|m| m.to_bytes(ring)).collect();
 
     let t0 = Instant::now();
@@ -477,6 +512,7 @@ pub fn run_prepared_erased<R: Ring>(
     metrics.prepared_hits = p_hits1.saturating_sub(p_hits0);
     metrics.prepared_misses = p_misses1.saturating_sub(p_misses0);
     metrics.prepared_evictions = p_evict1.saturating_sub(p_evict0);
+    (metrics.pool_hits, metrics.pool_misses, metrics.large_allocs) = probe.delta();
     Ok((out, metrics))
 }
 
@@ -491,10 +527,18 @@ pub fn run_batch<R: Ring, S: DmmScheme<R>>(
 ) -> anyhow::Result<(Vec<Matrix<R::Elem>>, JobMetrics)> {
     let ring = scheme.share_ring();
     let t_total = Instant::now();
+    let probe = PoolProbe::start();
 
     let t0 = Instant::now();
     let shares = scheme.encode_batch(a, b)?;
-    let payloads: Vec<Vec<u8>> = shares.iter().map(|s| s.to_bytes(ring)).collect();
+    let payloads: Vec<PooledBuf> = shares
+        .iter()
+        .map(|s| {
+            let mut lease = BytePool::global().lease(s.byte_len(ring));
+            s.write_bytes_into(ring, &mut lease);
+            lease.freeze()
+        })
+        .collect();
     let encode = t0.elapsed();
 
     let need = scheme.recovery_threshold();
@@ -518,6 +562,7 @@ pub fn run_batch<R: Ring, S: DmmScheme<R>>(
     metrics.job_id = job_id;
     metrics.plan_cache_hits = hits_after.saturating_sub(hits_before);
     metrics.plan_cache_misses = misses_after.saturating_sub(misses_before);
+    (metrics.pool_hits, metrics.pool_misses, metrics.large_allocs) = probe.delta();
     Ok((c, metrics))
 }
 

@@ -1,0 +1,1054 @@
+//! [`ShmTransport`]: the same-host [`Transport`] — control frames ride a
+//! TCP connection per worker (exactly the [`super::wire`] protocol the
+//! socket transport speaks), but every large payload travels **out-of-line**
+//! through a pair of file-backed ring buffers the master and the daemon
+//! both map by path. On a same-host deployment this removes the kernel
+//! socket copy from the data plane entirely: the payload is written once
+//! into a shared ring slot and read once out of it, and the only thing
+//! crossing the socket is a 64-byte doorbell frame.
+//!
+//! # Ring layout
+//!
+//! Each worker link owns two single-writer/single-reader rings in a shared
+//! directory: `m2w-<id>.ring` (master → worker: job and stage payloads) and
+//! `w2m-<id>.ring` (worker → master: response payloads). A ring file is a
+//! 32-byte superblock followed by `n_slots` fixed-size slots:
+//!
+//! ```text
+//! superblock   offset  size  field
+//!                   0     4  magic      "GRSR"
+//!                   4     4  version    currently 1
+//!                   8     8  slot_size  payload capacity of one slot
+//!                  16     8  n_slots    slot count
+//!                  24     8  (reserved, zero)
+//! slot k       offset  size  field
+//!                   0     8  state      0 = free, 1 = full
+//!                   8     8  seq        monotone payload sequence number
+//!                  16     8  len        payload bytes in this slot
+//!                  24     …  data       `slot_size` bytes of capacity
+//! ```
+//!
+//! All integers are little-endian. Payload `seq` maps to slot `seq %
+//! n_slots`; the writer spins (bounded) until the slot is `free`, writes
+//! the data, publishes the `[full, seq, len]` header, and only then sends
+//! the doorbell — a job-ref / stage-ref / response-ref control frame whose
+//! 16-byte payload names `(seq, len)`. The TCP stream's ordering is the
+//! fence: the reader never touches a slot before its doorbell arrives, and
+//! it validates the slot header against the doorbell before trusting a
+//! byte. After a successful read the reader marks the slot `free` again.
+//!
+//! # Contract parity
+//!
+//! Everything the coordinator relies on is inherited from the TCP
+//! transport verbatim: per-worker FIFO (one ordered control stream), a
+//! dead or rogue peer degrades to **fail-stop** (synthetic byte-free
+//! reports for everything the link still owed — a truncated slot, a bad
+//! ring magic, a seq/len mismatch, or a vanished peer all kill the link,
+//! never hang it), the hello/stage-ack identity checks, and byte
+//! accounting: [`Transport::send`] returns the payload bytes handed to the
+//! link — the *same* serialized lengths the channel and TCP transports
+//! count, so per-job [`super::transport::ByteCounters`] are identical
+//! across all three transports for the same job stream (asserted in
+//! `tests/integration_alloc.rs`).
+//!
+//! A payload larger than the ring's `slot_size` falls back to the inline
+//! classic frame on the control stream — correctness never depends on the
+//! ring geometry, only the fast path does. Zero-copy discipline: ring
+//! reads lease their buffers from the process-wide
+//! [`BytePool`](crate::util::bytepool::BytePool), so the steady state
+//! allocates nothing (see `docs/ARCHITECTURE.md`, "Memory discipline").
+
+use super::transport::{fail_report, FromWorker, LinkStatus, ToWorker, Transport};
+use super::wire::{self, Frame, FrameKind, MAX_PAYLOAD};
+use crate::util::bytepool::{BytePool, PooledBuf};
+use std::collections::BTreeSet;
+use std::fs::{File, OpenOptions};
+use std::io::BufReader;
+use std::net::{Shutdown as SockShutdown, TcpStream};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// `b"GRSR"` — the ring-file superblock magic.
+pub const RING_MAGIC: [u8; 4] = *b"GRSR";
+
+/// Ring-file layout version.
+pub const RING_VERSION: u32 = 1;
+
+/// Superblock length in bytes.
+pub const SUPER_LEN: u64 = 32;
+
+/// Per-slot header length in bytes (`state | seq | len`).
+pub const SLOT_HEADER_LEN: u64 = 24;
+
+const SLOT_FREE: u64 = 0;
+const SLOT_FULL: u64 = 1;
+
+/// Default payload capacity of one ring slot (4 MiB — comfortably above
+/// the serialized share sizes the serving experiment ships).
+pub const DEFAULT_SLOT_SIZE: u64 = 4 << 20;
+
+/// Default slot count per ring. Eight slots of in-flight payloads per
+/// direction is deeper than the coordinator's dispatch pipelining needs.
+pub const DEFAULT_N_SLOTS: u64 = 8;
+
+/// How long a writer waits for its target slot to come free before
+/// declaring the peer stalled (fail-stop). A healthy reader frees a slot
+/// within microseconds of its doorbell.
+pub const SLOT_WAIT: Duration = Duration::from_secs(10);
+
+/// One file-backed payload ring: a superblock plus `n_slots` fixed-size
+/// slots, single writer and single reader (one per peer, one per
+/// direction). See the module docs for the byte layout.
+pub struct ShmRing {
+    file: File,
+    slot_size: u64,
+    n_slots: u64,
+    path: PathBuf,
+}
+
+impl ShmRing {
+    /// Create (or truncate) the ring file at `path` with all slots free.
+    pub fn create(path: impl Into<PathBuf>, slot_size: u64, n_slots: u64) -> anyhow::Result<ShmRing> {
+        let path = path.into();
+        anyhow::ensure!(slot_size > 0 && n_slots > 0, "ring needs nonzero slot_size and n_slots");
+        anyhow::ensure!(
+            slot_size <= MAX_PAYLOAD,
+            "ring slot_size {slot_size} exceeds the {MAX_PAYLOAD}-byte payload limit"
+        );
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("creating ring file {}: {e}", path.display()))?;
+        // set_len zero-fills: every slot starts [free, 0, 0].
+        file.set_len(SUPER_LEN + n_slots * (SLOT_HEADER_LEN + slot_size))?;
+        let mut sb = [0u8; SUPER_LEN as usize];
+        sb[0..4].copy_from_slice(&RING_MAGIC);
+        sb[4..8].copy_from_slice(&RING_VERSION.to_le_bytes());
+        sb[8..16].copy_from_slice(&slot_size.to_le_bytes());
+        sb[16..24].copy_from_slice(&n_slots.to_le_bytes());
+        file.write_all_at(&sb, 0)?;
+        Ok(ShmRing { file, slot_size, n_slots, path })
+    }
+
+    /// Open an existing ring file, validating its superblock and size. Any
+    /// mismatch — wrong magic, unknown version, impossible geometry, a
+    /// truncated file — is a clean `Err` (the caller fail-stops the link).
+    pub fn open(path: impl Into<PathBuf>) -> anyhow::Result<ShmRing> {
+        let path = path.into();
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("opening ring file {}: {e}", path.display()))?;
+        let mut sb = [0u8; SUPER_LEN as usize];
+        file.read_exact_at(&mut sb, 0)
+            .map_err(|e| anyhow::anyhow!("ring file {} superblock: {e}", path.display()))?;
+        anyhow::ensure!(
+            sb[0..4] == RING_MAGIC,
+            "ring file {} has bad magic {:02x?} (expected {RING_MAGIC:02x?})",
+            path.display(),
+            &sb[0..4]
+        );
+        let version = u32::from_le_bytes(sb[4..8].try_into().unwrap());
+        anyhow::ensure!(
+            version == RING_VERSION,
+            "ring file {} speaks version {version} (expected {RING_VERSION})",
+            path.display()
+        );
+        let slot_size = u64::from_le_bytes(sb[8..16].try_into().unwrap());
+        let n_slots = u64::from_le_bytes(sb[16..24].try_into().unwrap());
+        anyhow::ensure!(
+            slot_size > 0 && slot_size <= MAX_PAYLOAD && n_slots > 0,
+            "ring file {} declares impossible geometry (slot_size {slot_size}, n_slots {n_slots})",
+            path.display()
+        );
+        let expect = SUPER_LEN + n_slots * (SLOT_HEADER_LEN + slot_size);
+        let actual = file.metadata()?.len();
+        anyhow::ensure!(
+            actual == expect,
+            "ring file {} is {actual} bytes, geometry requires {expect} — truncated or corrupt",
+            path.display()
+        );
+        Ok(ShmRing { file, slot_size, n_slots, path })
+    }
+
+    /// Payload capacity of one slot.
+    pub fn slot_size(&self) -> u64 {
+        self.slot_size
+    }
+
+    /// The backing file's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn slot_offset(&self, seq: u64) -> u64 {
+        SUPER_LEN + (seq % self.n_slots) * (SLOT_HEADER_LEN + self.slot_size)
+    }
+
+    /// Write `payload` into the slot for `seq`: wait (bounded) for the slot
+    /// to come free, write the data, then publish the `[full, seq, len]`
+    /// header. The caller sends the doorbell frame *after* this returns, so
+    /// the reader can never observe a half-written slot.
+    pub fn write_payload(&self, seq: u64, payload: &[u8], timeout: Duration) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            payload.len() as u64 <= self.slot_size,
+            "payload of {} bytes exceeds the ring's {}-byte slot size",
+            payload.len(),
+            self.slot_size
+        );
+        let off = self.slot_offset(seq);
+        let deadline = Instant::now() + timeout;
+        loop {
+            let mut state = [0u8; 8];
+            self.file.read_exact_at(&mut state, off)?;
+            if u64::from_le_bytes(state) == SLOT_FREE {
+                break;
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "ring slot for seq {seq} still occupied after {timeout:?} — peer stalled or dead"
+            );
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        self.file.write_all_at(payload, off + SLOT_HEADER_LEN)?;
+        let mut hdr = [0u8; SLOT_HEADER_LEN as usize];
+        hdr[0..8].copy_from_slice(&SLOT_FULL.to_le_bytes());
+        hdr[8..16].copy_from_slice(&seq.to_le_bytes());
+        hdr[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        self.file.write_all_at(&hdr, off)?;
+        Ok(())
+    }
+
+    /// Read and free the slot a doorbell referenced, validating the slot
+    /// header against the doorbell's `(seq, len)` first: a not-full slot, a
+    /// sequence mismatch (a reused or truncated slot), or a length mismatch
+    /// all err — the caller treats it as a rogue peer. The payload buffer
+    /// is leased from the process-wide pool.
+    pub fn read_payload(&self, seq: u64, len: u64) -> anyhow::Result<PooledBuf> {
+        anyhow::ensure!(
+            len <= self.slot_size,
+            "doorbell references {len} bytes, beyond the ring's {}-byte slot size",
+            self.slot_size
+        );
+        let off = self.slot_offset(seq);
+        let mut hdr = [0u8; SLOT_HEADER_LEN as usize];
+        self.file.read_exact_at(&mut hdr, off)?;
+        let state = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let got_seq = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let got_len = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        anyhow::ensure!(
+            state == SLOT_FULL,
+            "ring slot for seq {seq} is not full (state {state}) — truncated or never-written slot"
+        );
+        anyhow::ensure!(
+            got_seq == seq,
+            "ring slot holds seq {got_seq} but the doorbell referenced seq {seq}"
+        );
+        anyhow::ensure!(
+            got_len == len,
+            "ring slot holds {got_len} bytes but the doorbell referenced {len}"
+        );
+        let mut lease = BytePool::global().lease(len as usize);
+        lease.resize(len as usize, 0);
+        self.file.read_exact_at(&mut lease, off + SLOT_HEADER_LEN)?;
+        // Release the slot for the writer's next lap.
+        self.file.write_all_at(&SLOT_FREE.to_le_bytes(), off)?;
+        Ok(lease.freeze())
+    }
+}
+
+/// The master-side ring paths for worker `id` under `dir`.
+pub fn ring_paths(dir: &Path, worker_id: usize) -> (PathBuf, PathBuf) {
+    (
+        dir.join(format!("m2w-{worker_id}.ring")),
+        dir.join(format!("w2m-{worker_id}.ring")),
+    )
+}
+
+/// A fresh, unique directory under the system temp dir for a set of ring
+/// files — what the serving experiment's `shm` loopback mode and the tests
+/// use so concurrent runs never collide.
+pub fn unique_ring_dir(tag: &str) -> std::io::Result<PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "gr-cdmm-shm-{tag}-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Writer/reader-shared per-link state — same shape and discipline as the
+/// TCP transport's: whoever observes the death (reader *or* writer) flips
+/// `alive` and drains `pending` into synthetic fail-stop reports under the
+/// same lock, so every dispatched copy is reported exactly once.
+struct ConnState {
+    alive: bool,
+    pending: BTreeSet<(u64, u64)>,
+    last_heard: Option<Instant>,
+    ping_sent: Option<(u64, Instant)>,
+    last_rtt: Option<Duration>,
+}
+
+impl ConnState {
+    fn fresh() -> ConnState {
+        ConnState {
+            alive: true,
+            pending: BTreeSet::new(),
+            last_heard: None,
+            ping_sent: None,
+            last_rtt: None,
+        }
+    }
+}
+
+type SharedState = Arc<Mutex<ConnState>>;
+
+/// One worker slot: the control socket, its reader thread (which owns the
+/// worker→master ring), the master→worker ring, and the endpoint to
+/// re-dial on reconnect.
+struct ShmConn {
+    stream: TcpStream,
+    state: SharedState,
+    reader: Option<JoinHandle<()>>,
+    endpoint: String,
+    /// Master → worker payload ring (job shares and staged halves).
+    m2w: ShmRing,
+    /// Next m2w payload sequence number.
+    next_seq: u64,
+}
+
+fn drain_dead(state: &SharedState) -> BTreeSet<(u64, u64)> {
+    let mut st = state.lock().unwrap();
+    st.alive = false;
+    std::mem::take(&mut st.pending)
+}
+
+/// The control-stream reader. Identical to the TCP reader except that a
+/// response-ref frame resolves its payload out of the worker→master ring
+/// (with full slot validation) before entering the same
+/// unsolicited-response gate, and a ring violation is one more way a peer
+/// turns rogue.
+fn spawn_reader(
+    worker_id: usize,
+    stream: TcpStream,
+    state: SharedState,
+    funnel: Sender<FromWorker>,
+    peer: String,
+    w2m: ShmRing,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("gr-cdmm-shm-reader-{worker_id}"))
+        .spawn(move || {
+            let mut reader = BufReader::new(stream);
+            loop {
+                let frame = match wire::read_frame(&mut reader) {
+                    Ok(Some(frame)) => frame,
+                    Ok(None) => break, // clean close
+                    Err(e) => {
+                        eprintln!(
+                            "gr-cdmm: worker {worker_id} ({peer}) link broke: {e}; \
+                             treating it as fail-stopped"
+                        );
+                        break;
+                    }
+                };
+                match frame.kind {
+                    FrameKind::RespOk | FrameKind::RespFail | FrameKind::RespRef => {
+                        let msg = if frame.kind == FrameKind::RespRef {
+                            // Resolve the out-of-line payload. Any ring
+                            // violation — bad descriptor, truncated or
+                            // mismatched slot — is a rogue peer.
+                            let resolved = frame
+                                .ref_slot()
+                                .and_then(|(seq, len)| w2m.read_payload(seq, len));
+                            let payload = match resolved {
+                                Ok(p) => p,
+                                Err(e) => {
+                                    eprintln!(
+                                        "gr-cdmm: worker {worker_id} ({peer}) sent a bad \
+                                         ring reference ({e}); treating the link as rogue \
+                                         (fail-stopped)"
+                                    );
+                                    break;
+                                }
+                            };
+                            match usize::try_from(frame.worker_id) {
+                                Ok(shard) => FromWorker {
+                                    job_id: frame.job_id,
+                                    worker_id: shard,
+                                    payload: Some(payload),
+                                    compute: Duration::from_micros(frame.compute_us),
+                                    injected_delay: Duration::from_micros(frame.delay_us),
+                                },
+                                Err(_) => break,
+                            }
+                        } else {
+                            match frame.into_report() {
+                                Ok(msg) => msg,
+                                Err(e) => {
+                                    eprintln!(
+                                        "gr-cdmm: worker {worker_id} ({peer}) sent a \
+                                         malformed response ({e}); treating it as \
+                                         fail-stopped"
+                                    );
+                                    break;
+                                }
+                            }
+                        };
+                        // Same gate as TCP: a response is only valid if
+                        // this link actually owes that (job, shard).
+                        let key = (msg.job_id, msg.worker_id as u64);
+                        {
+                            let mut st = state.lock().unwrap();
+                            if !st.pending.remove(&key) {
+                                drop(st);
+                                eprintln!(
+                                    "gr-cdmm: worker {worker_id} ({peer}) sent an \
+                                     unsolicited response for job {} shard {}; treating \
+                                     the link as rogue (fail-stopped)",
+                                    msg.job_id, msg.worker_id
+                                );
+                                break;
+                            }
+                            st.last_heard = Some(Instant::now());
+                        }
+                        if funnel.send(msg).is_err() {
+                            break; // coordinator gone
+                        }
+                    }
+                    FrameKind::Pong => {
+                        let mut st = state.lock().unwrap();
+                        st.last_heard = Some(Instant::now());
+                        if let Some((nonce, sent)) = st.ping_sent {
+                            if nonce == frame.job_id {
+                                st.last_rtt = Some(sent.elapsed());
+                                st.ping_sent = None;
+                            }
+                        }
+                    }
+                    FrameKind::Hello | FrameKind::StageAck => {
+                        if frame.worker_id != worker_id as u64 {
+                            eprintln!(
+                                "gr-cdmm: peer at {peer} answered as worker {} but is \
+                                 connected as worker {worker_id}; rejecting the link as \
+                                 rogue (fail-stopped)",
+                                frame.worker_id
+                            );
+                            break;
+                        }
+                        state.lock().unwrap().last_heard = Some(Instant::now());
+                    }
+                    FrameKind::Goodbye => break, // graceful leave
+                    FrameKind::Job
+                    | FrameKind::Shutdown
+                    | FrameKind::Ping
+                    | FrameKind::Stage
+                    | FrameKind::Evict
+                    | FrameKind::JobRef
+                    | FrameKind::StageRef => {
+                        eprintln!(
+                            "gr-cdmm: worker {worker_id} ({peer}) sent an unexpected \
+                             {:?} frame; treating it as fail-stopped",
+                            frame.kind
+                        );
+                        break;
+                    }
+                }
+            }
+            for (job_id, shard) in drain_dead(&state) {
+                if funnel.send(fail_report(job_id, shard as usize)).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("failed to spawn shm reader thread")
+}
+
+/// Wrap an accepted control stream into a live worker slot: create both
+/// rings fresh (so the peer can never read a previous session's slots),
+/// spawn the reader, and send the hello. Ring creation happens *before*
+/// the hello goes out — the hello is the daemon's cue to open the rings,
+/// and TCP ordering guarantees the files exist by then.
+fn open_link(
+    worker_id: usize,
+    endpoint: String,
+    stream: TcpStream,
+    dir: &Path,
+    slot_size: u64,
+    n_slots: u64,
+    funnel: &Sender<FromWorker>,
+) -> anyhow::Result<ShmConn> {
+    stream.set_nodelay(true)?;
+    let (m2w_path, w2m_path) = ring_paths(dir, worker_id);
+    let m2w = ShmRing::create(m2w_path, slot_size, n_slots)?;
+    let w2m = ShmRing::create(w2m_path, slot_size, n_slots)?;
+    let state: SharedState = Arc::new(Mutex::new(ConnState::fresh()));
+    let reader = spawn_reader(
+        worker_id,
+        stream.try_clone()?,
+        Arc::clone(&state),
+        funnel.clone(),
+        endpoint.clone(),
+        w2m,
+    );
+    let _ = wire::write_frame(&mut &stream, &Frame::hello(worker_id));
+    Ok(ShmConn { stream, state, reader: Some(reader), endpoint, m2w, next_seq: 0 })
+}
+
+/// The shared-memory transport. Build with [`ShmTransport::connect`];
+/// endpoint `i` in the list is worker `i`, and `dir` is the ring directory
+/// both sides must agree on (the daemons' [`super::daemon::DaemonConfig`]
+/// `shm_dir`).
+pub struct ShmTransport {
+    conns: Vec<ShmConn>,
+    dir: PathBuf,
+    slot_size: u64,
+    n_slots: u64,
+    funnel: Option<Sender<FromWorker>>,
+    rx: Option<Receiver<FromWorker>>,
+    shut: bool,
+}
+
+impl ShmTransport {
+    /// Connect with the default ring geometry ([`DEFAULT_SLOT_SIZE`],
+    /// [`DEFAULT_N_SLOTS`]).
+    pub fn connect(endpoints: &[String], dir: impl Into<PathBuf>) -> anyhow::Result<ShmTransport> {
+        Self::connect_with(endpoints, dir, DEFAULT_SLOT_SIZE, DEFAULT_N_SLOTS)
+    }
+
+    /// Connect with explicit ring geometry (tests shrink `slot_size` to
+    /// exercise the inline-fallback path).
+    pub fn connect_with(
+        endpoints: &[String],
+        dir: impl Into<PathBuf>,
+        slot_size: u64,
+        n_slots: u64,
+    ) -> anyhow::Result<ShmTransport> {
+        anyhow::ensure!(!endpoints.is_empty(), "need at least one worker endpoint");
+        let dir: PathBuf = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("creating ring directory {}: {e}", dir.display()))?;
+        let mut streams = Vec::with_capacity(endpoints.len());
+        for addr in endpoints {
+            streams.push(super::tcp::connect_retry(addr)?);
+        }
+        let (funnel_tx, rx) = channel::<FromWorker>();
+        let mut conns = Vec::with_capacity(endpoints.len());
+        for (wid, (stream, addr)) in streams.into_iter().zip(endpoints).enumerate() {
+            conns.push(open_link(wid, addr.clone(), stream, &dir, slot_size, n_slots, &funnel_tx)?);
+        }
+        Ok(ShmTransport {
+            conns,
+            dir,
+            slot_size,
+            n_slots,
+            funnel: Some(funnel_tx),
+            rx: Some(rx),
+            shut: false,
+        })
+    }
+
+    fn synthesize_fail(&self, shard: usize, job_id: u64) {
+        if let Some(tx) = &self.funnel {
+            let _ = tx.send(fail_report(job_id, shard));
+        }
+    }
+
+    fn kill_link(&mut self, worker_id: usize) {
+        let _ = self.conns[worker_id].stream.shutdown(SockShutdown::Both);
+        for (job, shard) in drain_dead(&self.conns[worker_id].state) {
+            self.synthesize_fail(shard as usize, job);
+        }
+    }
+
+    /// Ship one payload out-of-line: ring write, then the doorbell frame
+    /// built by `doorbell(seq, len)`. Falls back to the inline frame from
+    /// `inline()` when the payload exceeds the slot size. `Err` means the
+    /// link died (the caller kills it).
+    fn send_payload(
+        conn: &mut ShmConn,
+        payload: &PooledBuf,
+        doorbell: impl FnOnce(u64, u64) -> Frame,
+        inline: impl FnOnce() -> Frame,
+    ) -> anyhow::Result<()> {
+        if payload.len() as u64 <= conn.m2w.slot_size() {
+            let seq = conn.next_seq;
+            conn.m2w.write_payload(seq, payload, SLOT_WAIT)?;
+            wire::write_frame(&mut &conn.stream, &doorbell(seq, payload.len() as u64))?;
+            conn.next_seq += 1;
+        } else {
+            // Oversize for the ring geometry: the classic inline frame is
+            // always correct, just not zero-copy on the socket.
+            wire::write_frame(&mut &conn.stream, &inline())?;
+        }
+        Ok(())
+    }
+}
+
+impl Transport for ShmTransport {
+    fn n_workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn send(&mut self, worker_id: usize, msg: ToWorker) -> anyhow::Result<usize> {
+        anyhow::ensure!(worker_id < self.conns.len(), "worker id {worker_id} out of range");
+        match msg {
+            ToWorker::Shutdown => {
+                if self.conns[worker_id].state.lock().unwrap().alive {
+                    let _ =
+                        wire::write_frame(&mut &self.conns[worker_id].stream, &Frame::shutdown());
+                }
+                Ok(0)
+            }
+            ToWorker::Ping { nonce, .. } => {
+                {
+                    let mut st = self.conns[worker_id].state.lock().unwrap();
+                    if !st.alive {
+                        return Ok(0);
+                    }
+                    st.ping_sent = Some((nonce, Instant::now()));
+                }
+                if wire::write_frame(&mut &self.conns[worker_id].stream, &Frame::ping(nonce))
+                    .is_err()
+                {
+                    self.kill_link(worker_id);
+                }
+                Ok(0)
+            }
+            ToWorker::Evict { prepared_id } => {
+                if !self.conns[worker_id].state.lock().unwrap().alive {
+                    return Ok(0);
+                }
+                if wire::write_frame(
+                    &mut &self.conns[worker_id].stream,
+                    &Frame::evict(prepared_id),
+                )
+                .is_err()
+                {
+                    self.kill_link(worker_id);
+                }
+                Ok(0)
+            }
+            ToWorker::Stage { prepared_id, payload } => {
+                if !self.conns[worker_id].state.lock().unwrap().alive {
+                    return Ok(0);
+                }
+                let len = payload.len();
+                let sent = Self::send_payload(
+                    &mut self.conns[worker_id],
+                    &payload,
+                    |seq, n| Frame::stage_ref(prepared_id, seq, n),
+                    || Frame::stage(prepared_id, payload.clone()),
+                );
+                if sent.is_err() {
+                    self.kill_link(worker_id);
+                    return Ok(0);
+                }
+                Ok(len)
+            }
+            ToWorker::Job { job_id, shard, prepared, payload } => {
+                {
+                    let mut st = self.conns[worker_id].state.lock().unwrap();
+                    if !st.alive {
+                        drop(st);
+                        self.synthesize_fail(shard, job_id);
+                        return Ok(0);
+                    }
+                    st.pending.insert((job_id, shard as u64));
+                }
+                let len = payload.len();
+                let sent = Self::send_payload(
+                    &mut self.conns[worker_id],
+                    &payload,
+                    |seq, n| Frame::job_ref(job_id, shard, prepared, seq, n),
+                    || {
+                        let mut f = Frame::job(job_id, shard, payload.clone());
+                        f.compute_us = prepared.map_or(0, |p| p + 1);
+                        f
+                    },
+                );
+                if sent.is_err() {
+                    self.kill_link(worker_id);
+                    return Ok(0);
+                }
+                Ok(len)
+            }
+        }
+    }
+
+    fn take_receiver(&mut self) -> Option<Receiver<FromWorker>> {
+        self.rx.take()
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        for conn in &self.conns {
+            if conn.state.lock().unwrap().alive {
+                let _ = wire::write_frame(&mut &conn.stream, &Frame::shutdown());
+            }
+            let _ = conn.stream.shutdown(SockShutdown::Write);
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        for conn in &mut self.conns {
+            let Some(h) = conn.reader.take() else { continue };
+            while !h.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            if !h.is_finished() {
+                let _ = conn.stream.shutdown(SockShutdown::Both);
+            }
+            let _ = h.join();
+        }
+        // Best-effort ring cleanup: the transport created the files, so it
+        // removes them. (The directory is the caller's.)
+        for wid in 0..self.conns.len() {
+            let (m2w, w2m) = ring_paths(&self.dir, wid);
+            let _ = std::fs::remove_file(m2w);
+            let _ = std::fs::remove_file(w2m);
+        }
+        self.funnel = None;
+    }
+
+    fn name(&self) -> &'static str {
+        "shm"
+    }
+
+    fn link_status(&self, worker_id: usize) -> LinkStatus {
+        match self.conns.get(worker_id) {
+            Some(conn) => {
+                let st = conn.state.lock().unwrap();
+                LinkStatus {
+                    alive: st.alive,
+                    idle: st.last_heard.map(|t| t.elapsed()),
+                    last_rtt: st.last_rtt,
+                }
+            }
+            None => LinkStatus { alive: false, idle: None, last_rtt: None },
+        }
+    }
+
+    fn ping(&mut self, worker_id: usize, nonce: u64) -> anyhow::Result<()> {
+        self.send(worker_id, ToWorker::Ping { nonce, sent: Instant::now() })?;
+        Ok(())
+    }
+
+    fn disconnect_worker(&mut self, worker_id: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(worker_id < self.conns.len(), "worker id {worker_id} out of range");
+        self.kill_link(worker_id);
+        if let Some(h) = self.conns[worker_id].reader.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    fn reconnect_worker(&mut self, worker_id: usize, endpoint: Option<&str>) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.shut, "transport is shut down");
+        anyhow::ensure!(worker_id < self.conns.len(), "worker id {worker_id} out of range");
+        let funnel = self
+            .funnel
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("transport is shutting down"))?;
+        if let Some(ep) = endpoint {
+            self.conns[worker_id].endpoint = ep.to_string();
+        }
+        anyhow::ensure!(
+            !self.conns[worker_id].state.lock().unwrap().alive,
+            "worker {worker_id} link is still alive"
+        );
+        if let Some(h) = self.conns[worker_id].reader.take() {
+            let _ = h.join();
+        }
+        let addr = self.conns[worker_id].endpoint.clone();
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| anyhow::anyhow!("re-dialing worker {worker_id} at {addr}: {e}"))?;
+        // open_link recreates both rings, so the fresh connection starts
+        // from seq 0 on zeroed slots — stale payloads can never replay.
+        self.conns[worker_id] =
+            open_link(worker_id, addr, stream, &self.dir, self.slot_size, self.n_slots, &funnel)?;
+        Ok(())
+    }
+
+    fn add_worker(&mut self, endpoint: Option<&str>) -> anyhow::Result<usize> {
+        anyhow::ensure!(!self.shut, "transport is shut down");
+        let addr = endpoint
+            .ok_or_else(|| anyhow::anyhow!("shm add_worker needs a host:port endpoint"))?;
+        let funnel = self
+            .funnel
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("transport is shutting down"))?;
+        let wid = self.conns.len();
+        let stream = super::tcp::connect_retry(addr)?;
+        self.conns.push(open_link(
+            wid,
+            addr.to_string(),
+            stream,
+            &self.dir,
+            self.slot_size,
+            self.n_slots,
+            &funnel,
+        )?);
+        Ok(wid)
+    }
+}
+
+impl Drop for ShmTransport {
+    fn drop(&mut self) {
+        Transport::shutdown(self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::daemon::{DaemonConfig, WorkerDaemon};
+    use crate::coordinator::straggler::StragglerModel;
+    use crate::coordinator::worker::ShareCompute;
+    use std::time::Instant;
+
+    struct Echo;
+    impl ShareCompute for Echo {
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<PooledBuf> {
+            Ok(payload.to_vec().into())
+        }
+    }
+
+    fn shm_daemon(dir: &Path, conns: usize) -> WorkerDaemon {
+        let cfg = DaemonConfig { shm_dir: Some(dir.to_path_buf()), ..DaemonConfig::default() };
+        WorkerDaemon::spawn_local_cfg(std::sync::Arc::new(Echo), cfg, conns).unwrap()
+    }
+
+    #[test]
+    fn ring_roundtrips_and_wraps() {
+        let dir = unique_ring_dir("ring-rt").unwrap();
+        let path = dir.join("t.ring");
+        let ring = ShmRing::create(&path, 64, 4).unwrap();
+        // more laps than slots: every seq maps to seq % 4 and frees cleanly
+        for seq in 0..13u64 {
+            let payload = vec![seq as u8; 1 + (seq as usize % 60)];
+            ring.write_payload(seq, &payload, SLOT_WAIT).unwrap();
+            let back = ring.read_payload(seq, payload.len() as u64).unwrap();
+            assert_eq!(back, payload);
+        }
+        // a reader on a second handle sees the same geometry
+        let other = ShmRing::open(&path).unwrap();
+        assert_eq!(other.slot_size(), 64);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ring_rejects_oversize_and_unwritten_slots() {
+        let dir = unique_ring_dir("ring-guard").unwrap();
+        let ring = ShmRing::create(dir.join("t.ring"), 32, 2).unwrap();
+        assert!(ring.write_payload(0, &[0u8; 33], SLOT_WAIT).is_err(), "oversize payload");
+        let err = ring.read_payload(0, 8).unwrap_err().to_string();
+        assert!(err.contains("not full"), "{err}");
+        let err = ring.read_payload(0, 64).unwrap_err().to_string();
+        assert!(err.contains("slot size"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ring_validates_doorbell_against_slot_header() {
+        let dir = unique_ring_dir("ring-val").unwrap();
+        let ring = ShmRing::create(dir.join("t.ring"), 64, 4).unwrap();
+        ring.write_payload(1, &[7u8; 16], SLOT_WAIT).unwrap();
+        // wrong seq for the same slot (5 % 4 == 1)
+        let err = ring.read_payload(5, 16).unwrap_err().to_string();
+        assert!(err.contains("seq"), "{err}");
+        // wrong length
+        let err = ring.read_payload(1, 15).unwrap_err().to_string();
+        assert!(err.contains("bytes"), "{err}");
+        // the honest doorbell still works afterwards
+        assert_eq!(ring.read_payload(1, 16).unwrap(), vec![7u8; 16]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ring_open_rejects_bad_magic_version_and_truncation() {
+        let dir = unique_ring_dir("ring-open").unwrap();
+        let path = dir.join("t.ring");
+        ShmRing::create(&path, 64, 2).unwrap();
+
+        let good = std::fs::read(&path).unwrap();
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        std::fs::write(&path, &bad_magic).unwrap();
+        assert!(ShmRing::open(&path).unwrap_err().to_string().contains("magic"));
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 0x7F;
+        std::fs::write(&path, &bad_version).unwrap();
+        assert!(ShmRing::open(&path).unwrap_err().to_string().contains("version"));
+
+        std::fs::write(&path, &good[..good.len() - 1]).unwrap();
+        assert!(ShmRing::open(&path).unwrap_err().to_string().contains("truncated"));
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shm_transport_round_trips_jobs_out_of_line() {
+        let dir = unique_ring_dir("rt").unwrap();
+        let daemon = shm_daemon(&dir, 1);
+        let mut t = ShmTransport::connect(&[daemon.addr()], &dir).unwrap();
+        let rx = t.take_receiver().unwrap();
+        let payload = vec![0x5Au8; 8192];
+        let sent = t
+            .send(
+                0,
+                ToWorker::Job { job_id: 9, shard: 0, prepared: None, payload: payload.clone().into() },
+            )
+            .unwrap();
+        assert_eq!(sent, payload.len(), "send reports the payload bytes, like tcp");
+        let msg = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (9, 0));
+        assert_eq!(msg.payload.unwrap(), payload);
+        t.shutdown();
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn oversize_payloads_fall_back_to_inline_frames() {
+        let dir = unique_ring_dir("oversize").unwrap();
+        let daemon = shm_daemon(&dir, 1);
+        // 64-byte slots: a 200-byte share must travel inline
+        let mut t = ShmTransport::connect_with(&[daemon.addr()], &dir, 64, 2).unwrap();
+        let rx = t.take_receiver().unwrap();
+        let payload = vec![0xA1u8; 200];
+        let sent = t
+            .send(
+                0,
+                ToWorker::Job { job_id: 1, shard: 0, prepared: None, payload: payload.clone().into() },
+            )
+            .unwrap();
+        assert_eq!(sent, payload.len());
+        let msg = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        // the 200-byte echo also exceeds the slot, so the daemon's reply
+        // came back inline too — both fallbacks in one round trip
+        assert_eq!(msg.payload.unwrap(), payload);
+        t.shutdown();
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn staged_operands_travel_through_the_ring() {
+        let dir = unique_ring_dir("stage").unwrap();
+        let daemon = shm_daemon(&dir, 1);
+        let mut t = ShmTransport::connect(&[daemon.addr()], &dir).unwrap();
+        let rx = t.take_receiver().unwrap();
+        t.send(0, ToWorker::Stage { prepared_id: 3, payload: vec![0xA, 0xB].into() }).unwrap();
+        t.send(
+            0,
+            ToWorker::Job { job_id: 4, shard: 0, prepared: Some(3), payload: vec![0xC, 0xD].into() },
+        )
+        .unwrap();
+        let msg = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(
+            msg.payload.unwrap(),
+            vec![0xA, 0xB, 0xC, 0xD],
+            "daemon computed on staged ++ payload, reassembled from ring slots"
+        );
+        t.shutdown();
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dead_peer_fail_stops_pending_jobs() {
+        let dir = unique_ring_dir("dead").unwrap();
+        // daemon serves zero further connections after the first, which we
+        // use up and let die immediately by dropping a raw connection
+        let daemon = shm_daemon(&dir, 1);
+        let mut t = ShmTransport::connect(&[daemon.addr()], &dir).unwrap();
+        let rx = t.take_receiver().unwrap();
+        // kill the link from our side, then submit: the job must fail-stop
+        t.disconnect_worker(0).unwrap();
+        t.send(0, ToWorker::Job { job_id: 5, shard: 0, prepared: None, payload: vec![1u8; 8].into() })
+            .unwrap();
+        let msg = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (5, 0));
+        assert!(msg.payload.is_none(), "dead link reports byte-free fail-stop");
+        t.shutdown();
+        let _ = daemon.join();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rogue_ring_reference_kills_the_link() {
+        // A daemon-side stand-in: accept the control connection, then send
+        // a response-ref naming a slot that was never written. The master's
+        // reader must fail-stop the link, not hang or panic.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dir = unique_ring_dir("rogue").unwrap();
+        let dir2 = dir.clone();
+        let rogue = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            // consume the hello, echo it honestly
+            let hello = wire::read_frame(&mut reader).unwrap().unwrap();
+            assert_eq!(hello.kind, FrameKind::Hello);
+            wire::write_frame(&mut &stream, &Frame::hello(0)).unwrap();
+            // read the job-ref doorbell, then answer with a reference to a
+            // never-written slot
+            let job = wire::read_frame(&mut reader).unwrap().unwrap();
+            assert_eq!(job.kind, FrameKind::JobRef);
+            let _ = ShmRing::open(dir2.join("w2m-0.ring")).unwrap();
+            wire::write_frame(
+                &mut &stream,
+                &Frame::resp_ref(job.job_id, 0, Duration::ZERO, Duration::ZERO, 7, 16),
+            )
+            .unwrap();
+            // hold the socket open until the master kills it
+            let _ = wire::read_frame(&mut reader);
+        });
+        let mut t = ShmTransport::connect(&[addr], &dir).unwrap();
+        let rx = t.take_receiver().unwrap();
+        t.send(0, ToWorker::Job { job_id: 8, shard: 0, prepared: None, payload: vec![2u8; 32].into() })
+            .unwrap();
+        let msg = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!((msg.job_id, msg.worker_id), (8, 0));
+        assert!(msg.payload.is_none(), "bad ring reference degrades to fail-stop");
+        assert!(!t.link_status(0).alive, "the rogue link is dead");
+        t.shutdown();
+        rogue.join().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ping_pong_and_reconnect_work_over_shm() {
+        let dir = unique_ring_dir("elastic").unwrap();
+        let daemon = shm_daemon(&dir, 2);
+        let mut t = ShmTransport::connect(&[daemon.addr()], &dir).unwrap();
+        let _rx = t.take_receiver().unwrap();
+        t.ping(0, 77).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while t.link_status(0).last_rtt.is_none() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(t.link_status(0).last_rtt.is_some(), "pong answered over the control stream");
+        t.disconnect_worker(0).unwrap();
+        assert!(!t.link_status(0).alive);
+        t.reconnect_worker(0, None).unwrap();
+        assert!(t.link_status(0).alive);
+        t.shutdown();
+        daemon.join().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -242,7 +242,9 @@ fn spawn_reader(
         .expect("failed to spawn tcp reader thread")
 }
 
-fn connect_retry(addr: &str) -> anyhow::Result<TcpStream> {
+/// Dial `addr` with patient retries (shared with the shm transport, whose
+/// control channel is the same kind of socket).
+pub(crate) fn connect_retry(addr: &str) -> anyhow::Result<TcpStream> {
     let mut last_err = String::new();
     for attempt in 0..CONNECT_ATTEMPTS {
         match TcpStream::connect(addr) {
@@ -368,9 +370,12 @@ impl Transport for TcpTransport {
                     return Ok(0);
                 }
                 let len = payload.len();
+                // Zero-copy: the frame takes the shared PooledBuf by
+                // reference count, and the wire layer writes it borrowed —
+                // no join buffer, no payload clone.
                 if wire::write_frame(
                     &mut &self.conns[worker_id].stream,
-                    &Frame::stage(prepared_id, (*payload).clone()),
+                    &Frame::stage(prepared_id, payload),
                 )
                 .is_err()
                 {

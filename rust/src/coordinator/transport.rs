@@ -44,6 +44,7 @@
 
 use super::straggler::{CorruptionModel, StragglerModel};
 use super::worker::{spawn_worker, worker_rng, ShareCompute};
+use crate::util::bytepool::PooledBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -64,15 +65,16 @@ pub enum ToWorker {
         /// before deserializing the share. `None` for a full-share job.
         prepared: Option<u64>,
         /// Serialized [`crate::codes::Share`] (or, on a prepared job, just
-        /// its B-half), shared so a speculative re-dispatch of the same
-        /// shard never copies the bytes.
-        payload: Arc<Vec<u8>>,
+        /// its B-half), a shared [`PooledBuf`] so a speculative re-dispatch
+        /// of the same shard never copies the bytes — and the storage
+        /// returns to the pool when the last dispatch drops it.
+        payload: PooledBuf,
     },
     /// Store a prepared operand's A-side share half under `prepared_id` so
     /// later prepared jobs can reference it. The worker acknowledges
     /// (in-process: stamping its [`WorkerLink`]; socket daemon: a
     /// stage-ack frame).
-    Stage { prepared_id: u64, payload: Arc<Vec<u8>> },
+    Stage { prepared_id: u64, payload: PooledBuf },
     /// Drop a staged operand. Unknown ids are ignored.
     Evict { prepared_id: u64 },
     /// Health-check probe; the in-process worker answers by stamping its
@@ -89,7 +91,7 @@ pub struct FromWorker {
     /// the original shard id).
     pub worker_id: usize,
     /// Serialized response matrix. `None` if the worker failed the job.
-    pub payload: Option<Vec<u8>>,
+    pub payload: Option<PooledBuf>,
     /// Pure compute time at the worker (excludes injected straggler delay).
     pub compute: Duration,
     /// Injected straggler delay, for reporting.
@@ -547,7 +549,7 @@ mod tests {
     use super::*;
 
     fn job(job_id: u64, shard: usize, payload: Vec<u8>) -> ToWorker {
-        ToWorker::Job { job_id, shard, prepared: None, payload: Arc::new(payload) }
+        ToWorker::Job { job_id, shard, prepared: None, payload: payload.into() }
     }
 
     #[test]
@@ -627,8 +629,8 @@ mod tests {
     /// Echo backend for transport-level tests.
     struct Echo;
     impl ShareCompute for Echo {
-        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-            Ok(payload.to_vec())
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<PooledBuf> {
+            Ok(payload.to_vec().into())
         }
     }
 
@@ -643,7 +645,7 @@ mod tests {
         assert_eq!(sent, 33);
         let msg = rx.recv().unwrap();
         assert_eq!((msg.job_id, msg.worker_id), (9, 0));
-        assert_eq!(msg.payload.as_ref().map(Vec::len), Some(33));
+        assert_eq!(msg.payload.as_ref().map(PooledBuf::len), Some(33));
         assert!(t.send(5, ToWorker::Shutdown).is_err(), "out-of-range worker id");
         Transport::shutdown(&mut t);
         assert!(rx.recv().is_err(), "stream disconnects after shutdown");
@@ -686,7 +688,7 @@ mod tests {
         assert_eq!(sent, 16);
         let msg = rx.recv().unwrap();
         assert_eq!((msg.job_id, msg.worker_id), (2, 0));
-        assert_eq!(msg.payload.as_ref().map(Vec::len), Some(16));
+        assert_eq!(msg.payload.as_ref().map(PooledBuf::len), Some(16));
 
         // Endpoints are a TCP concept.
         assert!(t.reconnect_worker(0, Some("127.0.0.1:1")).is_err());
@@ -699,12 +701,12 @@ mod tests {
         let rx = t.take_receiver().unwrap();
         // Live link: the staged bytes cross and are reported for the
         // staged_upload counter.
-        let stage = ToWorker::Stage { prepared_id: 1, payload: Arc::new(vec![0xA; 24]) };
+        let stage = ToWorker::Stage { prepared_id: 1, payload: vec![0xA; 24].into() };
         assert_eq!(t.send(0, stage).unwrap(), 24);
         // Dead link: staging traffic is silently lost (no synthesized
         // report — only jobs owe one), 0 bytes.
         t.disconnect_worker(1).unwrap();
-        let stage = ToWorker::Stage { prepared_id: 1, payload: Arc::new(vec![0xA; 24]) };
+        let stage = ToWorker::Stage { prepared_id: 1, payload: vec![0xA; 24].into() };
         assert_eq!(t.send(1, stage).unwrap(), 0);
         assert_eq!(t.send(1, ToWorker::Evict { prepared_id: 1 }).unwrap(), 0);
         // Worker 0 serves a prepared job from its staged half.
@@ -712,18 +714,22 @@ mod tests {
             job_id: 3,
             shard: 0,
             prepared: Some(1),
-            payload: Arc::new(vec![0xB; 8]),
+            payload: vec![0xB; 8].into(),
         };
         assert_eq!(t.send(0, msg).unwrap(), 8, "only the B-half crosses per job");
         let reply = rx.recv().unwrap();
-        assert_eq!(reply.payload.as_ref().map(Vec::len), Some(32), "staged ++ payload computed");
+        assert_eq!(
+            reply.payload.as_ref().map(PooledBuf::len),
+            Some(32),
+            "staged ++ payload computed"
+        );
         // Evict on a live link costs nothing and unstages.
         assert_eq!(t.send(0, ToWorker::Evict { prepared_id: 1 }).unwrap(), 0);
         let msg = ToWorker::Job {
             job_id: 4,
             shard: 0,
             prepared: Some(1),
-            payload: Arc::new(vec![0xB; 8]),
+            payload: vec![0xB; 8].into(),
         };
         t.send(0, msg).unwrap();
         assert!(rx.recv().unwrap().payload.is_none(), "evicted id fail-stops");

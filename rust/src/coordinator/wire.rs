@@ -7,10 +7,11 @@
 //! ```text
 //! offset  size  field        notes
 //!      0     4  magic        0x4D43_5247 ("GRCM" as little-endian bytes)
-//!      4     2  version      protocol version, currently 3
+//!      4     2  version      protocol version, currently 4
 //!      6     2  kind         1=job  2=shutdown  3=response-ok
 //!                            4=response-failed  5=ping  6=pong  7=hello
 //!                            8=goodbye  9=stage  10=stage-ack  11=evict
+//!                            12=job-ref  13=stage-ref  14=response-ref
 //!      8     8  job_id       coordinator-assigned job id (ping/pong reuse
 //!                            this field as the health-check nonce;
 //!                            stage/stage-ack/evict reuse it as the
@@ -55,25 +56,44 @@
 //! (response-failed frame). An **evict** frame (payload-free) drops the
 //! staged entry.
 //!
+//! Version 4 is the zero-copy revision. On the write side, frames go out
+//! **scatter-gather**: the 48-byte header is assembled on the stack and the
+//! payload is borrowed — [`write_frame_parts`] hands both to
+//! `write_vectored` so nothing is ever joined into a temporary buffer. On
+//! the read side, [`read_frame`] leases the payload buffer from the
+//! process-wide [`BytePool`] (pre-sized from the already-validated header
+//! length), so a steady stream of frames recycles the same storage. And
+//! three **reference kinds** (12–14) let the shared-memory transport
+//! ([`super::shm`]) move payloads out-of-line: a job-ref / stage-ref /
+//! response-ref frame mirrors its classic counterpart but carries only a
+//! 16-byte `(slot seq, payload len)` descriptor naming a slot in the
+//! peer-shared ring file — the control frame is the doorbell, the ring is
+//! the data plane. TCP peers never send reference kinds.
+//!
 //! [`read_frame`] validates everything before allocating: bad magic, an
 //! unknown version or kind, an oversized declared `payload_len`, and
 //! truncation (mid-header or mid-payload) are all clean `Err`s; only EOF
 //! exactly on a frame boundary is a clean end-of-stream (`Ok(None)`). The
 //! receiving side treats any `Err` as a broken peer — fail-stop, never a
-//! panic or a hang.
+//! panic or a hang. The payload-length guard doubles as the pool guard:
+//! [`MAX_PAYLOAD`] equals the pool's largest size class, so any frame that
+//! passes validation can be leased.
 
 use super::transport::FromWorker;
-use std::io::{ErrorKind, Read, Write};
+use crate::util::bytepool::{BytePool, PooledBuf, MAX_BUCKET};
+use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::time::Duration;
 
 /// `b"GRCM"` read as a little-endian `u32`.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"GRCM");
 
 /// Current protocol version. Version 2 added the ping/pong/hello/goodbye
-/// control frames (kinds 5–8); version 3 adds prepared-operand staging
+/// control frames (kinds 5–8); version 3 added prepared-operand staging
 /// (stage/stage-ack/evict, kinds 9–11) and the `prepared_id + 1` tag in a
-/// job frame's `compute_us` field.
-pub const VERSION: u16 = 3;
+/// job frame's `compute_us` field; version 4 adds the out-of-line payload
+/// reference kinds (job-ref/stage-ref/response-ref, kinds 12–14) used by
+/// the shared-memory transport.
+pub const VERSION: u16 = 4;
 
 /// Fixed header length in bytes.
 pub const HEADER_LEN: usize = 48;
@@ -82,6 +102,15 @@ pub const HEADER_LEN: usize = 48;
 /// declaring more is rejected before any allocation — a malformed or
 /// malicious peer cannot make the receiver reserve unbounded memory.
 pub const MAX_PAYLOAD: u64 = 1 << 30;
+
+// The oversize guard doubles as the pool guard: every validated payload
+// length fits the pool's largest size class, so read_frame can always
+// lease.
+const _: () = assert!(MAX_PAYLOAD as usize == MAX_BUCKET);
+
+/// Byte length of a reference-kind payload: `slot seq (u64 LE) | payload
+/// len (u64 LE)`.
+pub const REF_PAYLOAD_LEN: usize = 16;
 
 /// Frame discriminator (the header's `kind` field).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,6 +143,16 @@ pub enum FrameKind {
     /// Master → worker: drop a staged operand. `job_id` carries the
     /// prepared id; no payload.
     Evict,
+    /// Master → worker (shm only): a job whose share payload sits
+    /// out-of-line in the master→worker ring. Payload is the 16-byte
+    /// `(slot seq, len)` descriptor; all other fields as in `Job`.
+    JobRef,
+    /// Master → worker (shm only): a stage whose staged bytes sit
+    /// out-of-line in the master→worker ring.
+    StageRef,
+    /// Worker → master (shm only): a successful response whose payload sits
+    /// out-of-line in the worker→master ring.
+    RespRef,
 }
 
 impl FrameKind {
@@ -130,6 +169,9 @@ impl FrameKind {
             FrameKind::Stage => 9,
             FrameKind::StageAck => 10,
             FrameKind::Evict => 11,
+            FrameKind::JobRef => 12,
+            FrameKind::StageRef => 13,
+            FrameKind::RespRef => 14,
         }
     }
 
@@ -146,12 +188,18 @@ impl FrameKind {
             9 => Some(FrameKind::Stage),
             10 => Some(FrameKind::StageAck),
             11 => Some(FrameKind::Evict),
+            12 => Some(FrameKind::JobRef),
+            13 => Some(FrameKind::StageRef),
+            14 => Some(FrameKind::RespRef),
             _ => None,
         }
     }
 }
 
-/// One decoded wire frame.
+/// One decoded wire frame. The payload is a [`PooledBuf`]: cloning a frame
+/// (or constructing one from an already-shared payload) never copies the
+/// bytes, and a payload read off the wire returns its storage to the pool
+/// when the last reference drops.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Frame {
     pub kind: FrameKind,
@@ -159,7 +207,7 @@ pub struct Frame {
     pub worker_id: u64,
     pub compute_us: u64,
     pub delay_us: u64,
-    pub payload: Vec<u8>,
+    pub payload: PooledBuf,
 }
 
 fn saturating_micros(d: Duration) -> u64 {
@@ -168,14 +216,14 @@ fn saturating_micros(d: Duration) -> u64 {
 
 impl Frame {
     /// A master → worker job frame.
-    pub fn job(job_id: u64, worker_id: usize, payload: Vec<u8>) -> Frame {
+    pub fn job(job_id: u64, worker_id: usize, payload: impl Into<PooledBuf>) -> Frame {
         Frame {
             kind: FrameKind::Job,
             job_id,
             worker_id: worker_id as u64,
             compute_us: 0,
             delay_us: 0,
-            payload,
+            payload: payload.into(),
         }
     }
 
@@ -187,13 +235,13 @@ impl Frame {
             worker_id: 0,
             compute_us: 0,
             delay_us: 0,
-            payload: Vec::new(),
+            payload: PooledBuf::default(),
         }
     }
 
     /// A payload-free control frame of the given kind.
     fn control(kind: FrameKind, job_id: u64, worker_id: u64) -> Frame {
-        Frame { kind, job_id, worker_id, compute_us: 0, delay_us: 0, payload: Vec::new() }
+        Frame { kind, job_id, worker_id, compute_us: 0, delay_us: 0, payload: PooledBuf::default() }
     }
 
     /// A master → worker health-check ping. The nonce rides in `job_id`.
@@ -220,14 +268,14 @@ impl Frame {
 
     /// A master → worker stage frame: store `payload` (a prepared operand's
     /// A-side share half) under `prepared_id`.
-    pub fn stage(prepared_id: u64, payload: Vec<u8>) -> Frame {
+    pub fn stage(prepared_id: u64, payload: impl Into<PooledBuf>) -> Frame {
         Frame {
             kind: FrameKind::Stage,
             job_id: prepared_id,
             worker_id: 0,
             compute_us: 0,
             delay_us: 0,
-            payload,
+            payload: payload.into(),
         }
     }
 
@@ -247,7 +295,85 @@ impl Frame {
     /// full-share job. (Job frames repurpose the otherwise-unused
     /// `compute_us` field as `prepared_id + 1`, 0 meaning unprepared.)
     pub fn job_prepared_id(&self) -> Option<u64> {
-        (self.kind == FrameKind::Job && self.compute_us != 0).then(|| self.compute_us - 1)
+        ((self.kind == FrameKind::Job || self.kind == FrameKind::JobRef) && self.compute_us != 0)
+            .then(|| self.compute_us - 1)
+    }
+
+    /// The 16-byte `(slot seq, payload len)` descriptor of a reference
+    /// frame.
+    fn ref_descriptor(seq: u64, len: u64) -> PooledBuf {
+        let mut p = Vec::with_capacity(REF_PAYLOAD_LEN);
+        p.extend_from_slice(&seq.to_le_bytes());
+        p.extend_from_slice(&len.to_le_bytes());
+        PooledBuf::from_vec(p)
+    }
+
+    /// Parse a reference frame's `(slot seq, payload len)` descriptor,
+    /// rejecting malformed sizes and oversize declared lengths (same
+    /// [`MAX_PAYLOAD`] guard as inline frames).
+    pub fn ref_slot(&self) -> anyhow::Result<(u64, u64)> {
+        anyhow::ensure!(
+            matches!(self.kind, FrameKind::JobRef | FrameKind::StageRef | FrameKind::RespRef),
+            "frame kind {:?} carries no slot reference",
+            self.kind
+        );
+        anyhow::ensure!(
+            self.payload.len() == REF_PAYLOAD_LEN,
+            "reference frame payload is {} bytes (expected {REF_PAYLOAD_LEN})",
+            self.payload.len()
+        );
+        let seq = le_u64(&self.payload[0..8]);
+        let len = le_u64(&self.payload[8..16]);
+        anyhow::ensure!(
+            len <= MAX_PAYLOAD,
+            "referenced payload length {len} exceeds the {MAX_PAYLOAD}-byte frame limit"
+        );
+        Ok((seq, len))
+    }
+
+    /// A master → worker job frame whose payload sits in ring slot `seq`.
+    pub fn job_ref(job_id: u64, shard: usize, prepared: Option<u64>, seq: u64, len: u64) -> Frame {
+        Frame {
+            kind: FrameKind::JobRef,
+            job_id,
+            worker_id: shard as u64,
+            compute_us: prepared.map_or(0, |p| p + 1),
+            delay_us: 0,
+            payload: Frame::ref_descriptor(seq, len),
+        }
+    }
+
+    /// A master → worker stage frame whose staged bytes sit in ring slot
+    /// `seq`.
+    pub fn stage_ref(prepared_id: u64, seq: u64, len: u64) -> Frame {
+        Frame {
+            kind: FrameKind::StageRef,
+            job_id: prepared_id,
+            worker_id: 0,
+            compute_us: 0,
+            delay_us: 0,
+            payload: Frame::ref_descriptor(seq, len),
+        }
+    }
+
+    /// A worker → master response frame whose payload sits in ring slot
+    /// `seq`.
+    pub fn resp_ref(
+        job_id: u64,
+        worker_id: usize,
+        compute: Duration,
+        injected_delay: Duration,
+        seq: u64,
+        len: u64,
+    ) -> Frame {
+        Frame {
+            kind: FrameKind::RespRef,
+            job_id,
+            worker_id: worker_id as u64,
+            compute_us: saturating_micros(compute),
+            delay_us: saturating_micros(injected_delay),
+            payload: Frame::ref_descriptor(seq, len),
+        }
     }
 
     /// Package a worker's job report as a response frame (durations are
@@ -256,7 +382,7 @@ impl Frame {
         let FromWorker { job_id, worker_id, payload, compute, injected_delay } = msg;
         let (kind, payload) = match payload {
             Some(p) => (FrameKind::RespOk, p),
-            None => (FrameKind::RespFail, Vec::new()),
+            None => (FrameKind::RespFail, PooledBuf::default()),
         };
         Frame {
             kind,
@@ -294,11 +420,13 @@ impl Frame {
     }
 }
 
-/// Serialize one frame from borrowed parts. The payload follows the fixed
-/// 48-byte header; header and payload go out as ONE write, so a
-/// `TCP_NODELAY` socket sends one segment (and pays one syscall) per frame
-/// instead of two — this is the per-message hot path of the dispatch and
-/// response loops.
+/// Serialize one frame from borrowed parts — **scatter-gather**: the
+/// 48-byte header is assembled on the stack and handed to `write_vectored`
+/// alongside the *borrowed* payload, so header and payload still go out as
+/// one syscall on a `TCP_NODELAY` socket (one segment per frame) but
+/// nothing is ever joined into a heap buffer. This is the per-message hot
+/// path of the dispatch and response loops: zero allocations, zero payload
+/// copies.
 #[allow(clippy::too_many_arguments)]
 fn write_frame_parts<W: Write>(
     w: &mut W,
@@ -309,17 +437,38 @@ fn write_frame_parts<W: Write>(
     delay_us: u64,
     payload: &[u8],
 ) -> std::io::Result<()> {
-    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
-    buf.extend_from_slice(&MAGIC.to_le_bytes());
-    buf.extend_from_slice(&VERSION.to_le_bytes());
-    buf.extend_from_slice(&kind.to_u16().to_le_bytes());
-    buf.extend_from_slice(&job_id.to_le_bytes());
-    buf.extend_from_slice(&worker_id.to_le_bytes());
-    buf.extend_from_slice(&compute_us.to_le_bytes());
-    buf.extend_from_slice(&delay_us.to_le_bytes());
-    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    buf.extend_from_slice(payload);
-    w.write_all(&buf)?;
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[6..8].copy_from_slice(&kind.to_u16().to_le_bytes());
+    header[8..16].copy_from_slice(&job_id.to_le_bytes());
+    header[16..24].copy_from_slice(&worker_id.to_le_bytes());
+    header[24..32].copy_from_slice(&compute_us.to_le_bytes());
+    header[32..40].copy_from_slice(&delay_us.to_le_bytes());
+    header[40..48].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    // Vectored writes may be partial; resume at the right offset across
+    // both segments (and retry on EINTR) until the whole frame is out.
+    let total = HEADER_LEN + payload.len();
+    let mut off = 0usize;
+    while off < total {
+        let res = if off < HEADER_LEN {
+            let bufs = [IoSlice::new(&header[off..]), IoSlice::new(payload)];
+            w.write_vectored(&bufs)
+        } else {
+            w.write(&payload[off - HEADER_LEN..])
+        };
+        match res {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "failed to write whole frame",
+                ))
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
     w.flush()
 }
 
@@ -404,16 +553,23 @@ pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<Frame>> {
         "declared payload length {payload_len} exceeds the {MAX_PAYLOAD}-byte frame limit"
     );
 
-    let mut payload = vec![0u8; payload_len as usize];
+    // The length is validated (≤ MAX_PAYLOAD = the pool's largest class),
+    // so the payload buffer is pool-leased rather than freshly allocated —
+    // a steady frame stream recycles the same storage.
+    let mut payload = BytePool::global().lease(payload_len as usize);
+    payload.resize(payload_len as usize, 0);
     let got = read_full(r, &mut payload)?;
-    anyhow::ensure!(got == payload.len(), "truncated frame payload ({got}/{payload_len} bytes)");
+    anyhow::ensure!(
+        got == payload_len as usize,
+        "truncated frame payload ({got}/{payload_len} bytes)"
+    );
     Ok(Some(Frame {
         kind,
         job_id: le_u64(&header[8..16]),
         worker_id: le_u64(&header[16..24]),
         compute_us: le_u64(&header[24..32]),
         delay_us: le_u64(&header[32..40]),
-        payload,
+        payload: payload.freeze(),
     }))
 }
 
@@ -444,7 +600,7 @@ mod tests {
                 worker_id: 31,
                 compute_us: 1234,
                 delay_us: 99,
-                payload: vec![0xAB; 1000],
+                payload: vec![0xAB; 1000].into(),
             },
             Frame {
                 kind: FrameKind::RespFail,
@@ -452,7 +608,7 @@ mod tests {
                 worker_id: 0,
                 compute_us: 0,
                 delay_us: 0,
-                payload: Vec::new(),
+                payload: PooledBuf::default(),
             },
         ];
         for frame in frames {
@@ -588,9 +744,10 @@ mod tests {
             let mut good = Vec::new();
             write_frame(&mut good, &frame).unwrap();
 
-            // kind 12 is one past evict — the first unassigned discriminator
+            // kind 15 is one past response-ref — the first unassigned
+            // discriminator
             let mut bad_kind = good.clone();
-            bad_kind[6..8].copy_from_slice(&12u16.to_le_bytes());
+            bad_kind[6..8].copy_from_slice(&15u16.to_le_bytes());
             let err = read_frame(&mut Cursor::new(bad_kind)).unwrap_err().to_string();
             assert!(err.contains("kind"), "{err}");
 
@@ -600,6 +757,40 @@ mod tests {
             let err = read_frame(&mut Cursor::new(oversize)).unwrap_err().to_string();
             assert!(err.contains("exceeds"), "{err}");
         }
+    }
+
+    #[test]
+    fn reference_kinds_roundtrip_and_parse_their_slot() {
+        let job = Frame::job_ref(21, 3, Some(4), 17, 4096);
+        assert_eq!(roundtrip(&job), job);
+        assert_eq!(job.ref_slot().unwrap(), (17, 4096));
+        assert_eq!(job.job_prepared_id(), Some(4), "prepared tag rides job-refs too");
+        assert_eq!(Frame::job_ref(21, 3, None, 17, 4096).job_prepared_id(), None);
+
+        let stage = Frame::stage_ref(9, 2, 128);
+        assert_eq!(roundtrip(&stage), stage);
+        assert_eq!(stage.ref_slot().unwrap(), (2, 128));
+
+        let resp = Frame::resp_ref(
+            21,
+            3,
+            Duration::from_micros(55),
+            Duration::from_micros(7),
+            18,
+            512,
+        );
+        assert_eq!(roundtrip(&resp), resp);
+        assert_eq!(resp.ref_slot().unwrap(), (18, 512));
+        assert_eq!(resp.compute_us, 55);
+
+        // non-reference kinds carry no slot; malformed descriptors and
+        // oversize declared lengths are clean errors
+        assert!(Frame::job(1, 0, vec![0u8; REF_PAYLOAD_LEN]).ref_slot().is_err());
+        let mut short = Frame::stage_ref(1, 0, 0);
+        short.payload = vec![0u8; 8].into();
+        assert!(short.ref_slot().is_err());
+        let oversize = Frame::stage_ref(1, 0, MAX_PAYLOAD + 1);
+        assert!(oversize.ref_slot().unwrap_err().to_string().contains("exceeds"));
     }
 
     #[test]
@@ -640,7 +831,7 @@ mod tests {
         let ok = FromWorker {
             job_id: 5,
             worker_id: 2,
-            payload: Some(vec![1, 2, 3]),
+            payload: Some(vec![1u8, 2, 3].into()),
             compute: Duration::from_micros(777),
             injected_delay: Duration::from_micros(12),
         };
@@ -663,7 +854,7 @@ mod tests {
         // a response-failed frame smuggling bytes is a protocol error
         let mut forged = Frame::shutdown();
         forged.kind = FrameKind::RespFail;
-        forged.payload = vec![1];
+        forged.payload = vec![1u8].into();
         assert!(forged.into_report().is_err());
         // a job frame is not a report
         assert!(Frame::job(0, 0, Vec::new()).into_report().is_err());

@@ -19,6 +19,7 @@
 
 use super::straggler::{CorruptionModel, StragglerModel};
 use super::transport::{fail_report, FromWorker, ToWorker, WorkerLink};
+use crate::util::bytepool::{note_copy, BytePool, PooledBuf};
 use crate::util::rng::Rng64;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -30,7 +31,7 @@ use std::time::Instant;
 /// out. Implementations in [`crate::coordinator::runner`] (native) and
 /// [`crate::runtime::gr_backend`] (XLA).
 pub trait ShareCompute: Send + Sync {
-    fn compute(&self, worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>>;
+    fn compute(&self, worker_id: usize, payload: &[u8]) -> anyhow::Result<PooledBuf>;
     /// Human-readable backend name for logs.
     fn backend_name(&self) -> String {
         "native".to_string()
@@ -124,10 +125,12 @@ pub fn process_job_faulty(
     let compute_time = t0.elapsed();
     let response = match result.ok() {
         Some(clean) if corrupt.targets(machine_id) => {
-            let mut bytes = clean.clone();
+            // Fault-injection path only: the deliberate copy-out lets the
+            // model mutate bytes without touching the shared clean buffer.
+            let mut bytes = clean.to_vec();
             corrupt.apply(machine_id, rng, &mut bytes, replay.as_deref());
-            *replay = Some(clean);
-            Some(bytes)
+            *replay = Some(clean.to_vec());
+            Some(PooledBuf::from_vec(bytes))
         }
         other => other,
     };
@@ -146,12 +149,20 @@ pub fn process_job_faulty(
 /// byte-for-byte what an unprepared dispatch of the same job would carry —
 /// the compute path downstream is completely unaware of staging.
 ///
+/// The output buffer comes from the global [`BytePool`], and the (inherent,
+/// deliberate) byte duplication is charged to the
+/// [`copied_bytes`](crate::util::bytepool::copied_bytes) probe — prepared
+/// serving is the one hot-path site where a payload-sized copy is part of
+/// the protocol rather than an accident.
+///
 /// [`Share::to_bytes`]: crate::codes::Share::to_bytes
-pub fn assemble_prepared(staged: &[u8], b_half: &[u8]) -> Vec<u8> {
-    let mut full = Vec::with_capacity(staged.len() + b_half.len());
+pub fn assemble_prepared(staged: &[u8], b_half: &[u8]) -> PooledBuf {
+    let total = staged.len() + b_half.len();
+    let mut full = BytePool::global().lease(total);
     full.extend_from_slice(staged);
     full.extend_from_slice(b_half);
-    full
+    note_copy(total);
+    full.freeze()
 }
 
 /// Spawn one in-process worker thread. Returns its join handle.
@@ -184,7 +195,7 @@ pub fn spawn_worker(
     std::thread::Builder::new()
         .name(format!("gr-cdmm-worker-{worker_id}"))
         .spawn(move || {
-            let mut staged: HashMap<u64, Arc<Vec<u8>>> = HashMap::new();
+            let mut staged: HashMap<u64, PooledBuf> = HashMap::new();
             let mut replay: Option<Vec<u8>> = None;
             while let Ok(msg) = rx.recv() {
                 match msg {
@@ -262,14 +273,14 @@ mod tests {
 
     struct Echo;
     impl ShareCompute for Echo {
-        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-            Ok(payload.to_vec())
+        fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<PooledBuf> {
+            Ok(payload.to_vec().into())
         }
     }
 
     struct AlwaysErr;
     impl ShareCompute for AlwaysErr {
-        fn compute(&self, _w: usize, _payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        fn compute(&self, _w: usize, _payload: &[u8]) -> anyhow::Result<PooledBuf> {
             anyhow::bail!("broken backend")
         }
     }
@@ -331,13 +342,13 @@ mod tests {
         );
         // Stage id 3, then a prepared job carrying only the right half:
         // the echo must see staged ++ payload.
-        to_tx.send(ToWorker::Stage { prepared_id: 3, payload: Arc::new(vec![0xA, 0xB]) }).unwrap();
+        to_tx.send(ToWorker::Stage { prepared_id: 3, payload: vec![0xA, 0xB].into() }).unwrap();
         to_tx
             .send(ToWorker::Job {
                 job_id: 1,
                 shard: 0,
                 prepared: Some(3),
-                payload: Arc::new(vec![0xC]),
+                payload: vec![0xC].into(),
             })
             .unwrap();
         let r = from_rx.recv().unwrap();
@@ -348,7 +359,7 @@ mod tests {
                 job_id: 2,
                 shard: 0,
                 prepared: Some(99),
-                payload: Arc::new(vec![0xC]),
+                payload: vec![0xC].into(),
             })
             .unwrap();
         let r = from_rx.recv().unwrap();
@@ -360,7 +371,7 @@ mod tests {
                 job_id: 3,
                 shard: 0,
                 prepared: Some(3),
-                payload: Arc::new(vec![0xC]),
+                payload: vec![0xC].into(),
             })
             .unwrap();
         assert!(from_rx.recv().unwrap().payload.is_none());

@@ -76,6 +76,11 @@ pub enum ServeTransport {
     /// draws match [`ServeTransport::InProcess`] exactly and the only delta
     /// is the wire. Self-contained: no external processes needed.
     TcpLoopback,
+    /// Like [`ServeTransport::TcpLoopback`] but over the shared-memory
+    /// transport ([`crate::coordinator::shm`]): loopback daemons sharing a
+    /// fresh ring directory with the coordinator, payloads out-of-line,
+    /// control frames on TCP. Same straggler draws, same byte accounting.
+    ShmLoopback,
     /// Connect to externally started `gr-cdmm worker` daemons (one
     /// endpoint per worker). The daemons own compute and straggler
     /// injection; both passes reconnect to the same daemons.
@@ -83,11 +88,12 @@ pub enum ServeTransport {
 }
 
 impl ServeTransport {
-    /// Short label for reports (`channel`, `tcp-loopback`, `tcp`).
+    /// Short label for reports (`channel`, `tcp-loopback`, `shm`, `tcp`).
     pub fn label(&self) -> &'static str {
         match self {
             ServeTransport::InProcess => "channel",
             ServeTransport::TcpLoopback => "tcp-loopback",
+            ServeTransport::ShmLoopback => "shm",
             ServeTransport::Connect(_) => "tcp",
         }
     }
@@ -145,7 +151,7 @@ pub struct ServeConfig {
 #[derive(Clone, Debug)]
 pub struct ServeRecord {
     pub scheme: String,
-    /// Transport label (`channel`, `tcp-loopback`, `tcp`).
+    /// Transport label (`channel`, `tcp-loopback`, `shm`, `tcp`).
     pub transport: String,
     pub n_workers: usize,
     pub size: usize,
@@ -205,6 +211,20 @@ pub struct ServeRecord {
     /// Bytes of rejected-corrupt responses (the dedicated
     /// [`ByteCounters`](crate::coordinator::ByteCounters) bucket).
     pub download_rejected_bytes: u64,
+    /// Byte-pool buffer reuses during the pipelined pass (see
+    /// [`crate::util::bytepool`]): with the pool warm from the sequential
+    /// pass, every payload-sized buffer should be a hit.
+    pub pool_hits: u64,
+    /// Byte-pool misses (fresh heap allocations) during the pipelined pass.
+    pub pool_misses: u64,
+    /// Hot-path heap allocations ≥ 64 KiB during the pipelined pass — the
+    /// zero-alloc counter-proof; 0 in the pooled steady state.
+    pub large_allocs: u64,
+    /// Deliberate in-memory payload copies during the pipelined pass
+    /// ([`crate::util::bytepool::copied_bytes`] delta); only the prepared
+    /// A++B reassembly charges this probe, so a plain pipelined pass shows
+    /// 0.
+    pub copied_bytes: u64,
     /// `true` iff every decoded product of both passes matched the local
     /// reference (trivially `true` when verification was disabled).
     pub verified: bool,
@@ -427,6 +447,7 @@ fn make_pool(
                             straggler: cfg.straggler.clone(),
                             corrupt: cfg.corrupt.clone(),
                             seed: cfg.seed,
+                            ..DaemonConfig::default()
                         },
                         1,
                     )
@@ -434,6 +455,28 @@ fn make_pool(
                 .collect::<anyhow::Result<_>>()?;
             let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
             (Coordinator::connect_tcp(&addrs)?, daemons)
+        }
+        ServeTransport::ShmLoopback => {
+            // A fresh ring directory per pool; the transport removes the
+            // ring files at shutdown (the tiny directory itself is left to
+            // the OS temp cleaner).
+            let dir = crate::coordinator::shm::unique_ring_dir("serve")?;
+            let daemons: Vec<WorkerDaemon> = (0..n_workers)
+                .map(|_| {
+                    WorkerDaemon::spawn_local_cfg(
+                        Arc::clone(&backend),
+                        DaemonConfig {
+                            straggler: cfg.straggler.clone(),
+                            corrupt: cfg.corrupt.clone(),
+                            seed: cfg.seed,
+                            shm_dir: Some(dir.clone()),
+                        },
+                        1,
+                    )
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+            (Coordinator::connect_shm(&addrs, &dir)?, daemons)
         }
         // In-process and --connect are exactly the runner's two pool
         // flavors; the endpoint-count validation lives there. A corrupting
@@ -574,6 +617,10 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
             verify_trials: stats.trials,
             leave_one_out_decodes: stats.loo,
             download_rejected_bytes: counters.download_rejected_total(),
+            pool_hits: 0,
+            pool_misses: 0,
+            large_allocs: 0,
+            copied_bytes: 0,
             verified: ok,
         });
     }
@@ -588,8 +635,19 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
 
     let pipe_scheme = registry::build(&cfg.scheme, &reg_cfg)?;
     let (mut pipe_coord, pipe_daemons) = make_pool(cfg, &pipe_scheme)?;
+    // Memory-discipline probes around the steady-state (pipelined) pass:
+    // the sequential pass above doubles as pool warm-up, so the deltas
+    // here are what a long-running server would see per batch of jobs.
+    let pool_before = crate::util::bytepool::BytePool::global().stats();
+    let large_before = crate::util::bytepool::large_allocs();
+    let copied_before = crate::util::bytepool::copied_bytes();
     let (pipe_elapsed_s, pipe_ok) =
         run_pipelined(pipe_scheme.as_ref(), &mut pipe_coord, &requests, cfg.inflight)?;
+    let pool_after = crate::util::bytepool::BytePool::global().stats();
+    let pool_hits = pool_after.hits.saturating_sub(pool_before.hits);
+    let pool_misses = pool_after.misses.saturating_sub(pool_before.misses);
+    let large_allocs = crate::util::bytepool::large_allocs().saturating_sub(large_before);
+    let copied_bytes = crate::util::bytepool::copied_bytes().saturating_sub(copied_before);
     let speculative_dispatches = pipe_coord.counters().speculative_total();
     let pipe_upload_bytes = pipe_coord.counters().upload_total();
     pipe_coord.shutdown();
@@ -685,6 +743,10 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<ServeRecord> {
         verify_trials: 0,
         leave_one_out_decodes: 0,
         download_rejected_bytes: 0,
+        pool_hits,
+        pool_misses,
+        large_allocs,
+        copied_bytes,
         verified: seq_ok && pipe_ok && prep_ok,
     })
 }
@@ -728,6 +790,20 @@ pub fn render(records: &[ServeRecord]) -> String {
                 } else {
                     "-".to_string()
                 },
+                if r.verify_products {
+                    "-".to_string()
+                } else {
+                    // Pool hit ratio over the steady-state pass: hits out of
+                    // total leases. 100% hits + 0 large allocs is the
+                    // zero-alloc proof surfaced to the operator.
+                    format!("{}/{}", r.pool_hits, r.pool_hits + r.pool_misses)
+                },
+                if r.verify_products { "-".to_string() } else { r.large_allocs.to_string() },
+                if r.verify_products || r.jobs == 0 {
+                    "-".to_string()
+                } else {
+                    (r.copied_bytes / r.jobs as u64).to_string()
+                },
                 r.verified.to_string(),
             ]
         })
@@ -747,6 +823,9 @@ pub fn render(records: &[ServeRecord]) -> String {
             "plan-cache hits",
             "verified jobs/s",
             "corrupt/quar",
+            "pool hits",
+            "large allocs",
+            "copied/job",
             "verified",
         ],
         &rows,
@@ -789,6 +868,10 @@ impl ServeRecord {
             .set("verify_trials", self.verify_trials)
             .set("leave_one_out_decodes", self.leave_one_out_decodes)
             .set("download_rejected_bytes", self.download_rejected_bytes)
+            .set("pool_hits", self.pool_hits)
+            .set("pool_misses", self.pool_misses)
+            .set("large_allocs", self.large_allocs)
+            .set("copied_bytes", self.copied_bytes)
             .set("verified", self.verified)
     }
 }
@@ -848,6 +931,20 @@ mod tests {
         let rec = run(&cfg).unwrap();
         assert!(rec.verified, "every TCP-served job must decode correctly");
         assert_eq!(rec.transport, "tcp-loopback");
+        assert_eq!(rec.plan_cache_hits + rec.plan_cache_misses, 6);
+    }
+
+    #[test]
+    fn serving_over_shm_loopback_verifies() {
+        // Loopback daemons with the shared-memory data plane: control
+        // frames ride TCP, payloads ride per-worker file-backed rings.
+        // Decode verification inside `run` certifies the ring path is
+        // bit-identical to the inline one.
+        let mut cfg = small_cfg("ep-rmfe-1");
+        cfg.transport = ServeTransport::ShmLoopback;
+        let rec = run(&cfg).unwrap();
+        assert!(rec.verified, "every shm-served job must decode correctly");
+        assert_eq!(rec.transport, "shm");
         assert_eq!(rec.plan_cache_hits + rec.plan_cache_misses, 6);
     }
 

@@ -13,7 +13,7 @@
 //!              [--connect HOST:PORT,HOST:PORT,...]
 //! gr-cdmm serve --scheme ep-rmfe-1 --workers 8 --size 128 --jobs 16 --inflight 4
 //!              [--straggler none|slow|exp|fail] [--no-verify] [--seed k] [--out results]
-//!              [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
+//!              [--transport channel|tcp-loopback|shm] [--connect HOST:PORT,...]
 //!              [--speculate] [--elastic] [--prepared]
 //!              [--corrupt MODEL[:ids]] [--verify-products]
 //! gr-cdmm worker --listen HOST:PORT --scheme ep-rmfe-1 --workers 8
@@ -79,7 +79,7 @@ USAGE:
                [--connect HOST:PORT,HOST:PORT,...]
   gr-cdmm serve --scheme NAME --workers 4|8|16|32 --size 128 --jobs 16 --inflight 4
                [--straggler none|slow|exp|fail] [--no-verify] [--seed K] [--out DIR]
-               [--transport channel|tcp-loopback] [--connect HOST:PORT,...]
+               [--transport channel|tcp-loopback|shm] [--connect HOST:PORT,...]
                [--speculate] [--elastic] [--prepared]
                [--corrupt MODEL[:ids]] [--verify-products]
   gr-cdmm worker --listen HOST:PORT --scheme NAME --workers 4|8|16|32
@@ -96,7 +96,10 @@ short `--connect` list downgrade to the largest scheme preset its live
 daemons can serve instead of erroring. `--prepared` fixes one A across the
 stream and adds an encode-once pass: A's share halves are staged on the
 workers once and every job ships only its B-halves (the run asserts zero
-steady-state A-encodes and B-only per-job upload).
+steady-state A-encodes and B-only per-job upload). `--transport shm`
+spawns loopback daemons whose control frames ride TCP while payloads move
+out-of-line through per-worker file-backed shared-memory rings (same-host
+only; oversize payloads fall back to inline frames automatically).
 
 Byzantine faults: `--corrupt MODEL[:ids]` injects corrupt responses at the
 listed workers (models: bit-flip | garbage-payload | stale-replay |
@@ -241,9 +244,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ),
         (Some(addrs), None) => ServeTransport::Connect(addrs),
         (None, Some("tcp-loopback")) => ServeTransport::TcpLoopback,
+        (None, Some("shm")) => ServeTransport::ShmLoopback,
         (None, Some("channel")) | (None, None) => ServeTransport::InProcess,
         (None, Some(other)) => {
-            anyhow::bail!("unknown --transport `{other}` (channel | tcp-loopback | --connect)")
+            anyhow::bail!("unknown --transport `{other}` (channel | tcp-loopback | shm | --connect)")
         }
     };
     let cfg = serving::ServeConfig {
@@ -346,7 +350,12 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
-    daemon::run(listen, compute, DaemonConfig { straggler, corrupt, seed }, max_conns)
+    daemon::run(
+        listen,
+        compute,
+        DaemonConfig { straggler, corrupt, seed, ..DaemonConfig::default() },
+        max_conns,
+    )
 }
 
 fn write_out(

@@ -245,10 +245,17 @@ impl<E: Clone + PartialEq> Matrix<E> {
     /// through [`Ring::write_slice`] — a single block copy for `Zq`.
     pub fn to_bytes<R: Ring<Elem = E>>(&self, ring: &R) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.byte_len(ring));
+        self.write_bytes_into(ring, &mut out);
+        out
+    }
+
+    /// Append the serialized form to a borrowed buffer (the pool-leased
+    /// zero-copy path — see [`crate::util::bytepool`]).
+    pub fn write_bytes_into<R: Ring<Elem = E>>(&self, ring: &R, out: &mut Vec<u8>) {
+        out.reserve(self.byte_len(ring));
         out.extend_from_slice(&(self.rows as u64).to_le_bytes());
         out.extend_from_slice(&(self.cols as u64).to_le_bytes());
-        ring.write_slice(&self.data, &mut out);
-        out
+        ring.write_slice(&self.data, out);
     }
 
     /// Deserialize, validating every length before any allocation or read:

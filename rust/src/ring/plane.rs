@@ -769,12 +769,21 @@ impl<B: Ring> PlaneMatrix<B> {
     /// The element payload moves through [`Ring::write_slice`] — a single
     /// block copy for `Zq` planes, per-element for structured bases.
     pub fn to_bytes<E: PlaneRing<Base = B>>(&self, ext: &E) -> Vec<u8> {
-        let base = ext.plane_base();
         let mut out = Vec::with_capacity(self.byte_len(ext));
+        self.write_bytes_into(ext, &mut out);
+        out
+    }
+
+    /// Append the serialized form to a **borrowed** buffer — the zero-copy
+    /// hot path's entry point: the caller leases `out` from the
+    /// [`crate::util::bytepool::BytePool`] (sized via [`Self::byte_len`])
+    /// and this writes in place, so serialization never allocates.
+    pub fn write_bytes_into<E: PlaneRing<Base = B>>(&self, ext: &E, out: &mut Vec<u8>) {
+        let base = ext.plane_base();
+        out.reserve(self.byte_len(ext));
         out.extend_from_slice(&(self.rows as u64).to_le_bytes());
         out.extend_from_slice(&(self.cols as u64).to_le_bytes());
-        base.write_slice(&self.data, &mut out);
-        out
+        base.write_slice(&self.data, out);
     }
 
     /// Read one matrix from `buf` starting at `*pos`, advancing `*pos`.

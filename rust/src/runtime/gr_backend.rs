@@ -143,7 +143,11 @@ fn ext_modulus_u64(ext: &Extension<Zq>) -> Vec<u64> {
 }
 
 impl ShareCompute for XlaShareCompute {
-    fn compute(&self, _worker_id: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+    fn compute(
+        &self,
+        _worker_id: usize,
+        payload: &[u8],
+    ) -> anyhow::Result<crate::util::bytepool::PooledBuf> {
         let share: Share<Extension<Zq>> = Share::from_bytes(&self.ext, payload)?;
         anyhow::ensure!(
             share.a.rows == self.t && share.a.cols == self.r && share.b.cols == self.s,
@@ -172,7 +176,9 @@ impl ShareCompute for XlaShareCompute {
             m * self.t * self.s
         );
         let c = PlaneMatrix::<Zq> { rows: self.t, cols: self.s, planes: m, data: out };
-        Ok(c.to_bytes(&self.ext))
+        let mut lease = crate::util::bytepool::BytePool::global().lease(c.byte_len(&self.ext));
+        c.write_bytes_into(&self.ext, &mut lease);
+        Ok(lease.freeze())
     }
 
     fn backend_name(&self) -> String {

@@ -1,0 +1,539 @@
+//! Size-bucketed, ref-counted **payload buffer pool** — the allocator
+//! behind the zero-copy hot path.
+//!
+//! Steady-state serving must perform *zero per-job large allocations*: every
+//! byte buffer that exists per job (encoded shares, wire-frame payloads read
+//! off a socket, worker responses, decoded outputs) is leased from a
+//! process-wide pool and returned on last drop, so after a short warmup the
+//! allocator is out of the loop entirely. The proof follows the pattern of
+//! [`crate::ring::plane::scalar_table_builds`] (PR 4's zero-rebuild probe):
+//! a process-wide [`large_allocs`] counter is bumped on every pool **miss**
+//! whose backing allocation is ≥ [`LARGE_ALLOC_THRESHOLD`], and the
+//! steady-state integration probe asserts its delta is zero across a warmed
+//! serving stream (`tests/integration_alloc.rs`).
+//!
+//! **Size classes.** Buffers live in power-of-two buckets from
+//! [`MIN_BUCKET`] (4 KiB) to [`MAX_BUCKET`] (1 GiB, matching the wire-level
+//! `MAX_PAYLOAD` guard). A lease for `len` bytes draws from the bucket of
+//! `len.next_power_of_two()`; the buffer's *capacity* is the bucket size, so
+//! any later lease of a similar length reuses it regardless of exact shape —
+//! this is what makes mixed-shape streams hit after one warm pass per
+//! bucket.
+//!
+//! **Lifecycle.** [`BytePool::lease`] hands out a [`BufLease`]: an owned,
+//! writable `Vec<u8>` view the serializers fill (`PlaneMatrix::
+//! write_bytes_into` and friends append into it). [`BufLease::freeze`] seals
+//! it into a [`PooledBuf`]: a cheaply clonable, `Arc`-backed immutable byte
+//! buffer. Cloning a `PooledBuf` never copies — N speculative sends of one
+//! payload cost one buffer — and when the last clone drops, the storage
+//! returns to its bucket (bounded by the retention cap; surplus buffers are
+//! simply freed).
+//!
+//! **Knobs.** `GR_CDMM_POOL_CAP` sets the per-bucket retention cap
+//! (default [`DEFAULT_POOL_CAP`]). `GR_CDMM_POOL_CAP=0` is the escape
+//! hatch: pooling is disabled, every lease is a fresh allocation (and is
+//! counted — the bench's pooled-vs-unpooled columns price exactly this).
+//! [`BytePool::set_cap`] adjusts the same knob at runtime for in-process
+//! A/B comparisons.
+//!
+//! **Copy probe.** Alongside the allocation probe, [`copied_bytes`] counts
+//! deliberate in-memory payload duplications (today: only the prepared-path
+//! A+B reassembly, which must produce a contiguous share for the kernel).
+//! The steady non-prepared hot path performs none; the integration probe
+//! asserts that too.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Pool misses allocating at least this many bytes count toward
+/// [`large_allocs`]. 64 KiB: well above control-plane noise (frames,
+/// strings), well below any real share payload.
+pub const LARGE_ALLOC_THRESHOLD: usize = 64 * 1024;
+
+/// Smallest size class. Leases below this draw from the 4 KiB bucket.
+pub const MIN_BUCKET: usize = 4096;
+
+/// Largest size class — one bucket per power of two up to 1 GiB, matching
+/// the wire protocol's `MAX_PAYLOAD` guard; a frame that passes header
+/// validation always fits a bucket, and anything larger was already
+/// rejected by the oversize error path.
+pub const MAX_BUCKET: usize = 1 << 30;
+
+/// Default per-bucket retention cap (buffers kept idle per size class).
+pub const DEFAULT_POOL_CAP: usize = 32;
+
+/// Number of power-of-two size classes: 2^12 (4 KiB) ..= 2^30 (1 GiB).
+const N_BUCKETS: usize = 19;
+
+static LARGE_ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of hot-path allocations ≥ [`LARGE_ALLOC_THRESHOLD`]
+/// (pool misses and unpooled fallbacks at instrumented sites). Steady-state
+/// serving must not move this — the zero-alloc analogue of
+/// [`crate::ring::plane::scalar_table_builds`].
+///
+/// Scope note (kept honest): the probe instruments the **byte-buffer** hot
+/// path — payload leases, frame reads, response and decode buffers — not
+/// every allocation in the process. The complementary strong assertion at
+/// small sizes is the pool hit-rate itself: 100% hits means *no* payload
+/// buffer of any size was freshly allocated, large or not.
+pub fn large_allocs() -> u64 {
+    LARGE_ALLOCS.load(Ordering::Relaxed)
+}
+
+fn note_alloc(len: usize) {
+    if len >= LARGE_ALLOC_THRESHOLD {
+        LARGE_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Process-wide count of bytes deliberately duplicated in memory on the
+/// payload path (see module docs). Zero per job on the steady non-prepared
+/// path; prepared jobs pay exactly one A+B reassembly per compute.
+pub fn copied_bytes() -> u64 {
+    COPIED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Record an in-memory payload duplication of `len` bytes.
+pub fn note_copy(len: usize) {
+    COPIED_BYTES.fetch_add(len as u64, Ordering::Relaxed);
+}
+
+/// Bucket index for a lease of `len` bytes (`len` ≤ [`MAX_BUCKET`]).
+fn bucket_index(len: usize) -> usize {
+    let class = len.max(MIN_BUCKET).next_power_of_two();
+    (class.trailing_zeros() - MIN_BUCKET.trailing_zeros()) as usize
+}
+
+/// The backing capacity a lease of `len` bytes receives.
+pub fn bucket_size(len: usize) -> usize {
+    len.max(MIN_BUCKET).next_power_of_two()
+}
+
+/// Point-in-time pool counters (monotone except `outstanding`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Leases served from a bucket (no allocation).
+    pub hits: u64,
+    /// Leases that had to allocate (bucket empty, pooling disabled, or
+    /// oversize).
+    pub misses: u64,
+    /// Pooled buffers currently leased out (live `BufLease`s +
+    /// `PooledBuf`s).
+    pub outstanding: u64,
+}
+
+struct PoolInner {
+    buckets: [Mutex<Vec<Vec<u8>>>; N_BUCKETS],
+    cap: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    outstanding: AtomicU64,
+}
+
+/// Handle to a buffer pool; cloning shares the pool. See module docs.
+#[derive(Clone)]
+pub struct BytePool {
+    inner: Arc<PoolInner>,
+}
+
+impl BytePool {
+    /// New pool with the given per-bucket retention cap (`0` disables
+    /// pooling: every lease allocates, nothing is retained).
+    pub fn new(cap: usize) -> BytePool {
+        BytePool {
+            inner: Arc::new(PoolInner {
+                buckets: std::array::from_fn(|_| Mutex::new(Vec::new())),
+                cap: AtomicUsize::new(cap),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                outstanding: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// The process-wide pool every hot-path site leases from. Capacity from
+    /// `GR_CDMM_POOL_CAP` at first use (default [`DEFAULT_POOL_CAP`]);
+    /// adjustable later via [`BytePool::set_cap`].
+    pub fn global() -> &'static BytePool {
+        static GLOBAL: OnceLock<BytePool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cap = std::env::var("GR_CDMM_POOL_CAP")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(DEFAULT_POOL_CAP);
+            BytePool::new(cap)
+        })
+    }
+
+    /// Current per-bucket retention cap (`0` = pooling disabled).
+    pub fn cap(&self) -> usize {
+        self.inner.cap.load(Ordering::Relaxed)
+    }
+
+    /// Adjust the retention cap at runtime. Setting `0` disables pooling
+    /// for subsequent leases (already-pooled idle buffers are kept until
+    /// their bucket is next touched; outstanding buffers still return).
+    pub fn set_cap(&self, cap: usize) {
+        self.inner.cap.store(cap, Ordering::Relaxed);
+    }
+
+    /// Lease a writable buffer with capacity ≥ `len` (cleared, length 0).
+    ///
+    /// `len` ≤ [`MAX_BUCKET`] draws from the matching size class; larger
+    /// requests — which the wire layer already rejects — fall back to an
+    /// unpooled allocation and count as a miss.
+    pub fn lease(&self, len: usize) -> BufLease {
+        if self.cap() == 0 || len > MAX_BUCKET {
+            self.inner.misses.fetch_add(1, Ordering::Relaxed);
+            note_alloc(len);
+            return BufLease { vec: Some(Vec::with_capacity(len)), pool: None };
+        }
+        let idx = bucket_index(len);
+        let recycled = self.inner.buckets[idx].lock().unwrap().pop();
+        let vec = match recycled {
+            Some(mut v) => {
+                v.clear();
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                let size = bucket_size(len);
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                note_alloc(size);
+                Vec::with_capacity(size)
+            }
+        };
+        self.inner.outstanding.fetch_add(1, Ordering::Relaxed);
+        BufLease { vec: Some(vec), pool: Some(self.clone()) }
+    }
+
+    /// Counters snapshot.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            outstanding: self.inner.outstanding.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Return a leased buffer's storage to its bucket (or free it if the
+    /// bucket is at cap / pooling is disabled).
+    fn give_back(&self, vec: Vec<u8>) {
+        self.inner.outstanding.fetch_sub(1, Ordering::Relaxed);
+        let cap = self.cap();
+        if cap == 0 || vec.capacity() < MIN_BUCKET {
+            return; // dropped
+        }
+        // Floor the capacity to the largest class it fully covers, so a hit
+        // drawn from bucket i always has capacity ≥ that bucket's size (the
+        // allocator may round capacities up, never down).
+        let capped = vec.capacity().min(MAX_BUCKET);
+        let class = 1usize << (usize::BITS - 1 - capped.leading_zeros());
+        let mut bucket = self.inner.buckets[bucket_index(class)].lock().unwrap();
+        if bucket.len() < cap {
+            bucket.push(vec);
+        }
+    }
+}
+
+impl fmt::Debug for BytePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        f.debug_struct("BytePool")
+            .field("cap", &self.cap())
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .field("outstanding", &s.outstanding)
+            .finish()
+    }
+}
+
+/// An exclusively held, writable pool lease. Deref's to `Vec<u8>` so the
+/// serializers can append in place; [`BufLease::freeze`] seals it into a
+/// shareable [`PooledBuf`]. Dropping an unfrozen lease returns the storage.
+pub struct BufLease {
+    vec: Option<Vec<u8>>,
+    pool: Option<BytePool>,
+}
+
+impl BufLease {
+    /// Seal the lease into an immutable, cheaply clonable buffer.
+    pub fn freeze(mut self) -> PooledBuf {
+        let vec = self.vec.take().expect("lease not yet frozen");
+        let pool = self.pool.take();
+        PooledBuf { inner: Arc::new(PooledInner { vec, pool }) }
+    }
+}
+
+impl Deref for BufLease {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        self.vec.as_ref().expect("lease not yet frozen")
+    }
+}
+
+impl DerefMut for BufLease {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        self.vec.as_mut().expect("lease not yet frozen")
+    }
+}
+
+impl Drop for BufLease {
+    fn drop(&mut self) {
+        if let (Some(vec), Some(pool)) = (self.vec.take(), self.pool.take()) {
+            pool.give_back(vec);
+        }
+    }
+}
+
+struct PooledInner {
+    vec: Vec<u8>,
+    pool: Option<BytePool>,
+}
+
+impl Drop for PooledInner {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.give_back(std::mem::take(&mut self.vec));
+        }
+    }
+}
+
+/// Immutable, `Arc`-backed byte buffer whose storage returns to its pool on
+/// last drop. Cloning shares the bytes (never copies) — the unit of payload
+/// ownership everywhere downstream of encode: `Frame`s, `ToWorker` sends,
+/// staged operands, collected responses, decode outputs.
+#[derive(Clone)]
+pub struct PooledBuf {
+    inner: Arc<PooledInner>,
+}
+
+impl PooledBuf {
+    /// Wrap an existing `Vec` without pooling (its storage is freed on last
+    /// drop, not recycled). The bridge for cold-path and test callers.
+    pub fn from_vec(vec: Vec<u8>) -> PooledBuf {
+        PooledBuf { inner: Arc::new(PooledInner { vec, pool: None }) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.vec.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.vec.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.inner.vec
+    }
+
+    /// Copy out to an owned `Vec` (a deliberate copy; cold paths only).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.inner.vec.clone()
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.inner.vec
+    }
+}
+
+impl AsRef<[u8]> for PooledBuf {
+    fn as_ref(&self) -> &[u8] {
+        &self.inner.vec
+    }
+}
+
+impl From<Vec<u8>> for PooledBuf {
+    fn from(vec: Vec<u8>) -> PooledBuf {
+        PooledBuf::from_vec(vec)
+    }
+}
+
+impl From<&[u8]> for PooledBuf {
+    fn from(bytes: &[u8]) -> PooledBuf {
+        PooledBuf::from_vec(bytes.to_vec())
+    }
+}
+
+impl Default for PooledBuf {
+    fn default() -> PooledBuf {
+        PooledBuf::from_vec(Vec::new())
+    }
+}
+
+impl fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.inner.vec, f)
+    }
+}
+
+impl PartialEq for PooledBuf {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        self.inner.vec == other.inner.vec
+    }
+}
+
+impl Eq for PooledBuf {}
+
+impl PartialEq<Vec<u8>> for PooledBuf {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.inner.vec == *other
+    }
+}
+
+impl PartialEq<PooledBuf> for Vec<u8> {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        *self == other.inner.vec
+    }
+}
+
+impl PartialEq<[u8]> for PooledBuf {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.inner.vec == other
+    }
+}
+
+impl PartialEq<&[u8]> for PooledBuf {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.inner.vec == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_and_size_classes() {
+        assert_eq!(bucket_size(0), MIN_BUCKET);
+        assert_eq!(bucket_size(1), MIN_BUCKET);
+        assert_eq!(bucket_size(4096), 4096);
+        assert_eq!(bucket_size(4097), 8192);
+        assert_eq!(bucket_size(1 << 20), 1 << 20);
+        assert_eq!(bucket_index(MIN_BUCKET), 0);
+        assert_eq!(bucket_index(MAX_BUCKET), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn lease_freeze_drop_recycles_storage() {
+        let pool = BytePool::new(8);
+        let mut lease = pool.lease(100);
+        lease.extend_from_slice(&[1, 2, 3]);
+        let buf = lease.freeze();
+        assert_eq!(&buf[..], &[1, 2, 3]);
+        assert_eq!(pool.stats(), PoolStats { hits: 0, misses: 1, outstanding: 1 });
+        let clone = buf.clone();
+        drop(buf);
+        assert_eq!(
+            pool.stats().outstanding,
+            1,
+            "storage held while any clone lives"
+        );
+        drop(clone);
+        assert_eq!(pool.stats().outstanding, 0);
+        // Second lease of a similar size reuses the same storage: a hit.
+        let lease2 = pool.lease(200);
+        assert_eq!(pool.stats(), PoolStats { hits: 1, misses: 1, outstanding: 1 });
+        assert!(lease2.is_empty(), "recycled buffer comes back cleared");
+        assert!(lease2.capacity() >= 200);
+    }
+
+    #[test]
+    fn dropping_an_unfrozen_lease_returns_storage() {
+        let pool = BytePool::new(8);
+        drop(pool.lease(50));
+        assert_eq!(pool.stats().outstanding, 0);
+        pool.lease(50);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn cap_zero_disables_pooling() {
+        let pool = BytePool::new(0);
+        let a = pool.lease(64).freeze();
+        drop(a);
+        let _b = pool.lease(64);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (0, 2), "every lease is a miss");
+        assert_eq!(s.outstanding, 0, "unpooled leases are not tracked");
+    }
+
+    #[test]
+    fn retention_cap_bounds_idle_buffers() {
+        let pool = BytePool::new(2);
+        let bufs: Vec<PooledBuf> = (0..4).map(|_| pool.lease(10).freeze()).collect();
+        drop(bufs);
+        // Only 2 retained; next 4 leases: 2 hits then 2 more misses.
+        let _l: Vec<BufLease> = (0..4).map(|_| pool.lease(10)).collect();
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (2, 6));
+    }
+
+    #[test]
+    fn large_alloc_probe_counts_only_big_misses() {
+        let pool = BytePool::new(4);
+        let before = large_allocs();
+        drop(pool.lease(1024)); // 4 KiB class: below threshold
+        assert_eq!(large_allocs(), before, "small miss not counted");
+        let big = pool.lease(LARGE_ALLOC_THRESHOLD).freeze();
+        assert_eq!(large_allocs(), before + 1, "large miss counted");
+        drop(big);
+        drop(pool.lease(LARGE_ALLOC_THRESHOLD));
+        assert_eq!(large_allocs(), before + 1, "pool hit is not an allocation");
+    }
+
+    #[test]
+    fn copy_probe_accumulates() {
+        let before = copied_bytes();
+        note_copy(10);
+        note_copy(5);
+        assert_eq!(copied_bytes(), before + 15);
+    }
+
+    #[test]
+    fn from_vec_is_unpooled_and_compares_by_bytes() {
+        let buf = PooledBuf::from_vec(vec![9, 9]);
+        let other: PooledBuf = vec![9u8, 9].into();
+        assert_eq!(buf, other);
+        assert_eq!(buf, vec![9u8, 9]);
+        assert_eq!(vec![9u8, 9], buf);
+        assert_eq!(buf, [9u8, 9][..]);
+        assert_eq!(buf.to_vec(), vec![9, 9]);
+        assert_eq!(format!("{:?}", buf), "[9, 9]");
+    }
+
+    #[test]
+    fn top_bucket_math() {
+        // Oversize leases (> MAX_BUCKET) take the unpooled branch; the
+        // largest pooled class is exactly MAX_BUCKET.
+        assert_eq!(bucket_index(MAX_BUCKET - 1), N_BUCKETS - 1);
+        assert_eq!(bucket_index(MAX_BUCKET), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn set_cap_runtime_toggle() {
+        let pool = BytePool::new(4);
+        drop(pool.lease(10).freeze());
+        pool.set_cap(0);
+        drop(pool.lease(10)); // unpooled: miss even though a buffer idles
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (0, 2));
+        pool.set_cap(4);
+        drop(pool.lease(10));
+        assert_eq!(pool.stats().hits, 1, "re-enabled pool serves the idle buffer");
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = BytePool::global();
+        let b = BytePool::global();
+        assert!(Arc::ptr_eq(&a.inner, &b.inner));
+    }
+}

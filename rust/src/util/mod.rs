@@ -1,10 +1,11 @@
 //! Small self-contained utilities: PRNG, micro-bench harness, CLI parsing,
-//! JSON emission, scoped-thread parallelism. The offline build environment
-//! ships no `rand`/`criterion`/`clap`/`serde`/`rayon` — these are
-//! deliberately minimal in-repo replacements.
+//! JSON emission, scoped-thread parallelism, pooled payload buffers. The
+//! offline build environment ships no `rand`/`criterion`/`clap`/`serde`/
+//! `rayon` — these are deliberately minimal in-repo replacements.
 
 pub mod rng;
 pub mod bench;
+pub mod bytepool;
 pub mod cli;
 pub mod json;
 pub mod parallel;

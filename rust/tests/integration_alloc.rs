@@ -1,0 +1,274 @@
+//! Memory-discipline integration: steady-state serving must perform **zero
+//! per-job large allocations and zero redundant payload copies** — the
+//! zero-copy analogue of the decode path's `scalar_table_builds()` probe.
+//!
+//! The proof is counter-based: after two warm-up passes populate the global
+//! byte pool, 20 mixed-shape jobs must show a zero pool-miss delta (100%
+//! hit rate), a zero `large_allocs()` delta and a zero `copied_bytes()`
+//! delta — on every transport (in-process channel, TCP loopback, shm
+//! rings) and at both serial and parallel encode thread counts. A final
+//! triple run asserts the per-job byte ledger is identical across all
+//! three transports, and a rogue shm peer degrades to fail-stop through
+//! the public coordinator API.
+//!
+//! Every test locks one global mutex: the pool and its counters are
+//! process-wide, so concurrent tests would pollute each other's deltas.
+
+use gr_cdmm::codes::registry::{self, SchemeConfig};
+use gr_cdmm::codes::DynScheme;
+use gr_cdmm::coordinator::wire::{self, Frame, FrameKind};
+use gr_cdmm::coordinator::{
+    shm, Coordinator, DaemonConfig, NativeCompute, ShareCompute, StragglerModel, WorkerDaemon,
+};
+use gr_cdmm::ring::matrix::Matrix;
+use gr_cdmm::ring::zq::Zq;
+use gr_cdmm::util::bytepool::{self, BytePool};
+use gr_cdmm::util::parallel::with_threads;
+use gr_cdmm::util::rng::Rng64;
+use std::io::BufReader;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serializes every test in this binary: the byte pool, its hit/miss
+/// counters and the `large_allocs`/`copied_bytes` probes are global.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn pool_guard() -> MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The mixed job shapes: distinct sizes ⇒ distinct payload buckets, so a
+/// pool that only survived uniform traffic would be caught here.
+const SHAPES: [usize; 3] = [8, 16, 24];
+
+/// Which transport backs the pool under test.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Kind {
+    Channel,
+    Tcp,
+    Shm,
+}
+
+/// A live pool plus the daemons (if any) backing it.
+struct Pool {
+    coord: Coordinator,
+    daemons: Vec<WorkerDaemon>,
+}
+
+fn make_pool(kind: Kind, scheme: &Arc<dyn DynScheme>, seed: u64) -> Pool {
+    let n = 8;
+    let backend: Arc<dyn ShareCompute> = Arc::new(NativeCompute::new(Arc::clone(scheme)));
+    match kind {
+        Kind::Channel => Pool {
+            coord: Coordinator::new(
+                n,
+                Arc::new(NativeCompute::new(Arc::clone(scheme))),
+                StragglerModel::None,
+                seed,
+            ),
+            daemons: Vec::new(),
+        },
+        Kind::Tcp => {
+            let daemons: Vec<WorkerDaemon> = (0..n)
+                .map(|_| {
+                    WorkerDaemon::spawn_local(Arc::clone(&backend), StragglerModel::None, seed, 1)
+                        .unwrap()
+                })
+                .collect();
+            let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+            Pool { coord: Coordinator::connect_tcp(&addrs).unwrap(), daemons }
+        }
+        Kind::Shm => {
+            let dir = shm::unique_ring_dir("alloc").unwrap();
+            let daemons: Vec<WorkerDaemon> = (0..n)
+                .map(|_| {
+                    WorkerDaemon::spawn_local_cfg(
+                        Arc::clone(&backend),
+                        DaemonConfig {
+                            straggler: StragglerModel::None,
+                            seed,
+                            shm_dir: Some(dir.clone()),
+                            ..DaemonConfig::default()
+                        },
+                        1,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let addrs: Vec<String> = daemons.iter().map(WorkerDaemon::addr).collect();
+            Pool { coord: Coordinator::connect_shm(&addrs, &dir).unwrap(), daemons }
+        }
+    }
+}
+
+impl Pool {
+    fn finish(mut self) {
+        self.coord.shutdown();
+        for daemon in self.daemons {
+            daemon.join().unwrap();
+        }
+    }
+}
+
+/// Run one submit-wait-decode job of the given size and assert the product.
+fn one_job(scheme: &Arc<dyn DynScheme>, coord: &mut Coordinator, size: usize, rng: &mut Rng64) {
+    let base = Zq::z2e(64);
+    let a = Matrix::random(&base, size, size, rng);
+    let b = Matrix::random(&base, size, size, rng);
+    let expected = Matrix::matmul(&base, &a, &b);
+    let payloads = scheme.encode_bytes(&[a.to_bytes(&base)], &[b.to_bytes(&base)]).unwrap();
+    let handle = coord.submit(payloads, scheme.recovery_threshold()).unwrap();
+    let (collected, _) = handle.wait().unwrap();
+    let responses: Vec<(usize, &[u8])> =
+        collected.iter().map(|c| (c.worker_id, c.payload.as_slice())).collect();
+    let out = scheme.decode_bytes(&responses).unwrap();
+    assert_eq!(Matrix::from_bytes(&base, &out[0]).unwrap(), expected, "size {size}");
+}
+
+/// The zero-alloc proof for one transport: two warm-up passes over the
+/// mixed shapes, then 20 measured jobs with zero misses, zero large
+/// allocations and zero copies.
+fn assert_zero_alloc_steady_state(kind: Kind, seed: u64) {
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let mut rng = Rng64::seeded(seed);
+    let mut pool = make_pool(kind, &scheme, seed);
+
+    // Warm-up: two passes over every shape populate each payload bucket
+    // with enough buffers for the steady state (shares out, responses in).
+    for _ in 0..2 {
+        for &size in &SHAPES {
+            one_job(&scheme, &mut pool.coord, size, &mut rng);
+        }
+    }
+    // Surplus responses of the last warm-up job may still be in flight;
+    // give them a moment to land and return their buffers to the pool.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let stats_before = BytePool::global().stats();
+    let large_before = bytepool::large_allocs();
+    let copied_before = bytepool::copied_bytes();
+    for job in 0..20 {
+        one_job(&scheme, &mut pool.coord, SHAPES[job % SHAPES.len()], &mut rng);
+    }
+    let stats_after = BytePool::global().stats();
+    let miss_delta = stats_after.misses - stats_before.misses;
+    let hit_delta = stats_after.hits - stats_before.hits;
+    assert_eq!(
+        miss_delta, 0,
+        "{kind:?}: steady state must lease every buffer from the pool \
+         ({hit_delta} hits, {miss_delta} misses)"
+    );
+    assert!(hit_delta > 0, "{kind:?}: the measured jobs must actually lease buffers");
+    assert_eq!(
+        bytepool::large_allocs() - large_before,
+        0,
+        "{kind:?}: zero per-job large allocations in steady state"
+    );
+    assert_eq!(
+        bytepool::copied_bytes() - copied_before,
+        0,
+        "{kind:?}: zero redundant payload copies in steady state"
+    );
+    pool.finish();
+}
+
+#[test]
+fn channel_steady_state_is_zero_alloc() {
+    let _g = pool_guard();
+    with_threads(1, || assert_zero_alloc_steady_state(Kind::Channel, 7001));
+    with_threads(4, || assert_zero_alloc_steady_state(Kind::Channel, 7002));
+}
+
+#[test]
+fn tcp_loopback_steady_state_is_zero_alloc() {
+    let _g = pool_guard();
+    with_threads(1, || assert_zero_alloc_steady_state(Kind::Tcp, 7011));
+    with_threads(4, || assert_zero_alloc_steady_state(Kind::Tcp, 7012));
+}
+
+#[test]
+fn shm_steady_state_is_zero_alloc() {
+    let _g = pool_guard();
+    with_threads(1, || assert_zero_alloc_steady_state(Kind::Shm, 7021));
+    with_threads(4, || assert_zero_alloc_steady_state(Kind::Shm, 7022));
+}
+
+/// One batch over a transport, returning per-job and aggregate byte
+/// ledgers (read after shutdown so every late response is attributed).
+fn batch_ledger(kind: Kind, seed: u64) -> (Vec<(u64, u64, u64)>, (u64, u64, u64)) {
+    let cfg = SchemeConfig::for_workers(8).unwrap();
+    let scheme = registry::build("ep-rmfe-1", &cfg).unwrap();
+    let base = Zq::z2e(64);
+    let mut rng = Rng64::seeded(seed);
+    let mut pool = make_pool(kind, &scheme, seed);
+    let mut per_job = Vec::new();
+    for &size in &SHAPES {
+        let a = Matrix::random(&base, size, size, &mut rng);
+        let b = Matrix::random(&base, size, size, &mut rng);
+        let payloads = scheme.encode_bytes(&[a.to_bytes(&base)], &[b.to_bytes(&base)]).unwrap();
+        let handle = pool.coord.submit(payloads, scheme.recovery_threshold()).unwrap();
+        let counters = handle.counters().clone();
+        handle.wait().unwrap();
+        per_job.push(counters);
+    }
+    let aggregate = pool.coord.counters().clone();
+    pool.finish(); // drains the workers: every surplus response is routed
+    (
+        per_job
+            .iter()
+            .map(|c| (c.upload_total(), c.download_used_total(), c.download_arrived_total()))
+            .collect(),
+        (
+            aggregate.upload_total(),
+            aggregate.download_used_total(),
+            aggregate.download_arrived_total(),
+        ),
+    )
+}
+
+#[test]
+fn byte_ledger_is_identical_across_channel_tcp_and_shm() {
+    // The shm data plane moves payloads out-of-line, but the per-job
+    // ledger must not know: upload, used and arrived byte totals are
+    // payload bytes, identical across all three transports.
+    let _g = pool_guard();
+    let chan = batch_ledger(Kind::Channel, 512);
+    let tcp = batch_ledger(Kind::Tcp, 512);
+    let shm = batch_ledger(Kind::Shm, 512);
+    assert_eq!(chan, tcp, "channel vs tcp-loopback byte ledgers diverged");
+    assert_eq!(tcp, shm, "tcp-loopback vs shm byte ledgers diverged");
+}
+
+#[test]
+fn rogue_shm_slot_reference_fails_the_job_cleanly() {
+    // A rogue peer on the shm control channel answers the job doorbell
+    // with a reference to a ring slot that was never written. Through the
+    // public coordinator API this must surface as a per-job failure —
+    // never a hang, never a panic, never garbage bytes decoded.
+    let _g = pool_guard();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let rogue = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let hello = wire::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(hello.kind, FrameKind::Hello);
+        wire::write_frame(&mut &stream, &Frame::hello(0)).unwrap();
+        let job = wire::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(job.kind, FrameKind::JobRef, "a small payload rides the ring");
+        wire::write_frame(
+            &mut &stream,
+            &Frame::resp_ref(job.job_id, 0, Duration::ZERO, Duration::ZERO, 99, 16),
+        )
+        .unwrap();
+        let _ = wire::read_frame(&mut reader); // hold until the master kills the link
+    });
+    let dir = shm::unique_ring_dir("rogue-it").unwrap();
+    let mut coord = Coordinator::connect_shm(&[addr], &dir).unwrap();
+    let err = coord.submit(vec![vec![3u8; 64]], 1).unwrap().wait().unwrap_err();
+    assert!(err.to_string().contains("cannot complete"), "{err}");
+    coord.shutdown();
+    rogue.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

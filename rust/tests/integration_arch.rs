@@ -208,13 +208,15 @@ fn byte_job(
     a: &[Vec<u8>],
     b: &[Vec<u8>],
 ) -> (Vec<Vec<u8>>, Vec<Vec<u8>>, Vec<Vec<u8>>) {
-    let payloads = scheme.encode_bytes(a, b).unwrap();
+    let payloads: Vec<Vec<u8>> =
+        scheme.encode_bytes(a, b).unwrap().iter().map(|p| p.to_vec()).collect();
     let rt = scheme.recovery_threshold();
     let responses: Vec<Vec<u8>> =
-        (0..rt).map(|i| scheme.compute_bytes(&payloads[i]).unwrap()).collect();
+        (0..rt).map(|i| scheme.compute_bytes(&payloads[i]).unwrap().to_vec()).collect();
     let borrowed: Vec<(usize, &[u8])> =
         responses.iter().enumerate().map(|(i, p)| (i, p.as_slice())).collect();
-    let out = scheme.decode_bytes(&borrowed).unwrap();
+    let out: Vec<Vec<u8>> =
+        scheme.decode_bytes(&borrowed).unwrap().iter().map(|p| p.to_vec()).collect();
     (payloads, responses, out)
 }
 

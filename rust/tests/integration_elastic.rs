@@ -22,8 +22,12 @@ use std::time::{Duration, Instant};
 /// Echo backend for scheme-free membership scenarios.
 struct Echo;
 impl ShareCompute for Echo {
-    fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-        Ok(payload.to_vec())
+    fn compute(
+        &self,
+        _w: usize,
+        payload: &[u8],
+    ) -> anyhow::Result<gr_cdmm::util::bytepool::PooledBuf> {
+        Ok(payload.to_vec().into())
     }
 }
 
@@ -132,7 +136,7 @@ fn ids(collected: &[Collected]) -> Vec<usize> {
 /// across runs), the job's byte counters, which shards were collected, and
 /// the dispatch→threshold wall time.
 struct CodedRun {
-    out: Vec<Vec<u8>>,
+    out: Vec<gr_cdmm::util::bytepool::PooledBuf>,
     counters: ByteCounters,
     used_shards: Vec<usize>,
     wait: Duration,

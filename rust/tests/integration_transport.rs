@@ -25,8 +25,12 @@ use std::time::Duration;
 /// Echo backend for scheme-free transport tests.
 struct Echo;
 impl ShareCompute for Echo {
-    fn compute(&self, _w: usize, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
-        Ok(payload.to_vec())
+    fn compute(
+        &self,
+        _w: usize,
+        payload: &[u8],
+    ) -> anyhow::Result<gr_cdmm::util::bytepool::PooledBuf> {
+        Ok(payload.to_vec().into())
     }
 }
 
@@ -179,6 +183,7 @@ fn corrupt_responses_for(
                         straggler: StragglerModel::None,
                         corrupt: model.clone(),
                         seed,
+                        ..DaemonConfig::default()
                     },
                     1,
                 )
@@ -202,7 +207,7 @@ fn corrupt_responses_for(
         let payloads: Vec<Vec<u8>> = (0..n).map(|w| parity_payload(job, w)).collect();
         let (collected, _) = coord.submit(payloads, n).unwrap().wait().unwrap();
         let mut got: Vec<(usize, Vec<u8>)> =
-            collected.into_iter().map(|c| (c.worker_id, c.payload)).collect();
+            collected.into_iter().map(|c| (c.worker_id, c.payload.to_vec())).collect();
         got.sort_by_key(|&(w, _)| w);
         jobs.push(got);
     }
@@ -355,7 +360,7 @@ fn ok_response_bytes_for(shard: usize, payload_len: usize) -> Vec<u8> {
         worker_id: shard as u64,
         compute_us: 0,
         delay_us: 0,
-        payload: vec![9u8; payload_len],
+        payload: vec![9u8; payload_len].into(),
     })
 }
 
